@@ -1,0 +1,89 @@
+//! Strategy server-step cost comparison (no PJRT needed): how expensive
+//! is each method's aggregation + model update per round, at matched
+//! geometry (d=100k, W=10)? FetchSGD's server does strictly more work
+//! than the baselines (unsketch + top-k); this bench quantifies the
+//! overhead that the communication savings buy.
+
+use fetchsgd::bench_util::{bench, print_table};
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgd};
+use fetchsgd::compression::local_topk::LocalTopK;
+use fetchsgd::compression::true_topk::TrueTopK;
+use fetchsgd::compression::uncompressed::Uncompressed;
+use fetchsgd::compression::{ClientUpload, Strategy};
+use fetchsgd::sketch::topk::top_k_sparse;
+use fetchsgd::sketch::CountSketch;
+use fetchsgd::util::Rng;
+
+const D: usize = 100_000;
+const W: usize = 10;
+const K: usize = 1000;
+const COLS: usize = 16384;
+const ROWS: usize = 5;
+const SEED: u64 = 7;
+
+fn random_grads() -> Vec<Vec<f32>> {
+    (0..W)
+        .map(|i| {
+            let mut rng = Rng::new(i as u64);
+            (0..D).map(|_| rng.next_gaussian() as f32).collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let grads = random_grads();
+    let mut results = Vec::new();
+    let mut w = vec![0f32; D];
+
+    // FetchSGD server step (uploads pre-sketched, as in production).
+    {
+        let sketches: Vec<CountSketch> =
+            grads.iter().map(|g| CountSketch::encode(ROWS, COLS, SEED, g)).collect();
+        let mut strat =
+            FetchSgd::new(ROWS, COLS, SEED, D, K, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
+                .unwrap();
+        results.push(bench("fetchsgd server (5x16384, k=1000)", 1, 8, || {
+            let uploads: Vec<ClientUpload> =
+                sketches.iter().map(|s| ClientUpload::Sketch(s.clone())).collect();
+            strat.server_round(uploads, &mut w, 0.01).unwrap()
+        }));
+    }
+
+    // Local top-k server step.
+    {
+        let sparse: Vec<_> = grads.iter().map(|g| top_k_sparse(g, K)).collect();
+        let mut strat = LocalTopK::new(D, K, 0.9, true, false);
+        results.push(bench("local_topk server (k=1000)", 1, 8, || {
+            let uploads: Vec<ClientUpload> =
+                sparse.iter().map(|s| ClientUpload::Sparse(s.clone())).collect();
+            strat.server_round(uploads, &mut w, 0.01).unwrap()
+        }));
+    }
+
+    // True top-k server step (dense error feedback).
+    {
+        let mut strat = TrueTopK::new(D, K, 0.9, true);
+        results.push(bench("true_topk server (dense e+u)", 1, 8, || {
+            let uploads: Vec<ClientUpload> =
+                grads.iter().map(|g| ClientUpload::Dense(g.clone())).collect();
+            strat.server_round(uploads, &mut w, 0.01).unwrap()
+        }));
+    }
+
+    // Uncompressed server step.
+    {
+        let mut strat = Uncompressed::new(D, 0.9);
+        results.push(bench("uncompressed server", 1, 8, || {
+            let uploads: Vec<ClientUpload> =
+                grads.iter().map(|g| ClientUpload::Dense(g.clone())).collect();
+            strat.server_round(uploads, &mut w, 0.01).unwrap()
+        }));
+    }
+
+    // Client-side top-k selection (local_topk's extra client cost).
+    results.push(bench("client top_k selection (d=100k)", 1, 8, || {
+        top_k_sparse(&grads[0], K)
+    }));
+
+    print_table("strategy server-step cost (d=100k, W=10)", &results);
+}

@@ -1,0 +1,75 @@
+//! End-to-end round latency (requires `make artifacts`).
+//!
+//! Splits one federated round into its cost components: client compute
+//! (PJRT execution of the fused grad+sketch HLO), server sketch update,
+//! and data generation — establishing where the bottleneck sits (the
+//! paper's contribution is the coordinator; it must not dominate).
+
+use std::rc::Rc;
+
+use fetchsgd::bench_util::{bench, print_table};
+use fetchsgd::model::{build_dataset, DataScale};
+use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
+use fetchsgd::runtime::exec::run_client_step;
+use fetchsgd::runtime::Runtime;
+use fetchsgd::sketch::CountSketch;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_round: artifacts/ missing — run `make artifacts` first (skipping)");
+        return Ok(());
+    }
+    let runtime = Rc::new(Runtime::cpu()?);
+    let manifest = Manifest::load(&dir)?;
+    let mut results = Vec::new();
+
+    for task in ["smoke", "cifar10", "persona"] {
+        if manifest.task(task).is_err() {
+            continue;
+        }
+        let arts = TaskArtifacts::new(runtime.clone(), &manifest, task)?;
+        let tm = arts.manifest.clone();
+        let cols = *tm.sketch.cols_options.iter().max().unwrap();
+        let w = arts.init_weights()?;
+        let ds = build_dataset(&tm, &DataScale::smoke())?;
+        let batch = ds.client_batch(0, 1);
+        let exe = arts.executable(&TaskArtifacts::client_step_kind(cols))?;
+
+        results.push(bench(&format!("{task}: data gen (1 batch)"), 2, 10, || {
+            ds.client_batch(0, 2)
+        }));
+        results.push(bench(&format!("{task}: client_step d={} c={cols}", tm.dim), 2, 6, || {
+            run_client_step(&exe, &w, &batch, tm.sketch.rows, cols, tm.sketch.seed).unwrap()
+        }));
+
+        // Server-side cost at this task's geometry.
+        let uploads: Vec<CountSketch> = (0..8)
+            .map(|i| {
+                let mut g = vec![0f32; tm.dim];
+                let mut rng = fetchsgd::util::Rng::new(i);
+                for x in g.iter_mut() {
+                    *x = rng.next_gaussian() as f32;
+                }
+                CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &g)
+            })
+            .collect();
+        let mut momentum = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
+        let mut error = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
+        results.push(bench(&format!("{task}: server round W=8 k=1000"), 1, 6, || {
+            let mut round = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
+            for s in &uploads {
+                round.add_scaled(s, 0.125);
+            }
+            momentum.scale(0.9);
+            momentum.add_scaled(&round, 1.0);
+            error.add_scaled(&momentum, 0.1);
+            let delta = error.top_k(1000.min(tm.dim));
+            error.zero_out_sparse(&delta);
+            delta
+        }));
+    }
+
+    print_table("round latency decomposition", &results);
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Sketch-operation microbenchmarks (L3 server hot path).
+//!
+//! The FetchSGD server per round: merge W client sketches, momentum and
+//! error updates (sketch-space linear ops), estimate_all (U(S_e)),
+//! top-k selection, zero-out. These benches size each piece; §Perf in
+//! EXPERIMENTS.md records the befores/afters of the optimization pass.
+
+use fetchsgd::bench_util::{bench, bench_throughput, print_table};
+use fetchsgd::sketch::{CountSketch, SparseVec};
+use fetchsgd::util::Rng;
+
+fn random_vec(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.next_gaussian() as f32).collect()
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // encode: client-side fallback / test path (the production encode
+    // runs inside the HLO artifact).
+    for &d in &[100_000usize, 1_000_000] {
+        let g = random_vec(d, 1);
+        results.push(bench_throughput(
+            &format!("encode dense d={d} (5x16384)"),
+            2,
+            8,
+            d as u64,
+            || CountSketch::encode(5, 16384, 7, &g),
+        ));
+    }
+
+    // merge: W=100 sketch aggregation.
+    {
+        let sketches: Vec<CountSketch> = (0..100)
+            .map(|i| CountSketch::encode(5, 16384, 7, &random_vec(10_000, i)))
+            .collect();
+        results.push(bench_throughput("merge W=100 (5x16384)", 2, 10, 100 * 5 * 16384, || {
+            let mut agg = CountSketch::zeros(5, 16384, 10_000, 7);
+            for s in &sketches {
+                agg.add_scaled(s, 0.01);
+            }
+            agg
+        }));
+    }
+
+    // estimate_all: the unsketch hot path U(S_e). The "generic" variant
+    // is the pre-optimization implementation (per-coordinate median
+    // sort, coordinate-major access) kept for §Perf before/after.
+    for &d in &[100_000usize, 1_000_000] {
+        let g = random_vec(d, 3);
+        let s = CountSketch::encode(5, 16384, 7, &g);
+        let mut out = vec![0f32; d];
+        results.push(bench_throughput(
+            &format!("estimate_all d={d} GENERIC (before)"),
+            2,
+            8,
+            d as u64,
+            || s.estimate_all_into_generic(&mut out),
+        ));
+        results.push(bench_throughput(
+            &format!("estimate_all d={d} (5x16384)"),
+            2,
+            8,
+            d as u64,
+            || s.estimate_all_into(&mut out),
+        ));
+    }
+
+    // top-k selection over estimates.
+    {
+        let est = random_vec(1_000_000, 9);
+        results.push(bench_throughput("top_k k=50000 of 1M", 2, 8, 1_000_000, || {
+            fetchsgd::sketch::top_k_indices(&est, 50_000)
+        }));
+    }
+
+    // zero-out of an extracted update.
+    {
+        let mut s = CountSketch::encode(5, 16384, 7, &random_vec(1_000_000, 5));
+        let pairs: Vec<(u32, f32)> = (0..50_000u32).map(|i| (i * 17 % 1_000_000, 1.0)).collect();
+        let mut dedup: Vec<(u32, f32)> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for (i, v) in pairs {
+            if seen.insert(i) {
+                dedup.push((i, v));
+            }
+        }
+        let delta = SparseVec::from_pairs(1_000_000, dedup);
+        results.push(bench("zero_out nnz=50000 (5x16384)", 2, 10, || {
+            s.zero_out_sparse(&delta);
+        }));
+    }
+
+    // full server round (merge + momentum + error + topk + zero-out),
+    // d=100k, W=20 — the end-to-end L3 cost per round.
+    {
+        let d = 100_000;
+        let uploads: Vec<CountSketch> =
+            (0..20).map(|i| CountSketch::encode(5, 16384, 7, &random_vec(d, 100 + i))).collect();
+        let mut momentum = CountSketch::zeros(5, 16384, d, 7);
+        let mut error = CountSketch::zeros(5, 16384, d, 7);
+        results.push(bench("server round d=100k W=20 k=1000", 1, 8, || {
+            let mut round = CountSketch::zeros(5, 16384, d, 7);
+            for s in &uploads {
+                round.add_scaled(s, 0.05);
+            }
+            momentum.scale(0.9);
+            momentum.add_scaled(&round, 1.0);
+            error.add_scaled(&momentum, 0.1);
+            let delta = error.top_k(1000);
+            error.zero_out_sparse(&delta);
+            momentum.zero_out_sparse(&delta);
+            delta
+        }));
+    }
+
+    print_table("sketch ops", &results);
+}

@@ -1,0 +1,45 @@
+//! Quickstart: train a small model with FetchSGD through the public API.
+//!
+//! ```bash
+//! make artifacts                # once: AOT-lower the compute graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This uses the `smoke` task (tiny MLP on label-skew synthetic images,
+//! 50 clients with 5 images of a single class each) and the FetchSGD
+//! strategy: clients upload 5x512 Count Sketches of their gradients; the
+//! server carries momentum + error accumulation in sketch space and
+//! broadcasts k-sparse updates.
+
+use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
+use fetchsgd::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::default_smoke();
+    cfg.rounds = 40;
+    cfg.eval_every = 10;
+    cfg.verbose = true;
+    cfg.lr = LrSchedule::Triangular { peak: 0.2, pivot: 0.25 };
+    cfg.strategy = StrategyConfig::FetchSgd {
+        k: 50,
+        cols: 512,
+        rho: 0.9,
+        error_update: "zero_out".into(),
+        error_window: "vanilla".into(),
+        masking: true,
+    };
+
+    let mut trainer = Trainer::new(cfg)?;
+    let summary = trainer.run()?;
+
+    println!("\n-- quickstart result --");
+    println!("final train loss : {:.4}", summary.final_loss);
+    println!("eval loss        : {:.4}", summary.eval_loss);
+    println!("eval accuracy    : {:.2}%", summary.accuracy * 100.0);
+    println!(
+        "compression      : up {:.1}x / down {:.1}x / overall {:.1}x",
+        summary.ratios.upload, summary.ratios.download, summary.ratios.overall
+    );
+    anyhow::ensure!(summary.accuracy > 0.5, "quickstart should learn the smoke task");
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT pipeline: lower every (task, computation) pair to HLO text and
+emit ``artifacts/manifest.json`` + initial weights.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged) or:
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--tasks smoke,...]
+
+Python runs only here, at build time; the Rust coordinator is
+self-contained once artifacts exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import struct
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.hashing import SPEC_VERSION, SketchHasher
+from .model import make_client_grad, make_client_step, make_eval_step, make_fedavg_step
+from .models import make_cnn, make_mlp, make_transformer
+
+SKETCH_ROWS = 5
+WEIGHT_SEED = 0xF5_2020  # init seed; recorded in the manifest
+
+# ---------------------------------------------------------------------------
+# Task definitions. `sketch_cols` lists the column counts to bake one
+# FetchSGD client_step artifact each (the fig3/4/5 compression sweeps);
+# `fedavg_steps` lists the local-step counts for FedAvg artifacts.
+# `data` describes the synthetic dataset the Rust side must generate.
+# ---------------------------------------------------------------------------
+
+
+def _tasks() -> dict:
+    return {
+        "smoke": {
+            "model": lambda: make_mlp(
+                "mlp_smoke", input_shape=(8, 8, 1), num_classes=10, hidden=(32,), batch=4
+            ),
+            "sketch_cols": [512],
+            "fedavg_steps": [2],
+            "sketch_seed": 0x51E7C4,
+            "data": {"kind": "images", "image": [8, 8, 1], "classes": 10},
+        },
+        "cifar10": {
+            "model": lambda: make_cnn(
+                "cnn_cifar10", image=(16, 16, 3), num_classes=10, widths=(16, 32, 64), batch=16
+            ),
+            "sketch_cols": [2048, 4096, 8192, 16384],
+            "fedavg_steps": [2, 5],
+            "sketch_seed": 0xC1FA10,
+            "data": {"kind": "images", "image": [16, 16, 3], "classes": 10},
+        },
+        "cifar100": {
+            "model": lambda: make_cnn(
+                "cnn_cifar100", image=(16, 16, 3), num_classes=100, widths=(16, 32, 64), batch=16
+            ),
+            "sketch_cols": [2048, 4096, 8192, 16384],
+            "fedavg_steps": [2, 5],
+            "sketch_seed": 0xC1FA64,
+            "data": {"kind": "images", "image": [16, 16, 3], "classes": 100},
+        },
+        "femnist": {
+            "model": lambda: make_mlp(
+                "mlp_femnist", input_shape=(16, 16, 1), num_classes=32, hidden=(128, 64), batch=20
+            ),
+            "sketch_cols": [1024, 2048, 4096, 8192],
+            "fedavg_steps": [1, 2, 5],
+            "sketch_seed": 0xFE301,
+            "data": {"kind": "images", "image": [16, 16, 1], "classes": 32},
+        },
+        "persona": {
+            "model": lambda: make_transformer(
+                "tfm_persona", vocab=64, seq=32, dim=64, heads=4, layers=2, batch=8
+            ),
+            "sketch_cols": [1024, 4096, 16384],
+            "fedavg_steps": [2, 5],
+            "sketch_seed": 0x9E850,
+            "data": {"kind": "text", "vocab": 64, "seq": 32},
+        },
+        "persona_large": {
+            # e2e-driver scale: the largest model the CPU PJRT substrate
+            # trains in reasonable wallclock (GPT2-124M substitute).
+            "model": lambda: make_transformer(
+                "tfm_persona_large", vocab=96, seq=64, dim=128, heads=8, layers=4, batch=8
+            ),
+            "sketch_cols": [16384, 65536],
+            "fedavg_steps": [2],
+            "sketch_seed": 0x9E851,
+            "data": {"kind": "text", "vocab": 96, "seq": 64},
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, _DTYPES[dtype])
+
+
+def _model_inputs(model):
+    xs, xd = model.input_spec["x"]
+    ys, yd = model.input_spec["y"]
+    ms, md = model.input_spec["mask"]
+    return _spec(xs, xd), _spec(ys, yd), _spec(ms, md)
+
+
+def write_weights_bin(path: pathlib.Path, w: np.ndarray) -> None:
+    """Same header as rust/src/serialize/bin.rs: magic + u64 LE count."""
+    with open(path, "wb") as f:
+        f.write(b"FSGDF32\0")
+        f.write(struct.pack("<Q", w.size))
+        f.write(w.astype("<f4").tobytes())
+
+
+def lower_task(name: str, cfg: dict, out_dir: pathlib.Path, manifest: dict) -> None:
+    model = cfg["model"]()
+    d = model.dim
+    w_spec = _spec((d,))
+    x_s, y_s, m_s = _model_inputs(model)
+    print(f"[aot] task {name}: model={model.name} d={d}")
+
+    entry = {
+        "name": name,
+        "model": model.name,
+        "dim": d,
+        "batch": model.input_spec["x"][0][0],
+        "input_spec": {k: {"shape": list(v[0]), "dtype": v[1]} for k, v in model.input_spec.items()},
+        "data": cfg["data"],
+        "weight_seed": WEIGHT_SEED,
+        "init_weights": f"{name}_init.bin",
+        "artifacts": {},
+        "sketch": {"rows": SKETCH_ROWS, "seed": cfg["sketch_seed"], "cols": cfg["sketch_cols"],
+                   "spec_version": SPEC_VERSION},
+        "fedavg_steps": cfg["fedavg_steps"],
+    }
+
+    # Initial weights.
+    w0 = model.init_flat(WEIGHT_SEED)
+    assert w0.size == d
+    write_weights_bin(out_dir / entry["init_weights"], w0)
+
+    def emit(kind: str, fn, args) -> None:
+        fname = f"{name}_{kind}.hlo.txt"
+        lowered = jax.jit(fn).lower(*args)
+        (out_dir / fname).write_text(to_hlo_text(lowered))
+        entry["artifacts"][kind] = fname
+        print(f"[aot]   {fname}")
+
+    # FetchSGD client step, one per sketch width.
+    for cols in cfg["sketch_cols"]:
+        hasher = SketchHasher.create(SKETCH_ROWS, cols, cfg["sketch_seed"])
+        emit(f"client_step_c{cols}", make_client_step(model, hasher), (w_spec, x_s, y_s, m_s))
+
+    # Baseline gradient, eval, FedAvg.
+    emit("client_grad", make_client_grad(model), (w_spec, x_s, y_s, m_s))
+    emit("eval", make_eval_step(model), (w_spec, x_s, y_s, m_s))
+    for k in cfg["fedavg_steps"]:
+        xs = _spec((k, *x_s.shape), "f32" if x_s.dtype == np.float32 else "i32")
+        ys = _spec((k, *y_s.shape), "i32")
+        ms = _spec((k, *m_s.shape), "f32")
+        lr = _spec((), "f32")
+        emit(f"fedavg_k{k}", make_fedavg_step(model, k), (w_spec, xs, ys, ms, lr))
+
+    manifest["tasks"].append(entry)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tasks", default="all", help="comma list or 'all'")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    tasks = _tasks()
+    selected = list(tasks) if args.tasks == "all" else args.tasks.split(",")
+    for t in selected:
+        if t not in tasks:
+            sys.exit(f"unknown task '{t}' (have: {', '.join(tasks)})")
+
+    manifest = {"spec_version": SPEC_VERSION, "sketch_rows": SKETCH_ROWS, "tasks": []}
+    for t in selected:
+        lower_task(t, tasks[t], out_dir, manifest)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {out_dir / 'manifest.json'} ({len(manifest['tasks'])} tasks)")
+
+
+if __name__ == "__main__":
+    main()

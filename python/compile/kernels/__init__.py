@@ -1,0 +1,4 @@
+# L1: Pallas Count-Sketch kernels + pure-jnp oracle + shared hash spec.
+from .count_sketch import sketch_encode  # noqa: F401
+from .hashing import SketchHasher  # noqa: F401
+from .unsketch import unsketch_estimate  # noqa: F401

@@ -1,0 +1,112 @@
+"""Count-Sketch hash spec — the Python half of the cross-language contract.
+
+Mirrors ``rust/src/hashing.rs`` bit-for-bit. Both sides derive per-row
+u32 constants from a master u64 seed via splitmix64 and hash coordinate
+indices with u32 wrapping multiply-shift:
+
+    bucket_r(i) = ((a_b * i + b_b) mod 2**32) >> (32 - log2(C))
+    sign_r(i)   = +1 if top bit of ((a_s * i + b_s) mod 2**32) == 0 else -1
+
+``C`` (columns) must be a power of two. All jnp arithmetic is uint32,
+whose wrapping semantics match Rust's ``u32``. Changing anything here is
+a breaking change to every artifact — bump SPEC_VERSION in both
+languages and re-run ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+SPEC_VERSION = 1
+
+_MASK64 = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One splitmix64 step: returns (value, new_state). Pure-int mirror of
+    the Rust implementation (no numpy overflow concerns)."""
+    state = (state + 0x9E3779B97F4A7C15) & _MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return (z ^ (z >> 31)) & _MASK64, state
+
+
+@dataclasses.dataclass(frozen=True)
+class RowHash:
+    a_bucket: int
+    b_bucket: int
+    a_sign: int
+    b_sign: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchHasher:
+    """Hash parameterization for an R x C Count Sketch."""
+
+    rows: int
+    cols: int
+    seed: int
+    row_hashes: tuple[RowHash, ...]
+
+    @staticmethod
+    def create(rows: int, cols: int, seed: int) -> "SketchHasher":
+        assert rows >= 1, "rows must be >= 1"
+        assert cols >= 2 and (cols & (cols - 1)) == 0, f"cols must be a power of two >= 2, got {cols}"
+        assert cols <= 1 << 31
+        state = seed & _MASK64
+        row_hashes = []
+        for _ in range(rows):
+            v, state = splitmix64(state)
+            a_bucket = (v & 0xFFFFFFFF) | 1
+            v, state = splitmix64(state)
+            b_bucket = v & 0xFFFFFFFF
+            v, state = splitmix64(state)
+            a_sign = (v & 0xFFFFFFFF) | 1
+            v, state = splitmix64(state)
+            b_sign = v & 0xFFFFFFFF
+            row_hashes.append(RowHash(a_bucket, b_bucket, a_sign, b_sign))
+        return SketchHasher(rows, cols, seed, tuple(row_hashes))
+
+    @property
+    def shift(self) -> int:
+        return 32 - int(self.cols).bit_length() + 1  # 32 - log2(cols)
+
+    def bucket_np(self, r: int, idx: np.ndarray) -> np.ndarray:
+        """Reference (numpy) bucket hash for index array ``idx`` (uint32)."""
+        h = self.row_hashes[r]
+        i = idx.astype(np.uint64)
+        v = (np.uint64(h.a_bucket) * i + np.uint64(h.b_bucket)) & np.uint64(0xFFFFFFFF)
+        return (v >> np.uint64(self.shift)).astype(np.int64)
+
+    def sign_np(self, r: int, idx: np.ndarray) -> np.ndarray:
+        h = self.row_hashes[r]
+        i = idx.astype(np.uint64)
+        v = (np.uint64(h.a_sign) * i + np.uint64(h.b_sign)) & np.uint64(0xFFFFFFFF)
+        return np.where((v >> np.uint64(31)) & np.uint64(1), -1.0, 1.0).astype(np.float32)
+
+    def bucket_jnp(self, r: int, idx: jnp.ndarray) -> jnp.ndarray:
+        """uint32 wrapping bucket hash (traceable; used inside kernels)."""
+        h = self.row_hashes[r]
+        i = idx.astype(jnp.uint32)
+        v = jnp.uint32(h.a_bucket) * i + jnp.uint32(h.b_bucket)
+        return (v >> jnp.uint32(self.shift)).astype(jnp.int32)
+
+    def sign_jnp(self, r: int, idx: jnp.ndarray) -> jnp.ndarray:
+        h = self.row_hashes[r]
+        i = idx.astype(jnp.uint32)
+        v = jnp.uint32(h.a_sign) * i + jnp.uint32(h.b_sign)
+        return jnp.where(v >> jnp.uint32(31), -1.0, 1.0).astype(jnp.float32)
+
+    def to_manifest(self) -> dict:
+        """Entry recorded in artifacts/manifest.json (Rust re-derives the
+        constants from (rows, cols, seed) and checks SPEC_VERSION)."""
+        return {
+            "rows": self.rows,
+            "cols": self.cols,
+            "seed": self.seed,
+            "spec_version": SPEC_VERSION,
+        }

@@ -1,0 +1,46 @@
+"""Pure-jnp Count-Sketch oracle — the correctness reference for the
+Pallas kernels (L1) and, transitively, for the Rust implementation
+(pinned by the golden hash vectors plus the artifact integration test).
+
+Everything here is straightforward segment-sum / gather code with no
+blocking or kernel tricks; pytest asserts the Pallas kernels match this
+module to float tolerance across shapes and seeds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import SketchHasher
+
+
+def sketch_encode_ref(h: SketchHasher, g: jnp.ndarray) -> jnp.ndarray:
+    """``S(g)``: (d,) -> (rows, cols) via per-row signed segment-sum."""
+    d = g.shape[0]
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    rows = []
+    for r in range(h.rows):
+        buckets = h.bucket_jnp(r, idx)
+        signs = h.sign_jnp(r, idx)
+        rows.append(jax.ops.segment_sum(signs * g, buckets, num_segments=h.cols))
+    return jnp.stack(rows, axis=0)
+
+
+def unsketch_estimate_ref(h: SketchHasher, table: jnp.ndarray, d: int) -> jnp.ndarray:
+    """``U(S)``: (rows, cols) -> (d,) estimates; median over rows of
+    ``sign_r(i) * table[r, bucket_r(i)]``."""
+    idx = jnp.arange(d, dtype=jnp.uint32)
+    per_row = []
+    for r in range(h.rows):
+        buckets = h.bucket_jnp(r, idx)
+        signs = h.sign_jnp(r, idx)
+        per_row.append(signs * table[r, buckets])
+    stacked = jnp.stack(per_row, axis=0)  # (rows, d)
+    return jnp.median(stacked, axis=0)
+
+
+def top_k_ref(est: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k by magnitude: returns (indices, values)."""
+    _, idx = jax.lax.top_k(jnp.abs(est), k)
+    return idx, est[idx]

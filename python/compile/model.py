@@ -1,0 +1,77 @@
+"""L2 glue: the jitted client/server computations lowered to artifacts.
+
+Each function below closes over a `FlatModel` (and, for the FetchSGD
+path, the L1 sketch kernel) and is AOT-lowered by ``aot.py`` to one HLO
+module per (task, kind):
+
+- ``client_step``  — FetchSGD client: (w, x, y, mask) -> (loss, S(grad)).
+  The gradient never leaves the device densely; the Pallas Count-Sketch
+  kernel compresses it *inside this graph*.
+- ``client_grad``  — baseline client: (w, x, y, mask) -> (loss, grad).
+  Used by uncompressed SGD, local top-k (top-k selection happens in the
+  Rust client — it is O(d) selection, not model compute), and true top-k.
+- ``fedavg_step``  — FedAvg client: K local SGD steps over pre-batched
+  local data; returns (mean_loss, delta) with delta = w_in − w_out.
+- ``eval_step``    — forward-only: (w, x, y, mask) -> (sum_loss, units,
+  correct) for test accuracy / perplexity aggregation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import SketchHasher, sketch_encode
+from .models.common import FlatModel
+
+
+def make_client_step(model: FlatModel, hasher: SketchHasher, *, strategy: str = "scatter",
+                     block: int = 2048):
+    """FetchSGD client computation: loss + sketched gradient."""
+
+    def client_step(w, x, y, mask):
+        loss, grad = jax.value_and_grad(model.loss)(w, x, y, mask)
+        table = sketch_encode(grad, h=hasher, strategy=strategy, block=block)
+        return loss, table
+
+    return client_step
+
+
+def make_client_grad(model: FlatModel):
+    """Baseline client computation: loss + dense gradient."""
+
+    def client_grad(w, x, y, mask):
+        loss, grad = jax.value_and_grad(model.loss)(w, x, y, mask)
+        return loss, grad
+
+    return client_grad
+
+
+def make_fedavg_step(model: FlatModel, local_steps: int):
+    """FedAvg client: `local_steps` sequential SGD steps on local batches.
+
+    Inputs are pre-batched on the Rust side: xs/(ys/masks) carry a
+    leading `local_steps` axis. `lr` is a scalar so the server's learning
+    rate schedule applies without re-lowering.
+    """
+
+    def fedavg_step(w, xs, ys, masks, lr):
+        def step(w_cur, batch):
+            x, y, m = batch
+            loss, grad = jax.value_and_grad(model.loss)(w_cur, x, y, m)
+            return w_cur - lr * grad, loss
+
+        w_out, losses = jax.lax.scan(step, w, (xs, ys, masks))
+        return jnp.mean(losses), w - w_out
+
+    return fedavg_step
+
+
+def make_eval_step(model: FlatModel):
+    """Forward-only evaluation statistics."""
+
+    def eval_step(w, x, y, mask):
+        sum_ce, units, correct = model.eval_stats(w, x, y, mask)
+        return sum_ce, units, correct
+
+    return eval_step

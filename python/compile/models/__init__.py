@@ -1,0 +1,5 @@
+# L2 model zoo: flat-weight-vector models used by the federated tasks.
+from .common import FlatModel, ParamSpec  # noqa: F401
+from .mlp import make_mlp  # noqa: F401
+from .cnn import make_cnn  # noqa: F401
+from .transformer import make_transformer  # noqa: F401

@@ -1,0 +1,118 @@
+"""Small convolutional classifier with GroupNorm — the ResNet9 analog.
+
+The paper trains a modified ResNet9 (Page 2019) *without batch norm*
+because per-client batches are tiny (1–5 images); we keep that property
+with GroupNorm. Architecture (configurable widths):
+
+    conv3x3(C0) GN relu → conv3x3(C1) GN relu → pool2
+    → residual block [conv3x3(C1) GN relu ×2 + skip]
+    → conv3x3(C2) GN relu → pool2 → residual block(C2)
+    → global-avg-pool → dense(num_classes)
+
+All convs are SAME-padded NHWC.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import FlatModel, ParamSpec, masked_ce_from_logits, mean_masked_loss
+
+
+def _conv(x, k):
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _group_norm(x, scale, bias, groups: int = 8, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def make_cnn(
+    name: str,
+    *,
+    image: tuple[int, int, int] = (16, 16, 3),
+    num_classes: int = 10,
+    widths: tuple[int, int, int] = (16, 32, 64),
+    batch: int = 16,
+) -> FlatModel:
+    h_img, w_img, c_in = image
+    c0, c1, c2 = widths
+    specs = [
+        ParamSpec("conv0", (3, 3, c_in, c0)),
+        ParamSpec("gn0_s", (c0,), "ones"),
+        ParamSpec("gn0_b", (c0,), "zeros"),
+        ParamSpec("conv1", (3, 3, c0, c1)),
+        ParamSpec("gn1_s", (c1,), "ones"),
+        ParamSpec("gn1_b", (c1,), "zeros"),
+        # residual block 1 (width c1)
+        ParamSpec("res1a", (3, 3, c1, c1)),
+        ParamSpec("gn2_s", (c1,), "ones"),
+        ParamSpec("gn2_b", (c1,), "zeros"),
+        ParamSpec("res1b", (3, 3, c1, c1)),
+        ParamSpec("gn3_s", (c1,), "ones"),
+        ParamSpec("gn3_b", (c1,), "zeros"),
+        ParamSpec("conv2", (3, 3, c1, c2)),
+        ParamSpec("gn4_s", (c2,), "ones"),
+        ParamSpec("gn4_b", (c2,), "zeros"),
+        # residual block 2 (width c2)
+        ParamSpec("res2a", (3, 3, c2, c2)),
+        ParamSpec("gn5_s", (c2,), "ones"),
+        ParamSpec("gn5_b", (c2,), "zeros"),
+        ParamSpec("res2b", (3, 3, c2, c2)),
+        ParamSpec("gn6_s", (c2,), "ones"),
+        ParamSpec("gn6_b", (c2,), "zeros"),
+        ParamSpec("head_w", (c2, num_classes)),
+        ParamSpec("head_b", (num_classes,), "zeros"),
+    ]
+
+    def forward(p, x):
+        h = jnp.maximum(_group_norm(_conv(x, p["conv0"]), p["gn0_s"], p["gn0_b"]), 0.0)
+        h = jnp.maximum(_group_norm(_conv(h, p["conv1"]), p["gn1_s"], p["gn1_b"]), 0.0)
+        h = _pool2(h)
+        r = jnp.maximum(_group_norm(_conv(h, p["res1a"]), p["gn2_s"], p["gn2_b"]), 0.0)
+        r = jnp.maximum(_group_norm(_conv(r, p["res1b"]), p["gn3_s"], p["gn3_b"]), 0.0)
+        h = h + r
+        h = jnp.maximum(_group_norm(_conv(h, p["conv2"]), p["gn4_s"], p["gn4_b"]), 0.0)
+        h = _pool2(h)
+        r = jnp.maximum(_group_norm(_conv(h, p["res2a"]), p["gn5_s"], p["gn5_b"]), 0.0)
+        r = jnp.maximum(_group_norm(_conv(r, p["res2b"]), p["gn6_s"], p["gn6_b"]), 0.0)
+        h = h + r
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return h @ p["head_w"] + p["head_b"]
+
+    def loss(p, x, y, mask):
+        sum_ce, units, _ = masked_ce_from_logits(forward(p, x), y, mask)
+        return mean_masked_loss(sum_ce, units)
+
+    def stats(p, x, y, mask):
+        return masked_ce_from_logits(forward(p, x), y, mask)
+
+    return FlatModel(
+        name=name,
+        specs=specs,
+        _loss=loss,
+        _stats=stats,
+        input_spec={
+            "x": ((batch, h_img, w_img, c_in), "f32"),
+            "y": ((batch,), "i32"),
+            "mask": ((batch,), "f32"),
+        },
+    )

@@ -1,0 +1,114 @@
+"""Flat-weight-vector model convention shared by all L2 models.
+
+The Rust coordinator owns the model state as a single ``f32[d]`` vector
+(that is what FetchSGD sketches, updates sparsely, and broadcasts), so
+every model exposes:
+
+- ``specs``: the ordered list of named parameter shapes;
+- ``init_flat(seed)``: deterministic initial weights as one numpy vector;
+- ``loss(w_flat, x, y, mask)``: scalar masked mean loss, differentiable
+  wrt ``w_flat`` (gradients therefore come out flat, ready to sketch);
+- ``eval_stats(w_flat, x, y, mask)``: (sum_loss, units, correct) for
+  accuracy/perplexity aggregation across eval batches.
+
+Packing/unpacking uses static offsets, so XLA sees plain slices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    # "dense" → scaled-normal fan-in init; "zeros"; "ones"; "embed" →
+    # N(0, 0.02) like GPT-2.
+    init: str = "dense"
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclasses.dataclass
+class FlatModel:
+    """A model over a flat parameter vector."""
+
+    name: str
+    specs: list[ParamSpec]
+    # loss(params_dict, x, y, mask) -> scalar
+    _loss: Callable
+    # stats(params_dict, x, y, mask) -> (sum_loss, units, correct)
+    _stats: Callable
+    # batch input shapes/dtypes, e.g. {"x": ((B,16,16,3),"f32"), ...}
+    input_spec: dict
+
+    @property
+    def dim(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def offsets(self) -> list[tuple[ParamSpec, int]]:
+        out, off = [], 0
+        for s in self.specs:
+            out.append((s, off))
+            off += s.size
+        return out
+
+    def unpack(self, w_flat: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        params = {}
+        for s, off in self.offsets():
+            params[s.name] = w_flat[off : off + s.size].reshape(s.shape)
+        return params
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        parts = []
+        for s in self.specs:
+            if s.init == "zeros":
+                parts.append(np.zeros(s.size, np.float32))
+            elif s.init == "ones":
+                parts.append(np.ones(s.size, np.float32))
+            elif s.init == "embed":
+                parts.append(rng.normal(0.0, 0.02, s.size).astype(np.float32))
+            else:  # dense: He-style fan-in scaling
+                fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.size, 1)
+                if len(s.shape) == 4:  # conv HWIO: fan_in = H*W*I
+                    fan_in = s.shape[0] * s.shape[1] * s.shape[2]
+                std = float(np.sqrt(2.0 / fan_in))
+                parts.append(rng.normal(0.0, std, s.size).astype(np.float32))
+        return np.concatenate(parts)
+
+    def loss(self, w_flat, x, y, mask):
+        return self._loss(self.unpack(w_flat), x, y, mask)
+
+    def eval_stats(self, w_flat, x, y, mask):
+        return self._stats(self.unpack(w_flat), x, y, mask)
+
+
+def masked_ce_from_logits(logits: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray):
+    """(sum_ce, units, correct) for logits (..., V), labels (...), mask (...)."""
+    logp = jnp.take_along_axis(
+        _log_softmax(logits), y[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    ce = -logp
+    sum_ce = jnp.sum(ce * mask)
+    units = jnp.sum(mask)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+    return sum_ce, units, correct
+
+
+def _log_softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def mean_masked_loss(sum_ce, units):
+    return sum_ce / jnp.maximum(units, 1.0)

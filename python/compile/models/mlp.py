@@ -1,0 +1,60 @@
+"""MLP image classifier (flat-weight convention).
+
+Used for the FEMNIST-analog task and the smoke-test task: small, fast to
+differentiate on CPU, and still exhibits the heavy-hitter gradient
+structure FetchSGD exploits (per-class output rows dominate under label
+skew).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import FlatModel, ParamSpec, masked_ce_from_logits, mean_masked_loss
+
+
+def make_mlp(
+    name: str,
+    *,
+    input_shape: tuple[int, ...],
+    num_classes: int,
+    hidden: tuple[int, ...] = (256, 128),
+    batch: int = 16,
+) -> FlatModel:
+    in_dim = 1
+    for s in input_shape:
+        in_dim *= s
+    dims = [in_dim, *hidden, num_classes]
+    specs: list[ParamSpec] = []
+    for li in range(len(dims) - 1):
+        specs.append(ParamSpec(f"w{li}", (dims[li], dims[li + 1]), "dense"))
+        specs.append(ParamSpec(f"b{li}", (dims[li + 1],), "zeros"))
+
+    n_layers = len(dims) - 1
+
+    def forward(params, x):
+        hcur = x.reshape(x.shape[0], -1)
+        for li in range(n_layers):
+            hcur = hcur @ params[f"w{li}"] + params[f"b{li}"]
+            if li < n_layers - 1:
+                hcur = jnp.maximum(hcur, 0.0)
+        return hcur
+
+    def loss(params, x, y, mask):
+        sum_ce, units, _ = masked_ce_from_logits(forward(params, x), y, mask)
+        return mean_masked_loss(sum_ce, units)
+
+    def stats(params, x, y, mask):
+        return masked_ce_from_logits(forward(params, x), y, mask)
+
+    return FlatModel(
+        name=name,
+        specs=specs,
+        _loss=loss,
+        _stats=stats,
+        input_spec={
+            "x": ((batch, *input_shape), "f32"),
+            "y": ((batch,), "i32"),
+            "mask": ((batch,), "f32"),
+        },
+    )

@@ -1,0 +1,100 @@
+"""Decoder-only transformer LM — the GPT2-small analog.
+
+Character-level causal language model with pre-LN blocks, learned
+positional embeddings, and tied input/output embeddings (keeps the
+parameter count honest at small scale). The PersonaChat-analog task
+finetunes/trains this on a persona-conditioned synthetic corpus; the
+metric is token perplexity, as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import FlatModel, ParamSpec, masked_ce_from_logits, mean_masked_loss
+
+
+def _layer_norm(x, scale, bias, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def make_transformer(
+    name: str,
+    *,
+    vocab: int = 64,
+    seq: int = 32,
+    dim: int = 64,
+    heads: int = 4,
+    layers: int = 2,
+    mlp_mult: int = 4,
+    batch: int = 8,
+) -> FlatModel:
+    assert dim % heads == 0
+    head_dim = dim // heads
+    specs = [
+        ParamSpec("embed", (vocab, dim), "embed"),
+        ParamSpec("pos", (seq, dim), "embed"),
+    ]
+    for li in range(layers):
+        specs += [
+            ParamSpec(f"l{li}_ln1_s", (dim,), "ones"),
+            ParamSpec(f"l{li}_ln1_b", (dim,), "zeros"),
+            ParamSpec(f"l{li}_qkv", (dim, 3 * dim)),
+            ParamSpec(f"l{li}_proj", (dim, dim)),
+            ParamSpec(f"l{li}_ln2_s", (dim,), "ones"),
+            ParamSpec(f"l{li}_ln2_b", (dim,), "zeros"),
+            ParamSpec(f"l{li}_fc1", (dim, mlp_mult * dim)),
+            ParamSpec(f"l{li}_fc1b", (mlp_mult * dim,), "zeros"),
+            ParamSpec(f"l{li}_fc2", (mlp_mult * dim, dim)),
+            ParamSpec(f"l{li}_fc2b", (dim,), "zeros"),
+        ]
+    specs += [ParamSpec("lnf_s", (dim,), "ones"), ParamSpec("lnf_b", (dim,), "zeros")]
+
+    causal = np.tril(np.ones((seq, seq), np.float32))
+    neg_inf = -1e9
+
+    def forward(p, x):
+        # x: (B, S) int32 tokens -> logits (B, S, V)
+        h = p["embed"][x] + p["pos"][None, :, :]
+        b = x.shape[0]
+        for li in range(layers):
+            hn = _layer_norm(h, p[f"l{li}_ln1_s"], p[f"l{li}_ln1_b"])
+            qkv = hn @ p[f"l{li}_qkv"]  # (B,S,3D)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(b, seq, heads, head_dim).transpose(0, 2, 1, 3)
+            k = k.reshape(b, seq, heads, head_dim).transpose(0, 2, 1, 3)
+            v = v.reshape(b, seq, heads, head_dim).transpose(0, 2, 1, 3)
+            att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(head_dim)
+            att = jnp.where(causal[None, None, :, :] > 0, att, neg_inf)
+            att = att - jnp.max(att, axis=-1, keepdims=True)
+            att = jnp.exp(att)
+            att = att / jnp.sum(att, axis=-1, keepdims=True)
+            out = (att @ v).transpose(0, 2, 1, 3).reshape(b, seq, dim)
+            h = h + out @ p[f"l{li}_proj"]
+            hn = _layer_norm(h, p[f"l{li}_ln2_s"], p[f"l{li}_ln2_b"])
+            ff = jnp.maximum(hn @ p[f"l{li}_fc1"] + p[f"l{li}_fc1b"], 0.0)
+            h = h + ff @ p[f"l{li}_fc2"] + p[f"l{li}_fc2b"]
+        h = _layer_norm(h, p["lnf_s"], p["lnf_b"])
+        return h @ p["embed"].T  # tied output head
+
+    def loss(p, x, y, mask):
+        sum_ce, units, _ = masked_ce_from_logits(forward(p, x), y, mask)
+        return mean_masked_loss(sum_ce, units)
+
+    def stats(p, x, y, mask):
+        return masked_ce_from_logits(forward(p, x), y, mask)
+
+    return FlatModel(
+        name=name,
+        specs=specs,
+        _loss=loss,
+        _stats=stats,
+        input_spec={
+            "x": ((batch, seq), "i32"),
+            "y": ((batch, seq), "i32"),
+            "mask": ((batch, seq), "f32"),
+        },
+    )

@@ -1,0 +1,38 @@
+"""Generate golden cross-language hash vectors.
+
+Run once (checked into the repo); both python/tests/test_hashing.py and
+the Rust unit test `hashing::tests::golden_cross_language_vectors` assert
+against this file, pinning the two implementations together.
+"""
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from compile.kernels.hashing import SketchHasher
+
+ROWS, COLS, SEED = 3, 1 << 12, 0xFE7C5D11
+IDX = np.array([0, 1, 2, 1000, 65537, 4000000000], dtype=np.uint32)
+
+
+def main() -> None:
+    h = SketchHasher.create(ROWS, COLS, SEED)
+    out = {
+        "rows": ROWS,
+        "cols": COLS,
+        "seed": SEED,
+        "idx": [int(i) for i in IDX],
+        "buckets": [[int(b) for b in h.bucket_np(r, IDX)] for r in range(ROWS)],
+        "signs": [[float(s) for s in h.sign_np(r, IDX)] for r in range(ROWS)],
+    }
+    path = pathlib.Path(__file__).parent / "golden_hash_vectors.json"
+    path.write_text(json.dumps(out, indent=1))
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

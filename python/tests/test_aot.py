@@ -1,0 +1,72 @@
+"""AOT pipeline tests: HLO text lowering round-trips and the weights-file
+header matches the Rust reader."""
+
+import pathlib
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.kernels import SketchHasher
+from compile.model import make_client_step
+from compile.models import make_mlp
+
+
+def test_to_hlo_text_produces_parseable_module():
+    model = make_mlp("m", input_shape=(4, 4, 1), num_classes=4, hidden=(8,), batch=2)
+    h = SketchHasher.create(3, 64, 5)
+    step = make_client_step(model, h, block=64)
+    w = jax.ShapeDtypeStruct((model.dim,), np.float32)
+    x = jax.ShapeDtypeStruct((2, 4, 4, 1), np.float32)
+    y = jax.ShapeDtypeStruct((2,), np.int32)
+    m = jax.ShapeDtypeStruct((2,), np.float32)
+    lowered = jax.jit(step).lower(w, x, y, m)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # must not contain Mosaic custom-calls (interpret=True requirement)
+    assert "tpu_custom_call" not in text
+
+
+def test_weights_bin_header():
+    w = np.arange(10, dtype=np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        p = pathlib.Path(d) / "w.bin"
+        aot.write_weights_bin(p, w)
+        raw = p.read_bytes()
+        assert raw[:8] == b"FSGDF32\0"
+        (n,) = struct.unpack("<Q", raw[8:16])
+        assert n == 10
+        back = np.frombuffer(raw[16:], dtype="<f4")
+        np.testing.assert_array_equal(back, w)
+
+
+def test_task_table_is_consistent():
+    tasks = aot._tasks()
+    assert "smoke" in tasks and "cifar10" in tasks and "persona" in tasks
+    for name, cfg in tasks.items():
+        model = cfg["model"]()
+        assert model.dim > 0, name
+        for cols in cfg["sketch_cols"]:
+            assert cols & (cols - 1) == 0, f"{name}: cols {cols} not a power of 2"
+        assert cfg["fedavg_steps"], name
+        assert cfg["data"]["kind"] in ("images", "text")
+
+
+def test_smoke_manifest_matches_model(tmp_path):
+    # lower just the smoke task into a temp dir and check the manifest
+    import json
+
+    manifest = {"spec_version": 1, "sketch_rows": aot.SKETCH_ROWS, "tasks": []}
+    aot.lower_task("smoke", aot._tasks()["smoke"], tmp_path, manifest)
+    entry = manifest["tasks"][0]
+    model = aot._tasks()["smoke"]["model"]()
+    assert entry["dim"] == model.dim
+    assert (tmp_path / entry["init_weights"]).exists()
+    for kind, fname in entry["artifacts"].items():
+        text = (tmp_path / fname).read_text()
+        assert "HloModule" in text, kind
+    json.dumps(manifest)  # serializable

@@ -1,0 +1,71 @@
+"""Hash-spec tests: determinism, range, balance, and the golden vectors
+shared with the Rust implementation (rust/src/hashing.rs)."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile.kernels.hashing import SketchHasher, splitmix64
+
+
+def test_splitmix_deterministic():
+    v1, s1 = splitmix64(1234567)
+    v2, s2 = splitmix64(1234567)
+    assert v1 == v2 and s1 == s2
+    v3, _ = splitmix64(s1)
+    assert v3 != v1
+
+
+def test_bucket_range_and_uniformity():
+    h = SketchHasher.create(1, 128, 7)
+    idx = np.arange(128 * 200, dtype=np.uint32)
+    b = h.bucket_np(0, idx)
+    assert b.min() >= 0 and b.max() < 128
+    counts = np.bincount(b, minlength=128)
+    assert counts.min() > 50 and counts.max() < 400
+
+
+def test_signs_balanced():
+    h = SketchHasher.create(5, 64, 21)
+    idx = np.arange(10_000, dtype=np.uint32)
+    for r in range(5):
+        s = h.sign_np(r, idx)
+        assert set(np.unique(s)) <= {-1.0, 1.0}
+        pos = (s > 0).sum()
+        assert 4000 < pos < 6000
+
+
+def test_jnp_matches_np():
+    import jax.numpy as jnp
+
+    h = SketchHasher.create(3, 1024, 99)
+    idx = np.array([0, 1, 5, 1000, 2**31, 2**32 - 1], dtype=np.uint32)
+    for r in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(h.bucket_jnp(r, jnp.asarray(idx))), h.bucket_np(r, idx)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(h.sign_jnp(r, jnp.asarray(idx))), h.sign_np(r, idx)
+        )
+
+
+def test_golden_cross_language_vectors():
+    """Pins the Python implementation to the committed golden file; the
+    Rust test hashing::tests::golden_cross_language_vectors asserts the
+    same values, tying the two implementations together."""
+    path = pathlib.Path(__file__).parent / "golden_hash_vectors.json"
+    g = json.loads(path.read_text())
+    h = SketchHasher.create(g["rows"], g["cols"], g["seed"])
+    idx = np.array(g["idx"], dtype=np.uint32)
+    for r in range(g["rows"]):
+        assert [int(x) for x in h.bucket_np(r, idx)] == g["buckets"][r]
+        assert [float(x) for x in h.sign_np(r, idx)] == g["signs"][r]
+
+
+def test_rejects_bad_cols():
+    with pytest.raises(AssertionError):
+        SketchHasher.create(3, 100, 1)
+    with pytest.raises(AssertionError):
+        SketchHasher.create(0, 64, 1)

@@ -1,0 +1,168 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes, seeds, sketch geometries, strategies, and
+dtypes; every case must match ref.py to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import SketchHasher, sketch_encode, unsketch_estimate
+from compile.kernels.ref import sketch_encode_ref, top_k_ref, unsketch_estimate_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(d, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=d).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(min_value=1, max_value=5000),
+    log_cols=st.integers(min_value=3, max_value=12),
+    rows=st.sampled_from([1, 3, 5]),
+    seed=st.integers(min_value=0, max_value=2**63),
+    strategy=st.sampled_from(["scatter", "onehot"]),
+)
+def test_encode_matches_ref(d, log_cols, rows, seed, strategy):
+    h = SketchHasher.create(rows, 1 << log_cols, seed)
+    g = jnp.asarray(_rand(d, seed % 1000))
+    ref = sketch_encode_ref(h, g)
+    out = sketch_encode(g, h=h, strategy=strategy, block=512, col_tile=256)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(min_value=1, max_value=3000),
+    block=st.sampled_from([64, 256, 1024, 4096]),
+)
+def test_encode_block_size_invariant(d, block):
+    """Blocking is an implementation detail: results identical across
+    block sizes (including d not divisible by block)."""
+    h = SketchHasher.create(3, 256, 11)
+    g = jnp.asarray(_rand(d, 5))
+    a = sketch_encode(g, h=h, block=block)
+    b = sketch_encode(g, h=h, block=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_encode_linearity():
+    h = SketchHasher.create(5, 512, 3)
+    a = jnp.asarray(_rand(2000, 1))
+    b = jnp.asarray(_rand(2000, 2))
+    sa = sketch_encode(a, h=h)
+    sb = sketch_encode(b, h=h)
+    sab = sketch_encode(a + b, h=h)
+    np.testing.assert_allclose(np.asarray(sa + sb), np.asarray(sab), rtol=1e-4, atol=1e-5)
+
+
+def test_encode_bfloat16_input():
+    h = SketchHasher.create(3, 256, 9)
+    g32 = _rand(1000, 3)
+    g16 = jnp.asarray(g32, dtype=jnp.bfloat16)
+    out = sketch_encode(g16.astype(jnp.float32), h=h)
+    ref = sketch_encode_ref(h, jnp.asarray(g32))
+    # bf16 quantization noise: loose tolerance
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=0.1, atol=0.15)
+
+
+def test_encode_zero_vector():
+    h = SketchHasher.create(3, 64, 1)
+    out = sketch_encode(jnp.zeros(100), h=h)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# unsketch / estimate
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    d=st.integers(min_value=1, max_value=4000),
+    rows=st.sampled_from([1, 3, 5]),
+    seed=st.integers(min_value=0, max_value=2**31),
+    strategy=st.sampled_from(["gather", "onehot"]),
+)
+def test_estimate_matches_ref(d, rows, seed, strategy):
+    h = SketchHasher.create(rows, 512, seed)
+    g = jnp.asarray(_rand(d, seed % 997))
+    table = sketch_encode_ref(h, g)
+    ref = unsketch_estimate_ref(h, table, d)
+    out = unsketch_estimate(table, h=h, d=d, strategy=strategy, block=512, col_tile=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_roundtrip_recovers_heavy_hitters():
+    """Sketch then unsketch: planted heavy coordinates must be the top-k
+    of the estimates (the property FetchSGD's Δ extraction relies on)."""
+    d = 20_000
+    rng = np.random.default_rng(0)
+    g = rng.normal(scale=0.01, size=d).astype(np.float32)
+    planted = [17, 4242, 9999, 15000]
+    for i, p in enumerate(planted):
+        g[p] = 5.0 * (i + 1)
+    h = SketchHasher.create(5, 2048, 77)
+    table = sketch_encode(jnp.asarray(g), h=h)
+    est = unsketch_estimate(table, h=h, d=d)
+    idx, vals = top_k_ref(est, 4)
+    assert set(np.asarray(idx).tolist()) == set(planted)
+    for i, v in zip(np.asarray(idx), np.asarray(vals)):
+        np.testing.assert_allclose(v, g[int(i)], rtol=0.05)
+
+
+def test_estimate_unbiased_over_seeds():
+    """U(S(g))_i is an unbiased estimate of g_i: average over many hash
+    seeds converges to the true value."""
+    d = 512
+    g = np.zeros(d, np.float32)
+    g[7] = 1.0
+    g[100] = -2.0
+    target = 300
+    ests = []
+    for seed in range(40):
+        h = SketchHasher.create(1, 64, seed)  # tiny sketch, heavy collisions
+        table = sketch_encode_ref(h, jnp.asarray(g))
+        est = unsketch_estimate_ref(h, table, d)
+        ests.append(np.asarray(est)[target])
+    assert abs(np.mean(ests)) < 0.3, "collision noise should average to zero"
+
+
+# ---------------------------------------------------------------------------
+# shapes / errors
+# ---------------------------------------------------------------------------
+
+
+def test_encode_rejects_non_flat():
+    h = SketchHasher.create(3, 64, 1)
+    with pytest.raises(AssertionError):
+        sketch_encode(jnp.zeros((4, 4)), h=h)
+
+
+def test_unknown_strategy_raises():
+    h = SketchHasher.create(3, 64, 1)
+    with pytest.raises(ValueError):
+        sketch_encode(jnp.zeros(16), h=h, strategy="bogus")
+    with pytest.raises(ValueError):
+        unsketch_estimate(jnp.zeros((3, 64)), h=h, d=16, strategy="bogus")
+
+
+def test_encode_jit_cache_reuse():
+    """Repeated calls with the same static config must not retrace (guards
+    against accidentally unhashable statics)."""
+    h = SketchHasher.create(3, 256, 5)
+    g = jnp.asarray(_rand(1000, 1))
+    a = sketch_encode(g, h=h)
+    b = sketch_encode(g + 1.0, h=h)
+    assert a.shape == b.shape == (3, 256)

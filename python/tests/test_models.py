@@ -1,0 +1,180 @@
+"""L2 model tests: shapes, gradients, masking semantics, and the client
+computations that get lowered to artifacts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import SketchHasher
+from compile.kernels.ref import sketch_encode_ref
+from compile.model import make_client_grad, make_client_step, make_eval_step, make_fedavg_step
+from compile.models import make_cnn, make_mlp, make_transformer
+
+
+def _models():
+    return [
+        make_mlp("mlp", input_shape=(8, 8, 1), num_classes=10, hidden=(32,), batch=4),
+        make_cnn("cnn", image=(8, 8, 3), num_classes=10, widths=(4, 8, 8), batch=4),
+        make_transformer("tfm", vocab=32, seq=16, dim=32, heads=2, layers=1, batch=2),
+    ]
+
+
+def _batch(model, seed=0):
+    rng = np.random.default_rng(seed)
+    (xs, xd) = model.input_spec["x"]
+    (ys, _) = model.input_spec["y"]
+    (ms, _) = model.input_spec["mask"]
+    if xd == "f32":
+        x = rng.normal(size=xs).astype(np.float32)
+        y = rng.integers(0, 10, size=ys).astype(np.int32)
+    else:
+        x = rng.integers(0, 32, size=xs).astype(np.int32)
+        y = rng.integers(0, 32, size=ys).astype(np.int32)
+    mask = np.ones(ms, np.float32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("model", _models(), ids=lambda m: m.name)
+def test_init_deterministic_and_sized(model):
+    w1 = model.init_flat(7)
+    w2 = model.init_flat(7)
+    w3 = model.init_flat(8)
+    assert w1.shape == (model.dim,)
+    np.testing.assert_array_equal(w1, w2)
+    assert not np.array_equal(w1, w3)
+    assert np.isfinite(w1).all()
+
+
+@pytest.mark.parametrize("model", _models(), ids=lambda m: m.name)
+def test_loss_finite_and_grad_nonzero(model):
+    w = jnp.asarray(model.init_flat(1))
+    x, y, mask = _batch(model)
+    loss, grad = jax.value_and_grad(model.loss)(w, x, y, mask)
+    assert np.isfinite(float(loss))
+    assert grad.shape == (model.dim,)
+    assert float(jnp.abs(grad).max()) > 0.0
+    assert np.isfinite(np.asarray(grad)).all()
+
+
+@pytest.mark.parametrize("model", _models(), ids=lambda m: m.name)
+def test_mask_zero_examples_dont_contribute(model):
+    w = jnp.asarray(model.init_flat(1))
+    x, y, mask = _batch(model)
+    # zero out the last example; perturbing its data must not change loss
+    mask0 = np.asarray(mask).copy()
+    if mask0.ndim == 1:
+        mask0[-1] = 0.0
+    else:
+        mask0[-1, :] = 0.0
+    mask0 = jnp.asarray(mask0)
+    loss1 = model.loss(w, x, y, mask0)
+    x2 = np.asarray(x).copy()
+    x2[-1] = x2[0]  # clobber masked example
+    loss2 = model.loss(w, jnp.asarray(x2), y, mask0)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+
+
+def test_gradient_descent_reduces_loss():
+    model = make_mlp("m", input_shape=(8, 8, 1), num_classes=4, hidden=(16,), batch=8)
+    w = jnp.asarray(model.init_flat(3))
+    x, y, mask = _batch(model)
+    y = jnp.asarray(np.arange(8, dtype=np.int32) % 4)
+    l0 = float(model.loss(w, x, y, mask))
+    for _ in range(30):
+        g = jax.grad(model.loss)(w, x, y, mask)
+        w = w - 0.5 * g
+    l1 = float(model.loss(w, x, y, mask))
+    assert l1 < l0 * 0.5, f"{l0} -> {l1}"
+
+
+def test_client_step_sketch_matches_grad_sketch():
+    """The fused (grad+sketch) computation must equal sketching the
+    output of the grad computation — the invariant the Rust selfcheck
+    verifies through the artifacts."""
+    model = make_mlp("m", input_shape=(8, 8, 1), num_classes=10, hidden=(32,), batch=4)
+    h = SketchHasher.create(5, 512, 42)
+    step = make_client_step(model, h, block=512)
+    grad_fn = make_client_grad(model)
+    w = jnp.asarray(model.init_flat(1))
+    x, y, mask = _batch(model)
+    loss1, table = step(w, x, y, mask)
+    loss2, grad = grad_fn(w, x, y, mask)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    ref = sketch_encode_ref(h, grad)
+    np.testing.assert_allclose(np.asarray(table), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_fedavg_step_applies_k_local_steps():
+    model = make_mlp("m", input_shape=(8, 8, 1), num_classes=4, hidden=(16,), batch=4)
+    k = 3
+    fed = make_fedavg_step(model, k)
+    w = jnp.asarray(model.init_flat(5))
+    xs, ys, masks = [], [], []
+    for j in range(k):
+        x, y, m = _batch(model, seed=j)
+        xs.append(x)
+        ys.append(np.asarray(y) % 4)
+        masks.append(m)
+    xs = jnp.stack(xs)
+    ys = jnp.asarray(np.stack(ys))
+    masks = jnp.stack(masks)
+    loss, delta = fed(w, xs, ys, masks, jnp.float32(0.1))
+    # manual reference
+    w_ref = w
+    for j in range(k):
+        g = jax.grad(model.loss)(w_ref, xs[j], ys[j], masks[j])
+        w_ref = w_ref - 0.1 * g
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(w - w_ref), rtol=1e-4, atol=1e-6)
+    assert np.isfinite(float(loss))
+    # lr=0 -> zero delta
+    _, d0 = fed(w, xs, ys, masks, jnp.float32(0.0))
+    assert float(jnp.abs(d0).max()) == 0.0
+
+
+def test_eval_step_counts():
+    model = make_mlp("m", input_shape=(8, 8, 1), num_classes=4, hidden=(16,), batch=8)
+    ev = make_eval_step(model)
+    w = jnp.asarray(model.init_flat(2))
+    x, y, mask = _batch(model)
+    y = jnp.asarray(np.asarray(y) % 4)
+    sum_ce, units, correct = ev(w, x, y, mask)
+    assert float(units) == 8.0
+    assert 0.0 <= float(correct) <= 8.0
+    assert float(sum_ce) > 0.0
+    # half mask -> half units
+    m2 = np.ones(8, np.float32)
+    m2[4:] = 0.0
+    _, units2, correct2 = ev(w, x, y, jnp.asarray(m2))
+    assert float(units2) == 4.0
+    assert float(correct2) <= 4.0
+
+
+def test_transformer_causality():
+    """Changing a future token must not affect earlier positions'
+    logits (causal masking)."""
+    model = make_transformer("t", vocab=16, seq=8, dim=16, heads=2, layers=1, batch=1)
+    w = jnp.asarray(model.init_flat(1))
+    params = model.unpack(w)
+    # direct forward access via loss machinery: compare per-position CE
+    x1 = np.zeros((1, 8), np.int32)
+    x2 = x1.copy()
+    x2[0, -1] = 5  # change only the last input token
+    y = np.zeros((1, 8), np.int32)
+    # mask only position 0: loss depends solely on position 0's logits
+    m = np.zeros((1, 8), np.float32)
+    m[0, 0] = 1.0
+    l1 = float(model.loss(w, jnp.asarray(x1), jnp.asarray(y), jnp.asarray(m)))
+    l2 = float(model.loss(w, jnp.asarray(x2), jnp.asarray(y), jnp.asarray(m)))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    del params
+
+
+def test_param_spec_offsets_cover_dim():
+    for model in _models():
+        total = sum(s.size for s in model.specs)
+        assert total == model.dim
+        offs = model.offsets()
+        assert offs[0][1] == 0
+        for (s1, o1), (_, o2) in zip(offs, offs[1:]):
+            assert o2 == o1 + s1.size

@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with mean/stddev/percentiles and an
+//! aligned table printer. Used by `benches/*.rs` (cargo bench targets
+//! with `harness = false`) and by the performance pass recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile, stddev};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    /// Optional throughput denominator (elements processed per iter).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean_s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+/// `f` should return some value to keep the optimizer honest; its result
+/// is black-boxed.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&samples),
+        std_s: stddev(&samples),
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        elements: None,
+    }
+}
+
+/// Like [`bench`] but records a throughput denominator.
+pub fn bench_throughput<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    elements: u64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    r.elements = Some(elements);
+    r
+}
+
+/// Pretty time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Print results as an aligned table, with optional throughput column.
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>16}",
+        "case", "mean", "p50", "p95", "throughput"
+    );
+    for r in results {
+        let tp = match r.throughput() {
+            Some(t) if t >= 1e9 => format!("{:.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{:.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{:.2} K/s", t / 1e3),
+            Some(t) => format!("{t:.2} /s"),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}",
+            r.name,
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p95_s),
+            tp
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 10, || (0..1000).sum::<u64>());
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = bench_throughput("t", 1, 5, 1_000_000, || 1 + 1);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

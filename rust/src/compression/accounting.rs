@@ -1,0 +1,169 @@
+//! Communication accounting — the x-axis of every figure in the paper.
+//!
+//! Conventions follow the paper:
+//! - only non-zero f32 payloads count (footnote 5: an idealized sparse
+//!   encoding with zero index overhead);
+//! - compression is reported relative to uncompressed SGD run for the
+//!   *baseline* round count: `baseline_bytes / observed_bytes`, split
+//!   into upload, download, and overall (up + down);
+//! - per-round download for sparse methods is the round's broadcast
+//!   nnz; FedAvg/uncompressed download the full model.
+//!
+//! [`StalenessTracker`] implements the stricter model the paper
+//! discusses qualitatively in §5: a client downloads the union of all
+//! sparse updates since it last held the current model, so infrequent
+//! participants pay more. Both numbers are logged.
+
+use crate::compression::RoundUpdate;
+
+/// Running communication totals for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// Total bytes uploaded across all clients and rounds.
+    pub upload_bytes: u64,
+    /// Total bytes downloaded (per-round convention).
+    pub download_bytes: u64,
+    /// Total bytes downloaded (staleness-aware convention).
+    pub download_bytes_stale: u64,
+    pub rounds: u64,
+    pub client_rounds: u64,
+}
+
+impl CommStats {
+    pub fn record_round(
+        &mut self,
+        participants: usize,
+        upload_per_client: u64,
+        update: &RoundUpdate,
+        dim: usize,
+        stale_download: u64,
+    ) {
+        self.rounds += 1;
+        self.client_rounds += participants as u64;
+        self.upload_bytes += upload_per_client * participants as u64;
+        self.download_bytes += update.download_bytes(dim) * participants as u64;
+        self.download_bytes_stale += stale_download;
+    }
+
+    /// Compression ratios vs an uncompressed run of `baseline_rounds`
+    /// rounds with `participants` clients per round over a model of
+    /// `dim` parameters (both directions dense).
+    pub fn ratios(&self, baseline_rounds: u64, participants: u64, dim: usize) -> Ratios {
+        let dense = 4 * dim as u64 * baseline_rounds * participants;
+        let up = dense as f64 / self.upload_bytes.max(1) as f64;
+        let down = dense as f64 / self.download_bytes.max(1) as f64;
+        let overall = (2 * dense) as f64 / (self.upload_bytes + self.download_bytes).max(1) as f64;
+        Ratios { upload: up, download: down, overall }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Ratios {
+    pub upload: f64,
+    pub download: f64,
+    pub overall: f64,
+}
+
+/// Staleness-aware download accounting: tracks, per client, the set of
+/// model coordinates changed since that client last synced. A client
+/// that participates must first download every stale coordinate.
+///
+/// Exact per-coordinate tracking over 50k clients × 1M params is
+/// infeasible, so we track per client the *round* at which it last
+/// synced, plus a ring of per-round update supports; the stale set is
+/// the union of supports since last sync (with the union's size capped
+/// at `dim` — a fully stale client just re-downloads the model).
+pub struct StalenessTracker {
+    dim: usize,
+    /// round index at which each client last synced (or None).
+    last_sync: Vec<Option<u64>>,
+    /// per-round update nnz history (prefix-summed for O(1) range size
+    /// upper bound) — an upper bound of the union size.
+    nnz_prefix: Vec<u64>,
+}
+
+impl StalenessTracker {
+    pub fn new(num_clients: usize, dim: usize) -> Self {
+        StalenessTracker { dim, last_sync: vec![None; num_clients], nnz_prefix: vec![0] }
+    }
+
+    /// Record a round's broadcast update and charge download bytes to the
+    /// participants. Returns total staleness-aware download bytes.
+    pub fn round(&mut self, round: u64, participants: &[usize], update_nnz: usize) -> u64 {
+        debug_assert_eq!(self.nnz_prefix.len() as u64, round + 1);
+        let mut total = 0u64;
+        for &c in participants {
+            let stale_from = self.last_sync[c];
+            let stale_coords = match stale_from {
+                None => self.dim as u64, // first participation: full model
+                Some(r) => {
+                    let span = self.nnz_prefix[round as usize] - self.nnz_prefix[r as usize];
+                    span.min(self.dim as u64)
+                }
+            };
+            // ... plus this round's own update (they must apply it too).
+            let this_round = (update_nnz as u64).min(self.dim as u64);
+            total += 4 * (stale_coords + this_round);
+            self.last_sync[c] = Some(round + 1);
+        }
+        self.nnz_prefix.push(self.nnz_prefix[round as usize] + update_nnz as u64);
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SparseVec;
+
+    #[test]
+    fn ratios_vs_dense_baseline() {
+        let mut c = CommStats::default();
+        let update = RoundUpdate::Sparse(SparseVec::from_pairs(100, vec![(1, 1.0), (2, 2.0)]));
+        // 10 rounds, 2 clients, 40-byte uploads (10 floats)
+        for _ in 0..10 {
+            c.record_round(2, 40, &update, 100, 0);
+        }
+        let r = c.ratios(10, 2, 100);
+        // dense: 4*100*10*2 = 8000 bytes each way
+        assert!((r.upload - 8000.0 / 800.0).abs() < 1e-9);
+        assert!((r.download - 8000.0 / 160.0).abs() < 1e-9);
+        assert!((r.overall - 16000.0 / 960.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staleness_first_participation_costs_full_model() {
+        let mut t = StalenessTracker::new(3, 1000);
+        let bytes = t.round(0, &[0], 10);
+        assert_eq!(bytes, 4 * (1000 + 10));
+        // client 0 again next round: only the missed round (none) + new
+        let bytes = t.round(1, &[0], 10);
+        assert_eq!(bytes, 4 * 10);
+        // client 1 first time at round 2: full model + this update
+        let bytes = t.round(2, &[1], 10);
+        assert_eq!(bytes, 4 * (1000 + 10));
+    }
+
+    #[test]
+    fn staleness_accumulates_missed_updates() {
+        let mut t = StalenessTracker::new(2, 10_000);
+        t.round(0, &[0], 100);
+        t.round(1, &[1], 100); // client 0 misses this
+        t.round(2, &[1], 100); // and this
+        let bytes = t.round(3, &[0], 100);
+        // client 0 missed rounds 1,2 (200 coords) + round 3's 100
+        assert_eq!(bytes, 4 * (200 + 100));
+    }
+
+    #[test]
+    fn staleness_caps_at_full_model() {
+        let mut t = StalenessTracker::new(1, 50);
+        t.round(0, &[0], 40);
+        for r in 1..10 {
+            t.round(r, &[], 40);
+        }
+        let bytes = t.round(10, &[0], 40);
+        // union capped at dim=50, plus this round's 40
+        assert_eq!(bytes, 4 * (50 + 40));
+    }
+}

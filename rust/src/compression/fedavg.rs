@@ -1,0 +1,143 @@
+//! FedAvg (McMahan et al. 2016) — the local-steps baseline.
+//!
+//! Each client runs `K` local SGD steps (the `fedavg_k{K}` artifact: a
+//! `lax.scan` over pre-batched local data, entirely inside one HLO
+//! execution) and uploads the dense model delta; the server averages
+//! deltas weighted by local dataset size (paper §2.1) and applies them,
+//! optionally through a global momentum buffer (§5's ρ_g sweep).
+//!
+//! Communication: dense in both directions. FedAvg's compression in the
+//! paper comes from running fewer global epochs — the experiment driver
+//! sweeps `rounds` accordingly and rescales the lr schedule in the
+//! iteration dimension (§5).
+
+use anyhow::Result;
+
+use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::runtime::artifact::TaskArtifacts;
+use crate::runtime::exec::{run_fedavg, Batch};
+use crate::runtime::Tensor;
+
+pub struct FedAvg {
+    dim: usize,
+    local_steps: usize,
+    rho_g: f32,
+    momentum: Vec<f32>,
+    /// per-upload weights (client dataset sizes), set by the trainer
+    /// before server_round via `set_round_weights`.
+    round_weights: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new(dim: usize, local_steps: usize, rho_g: f32) -> Self {
+        FedAvg { dim, local_steps, rho_g, momentum: vec![0f32; dim], round_weights: Vec::new() }
+    }
+
+    /// Weight this round's uploads by local dataset size (FedAvg's
+    /// weighted average). Must align with the upload order.
+    pub fn set_round_weights(&mut self, weights: Vec<f32>) {
+        self.round_weights = weights;
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn wants_stacked_batches(&self) -> Option<usize> {
+        Some(self.local_steps)
+    }
+
+    fn begin_round(&mut self, client_sizes: &[f32]) {
+        self.set_round_weights(client_sizes.to_vec());
+    }
+
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        _batch: &Batch,
+        _client: usize,
+        stacked: Option<(Tensor, Tensor, Tensor)>,
+        lr: f32,
+    ) -> Result<ClientResult> {
+        let (xs, ys, masks) = stacked.expect("fedavg requires stacked local batches");
+        let exe = artifacts.executable(&TaskArtifacts::fedavg_kind(self.local_steps))?;
+        let (loss, delta) = run_fedavg(&exe, w, xs, ys, masks, lr)?;
+        Ok(ClientResult { loss, upload: ClientUpload::Dense(delta) })
+    }
+
+    fn server_round(
+        &mut self,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        _lr: f32,
+    ) -> Result<RoundUpdate> {
+        let n = uploads.len();
+        let weights: Vec<f32> = if self.round_weights.len() == n {
+            let total: f32 = self.round_weights.iter().sum();
+            self.round_weights.iter().map(|&x| x / total.max(1e-9)).collect()
+        } else {
+            vec![1.0 / n.max(1) as f32; n]
+        };
+        let mut mean = vec![0f32; self.dim];
+        for (u, wt) in uploads.into_iter().zip(weights) {
+            match u {
+                ClientUpload::Dense(delta) => {
+                    for (m, &d) in mean.iter_mut().zip(&delta) {
+                        *m += wt * d;
+                    }
+                }
+                _ => anyhow::bail!("fedavg expects dense delta uploads"),
+            }
+        }
+        self.round_weights.clear();
+        if self.rho_g > 0.0 {
+            for (m, &d) in self.momentum.iter_mut().zip(&mean) {
+                *m = self.rho_g * *m + d;
+            }
+            for (wi, &m) in w.iter_mut().zip(&self.momentum) {
+                *wi -= m;
+            }
+        } else {
+            for (wi, &d) in w.iter_mut().zip(&mean) {
+                *wi -= d;
+            }
+        }
+        Ok(RoundUpdate::Dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_of_deltas() {
+        let mut s = FedAvg::new(2, 2, 0.0);
+        let mut w = vec![0f32; 2];
+        s.set_round_weights(vec![3.0, 1.0]);
+        let u = vec![
+            ClientUpload::Dense(vec![4.0, 0.0]),
+            ClientUpload::Dense(vec![0.0, 4.0]),
+        ];
+        s.server_round(u, &mut w, 1.0).unwrap();
+        assert_eq!(w, vec![-3.0, -1.0]);
+    }
+
+    #[test]
+    fn unweighted_fallback() {
+        let mut s = FedAvg::new(1, 2, 0.0);
+        let mut w = vec![0f32];
+        let u = vec![ClientUpload::Dense(vec![2.0]), ClientUpload::Dense(vec![4.0])];
+        s.server_round(u, &mut w, 1.0).unwrap();
+        assert_eq!(w, vec![-3.0]);
+    }
+
+    #[test]
+    fn wants_stacked() {
+        let s = FedAvg::new(1, 5, 0.0);
+        assert_eq!(s.wants_stacked_batches(), Some(5));
+    }
+}

@@ -1,0 +1,193 @@
+//! Local top-k baseline (gradient sparsification, Lin et al. 2017 style).
+//!
+//! Each client computes its dense gradient (via the `client_grad`
+//! artifact) and uploads only its k largest-magnitude entries. The
+//! server averages the sparse uploads (the sum is generally much denser
+//! than k — the paper's point about poor download compression), applies
+//! optional *global* momentum `ρ_g ∈ {0, 0.9}` (paper §5), momentum
+//! factor masking, and a dense-ish sparse update.
+//!
+//! Local error accumulation is optional and OFF by default: it requires
+//! client state, which the paper argues is infeasible when clients
+//! participate once (§2.2); the flag exists for ablations in the regime
+//! where clients do re-participate.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::runtime::artifact::TaskArtifacts;
+use crate::runtime::exec::{run_client_grad, Batch};
+use crate::runtime::Tensor;
+use crate::sketch::topk::{top_k_sparse, SparseVec};
+
+pub struct LocalTopK {
+    dim: usize,
+    k: usize,
+    /// global (server-side) momentum ρ_g; 0 disables.
+    rho_g: f32,
+    /// Reserved for the stateful client-side-momentum variant; the
+    /// stateless server path intentionally does not mask (see the NOTE
+    /// in `server_round`).
+    #[allow(dead_code)]
+    masking: bool,
+    /// local error accumulation (requires client state; default off).
+    local_error: bool,
+    momentum: Vec<f32>,
+    /// per-client error vectors, only if local_error
+    errors: HashMap<usize, Vec<f32>>,
+}
+
+impl LocalTopK {
+    pub fn new(dim: usize, k: usize, rho_g: f32, masking: bool, local_error: bool) -> Self {
+        LocalTopK {
+            dim,
+            k,
+            rho_g,
+            masking,
+            local_error,
+            momentum: vec![0f32; dim],
+            errors: HashMap::new(),
+        }
+    }
+}
+
+impl Strategy for LocalTopK {
+    fn name(&self) -> &'static str {
+        "local_topk"
+    }
+
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        batch: &Batch,
+        client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let exe = artifacts.executable("client_grad")?;
+        let (loss, mut grad) = run_client_grad(&exe, w, batch)?;
+        if self.local_error {
+            if let Some(e) = self.errors.get(&client) {
+                for (g, &ev) in grad.iter_mut().zip(e) {
+                    *g += ev;
+                }
+            }
+        }
+        let sparse = top_k_sparse(&grad, self.k);
+        Ok(ClientResult { loss, upload: ClientUpload::Sparse(sparse) })
+    }
+
+    fn server_round(
+        &mut self,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> Result<RoundUpdate> {
+        let count = uploads.len().max(1) as f32;
+        let mut mean = vec![0f32; self.dim];
+        for u in uploads {
+            match u {
+                ClientUpload::Sparse(sv) => sv.add_into(&mut mean, 1.0 / count),
+                _ => anyhow::bail!("local_topk expects sparse uploads"),
+            }
+        }
+        // Global momentum on the aggregated sparse update.
+        let update: Vec<f32> = if self.rho_g > 0.0 {
+            for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+                *m = self.rho_g * *m + g;
+            }
+            self.momentum.clone()
+        } else {
+            mean
+        };
+        // The broadcast update: non-zero coords of `update` scaled by lr.
+        let mut pairs = Vec::new();
+        for (i, &v) in update.iter().enumerate() {
+            if v != 0.0 {
+                pairs.push((i as u32, lr * v));
+            }
+        }
+        let sparse = SparseVec::from_pairs(self.dim, pairs);
+        sparse.add_into(w, -1.0);
+        // NOTE: momentum factor masking is NOT applied to the *global*
+        // momentum here. Unlike FetchSGD/true-top-k — where the server
+        // extracts a k-sparse subset of an accumulated signal and
+        // masking prevents the extracted part from re-applying — the
+        // local-top-k server applies its entire aggregated update each
+        // round, so masking the update's support would zero the whole
+        // momentum buffer and silently turn ρ_g=0.9 into ρ_g=0. The
+        // paper's ρ_g sweep (Figure 5: momentum *hurts* local top-k on
+        // PersonaChat) only makes sense with momentum intact. The
+        // `masking` flag is kept for the client-side (local-momentum)
+        // variant, which we do not run for stateless clients.
+        Ok(RoundUpdate::Sparse(sparse))
+    }
+}
+
+/// Record client-side error for the local_error ablation (called by the
+/// trainer after the round so the strategy remains `&self` in
+/// client_round).
+impl LocalTopK {
+    pub fn record_local_error(&mut self, client: usize, grad_minus_sent: Vec<f32>) {
+        if self.local_error {
+            self.errors.insert(client, grad_minus_sent);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_averages_sparse_uploads() {
+        let mut s = LocalTopK::new(10, 2, 0.0, false, false);
+        let mut w = vec![0f32; 10];
+        let u1 = ClientUpload::Sparse(SparseVec::from_pairs(10, vec![(1, 2.0), (3, -4.0)]));
+        let u2 = ClientUpload::Sparse(SparseVec::from_pairs(10, vec![(1, 2.0), (5, 6.0)]));
+        let up = s.server_round(vec![u1, u2], &mut w, 0.5).unwrap();
+        // mean: idx1=2.0, idx3=-2.0, idx5=3.0; update = lr*mean
+        assert!((w[1] - -1.0).abs() < 1e-6);
+        assert!((w[3] - 1.0).abs() < 1e-6);
+        assert!((w[5] - -1.5).abs() < 1e-6);
+        match up {
+            RoundUpdate::Sparse(sv) => assert_eq!(sv.nnz(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn union_of_disjoint_topk_is_denser_than_k() {
+        // The paper's observation: summing sparse gradients from clients
+        // with very different data gives a nearly dense update.
+        let mut s = LocalTopK::new(100, 5, 0.0, false, false);
+        let mut w = vec![0f32; 100];
+        let uploads: Vec<ClientUpload> = (0..10)
+            .map(|c| {
+                let pairs: Vec<(u32, f32)> =
+                    (0..5).map(|j| ((c * 10 + j) as u32, 1.0)).collect();
+                ClientUpload::Sparse(SparseVec::from_pairs(100, pairs))
+            })
+            .collect();
+        let up = s.server_round(uploads, &mut w, 1.0).unwrap();
+        assert_eq!(up.nnz(100), 50, "disjoint supports union");
+    }
+
+    #[test]
+    fn global_momentum_persists_and_amplifies() {
+        // Regression test: masking must NOT nullify global momentum (the
+        // update support covers the whole momentum support, so masking
+        // there would silently disable ρ_g — see server_round NOTE).
+        let mut s = LocalTopK::new(4, 1, 0.9, true, false);
+        let mut w = vec![0f32; 4];
+        for _ in 0..3 {
+            let u = ClientUpload::Sparse(SparseVec::from_pairs(4, vec![(2, 1.0)]));
+            s.server_round(vec![u], &mut w, 1.0).unwrap();
+        }
+        assert!(s.momentum[2] > 1.5, "momentum should accumulate: {}", s.momentum[2]);
+        // momentum path moved w further than 3 plain steps would
+        assert!(w[2] < -3.0, "w[2]={}", w[2]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Compression strategies: FetchSGD and every baseline the paper
+//! compares against, behind a common [`Strategy`] interface so the
+//! coordinator's round loop is strategy-agnostic.
+//!
+//! | strategy       | client compute artifact   | upload            | server state |
+//! |----------------|---------------------------|-------------------|--------------|
+//! | `fetchsgd`     | `client_step_c{cols}`     | R×C sketch        | S_u, S_e sketches |
+//! | `local_topk`   | `client_grad`             | k-sparse grad     | optional global momentum |
+//! | `fedavg`       | `fedavg_k{K}`             | dense delta       | optional global momentum |
+//! | `uncompressed` | `client_grad`             | dense grad        | optional global momentum |
+//! | `true_topk`    | `client_grad`             | dense grad        | dense momentum + error vectors |
+//!
+//! Byte accounting follows the paper's convention (footnote 5): only
+//! non-zero f32 payloads count, assuming a zero-overhead sparse index
+//! encoding. [`accounting`] additionally implements staleness-aware
+//! download tracking (clients fetch the union of sparse updates since
+//! their last participation) as a stricter alternative.
+
+pub mod accounting;
+pub mod fedavg;
+pub mod fetchsgd;
+pub mod local_topk;
+pub mod timing;
+pub mod true_topk;
+pub mod uncompressed;
+
+use anyhow::Result;
+
+use crate::runtime::artifact::TaskArtifacts;
+use crate::runtime::exec::Batch;
+use crate::sketch::{CountSketch, SparseVec};
+
+/// What a client sends to the aggregator.
+pub enum ClientUpload {
+    Sketch(CountSketch),
+    Sparse(SparseVec),
+    Dense(Vec<f32>),
+}
+
+impl ClientUpload {
+    /// Upload payload bytes under the paper's accounting convention.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            ClientUpload::Sketch(s) => s.payload_bytes(),
+            ClientUpload::Sparse(sv) => sv.payload_bytes(),
+            ClientUpload::Dense(v) => 4 * v.len() as u64,
+        }
+    }
+}
+
+/// The model update the server broadcasts after a round.
+pub enum RoundUpdate {
+    /// k-sparse update (FetchSGD, local/true top-k).
+    Sparse(SparseVec),
+    /// Dense update (uncompressed, FedAvg).
+    Dense,
+}
+
+impl RoundUpdate {
+    pub fn download_bytes(&self, dim: usize) -> u64 {
+        match self {
+            RoundUpdate::Sparse(sv) => sv.payload_bytes(),
+            RoundUpdate::Dense => 4 * dim as u64,
+        }
+    }
+
+    pub fn nnz(&self, dim: usize) -> usize {
+        match self {
+            RoundUpdate::Sparse(sv) => sv.nnz(),
+            RoundUpdate::Dense => dim,
+        }
+    }
+}
+
+/// Outcome of one client's local computation.
+pub struct ClientResult {
+    pub loss: f32,
+    pub upload: ClientUpload,
+}
+
+/// A federated optimization strategy: how clients compress, how the
+/// server aggregates and updates the model.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Execute one client's local work for this round. `lr` is the
+    /// current scheduled learning rate (used by FedAvg's local steps;
+    /// sketch/gradient methods apply lr on the server).
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        batch: &Batch,
+        client: usize,
+        stacked: Option<(crate::runtime::Tensor, crate::runtime::Tensor, crate::runtime::Tensor)>,
+        lr: f32,
+    ) -> Result<ClientResult>;
+
+    /// Whether this strategy needs stacked FedAvg-style local batches.
+    fn wants_stacked_batches(&self) -> Option<usize> {
+        None
+    }
+
+    /// Called before client work each round with the participants' local
+    /// dataset sizes (FedAvg uses them as aggregation weights).
+    fn begin_round(&mut self, _client_sizes: &[f32]) {}
+
+    /// Aggregate uploads and update `w` in place; returns the broadcast
+    /// update for download accounting.
+    fn server_round(&mut self, uploads: Vec<ClientUpload>, w: &mut [f32], lr: f32)
+        -> Result<RoundUpdate>;
+}

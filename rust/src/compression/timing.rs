@@ -1,0 +1,114 @@
+//! Network-time model: translates byte counts into wallclock estimates.
+//!
+//! The paper's motivation (§1) is that federated clients sit behind slow
+//! (~1 Mbps) and *asymmetric* residential links (§2.2, citing Goga &
+//! Teixeira 2012: uploads are far slower than downloads). Compression
+//! ratios alone hide this asymmetry; this model turns per-round bytes
+//! into per-round seconds so experiments can report *time-to-accuracy*
+//! under realistic link profiles.
+//!
+//! The model is deliberately simple and fully documented: per round,
+//! every participant uploads its payload in parallel (the round waits
+//! for the slowest, but payloads are equal-sized, so one transfer time)
+//! and downloads the broadcast update; a fixed per-round handshake
+//! latency covers connection setup. Compute time is not modeled (it is
+//! hardware-dependent and orthogonal to the paper's claim).
+
+/// A client link profile.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkProfile {
+    /// Uplink bandwidth, bits per second.
+    pub uplink_bps: f64,
+    /// Downlink bandwidth, bits per second.
+    pub downlink_bps: f64,
+    /// Per-round fixed latency (connection + coordination), seconds.
+    pub round_latency_s: f64,
+}
+
+impl LinkProfile {
+    /// The paper's motivating scenario: ~1 Mbps uplink, asymmetric
+    /// residential connection (≈8x faster downlink), 300 ms round setup.
+    pub fn residential() -> Self {
+        LinkProfile { uplink_bps: 1e6, downlink_bps: 8e6, round_latency_s: 0.3 }
+    }
+
+    /// A fast-WiFi profile (the favorable case for dense methods).
+    pub fn wifi() -> Self {
+        LinkProfile { uplink_bps: 20e6, downlink_bps: 100e6, round_latency_s: 0.1 }
+    }
+
+    /// Time for one round's communication given per-client payloads.
+    pub fn round_seconds(&self, upload_bytes_per_client: u64, download_bytes_per_client: u64) -> f64 {
+        let up = upload_bytes_per_client as f64 * 8.0 / self.uplink_bps;
+        let down = download_bytes_per_client as f64 * 8.0 / self.downlink_bps;
+        self.round_latency_s + up + down
+    }
+}
+
+/// Accumulated communication-time estimate for a run.
+#[derive(Clone, Debug, Default)]
+pub struct CommTime {
+    pub total_s: f64,
+    pub upload_s: f64,
+    pub download_s: f64,
+    pub latency_s: f64,
+}
+
+impl CommTime {
+    pub fn record_round(
+        &mut self,
+        profile: &LinkProfile,
+        upload_bytes_per_client: u64,
+        download_bytes_per_client: u64,
+    ) {
+        let up = upload_bytes_per_client as f64 * 8.0 / profile.uplink_bps;
+        let down = download_bytes_per_client as f64 * 8.0 / profile.downlink_bps;
+        self.upload_s += up;
+        self.download_s += down;
+        self.latency_s += profile.round_latency_s;
+        self.total_s += up + down + profile.round_latency_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residential_is_upload_bound_for_dense_methods() {
+        let p = LinkProfile::residential();
+        // 6.5M-param model, dense both ways (uncompressed SGD client).
+        let bytes = 6_500_000u64 * 4;
+        let t = p.round_seconds(bytes, bytes);
+        let up_only = bytes as f64 * 8.0 / p.uplink_bps;
+        assert!(t > up_only, "total includes download + latency");
+        // upload dominates: > 85% of transfer time
+        let down_only = bytes as f64 * 8.0 / p.downlink_bps;
+        assert!(up_only > 5.0 * down_only);
+        // ~208s upload at 1Mbps — matches the paper's "slow connections"
+        assert!((up_only - 208.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn sketch_upload_beats_dense_by_its_compression_ratio() {
+        let p = LinkProfile::residential();
+        let d = 6_500_000u64;
+        let sketch_cells = 5 * 650_000u64; // paper-ish geometry
+        let dense = p.round_seconds(d * 4, 0);
+        let sketched = p.round_seconds(sketch_cells * 4, 0);
+        let ratio = (dense - p.round_latency_s) / (sketched - p.round_latency_s);
+        assert!((ratio - 2.0).abs() < 0.01); // d / cells = 2.0
+    }
+
+    #[test]
+    fn comm_time_accumulates() {
+        let p = LinkProfile::wifi();
+        let mut ct = CommTime::default();
+        for _ in 0..10 {
+            ct.record_round(&p, 1_000_000, 100_000);
+        }
+        assert!((ct.latency_s - 1.0).abs() < 1e-9);
+        assert!((ct.upload_s - 10.0 * 8e6 / 20e6).abs() < 1e-9);
+        assert!((ct.total_s - (ct.upload_s + ct.download_s + ct.latency_s)).abs() < 1e-9);
+    }
+}

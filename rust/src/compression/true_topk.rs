@@ -1,0 +1,131 @@
+//! True top-k (paper Appendix A.3, Figure 10): the idealized method
+//! FetchSGD approximates.
+//!
+//! Clients upload *full* gradients; the server averages them exactly,
+//! carries dense momentum and a dense error accumulation vector, and
+//! updates the model with only the k highest-magnitude elements of the
+//! accumulated error, keeping the remainder for later rounds. With
+//! momentum factor masking, exactly as §5 runs it. This is a diagnostic
+//! upper bound: FetchSGD = true top-k with the dense vectors replaced by
+//! Count Sketches.
+
+use anyhow::Result;
+
+use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::runtime::artifact::TaskArtifacts;
+use crate::runtime::exec::{run_client_grad, Batch};
+use crate::runtime::Tensor;
+use crate::sketch::topk::{top_k_indices, SparseVec};
+
+pub struct TrueTopK {
+    dim: usize,
+    k: usize,
+    rho: f32,
+    masking: bool,
+    momentum: Vec<f32>,
+    error: Vec<f32>,
+}
+
+impl TrueTopK {
+    pub fn new(dim: usize, k: usize, rho: f32, masking: bool) -> Self {
+        TrueTopK { dim, k, rho, masking, momentum: vec![0f32; dim], error: vec![0f32; dim] }
+    }
+}
+
+impl Strategy for TrueTopK {
+    fn name(&self) -> &'static str {
+        "true_topk"
+    }
+
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        batch: &Batch,
+        _client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let exe = artifacts.executable("client_grad")?;
+        let (loss, grad) = run_client_grad(&exe, w, batch)?;
+        Ok(ClientResult { loss, upload: ClientUpload::Dense(grad) })
+    }
+
+    fn server_round(
+        &mut self,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> Result<RoundUpdate> {
+        let count = uploads.len().max(1) as f32;
+        let mut mean = vec![0f32; self.dim];
+        for u in uploads {
+            match u {
+                ClientUpload::Dense(g) => {
+                    for (m, &gi) in mean.iter_mut().zip(&g) {
+                        *m += gi / count;
+                    }
+                }
+                _ => anyhow::bail!("true_topk expects dense uploads"),
+            }
+        }
+        // Dense momentum + error feedback — the exact (unsketched)
+        // counterpart of FetchSGD's server update.
+        for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+            *m = self.rho * *m + g;
+        }
+        for (e, &m) in self.error.iter_mut().zip(&self.momentum) {
+            *e += lr * m;
+        }
+        let idx = top_k_indices(&self.error, self.k);
+        let mut pairs = Vec::with_capacity(idx.len());
+        for &i in &idx {
+            pairs.push((i, self.error[i as usize]));
+            self.error[i as usize] = 0.0; // keep the rest accumulated
+            if self.masking {
+                self.momentum[i as usize] = 0.0;
+            }
+        }
+        let delta = SparseVec::from_pairs(self.dim, pairs);
+        delta.add_into(w, -1.0);
+        Ok(RoundUpdate::Sparse(delta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_exact_topk_and_keeps_residual() {
+        let mut s = TrueTopK::new(5, 1, 0.0, false);
+        let mut w = vec![0f32; 5];
+        let u = vec![ClientUpload::Dense(vec![0.1, 0.5, 0.2, 0.0, 0.3])];
+        let up = s.server_round(u, &mut w, 1.0).unwrap();
+        match up {
+            RoundUpdate::Sparse(sv) => {
+                assert_eq!(sv.idx, vec![1]);
+                assert!((sv.val[0] - 0.5).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(s.error[1], 0.0);
+        assert!((s.error[4] - 0.3).abs() < 1e-6, "residual kept");
+        // second round with zero grads: residual 0.3 should win now
+        let u = vec![ClientUpload::Dense(vec![0.0; 5])];
+        let up = s.server_round(u, &mut w, 1.0).unwrap();
+        match up {
+            RoundUpdate::Sparse(sv) => assert_eq!(sv.idx, vec![4]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn masking_zeroes_momentum_at_extracted() {
+        let mut s = TrueTopK::new(3, 1, 0.9, true);
+        let mut w = vec![0f32; 3];
+        let u = vec![ClientUpload::Dense(vec![1.0, 0.0, 0.0])];
+        s.server_round(u, &mut w, 1.0).unwrap();
+        assert_eq!(s.momentum[0], 0.0);
+    }
+}

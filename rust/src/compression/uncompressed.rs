@@ -1,0 +1,108 @@
+//! Uncompressed distributed SGD — the accuracy ceiling baseline.
+//!
+//! Clients upload dense gradients; the server averages, applies global
+//! momentum, and takes a dense step. "Compression" for this method in
+//! the paper's figures comes from simply training for fewer epochs; the
+//! experiment drivers sweep `rounds` for that.
+
+use anyhow::Result;
+
+use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::runtime::artifact::TaskArtifacts;
+use crate::runtime::exec::{run_client_grad, Batch};
+use crate::runtime::Tensor;
+
+pub struct Uncompressed {
+    dim: usize,
+    rho_g: f32,
+    momentum: Vec<f32>,
+}
+
+impl Uncompressed {
+    pub fn new(dim: usize, rho_g: f32) -> Self {
+        Uncompressed { dim, rho_g, momentum: vec![0f32; dim] }
+    }
+}
+
+impl Strategy for Uncompressed {
+    fn name(&self) -> &'static str {
+        "uncompressed"
+    }
+
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        batch: &Batch,
+        _client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let exe = artifacts.executable("client_grad")?;
+        let (loss, grad) = run_client_grad(&exe, w, batch)?;
+        Ok(ClientResult { loss, upload: ClientUpload::Dense(grad) })
+    }
+
+    fn server_round(
+        &mut self,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> Result<RoundUpdate> {
+        let count = uploads.len().max(1) as f32;
+        let mut mean = vec![0f32; self.dim];
+        for u in uploads {
+            match u {
+                ClientUpload::Dense(g) => {
+                    for (m, &gi) in mean.iter_mut().zip(&g) {
+                        *m += gi / count;
+                    }
+                }
+                _ => anyhow::bail!("uncompressed expects dense uploads"),
+            }
+        }
+        if self.rho_g > 0.0 {
+            for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+                *m = self.rho_g * *m + g;
+            }
+            for (wi, &m) in w.iter_mut().zip(&self.momentum) {
+                *wi -= lr * m;
+            }
+        } else {
+            for (wi, &g) in w.iter_mut().zip(&mean) {
+                *wi -= lr * g;
+            }
+        }
+        Ok(RoundUpdate::Dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut s = Uncompressed::new(3, 0.0);
+        let mut w = vec![1.0f32; 3];
+        let u = vec![
+            ClientUpload::Dense(vec![1.0, 0.0, 2.0]),
+            ClientUpload::Dense(vec![3.0, 0.0, 0.0]),
+        ];
+        let up = s.server_round(u, &mut w, 0.5).unwrap();
+        assert_eq!(w, vec![0.0, 1.0, 0.5]);
+        assert!(matches!(up, RoundUpdate::Dense));
+        assert_eq!(up.download_bytes(3), 12);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut s = Uncompressed::new(1, 0.5);
+        let mut w = vec![0.0f32];
+        for _ in 0..3 {
+            s.server_round(vec![ClientUpload::Dense(vec![1.0])], &mut w, 1.0).unwrap();
+        }
+        // updates: 1, 1.5, 1.75 => w = -4.25
+        assert!((w[0] + 4.25).abs() < 1e-6);
+    }
+}

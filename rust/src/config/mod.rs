@@ -1,0 +1,9 @@
+//! Configuration: typed training config, JSON config files, CLI
+//! overrides (`key=value`), and the learning-rate schedules from the
+//! paper's experiments.
+
+pub mod schedule;
+pub mod types;
+
+pub use schedule::LrSchedule;
+pub use types::{StrategyConfig, TrainConfig};

@@ -1,0 +1,333 @@
+//! Typed training configuration + JSON/CLI parsing.
+//!
+//! Configs load from JSON files (`fetchsgd train --config cfg.json`) and
+//! accept `key=value` CLI overrides for every field, so experiment
+//! drivers and users share one source of truth.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use crate::config::schedule::LrSchedule;
+use crate::model::DataScale;
+use crate::serialize::json::{parse, Value};
+
+/// Which optimization strategy to run (paper §5's comparison set).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyConfig {
+    FetchSgd {
+        k: usize,
+        cols: usize,
+        rho: f32,
+        /// "zero_out" (paper §5) or "subtract" (Algorithm 1 line 14).
+        error_update: String,
+        /// "vanilla" | "ring:I" | "log:I"
+        error_window: String,
+        masking: bool,
+    },
+    LocalTopK {
+        k: usize,
+        rho_g: f32,
+        masking: bool,
+        local_error: bool,
+    },
+    FedAvg {
+        local_steps: usize,
+        rho_g: f32,
+    },
+    Uncompressed {
+        rho_g: f32,
+    },
+    TrueTopK {
+        k: usize,
+        rho: f32,
+        masking: bool,
+    },
+}
+
+impl StrategyConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyConfig::FetchSgd { .. } => "fetchsgd",
+            StrategyConfig::LocalTopK { .. } => "local_topk",
+            StrategyConfig::FedAvg { .. } => "fedavg",
+            StrategyConfig::Uncompressed { .. } => "uncompressed",
+            StrategyConfig::TrueTopK { .. } => "true_topk",
+        }
+    }
+}
+
+/// Full configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest task name (smoke / cifar10 / cifar100 / femnist /
+    /// persona / persona_large).
+    pub task: String,
+    pub strategy: StrategyConfig,
+    pub rounds: usize,
+    /// Clients sampled per round (W).
+    pub clients_per_round: usize,
+    pub lr: LrSchedule,
+    pub scale: DataScale,
+    /// Evaluate every N rounds (0 = only at the end).
+    pub eval_every: usize,
+    /// Run seed (client selection etc.).
+    pub seed: u64,
+    /// Artifacts directory.
+    pub artifacts_dir: PathBuf,
+    /// Optional JSONL metrics output.
+    pub log_path: Option<PathBuf>,
+    /// Baseline rounds for compression ratios (defaults to `rounds`).
+    pub baseline_rounds: Option<usize>,
+    /// Print per-round progress lines.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    /// Tiny config for tests and the quickstart example.
+    pub fn default_smoke() -> TrainConfig {
+        TrainConfig {
+            task: "smoke".into(),
+            strategy: StrategyConfig::FetchSgd {
+                k: 50,
+                cols: 512,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            rounds: 20,
+            clients_per_round: 4,
+            lr: LrSchedule::Triangular { peak: 0.2, pivot: 0.25 },
+            scale: DataScale::smoke(),
+            eval_every: 10,
+            seed: 1,
+            artifacts_dir: PathBuf::from("artifacts"),
+            log_path: None,
+            baseline_rounds: None,
+            verbose: false,
+        }
+    }
+
+    /// Load from a JSON file then apply `key=value` overrides.
+    pub fn load(path: &std::path::Path, overrides: &[String]) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = parse(&text)?;
+        let mut cfg = Self::from_json(&v)?;
+        cfg.apply_overrides(overrides)?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(v: &Value) -> Result<TrainConfig> {
+        let strategy = Self::strategy_from_json(v.req("strategy")?)?;
+        let mut scale = DataScale::default();
+        if let Some(s) = v.get("scale") {
+            scale.num_clients = s.opt_usize("num_clients", scale.num_clients);
+            scale.samples_per_client = s.opt_usize("samples_per_client", scale.samples_per_client);
+            scale.writer_mean_size = s.opt_usize("writer_mean_size", scale.writer_mean_size);
+            scale.persona_max_size = s.opt_usize("persona_max_size", scale.persona_max_size);
+            scale.persona_alpha = s.opt_f64("persona_alpha", scale.persona_alpha);
+            scale.eval_batches = s.opt_usize("eval_batches", scale.eval_batches);
+            scale.noise_sigma = s.opt_f64("noise_sigma", scale.noise_sigma as f64) as f32;
+            scale.partition = s.opt_str("partition", &scale.partition).to_string();
+            scale.seed = s.opt_f64("seed", scale.seed as f64) as u64;
+        }
+        Ok(TrainConfig {
+            task: v.req_str("task")?.to_string(),
+            strategy,
+            rounds: v.req_usize("rounds")?,
+            clients_per_round: v.req_usize("clients_per_round")?,
+            lr: LrSchedule::parse(v.req_str("lr")?)?,
+            scale,
+            eval_every: v.opt_usize("eval_every", 0),
+            seed: v.opt_f64("seed", 1.0) as u64,
+            artifacts_dir: PathBuf::from(v.opt_str("artifacts_dir", "artifacts")),
+            log_path: v.get("log_path").and_then(|p| p.as_str()).map(PathBuf::from),
+            baseline_rounds: v.get("baseline_rounds").and_then(|b| b.as_usize()),
+            verbose: v.opt_bool("verbose", false),
+        })
+    }
+
+    fn strategy_from_json(v: &Value) -> Result<StrategyConfig> {
+        let kind = v.req_str("kind")?;
+        Ok(match kind {
+            "fetchsgd" => StrategyConfig::FetchSgd {
+                k: v.req_usize("k")?,
+                cols: v.req_usize("cols")?,
+                rho: v.opt_f64("rho", 0.9) as f32,
+                error_update: v.opt_str("error_update", "zero_out").to_string(),
+                error_window: v.opt_str("error_window", "vanilla").to_string(),
+                masking: v.opt_bool("masking", true),
+            },
+            "local_topk" => StrategyConfig::LocalTopK {
+                k: v.req_usize("k")?,
+                rho_g: v.opt_f64("rho_g", 0.0) as f32,
+                masking: v.opt_bool("masking", true),
+                local_error: v.opt_bool("local_error", false),
+            },
+            "fedavg" => StrategyConfig::FedAvg {
+                local_steps: v.req_usize("local_steps")?,
+                rho_g: v.opt_f64("rho_g", 0.0) as f32,
+            },
+            "uncompressed" => {
+                StrategyConfig::Uncompressed { rho_g: v.opt_f64("rho_g", 0.9) as f32 }
+            }
+            "true_topk" => StrategyConfig::TrueTopK {
+                k: v.req_usize("k")?,
+                rho: v.opt_f64("rho", 0.9) as f32,
+                masking: v.opt_bool("masking", true),
+            },
+            other => bail!("unknown strategy kind '{other}'"),
+        })
+    }
+
+    /// Apply `key=value` overrides (dotted paths for nested fields).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for ov in overrides {
+            let (key, val) = ov
+                .split_once('=')
+                .with_context(|| format!("override '{ov}' must be key=value"))?;
+            match key {
+                "task" => self.task = val.to_string(),
+                "rounds" => self.rounds = val.parse()?,
+                "clients_per_round" => self.clients_per_round = val.parse()?,
+                "lr" => self.lr = LrSchedule::parse(val)?,
+                "eval_every" => self.eval_every = val.parse()?,
+                "seed" => self.seed = val.parse()?,
+                "artifacts_dir" => self.artifacts_dir = PathBuf::from(val),
+                "log_path" => self.log_path = Some(PathBuf::from(val)),
+                "baseline_rounds" => self.baseline_rounds = Some(val.parse()?),
+                "verbose" => self.verbose = val.parse()?,
+                "scale.num_clients" => self.scale.num_clients = val.parse()?,
+                "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
+                "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
+                "scale.persona_max_size" => self.scale.persona_max_size = val.parse()?,
+                "scale.eval_batches" => self.scale.eval_batches = val.parse()?,
+                "scale.partition" => self.scale.partition = val.to_string(),
+                "scale.seed" => self.scale.seed = val.parse()?,
+                _ => {
+                    if !self.apply_strategy_override(key, val)? {
+                        bail!("unknown config key '{key}'");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_strategy_override(&mut self, key: &str, val: &str) -> Result<bool> {
+        match (&mut self.strategy, key) {
+            (StrategyConfig::FetchSgd { k, .. }, "strategy.k")
+            | (StrategyConfig::LocalTopK { k, .. }, "strategy.k")
+            | (StrategyConfig::TrueTopK { k, .. }, "strategy.k") => {
+                *k = val.parse()?;
+                Ok(true)
+            }
+            (StrategyConfig::FetchSgd { cols, .. }, "strategy.cols") => {
+                *cols = val.parse()?;
+                Ok(true)
+            }
+            (StrategyConfig::FetchSgd { rho, .. }, "strategy.rho")
+            | (StrategyConfig::TrueTopK { rho, .. }, "strategy.rho") => {
+                *rho = val.parse()?;
+                Ok(true)
+            }
+            (StrategyConfig::FetchSgd { error_update, .. }, "strategy.error_update") => {
+                *error_update = val.to_string();
+                Ok(true)
+            }
+            (StrategyConfig::FetchSgd { error_window, .. }, "strategy.error_window") => {
+                *error_window = val.to_string();
+                Ok(true)
+            }
+            (StrategyConfig::FetchSgd { masking, .. }, "strategy.masking")
+            | (StrategyConfig::LocalTopK { masking, .. }, "strategy.masking")
+            | (StrategyConfig::TrueTopK { masking, .. }, "strategy.masking") => {
+                *masking = val.parse()?;
+                Ok(true)
+            }
+            (StrategyConfig::LocalTopK { rho_g, .. }, "strategy.rho_g")
+            | (StrategyConfig::FedAvg { rho_g, .. }, "strategy.rho_g")
+            | (StrategyConfig::Uncompressed { rho_g }, "strategy.rho_g") => {
+                *rho_g = val.parse()?;
+                Ok(true)
+            }
+            (StrategyConfig::FedAvg { local_steps, .. }, "strategy.local_steps") => {
+                *local_steps = val.parse()?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: &str = r#"{
+      "task": "cifar10",
+      "strategy": {"kind": "fetchsgd", "k": 100, "cols": 4096, "rho": 0.9},
+      "rounds": 50, "clients_per_round": 10,
+      "lr": "triangular:0.3:0.2",
+      "scale": {"num_clients": 500, "samples_per_client": 5},
+      "eval_every": 10
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let v = parse(CFG).unwrap();
+        let cfg = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.task, "cifar10");
+        assert_eq!(cfg.rounds, 50);
+        assert_eq!(cfg.scale.num_clients, 500);
+        match cfg.strategy {
+            StrategyConfig::FetchSgd { k, cols, masking, .. } => {
+                assert_eq!(k, 100);
+                assert_eq!(cols, 4096);
+                assert!(masking); // default true
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn overrides_work() {
+        let v = parse(CFG).unwrap();
+        let mut cfg = TrainConfig::from_json(&v).unwrap();
+        cfg.apply_overrides(&[
+            "rounds=99".into(),
+            "strategy.k=7".into(),
+            "lr=constant:0.05".into(),
+            "scale.num_clients=42".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.rounds, 99);
+        assert_eq!(cfg.scale.num_clients, 42);
+        match cfg.strategy {
+            StrategyConfig::FetchSgd { k, .. } => assert_eq!(k, 7),
+            _ => panic!(),
+        }
+        assert!(cfg.apply_overrides(&["nope=1".into()]).is_err());
+        assert!(cfg.apply_overrides(&["strategy.local_steps=2".into()]).is_err());
+    }
+
+    #[test]
+    fn all_strategy_kinds_parse() {
+        for (kind, extra) in [
+            ("fetchsgd", r#""k": 10, "cols": 64"#),
+            ("local_topk", r#""k": 10"#),
+            ("fedavg", r#""local_steps": 2"#),
+            ("uncompressed", r#""rho_g": 0.9"#),
+            ("true_topk", r#""k": 10"#),
+        ] {
+            let json = format!(
+                r#"{{"task":"smoke","strategy":{{"kind":"{kind}",{extra}}},
+                  "rounds":1,"clients_per_round":1,"lr":"constant:0.1"}}"#
+            );
+            let v = parse(&json).unwrap();
+            let cfg = TrainConfig::from_json(&v).unwrap();
+            assert_eq!(cfg.strategy.name(), kind);
+        }
+    }
+}

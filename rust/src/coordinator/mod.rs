@@ -1,0 +1,9 @@
+//! The federated coordinator (L3): owns the round loop, client
+//! selection, strategy dispatch, evaluation, and communication
+//! accounting. This is the paper's "central aggregator".
+
+pub mod selection;
+pub mod trainer;
+
+pub use selection::ClientSelector;
+pub use trainer::{RunSummary, Trainer};

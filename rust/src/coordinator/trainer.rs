@@ -1,0 +1,283 @@
+//! The training coordinator: one federated optimization run.
+//!
+//! Per round (paper Algorithm 1 + the baselines' equivalents):
+//! 1. sample W clients uniformly,
+//! 2. each client executes its local computation through the PJRT
+//!    runtime (gradient + in-graph sketch for FetchSGD; plain gradient
+//!    for top-k/uncompressed; K local steps for FedAvg),
+//! 3. the strategy's server step aggregates uploads and updates the flat
+//!    weight vector,
+//! 4. communication is accounted (upload / per-round download /
+//!    staleness-aware download) and metrics logged.
+
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
+use crate::compression::timing::{CommTime, LinkProfile};
+use crate::compression::fedavg::FedAvg;
+use crate::compression::fetchsgd::{ErrorUpdate, FetchSgd};
+use crate::compression::local_topk::LocalTopK;
+use crate::compression::true_topk::TrueTopK;
+use crate::compression::uncompressed::Uncompressed;
+use crate::compression::{ClientUpload, Strategy};
+use crate::config::{StrategyConfig, TrainConfig};
+use crate::coordinator::selection::ClientSelector;
+use crate::data::FedDataset;
+use crate::metrics::{EvalRecord, MetricsLogger, RoundRecord};
+use crate::model::build_dataset;
+use crate::runtime::artifact::{Manifest, TaskArtifacts};
+use crate::runtime::exec::run_eval;
+use crate::runtime::Runtime;
+use crate::util::rng::derive_seed;
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub strategy: String,
+    pub task: String,
+    pub rounds: usize,
+    pub final_loss: f64,
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    pub perplexity: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub download_bytes_stale: u64,
+    pub ratios: Ratios,
+    /// Estimated per-client communication wallclock over the whole run
+    /// under the paper's motivating ~1 Mbps asymmetric residential link.
+    pub comm_time_residential_s: f64,
+    /// Same under a fast-WiFi profile.
+    pub comm_time_wifi_s: f64,
+}
+
+pub struct Trainer {
+    cfg: TrainConfig,
+    artifacts: TaskArtifacts,
+    dataset: Box<dyn FedDataset>,
+    strategy: Box<dyn Strategy>,
+    selector: ClientSelector,
+    comm: CommStats,
+    comm_time_res: CommTime,
+    comm_time_wifi: CommTime,
+    stale: StalenessTracker,
+    pub logger: MetricsLogger,
+    w: Vec<f32>,
+    dim: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let runtime = Rc::new(Runtime::cpu().context("PJRT runtime")?);
+        Self::with_runtime(cfg, runtime)
+    }
+
+    /// Share one PJRT runtime across many trainers (experiment sweeps).
+    pub fn with_runtime(cfg: TrainConfig, runtime: Rc<Runtime>) -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let artifacts = TaskArtifacts::new(runtime, &manifest, &cfg.task)?;
+        let tm = &artifacts.manifest;
+        let dim = tm.dim;
+        let strategy = Self::build_strategy(&cfg, &artifacts)?;
+        let dataset = build_dataset(tm, &cfg.scale)?;
+        let selector =
+            ClientSelector::new(dataset.num_clients(), cfg.clients_per_round, cfg.seed);
+        let stale = StalenessTracker::new(dataset.num_clients(), dim);
+        let logger = MetricsLogger::new(cfg.log_path.as_deref())?;
+        let w = artifacts.init_weights()?;
+        Ok(Trainer {
+            cfg,
+            artifacts,
+            dataset,
+            strategy,
+            selector,
+            comm: CommStats::default(),
+            comm_time_res: CommTime::default(),
+            comm_time_wifi: CommTime::default(),
+            stale,
+            logger,
+            w,
+            dim,
+        })
+    }
+
+    fn build_strategy(cfg: &TrainConfig, artifacts: &TaskArtifacts) -> Result<Box<dyn Strategy>> {
+        let tm = &artifacts.manifest;
+        Ok(match &cfg.strategy {
+            StrategyConfig::FetchSgd { k, cols, rho, error_update, error_window, masking } => {
+                if !tm.sketch.cols_options.contains(cols) {
+                    bail!(
+                        "task '{}' has no client_step artifact for cols={cols} \
+                         (available: {:?}) — add it to aot.py or pick another width",
+                        tm.name,
+                        tm.sketch.cols_options
+                    );
+                }
+                let eu = match error_update.as_str() {
+                    "zero_out" => ErrorUpdate::ZeroOut,
+                    "subtract" => ErrorUpdate::Subtract,
+                    other => bail!("error_update must be zero_out|subtract, got '{other}'"),
+                };
+                Box::new(FetchSgd::new(
+                    tm.sketch.rows,
+                    *cols,
+                    tm.sketch.seed,
+                    tm.dim,
+                    *k,
+                    *rho,
+                    eu,
+                    *masking,
+                    error_window,
+                )?)
+            }
+            StrategyConfig::LocalTopK { k, rho_g, masking, local_error } => {
+                Box::new(LocalTopK::new(tm.dim, *k, *rho_g, *masking, *local_error))
+            }
+            StrategyConfig::FedAvg { local_steps, rho_g } => {
+                if !tm.fedavg_steps.contains(local_steps) {
+                    bail!(
+                        "task '{}' has no fedavg artifact for local_steps={local_steps} \
+                         (available: {:?})",
+                        tm.name,
+                        tm.fedavg_steps
+                    );
+                }
+                Box::new(FedAvg::new(tm.dim, *local_steps, *rho_g))
+            }
+            StrategyConfig::Uncompressed { rho_g } => Box::new(Uncompressed::new(tm.dim, *rho_g)),
+            StrategyConfig::TrueTopK { k, rho, masking } => {
+                Box::new(TrueTopK::new(tm.dim, *k, *rho, *masking))
+            }
+        })
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// One federated round. Returns the mean client training loss.
+    pub fn step(&mut self, round: usize) -> Result<f64> {
+        let lr = self.cfg.lr.at(round, self.cfg.rounds);
+        let participants = self.selector.select(round);
+        let sizes: Vec<f32> =
+            participants.iter().map(|&c| self.dataset.client_size(c) as f32).collect();
+        self.strategy.begin_round(&sizes);
+
+        let round_seed = derive_seed(self.cfg.seed ^ 0xB0B0, round as u64);
+        let mut uploads: Vec<ClientUpload> = Vec::with_capacity(participants.len());
+        let mut loss_sum = 0f64;
+        let stacked_k = self.strategy.wants_stacked_batches();
+        for &client in &participants {
+            let batch = self.dataset.client_batch(client, round_seed);
+            let stacked = stacked_k.map(|k| self.dataset.client_batches_stacked(client, k, round_seed));
+            let res = self
+                .strategy
+                .client_round(&self.artifacts, &self.w, &batch, client, stacked, lr)
+                .with_context(|| format!("client {client} round {round}"))?;
+            loss_sum += res.loss as f64;
+            uploads.push(res.upload);
+        }
+        let upload_per_client = uploads.first().map(|u| u.payload_bytes()).unwrap_or(0);
+        let update = self.strategy.server_round(uploads, &mut self.w, lr)?;
+        let update_nnz = update.nnz(self.dim);
+        let stale_bytes = self.stale.round(round as u64, &participants, update_nnz);
+        self.comm.record_round(
+            participants.len(),
+            upload_per_client,
+            &update,
+            self.dim,
+            stale_bytes,
+        );
+        let down_per_client = update.download_bytes(self.dim);
+        self.comm_time_res.record_round(
+            &LinkProfile::residential(),
+            upload_per_client,
+            down_per_client,
+        );
+        self.comm_time_wifi
+            .record_round(&LinkProfile::wifi(), upload_per_client, down_per_client);
+        let mean_loss = loss_sum / participants.len().max(1) as f64;
+        self.logger.log_round(RoundRecord {
+            round,
+            loss: mean_loss,
+            lr: lr as f64,
+            upload_bytes: upload_per_client * participants.len() as u64,
+            download_bytes: update.download_bytes(self.dim) * participants.len() as u64,
+            update_nnz,
+        });
+        if self.cfg.verbose {
+            eprintln!(
+                "[{}] round {round:>4} loss {mean_loss:.4} lr {lr:.4} nnz {update_nnz}",
+                self.strategy.name()
+            );
+        }
+        Ok(mean_loss)
+    }
+
+    /// Evaluate on the held-out set: (loss, accuracy, perplexity).
+    pub fn evaluate(&mut self, round: usize) -> Result<EvalRecord> {
+        let exe = self.artifacts.executable("eval")?;
+        let mut sum_ce = 0f64;
+        let mut units = 0f64;
+        let mut correct = 0f64;
+        for i in 0..self.dataset.num_eval_batches() {
+            let batch = self.dataset.eval_batch(i);
+            let (ce, u, c) = run_eval(&exe, &self.w, &batch)?;
+            sum_ce += ce;
+            units += u;
+            correct += c;
+        }
+        let eval_loss = sum_ce / units.max(1.0);
+        let rec = EvalRecord {
+            round,
+            eval_loss,
+            accuracy: correct / units.max(1.0),
+            perplexity: eval_loss.exp(),
+        };
+        self.logger.log_eval(rec.clone());
+        Ok(rec)
+    }
+
+    /// Full training run with periodic + final evaluation.
+    pub fn run(&mut self) -> Result<RunSummary> {
+        for round in 0..self.cfg.rounds {
+            self.step(round)?;
+            if self.cfg.eval_every > 0
+                && (round + 1) % self.cfg.eval_every == 0
+                && round + 1 < self.cfg.rounds
+            {
+                let e = self.evaluate(round)?;
+                if self.cfg.verbose {
+                    eprintln!(
+                        "[eval] round {round} loss {:.4} acc {:.4} ppl {:.2}",
+                        e.eval_loss, e.accuracy, e.perplexity
+                    );
+                }
+            }
+        }
+        let e = self.evaluate(self.cfg.rounds.saturating_sub(1))?;
+        let baseline_rounds = self.cfg.baseline_rounds.unwrap_or(self.cfg.rounds) as u64;
+        let ratios =
+            self.comm.ratios(baseline_rounds, self.cfg.clients_per_round as u64, self.dim);
+        Ok(RunSummary {
+            strategy: self.strategy.name().to_string(),
+            task: self.cfg.task.clone(),
+            rounds: self.cfg.rounds,
+            final_loss: self.logger.recent_loss(10),
+            eval_loss: e.eval_loss,
+            accuracy: e.accuracy,
+            perplexity: e.perplexity,
+            upload_bytes: self.comm.upload_bytes,
+            download_bytes: self.comm.download_bytes,
+            download_bytes_stale: self.comm.download_bytes_stale,
+            ratios,
+            comm_time_residential_s: self.comm_time_res.total_s,
+            comm_time_wifi_s: self.comm_time_wifi.total_s,
+        })
+    }
+}

@@ -1,0 +1,163 @@
+//! Batch assembly helpers: pad client samples to the artifact's fixed
+//! batch shape, produce masks, and stack batches for FedAvg's local
+//! steps.
+
+use crate::runtime::exec::Batch;
+use crate::runtime::Tensor;
+
+/// Assemble an image batch: `samples` are (pixels, label) pairs, padded
+/// with zeros up to `batch` (mask marks real examples).
+pub fn image_batch(
+    samples: &[(Vec<f32>, usize)],
+    batch: usize,
+    image: [usize; 3],
+) -> Batch {
+    let pix = image[0] * image[1] * image[2];
+    assert!(samples.len() <= batch, "{} samples > batch {batch}", samples.len());
+    let mut x = vec![0f32; batch * pix];
+    let mut y = vec![0i32; batch];
+    let mut mask = vec![0f32; batch];
+    for (j, (img, label)) in samples.iter().enumerate() {
+        assert_eq!(img.len(), pix);
+        x[j * pix..(j + 1) * pix].copy_from_slice(img);
+        y[j] = *label as i32;
+        mask[j] = 1.0;
+    }
+    Batch {
+        x: Tensor::f32(x, &[batch, image[0], image[1], image[2]]),
+        y: Tensor::i32(y, &[batch]),
+        mask: Tensor::f32(mask, &[batch]),
+    }
+}
+
+/// Assemble a text batch: `samples` are (input, target) token pairs.
+pub fn text_batch(samples: &[(Vec<i32>, Vec<i32>)], batch: usize, seq: usize) -> Batch {
+    assert!(samples.len() <= batch);
+    let mut x = vec![0i32; batch * seq];
+    let mut y = vec![0i32; batch * seq];
+    let mut mask = vec![0f32; batch * seq];
+    for (j, (xi, yi)) in samples.iter().enumerate() {
+        assert_eq!(xi.len(), seq);
+        x[j * seq..(j + 1) * seq].copy_from_slice(xi);
+        y[j * seq..(j + 1) * seq].copy_from_slice(yi);
+        mask[j * seq..(j + 1) * seq].iter_mut().for_each(|m| *m = 1.0);
+    }
+    Batch {
+        x: Tensor::i32(x, &[batch, seq]),
+        y: Tensor::i32(y, &[batch, seq]),
+        mask: Tensor::f32(mask, &[batch, seq]),
+    }
+}
+
+/// Stack `k` batches along a new leading axis (FedAvg local steps).
+pub fn stack_batches(batches: &[Batch]) -> (Tensor, Tensor, Tensor) {
+    assert!(!batches.is_empty());
+    let k = batches.len();
+    let cat_f32 = |get: &dyn Fn(&Batch) -> (&Vec<f32>, &Vec<i64>)| {
+        let (first, shape) = get(&batches[0]);
+        let mut data = Vec::with_capacity(first.len() * k);
+        for b in batches {
+            data.extend_from_slice(get(b).0);
+        }
+        let mut s = vec![k as i64];
+        s.extend_from_slice(shape);
+        Tensor::F32 { data, shape: s }
+    };
+    let cat_any = |get: &dyn Fn(&Batch) -> &Tensor| {
+        let first = get(&batches[0]);
+        match first {
+            Tensor::F32 { shape, .. } => {
+                let mut data = Vec::new();
+                for b in batches {
+                    if let Tensor::F32 { data: d, .. } = get(b) {
+                        data.extend_from_slice(d);
+                    } else {
+                        panic!("mixed dtypes in stack");
+                    }
+                }
+                let mut s = vec![k as i64];
+                s.extend_from_slice(shape);
+                Tensor::F32 { data, shape: s }
+            }
+            Tensor::I32 { shape, .. } => {
+                let mut data = Vec::new();
+                for b in batches {
+                    if let Tensor::I32 { data: d, .. } = get(b) {
+                        data.extend_from_slice(d);
+                    } else {
+                        panic!("mixed dtypes in stack");
+                    }
+                }
+                let mut s = vec![k as i64];
+                s.extend_from_slice(shape);
+                Tensor::I32 { data, shape: s }
+            }
+        }
+    };
+    let _ = cat_f32; // kept for clarity; cat_any handles both dtypes
+    (
+        cat_any(&|b: &Batch| &b.x),
+        cat_any(&|b: &Batch| &b.y),
+        cat_any(&|b: &Batch| &b.mask),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_batch_pads_and_masks() {
+        let samples = vec![(vec![1.0; 4], 3usize)];
+        let b = image_batch(&samples, 3, [2, 2, 1]);
+        match &b.mask {
+            Tensor::F32 { data, .. } => assert_eq!(data, &vec![1.0, 0.0, 0.0]),
+            _ => panic!(),
+        }
+        match &b.y {
+            Tensor::I32 { data, .. } => assert_eq!(data, &vec![3, 0, 0]),
+            _ => panic!(),
+        }
+        match &b.x {
+            Tensor::F32 { data, shape } => {
+                assert_eq!(shape, &vec![3, 2, 2, 1]);
+                assert_eq!(&data[..4], &[1.0; 4]);
+                assert_eq!(&data[4..], &[0.0; 8]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn text_batch_masks_tokens() {
+        let samples = vec![(vec![1, 2, 3], vec![2, 3, 4])];
+        let b = text_batch(&samples, 2, 3);
+        match &b.mask {
+            Tensor::F32 { data, .. } => assert_eq!(data, &vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn stacking_adds_leading_axis() {
+        let samples = vec![(vec![1.0; 4], 0usize)];
+        let b1 = image_batch(&samples, 2, [2, 2, 1]);
+        let b2 = image_batch(&samples, 2, [2, 2, 1]);
+        let (xs, ys, ms) = stack_batches(&[b1, b2]);
+        match xs {
+            Tensor::F32 { shape, data } => {
+                assert_eq!(shape, vec![2, 2, 2, 2, 1]);
+                assert_eq!(data.len(), 16);
+            }
+            _ => panic!(),
+        }
+        match ys {
+            Tensor::I32 { shape, .. } => assert_eq!(shape, vec![2, 2]),
+            _ => panic!(),
+        }
+        match ms {
+            Tensor::F32 { shape, .. } => assert_eq!(shape, vec![2, 2]),
+            _ => panic!(),
+        }
+    }
+}

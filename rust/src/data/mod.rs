@@ -1,0 +1,44 @@
+//! Synthetic federated datasets.
+//!
+//! The paper evaluates on CIFAR10/100 (per-class non-i.i.d. split),
+//! FEMNIST (writer split), and PersonaChat (persona split). Real
+//! datasets are unavailable in this environment, so we build
+//! deterministic synthetic substitutes that preserve the properties the
+//! comparison depends on (DESIGN.md §5):
+//!
+//! - label-skew image clients (one class per client, 1–5 samples) —
+//!   the CIFAR analog, [`synth_images`] + [`partition`];
+//! - writer-partitioned image clients (~200 samples, per-writer style) —
+//!   the FEMNIST analog;
+//! - persona-conditioned char-LM clients with power-law sizes — the
+//!   PersonaChat analog, [`synth_text`].
+//!
+//! Nothing is stored: every sample is regenerated on demand from
+//! `(dataset seed, client id, sample id)`, so 50k-client populations
+//! cost no memory and every run is reproducible.
+
+pub mod batcher;
+pub mod partition;
+pub mod synth_images;
+pub mod synth_text;
+
+use crate::runtime::exec::Batch;
+use crate::runtime::Tensor;
+
+/// A federated dataset: a population of clients plus a held-out eval set.
+pub trait FedDataset {
+    fn num_clients(&self) -> usize;
+    /// Number of local examples held by `client`.
+    fn client_size(&self, client: usize) -> usize;
+    /// One (padded, masked) minibatch of local data for `client`.
+    /// `round_seed` decorrelates batches across rounds while staying
+    /// deterministic.
+    fn client_batch(&self, client: usize, round_seed: u64) -> Batch;
+    /// `k` stacked local batches for FedAvg's local epochs:
+    /// (xs, ys, masks) with a leading `k` axis.
+    fn client_batches_stacked(&self, client: usize, k: usize, round_seed: u64)
+        -> (Tensor, Tensor, Tensor);
+    /// Held-out evaluation batches (balanced, identical across runs).
+    fn num_eval_batches(&self) -> usize;
+    fn eval_batch(&self, idx: usize) -> Batch;
+}

@@ -1,0 +1,104 @@
+//! Ablations over FetchSGD's design choices (DESIGN.md §4 abl1–abl4):
+//!
+//! - `zero_vs_subtract` — §5's empirical stabilization (zero out the
+//!   extracted coordinates of S_e) vs Algorithm 1's exact subtraction;
+//! - `masking` — momentum factor masking on/off;
+//! - `sliding_window` — vanilla error sketch vs the ring-of-I and
+//!   log(I) sliding-window accumulators of §4.2 / Appendix D;
+//! - `momentum` — ρ = 0 (Theorem 2's setting) vs ρ = 0.9 (Theorem 1's).
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::{LrSchedule, StrategyConfig, TrainConfig};
+use crate::experiments::runner::{ExperimentScale, Quality, Sweep, SweepRow};
+use crate::model::DataScale;
+
+pub struct AblationParams {
+    pub which: String,
+    pub scale: ExperimentScale,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+fn base_config(p: &AblationParams, rounds: usize) -> TrainConfig {
+    let clients = p.scale.clients(200);
+    TrainConfig {
+        task: "cifar10".into(),
+        strategy: StrategyConfig::Uncompressed { rho_g: 0.9 },
+        rounds,
+        clients_per_round: (clients / 20).max(2),
+        lr: LrSchedule::Triangular { peak: 0.02, pivot: 0.2 },
+        scale: DataScale {
+            num_clients: clients,
+            samples_per_client: 5,
+            eval_batches: 8,
+            partition: "label_skew".into(),
+            ..DataScale::default()
+        },
+        eval_every: 0,
+        seed: 41,
+        artifacts_dir: p.artifacts_dir.clone(),
+        log_path: None,
+        baseline_rounds: None,
+        verbose: false,
+    }
+}
+
+fn fetchsgd(
+    k: usize,
+    cols: usize,
+    rho: f32,
+    error_update: &str,
+    error_window: &str,
+    masking: bool,
+) -> StrategyConfig {
+    StrategyConfig::FetchSgd {
+        k,
+        cols,
+        rho,
+        error_update: error_update.into(),
+        error_window: error_window.into(),
+        masking,
+    }
+}
+
+pub fn run(p: AblationParams) -> Result<Vec<SweepRow>> {
+    let rounds = p.scale.rounds(60);
+    let (k, cols) = (5000usize, 8192usize);
+    let mut sweep = Sweep::new(&format!("ablation_{}", p.which), Quality::Accuracy);
+
+    let variants: Vec<(String, StrategyConfig)> = match p.which.as_str() {
+        "zero_vs_subtract" => vec![
+            ("zero_out".into(), fetchsgd(k, cols, 0.9, "zero_out", "vanilla", true)),
+            ("subtract".into(), fetchsgd(k, cols, 0.9, "subtract", "vanilla", true)),
+        ],
+        "masking" => vec![
+            ("masking=on".into(), fetchsgd(k, cols, 0.9, "zero_out", "vanilla", true)),
+            ("masking=off".into(), fetchsgd(k, cols, 0.9, "zero_out", "vanilla", false)),
+        ],
+        "sliding_window" => vec![
+            ("vanilla".into(), fetchsgd(k, cols, 0.9, "zero_out", "vanilla", true)),
+            ("ring:4".into(), fetchsgd(k, cols, 0.9, "zero_out", "ring:4", true)),
+            ("ring:16".into(), fetchsgd(k, cols, 0.9, "zero_out", "ring:16", true)),
+            ("log:16".into(), fetchsgd(k, cols, 0.9, "zero_out", "log:16", true)),
+        ],
+        "momentum" => vec![
+            ("rho=0".into(), fetchsgd(k, cols, 0.0, "zero_out", "vanilla", true)),
+            ("rho=0.9".into(), fetchsgd(k, cols, 0.9, "zero_out", "vanilla", true)),
+        ],
+        other => anyhow::bail!(
+            "unknown ablation '{other}' \
+             (zero_vs_subtract | masking | sliding_window | momentum)"
+        ),
+    };
+
+    for (label, strat) in variants {
+        let mut cfg = base_config(&p, rounds);
+        cfg.baseline_rounds = Some(rounds);
+        cfg.strategy = strat;
+        sweep.push("fetchsgd", &label, cfg);
+    }
+
+    sweep.execute(&p.out_dir)
+}

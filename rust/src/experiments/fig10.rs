@@ -1,0 +1,44 @@
+//! Figure 10 (Appendix A.3): true top-k perplexity as a function of k —
+//! the idealized method FetchSGD approximates. For intermediate k, true
+//! top-k regularizes and can beat the uncompressed baseline; for large
+//! k, momentum factor masking starts to hurt.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::StrategyConfig;
+use crate::experiments::fig5::{base_config, Fig5Params};
+use crate::experiments::runner::{ExperimentScale, Quality, Sweep, SweepRow};
+
+pub struct Fig10Params {
+    pub scale: ExperimentScale,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+pub fn run(p: Fig10Params) -> Result<Vec<SweepRow>> {
+    let fig5p = Fig5Params {
+        scale: p.scale,
+        artifacts_dir: p.artifacts_dir.clone(),
+        out_dir: p.out_dir.clone(),
+        curves: false,
+    };
+    let rounds = p.scale.rounds(60);
+    let mut sweep = Sweep::new("fig10_true_topk", Quality::Perplexity);
+
+    // Uncompressed reference line.
+    let mut cfg = base_config(&fig5p, rounds);
+    cfg.baseline_rounds = Some(rounds);
+    sweep.push("uncompressed", "baseline", cfg);
+
+    // True top-k over a k sweep (paper sweeps 1e4..1e7 for d=124M; we
+    // scale the fractions of d ~ 1e5).
+    for &k in &[50usize, 200, 1000, 5000, 20000] {
+        let mut cfg = base_config(&fig5p, rounds);
+        cfg.baseline_rounds = Some(rounds);
+        cfg.strategy = StrategyConfig::TrueTopK { k, rho: 0.9, masking: true };
+        sweep.push("true_topk", &format!("k={k}"), cfg);
+    }
+
+    sweep.execute(&p.out_dir)
+}

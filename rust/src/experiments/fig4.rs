@@ -1,0 +1,96 @@
+//! Figure 4 (+ Figure 8/9 left breakdowns): FEMNIST accuracy vs
+//! compression — the regime designed to favor FedAvg (writer split,
+//! ~200 images/client, only W=3 clients/round, closer to i.i.d.).
+//!
+//! Paper setup (§5.2/A.2): 3,500 writers, ResNet101, one global epoch.
+//! Substitute: writer-partitioned synthetic images (per-writer style
+//! transform), MLP, W=3, one-participation-per-client round budget.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::{LrSchedule, StrategyConfig, TrainConfig};
+use crate::experiments::runner::{ExperimentScale, Quality, Sweep, SweepRow};
+use crate::model::DataScale;
+
+pub struct Fig4Params {
+    pub scale: ExperimentScale,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+}
+
+fn base_config(p: &Fig4Params, rounds: usize) -> TrainConfig {
+    let clients = p.scale.clients(150);
+    TrainConfig {
+        task: "femnist".into(),
+        strategy: StrategyConfig::Uncompressed { rho_g: 0.9 },
+        rounds,
+        clients_per_round: 3, // paper: only three clients participate
+        // tuned on the uncompressed baseline (paper §5 protocol)
+        lr: LrSchedule::Triangular { peak: 0.1, pivot: 0.2 },
+        scale: DataScale {
+            num_clients: clients,
+            writer_mean_size: 40,
+            eval_batches: 8,
+            partition: "writer".into(),
+            ..DataScale::default()
+        },
+        eval_every: 0,
+        seed: 23,
+        artifacts_dir: p.artifacts_dir.clone(),
+        log_path: None,
+        baseline_rounds: None,
+        verbose: false,
+    }
+}
+
+pub fn run(p: Fig4Params) -> Result<Vec<SweepRow>> {
+    // "One epoch": every client participates about once.
+    let clients = p.scale.clients(150);
+    let rounds = (clients / 3).max(8);
+    let mut sweep = Sweep::new("fig4_femnist", Quality::Accuracy);
+
+    for frac in [1.0, 0.5] {
+        let mut cfg = base_config(&p, ((rounds as f64 * frac) as usize).max(4));
+        cfg.baseline_rounds = Some(rounds);
+        sweep.push("uncompressed", &format!("rounds x{frac}"), cfg);
+    }
+
+    for &k in &[2000usize, 8000] {
+        for &cols in &[4096usize, 8192] {
+            let mut cfg = base_config(&p, rounds);
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy = StrategyConfig::FetchSgd {
+                k,
+                cols,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            };
+            sweep.push("fetchsgd", &format!("k={k} cols={cols}"), cfg);
+        }
+    }
+
+    for &k in &[2000usize, 8000, 16000] {
+        for &rho_g in &[0.0f32, 0.9] {
+            let mut cfg = base_config(&p, rounds);
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy =
+                StrategyConfig::LocalTopK { k, rho_g, masking: true, local_error: false };
+            sweep.push("local_topk", &format!("k={k} rho_g={rho_g}"), cfg);
+        }
+    }
+
+    // FedAvg's favored regime: fractions of the epoch with local steps.
+    for frac in [0.5, 0.25] {
+        for &local in &[1usize, 2, 5] {
+            let mut cfg = base_config(&p, ((rounds as f64 * frac) as usize).max(4));
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy = StrategyConfig::FedAvg { local_steps: local, rho_g: 0.0 };
+            sweep.push("fedavg", &format!("rounds x{frac} local={local}"), cfg);
+        }
+    }
+
+    sweep.execute(&p.out_dir)
+}

@@ -1,0 +1,112 @@
+//! Figure 5 (+ Figure 8/9 right breakdowns): PersonaChat validation
+//! perplexity vs compression, and representative training-loss curves.
+//!
+//! Paper setup (§5.3/A.3): GPT2-small finetuned one epoch over 17,568
+//! persona-partitioned clients, linear lr decay, metric = validation
+//! perplexity. Substitute: decoder-only char-transformer over the
+//! persona-conditioned synthetic corpus with power-law client sizes.
+//!
+//! With `curves = true`, representative runs additionally write
+//! per-round training-loss JSONL (Figure 5 right).
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::{LrSchedule, StrategyConfig, TrainConfig};
+use crate::experiments::runner::{ExperimentScale, Quality, Sweep, SweepRow};
+use crate::model::DataScale;
+
+pub struct Fig5Params {
+    pub scale: ExperimentScale,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub curves: bool,
+}
+
+pub fn base_config(p: &Fig5Params, rounds: usize) -> TrainConfig {
+    let clients = p.scale.clients(400);
+    TrainConfig {
+        task: "persona".into(),
+        strategy: StrategyConfig::Uncompressed { rho_g: 0.9 },
+        rounds,
+        clients_per_round: 8,
+        lr: LrSchedule::LinearDecay { lr: 0.25 },
+        scale: DataScale {
+            num_clients: clients,
+            persona_max_size: 200,
+            persona_alpha: 1.1,
+            eval_batches: 8,
+            ..DataScale::default()
+        },
+        eval_every: 0,
+        seed: 31,
+        artifacts_dir: p.artifacts_dir.clone(),
+        log_path: None,
+        baseline_rounds: None,
+        verbose: false,
+    }
+}
+
+pub fn run(p: Fig5Params) -> Result<Vec<SweepRow>> {
+    let rounds = p.scale.rounds(60);
+    let mut sweep = Sweep::new("fig5_persona", Quality::Perplexity);
+    let curve_dir = p.out_dir.join("curves");
+
+    let maybe_log = |cfg: &mut TrainConfig, name: &str| {
+        if p.curves {
+            cfg.log_path = Some(curve_dir.join(format!("{name}.jsonl")));
+        }
+    };
+
+    for frac in [1.0, 0.5] {
+        let mut cfg = base_config(&p, ((rounds as f64 * frac) as usize).max(4));
+        cfg.baseline_rounds = Some(rounds);
+        maybe_log(&mut cfg, &format!("uncompressed_x{frac}"));
+        sweep.push("uncompressed", &format!("rounds x{frac}"), cfg);
+    }
+
+    // FetchSGD grid (paper: k in [10k..200k], cols in {1.24M, 12.4M} for
+    // d=124M; scaled to our d).
+    for &k in &[1000usize, 5000] {
+        for &cols in &[4096usize, 16384] {
+            let mut cfg = base_config(&p, rounds);
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy = StrategyConfig::FetchSgd {
+                k,
+                cols,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            };
+            maybe_log(&mut cfg, &format!("fetchsgd_k{k}_c{cols}"));
+            sweep.push("fetchsgd", &format!("k={k} cols={cols}"), cfg);
+        }
+    }
+
+    // Local top-k without global momentum (paper: ρ_g hurts on this
+    // task, Figure 5 caption) — we run both to reproduce that finding.
+    for &k in &[1000usize, 5000, 20000] {
+        for &rho_g in &[0.0f32, 0.9] {
+            let mut cfg = base_config(&p, rounds);
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy =
+                StrategyConfig::LocalTopK { k, rho_g, masking: true, local_error: false };
+            maybe_log(&mut cfg, &format!("local_topk_k{k}_rho{rho_g}"));
+            sweep.push("local_topk", &format!("k={k} rho_g={rho_g}"), cfg);
+        }
+    }
+
+    // FedAvg: 2 and 5 local iterations (Table 1's configs).
+    for frac in [0.5, 0.2] {
+        for &local in &[2usize, 5] {
+            let mut cfg = base_config(&p, ((rounds as f64 * frac) as usize).max(4));
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy = StrategyConfig::FedAvg { local_steps: local, rho_g: 0.0 };
+            maybe_log(&mut cfg, &format!("fedavg_x{frac}_l{local}"));
+            sweep.push("fedavg", &format!("rounds x{frac} local={local}"), cfg);
+        }
+    }
+
+    sweep.execute(&p.out_dir)
+}

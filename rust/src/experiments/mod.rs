@@ -1,0 +1,14 @@
+//! Experiment drivers: regenerate every table and figure of the paper's
+//! evaluation at a configurable scale (DESIGN.md §4 maps each driver to
+//! its paper artifact).
+
+pub mod ablations;
+pub mod assumption;
+pub mod fig10;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod runner;
+pub mod table1;
+
+pub use runner::{ExperimentScale, SweepRow};

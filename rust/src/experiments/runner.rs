@@ -1,0 +1,211 @@
+//! Shared experiment machinery: scales, sweep execution, result tables,
+//! Pareto frontiers, JSONL dumps.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::config::TrainConfig;
+use crate::coordinator::Trainer;
+use crate::metrics::pareto::{pareto_frontier, RunPoint};
+use crate::runtime::Runtime;
+use crate::serialize::json::{num, obj, s};
+
+/// Experiment scale: smoke (CI-fast), small (default; minutes), full
+/// (closer to paper workloads; hours on CPU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentScale {
+    Smoke,
+    Small,
+    Full,
+}
+
+impl ExperimentScale {
+    pub fn parse(sc: &str) -> Result<Self> {
+        match sc {
+            "smoke" => Ok(Self::Smoke),
+            "small" => Ok(Self::Small),
+            "full" => Ok(Self::Full),
+            other => anyhow::bail!("unknown scale '{other}' (smoke|small|full)"),
+        }
+    }
+
+    /// Multiplier applied to round counts.
+    pub fn round_mult(self) -> f64 {
+        match self {
+            Self::Smoke => 0.15,
+            Self::Small => 1.0,
+            Self::Full => 4.0,
+        }
+    }
+
+    /// Multiplier applied to client populations.
+    pub fn client_mult(self) -> f64 {
+        match self {
+            Self::Smoke => 0.25,
+            Self::Small => 1.0,
+            Self::Full => 4.0,
+        }
+    }
+
+    pub fn rounds(self, base: usize) -> usize {
+        ((base as f64 * self.round_mult()) as usize).max(4)
+    }
+
+    pub fn clients(self, base: usize) -> usize {
+        ((base as f64 * self.client_mult()) as usize).max(8)
+    }
+}
+
+/// Quality metric direction for Pareto extraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quality {
+    Accuracy,
+    Perplexity,
+}
+
+/// One completed run in a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub method: String,
+    pub label: String,
+    pub up: f64,
+    pub down: f64,
+    pub overall: f64,
+    pub quality: f64,
+    pub eval_loss: f64,
+    pub final_train_loss: f64,
+}
+
+/// A set of labeled configs to run and report together.
+pub struct Sweep {
+    pub name: String,
+    pub quality: Quality,
+    pub runs: Vec<(String, String, TrainConfig)>, // (method, label, config)
+}
+
+impl Sweep {
+    pub fn new(name: &str, quality: Quality) -> Self {
+        Sweep { name: name.to_string(), quality, runs: Vec::new() }
+    }
+
+    pub fn push(&mut self, method: &str, label: &str, cfg: TrainConfig) {
+        self.runs.push((method.to_string(), label.to_string(), cfg));
+    }
+
+    /// Execute all runs with one shared PJRT runtime, print tables, and
+    /// dump JSONL into `results/`.
+    pub fn execute(mut self, out_dir: &PathBuf) -> Result<Vec<SweepRow>> {
+        std::fs::create_dir_all(out_dir)?;
+        let runtime = Rc::new(Runtime::cpu()?);
+        let total = self.runs.len();
+        let mut rows = Vec::new();
+        let runs = std::mem::take(&mut self.runs);
+        for (i, (method, label, cfg)) in runs.into_iter().enumerate() {
+            eprintln!("[{}] run {}/{total}: {method} {label}", self.name, i + 1);
+            let t0 = std::time::Instant::now();
+            let mut trainer = Trainer::with_runtime(cfg, runtime.clone())
+                .with_context(|| format!("building trainer for {method} {label}"))?;
+            let summary = trainer.run().with_context(|| format!("run {method} {label}"))?;
+            let quality = match self.quality {
+                Quality::Accuracy => summary.accuracy,
+                Quality::Perplexity => summary.perplexity,
+            };
+            eprintln!(
+                "[{}]   -> quality {quality:.4} (eval loss {:.4}) overall {:.1}x in {:.1}s",
+                self.name,
+                summary.eval_loss,
+                summary.ratios.overall,
+                t0.elapsed().as_secs_f64()
+            );
+            rows.push(SweepRow {
+                method,
+                label,
+                up: summary.ratios.upload,
+                down: summary.ratios.download,
+                overall: summary.ratios.overall,
+                quality,
+                eval_loss: summary.eval_loss,
+                final_train_loss: summary.final_loss,
+            });
+        }
+        self.report(&rows, out_dir)?;
+        Ok(rows)
+    }
+
+    fn report(&self, rows: &[SweepRow], out_dir: &PathBuf) -> Result<()> {
+        let metric = match self.quality {
+            Quality::Accuracy => "accuracy",
+            Quality::Perplexity => "perplexity",
+        };
+        println!("\n=== {} (all runs) ===", self.name);
+        println!(
+            "{:<14} {:<34} {:>8} {:>8} {:>9} {:>12}",
+            "method", "params", "up", "down", "overall", metric
+        );
+        for r in rows {
+            println!(
+                "{:<14} {:<34} {:>7.1}x {:>7.1}x {:>8.1}x {:>12.4}",
+                r.method, r.label, r.up, r.down, r.overall, r.quality
+            );
+        }
+        // Pareto frontier per method (the paper's presentation).
+        let higher_better = self.quality == Quality::Accuracy;
+        let mut methods: Vec<String> = rows.iter().map(|r| r.method.clone()).collect();
+        methods.sort();
+        methods.dedup();
+        println!("\n--- Pareto frontier (overall compression vs {metric}) ---");
+        for m in &methods {
+            let pts: Vec<RunPoint> = rows
+                .iter()
+                .filter(|r| &r.method == m)
+                .map(|r| RunPoint {
+                    compression: r.overall,
+                    quality: r.quality,
+                    label: r.label.clone(),
+                })
+                .collect();
+            for p in pareto_frontier(&pts, higher_better) {
+                println!("{m:<14} {:<34} {:>8.1}x {:>12.4}", p.label, p.compression, p.quality);
+            }
+        }
+        // JSONL dump.
+        let path = out_dir.join(format!("{}.jsonl", self.name));
+        let mut out = String::new();
+        for r in rows {
+            out.push_str(
+                &obj(vec![
+                    ("experiment", s(&self.name)),
+                    ("method", s(&r.method)),
+                    ("label", s(&r.label)),
+                    ("up", num(r.up)),
+                    ("down", num(r.down)),
+                    ("overall", num(r.overall)),
+                    (metric, num(r.quality)),
+                    ("eval_loss", num(r.eval_loss)),
+                    ("final_train_loss", num(r.final_train_loss)),
+                ])
+                .to_json(),
+            );
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        println!("\n[{}] wrote {}", self.name, path.display());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_multipliers() {
+        assert_eq!(ExperimentScale::Small.rounds(60), 60);
+        assert!(ExperimentScale::Smoke.rounds(60) < 15);
+        assert_eq!(ExperimentScale::Full.rounds(60), 240);
+        assert!(ExperimentScale::Smoke.clients(100) >= 8);
+        assert!(ExperimentScale::parse("small").is_ok());
+        assert!(ExperimentScale::parse("nope").is_err());
+    }
+}

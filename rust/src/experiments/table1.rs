@@ -1,0 +1,148 @@
+//! Table 1: representative PersonaChat runs with standard deviations
+//! over three random seeds — perplexity plus upload / download / total
+//! compression for each named configuration.
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::config::{StrategyConfig, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::experiments::fig5::{base_config, Fig5Params};
+use crate::experiments::runner::ExperimentScale;
+use crate::runtime::Runtime;
+use crate::serialize::json::{num, obj, s};
+use crate::util::stats::{mean, stddev};
+use std::rc::Rc;
+
+pub struct Table1Params {
+    pub scale: ExperimentScale,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub seeds: usize,
+}
+
+struct NamedConfig {
+    name: &'static str,
+    strategy: StrategyConfig,
+    round_frac: f64,
+}
+
+pub fn run(p: Table1Params) -> Result<()> {
+    let fig5p = Fig5Params {
+        scale: p.scale,
+        artifacts_dir: p.artifacts_dir.clone(),
+        out_dir: p.out_dir.clone(),
+        curves: false,
+    };
+    let rounds = p.scale.rounds(60);
+    // The table's seven representative configurations, scaled.
+    let configs = vec![
+        NamedConfig {
+            name: "Uncompressed",
+            strategy: StrategyConfig::Uncompressed { rho_g: 0.9 },
+            round_frac: 1.0,
+        },
+        NamedConfig {
+            name: "Local Top-k (small k)",
+            strategy: StrategyConfig::LocalTopK {
+                k: 1000,
+                rho_g: 0.0,
+                masking: true,
+                local_error: false,
+            },
+            round_frac: 1.0,
+        },
+        NamedConfig {
+            name: "Local Top-k (large k)",
+            strategy: StrategyConfig::LocalTopK {
+                k: 10000,
+                rho_g: 0.0,
+                masking: true,
+                local_error: false,
+            },
+            round_frac: 1.0,
+        },
+        NamedConfig {
+            name: "FedAvg (2 local iters)",
+            strategy: StrategyConfig::FedAvg { local_steps: 2, rho_g: 0.0 },
+            round_frac: 0.5,
+        },
+        NamedConfig {
+            name: "FedAvg (5 local iters)",
+            strategy: StrategyConfig::FedAvg { local_steps: 5, rho_g: 0.0 },
+            round_frac: 0.2,
+        },
+        NamedConfig {
+            name: "Sketch (narrow)",
+            strategy: StrategyConfig::FetchSgd {
+                k: 1000,
+                cols: 4096,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            round_frac: 1.0,
+        },
+        NamedConfig {
+            name: "Sketch (wide)",
+            strategy: StrategyConfig::FetchSgd {
+                k: 5000,
+                cols: 16384,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            round_frac: 1.0,
+        },
+    ];
+
+    std::fs::create_dir_all(&p.out_dir)?;
+    let runtime = Rc::new(Runtime::cpu()?);
+    println!("\n=== Table 1 (persona task, {} seeds) ===", p.seeds);
+    println!(
+        "{:<26} {:>16} {:>8} {:>8} {:>8}",
+        "method", "ppl (mean±std)", "down", "up", "total"
+    );
+    let mut jsonl = String::new();
+    for nc in configs {
+        let mut ppls = Vec::new();
+        let (mut up, mut down, mut overall) = (0.0, 0.0, 0.0);
+        for seed in 0..p.seeds {
+            let mut cfg: TrainConfig =
+                base_config(&fig5p, ((rounds as f64 * nc.round_frac) as usize).max(4));
+            cfg.baseline_rounds = Some(rounds);
+            cfg.strategy = nc.strategy.clone();
+            cfg.seed = 100 + seed as u64;
+            let mut trainer = Trainer::with_runtime(cfg, runtime.clone())?;
+            let summary = trainer.run()?;
+            ppls.push(summary.perplexity);
+            up = summary.ratios.upload;
+            down = summary.ratios.download;
+            overall = summary.ratios.overall;
+        }
+        let m = mean(&ppls);
+        let sd = stddev(&ppls);
+        println!(
+            "{:<26} {:>9.2} ± {:<5.2} {:>7.1}x {:>7.1}x {:>7.1}x",
+            nc.name, m, sd, down, up, overall
+        );
+        jsonl.push_str(
+            &obj(vec![
+                ("experiment", s("table1")),
+                ("method", s(nc.name)),
+                ("ppl_mean", num(m)),
+                ("ppl_std", num(sd)),
+                ("download", num(down)),
+                ("upload", num(up)),
+                ("total", num(overall)),
+            ])
+            .to_json(),
+        );
+        jsonl.push('\n');
+    }
+    std::fs::write(p.out_dir.join("table1.jsonl"), jsonl)?;
+    println!("\n[table1] wrote {}", p.out_dir.join("table1.jsonl").display());
+    Ok(())
+}

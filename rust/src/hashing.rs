@@ -1,0 +1,198 @@
+//! Count-Sketch hash spec, shared bit-for-bit with the Python/Pallas
+//! kernels (`python/compile/kernels/hashing.py`).
+//!
+//! The sketch's bucket and sign hashes must agree *exactly* between the
+//! Rust coordinator (which merges sketches, applies momentum/error
+//! feedback, and unsketches) and the JAX/Pallas kernel (which sketches
+//! gradients inside the AOT-compiled HLO graph). We therefore fix a
+//! deliberately simple spec using only u32 wrapping arithmetic, which is
+//! native in both `u32` Rust and `uint32` jax.numpy:
+//!
+//! - columns `C` is a power of two, rows `R` is small and odd;
+//! - per row `r`, four u32 constants `(a_b, b_b, a_s, b_s)` are derived
+//!   from a master u64 seed via splitmix64 (multipliers forced odd);
+//! - `bucket_r(i) = ((a_b * i + b_b) mod 2^32) >> (32 - log2(C))`
+//!   (a multiply-shift hash — 2-universal for power-of-two ranges);
+//! - `sign_r(i)   = +1 if top bit of (a_s * i + b_s) is 0 else -1`.
+//!
+//! Changing anything here is a breaking change to every serialized
+//! artifact; bump `SPEC_VERSION` and re-run `make artifacts` if you do.
+
+use crate::util::rng::splitmix64;
+
+/// Version tag recorded in the artifact manifest; checked at load time.
+pub const SPEC_VERSION: u32 = 1;
+
+/// Per-row hash constants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowHash {
+    pub a_bucket: u32,
+    pub b_bucket: u32,
+    pub a_sign: u32,
+    pub b_sign: u32,
+}
+
+/// Hash parameterization for an `R x C` Count Sketch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchHasher {
+    pub rows: usize,
+    pub cols: usize,
+    pub seed: u64,
+    shift: u32,
+    row_hashes: Vec<RowHash>,
+}
+
+impl SketchHasher {
+    /// Build the hasher. `cols` must be a power of two >= 2; `rows >= 1`.
+    pub fn new(rows: usize, cols: usize, seed: u64) -> Self {
+        assert!(rows >= 1, "rows must be >= 1");
+        assert!(
+            cols >= 2 && cols.is_power_of_two(),
+            "cols must be a power of two >= 2, got {cols}"
+        );
+        assert!(cols <= 1 << 31, "cols too large for u32 hashing");
+        let shift = 32 - cols.trailing_zeros();
+        let mut row_hashes = Vec::with_capacity(rows);
+        // Mirror python: state = seed; 4 splitmix64 draws per row, taking
+        // the low 32 bits of each; multipliers forced odd.
+        let mut state = seed;
+        for _ in 0..rows {
+            let a_bucket = (splitmix64(&mut state) as u32) | 1;
+            let b_bucket = splitmix64(&mut state) as u32;
+            let a_sign = (splitmix64(&mut state) as u32) | 1;
+            let b_sign = splitmix64(&mut state) as u32;
+            row_hashes.push(RowHash { a_bucket, b_bucket, a_sign, b_sign });
+        }
+        SketchHasher { rows, cols, seed, shift, row_hashes }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> RowHash {
+        self.row_hashes[r]
+    }
+
+    /// Bucket for coordinate `i` in row `r`.
+    #[inline]
+    pub fn bucket(&self, r: usize, i: u32) -> usize {
+        let h = self.row_hashes[r];
+        (h.a_bucket.wrapping_mul(i).wrapping_add(h.b_bucket) >> self.shift) as usize
+    }
+
+    /// Sign (+1.0 / -1.0) for coordinate `i` in row `r`.
+    #[inline]
+    pub fn sign(&self, r: usize, i: u32) -> f32 {
+        let h = self.row_hashes[r];
+        if h.a_sign.wrapping_mul(i).wrapping_add(h.b_sign) >> 31 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// (bucket, sign) pair — the common access pattern on the hot path.
+    #[inline]
+    pub fn bucket_sign(&self, r: usize, i: u32) -> (usize, f32) {
+        (self.bucket(r, i), self.sign(r, i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let h1 = SketchHasher::new(3, 256, 99);
+        let h2 = SketchHasher::new(3, 256, 99);
+        let h3 = SketchHasher::new(3, 256, 100);
+        for i in 0..1000u32 {
+            for r in 0..3 {
+                assert_eq!(h1.bucket(r, i), h2.bucket(r, i));
+                assert_eq!(h1.sign(r, i), h2.sign(r, i));
+            }
+        }
+        let diffs = (0..1000u32).filter(|&i| h1.bucket(0, i) != h3.bucket(0, i)).count();
+        assert!(diffs > 900, "different seeds should disagree, diffs={diffs}");
+    }
+
+    #[test]
+    fn buckets_in_range_and_roughly_uniform() {
+        let cols = 128;
+        let h = SketchHasher::new(1, cols, 7);
+        let mut counts = vec![0usize; cols];
+        let n = 128 * 200;
+        for i in 0..n as u32 {
+            let b = h.bucket(0, i);
+            assert!(b < cols);
+            counts[b] += 1;
+        }
+        let expected = n / cols;
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expected / 2 && c < expected * 2,
+                "bucket {b} count {c} vs expected {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn signs_balanced_per_row() {
+        let h = SketchHasher::new(5, 64, 21);
+        for r in 0..5 {
+            let pos = (0..10_000u32).filter(|&i| h.sign(r, i) > 0.0).count();
+            assert!((4000..6000).contains(&pos), "row {r} pos {pos}");
+        }
+    }
+
+    #[test]
+    fn rows_are_independent_ish() {
+        let h = SketchHasher::new(2, 64, 5);
+        let coll = (0..10_000u32).filter(|&i| h.bucket(0, i) == h.bucket(1, i)).count();
+        // expect ~1/64 collisions = ~156
+        assert!(coll < 500, "rows look correlated: {coll}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        SketchHasher::new(3, 100, 1);
+    }
+
+    /// Golden vectors pinning the cross-language spec. The same values
+    /// are asserted in python/tests/test_hashing.py — if either test is
+    /// changed, both must be.
+    #[test]
+    fn golden_cross_language_vectors() {
+        let h = SketchHasher::new(3, 1 << 12, 0xFE7C_5D11);
+        let idx = [0u32, 1, 2, 1000, 65_537, 4_000_000_000];
+        let buckets: Vec<Vec<usize>> =
+            (0..3).map(|r| idx.iter().map(|&i| h.bucket(r, i)).collect()).collect();
+        let signs: Vec<Vec<f32>> =
+            (0..3).map(|r| idx.iter().map(|&i| h.sign(r, i)).collect()).collect();
+        // Print-once values generated from this implementation and
+        // independently reproduced by the Python implementation.
+        let expected_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("python/tests/golden_hash_vectors.json");
+        let text = std::fs::read_to_string(&expected_path)
+            .expect("golden_hash_vectors.json missing — run python/tests/gen_golden.py");
+        let v = crate::serialize::json::parse(&text).unwrap();
+        let gb = v.get("buckets").unwrap().as_array().unwrap();
+        let gs = v.get("signs").unwrap().as_array().unwrap();
+        for r in 0..3 {
+            let row_b: Vec<usize> = gb[r]
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as usize)
+                .collect();
+            let row_s: Vec<f32> = gs[r]
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as f32)
+                .collect();
+            assert_eq!(buckets[r], row_b, "bucket row {r}");
+            assert_eq!(signs[r], row_s, "sign row {r}");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! # FetchSGD — communication-efficient federated learning with sketching
+//!
+//! Production-style reproduction of *FetchSGD: Communication-Efficient
+//! Federated Learning with Sketching* (ICML 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the federated coordinator: round loop,
+//!   client sampling, Count-Sketch aggregation, momentum and error
+//!   accumulation *in sketch space*, top-k extraction, sparse broadcast,
+//!   byte accounting, and all baselines (uncompressed SGD, local top-k,
+//!   FedAvg, true top-k).
+//! - **Layer 2** — JAX model fwd/bwd (`python/compile/model.py`), lowered
+//!   once to HLO text and executed here via PJRT (`runtime`).
+//! - **Layer 1** — Pallas Count-Sketch kernels
+//!   (`python/compile/kernels/`), fused into the same HLO graph.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! compute graphs ahead of time, and the coordinator is a self-contained
+//! binary afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fetchsgd::config::TrainConfig;
+//! use fetchsgd::coordinator::Trainer;
+//!
+//! let cfg = TrainConfig::default_smoke();
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let summary = trainer.run().unwrap();
+//! println!("final loss {:.4}", summary.final_loss);
+//! ```
+
+pub mod bench_util;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hashing;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod serialize;
+pub mod sketch;
+pub mod util;

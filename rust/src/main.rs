@@ -1,0 +1,257 @@
+//! `fetchsgd` — CLI launcher for the FetchSGD federated-learning stack.
+//!
+//! Subcommands:
+//!   train       run one training config (JSON file + key=value overrides)
+//!   experiment  regenerate a paper table/figure (fig3|fig4|fig5|fig10|
+//!               table1|ablation)
+//!   inspect     print manifest / artifact info
+//!   selfcheck   load the smoke artifacts and verify the cross-language
+//!               sketch equality end-to-end
+//!
+//! Hand-rolled arg parsing (clap is unavailable offline): positional
+//! subcommand followed by `--flag value` pairs and bare `key=value`
+//! overrides.
+
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+use fetchsgd::config::TrainConfig;
+use fetchsgd::coordinator::Trainer;
+use fetchsgd::experiments::runner::ExperimentScale;
+use fetchsgd::experiments::{ablations, assumption, fig10, fig3, fig4, fig5, table1};
+use fetchsgd::runtime::artifact::Manifest;
+
+const USAGE: &str = "\
+fetchsgd — communication-efficient federated learning with sketching
+
+USAGE:
+  fetchsgd train --config CFG.json [key=value ...]
+  fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>
+            [--dataset cifar10|cifar100] [--scale smoke|small|full]
+            [--which ABLATION] [--curves] [--seeds N]
+            [--artifacts DIR] [--out DIR]
+  fetchsgd inspect [--artifacts DIR]
+  fetchsgd selfcheck [--artifacts DIR]
+";
+
+struct Args {
+    flags: Vec<(String, String)>,
+    overrides: Vec<String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = Vec::new();
+        let mut overrides = Vec::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") && !argv[i + 1].contains('=')
+                {
+                    flags.push((name.to_string(), argv[i + 1].clone()));
+                    i += 2;
+                    continue;
+                }
+                bools.push(name.to_string());
+                i += 1;
+            } else if a.contains('=') {
+                overrides.push(a.clone());
+                i += 1;
+            } else {
+                eprintln!("warning: ignoring stray argument '{a}'");
+                i += 1;
+            }
+        }
+        Args { flags, overrides, bools }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    let artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args, artifacts_dir, out_dir),
+        "inspect" => cmd_inspect(&artifacts_dir),
+        "selfcheck" => cmd_selfcheck(&artifacts_dir),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path), &args.overrides)?,
+        None => {
+            let mut cfg = TrainConfig::default_smoke();
+            cfg.apply_overrides(&args.overrides)?;
+            cfg
+        }
+    };
+    if args.has("verbose") {
+        cfg.verbose = true;
+    }
+    eprintln!(
+        "[train] task={} strategy={} rounds={} W={}",
+        cfg.task,
+        cfg.strategy.name(),
+        cfg.rounds,
+        cfg.clients_per_round
+    );
+    let mut trainer = Trainer::new(cfg)?;
+    let s = trainer.run()?;
+    println!(
+        "task={} strategy={} rounds={} final_loss={:.4} eval_loss={:.4} acc={:.4} ppl={:.2}",
+        s.task, s.strategy, s.rounds, s.final_loss, s.eval_loss, s.accuracy, s.perplexity
+    );
+    println!(
+        "compression: up {:.1}x down {:.1}x overall {:.1}x (stale-download bytes: {})",
+        s.ratios.upload, s.ratios.download, s.ratios.overall, s.download_bytes_stale
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args, artifacts_dir: PathBuf, out_dir: PathBuf) -> Result<()> {
+    // `fetchsgd experiment fig3 ...`: the experiment id is the first
+    // positional token after the subcommand.
+    let argv: Vec<String> = std::env::args().skip(2).collect();
+    let id = argv
+        .first()
+        .filter(|a| !a.starts_with("--") && !a.contains('='))
+        .cloned()
+        .context("missing experiment id (fig3|fig4|fig5|fig10|table1|ablation|assumption2)")?;
+    let scale = ExperimentScale::parse(args.get("scale").unwrap_or("small"))?;
+    match id.as_str() {
+        "fig3" => {
+            let dataset = args.get("dataset").unwrap_or("cifar10").to_string();
+            if dataset != "cifar10" && dataset != "cifar100" {
+                bail!("--dataset must be cifar10|cifar100");
+            }
+            fig3::run(fig3::Fig3Params { dataset, scale, artifacts_dir, out_dir })?;
+        }
+        "fig4" => {
+            fig4::run(fig4::Fig4Params { scale, artifacts_dir, out_dir })?;
+        }
+        "fig5" => {
+            fig5::run(fig5::Fig5Params {
+                scale,
+                artifacts_dir,
+                out_dir,
+                curves: args.has("curves"),
+            })?;
+        }
+        "fig10" => {
+            fig10::run(fig10::Fig10Params { scale, artifacts_dir, out_dir })?;
+        }
+        "table1" => {
+            let seeds = args.get("seeds").map(|s| s.parse()).transpose()?.unwrap_or(3);
+            table1::run(table1::Table1Params { scale, artifacts_dir, out_dir, seeds })?;
+        }
+        "ablation" => {
+            let which = args.get("which").unwrap_or("zero_vs_subtract").to_string();
+            ablations::run(ablations::AblationParams { which, scale, artifacts_dir, out_dir })?;
+        }
+        "assumption2" => {
+            let task = args.get("task").unwrap_or("cifar10").to_string();
+            assumption::run(assumption::AssumptionParams { scale, artifacts_dir, out_dir, task })?;
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(artifacts_dir: &PathBuf) -> Result<()> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    println!("artifacts: {}", artifacts_dir.display());
+    for t in &manifest.tasks {
+        println!(
+            "task {:<16} model {:<18} d={:<8} batch={:<4} sketch rows={} cols={:?}",
+            t.name, t.model, t.dim, t.batch, t.sketch.rows, t.sketch.cols_options
+        );
+        let mut kinds: Vec<&String> = t.artifacts.keys().collect();
+        kinds.sort();
+        for k in kinds {
+            println!("    {k}");
+        }
+    }
+    Ok(())
+}
+
+/// End-to-end cross-language check: run the smoke task's client_step
+/// (gradient sketched by the Pallas kernel inside the HLO graph) and the
+/// client_grad artifact, sketch the gradient with the Rust CountSketch,
+/// and require close agreement.
+fn cmd_selfcheck(artifacts_dir: &PathBuf) -> Result<()> {
+    use fetchsgd::runtime::exec::{run_client_grad, run_client_step};
+    use fetchsgd::runtime::{Runtime, TaskArtifacts};
+    use fetchsgd::sketch::CountSketch;
+
+    let runtime = std::rc::Rc::new(Runtime::cpu()?);
+    println!("platform: {}", runtime.platform());
+    let manifest = Manifest::load(artifacts_dir)?;
+    let task = manifest
+        .tasks
+        .iter()
+        .find(|t| t.name == "smoke")
+        .context("smoke task missing — run `make artifacts`")?
+        .name
+        .clone();
+    let arts = TaskArtifacts::new(runtime, &manifest, &task)?;
+    let cols = arts.manifest.sketch.cols_options[0];
+    let (rows, seed) = (arts.manifest.sketch.rows, arts.manifest.sketch.seed);
+    let w = arts.init_weights()?;
+
+    let ds = fetchsgd::model::build_dataset(&arts.manifest, &fetchsgd::model::DataScale::smoke())?;
+    let batch = ds.client_batch(0, 7);
+
+    let step_exe = arts.executable(&TaskArtifacts::client_step_kind(cols))?;
+    let (loss1, sketch_jax) = run_client_step(&step_exe, &w, &batch, rows, cols, seed)?;
+    let grad_exe = arts.executable("client_grad")?;
+    let (loss2, grad) = run_client_grad(&grad_exe, &w, &batch)?;
+    let sketch_rust = CountSketch::encode(rows, cols, seed, &grad);
+
+    anyhow::ensure!((loss1 - loss2).abs() < 1e-5, "losses disagree: {loss1} vs {loss2}");
+    let mut max_err = 0f32;
+    for (a, b) in sketch_jax.table().iter().zip(sketch_rust.table()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    let scale: f32 = grad.iter().map(|g| g.abs()).fold(0.0, f32::max).max(1e-9);
+    println!(
+        "loss={loss1:.5}  sketch max_abs_err={max_err:.3e} (grad max {scale:.3e}, {} cells)",
+        sketch_jax.cells()
+    );
+    anyhow::ensure!(
+        max_err <= 1e-4 * scale.max(1.0),
+        "Pallas and Rust sketches disagree (max err {max_err})"
+    );
+    println!("selfcheck OK: Pallas-in-HLO sketch == Rust sketch");
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Run logging: per-round training records and eval records, written as
+//! JSONL (one JSON object per line) so experiment drivers and external
+//! tooling can consume them without a parser dependency.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+use crate::serialize::json::{num, obj, s, Value};
+
+/// One training round's record.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub update_nnz: usize,
+}
+
+/// One evaluation record.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub round: usize,
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    pub perplexity: f64,
+}
+
+/// JSONL writer; silently no-ops when no path is configured (keeps the
+/// trainer's hot loop branch-free of IO concerns).
+pub struct MetricsLogger {
+    file: Option<std::fs::File>,
+    pub rounds: Vec<RoundRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl MetricsLogger {
+    pub fn new(path: Option<&Path>) -> Result<Self> {
+        let file = match path {
+            Some(p) => {
+                if let Some(parent) = p.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                }
+                Some(std::fs::File::create(p)?)
+            }
+            None => None,
+        };
+        Ok(MetricsLogger { file, rounds: Vec::new(), evals: Vec::new() })
+    }
+
+    fn write_line(&mut self, v: Value) {
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{}", v.to_json());
+        }
+    }
+
+    pub fn log_round(&mut self, r: RoundRecord) {
+        self.write_line(obj(vec![
+            ("type", s("round")),
+            ("round", num(r.round as f64)),
+            ("loss", num(r.loss)),
+            ("lr", num(r.lr)),
+            ("upload_bytes", num(r.upload_bytes as f64)),
+            ("download_bytes", num(r.download_bytes as f64)),
+            ("update_nnz", num(r.update_nnz as f64)),
+        ]));
+        self.rounds.push(r);
+    }
+
+    pub fn log_eval(&mut self, e: EvalRecord) {
+        self.write_line(obj(vec![
+            ("type", s("eval")),
+            ("round", num(e.round as f64)),
+            ("eval_loss", num(e.eval_loss)),
+            ("accuracy", num(e.accuracy)),
+            ("perplexity", num(e.perplexity)),
+        ]));
+        self.evals.push(e);
+    }
+
+    /// Mean training loss over the last `n` rounds (smoother signal than
+    /// a single round on tiny-batch federated tasks).
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        if self.rounds.is_empty() {
+            return f64::NAN;
+        }
+        let start = self.rounds.len().saturating_sub(n);
+        let tail = &self.rounds[start..];
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logs_to_file_as_jsonl() {
+        let dir = std::env::temp_dir().join(format!("fsgd_log_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.jsonl");
+        {
+            let mut m = MetricsLogger::new(Some(&p)).unwrap();
+            m.log_round(RoundRecord {
+                round: 0,
+                loss: 2.5,
+                lr: 0.1,
+                upload_bytes: 100,
+                download_bytes: 50,
+                update_nnz: 5,
+            });
+            m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = crate::serialize::json::parse(lines[0]).unwrap();
+        assert_eq!(v.req_str("type").unwrap(), "round");
+        let v = crate::serialize::json::parse(lines[1]).unwrap();
+        assert!((v.req_f64("perplexity").unwrap() - 7.4).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recent_loss_window() {
+        let mut m = MetricsLogger::new(None).unwrap();
+        for (i, l) in [10.0, 2.0, 4.0].into_iter().enumerate() {
+            m.log_round(RoundRecord {
+                round: i,
+                loss: l,
+                lr: 0.0,
+                upload_bytes: 0,
+                download_bytes: 0,
+                update_nnz: 0,
+            });
+        }
+        assert!((m.recent_loss(2) - 3.0).abs() < 1e-9);
+        assert!((m.recent_loss(10) - 16.0 / 3.0).abs() < 1e-9);
+    }
+}

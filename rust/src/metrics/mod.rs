@@ -1,0 +1,8 @@
+//! Metrics: JSONL/CSV run logging and Pareto-frontier extraction for the
+//! accuracy-vs-compression figures.
+
+pub mod logger;
+pub mod pareto;
+
+pub use logger::{EvalRecord, MetricsLogger, RoundRecord};
+pub use pareto::pareto_frontier;

@@ -1,0 +1,72 @@
+//! Pareto-frontier extraction: the paper plots, per method, only the
+//! frontier over hyperparameters in (compression, accuracy) space
+//! (§5: "we plot only the Pareto frontier over hyperparameters").
+
+/// A point in (compression, quality) space. `higher_quality_better`
+/// selects accuracy-style (max) vs perplexity-style (min) metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunPoint {
+    pub compression: f64,
+    pub quality: f64,
+    pub label: String,
+}
+
+/// Extract the Pareto frontier: points not dominated by any other point
+/// (another point with >= compression and strictly better quality, or
+/// > compression and >= quality). Returned sorted by compression.
+pub fn pareto_frontier(points: &[RunPoint], higher_quality_better: bool) -> Vec<RunPoint> {
+    let better = |a: f64, b: f64| {
+        if higher_quality_better {
+            a > b
+        } else {
+            a < b
+        }
+    };
+    let better_eq = |a: f64, b: f64| a == b || better(a, b);
+    let mut frontier: Vec<RunPoint> = points
+        .iter()
+        .filter(|p| {
+            !points.iter().any(|q| {
+                (q.compression >= p.compression && better(q.quality, p.quality))
+                    || (q.compression > p.compression && better_eq(q.quality, p.quality))
+            })
+        })
+        .cloned()
+        .collect();
+    frontier.sort_by(|a, b| a.compression.partial_cmp(&b.compression).unwrap());
+    frontier.dedup_by(|a, b| a.compression == b.compression && a.quality == b.quality);
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(c: f64, q: f64) -> RunPoint {
+        RunPoint { compression: c, quality: q, label: String::new() }
+    }
+
+    #[test]
+    fn dominated_points_removed_accuracy() {
+        let pts = vec![pt(1.0, 0.9), pt(2.0, 0.85), pt(2.0, 0.7), pt(4.0, 0.8), pt(3.0, 0.6)];
+        let f = pareto_frontier(&pts, true);
+        let cs: Vec<f64> = f.iter().map(|p| p.compression).collect();
+        assert_eq!(cs, vec![1.0, 2.0, 4.0]);
+        assert_eq!(f[1].quality, 0.85);
+    }
+
+    #[test]
+    fn perplexity_lower_is_better() {
+        let pts = vec![pt(1.0, 14.9), pt(2.0, 16.3), pt(2.0, 15.1), pt(7.3, 15.8), pt(5.0, 20.0)];
+        let f = pareto_frontier(&pts, false);
+        let cs: Vec<f64> = f.iter().map(|p| p.compression).collect();
+        assert_eq!(cs, vec![1.0, 2.0, 7.3]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(pareto_frontier(&[], true).is_empty());
+        let f = pareto_frontier(&[pt(1.0, 1.0)], true);
+        assert_eq!(f.len(), 1);
+    }
+}

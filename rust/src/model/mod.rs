@@ -1,0 +1,11 @@
+//! Model/task registry: binds a manifest task to the synthetic dataset
+//! population the experiments train on.
+//!
+//! The *model* itself lives in the HLO artifacts (L2); what the Rust side
+//! owns is the flat weight vector and the federated data population. The
+//! [`DataScale`] knobs let one manifest task back populations of
+//! different sizes (smoke / small / full experiment scales).
+
+pub mod registry;
+
+pub use registry::{build_dataset, DataScale};

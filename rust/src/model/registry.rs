@@ -1,0 +1,151 @@
+//! Dataset construction from manifest task + scale parameters.
+
+use anyhow::Result;
+
+use crate::data::partition::{LabelSkewImages, PersonaText, WriterImages};
+use crate::data::synth_images::ImageGen;
+use crate::data::synth_text::TextGen;
+use crate::data::FedDataset;
+use crate::runtime::artifact::{DataSpec, TaskManifest};
+
+/// Population-size knobs, independent of the model artifacts.
+#[derive(Clone, Debug)]
+pub struct DataScale {
+    /// Total client population.
+    pub num_clients: usize,
+    /// Samples per client (label-skew split; paper: 1–5).
+    pub samples_per_client: usize,
+    /// Mean samples per writer (writer split; paper: ~226).
+    pub writer_mean_size: usize,
+    /// Largest persona's sequence count (power-law head).
+    pub persona_max_size: usize,
+    /// Power-law exponent for persona sizes.
+    pub persona_alpha: f64,
+    /// Held-out eval batches per evaluation pass.
+    pub eval_batches: usize,
+    /// Per-sample noise for image tasks.
+    pub noise_sigma: f32,
+    /// Partition style: "label_skew" | "writer" (image tasks only;
+    /// text tasks always use the persona partition).
+    pub partition: String,
+    /// Dataset seed.
+    pub seed: u64,
+}
+
+impl Default for DataScale {
+    fn default() -> Self {
+        DataScale {
+            num_clients: 1000,
+            samples_per_client: 5,
+            writer_mean_size: 40,
+            persona_max_size: 200,
+            persona_alpha: 1.1,
+            eval_batches: 8,
+            noise_sigma: 0.3,
+            partition: "label_skew".to_string(),
+            seed: 0xDA7A,
+        }
+    }
+}
+
+impl DataScale {
+    pub fn smoke() -> Self {
+        DataScale {
+            num_clients: 50,
+            samples_per_client: 5,
+            writer_mean_size: 10,
+            persona_max_size: 20,
+            eval_batches: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Build the federated dataset for a manifest task.
+pub fn build_dataset(task: &TaskManifest, scale: &DataScale) -> Result<Box<dyn FedDataset>> {
+    match &task.data {
+        DataSpec::Images { image, classes } => {
+            let gen = ImageGen::new(
+                image[0],
+                image[1],
+                image[2],
+                *classes,
+                scale.noise_sigma,
+                scale.seed,
+            );
+            match scale.partition.as_str() {
+                "label_skew" => Ok(Box::new(LabelSkewImages::new(
+                    gen,
+                    scale.num_clients,
+                    scale.samples_per_client,
+                    task.batch,
+                    scale.eval_batches,
+                ))),
+                "writer" => Ok(Box::new(WriterImages::new(
+                    gen,
+                    scale.num_clients,
+                    scale.writer_mean_size,
+                    task.batch,
+                    scale.eval_batches,
+                    scale.seed,
+                ))),
+                other => anyhow::bail!("unknown partition '{other}'"),
+            }
+        }
+        DataSpec::Text { vocab, seq } => {
+            let gen = TextGen::new(*vocab, *seq, scale.seed);
+            Ok(Box::new(PersonaText::new(
+                gen,
+                scale.num_clients,
+                scale.persona_max_size,
+                scale.persona_alpha,
+                task.batch,
+                scale.eval_batches,
+                scale.seed,
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::SketchSpec;
+    use std::collections::HashMap;
+
+    fn fake_task(data: DataSpec) -> TaskManifest {
+        TaskManifest {
+            name: "t".into(),
+            model: "m".into(),
+            dim: 100,
+            batch: 4,
+            inputs: HashMap::new(),
+            data,
+            init_weights: "x.bin".into(),
+            artifacts: HashMap::new(),
+            sketch: SketchSpec { rows: 5, seed: 1, cols_options: vec![64] },
+            fedavg_steps: vec![2],
+        }
+    }
+
+    #[test]
+    fn builds_image_partitions() {
+        let t = fake_task(DataSpec::Images { image: [8, 8, 1], classes: 10 });
+        let mut scale = DataScale::smoke();
+        let ds = build_dataset(&t, &scale).unwrap();
+        assert_eq!(ds.num_clients(), 50);
+        scale.partition = "writer".into();
+        let ds = build_dataset(&t, &scale).unwrap();
+        assert!(ds.client_size(0) >= 2);
+        scale.partition = "bogus".into();
+        assert!(build_dataset(&t, &scale).is_err());
+    }
+
+    #[test]
+    fn builds_text_partition() {
+        let t = fake_task(DataSpec::Text { vocab: 64, seq: 16 });
+        let ds = build_dataset(&t, &DataScale::smoke()).unwrap();
+        assert_eq!(ds.num_clients(), 50);
+        assert!(ds.num_eval_batches() > 0);
+    }
+}

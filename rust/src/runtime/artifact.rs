@@ -1,0 +1,270 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the coordinator.
+//!
+//! `artifacts/manifest.json` describes every lowered HLO module, the
+//! model's flat dimension, batch shapes, the sketch parameterization
+//! (rows/cols/seed — Rust re-derives the identical hash constants), the
+//! synthetic-data configuration, and the initial-weights file.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::hashing::SPEC_VERSION;
+use crate::runtime::pjrt::{Executable, Runtime};
+use crate::serialize::json::{parse, Value};
+
+/// Input tensor description (shape + dtype).
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Synthetic dataset configuration mirrored from the manifest.
+#[derive(Clone, Debug)]
+pub enum DataSpec {
+    Images { image: [usize; 3], classes: usize },
+    Text { vocab: usize, seq: usize },
+}
+
+/// Sketch parameterization available for a task.
+#[derive(Clone, Debug)]
+pub struct SketchSpec {
+    pub rows: usize,
+    pub seed: u64,
+    pub cols_options: Vec<usize>,
+}
+
+/// One task entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct TaskManifest {
+    pub name: String,
+    pub model: String,
+    pub dim: usize,
+    pub batch: usize,
+    pub inputs: HashMap<String, InputSpec>,
+    pub data: DataSpec,
+    pub init_weights: String,
+    pub artifacts: HashMap<String, String>,
+    pub sketch: SketchSpec,
+    pub fedavg_steps: Vec<usize>,
+}
+
+/// The whole manifest.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tasks: Vec<TaskManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = parse(&text).context("parsing manifest.json")?;
+        let spec_version = v.req_u64("spec_version")? as u32;
+        if spec_version != SPEC_VERSION {
+            bail!(
+                "manifest spec_version {spec_version} != binary spec {SPEC_VERSION}; \
+                 re-run `make artifacts`"
+            );
+        }
+        let mut tasks = Vec::new();
+        for t in v.req_array("tasks")? {
+            tasks.push(Self::parse_task(t)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tasks })
+    }
+
+    fn parse_task(t: &Value) -> Result<TaskManifest> {
+        let name = t.req_str("name")?.to_string();
+        let mut inputs = HashMap::new();
+        if let Some(Value::Object(spec)) = t.get("input_spec") {
+            for (k, v) in spec {
+                let shape = v
+                    .req_array("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = v.req_str("dtype")?.to_string();
+                inputs.insert(k.clone(), InputSpec { shape, dtype });
+            }
+        }
+        let data_v = t.req("data")?;
+        let data = match data_v.req_str("kind")? {
+            "images" => {
+                let img = data_v.req_array("image")?;
+                if img.len() != 3 {
+                    bail!("image must be [H,W,C]");
+                }
+                DataSpec::Images {
+                    image: [
+                        img[0].as_usize().unwrap(),
+                        img[1].as_usize().unwrap(),
+                        img[2].as_usize().unwrap(),
+                    ],
+                    classes: data_v.req_usize("classes")?,
+                }
+            }
+            "text" => DataSpec::Text {
+                vocab: data_v.req_usize("vocab")?,
+                seq: data_v.req_usize("seq")?,
+            },
+            other => bail!("unknown data kind '{other}'"),
+        };
+        let mut artifacts = HashMap::new();
+        if let Some(Value::Object(a)) = t.get("artifacts") {
+            for (k, v) in a {
+                artifacts.insert(
+                    k.clone(),
+                    v.as_str().ok_or_else(|| anyhow!("artifact path"))?.to_string(),
+                );
+            }
+        }
+        let sk = t.req("sketch")?;
+        let sketch_spec_version = sk.req_u64("spec_version")? as u32;
+        if sketch_spec_version != SPEC_VERSION {
+            bail!("sketch spec_version mismatch");
+        }
+        let sketch = SketchSpec {
+            rows: sk.req_usize("rows")?,
+            seed: sk.req_u64("seed")?,
+            cols_options: sk
+                .req_array("cols")?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad cols")))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let fedavg_steps = t
+            .req_array("fedavg_steps")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad fedavg step")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TaskManifest {
+            name,
+            model: t.req_str("model")?.to_string(),
+            dim: t.req_usize("dim")?,
+            batch: t.req_usize("batch")?,
+            inputs,
+            data,
+            init_weights: t.req_str("init_weights")?.to_string(),
+            artifacts,
+            sketch,
+            fedavg_steps,
+        })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskManifest> {
+        self.tasks
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("task '{name}' not in manifest (have: {:?})",
+                self.tasks.iter().map(|t| &t.name).collect::<Vec<_>>()))
+    }
+}
+
+/// Loaded executables for one task, compiled lazily and cached.
+pub struct TaskArtifacts {
+    runtime: std::rc::Rc<Runtime>,
+    dir: PathBuf,
+    pub manifest: TaskManifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl TaskArtifacts {
+    pub fn new(runtime: std::rc::Rc<Runtime>, manifest: &Manifest, task: &str) -> Result<Self> {
+        let tm = manifest.task(task)?.clone();
+        Ok(TaskArtifacts {
+            runtime,
+            dir: manifest.dir.clone(),
+            manifest: tm,
+            cache: Default::default(),
+        })
+    }
+
+    /// Get (compiling on first use) the executable for an artifact kind,
+    /// e.g. "client_grad", "eval", "client_step_c4096", "fedavg_k2".
+    pub fn executable(&self, kind: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(kind) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .manifest
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| anyhow!(
+                "task '{}' has no artifact '{kind}' (have: {:?})",
+                self.manifest.name,
+                self.manifest.artifacts.keys().collect::<Vec<_>>()
+            ))?;
+        let exe = std::rc::Rc::new(self.runtime.load_hlo(&self.dir.join(file))?);
+        self.cache.borrow_mut().insert(kind.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load the initial weights vector.
+    pub fn init_weights(&self) -> Result<Vec<f32>> {
+        let w = crate::serialize::bin::read_f32(&self.dir.join(&self.manifest.init_weights))?;
+        if w.len() != self.manifest.dim {
+            bail!(
+                "init weights len {} != manifest dim {}",
+                w.len(),
+                self.manifest.dim
+            );
+        }
+        Ok(w)
+    }
+
+    /// The client_step artifact kind name for a sketch width.
+    pub fn client_step_kind(cols: usize) -> String {
+        format!("client_step_c{cols}")
+    }
+
+    /// The fedavg artifact kind name for a local-step count.
+    pub fn fedavg_kind(local_steps: usize) -> String {
+        format!("fedavg_k{local_steps}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        let json = r#"{
+          "spec_version": 1, "sketch_rows": 5,
+          "tasks": [{
+            "name": "t", "model": "m", "dim": 10, "batch": 2,
+            "input_spec": {"x": {"shape": [2, 4], "dtype": "f32"}},
+            "data": {"kind": "images", "image": [2, 2, 1], "classes": 3},
+            "weight_seed": 1, "init_weights": "t_init.bin",
+            "artifacts": {"eval": "t_eval.hlo.txt"},
+            "sketch": {"rows": 5, "seed": 7, "cols": [64], "spec_version": 1},
+            "fedavg_steps": [2]
+          }]
+        }"#;
+        let v = parse(json).unwrap();
+        let tm = Manifest::parse_task(&v.req_array("tasks").unwrap()[0]).unwrap();
+        assert_eq!(tm.name, "t");
+        assert_eq!(tm.dim, 10);
+        assert_eq!(tm.inputs["x"].shape, vec![2, 4]);
+        assert!(matches!(tm.data, DataSpec::Images { classes: 3, .. }));
+        assert_eq!(tm.sketch.cols_options, vec![64]);
+    }
+
+    #[test]
+    fn rejects_wrong_spec_version() {
+        let dir = std::env::temp_dir().join(format!("fsgd_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"spec_version": 99, "tasks": []}"#)
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,103 @@
+//! Typed entry points for each artifact kind.
+//!
+//! These are the calls the coordinator makes on the hot path; each
+//! packs host buffers into [`Tensor`]s in the argument order fixed by
+//! `python/compile/model.py` and unpacks the output tuple.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::pjrt::{Executable, Tensor};
+use crate::sketch::CountSketch;
+
+/// A client minibatch in host memory. `x` is f32 for image tasks and i32
+/// token ids for text tasks; `y` is labels/targets; `mask` weights valid
+/// examples (tasks pad tiny local datasets up to the artifact's batch).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+    pub mask: Tensor,
+}
+
+/// FetchSGD client step: returns (loss, sketch-of-gradient).
+pub fn run_client_step(
+    exe: &Executable,
+    w: &[f32],
+    batch: &Batch,
+    rows: usize,
+    cols: usize,
+    seed: u64,
+) -> Result<(f32, CountSketch)> {
+    let out = exe.run(&[
+        Tensor::f32(w.to_vec(), &[w.len()]),
+        batch.x.clone(),
+        batch.y.clone(),
+        batch.mask.clone(),
+    ])?;
+    if out.len() != 2 {
+        bail!("client_step returned {} outputs, expected 2", out.len());
+    }
+    let loss = out[0].as_scalar_f32()?;
+    let table = out[1].clone().into_f32()?;
+    Ok((loss, CountSketch::from_table(rows, cols, w.len(), seed, table)))
+}
+
+/// Baseline client step: returns (loss, dense gradient).
+pub fn run_client_grad(exe: &Executable, w: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+    let out = exe.run(&[
+        Tensor::f32(w.to_vec(), &[w.len()]),
+        batch.x.clone(),
+        batch.y.clone(),
+        batch.mask.clone(),
+    ])?;
+    if out.len() != 2 {
+        bail!("client_grad returned {} outputs, expected 2", out.len());
+    }
+    let loss = out[0].as_scalar_f32()?;
+    let grad = out[1].clone().into_f32()?;
+    if grad.len() != w.len() {
+        bail!("gradient dim {} != weight dim {}", grad.len(), w.len());
+    }
+    Ok((loss, grad))
+}
+
+/// FedAvg client: `batches` stacked along a leading local-steps axis
+/// (done by the caller); returns (mean local loss, delta = w_in - w_out).
+pub fn run_fedavg(
+    exe: &Executable,
+    w: &[f32],
+    xs: Tensor,
+    ys: Tensor,
+    masks: Tensor,
+    lr: f32,
+) -> Result<(f32, Vec<f32>)> {
+    let out = exe.run(&[
+        Tensor::f32(w.to_vec(), &[w.len()]),
+        xs,
+        ys,
+        masks,
+        Tensor::scalar_f32(lr),
+    ])?;
+    if out.len() != 2 {
+        bail!("fedavg returned {} outputs, expected 2", out.len());
+    }
+    Ok((out[0].as_scalar_f32()?, out[1].clone().into_f32()?))
+}
+
+/// Evaluation: returns (sum_loss, units, correct) over the batch.
+pub fn run_eval(exe: &Executable, w: &[f32], batch: &Batch) -> Result<(f64, f64, f64)> {
+    let out = exe.run(&[
+        Tensor::f32(w.to_vec(), &[w.len()]),
+        batch.x.clone(),
+        batch.y.clone(),
+        batch.mask.clone(),
+    ])?;
+    if out.len() != 3 {
+        bail!("eval returned {} outputs, expected 3", out.len());
+    }
+    Ok((
+        out[0].as_scalar_f32()? as f64,
+        out[1].as_scalar_f32()? as f64,
+        out[2].as_scalar_f32()? as f64,
+    ))
+}

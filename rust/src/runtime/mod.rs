@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! on the training hot path. This is the only boundary between the Rust
+//! coordinator and the JAX/Pallas compute stack — Python is never
+//! invoked at run time.
+//!
+//! - [`pjrt`] — thin wrapper over the `xla` crate: HLO text →
+//!   `HloModuleProto` → compile → typed execute.
+//! - [`artifact`] — `artifacts/manifest.json` schema + lazy executable
+//!   cache per task.
+//! - [`exec`] — typed entry points for each artifact kind
+//!   (client_step / client_grad / fedavg / eval).
+
+pub mod artifact;
+pub mod exec;
+pub mod pjrt;
+
+pub use artifact::{Manifest, TaskArtifacts};
+pub use pjrt::{Executable, Runtime, Tensor};

@@ -1,0 +1,159 @@
+//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax >= 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! Concurrency note: the `xla` crate's handles wrap raw PJRT pointers
+//! and are not `Send`. The coordinator therefore executes artifacts from
+//! a single thread; XLA:CPU parallelizes *inside* each execution via its
+//! own intra-op thread pool, which is where the FLOPs are. Rust-side
+//! parallelism (sketch merges, data generation) uses plain `std::thread`
+//! over pure-Rust data.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A typed host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "f32 tensor shape/product mismatch");
+        Tensor::F32 { data, shape: shape.iter().map(|&s| s as i64).collect() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "i32 tensor shape/product mismatch");
+        Tensor::I32 { data, shape: shape.iter().map(|&s| s as i64).collect() }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    /// Extract f32 payload (errors on dtype mismatch).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn as_scalar_f32(&self) -> Result<f32> {
+        match self {
+            Tensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            other => bail!("expected scalar f32, got {:?}", shape_of(other)),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { data, shape } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.is_empty() {
+                    // rank-0: reshape to scalar
+                    l.reshape(&[])?
+                } else {
+                    l.reshape(shape)?
+                }
+            }
+            Tensor::I32 { data, shape } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    l.reshape(shape)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("output literal shape")?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape: dims })
+            }
+            xla::ElementType::S32 => {
+                Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape: dims })
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+fn shape_of(t: &Tensor) -> &Vec<i64> {
+    match t {
+        Tensor::F32 { shape, .. } => shape,
+        Tensor::I32 { shape, .. } => shape,
+    }
+}
+
+/// Owns the PJRT client. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host tensors; returns the flattened output tuple.
+    /// All our artifacts are lowered with `return_tuple=True`, so the
+    /// single device output is a tuple literal we decompose.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let buffer = &result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("no output buffer from {}", self.name))?;
+        let tuple_lit = buffer.to_literal_sync()?;
+        let parts = tuple_lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}

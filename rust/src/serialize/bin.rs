@@ -1,0 +1,84 @@
+//! Raw little-endian f32 tensor I/O.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) dumps initial model weights
+//! as flat little-endian f32 files next to the HLO artifacts; the
+//! coordinator loads them at startup. A tiny 16-byte header carries a
+//! magic and the element count so truncated/wrong files fail loudly.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"FSGDF32\0";
+
+/// Write a flat f32 tensor.
+pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(data.len() as u64).to_le_bytes())?;
+    // Safe little-endian serialization without unsafe: chunked buffer.
+    let mut buf = Vec::with_capacity(data.len().min(1 << 16) * 4);
+    for chunk in data.chunks(1 << 14) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Read a flat f32 tensor written by `write_f32` (or by the Python side,
+/// which uses the same header).
+pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut header = [0u8; 16];
+    f.read_exact(&mut header).context("reading f32 file header")?;
+    if &header[..8] != MAGIC {
+        bail!("{}: bad magic (not a FetchSGD f32 file)", path.display());
+    }
+    let n = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() != n * 4 {
+        bail!("{}: expected {} bytes of payload, found {}", path.display(), n * 4, raw.len());
+    }
+    let mut out = Vec::with_capacity(n);
+    for chunk in raw.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fsgd_bin_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        let data: Vec<f32> = (0..10_000).map(|i| (i as f32).sin()).collect();
+        write_f32(&p, &data).unwrap();
+        let back = read_f32(&p).unwrap();
+        assert_eq!(data, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join(format!("fsgd_bin_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.bin");
+        write_f32(&p, &[1.0, 2.0, 3.0]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(read_f32(&p).is_err());
+        std::fs::write(&p, b"NOTMAGIC********").unwrap();
+        assert!(read_f32(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,6 @@
+//! Serialization substrates: a minimal JSON parser/writer (serde is not
+//! available offline) and raw little-endian f32 tensor I/O used for
+//! initial model weights produced by the AOT pipeline.
+
+pub mod bin;
+pub mod json;

@@ -1,0 +1,18 @@
+//! Count-Sketch data structures (the paper's compression operator).
+//!
+//! - [`count_sketch::CountSketch`] — the linear sketch: encode, merge,
+//!   scale, unsketch (coordinate estimation), top-k extraction, and the
+//!   two error-feedback update rules from the paper (subtract vs
+//!   zero-out).
+//! - [`sliding`] — sliding-window error accumulation (Theorem 2): the
+//!   exact ring-of-`I` scheme from Appendix B.2/Figure 11a and the
+//!   `log(I)`-sketch variant sketched in Appendix D.
+//! - [`topk`] — top-k selection utilities shared by the sketch and the
+//!   (local/true) top-k baselines.
+
+pub mod count_sketch;
+pub mod sliding;
+pub mod topk;
+
+pub use count_sketch::CountSketch;
+pub use topk::{top_k_indices, SparseVec};

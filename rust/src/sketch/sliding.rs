@@ -1,0 +1,359 @@
+//! Sliding-window error accumulation (paper §4.2, Appendix B.2/D).
+//!
+//! Theorem 2 requires that signal spread over at most `I` consecutive
+//! gradients be recoverable. Vanilla error accumulation sums *all* prior
+//! gradients, so noise grows as O(t) and eventually buries window-limited
+//! signal. Two schemes fix this:
+//!
+//! - [`RingWindowSketch`] — the exact construction of Figure 11a: `I`
+//!   staggered sketches; sketch `j` is zeroed every `I` steps at offset
+//!   `j`, so at any time some sketch holds exactly the last `I'` updates
+//!   for every `I' <= I`.
+//! - [`LogWindowSketch`] — the Appendix-D-style economy version: one
+//!   sketch per power-of-two window (log2(I)+1 total), each zeroed every
+//!   `2^j` steps at a staggered phase. This approximates the smooth
+//!   histogram of Braverman–Ostrovsky with O(log I) memory: any suffix
+//!   window of length `<= I` is covered by a sketch whose span is within
+//!   2x of it.
+//!
+//! Both expose the same surface the server needs: `insert` a sketched
+//! update, `top_k` over the union of windows, and `zero_out`/`subtract`
+//! applied to all live sketches. The paper's experiments use a single
+//! vanilla sketch (§5); ablation abl3 compares all three.
+
+use crate::sketch::count_sketch::CountSketch;
+use crate::sketch::topk::{top_k_indices, SparseVec};
+
+/// Common interface over error-accumulation backends, so the FetchSGD
+/// server can swap vanilla / ring / log window schemes (ablation abl3).
+pub trait ErrorAccumulator: Send {
+    /// `S_e += scale * update` on every live sketch.
+    fn add_scaled(&mut self, update: &CountSketch, scale: f32);
+    /// Extract the top-k over the (union of) accumulated signal.
+    fn top_k(&mut self, k: usize) -> SparseVec;
+    /// Apply the paper's zero-out rule for an extracted Δ.
+    fn zero_out(&mut self, delta: &SparseVec);
+    /// Apply the subtract rule (Algorithm 1 line 14 exact form).
+    fn subtract(&mut self, delta: &SparseVec);
+    /// Advance the window clock one round (expire/rotate sketches).
+    fn advance(&mut self);
+    /// Memory footprint in f32 cells (for reporting).
+    fn cells(&self) -> usize;
+}
+
+/// Vanilla single-sketch error accumulation — what the paper actually
+/// runs in §5.
+pub struct VanillaAccumulator {
+    pub sketch: CountSketch,
+}
+
+impl VanillaAccumulator {
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64) -> Self {
+        VanillaAccumulator { sketch: CountSketch::zeros(rows, cols, dim, seed) }
+    }
+}
+
+impl ErrorAccumulator for VanillaAccumulator {
+    fn add_scaled(&mut self, update: &CountSketch, scale: f32) {
+        self.sketch.add_scaled(update, scale);
+    }
+    fn top_k(&mut self, k: usize) -> SparseVec {
+        self.sketch.top_k(k)
+    }
+    fn zero_out(&mut self, delta: &SparseVec) {
+        self.sketch.zero_out_sparse(delta);
+    }
+    fn subtract(&mut self, delta: &SparseVec) {
+        self.sketch.subtract_sparse(delta);
+    }
+    fn advance(&mut self) {}
+    fn cells(&self) -> usize {
+        self.sketch.cells()
+    }
+}
+
+/// Exact ring of `I` staggered sketches (Figure 11a).
+pub struct RingWindowSketch {
+    sketches: Vec<CountSketch>,
+    window: usize,
+    t: usize,
+}
+
+impl RingWindowSketch {
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Self {
+        assert!(window >= 1);
+        let sketches =
+            (0..window).map(|_| CountSketch::zeros(rows, cols, dim, seed)).collect();
+        RingWindowSketch { sketches, window, t: 0 }
+    }
+
+    /// Estimates from the sketch holding the *longest* complete window
+    /// (the freshest full view of the last <= I updates).
+    fn union_estimates(&self) -> Vec<f32> {
+        // Sketch j was last zeroed at the most recent time step s with
+        // s % window == j; its content is the sum of updates since then.
+        // The longest span is the sketch zeroed furthest in the past:
+        // j = (t) % window is freshest (just zeroed), j = (t+1) % window
+        // holds the longest history. Coordinate-wise we take the
+        // max-|.| estimate across sketches: signal present in any suffix
+        // window must be surfaced (FindHeavy queries every sketch and
+        // unions the results — Appendix B.2 Implementation).
+        let dim = self.sketches[0].dim();
+        let mut best = vec![0f32; dim];
+        let mut buf = vec![0f32; dim];
+        for s in &self.sketches {
+            s.estimate_all_into(&mut buf);
+            for (b, &e) in best.iter_mut().zip(&buf) {
+                if e.abs() > b.abs() {
+                    *b = e;
+                }
+            }
+        }
+        best
+    }
+}
+
+impl ErrorAccumulator for RingWindowSketch {
+    fn add_scaled(&mut self, update: &CountSketch, scale: f32) {
+        for s in self.sketches.iter_mut() {
+            s.add_scaled(update, scale);
+        }
+    }
+
+    fn top_k(&mut self, k: usize) -> SparseVec {
+        let est = self.union_estimates();
+        let idx = top_k_indices(&est, k);
+        SparseVec::from_pairs(est.len(), idx.into_iter().map(|i| (i, est[i as usize])).collect())
+    }
+
+    fn zero_out(&mut self, delta: &SparseVec) {
+        for s in self.sketches.iter_mut() {
+            s.zero_out_sparse(delta);
+        }
+    }
+
+    fn subtract(&mut self, delta: &SparseVec) {
+        for s in self.sketches.iter_mut() {
+            s.subtract_sparse(delta);
+        }
+    }
+
+    fn advance(&mut self) {
+        self.t += 1;
+        let j = self.t % self.window;
+        self.sketches[j].clear();
+    }
+
+    fn cells(&self) -> usize {
+        self.sketches.iter().map(|s| s.cells()).sum()
+    }
+}
+
+/// O(log I) sketches: sketch `j` covers a window of `2^j` rounds
+/// (zeroed every `2^j` advances, phase-staggered by construction of the
+/// counter). Any suffix window of length `L <= I` is covered by the
+/// sketch with `2^j >= L` whose last reset is at most `2^j` old — a
+/// 2-approximation of the exact ring in window span, following the
+/// smooth-histogram idea (Braverman–Ostrovsky 2007) specialized to our
+/// reset-based accumulation.
+pub struct LogWindowSketch {
+    sketches: Vec<CountSketch>,
+    periods: Vec<usize>,
+    t: usize,
+}
+
+impl LogWindowSketch {
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Self {
+        assert!(window >= 1);
+        let levels = (usize::BITS - window.next_power_of_two().leading_zeros()) as usize;
+        let mut sketches = Vec::new();
+        let mut periods = Vec::new();
+        for j in 0..levels.max(1) {
+            sketches.push(CountSketch::zeros(rows, cols, dim, seed));
+            periods.push(1usize << j);
+        }
+        LogWindowSketch { sketches, periods, t: 0 }
+    }
+
+    pub fn num_sketches(&self) -> usize {
+        self.sketches.len()
+    }
+}
+
+impl ErrorAccumulator for LogWindowSketch {
+    fn add_scaled(&mut self, update: &CountSketch, scale: f32) {
+        for s in self.sketches.iter_mut() {
+            s.add_scaled(update, scale);
+        }
+    }
+
+    fn top_k(&mut self, k: usize) -> SparseVec {
+        let dim = self.sketches[0].dim();
+        let mut best = vec![0f32; dim];
+        let mut buf = vec![0f32; dim];
+        for s in &self.sketches {
+            s.estimate_all_into(&mut buf);
+            for (b, &e) in best.iter_mut().zip(&buf) {
+                if e.abs() > b.abs() {
+                    *b = e;
+                }
+            }
+        }
+        let idx = top_k_indices(&best, k);
+        SparseVec::from_pairs(dim, idx.into_iter().map(|i| (i, best[i as usize])).collect())
+    }
+
+    fn zero_out(&mut self, delta: &SparseVec) {
+        for s in self.sketches.iter_mut() {
+            s.zero_out_sparse(delta);
+        }
+    }
+
+    fn subtract(&mut self, delta: &SparseVec) {
+        for s in self.sketches.iter_mut() {
+            s.subtract_sparse(delta);
+        }
+    }
+
+    fn advance(&mut self) {
+        self.t += 1;
+        for (s, &p) in self.sketches.iter_mut().zip(&self.periods) {
+            if self.t % p == 0 {
+                s.clear();
+            }
+        }
+    }
+
+    fn cells(&self) -> usize {
+        self.sketches.iter().map(|s| s.cells()).sum()
+    }
+}
+
+/// Factory used by config (`error_window = "vanilla" | "ring:I" | "log:I"`).
+pub fn make_accumulator(
+    kind: &str,
+    rows: usize,
+    cols: usize,
+    dim: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn ErrorAccumulator>> {
+    if kind == "vanilla" {
+        return Ok(Box::new(VanillaAccumulator::new(rows, cols, dim, seed)));
+    }
+    if let Some(rest) = kind.strip_prefix("ring:") {
+        let i: usize = rest.parse()?;
+        return Ok(Box::new(RingWindowSketch::new(rows, cols, dim, seed, i)));
+    }
+    if let Some(rest) = kind.strip_prefix("log:") {
+        let i: usize = rest.parse()?;
+        return Ok(Box::new(LogWindowSketch::new(rows, cols, dim, seed, i)));
+    }
+    anyhow::bail!("unknown error accumulator kind '{kind}' (vanilla | ring:I | log:I)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sketch_of(d: usize, pairs: &[(u32, f32)]) -> CountSketch {
+        let sv = SparseVec::from_pairs(d, pairs.to_vec());
+        let mut s = CountSketch::zeros(5, 512, d, 13);
+        s.accumulate_sparse(&sv, 1.0);
+        s
+    }
+
+    #[test]
+    fn ring_window_forgets_old_noise_but_keeps_window_signal() {
+        let d = 2000;
+        let window = 4;
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, window);
+        // Inject weak signal at coord 100 for `window` consecutive steps:
+        // individually small, heavy in the window sum.
+        for _ in 0..window {
+            let up = sketch_of(d, &[(100, 2.0)]);
+            ring.add_scaled(&up, 1.0);
+            ring.advance();
+        }
+        let top = ring.top_k(1);
+        assert_eq!(top.idx, vec![100]);
+        assert!(top.val[0] > 4.0, "window-summed signal visible: {}", top.val[0]);
+    }
+
+    #[test]
+    fn ring_window_expires_signal_older_than_window() {
+        let d = 2000;
+        let window = 3;
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, window);
+        let up = sketch_of(d, &[(55, 10.0)]);
+        ring.add_scaled(&up, 1.0);
+        // Advance far past the window with zero updates.
+        for _ in 0..(3 * window) {
+            ring.advance();
+        }
+        let est = ring.union_estimates();
+        assert!(est[55].abs() < 1e-6, "signal should have expired: {}", est[55]);
+    }
+
+    #[test]
+    fn log_window_uses_log_many_sketches() {
+        let lw = LogWindowSketch::new(3, 128, 100, 1, 16);
+        assert_eq!(lw.num_sketches(), 5); // windows 1,2,4,8,16
+        let lw1 = LogWindowSketch::new(3, 128, 100, 1, 1);
+        assert_eq!(lw1.num_sketches(), 1);
+    }
+
+    #[test]
+    fn log_window_covers_window_signal() {
+        let d = 2000;
+        let mut lw = LogWindowSketch::new(5, 512, d, 13, 8);
+        for _ in 0..6 {
+            let up = sketch_of(d, &[(70, 1.5)]);
+            lw.add_scaled(&up, 1.0);
+            lw.advance();
+        }
+        let top = lw.top_k(1);
+        assert_eq!(top.idx, vec![70]);
+    }
+
+    #[test]
+    fn vanilla_never_forgets() {
+        let d = 500;
+        let mut v = VanillaAccumulator::new(5, 512, d, 13);
+        let up = sketch_of(d, &[(9, 3.0)]);
+        v.add_scaled(&up, 1.0);
+        for _ in 0..20 {
+            v.advance();
+        }
+        let top = v.top_k(1);
+        assert_eq!(top.idx, vec![9]);
+    }
+
+    #[test]
+    fn zero_out_applies_to_all_window_sketches() {
+        let d = 500;
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, 4);
+        let up = sketch_of(d, &[(9, 30.0)]);
+        ring.add_scaled(&up, 1.0);
+        let delta = ring.top_k(1);
+        ring.zero_out(&delta);
+        let est = ring.union_estimates();
+        assert!(est[9].abs() < 1e-6);
+    }
+
+    #[test]
+    fn factory_parses_kinds() {
+        assert!(make_accumulator("vanilla", 3, 64, 10, 1).is_ok());
+        assert!(make_accumulator("ring:4", 3, 64, 10, 1).is_ok());
+        assert!(make_accumulator("log:16", 3, 64, 10, 1).is_ok());
+        assert!(make_accumulator("bogus", 3, 64, 10, 1).is_err());
+    }
+
+    #[test]
+    fn memory_footprints_ordered() {
+        let v = VanillaAccumulator::new(3, 64, 10, 1);
+        let ring = RingWindowSketch::new(3, 64, 10, 1, 16);
+        let log = LogWindowSketch::new(3, 64, 10, 1, 16);
+        assert!(v.cells() < log.cells());
+        assert!(log.cells() < ring.cells());
+    }
+}

@@ -1,0 +1,144 @@
+//! Top-k selection and sparse-vector utilities.
+//!
+//! Used by (a) the FetchSGD server to extract `Top-k(U(S_e))`, (b) the
+//! local top-k baseline on each client, and (c) the true top-k baseline
+//! on the server. Selection is by magnitude, O(d) via quickselect.
+
+/// A k-sparse vector: parallel index/value arrays, indices strictly
+/// increasing. This is the wire format of FetchSGD's model update
+/// (download direction) and of the local top-k upload.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new(dim: usize) -> Self {
+        SparseVec { dim, idx: Vec::new(), val: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Build from (unsorted) pairs; sorts by index and asserts no dups.
+    pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        for w in pairs.windows(2) {
+            debug_assert_ne!(w[0].0, w[1].0, "duplicate index in SparseVec");
+        }
+        SparseVec {
+            dim,
+            idx: pairs.iter().map(|&(i, _)| i).collect(),
+            val: pairs.iter().map(|&(_, v)| v).collect(),
+        }
+    }
+
+    /// Densify (for tests / small vectors).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// out += self * scale, into a dense accumulator.
+    pub fn add_into(&self, out: &mut [f32], scale: f32) {
+        assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += v * scale;
+        }
+    }
+
+    /// Number of payload bytes under the paper's accounting convention
+    /// (footnote 5: non-zero f32 values only, zero-overhead encoding of
+    /// the index set).
+    pub fn payload_bytes(&self) -> u64 {
+        4 * self.nnz() as u64
+    }
+
+    /// Dot product with a dense vector.
+    pub fn dot(&self, dense: &[f32]) -> f64 {
+        self.idx
+            .iter()
+            .zip(&self.val)
+            .map(|(&i, &v)| v as f64 * dense[i as usize] as f64)
+            .sum()
+    }
+}
+
+/// Indices of the `k` largest-magnitude entries of `v` (any order).
+/// O(d) expected via `select_nth_unstable`. If `k >= len`, returns all.
+pub fn top_k_indices(v: &[f32], k: usize) -> Vec<u32> {
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= v.len() {
+        return (0..v.len() as u32).collect();
+    }
+    let mut order: Vec<u32> = (0..v.len() as u32).collect();
+    let kth = k - 1;
+    order.select_nth_unstable_by(kth, |&a, &b| {
+        let ma = v[a as usize].abs();
+        let mb = v[b as usize].abs();
+        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    order.truncate(k);
+    order
+}
+
+/// Extract the top-k of `v` by magnitude as a SparseVec (values taken
+/// from `v`).
+pub fn top_k_sparse(v: &[f32], k: usize) -> SparseVec {
+    let idx = top_k_indices(v, k);
+    SparseVec::from_pairs(v.len(), idx.into_iter().map(|i| (i, v[i as usize])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn top_k_exact_small() {
+        let v = [0.1f32, -5.0, 3.0, 0.0, -2.0, 4.0];
+        let mut idx = top_k_indices(&v, 3);
+        idx.sort();
+        assert_eq!(idx, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        assert!(top_k_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(top_k_indices(&[1.0, 2.0], 5).len(), 2);
+        let sv = top_k_sparse(&[0.0f32; 4], 2);
+        assert_eq!(sv.nnz(), 2); // ties are fine, any 2 of the zeros
+    }
+
+    #[test]
+    fn sparse_roundtrip_and_add() {
+        let sv = SparseVec::from_pairs(6, vec![(4, 2.0), (1, -1.0)]);
+        assert_eq!(sv.idx, vec![1, 4]);
+        assert_eq!(sv.to_dense(), vec![0.0, -1.0, 0.0, 0.0, 2.0, 0.0]);
+        let mut acc = vec![1f32; 6];
+        sv.add_into(&mut acc, 2.0);
+        assert_eq!(acc, vec![1.0, -1.0, 1.0, 1.0, 5.0, 1.0]);
+        assert_eq!(sv.payload_bytes(), 8);
+    }
+
+    #[test]
+    fn prop_top_k_matches_full_sort() {
+        check("topk = sort prefix", 60, |g| {
+            let v = g.vec_f32(1, 200, -100.0, 100.0);
+            let k = g.usize_in(1, v.len() + 1);
+            let mut got: Vec<f32> = top_k_indices(&v, k).iter().map(|&i| v[i as usize].abs()).collect();
+            got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut all: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+            all.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            assert_eq!(got, all[..k].to_vec());
+        });
+    }
+}

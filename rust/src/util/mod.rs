@@ -1,0 +1,12 @@
+//! Small self-contained substrates: deterministic PRNGs, statistics
+//! helpers, and a miniature property-testing harness.
+//!
+//! The build environment is offline, so this crate cannot depend on
+//! `rand`, `proptest`, or `statrs`; everything here is implemented from
+//! scratch and unit-tested in place.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::{splitmix64, Rng};

@@ -1,0 +1,133 @@
+//! Miniature property-based testing harness.
+//!
+//! The real `proptest` crate is unavailable offline, so this module
+//! provides the 20% we need: run a property over many seeded random
+//! cases, report the failing seed, and re-run a specific seed for
+//! debugging. No shrinking — the generators below produce small cases by
+//! construction, and the failing seed is always printed so a case can be
+//! replayed exactly.
+//!
+//! ```no_run
+//! use fetchsgd::util::proptest::{check, Gen};
+//! check("add commutes", 100, |g| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.gen_range(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A vector of f32 in [lo, hi) with length in [min_len, max_len).
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A sparse vector of dimension `d` with `nnz` heavy entries of
+    /// magnitude around `scale` plus optional dense Gaussian noise of
+    /// standard deviation `noise`.
+    pub fn heavy_vec(&mut self, d: usize, nnz: usize, scale: f32, noise: f32) -> Vec<f32> {
+        let mut v = vec![0f32; d];
+        if noise > 0.0 {
+            for x in v.iter_mut() {
+                *x = (self.rng.next_gaussian() as f32) * noise;
+            }
+        }
+        for _ in 0..nnz {
+            let i = self.rng.gen_range(d);
+            let sign = if self.bool() { 1.0 } else { -1.0 };
+            v[i] += sign * scale * (0.5 + self.rng.next_f32());
+        }
+        v
+    }
+
+    /// Access the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases. Panics (with the case index
+/// and seed) on the first failure. Honors `FETCHSGD_PROP_SEED` to replay
+/// one specific case.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    if let Ok(s) = std::env::var("FETCHSGD_PROP_SEED") {
+        let seed: u64 = s.parse().expect("FETCHSGD_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), case: 0 };
+        prop(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: Rng::new(seed), case };
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (replay with FETCHSGD_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        check("counter", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 50, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(1, 10, 0.0, 5.0);
+            assert!(!v.is_empty() && v.len() < 10);
+            assert!(v.iter().all(|&x| (0.0..5.0).contains(&x)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+}

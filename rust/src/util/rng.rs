@@ -1,0 +1,302 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `splitmix64` is the seeding/stream-splitting primitive (it is also the
+//! constant-derivation function of the cross-language Count-Sketch hash
+//! spec — see `crate::hashing`). `Rng` is xoshiro256++, a small fast
+//! generator with good statistical quality, used for everything
+//! stochastic in the simulator: client sampling, synthetic data,
+//! minibatch order.
+//!
+//! All randomness in the system flows from explicit `u64` seeds so every
+//! experiment is exactly reproducible.
+
+/// One step of the splitmix64 sequence: returns the value for `state` and
+/// advances it. Used both as a stand-alone hash/seed-derivation function
+/// and to seed `Rng`.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Derive the `i`-th independent sub-seed from a master seed. Stable
+/// across the whole codebase (and mirrored in Python) so components can
+/// agree on stream identities.
+#[inline]
+pub fn derive_seed(master: u64, stream: u64) -> u64 {
+    let mut s = master ^ stream.wrapping_mul(0xA0761D6478BD642F);
+    splitmix64(&mut s)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed from a single `u64` by running splitmix64 (the procedure
+    /// recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Create an independent child generator (for per-client / per-worker
+    /// streams).
+    pub fn split(&mut self, stream: u64) -> Rng {
+        Rng::new(derive_seed(self.next_u64(), stream))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's unbiased method.
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0, "gen_range(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; this is not a hot path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` uniformly (Floyd's
+    /// algorithm); order is randomized. Used for per-round client
+    /// selection.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        // Floyd's: for j in n-k..n, pick t in [0, j]; insert t unless
+        // present, else insert j.
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        self.shuffle(&mut out);
+        out
+    }
+
+    /// Sample from a power-law (Zipf-like) distribution over `[0, n)`
+    /// with exponent `alpha` via inverse-CDF on precomputed weights.
+    /// Returns the index. Prefer `PowerLaw` for repeated draws.
+    pub fn next_zipf(&mut self, cdf: &[f64]) -> usize {
+        let u = self.next_f64();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+/// Precomputed power-law sampler: P(i) ∝ (i+1)^-alpha over [0, n).
+/// Used to model the paper's observation that client dataset sizes follow
+/// a power law (§1, §5).
+#[derive(Clone, Debug)]
+pub struct PowerLaw {
+    cdf: Vec<f64>,
+}
+
+impl PowerLaw {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += ((i + 1) as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for p in cdf.iter_mut() {
+            *p /= norm;
+        }
+        PowerLaw { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.next_zipf(&self.cdf)
+    }
+
+    /// Deterministic per-index weight (normalized).
+    pub fn weight(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed=1234567 from the public-domain
+        // splitmix64 implementation.
+        let mut s = 1234567u64;
+        let a = splitmix64(&mut s);
+        let b = splitmix64(&mut s);
+        assert_ne!(a, b);
+        // determinism
+        let mut s2 = 1234567u64;
+        assert_eq!(a, splitmix64(&mut s2));
+        assert_eq!(b, splitmix64(&mut s2));
+    }
+
+    #[test]
+    fn rng_deterministic_and_distinct_streams() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut r3 = Rng::new(43);
+        let same = (0..100).filter(|_| r1.next_u64() == r3.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "all buckets hit in 1000 draws");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_complete() {
+        let mut r = Rng::new(9);
+        for _ in 0..50 {
+            let s = r.sample_distinct(20, 7);
+            assert_eq!(s.len(), 7);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), 7);
+            assert!(s.iter().all(|&i| i < 20));
+        }
+        // k == n returns a permutation
+        let s = r.sample_distinct(5, 5);
+        let mut sorted = s.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 20000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn power_law_is_heavy_headed() {
+        let pl = PowerLaw::new(1000, 1.2);
+        let mut r = Rng::new(3);
+        let mut head = 0;
+        for _ in 0..2000 {
+            if pl.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // top-1% of indices should hold far more than 1% of the mass
+        assert!(head > 400, "head draws {head}");
+        let total: f64 = (0..1000).map(|i| pl.weight(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts`; they skip politely when artifacts are absent so
+//! `cargo test` works on a fresh checkout).
+//!
+//! These tests pin the L1/L2/L3 contract: the HLO a JAX+Pallas pipeline
+//! lowered yesterday must keep producing numbers the Rust side agrees
+//! with today.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use fetchsgd::model::{build_dataset, DataScale};
+use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
+use fetchsgd::runtime::exec::{run_client_grad, run_client_step, run_eval, run_fedavg};
+use fetchsgd::runtime::Runtime;
+use fetchsgd::sketch::CountSketch;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn smoke_setup(runtime: Rc<Runtime>, dir: &PathBuf) -> (TaskArtifacts, Vec<f32>) {
+    let manifest = Manifest::load(dir).unwrap();
+    let arts = TaskArtifacts::new(runtime, &manifest, "smoke").unwrap();
+    let w = arts.init_weights().unwrap();
+    (arts, w)
+}
+
+#[test]
+fn manifest_loads_and_lists_tasks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert!(manifest.task("smoke").is_ok());
+    let tm = manifest.task("smoke").unwrap();
+    assert!(tm.dim > 0);
+    assert!(tm.artifacts.contains_key("client_grad"));
+    assert!(tm.artifacts.contains_key("eval"));
+}
+
+#[test]
+fn cross_language_sketch_equality() {
+    // The central integration invariant: sketch computed by the Pallas
+    // kernel *inside* the HLO graph == sketch computed by the Rust
+    // CountSketch on the gradient from the same graph.
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, w) = smoke_setup(runtime, &dir);
+    let tm = arts.manifest.clone();
+    let cols = tm.sketch.cols_options[0];
+    let ds = build_dataset(&tm, &DataScale::smoke()).unwrap();
+
+    for client in [0usize, 3, 11] {
+        let batch = ds.client_batch(client, 42);
+        let step = arts.executable(&TaskArtifacts::client_step_kind(cols)).unwrap();
+        let (loss1, sk) =
+            run_client_step(&step, &w, &batch, tm.sketch.rows, cols, tm.sketch.seed).unwrap();
+        let grad_exe = arts.executable("client_grad").unwrap();
+        let (loss2, grad) = run_client_grad(&grad_exe, &w, &batch).unwrap();
+        assert!((loss1 - loss2).abs() < 1e-5);
+        let rust_sk = CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &grad);
+        let gmax = grad.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1.0);
+        for (a, b) in sk.table().iter().zip(rust_sk.table()) {
+            assert!((a - b).abs() < 1e-4 * gmax, "client {client}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn gradients_are_finite_and_nonzero() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, w) = smoke_setup(runtime, &dir);
+    let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
+    let batch = ds.client_batch(1, 1);
+    let exe = arts.executable("client_grad").unwrap();
+    let (loss, grad) = run_client_grad(&exe, &w, &batch).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!(grad.iter().all(|g| g.is_finite()));
+    assert!(grad.iter().any(|&g| g != 0.0));
+}
+
+#[test]
+fn gradient_matches_finite_differences() {
+    // Spot-check d/dw of the loss against central differences on a few
+    // coordinates — validates the whole lower-to-execute pipeline, not
+    // just shapes.
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, w) = smoke_setup(runtime, &dir);
+    let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
+    let batch = ds.client_batch(0, 9);
+    let exe = arts.executable("client_grad").unwrap();
+    let (_, grad) = run_client_grad(&exe, &w, &batch).unwrap();
+
+    // pick the largest-|grad| coordinate plus a couple of fixed ones
+    let mut probe: Vec<usize> = vec![0, w.len() / 2];
+    let max_i =
+        grad.iter().enumerate().max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap()).unwrap().0;
+    probe.push(max_i);
+    let eps = 1e-3f32;
+    for &i in &probe {
+        let mut wp = w.clone();
+        wp[i] += eps;
+        let (lp, _) = run_client_grad(&exe, &wp, &batch).unwrap();
+        let mut wm = w.clone();
+        wm[i] -= eps;
+        let (lm, _) = run_client_grad(&exe, &wm, &batch).unwrap();
+        let fd = (lp - lm) / (2.0 * eps);
+        let g = grad[i];
+        assert!(
+            (fd - g).abs() < 1e-2 * g.abs().max(0.1),
+            "coord {i}: finite-diff {fd} vs grad {g}"
+        );
+    }
+}
+
+#[test]
+fn eval_stats_are_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, w) = smoke_setup(runtime, &dir);
+    let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
+    let exe = arts.executable("eval").unwrap();
+    let batch = ds.eval_batch(0);
+    let (sum_ce, units, correct) = run_eval(&exe, &w, &batch).unwrap();
+    assert!(units > 0.0 && units <= arts.manifest.batch as f64);
+    assert!(correct >= 0.0 && correct <= units);
+    assert!(sum_ce.is_finite() && sum_ce > 0.0);
+}
+
+#[test]
+fn fedavg_delta_zero_at_zero_lr_and_descends_otherwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, w) = smoke_setup(runtime, &dir);
+    let tm = arts.manifest.clone();
+    let k = tm.fedavg_steps[0];
+    let ds = build_dataset(&tm, &DataScale::smoke()).unwrap();
+    let (xs, ys, ms) = ds.client_batches_stacked(0, k, 5);
+    let exe = arts.executable(&TaskArtifacts::fedavg_kind(k)).unwrap();
+
+    let (_, delta0) = run_fedavg(&exe, &w, xs.clone(), ys.clone(), ms.clone(), 0.0).unwrap();
+    assert!(delta0.iter().all(|&d| d == 0.0), "zero lr must give zero delta");
+
+    let (loss, delta) = run_fedavg(&exe, &w, xs.clone(), ys.clone(), ms.clone(), 0.05).unwrap();
+    assert!(loss.is_finite());
+    assert!(delta.iter().any(|&d| d != 0.0));
+    // Applying the delta (w' = w - delta... note delta = w_in - w_out, so
+    // w_out = w - delta) must reduce loss on the same local data.
+    let w2: Vec<f32> = w.iter().zip(&delta).map(|(&a, &b)| a - b).collect();
+    let (loss2, _) = run_fedavg(&exe, &w2, xs, ys, ms, 0.0).unwrap();
+    assert!(loss2 < loss, "local steps should reduce local loss: {loss} -> {loss2}");
+}
+
+#[test]
+fn unknown_artifact_kind_errors_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let (arts, _) = smoke_setup(runtime, &dir);
+    let err = match arts.executable("nonexistent_kind") {
+        Ok(_) => panic!("expected error for unknown artifact kind"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("no artifact"));
+}

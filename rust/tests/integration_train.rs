@@ -1,0 +1,228 @@
+//! End-to-end training integration tests: every strategy must train the
+//! smoke task (loss decreases), runs must be deterministic, and the
+//! compression accounting must reflect each method's wire format.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
+use fetchsgd::coordinator::Trainer;
+use fetchsgd::model::DataScale;
+use fetchsgd::runtime::Runtime;
+
+fn artifacts_ready() -> bool {
+    let ok = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn smoke_cfg(strategy: StrategyConfig, rounds: usize) -> TrainConfig {
+    TrainConfig {
+        task: "smoke".into(),
+        strategy,
+        rounds,
+        clients_per_round: 4,
+        lr: LrSchedule::Triangular { peak: 0.2, pivot: 0.25 },
+        scale: DataScale::smoke(),
+        eval_every: 0,
+        seed: 5,
+        artifacts_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        log_path: None,
+        baseline_rounds: None,
+        verbose: false,
+    }
+}
+
+fn all_strategies() -> Vec<(&'static str, StrategyConfig)> {
+    vec![
+        (
+            "fetchsgd",
+            StrategyConfig::FetchSgd {
+                k: 50,
+                cols: 512,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+        ),
+        (
+            "local_topk",
+            StrategyConfig::LocalTopK { k: 50, rho_g: 0.9, masking: true, local_error: false },
+        ),
+        ("fedavg", StrategyConfig::FedAvg { local_steps: 2, rho_g: 0.0 }),
+        ("uncompressed", StrategyConfig::Uncompressed { rho_g: 0.9 }),
+        ("true_topk", StrategyConfig::TrueTopK { k: 50, rho: 0.9, masking: true }),
+    ]
+}
+
+#[test]
+fn every_strategy_reduces_training_loss() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    for (name, strat) in all_strategies() {
+        let mut t = Trainer::with_runtime(smoke_cfg(strat, 25), runtime.clone()).unwrap();
+        let s = t.run().unwrap();
+        let first = t.logger.rounds[0].loss;
+        assert!(
+            s.final_loss < first * 0.7,
+            "{name}: loss should drop ({first:.4} -> {:.4})",
+            s.final_loss
+        );
+        assert!(s.accuracy > 0.3, "{name}: accuracy {:.3}", s.accuracy);
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let run = || {
+        let mut t = Trainer::with_runtime(
+            smoke_cfg(
+                StrategyConfig::FetchSgd {
+                    k: 50,
+                    cols: 512,
+                    rho: 0.9,
+                    error_update: "zero_out".into(),
+                    error_window: "vanilla".into(),
+                    masking: true,
+                },
+                8,
+            ),
+            runtime.clone(),
+        )
+        .unwrap();
+        t.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits());
+    assert_eq!(a.upload_bytes, b.upload_bytes);
+}
+
+#[test]
+fn accounting_matches_wire_formats() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let manifest =
+        fetchsgd::runtime::artifact::Manifest::load(&smoke_cfg(all_strategies()[0].1.clone(), 1).artifacts_dir)
+            .unwrap();
+    let d = manifest.task("smoke").unwrap().dim as u64;
+    let rounds = 6u64;
+    let w = 4u64;
+
+    // FetchSGD: upload = rows*cols*4 per client per round.
+    let mut t = Trainer::with_runtime(
+        smoke_cfg(
+            StrategyConfig::FetchSgd {
+                k: 50,
+                cols: 512,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            rounds as usize,
+        ),
+        runtime.clone(),
+    )
+    .unwrap();
+    let s = t.run().unwrap();
+    assert_eq!(s.upload_bytes, 5 * 512 * 4 * rounds * w);
+    // download: k-sparse values only
+    assert_eq!(s.download_bytes, 50 * 4 * rounds * w);
+
+    // Uncompressed: dense both ways.
+    let mut t = Trainer::with_runtime(
+        smoke_cfg(StrategyConfig::Uncompressed { rho_g: 0.9 }, rounds as usize),
+        runtime.clone(),
+    )
+    .unwrap();
+    let s = t.run().unwrap();
+    assert_eq!(s.upload_bytes, d * 4 * rounds * w);
+    assert_eq!(s.download_bytes, d * 4 * rounds * w);
+    let r = s.ratios;
+    assert!((r.upload - 1.0).abs() < 1e-9 && (r.overall - 1.0).abs() < 1e-9);
+
+    // Local top-k: upload k values; download <= W*k values.
+    let mut t = Trainer::with_runtime(
+        smoke_cfg(
+            StrategyConfig::LocalTopK { k: 50, rho_g: 0.0, masking: false, local_error: false },
+            rounds as usize,
+        ),
+        runtime,
+    )
+    .unwrap();
+    let s = t.run().unwrap();
+    assert_eq!(s.upload_bytes, 50 * 4 * rounds * w);
+    assert!(s.download_bytes <= 50 * w * 4 * rounds * w);
+}
+
+#[test]
+fn sliding_window_error_accumulator_trains() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    for window in ["ring:4", "log:8"] {
+        let mut t = Trainer::with_runtime(
+            smoke_cfg(
+                StrategyConfig::FetchSgd {
+                    k: 50,
+                    cols: 512,
+                    rho: 0.9,
+                    error_update: "zero_out".into(),
+                    error_window: window.into(),
+                    masking: true,
+                },
+                20,
+            ),
+            runtime.clone(),
+        )
+        .unwrap();
+        let s = t.run().unwrap();
+        assert!(s.accuracy > 0.3, "{window}: accuracy {:.3}", s.accuracy);
+    }
+}
+
+#[test]
+fn trainer_rejects_invalid_configs() {
+    if !artifacts_ready() {
+        return;
+    }
+    let runtime = Rc::new(Runtime::cpu().unwrap());
+    // cols not lowered for this task
+    let err = Trainer::with_runtime(
+        smoke_cfg(
+            StrategyConfig::FetchSgd {
+                k: 50,
+                cols: 4096,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            2,
+        ),
+        runtime.clone(),
+    )
+    .err()
+    .expect("should reject unknown cols");
+    assert!(format!("{err:#}").contains("cols"));
+    // fedavg steps not lowered
+    assert!(Trainer::with_runtime(
+        smoke_cfg(StrategyConfig::FedAvg { local_steps: 99, rho_g: 0.0 }, 2),
+        runtime,
+    )
+    .is_err());
+}

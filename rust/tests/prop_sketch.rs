@@ -1,0 +1,238 @@
+//! Property-based tests of the Count-Sketch algebra and the FetchSGD
+//! server invariants — pure Rust, no artifacts required.
+//!
+//! These pin the mathematical properties the paper's correctness rests
+//! on: linearity (mergability), unbiasedness, heavy-hitter recovery,
+//! and the equivalence claims of §3.2 (server-side vs client-side
+//! momentum/error accumulation).
+
+use fetchsgd::sketch::count_sketch::CountSketch;
+use fetchsgd::sketch::topk::{top_k_sparse, SparseVec};
+use fetchsgd::util::proptest::check;
+use fetchsgd::util::stats::l2_norm;
+
+const ROWS: usize = 5;
+const COLS: usize = 1024;
+const SEED: u64 = 0xBEEF;
+
+#[test]
+fn prop_merge_is_commutative_and_associative() {
+    check("merge comm/assoc", 30, |g| {
+        let d = g.usize_in(10, 800);
+        let a = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let b = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let c = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let s = |v: &[f32]| CountSketch::encode(ROWS, COLS, SEED, v);
+        // (a+b)+c == a+(b+c), a+b == b+a in sketch space
+        let mut ab_c = s(&a);
+        ab_c.add_scaled(&s(&b), 1.0);
+        ab_c.add_scaled(&s(&c), 1.0);
+        let mut a_bc = s(&c);
+        a_bc.add_scaled(&s(&b), 1.0);
+        a_bc.add_scaled(&s(&a), 1.0);
+        for (x, y) in ab_c.table().iter().zip(a_bc.table()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_scale_distributes_over_encode() {
+    check("scale linearity", 30, |g| {
+        let d = g.usize_in(10, 500);
+        let v = g.vec_f32(d, d + 1, -3.0, 3.0);
+        let alpha = g.f32_in(-2.0, 2.0);
+        let scaled: Vec<f32> = v.iter().map(|&x| alpha * x).collect();
+        let mut s1 = CountSketch::encode(ROWS, COLS, SEED, &v);
+        s1.scale(alpha);
+        let s2 = CountSketch::encode(ROWS, COLS, SEED, &scaled);
+        for (x, y) in s1.table().iter().zip(s2.table()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_server_side_equals_client_side_error_accumulation() {
+    // §3.2's key linearity claim: accumulating error on the server in
+    // one sketch == each client accumulating locally and uploading
+    // sketches of the result.
+    check("server == client accumulation", 20, |g| {
+        let d = 400;
+        let t_rounds = g.usize_in(2, 6);
+        let w_clients = g.usize_in(1, 5);
+        let grads: Vec<Vec<Vec<f32>>> = (0..t_rounds)
+            .map(|_| (0..w_clients).map(|_| g.vec_f32(d, d + 1, -1.0, 1.0)).collect())
+            .collect();
+        // server-side: merge sketches per round, accumulate
+        let mut server = CountSketch::zeros(ROWS, COLS, d, SEED);
+        for round in &grads {
+            for gr in round {
+                server.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, gr), 1.0 / w_clients as f32);
+            }
+        }
+        // client-side: each client sums its own gradients densely, then
+        // sketches once at the end
+        let mut client = CountSketch::zeros(ROWS, COLS, d, SEED);
+        for ci in 0..w_clients {
+            let mut acc = vec![0f32; d];
+            for round in &grads {
+                for (a, &x) in acc.iter_mut().zip(&round[ci]) {
+                    *a += x / w_clients as f32;
+                }
+            }
+            client.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, &acc), 1.0);
+        }
+        for (x, y) in server.table().iter().zip(client.table()) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_estimates_bounded_by_tail_noise() {
+    // Count-Sketch guarantee: per-coordinate estimation error is
+    // O(||tail|| / sqrt(cols)) w.h.p. — check a generous 5x bound.
+    check("estimate error bound", 15, |g| {
+        let d = 5000;
+        let v = g.heavy_vec(d, 5, 20.0, 0.1);
+        let s = CountSketch::encode(ROWS, 2048, g.u64(), &v);
+        let bound = 5.0 * l2_norm(&v) / (2048f64).sqrt();
+        let mut violations = 0;
+        for i in (0..d).step_by(37) {
+            let err = (s.estimate(i as u32) - v[i]).abs() as f64;
+            if err > bound {
+                violations += 1;
+            }
+        }
+        assert!(violations <= 1, "{violations} estimates exceeded 5x tail bound {bound}");
+    });
+}
+
+#[test]
+fn prop_topk_of_unsketch_matches_true_topk_for_separated_vectors() {
+    check("topk recovery", 15, |g| {
+        let d = g.usize_in(2000, 10_000);
+        let k = g.usize_in(1, 6);
+        // plant k well-separated heavy coords over small noise
+        let mut v = g.heavy_vec(d, 0, 0.0, 0.02);
+        let mut planted = Vec::new();
+        for j in 0..k {
+            let mut i = g.usize_in(0, d);
+            while planted.contains(&i) {
+                i = g.usize_in(0, d);
+            }
+            planted.push(i);
+            v[i] = 30.0 * (j + 1) as f32 * if g.bool() { 1.0 } else { -1.0 };
+        }
+        let s = CountSketch::encode(ROWS, 4096, g.u64(), &v);
+        let mut got = s.top_k(k).idx;
+        got.sort();
+        let mut want: Vec<u32> = planted.iter().map(|&i| i as u32).collect();
+        want.sort();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_zero_out_is_idempotent() {
+    check("zero_out idempotent", 20, |g| {
+        let d = 600;
+        let v = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let mut s = CountSketch::encode(ROWS, COLS, SEED, &v);
+        let delta = s.top_k(g.usize_in(1, 20));
+        s.zero_out_sparse(&delta);
+        let t1 = s.table().to_vec();
+        s.zero_out_sparse(&delta);
+        assert_eq!(t1, s.table());
+    });
+}
+
+#[test]
+fn prop_sparse_topk_upload_roundtrip() {
+    // local top-k wire format: dense -> topk sparse -> dense preserves
+    // exactly the k largest entries and zeroes the rest.
+    check("topk wire roundtrip", 30, |g| {
+        let d = g.usize_in(5, 400);
+        let v = g.vec_f32(d, d + 1, -10.0, 10.0);
+        let k = g.usize_in(1, d + 1);
+        let sv = top_k_sparse(&v, k);
+        let dense = sv.to_dense();
+        let kept: Vec<usize> = (0..d).filter(|&i| dense[i] != 0.0).collect();
+        assert!(kept.len() <= k);
+        for &i in &kept {
+            assert_eq!(dense[i], v[i]);
+        }
+        // every kept magnitude >= every dropped magnitude
+        let min_kept = kept.iter().map(|&i| v[i].abs()).fold(f32::INFINITY, f32::min);
+        for i in 0..d {
+            if dense[i] == 0.0 && v[i] != 0.0 && !kept.contains(&i) {
+                assert!(v[i].abs() <= min_kept + 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparsevec_add_into_matches_dense_addition() {
+    check("sparse add_into", 30, |g| {
+        let d = g.usize_in(5, 300);
+        let base = g.vec_f32(d, d + 1, -1.0, 1.0);
+        let v = g.vec_f32(d, d + 1, -1.0, 1.0);
+        let k = g.usize_in(1, d + 1);
+        let sv = top_k_sparse(&v, k);
+        let scale = g.f32_in(-2.0, 2.0);
+        let mut got = base.clone();
+        sv.add_into(&mut got, scale);
+        let sd = sv.to_dense();
+        for i in 0..d {
+            let want = base[i] + scale * sd[i];
+            assert!((got[i] - want).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_merged_sketch_estimates_mean_gradient() {
+    // End-to-end server aggregation property: estimates from the merged
+    // sketch approximate coordinates of the *mean* gradient.
+    check("merged estimates mean", 10, |g| {
+        let d = 3000;
+        let w = g.usize_in(2, 6);
+        let heavy_coord = g.usize_in(0, d);
+        let mut mean = vec![0f32; d];
+        let mut agg = CountSketch::zeros(ROWS, 4096, d, SEED);
+        for _ in 0..w {
+            let mut gr = g.heavy_vec(d, 0, 0.0, 0.05);
+            gr[heavy_coord] += 8.0;
+            for (m, &x) in mean.iter_mut().zip(&gr) {
+                *m += x / w as f32;
+            }
+            agg.add_scaled(&CountSketch::encode(ROWS, 4096, SEED, &gr), 1.0 / w as f32);
+        }
+        let est = agg.estimate(heavy_coord as u32);
+        assert!(
+            (est - mean[heavy_coord]).abs() < 0.5,
+            "est {est} vs mean {}",
+            mean[heavy_coord]
+        );
+    });
+}
+
+#[test]
+fn prop_sparsevec_from_pairs_sorts() {
+    check("from_pairs sorted", 30, |g| {
+        let d = 1000;
+        let n = g.usize_in(1, 50);
+        let mut used = std::collections::HashSet::new();
+        let mut pairs = Vec::new();
+        for _ in 0..n {
+            let i = g.usize_in(0, d) as u32;
+            if used.insert(i) {
+                pairs.push((i, g.f32_in(-1.0, 1.0)));
+            }
+        }
+        let sv = SparseVec::from_pairs(d, pairs);
+        assert!(sv.idx.windows(2).all(|w| w[0] < w[1]));
+    });
+}
