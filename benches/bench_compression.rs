@@ -1,15 +1,18 @@
 //! Strategy server-step cost comparison (no PJRT needed): how expensive
 //! is each method's aggregation + model update per round, at matched
-//! geometry (d=100k, W=10)? FetchSGD's server does strictly more work
-//! than the baselines (unsketch + top-k); this bench quantifies the
-//! overhead that the communication savings buy.
+//! geometry (d=100k, W=10)? Each bench runs the real server pipeline —
+//! begin_round → incremental absorb → finish — exactly as the round
+//! engine drives it. FetchSGD's server does strictly more work than the
+//! baselines (unsketch + top-k); this bench quantifies the overhead
+//! that the communication savings buy.
 
 use fetchsgd::bench_util::{bench, print_table};
-use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgd};
-use fetchsgd::compression::local_topk::LocalTopK;
-use fetchsgd::compression::true_topk::TrueTopK;
-use fetchsgd::compression::uncompressed::Uncompressed;
-use fetchsgd::compression::{ClientUpload, Strategy};
+use fetchsgd::compression::aggregate::run_server_round;
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::local_topk::LocalTopKServer;
+use fetchsgd::compression::true_topk::TrueTopKServer;
+use fetchsgd::compression::uncompressed::UncompressedServer;
+use fetchsgd::compression::{ClientUpload, ServerAggregator};
 use fetchsgd::sketch::topk::top_k_sparse;
 use fetchsgd::sketch::CountSketch;
 use fetchsgd::util::Rng;
@@ -30,6 +33,17 @@ fn random_grads() -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Uniform-size shim over the library's `run_server_round`.
+fn server_round(
+    strat: &mut dyn ServerAggregator,
+    uploads: Vec<ClientUpload>,
+    w: &mut [f32],
+    lr: f32,
+) {
+    let sizes = vec![1.0f32; uploads.len()];
+    run_server_round(strat, &sizes, uploads, w, lr).unwrap();
+}
+
 fn main() {
     let grads = random_grads();
     let mut results = Vec::new();
@@ -37,46 +51,49 @@ fn main() {
 
     // FetchSGD server step (uploads pre-sketched, as in production).
     {
-        let sketches: Vec<CountSketch> =
-            grads.iter().map(|g| CountSketch::encode(ROWS, COLS, SEED, g)).collect();
-        let mut strat =
-            FetchSgd::new(ROWS, COLS, SEED, D, K, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
-                .unwrap();
+        let sketches: Vec<CountSketch> = grads
+            .iter()
+            .map(|g| CountSketch::encode(ROWS, COLS, SEED, g).unwrap())
+            .collect();
+        let mut strat = FetchSgdServer::new(
+            ROWS, COLS, SEED, D, K, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+        )
+        .unwrap();
         results.push(bench("fetchsgd server (5x16384, k=1000)", 1, 8, || {
             let uploads: Vec<ClientUpload> =
                 sketches.iter().map(|s| ClientUpload::Sketch(s.clone())).collect();
-            strat.server_round(uploads, &mut w, 0.01).unwrap()
+            server_round(&mut strat, uploads, &mut w, 0.01)
         }));
     }
 
     // Local top-k server step.
     {
         let sparse: Vec<_> = grads.iter().map(|g| top_k_sparse(g, K)).collect();
-        let mut strat = LocalTopK::new(D, K, 0.9, true, false);
+        let mut strat = LocalTopKServer::new(D, 0.9, true);
         results.push(bench("local_topk server (k=1000)", 1, 8, || {
             let uploads: Vec<ClientUpload> =
                 sparse.iter().map(|s| ClientUpload::Sparse(s.clone())).collect();
-            strat.server_round(uploads, &mut w, 0.01).unwrap()
+            server_round(&mut strat, uploads, &mut w, 0.01)
         }));
     }
 
     // True top-k server step (dense error feedback).
     {
-        let mut strat = TrueTopK::new(D, K, 0.9, true);
+        let mut strat = TrueTopKServer::new(D, K, 0.9, true);
         results.push(bench("true_topk server (dense e+u)", 1, 8, || {
             let uploads: Vec<ClientUpload> =
                 grads.iter().map(|g| ClientUpload::Dense(g.clone())).collect();
-            strat.server_round(uploads, &mut w, 0.01).unwrap()
+            server_round(&mut strat, uploads, &mut w, 0.01)
         }));
     }
 
     // Uncompressed server step.
     {
-        let mut strat = Uncompressed::new(D, 0.9);
+        let mut strat = UncompressedServer::new(D, 0.9);
         results.push(bench("uncompressed server", 1, 8, || {
             let uploads: Vec<ClientUpload> =
                 grads.iter().map(|g| ClientUpload::Dense(g.clone())).collect();
-            strat.server_round(uploads, &mut w, 0.01).unwrap()
+            server_round(&mut strat, uploads, &mut w, 0.01)
         }));
     }
 

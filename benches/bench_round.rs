@@ -1,28 +1,110 @@
-//! End-to-end round latency (requires `make artifacts`).
+//! End-to-end round latency and round-engine scaling.
 //!
-//! Splits one federated round into its cost components: client compute
-//! (PJRT execution of the fused grad+sketch HLO), server sketch update,
-//! and data generation — establishing where the bottleneck sits (the
-//! paper's contribution is the coordinator; it must not dominate).
+//! Two sections:
+//!
+//! 1. **Engine throughput (no artifacts needed)** — a 100-client
+//!    FetchSGD cohort of simulated clients (synthetic gradient +
+//!    client-side sketch encode, the same CPU shape as the real client
+//!    step) driven through the parallel round engine at 1/2/4/N
+//!    threads. Reports rounds/s and speedup vs single-thread; the
+//!    shard-merge design keeps all of these bitwise identical.
+//! 2. **Artifact round decomposition (requires `make artifacts`)** —
+//!    client compute (PJRT execution of the fused grad+sketch HLO),
+//!    server sketch update, and data generation, establishing where the
+//!    bottleneck sits (the paper's contribution is the coordinator; it
+//!    must not dominate).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
-use fetchsgd::bench_util::{bench, print_table};
+use fetchsgd::bench_util::{bench, print_table, BenchResult};
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+use fetchsgd::compression::ServerAggregator;
+use fetchsgd::coordinator::engine;
 use fetchsgd::model::{build_dataset, DataScale};
 use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
 use fetchsgd::runtime::exec::run_client_step;
 use fetchsgd::runtime::Runtime;
 use fetchsgd::sketch::CountSketch;
 
+/// One simulated FetchSGD round (client compute + sharded aggregation +
+/// server finish) at a given worker count.
+fn engine_round_bench(threads: usize) -> anyhow::Result<BenchResult> {
+    const DIM: usize = 200_000;
+    const ROWS: usize = 5;
+    const COLS: usize = 4096;
+    const SEED: u64 = 7;
+    const COHORT: usize = 100;
+
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED)?;
+    let dataset = SimDataset { num_clients: 10_000 };
+    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 8 };
+    let mut server =
+        FetchSgdServer::new(ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")?;
+    let participants: Vec<usize> = (0..COHORT).collect();
+    let mut w = vec![0f32; DIM];
+    let mut round = 0u64;
+    Ok(bench(&format!("engine round W=100 d=200k threads={threads}"), 1, 5, || {
+        round += 1;
+        let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let out = engine::run_round(
+            &client,
+            &artifacts,
+            &dataset,
+            &participants,
+            &weights,
+            &server.upload_spec(),
+            &w,
+            0.1,
+            round,
+            threads,
+        )
+        .expect("sim round");
+        server.finish(out.merged, &mut w, 0.1).expect("server finish")
+    }))
+}
+
+fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts = vec![1usize, 2, 4];
+    // Workers pull whole shards, so thread counts above MAX_SHARDS are
+    // a no-op by design — cap the sweep there.
+    if cores > 4 {
+        counts.push(cores.min(engine::MAX_SHARDS));
+    }
+    counts.dedup();
+    let mut results = Vec::new();
+    let mut base = None;
+    for &t in &counts {
+        let r = engine_round_bench(t)?;
+        if t == 1 {
+            base = Some(r.mean_s);
+        }
+        if let Some(b) = base {
+            eprintln!(
+                "  threads={t:<3} {:>8.1} ms/round  speedup {:.2}x",
+                r.mean_s * 1e3,
+                b / r.mean_s
+            );
+        }
+        results.push(r);
+    }
+    Ok(results)
+}
+
 fn main() -> anyhow::Result<()> {
+    eprintln!("== round engine scaling (simulated 100-client fetchsgd cohort) ==");
+    let mut results = engine_scaling()?;
+
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("bench_round: artifacts/ missing — run `make artifacts` first (skipping)");
+        eprintln!("bench_round: artifacts/ missing — skipping PJRT round decomposition");
+        print_table("round latency", &results);
         return Ok(());
     }
-    let runtime = Rc::new(Runtime::cpu()?);
+    let runtime = Arc::new(Runtime::cpu()?);
     let manifest = Manifest::load(&dir)?;
-    let mut results = Vec::new();
 
     for task in ["smoke", "cifar10", "persona"] {
         if manifest.task(task).is_err() {
@@ -51,13 +133,15 @@ fn main() -> anyhow::Result<()> {
                 for x in g.iter_mut() {
                     *x = rng.next_gaussian() as f32;
                 }
-                CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &g)
+                CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &g).unwrap()
             })
             .collect();
-        let mut momentum = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
-        let mut error = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
+        let mut momentum =
+            CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed).unwrap();
+        let mut error = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed).unwrap();
         results.push(bench(&format!("{task}: server round W=8 k=1000"), 1, 6, || {
-            let mut round = CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed);
+            let mut round =
+                CountSketch::zeros(tm.sketch.rows, cols, tm.dim, tm.sketch.seed).unwrap();
             for s in &uploads {
                 round.add_scaled(s, 0.125);
             }

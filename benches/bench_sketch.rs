@@ -26,17 +26,17 @@ fn main() {
             2,
             8,
             d as u64,
-            || CountSketch::encode(5, 16384, 7, &g),
+            || CountSketch::encode(5, 16384, 7, &g).unwrap(),
         ));
     }
 
     // merge: W=100 sketch aggregation.
     {
         let sketches: Vec<CountSketch> = (0..100)
-            .map(|i| CountSketch::encode(5, 16384, 7, &random_vec(10_000, i)))
+            .map(|i| CountSketch::encode(5, 16384, 7, &random_vec(10_000, i)).unwrap())
             .collect();
         results.push(bench_throughput("merge W=100 (5x16384)", 2, 10, 100 * 5 * 16384, || {
-            let mut agg = CountSketch::zeros(5, 16384, 10_000, 7);
+            let mut agg = CountSketch::zeros(5, 16384, 10_000, 7).unwrap();
             for s in &sketches {
                 agg.add_scaled(s, 0.01);
             }
@@ -49,7 +49,7 @@ fn main() {
     // sort, coordinate-major access) kept for §Perf before/after.
     for &d in &[100_000usize, 1_000_000] {
         let g = random_vec(d, 3);
-        let s = CountSketch::encode(5, 16384, 7, &g);
+        let s = CountSketch::encode(5, 16384, 7, &g).unwrap();
         let mut out = vec![0f32; d];
         results.push(bench_throughput(
             &format!("estimate_all d={d} GENERIC (before)"),
@@ -77,7 +77,7 @@ fn main() {
 
     // zero-out of an extracted update.
     {
-        let mut s = CountSketch::encode(5, 16384, 7, &random_vec(1_000_000, 5));
+        let mut s = CountSketch::encode(5, 16384, 7, &random_vec(1_000_000, 5)).unwrap();
         let pairs: Vec<(u32, f32)> = (0..50_000u32).map(|i| (i * 17 % 1_000_000, 1.0)).collect();
         let mut dedup: Vec<(u32, f32)> = Vec::new();
         let mut seen = std::collections::HashSet::new();
@@ -97,11 +97,11 @@ fn main() {
     {
         let d = 100_000;
         let uploads: Vec<CountSketch> =
-            (0..20).map(|i| CountSketch::encode(5, 16384, 7, &random_vec(d, 100 + i))).collect();
-        let mut momentum = CountSketch::zeros(5, 16384, d, 7);
-        let mut error = CountSketch::zeros(5, 16384, d, 7);
+            (0..20).map(|i| CountSketch::encode(5, 16384, 7, &random_vec(d, 100 + i)).unwrap()).collect();
+        let mut momentum = CountSketch::zeros(5, 16384, d, 7).unwrap();
+        let mut error = CountSketch::zeros(5, 16384, d, 7).unwrap();
         results.push(bench("server round d=100k W=20 k=1000", 1, 8, || {
-            let mut round = CountSketch::zeros(5, 16384, d, 7);
+            let mut round = CountSketch::zeros(5, 16384, d, 7).unwrap();
             for s in &uploads {
                 round.add_scaled(s, 0.05);
             }

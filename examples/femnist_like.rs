@@ -12,7 +12,7 @@ use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
 use fetchsgd::coordinator::Trainer;
 use fetchsgd::model::DataScale;
 use fetchsgd::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn base() -> TrainConfig {
     TrainConfig {
@@ -35,11 +35,12 @@ fn base() -> TrainConfig {
         log_path: None,
         baseline_rounds: Some(40),
         verbose: false,
+        parallelism: 0,
     }
 }
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Rc::new(Runtime::cpu()?);
+    let runtime = Arc::new(Runtime::cpu()?);
     let mut results = Vec::new();
 
     let runs: Vec<(&str, usize, StrategyConfig)> = vec![

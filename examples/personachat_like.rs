@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         log_path: Some("results/e2e_loss_curve.jsonl".into()),
         baseline_rounds: Some(rounds),
         verbose: true,
+        parallelism: 0,
     };
 
     eprintln!("== e2e: FetchSGD finetune of {task} over 800 persona clients, {rounds} rounds ==");

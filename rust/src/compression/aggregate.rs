@@ -1,0 +1,286 @@
+//! Incremental, shardable upload aggregation.
+//!
+//! Every strategy's fan-in is a weighted sum `Σ_i λ_i · upload_i`
+//! (see `compression` module docs), so the merge machinery lives here
+//! once, strategy-agnostic: a [`RoundAccum`] absorbs uploads as they
+//! arrive — no `Vec<ClientUpload>` of the whole cohort is ever
+//! buffered — and accumulators produced by different workers reduce
+//! with [`reduce_shards`] in a fixed order.
+//!
+//! Determinism contract: for a fixed *shard layout* (how slots are
+//! assigned to shards, fixed by the engine independently of thread
+//! count), the merged result is bitwise identical no matter how many
+//! workers produced the shards, because (a) each shard absorbs its
+//! slots in increasing slot order, and (b) shards are reduced strictly
+//! in shard order. Floating-point addition order is therefore a pure
+//! function of the layout, never of scheduling.
+
+use anyhow::{bail, Result};
+
+use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
+use crate::sketch::CountSketch;
+
+enum Acc {
+    Sketch(CountSketch),
+    Dense(Vec<f32>),
+}
+
+/// A partial weighted sum of uploads (one worker's scratch, or the
+/// whole round's merged result).
+pub struct RoundAccum {
+    acc: Acc,
+    absorbed: usize,
+}
+
+impl RoundAccum {
+    pub fn new(spec: &UploadSpec) -> Result<RoundAccum> {
+        let acc = match spec {
+            UploadSpec::Sketch { rows, cols, dim, seed } => {
+                Acc::Sketch(CountSketch::zeros(*rows, *cols, *dim, *seed)?)
+            }
+            UploadSpec::Dense { dim } => Acc::Dense(vec![0f32; *dim]),
+        };
+        Ok(RoundAccum { acc, absorbed: 0 })
+    }
+
+    /// Number of uploads absorbed (across merges).
+    pub fn absorbed(&self) -> usize {
+        self.absorbed
+    }
+
+    /// `self += weight * upload`. Consumes the upload — nothing is
+    /// buffered.
+    pub fn absorb(&mut self, upload: ClientUpload, weight: f32) -> Result<()> {
+        match (&mut self.acc, upload) {
+            (Acc::Sketch(acc), ClientUpload::Sketch(s)) => {
+                if s.rows() != acc.rows()
+                    || s.cols() != acc.cols()
+                    || s.seed() != acc.seed()
+                    || s.dim() != acc.dim()
+                {
+                    bail!(
+                        "upload sketch {}x{} (seed {}, dim {}) incompatible with \
+                         aggregator {}x{} (seed {}, dim {})",
+                        s.rows(), s.cols(), s.seed(), s.dim(),
+                        acc.rows(), acc.cols(), acc.seed(), acc.dim()
+                    );
+                }
+                acc.add_scaled(&s, weight);
+            }
+            (Acc::Sketch(_), _) => bail!("aggregator expects sketch uploads"),
+            (Acc::Dense(acc), ClientUpload::Dense(g)) => {
+                if g.len() != acc.len() {
+                    bail!("dense upload dim {} != aggregator dim {}", g.len(), acc.len());
+                }
+                for (a, &x) in acc.iter_mut().zip(&g) {
+                    *a += weight * x;
+                }
+            }
+            (Acc::Dense(acc), ClientUpload::Sparse(sv)) => {
+                if sv.dim != acc.len() {
+                    bail!("sparse upload dim {} != aggregator dim {}", sv.dim, acc.len());
+                }
+                sv.add_into(acc, weight);
+            }
+            (Acc::Dense(_), ClientUpload::Sketch(_)) => {
+                bail!("aggregator expects dense/sparse uploads, got a sketch")
+            }
+        }
+        self.absorbed += 1;
+        Ok(())
+    }
+
+    /// The merged sketch (fetchsgd). Errors for dense aggregators.
+    pub fn into_sketch(self) -> Result<CountSketch> {
+        match self.acc {
+            Acc::Sketch(s) => Ok(s),
+            Acc::Dense(_) => bail!("round accumulator holds a dense sum, not a sketch"),
+        }
+    }
+
+    /// The merged dense vector (all baselines). Errors for sketch
+    /// aggregators.
+    pub fn into_dense(self) -> Result<Vec<f32>> {
+        match self.acc {
+            Acc::Dense(v) => Ok(v),
+            Acc::Sketch(_) => bail!("round accumulator holds a sketch, not a dense sum"),
+        }
+    }
+}
+
+/// Fan-in: reduce per-worker shard accumulators **in slice order** into
+/// one merged accumulator. Sketch shards reduce through
+/// [`CountSketch::merge_shards`]; dense shards fold elementwise.
+pub fn reduce_shards(shards: Vec<RoundAccum>) -> Result<RoundAccum> {
+    let mut iter = shards.into_iter();
+    let Some(first) = iter.next() else {
+        bail!("reduce_shards: no shards");
+    };
+    let mut absorbed = first.absorbed;
+    match first.acc {
+        Acc::Sketch(mut base) => {
+            let mut rest = Vec::new();
+            for sh in iter {
+                absorbed += sh.absorbed;
+                match sh.acc {
+                    Acc::Sketch(s) => rest.push(s),
+                    Acc::Dense(_) => bail!("mixed shard kinds in reduce_shards"),
+                }
+            }
+            base.merge_shards(&rest);
+            Ok(RoundAccum { acc: Acc::Sketch(base), absorbed })
+        }
+        Acc::Dense(mut base) => {
+            for sh in iter {
+                absorbed += sh.absorbed;
+                match sh.acc {
+                    Acc::Dense(v) => {
+                        if v.len() != base.len() {
+                            bail!("shard dim mismatch in reduce_shards");
+                        }
+                        for (a, &b) in base.iter_mut().zip(&v) {
+                            *a += b;
+                        }
+                    }
+                    Acc::Sketch(_) => bail!("mixed shard kinds in reduce_shards"),
+                }
+            }
+            Ok(RoundAccum { acc: Acc::Dense(base), absorbed })
+        }
+    }
+}
+
+/// Sequential convenience: absorb `uploads[i]` with `weights[i]`, in
+/// order, into a fresh accumulator. Used by strategy unit tests and the
+/// server-cost benches; the trainer goes through the round engine
+/// instead.
+pub fn accumulate_uploads(
+    spec: &UploadSpec,
+    uploads: Vec<ClientUpload>,
+    weights: &[f32],
+) -> Result<RoundAccum> {
+    if uploads.len() != weights.len() {
+        bail!("{} uploads but {} weights", uploads.len(), weights.len());
+    }
+    let mut acc = RoundAccum::new(spec)?;
+    for (u, &lam) in uploads.into_iter().zip(weights) {
+        acc.absorb(u, lam)?;
+    }
+    Ok(acc)
+}
+
+/// Sequential convenience driving one full server round —
+/// `begin_round → absorb each upload in order → finish` — exactly the
+/// pipeline the round engine runs in sharded form. Used by strategy
+/// unit tests and the server-cost benches so the contract lives in one
+/// place.
+pub fn run_server_round(
+    agg: &mut dyn ServerAggregator,
+    client_sizes: &[f32],
+    uploads: Vec<ClientUpload>,
+    w: &mut [f32],
+    lr: f32,
+) -> Result<RoundUpdate> {
+    let weights = agg.begin_round(client_sizes);
+    let merged = accumulate_uploads(&agg.upload_spec(), uploads, &weights)?;
+    agg.finish(merged, w, lr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::topk::SparseVec;
+
+    fn sketch_spec() -> UploadSpec {
+        UploadSpec::Sketch { rows: 3, cols: 128, dim: 200, seed: 11 }
+    }
+
+    #[test]
+    fn sketch_absorb_matches_direct_weighted_merge() {
+        let mut rng = crate::util::Rng::new(5);
+        let grads: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..200).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let uploads: Vec<ClientUpload> = grads
+            .iter()
+            .map(|g| ClientUpload::Sketch(CountSketch::encode(3, 128, 11, g).unwrap()))
+            .collect();
+        let acc = accumulate_uploads(&sketch_spec(), uploads, &[0.25; 4]).unwrap();
+        assert_eq!(acc.absorbed(), 4);
+        let merged = acc.into_sketch().unwrap();
+
+        let mut direct = CountSketch::zeros(3, 128, 200, 11).unwrap();
+        for g in &grads {
+            direct.add_scaled(&CountSketch::encode(3, 128, 11, g).unwrap(), 0.25);
+        }
+        for (a, b) in merged.table().iter().zip(direct.table()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_reduce_is_bitwise_stable_across_layout_reuse() {
+        // Same shard layout, different "thread counts" is a no-op at
+        // this layer: reducing the same shard list twice is identical.
+        let mut rng = crate::util::Rng::new(9);
+        let make_shards = |rng: &mut crate::util::Rng| {
+            (0..3)
+                .map(|_| {
+                    let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
+                    for _ in 0..2 {
+                        let g: Vec<f32> =
+                            (0..200).map(|_| rng.next_gaussian() as f32).collect();
+                        acc.absorb(
+                            ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap()),
+                            0.5,
+                        )
+                        .unwrap();
+                    }
+                    acc
+                })
+                .collect::<Vec<_>>()
+        };
+        let a = reduce_shards(make_shards(&mut rng)).unwrap();
+        let mut rng = crate::util::Rng::new(9);
+        let b = reduce_shards(make_shards(&mut rng)).unwrap();
+        assert_eq!(a.absorbed(), 6);
+        let (ta, tb) = (a.into_sketch().unwrap(), b.into_sketch().unwrap());
+        for (x, y) in ta.table().iter().zip(tb.table()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_accumulator_folds_sparse_and_dense() {
+        let spec = UploadSpec::Dense { dim: 6 };
+        let uploads = vec![
+            ClientUpload::Dense(vec![2.0, 0.0, 0.0, 0.0, 0.0, 2.0]),
+            ClientUpload::Sparse(SparseVec::from_pairs(6, vec![(1, 4.0), (5, -2.0)])),
+        ];
+        let acc = accumulate_uploads(&spec, uploads, &[0.5, 0.5]).unwrap();
+        let dense = acc.into_dense().unwrap();
+        assert_eq!(dense, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn kind_mismatches_are_rejected() {
+        let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
+        assert!(acc.absorb(ClientUpload::Dense(vec![0.0; 200]), 1.0).is_err());
+        let mut acc = RoundAccum::new(&UploadSpec::Dense { dim: 10 }).unwrap();
+        assert!(acc
+            .absorb(
+                ClientUpload::Sketch(CountSketch::zeros(3, 128, 10, 1).unwrap()),
+                1.0
+            )
+            .is_err());
+        assert!(acc.absorb(ClientUpload::Dense(vec![0.0; 4]), 1.0).is_err());
+        // wrong-geometry sketch upload
+        let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
+        assert!(acc
+            .absorb(
+                ClientUpload::Sketch(CountSketch::zeros(3, 128, 200, 999).unwrap()),
+                1.0
+            )
+            .is_err());
+    }
+}

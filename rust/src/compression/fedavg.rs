@@ -4,7 +4,9 @@
 //! `lax.scan` over pre-batched local data, entirely inside one HLO
 //! execution) and uploads the dense model delta; the server averages
 //! deltas weighted by local dataset size (paper §2.1) and applies them,
-//! optionally through a global momentum buffer (§5's ρ_g sweep).
+//! optionally through a global momentum buffer (§5's ρ_g sweep). The
+//! dataset-size weighting is exactly the per-slot weight vector
+//! [`FedAvgServer::begin_round`] hands the round engine.
 //!
 //! Communication: dense in both directions. FedAvg's compression in the
 //! paper comes from running fewer global epochs — the experiment driver
@@ -13,44 +15,32 @@
 
 use anyhow::Result;
 
-use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::compression::aggregate::RoundAccum;
+use crate::compression::{
+    ClientCompute, ClientResult, ClientUpload, RoundUpdate, ServerAggregator, UploadSpec,
+};
 use crate::runtime::artifact::TaskArtifacts;
 use crate::runtime::exec::{run_fedavg, Batch};
 use crate::runtime::Tensor;
 
-pub struct FedAvg {
-    dim: usize,
+/// Client half: K local SGD steps inside one HLO execution.
+pub struct FedAvgClient {
     local_steps: usize,
-    rho_g: f32,
-    momentum: Vec<f32>,
-    /// per-upload weights (client dataset sizes), set by the trainer
-    /// before server_round via `set_round_weights`.
-    round_weights: Vec<f32>,
 }
 
-impl FedAvg {
-    pub fn new(dim: usize, local_steps: usize, rho_g: f32) -> Self {
-        FedAvg { dim, local_steps, rho_g, momentum: vec![0f32; dim], round_weights: Vec::new() }
-    }
-
-    /// Weight this round's uploads by local dataset size (FedAvg's
-    /// weighted average). Must align with the upload order.
-    pub fn set_round_weights(&mut self, weights: Vec<f32>) {
-        self.round_weights = weights;
+impl FedAvgClient {
+    pub fn new(local_steps: usize) -> Self {
+        FedAvgClient { local_steps }
     }
 }
 
-impl Strategy for FedAvg {
+impl ClientCompute for FedAvgClient {
     fn name(&self) -> &'static str {
         "fedavg"
     }
 
     fn wants_stacked_batches(&self) -> Option<usize> {
         Some(self.local_steps)
-    }
-
-    fn begin_round(&mut self, client_sizes: &[f32]) {
-        self.set_round_weights(client_sizes.to_vec());
     }
 
     fn client_round(
@@ -67,32 +57,44 @@ impl Strategy for FedAvg {
         let (loss, delta) = run_fedavg(&exe, w, xs, ys, masks, lr)?;
         Ok(ClientResult { loss, upload: ClientUpload::Dense(delta) })
     }
+}
 
-    fn server_round(
-        &mut self,
-        uploads: Vec<ClientUpload>,
-        w: &mut [f32],
-        _lr: f32,
-    ) -> Result<RoundUpdate> {
-        let n = uploads.len();
-        let weights: Vec<f32> = if self.round_weights.len() == n {
-            let total: f32 = self.round_weights.iter().sum();
-            self.round_weights.iter().map(|&x| x / total.max(1e-9)).collect()
+/// Server half: dataset-size-weighted delta average + optional global
+/// momentum.
+pub struct FedAvgServer {
+    dim: usize,
+    rho_g: f32,
+    momentum: Vec<f32>,
+}
+
+impl FedAvgServer {
+    pub fn new(dim: usize, rho_g: f32) -> Self {
+        FedAvgServer { dim, rho_g, momentum: vec![0f32; dim] }
+    }
+}
+
+impl ServerAggregator for FedAvgServer {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32> {
+        // FedAvg's weighted average: λ_i = n_i / Σ n_j.
+        let total: f32 = client_sizes.iter().sum();
+        if total > 0.0 {
+            client_sizes.iter().map(|&x| x / total).collect()
         } else {
-            vec![1.0 / n.max(1) as f32; n]
-        };
-        let mut mean = vec![0f32; self.dim];
-        for (u, wt) in uploads.into_iter().zip(weights) {
-            match u {
-                ClientUpload::Dense(delta) => {
-                    for (m, &d) in mean.iter_mut().zip(&delta) {
-                        *m += wt * d;
-                    }
-                }
-                _ => anyhow::bail!("fedavg expects dense delta uploads"),
-            }
+            let n = client_sizes.len().max(1) as f32;
+            vec![1.0 / n; client_sizes.len()]
         }
-        self.round_weights.clear();
+    }
+
+    fn upload_spec(&self) -> UploadSpec {
+        UploadSpec::Dense { dim: self.dim }
+    }
+
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], _lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.into_dense()?;
         if self.rho_g > 0.0 {
             for (m, &d) in self.momentum.iter_mut().zip(&mean) {
                 *m = self.rho_g * *m + d;
@@ -112,32 +114,41 @@ impl Strategy for FedAvg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::run_server_round;
+
+    fn server_round_weighted(
+        s: &mut FedAvgServer,
+        sizes: &[f32],
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+    ) -> RoundUpdate {
+        run_server_round(s, sizes, uploads, w, 1.0).unwrap()
+    }
 
     #[test]
     fn weighted_average_of_deltas() {
-        let mut s = FedAvg::new(2, 2, 0.0);
+        let mut s = FedAvgServer::new(2, 0.0);
         let mut w = vec![0f32; 2];
-        s.set_round_weights(vec![3.0, 1.0]);
         let u = vec![
             ClientUpload::Dense(vec![4.0, 0.0]),
             ClientUpload::Dense(vec![0.0, 4.0]),
         ];
-        s.server_round(u, &mut w, 1.0).unwrap();
+        server_round_weighted(&mut s, &[3.0, 1.0], u, &mut w);
         assert_eq!(w, vec![-3.0, -1.0]);
     }
 
     #[test]
-    fn unweighted_fallback() {
-        let mut s = FedAvg::new(1, 2, 0.0);
+    fn uniform_fallback_when_sizes_are_zero() {
+        let mut s = FedAvgServer::new(1, 0.0);
         let mut w = vec![0f32];
         let u = vec![ClientUpload::Dense(vec![2.0]), ClientUpload::Dense(vec![4.0])];
-        s.server_round(u, &mut w, 1.0).unwrap();
+        server_round_weighted(&mut s, &[0.0, 0.0], u, &mut w);
         assert_eq!(w, vec![-3.0]);
     }
 
     #[test]
     fn wants_stacked() {
-        let s = FedAvg::new(1, 5, 0.0);
-        assert_eq!(s.wants_stacked_batches(), Some(5));
+        let c = FedAvgClient::new(5);
+        assert_eq!(c.wants_stacked_batches(), Some(5));
     }
 }

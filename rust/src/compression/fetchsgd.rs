@@ -17,10 +17,20 @@
 //! Momentum factor masking (Lin et al. 2017, used by the paper for all
 //! methods) zeroes the momentum signal at Δ's coordinates — in sketch
 //! space, by zeroing the cells of `S_u` that `S(Δ)` touches.
+//!
+//! Split per the `compression` module contract: [`FetchSgdClient`] is
+//! the stateless per-client map (runs on the engine's worker pool);
+//! [`FetchSgdServer`] consumes the round's merged sketch `S^t` — the
+//! `(1/W) Σ S(g_i)` fan-in happens incrementally in the engine's shard
+//! accumulators, which is exactly the linearity the paper's aggregator
+//! exploits.
 
 use anyhow::{Context, Result};
 
-use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::compression::aggregate::RoundAccum;
+use crate::compression::{
+    ClientCompute, ClientResult, ClientUpload, RoundUpdate, ServerAggregator, UploadSpec,
+};
 use crate::runtime::artifact::TaskArtifacts;
 use crate::runtime::exec::{run_client_step, Batch};
 use crate::runtime::Tensor;
@@ -36,59 +46,20 @@ pub enum ErrorUpdate {
     Subtract,
 }
 
-pub struct FetchSgd {
+/// Client half: execute the fused grad+sketch artifact for one client.
+pub struct FetchSgdClient {
     rows: usize,
     cols: usize,
     seed: u64,
-    dim: usize,
-    k: usize,
-    rho: f32,
-    error_update: ErrorUpdate,
-    masking: bool,
-    momentum: CountSketch,
-    error: Box<dyn ErrorAccumulator>,
-    /// scratch for merged round sketch
-    round: CountSketch,
 }
 
-impl FetchSgd {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        rows: usize,
-        cols: usize,
-        seed: u64,
-        dim: usize,
-        k: usize,
-        rho: f32,
-        error_update: ErrorUpdate,
-        masking: bool,
-        error_window: &str,
-    ) -> Result<Self> {
-        let momentum = CountSketch::zeros(rows, cols, dim, seed);
-        let error = make_accumulator(error_window, rows, cols, dim, seed)
-            .context("building error accumulator")?;
-        let round = CountSketch::zeros(rows, cols, dim, seed);
-        Ok(FetchSgd {
-            rows,
-            cols,
-            seed,
-            dim,
-            k,
-            rho,
-            error_update,
-            masking,
-            momentum,
-            error,
-            round,
-        })
-    }
-
-    pub fn sketch_cells(&self) -> usize {
-        self.rows * self.cols
+impl FetchSgdClient {
+    pub fn new(rows: usize, cols: usize, seed: u64) -> Self {
+        FetchSgdClient { rows, cols, seed }
     }
 }
 
-impl Strategy for FetchSgd {
+impl ClientCompute for FetchSgdClient {
     fn name(&self) -> &'static str {
         "fetchsgd"
     }
@@ -106,26 +77,78 @@ impl Strategy for FetchSgd {
         let (loss, sketch) = run_client_step(&exe, w, batch, self.rows, self.cols, self.seed)?;
         Ok(ClientResult { loss, upload: ClientUpload::Sketch(sketch) })
     }
+}
 
-    fn server_round(
-        &mut self,
-        uploads: Vec<ClientUpload>,
-        w: &mut [f32],
-        lr: f32,
-    ) -> Result<RoundUpdate> {
+/// Server half: sketch-space momentum + error feedback + top-k extract.
+pub struct FetchSgdServer {
+    rows: usize,
+    cols: usize,
+    seed: u64,
+    dim: usize,
+    k: usize,
+    rho: f32,
+    error_update: ErrorUpdate,
+    masking: bool,
+    momentum: CountSketch,
+    error: Box<dyn ErrorAccumulator>,
+}
+
+impl FetchSgdServer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        dim: usize,
+        k: usize,
+        rho: f32,
+        error_update: ErrorUpdate,
+        masking: bool,
+        error_window: &str,
+    ) -> Result<Self> {
+        let momentum = CountSketch::zeros(rows, cols, dim, seed)?;
+        let error = make_accumulator(error_window, rows, cols, dim, seed)
+            .context("building error accumulator")?;
+        Ok(FetchSgdServer {
+            rows,
+            cols,
+            seed,
+            dim,
+            k,
+            rho,
+            error_update,
+            masking,
+            momentum,
+            error,
+        })
+    }
+
+    pub fn sketch_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+impl ServerAggregator for FetchSgdServer {
+    fn name(&self) -> &'static str {
+        "fetchsgd"
+    }
+
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32> {
+        // S^t = (1/W) Σ S(g_i) — uniform mean, by sketch linearity.
+        let w = client_sizes.len().max(1) as f32;
+        vec![1.0 / w; client_sizes.len()]
+    }
+
+    fn upload_spec(&self) -> UploadSpec {
+        UploadSpec::Sketch { rows: self.rows, cols: self.cols, dim: self.dim, seed: self.seed }
+    }
+
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
         assert_eq!(w.len(), self.dim);
-        let w_count = uploads.len().max(1) as f32;
-        // S^t = (1/W) Σ S(g_i) — linearity of the sketch.
-        self.round.clear();
-        for u in uploads {
-            match u {
-                ClientUpload::Sketch(s) => self.round.add_scaled(&s, 1.0 / w_count),
-                _ => anyhow::bail!("fetchsgd expects sketch uploads"),
-            }
-        }
+        let round = merged.into_sketch()?;
         // Momentum in sketch space.
         self.momentum.scale(self.rho);
-        self.momentum.add_scaled(&self.round, 1.0);
+        self.momentum.add_scaled(&round, 1.0);
         // Error feedback in sketch space.
         self.error.add_scaled(&self.momentum, lr);
         // Extract Δ and apply the error update rule.
@@ -148,7 +171,19 @@ impl Strategy for FetchSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::run_server_round;
     use crate::sketch::CountSketch;
+
+    /// Uniform-size shim over [`run_server_round`] (no PJRT needed).
+    fn server_round(
+        strat: &mut FetchSgdServer,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> RoundUpdate {
+        let sizes = vec![1.0f32; uploads.len()];
+        run_server_round(strat, &sizes, uploads, w, lr).unwrap()
+    }
 
     /// Drive the server side with hand-built sketches (no PJRT needed):
     /// a persistent heavy gradient coordinate must end up dominating the
@@ -157,7 +192,7 @@ mod tests {
     fn server_extracts_persistent_signal() {
         let (rows, cols, seed, d, k) = (5, 512, 42, 2000, 4);
         let mut strat =
-            FetchSgd::new(rows, cols, seed, d, k, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
+            FetchSgdServer::new(rows, cols, seed, d, k, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
                 .unwrap();
         let mut w = vec![0f32; d];
         let mut total_update_at_7 = 0.0f32;
@@ -168,10 +203,10 @@ mod tests {
                     let mut g = vec![0f32; d];
                     g[7] = 1.0;
                     g[100] = 0.01;
-                    ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g))
+                    ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g).unwrap())
                 })
                 .collect();
-            strat.server_round(uploads, &mut w, 0.1).unwrap();
+            server_round(&mut strat, uploads, &mut w, 0.1);
             total_update_at_7 = -w[7];
         }
         assert!(total_update_at_7 > 0.1, "coordinate 7 should be repeatedly extracted");
@@ -184,15 +219,17 @@ mod tests {
     fn momentum_accelerates_persistent_direction() {
         let (rows, cols, seed, d, k) = (5, 512, 7, 500, 2);
         let run = |rho: f32| {
-            let mut strat =
-                FetchSgd::new(rows, cols, seed, d, k, rho, ErrorUpdate::ZeroOut, false, "vanilla")
-                    .unwrap();
+            let mut strat = FetchSgdServer::new(
+                rows, cols, seed, d, k, rho, ErrorUpdate::ZeroOut, false, "vanilla",
+            )
+            .unwrap();
             let mut w = vec![0f32; d];
             for _ in 0..8 {
                 let mut g = vec![0f32; d];
                 g[3] = 1.0;
-                let u = vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g))];
-                strat.server_round(u, &mut w, 0.1).unwrap();
+                let u =
+                    vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g).unwrap())];
+                server_round(&mut strat, u, &mut w, 0.1);
             }
             -w[3]
         };
@@ -209,12 +246,12 @@ mod tests {
         for update in [ErrorUpdate::ZeroOut, ErrorUpdate::Subtract] {
             let (rows, cols, seed, d, k) = (5, 512, 3, 300, 1);
             let mut strat =
-                FetchSgd::new(rows, cols, seed, d, k, 0.0, update, false, "vanilla").unwrap();
+                FetchSgdServer::new(rows, cols, seed, d, k, 0.0, update, false, "vanilla").unwrap();
             let mut w = vec![0f32; d];
             let mut g = vec![0f32; d];
             g[42] = 2.0;
-            let u = vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g))];
-            let up = strat.server_round(u, &mut w, 1.0).unwrap();
+            let u = vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g).unwrap())];
+            let up = server_round(&mut strat, u, &mut w, 1.0);
             match up {
                 RoundUpdate::Sparse(sv) => assert_eq!(sv.idx, vec![42]),
                 _ => panic!("expected sparse update"),
@@ -229,7 +266,7 @@ mod tests {
         // accumulate in S_e and eventually be extracted.
         let (rows, cols, seed, d) = (5, 1024, 11, 1000);
         let mut strat =
-            FetchSgd::new(rows, cols, seed, d, 1, 0.0, ErrorUpdate::ZeroOut, false, "vanilla")
+            FetchSgdServer::new(rows, cols, seed, d, 1, 0.0, ErrorUpdate::ZeroOut, false, "vanilla")
                 .unwrap();
         let mut w = vec![0f32; d];
         let mut extracted_weak = false;
@@ -237,8 +274,8 @@ mod tests {
             let mut g = vec![0f32; d];
             g[5] = 0.3; // weak persistent signal
             g[800 + t] = 1.0; // strong one-shot signal at varying coords
-            let u = vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g))];
-            let up = strat.server_round(u, &mut w, 1.0).unwrap();
+            let u = vec![ClientUpload::Sketch(CountSketch::encode(rows, cols, seed, &g).unwrap())];
+            let up = server_round(&mut strat, u, &mut w, 1.0);
             if let RoundUpdate::Sparse(sv) = up {
                 if sv.idx.contains(&5) {
                     extracted_weak = true;
@@ -251,13 +288,14 @@ mod tests {
     #[test]
     fn sliding_window_accumulator_variant_runs() {
         let mut strat =
-            FetchSgd::new(3, 256, 5, 200, 2, 0.9, ErrorUpdate::ZeroOut, true, "ring:4").unwrap();
+            FetchSgdServer::new(3, 256, 5, 200, 2, 0.9, ErrorUpdate::ZeroOut, true, "ring:4")
+                .unwrap();
         let mut w = vec![0f32; 200];
         for _ in 0..5 {
             let mut g = vec![0f32; 200];
             g[9] = 1.0;
-            let u = vec![ClientUpload::Sketch(CountSketch::encode(3, 256, 5, &g))];
-            strat.server_round(u, &mut w, 0.5).unwrap();
+            let u = vec![ClientUpload::Sketch(CountSketch::encode(3, 256, 5, &g).unwrap())];
+            server_round(&mut strat, u, &mut w, 0.5);
         }
         assert!(w[9] < 0.0);
     }

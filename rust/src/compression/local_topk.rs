@@ -4,55 +4,53 @@
 //! artifact) and uploads only its k largest-magnitude entries. The
 //! server averages the sparse uploads (the sum is generally much denser
 //! than k — the paper's point about poor download compression), applies
-//! optional *global* momentum `ρ_g ∈ {0, 0.9}` (paper §5), momentum
-//! factor masking, and a dense-ish sparse update.
+//! optional *global* momentum `ρ_g ∈ {0, 0.9}` (paper §5), and a
+//! dense-ish sparse update.
 //!
 //! Local error accumulation is optional and OFF by default: it requires
 //! client state, which the paper argues is infeasible when clients
 //! participate once (§2.2); the flag exists for ablations in the regime
-//! where clients do re-participate.
+//! where clients do re-participate. The per-client error vectors live
+//! behind a mutex on the (otherwise stateless, `Send + Sync`) client
+//! half, since workers read them concurrently.
 
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
-use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::compression::aggregate::RoundAccum;
+use crate::compression::{
+    ClientCompute, ClientResult, ClientUpload, RoundUpdate, ServerAggregator, UploadSpec,
+};
 use crate::runtime::artifact::TaskArtifacts;
 use crate::runtime::exec::{run_client_grad, Batch};
 use crate::runtime::Tensor;
 use crate::sketch::topk::{top_k_sparse, SparseVec};
 
-pub struct LocalTopK {
-    dim: usize,
+/// Client half: dense gradient → top-k sparse upload.
+pub struct LocalTopKClient {
     k: usize,
-    /// global (server-side) momentum ρ_g; 0 disables.
-    rho_g: f32,
-    /// Reserved for the stateful client-side-momentum variant; the
-    /// stateless server path intentionally does not mask (see the NOTE
-    /// in `server_round`).
-    #[allow(dead_code)]
-    masking: bool,
     /// local error accumulation (requires client state; default off).
     local_error: bool,
-    momentum: Vec<f32>,
-    /// per-client error vectors, only if local_error
-    errors: HashMap<usize, Vec<f32>>,
+    /// per-client error vectors, only if local_error (ablation only).
+    errors: Mutex<HashMap<usize, Vec<f32>>>,
 }
 
-impl LocalTopK {
-    pub fn new(dim: usize, k: usize, rho_g: f32, masking: bool, local_error: bool) -> Self {
-        LocalTopK {
-            dim,
-            k,
-            rho_g,
-            masking,
-            local_error,
-            momentum: vec![0f32; dim],
-            errors: HashMap::new(),
+impl LocalTopKClient {
+    pub fn new(k: usize, local_error: bool) -> Self {
+        LocalTopKClient { k, local_error, errors: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record client-side error for the local_error ablation (called
+    /// between rounds; client_round itself stays read-only).
+    pub fn record_local_error(&self, client: usize, grad_minus_sent: Vec<f32>) {
+        if self.local_error {
+            self.errors.lock().expect("error map poisoned").insert(client, grad_minus_sent);
         }
     }
 }
 
-impl Strategy for LocalTopK {
+impl ClientCompute for LocalTopKClient {
     fn name(&self) -> &'static str {
         "local_topk"
     }
@@ -69,7 +67,7 @@ impl Strategy for LocalTopK {
         let exe = artifacts.executable("client_grad")?;
         let (loss, mut grad) = run_client_grad(&exe, w, batch)?;
         if self.local_error {
-            if let Some(e) = self.errors.get(&client) {
+            if let Some(e) = self.errors.lock().expect("error map poisoned").get(&client) {
                 for (g, &ev) in grad.iter_mut().zip(e) {
                     *g += ev;
                 }
@@ -78,29 +76,56 @@ impl Strategy for LocalTopK {
         let sparse = top_k_sparse(&grad, self.k);
         Ok(ClientResult { loss, upload: ClientUpload::Sparse(sparse) })
     }
+}
 
-    fn server_round(
-        &mut self,
-        uploads: Vec<ClientUpload>,
-        w: &mut [f32],
-        lr: f32,
-    ) -> Result<RoundUpdate> {
-        let count = uploads.len().max(1) as f32;
-        let mut mean = vec![0f32; self.dim];
-        for u in uploads {
-            match u {
-                ClientUpload::Sparse(sv) => sv.add_into(&mut mean, 1.0 / count),
-                _ => anyhow::bail!("local_topk expects sparse uploads"),
-            }
-        }
+/// Server half: mean of sparse uploads + optional global momentum.
+pub struct LocalTopKServer {
+    dim: usize,
+    /// global (server-side) momentum ρ_g; 0 disables.
+    rho_g: f32,
+    /// Reserved for the stateful client-side-momentum variant; the
+    /// stateless server path intentionally does not mask (see the NOTE
+    /// in `finish`).
+    #[allow(dead_code)]
+    masking: bool,
+    momentum: Vec<f32>,
+}
+
+impl LocalTopKServer {
+    pub fn new(dim: usize, rho_g: f32, masking: bool) -> Self {
+        LocalTopKServer { dim, rho_g, masking, momentum: vec![0f32; dim] }
+    }
+
+    #[cfg(test)]
+    fn momentum(&self) -> &[f32] {
+        &self.momentum
+    }
+}
+
+impl ServerAggregator for LocalTopKServer {
+    fn name(&self) -> &'static str {
+        "local_topk"
+    }
+
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32> {
+        let w = client_sizes.len().max(1) as f32;
+        vec![1.0 / w; client_sizes.len()]
+    }
+
+    fn upload_spec(&self) -> UploadSpec {
+        UploadSpec::Dense { dim: self.dim }
+    }
+
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.into_dense()?;
         // Global momentum on the aggregated sparse update.
-        let update: Vec<f32> = if self.rho_g > 0.0 {
+        let update: &[f32] = if self.rho_g > 0.0 {
             for (m, &g) in self.momentum.iter_mut().zip(&mean) {
                 *m = self.rho_g * *m + g;
             }
-            self.momentum.clone()
+            &self.momentum
         } else {
-            mean
+            &mean
         };
         // The broadcast update: non-zero coords of `update` scaled by lr.
         let mut pairs = Vec::new();
@@ -126,28 +151,28 @@ impl Strategy for LocalTopK {
     }
 }
 
-/// Record client-side error for the local_error ablation (called by the
-/// trainer after the round so the strategy remains `&self` in
-/// client_round).
-impl LocalTopK {
-    pub fn record_local_error(&mut self, client: usize, grad_minus_sent: Vec<f32>) {
-        if self.local_error {
-            self.errors.insert(client, grad_minus_sent);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::run_server_round;
+
+    fn server_round(
+        s: &mut LocalTopKServer,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> RoundUpdate {
+        let sizes = vec![1.0f32; uploads.len()];
+        run_server_round(s, &sizes, uploads, w, lr).unwrap()
+    }
 
     #[test]
     fn server_averages_sparse_uploads() {
-        let mut s = LocalTopK::new(10, 2, 0.0, false, false);
+        let mut s = LocalTopKServer::new(10, 0.0, false);
         let mut w = vec![0f32; 10];
         let u1 = ClientUpload::Sparse(SparseVec::from_pairs(10, vec![(1, 2.0), (3, -4.0)]));
         let u2 = ClientUpload::Sparse(SparseVec::from_pairs(10, vec![(1, 2.0), (5, 6.0)]));
-        let up = s.server_round(vec![u1, u2], &mut w, 0.5).unwrap();
+        let up = server_round(&mut s, vec![u1, u2], &mut w, 0.5);
         // mean: idx1=2.0, idx3=-2.0, idx5=3.0; update = lr*mean
         assert!((w[1] - -1.0).abs() < 1e-6);
         assert!((w[3] - 1.0).abs() < 1e-6);
@@ -162,7 +187,7 @@ mod tests {
     fn union_of_disjoint_topk_is_denser_than_k() {
         // The paper's observation: summing sparse gradients from clients
         // with very different data gives a nearly dense update.
-        let mut s = LocalTopK::new(100, 5, 0.0, false, false);
+        let mut s = LocalTopKServer::new(100, 0.0, false);
         let mut w = vec![0f32; 100];
         let uploads: Vec<ClientUpload> = (0..10)
             .map(|c| {
@@ -171,7 +196,7 @@ mod tests {
                 ClientUpload::Sparse(SparseVec::from_pairs(100, pairs))
             })
             .collect();
-        let up = s.server_round(uploads, &mut w, 1.0).unwrap();
+        let up = server_round(&mut s, uploads, &mut w, 1.0);
         assert_eq!(up.nnz(100), 50, "disjoint supports union");
     }
 
@@ -179,15 +204,25 @@ mod tests {
     fn global_momentum_persists_and_amplifies() {
         // Regression test: masking must NOT nullify global momentum (the
         // update support covers the whole momentum support, so masking
-        // there would silently disable ρ_g — see server_round NOTE).
-        let mut s = LocalTopK::new(4, 1, 0.9, true, false);
+        // there would silently disable ρ_g — see the NOTE in `finish`).
+        let mut s = LocalTopKServer::new(4, 0.9, true);
         let mut w = vec![0f32; 4];
         for _ in 0..3 {
             let u = ClientUpload::Sparse(SparseVec::from_pairs(4, vec![(2, 1.0)]));
-            s.server_round(vec![u], &mut w, 1.0).unwrap();
+            server_round(&mut s, vec![u], &mut w, 1.0);
         }
-        assert!(s.momentum[2] > 1.5, "momentum should accumulate: {}", s.momentum[2]);
+        assert!(s.momentum()[2] > 1.5, "momentum should accumulate: {}", s.momentum()[2]);
         // momentum path moved w further than 3 plain steps would
         assert!(w[2] < -3.0, "w[2]={}", w[2]);
+    }
+
+    #[test]
+    fn local_error_map_is_thread_safe_and_gated() {
+        let c = LocalTopKClient::new(3, false);
+        c.record_local_error(0, vec![1.0]);
+        assert!(c.errors.lock().unwrap().is_empty(), "disabled flag must not store state");
+        let c = LocalTopKClient::new(3, true);
+        c.record_local_error(0, vec![1.0]);
+        assert_eq!(c.errors.lock().unwrap().len(), 1);
     }
 }

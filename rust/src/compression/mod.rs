@@ -1,6 +1,25 @@
 //! Compression strategies: FetchSGD and every baseline the paper
-//! compares against, behind a common [`Strategy`] interface so the
-//! coordinator's round loop is strategy-agnostic.
+//! compares against.
+//!
+//! Each strategy is split into two halves, mirroring where the work
+//! physically runs in a federated deployment:
+//!
+//! - [`ClientCompute`] — the stateless, `Send + Sync` per-client map:
+//!   `(artifacts, weights, batch) -> ClientUpload`. The round engine
+//!   (`crate::coordinator::engine`) fans these out over a worker pool.
+//! - [`ServerAggregator`] — the stateful server half: it declares the
+//!   shape of the uploads it consumes ([`UploadSpec`]) and the per-slot
+//!   aggregation weights ([`ServerAggregator::begin_round`]), the engine
+//!   merges uploads incrementally into shard accumulators
+//!   ([`aggregate::RoundAccum`]) as they arrive, and
+//!   [`ServerAggregator::finish`] turns the merged weighted sum into a
+//!   model update (momentum, error feedback, top-k — the strategy's
+//!   actual math).
+//!
+//! Every strategy's fan-in is a *weighted sum* of uploads (FetchSGD:
+//! uniform `1/W` over sketches — sketch linearity; FedAvg: dataset-size
+//! weights over dense deltas; top-k/uncompressed: uniform mean), which
+//! is what makes the merge step strategy-agnostic and shardable.
 //!
 //! | strategy       | client compute artifact   | upload            | server state |
 //! |----------------|---------------------------|-------------------|--------------|
@@ -17,15 +36,18 @@
 //! their last participation) as a stricter alternative.
 
 pub mod accounting;
+pub mod aggregate;
 pub mod fedavg;
 pub mod fetchsgd;
 pub mod local_topk;
+pub mod sim;
 pub mod timing;
 pub mod true_topk;
 pub mod uncompressed;
 
 use anyhow::Result;
 
+use crate::compression::aggregate::RoundAccum;
 use crate::runtime::artifact::TaskArtifacts;
 use crate::runtime::exec::Batch;
 use crate::sketch::{CountSketch, SparseVec};
@@ -78,14 +100,30 @@ pub struct ClientResult {
     pub upload: ClientUpload,
 }
 
-/// A federated optimization strategy: how clients compress, how the
-/// server aggregates and updates the model.
-pub trait Strategy {
+/// Shape of a strategy's uploads — what the engine pre-allocates for
+/// shard accumulation. Sparse uploads fold into a dense accumulator
+/// (their weighted sum is generally much denser than any one upload).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum UploadSpec {
+    Sketch { rows: usize, cols: usize, dim: usize, seed: u64 },
+    Dense { dim: usize },
+}
+
+/// The client half of a strategy: one client's local work for a round.
+///
+/// Implementations must be stateless with respect to the round (`&self`,
+/// `Send + Sync`): the engine calls them concurrently from worker
+/// threads. `lr` is the current scheduled learning rate (used by
+/// FedAvg's local steps; sketch/gradient methods apply lr on the
+/// server).
+pub trait ClientCompute: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Execute one client's local work for this round. `lr` is the
-    /// current scheduled learning rate (used by FedAvg's local steps;
-    /// sketch/gradient methods apply lr on the server).
+    /// Whether this strategy needs stacked FedAvg-style local batches.
+    fn wants_stacked_batches(&self) -> Option<usize> {
+        None
+    }
+
     fn client_round(
         &self,
         artifacts: &TaskArtifacts,
@@ -95,18 +133,25 @@ pub trait Strategy {
         stacked: Option<(crate::runtime::Tensor, crate::runtime::Tensor, crate::runtime::Tensor)>,
         lr: f32,
     ) -> Result<ClientResult>;
+}
 
-    /// Whether this strategy needs stacked FedAvg-style local batches.
-    fn wants_stacked_batches(&self) -> Option<usize> {
-        None
-    }
+/// The server half of a strategy: consumes the round's merged weighted
+/// upload sum and updates the model.
+pub trait ServerAggregator: Send {
+    fn name(&self) -> &'static str;
 
-    /// Called before client work each round with the participants' local
-    /// dataset sizes (FedAvg uses them as aggregation weights).
-    fn begin_round(&mut self, _client_sizes: &[f32]) {}
+    /// Start a round. `client_sizes` are the participants' local dataset
+    /// sizes, in slot order; the return value is the per-slot
+    /// aggregation weight `λ_i` such that the strategy consumes
+    /// `Σ_i λ_i · upload_i` (FedAvg weights by dataset size, everything
+    /// else averages uniformly).
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32>;
 
-    /// Aggregate uploads and update `w` in place; returns the broadcast
-    /// update for download accounting.
-    fn server_round(&mut self, uploads: Vec<ClientUpload>, w: &mut [f32], lr: f32)
-        -> Result<RoundUpdate>;
+    /// The upload shape this aggregator consumes (drives shard scratch
+    /// allocation and upload validation in [`aggregate::RoundAccum`]).
+    fn upload_spec(&self) -> UploadSpec;
+
+    /// Consume the merged weighted sum, update `w` in place, and return
+    /// the broadcast update for download accounting.
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate>;
 }

@@ -1,0 +1,203 @@
+//! Simulated clients and dataset: drive the round engine with no PJRT
+//! backend and no AOT artifacts.
+//!
+//! Used by `benches/bench_round.rs` (single- vs multi-thread round
+//! throughput) and `rust/tests/parallel_determinism.rs`. A sim client
+//! synthesizes a deterministic pseudo-gradient from
+//! `(client id, round seed)` — heavy planted coordinates over Gaussian
+//! noise, the regime FetchSGD targets — and uploads it in the
+//! strategy's wire format. Every value is a pure function of the seeds,
+//! so runs are bitwise reproducible at any parallelism.
+//!
+//! The round seed travels to the client through the [`Batch`] the
+//! dataset hands the engine ([`SimDataset`] packs it into an i32 tensor;
+//! [`batch_round_seed`] unpacks it), mirroring how real datasets
+//! decorrelate batches across rounds.
+
+use anyhow::Result;
+
+use crate::compression::{ClientCompute, ClientResult, ClientUpload};
+use crate::data::FedDataset;
+use crate::runtime::artifact::{DataSpec, SketchSpec, TaskArtifacts, TaskManifest};
+use crate::runtime::exec::Batch;
+use crate::runtime::Tensor;
+use crate::sketch::CountSketch;
+use crate::util::rng::{derive_seed, Rng};
+
+/// Deterministic synthetic gradient for `(client, round_seed)`:
+/// `heavy` planted coordinates of magnitude ~2 over 0.05-sigma noise.
+pub fn synth_grad(dim: usize, heavy: usize, client: usize, round_seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(derive_seed(round_seed ^ 0x51D_C0DE, client as u64));
+    let mut g: Vec<f32> = (0..dim).map(|_| rng.next_gaussian() as f32 * 0.05).collect();
+    for j in 0..heavy {
+        let at = (client.wrapping_mul(31).wrapping_add(j.wrapping_mul(97))) % dim;
+        g[at] += if j % 2 == 0 { 2.0 } else { -2.0 };
+    }
+    g
+}
+
+fn sim_loss(g: &[f32]) -> f32 {
+    // Sequential f32 reduction: deterministic, order-independent of
+    // thread count because it happens inside one client's compute.
+    let mut s = 0f32;
+    for &x in g {
+        s += x.abs();
+    }
+    s / g.len().max(1) as f32
+}
+
+/// Unpack the round seed a [`SimDataset`] batch carries.
+pub fn batch_round_seed(batch: &Batch) -> u64 {
+    match &batch.x {
+        Tensor::I32 { data, .. } if data.len() == 2 => {
+            ((data[1] as u32 as u64) << 32) | (data[0] as u32 as u64)
+        }
+        _ => panic!("batch does not come from a SimDataset"),
+    }
+}
+
+/// Minimal federated dataset whose batches only carry the round seed.
+pub struct SimDataset {
+    pub num_clients: usize,
+}
+
+impl FedDataset for SimDataset {
+    fn num_clients(&self) -> usize {
+        self.num_clients
+    }
+
+    fn client_size(&self, client: usize) -> usize {
+        1 + client % 5
+    }
+
+    fn client_batch(&self, _client: usize, round_seed: u64) -> Batch {
+        let lo = round_seed as u32 as i32;
+        let hi = (round_seed >> 32) as u32 as i32;
+        Batch {
+            x: Tensor::i32(vec![lo, hi], &[2]),
+            y: Tensor::i32(vec![0], &[1]),
+            mask: Tensor::f32(vec![1.0], &[1]),
+        }
+    }
+
+    fn client_batches_stacked(
+        &self,
+        client: usize,
+        _k: usize,
+        round_seed: u64,
+    ) -> (Tensor, Tensor, Tensor) {
+        let b = self.client_batch(client, round_seed);
+        (b.x, b.y, b.mask)
+    }
+
+    fn num_eval_batches(&self) -> usize {
+        0
+    }
+
+    fn eval_batch(&self, _idx: usize) -> Batch {
+        unreachable!("SimDataset has no eval set")
+    }
+}
+
+/// A hand-built manifest entry for [`TaskArtifacts::detached`], so sim
+/// runs satisfy the engine's artifact parameter without any files.
+pub fn sim_manifest(dim: usize, rows: usize, cols: usize, seed: u64) -> TaskManifest {
+    TaskManifest {
+        name: "sim".into(),
+        model: "sim".into(),
+        dim,
+        batch: 1,
+        inputs: Default::default(),
+        data: DataSpec::Images { image: [1, 1, 1], classes: 2 },
+        init_weights: String::new(),
+        artifacts: Default::default(),
+        sketch: SketchSpec { rows, seed, cols_options: vec![cols] },
+        fedavg_steps: Vec::new(),
+    }
+}
+
+/// Detached artifacts for a sim run (never executed, only threaded
+/// through the engine's signature).
+pub fn sim_artifacts(dim: usize, rows: usize, cols: usize, seed: u64) -> Result<TaskArtifacts> {
+    TaskArtifacts::detached(sim_manifest(dim, rows, cols, seed))
+}
+
+/// FetchSGD-shaped sim client: sketches the synthetic gradient
+/// client-side (the CPU-heavy map the engine parallelizes).
+pub struct SimSketchClient {
+    pub rows: usize,
+    pub cols: usize,
+    pub seed: u64,
+    pub dim: usize,
+    pub heavy: usize,
+}
+
+impl ClientCompute for SimSketchClient {
+    fn name(&self) -> &'static str {
+        "sim_fetchsgd"
+    }
+
+    fn client_round(
+        &self,
+        _artifacts: &TaskArtifacts,
+        _w: &[f32],
+        batch: &Batch,
+        client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let g = synth_grad(self.dim, self.heavy, client, batch_round_seed(batch));
+        let sketch = CountSketch::encode(self.rows, self.cols, self.seed, &g)?;
+        Ok(ClientResult { loss: sim_loss(&g), upload: ClientUpload::Sketch(sketch) })
+    }
+}
+
+/// Dense-baseline sim client (uncompressed / true top-k shape).
+pub struct SimDenseClient {
+    pub dim: usize,
+    pub heavy: usize,
+}
+
+impl ClientCompute for SimDenseClient {
+    fn name(&self) -> &'static str {
+        "sim_dense"
+    }
+
+    fn client_round(
+        &self,
+        _artifacts: &TaskArtifacts,
+        _w: &[f32],
+        batch: &Batch,
+        client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let g = synth_grad(self.dim, self.heavy, client, batch_round_seed(batch));
+        Ok(ClientResult { loss: sim_loss(&g), upload: ClientUpload::Dense(g) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_grad_is_deterministic_and_seed_sensitive() {
+        let a = synth_grad(1000, 4, 7, 99);
+        let b = synth_grad(1000, 4, 7, 99);
+        assert_eq!(a, b);
+        let c = synth_grad(1000, 4, 8, 99);
+        assert_ne!(a, c);
+        let d = synth_grad(1000, 4, 7, 100);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn round_seed_roundtrips_through_batch() {
+        let ds = SimDataset { num_clients: 10 };
+        for seed in [0u64, 1, u32::MAX as u64, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            let b = ds.client_batch(3, seed);
+            assert_eq!(batch_round_seed(&b), seed);
+        }
+    }
+}

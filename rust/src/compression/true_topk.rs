@@ -11,30 +11,31 @@
 
 use anyhow::Result;
 
-use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
+use crate::compression::aggregate::RoundAccum;
+use crate::compression::{
+    ClientCompute, ClientResult, ClientUpload, RoundUpdate, ServerAggregator, UploadSpec,
+};
 use crate::runtime::artifact::TaskArtifacts;
 use crate::runtime::exec::{run_client_grad, Batch};
 use crate::runtime::Tensor;
 use crate::sketch::topk::{top_k_indices, SparseVec};
 
-pub struct TrueTopK {
-    dim: usize,
-    k: usize,
-    rho: f32,
-    masking: bool,
-    momentum: Vec<f32>,
-    error: Vec<f32>,
+/// Client half: plain dense gradient upload, shared shape with
+/// `uncompressed` but kept as its own type so `name()` reports the
+/// strategy driving the round.
+pub struct DenseGradClient {
+    name: &'static str,
 }
 
-impl TrueTopK {
-    pub fn new(dim: usize, k: usize, rho: f32, masking: bool) -> Self {
-        TrueTopK { dim, k, rho, masking, momentum: vec![0f32; dim], error: vec![0f32; dim] }
+impl DenseGradClient {
+    pub fn new(name: &'static str) -> Self {
+        DenseGradClient { name }
     }
 }
 
-impl Strategy for TrueTopK {
+impl ClientCompute for DenseGradClient {
     fn name(&self) -> &'static str {
-        "true_topk"
+        self.name
     }
 
     fn client_round(
@@ -50,25 +51,47 @@ impl Strategy for TrueTopK {
         let (loss, grad) = run_client_grad(&exe, w, batch)?;
         Ok(ClientResult { loss, upload: ClientUpload::Dense(grad) })
     }
+}
 
-    fn server_round(
-        &mut self,
-        uploads: Vec<ClientUpload>,
-        w: &mut [f32],
-        lr: f32,
-    ) -> Result<RoundUpdate> {
-        let count = uploads.len().max(1) as f32;
-        let mut mean = vec![0f32; self.dim];
-        for u in uploads {
-            match u {
-                ClientUpload::Dense(g) => {
-                    for (m, &gi) in mean.iter_mut().zip(&g) {
-                        *m += gi / count;
-                    }
-                }
-                _ => anyhow::bail!("true_topk expects dense uploads"),
-            }
+/// Server half: dense momentum + error feedback, exact top-k extract.
+pub struct TrueTopKServer {
+    dim: usize,
+    k: usize,
+    rho: f32,
+    masking: bool,
+    momentum: Vec<f32>,
+    error: Vec<f32>,
+}
+
+impl TrueTopKServer {
+    pub fn new(dim: usize, k: usize, rho: f32, masking: bool) -> Self {
+        TrueTopKServer {
+            dim,
+            k,
+            rho,
+            masking,
+            momentum: vec![0f32; dim],
+            error: vec![0f32; dim],
         }
+    }
+}
+
+impl ServerAggregator for TrueTopKServer {
+    fn name(&self) -> &'static str {
+        "true_topk"
+    }
+
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32> {
+        let w = client_sizes.len().max(1) as f32;
+        vec![1.0 / w; client_sizes.len()]
+    }
+
+    fn upload_spec(&self) -> UploadSpec {
+        UploadSpec::Dense { dim: self.dim }
+    }
+
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.into_dense()?;
         // Dense momentum + error feedback — the exact (unsketched)
         // counterpart of FetchSGD's server update.
         for (m, &g) in self.momentum.iter_mut().zip(&mean) {
@@ -95,13 +118,24 @@ impl Strategy for TrueTopK {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::run_server_round;
+
+    fn server_round(
+        s: &mut TrueTopKServer,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> RoundUpdate {
+        let sizes = vec![1.0f32; uploads.len()];
+        run_server_round(s, &sizes, uploads, w, lr).unwrap()
+    }
 
     #[test]
     fn extracts_exact_topk_and_keeps_residual() {
-        let mut s = TrueTopK::new(5, 1, 0.0, false);
+        let mut s = TrueTopKServer::new(5, 1, 0.0, false);
         let mut w = vec![0f32; 5];
         let u = vec![ClientUpload::Dense(vec![0.1, 0.5, 0.2, 0.0, 0.3])];
-        let up = s.server_round(u, &mut w, 1.0).unwrap();
+        let up = server_round(&mut s, u, &mut w, 1.0);
         match up {
             RoundUpdate::Sparse(sv) => {
                 assert_eq!(sv.idx, vec![1]);
@@ -113,7 +147,7 @@ mod tests {
         assert!((s.error[4] - 0.3).abs() < 1e-6, "residual kept");
         // second round with zero grads: residual 0.3 should win now
         let u = vec![ClientUpload::Dense(vec![0.0; 5])];
-        let up = s.server_round(u, &mut w, 1.0).unwrap();
+        let up = server_round(&mut s, u, &mut w, 1.0);
         match up {
             RoundUpdate::Sparse(sv) => assert_eq!(sv.idx, vec![4]),
             _ => panic!(),
@@ -122,10 +156,10 @@ mod tests {
 
     #[test]
     fn masking_zeroes_momentum_at_extracted() {
-        let mut s = TrueTopK::new(3, 1, 0.9, true);
+        let mut s = TrueTopKServer::new(3, 1, 0.9, true);
         let mut w = vec![0f32; 3];
         let u = vec![ClientUpload::Dense(vec![1.0, 0.0, 0.0])];
-        s.server_round(u, &mut w, 1.0).unwrap();
+        server_round(&mut s, u, &mut w, 1.0);
         assert_eq!(s.momentum[0], 0.0);
     }
 }

@@ -4,63 +4,44 @@
 //! momentum, and takes a dense step. "Compression" for this method in
 //! the paper's figures comes from simply training for fewer epochs; the
 //! experiment drivers sweep `rounds` for that.
+//!
+//! The client half is [`crate::compression::true_topk::DenseGradClient`]
+//! (plain dense gradient upload) — only the server half differs.
 
 use anyhow::Result;
 
-use crate::compression::{ClientResult, ClientUpload, RoundUpdate, Strategy};
-use crate::runtime::artifact::TaskArtifacts;
-use crate::runtime::exec::{run_client_grad, Batch};
-use crate::runtime::Tensor;
+use crate::compression::aggregate::RoundAccum;
+use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 
-pub struct Uncompressed {
+/// Server half: dense mean + optional global momentum, lr-scaled step.
+pub struct UncompressedServer {
     dim: usize,
     rho_g: f32,
     momentum: Vec<f32>,
 }
 
-impl Uncompressed {
+impl UncompressedServer {
     pub fn new(dim: usize, rho_g: f32) -> Self {
-        Uncompressed { dim, rho_g, momentum: vec![0f32; dim] }
+        UncompressedServer { dim, rho_g, momentum: vec![0f32; dim] }
     }
 }
 
-impl Strategy for Uncompressed {
+impl ServerAggregator for UncompressedServer {
     fn name(&self) -> &'static str {
         "uncompressed"
     }
 
-    fn client_round(
-        &self,
-        artifacts: &TaskArtifacts,
-        w: &[f32],
-        batch: &Batch,
-        _client: usize,
-        _stacked: Option<(Tensor, Tensor, Tensor)>,
-        _lr: f32,
-    ) -> Result<ClientResult> {
-        let exe = artifacts.executable("client_grad")?;
-        let (loss, grad) = run_client_grad(&exe, w, batch)?;
-        Ok(ClientResult { loss, upload: ClientUpload::Dense(grad) })
+    fn begin_round(&mut self, client_sizes: &[f32]) -> Vec<f32> {
+        let w = client_sizes.len().max(1) as f32;
+        vec![1.0 / w; client_sizes.len()]
     }
 
-    fn server_round(
-        &mut self,
-        uploads: Vec<ClientUpload>,
-        w: &mut [f32],
-        lr: f32,
-    ) -> Result<RoundUpdate> {
-        let count = uploads.len().max(1) as f32;
-        let mut mean = vec![0f32; self.dim];
-        for u in uploads {
-            match u {
-                ClientUpload::Dense(g) => {
-                    for (m, &gi) in mean.iter_mut().zip(&g) {
-                        *m += gi / count;
-                    }
-                }
-                _ => anyhow::bail!("uncompressed expects dense uploads"),
-            }
-        }
+    fn upload_spec(&self) -> UploadSpec {
+        UploadSpec::Dense { dim: self.dim }
+    }
+
+    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.into_dense()?;
         if self.rho_g > 0.0 {
             for (m, &g) in self.momentum.iter_mut().zip(&mean) {
                 *m = self.rho_g * *m + g;
@@ -80,16 +61,27 @@ impl Strategy for Uncompressed {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::run_server_round;
+
+    fn server_round(
+        s: &mut UncompressedServer,
+        uploads: Vec<ClientUpload>,
+        w: &mut [f32],
+        lr: f32,
+    ) -> RoundUpdate {
+        let sizes = vec![1.0f32; uploads.len()];
+        run_server_round(s, &sizes, uploads, w, lr).unwrap()
+    }
 
     #[test]
     fn plain_sgd_step() {
-        let mut s = Uncompressed::new(3, 0.0);
+        let mut s = UncompressedServer::new(3, 0.0);
         let mut w = vec![1.0f32; 3];
         let u = vec![
             ClientUpload::Dense(vec![1.0, 0.0, 2.0]),
             ClientUpload::Dense(vec![3.0, 0.0, 0.0]),
         ];
-        let up = s.server_round(u, &mut w, 0.5).unwrap();
+        let up = server_round(&mut s, u, &mut w, 0.5);
         assert_eq!(w, vec![0.0, 1.0, 0.5]);
         assert!(matches!(up, RoundUpdate::Dense));
         assert_eq!(up.download_bytes(3), 12);
@@ -97,10 +89,10 @@ mod tests {
 
     #[test]
     fn momentum_accumulates() {
-        let mut s = Uncompressed::new(1, 0.5);
+        let mut s = UncompressedServer::new(1, 0.5);
         let mut w = vec![0.0f32];
         for _ in 0..3 {
-            s.server_round(vec![ClientUpload::Dense(vec![1.0])], &mut w, 1.0).unwrap();
+            server_round(&mut s, vec![ClientUpload::Dense(vec![1.0])], &mut w, 1.0);
         }
         // updates: 1, 1.5, 1.75 => w = -4.25
         assert!((w[0] + 4.25).abs() < 1e-6);

@@ -80,6 +80,14 @@ pub struct TrainConfig {
     pub baseline_rounds: Option<usize>,
     /// Print per-round progress lines.
     pub verbose: bool,
+    /// Worker threads for per-round client compute (0 = all available
+    /// cores). Any value produces bitwise-identical results for a given
+    /// seed — the round engine's shard layout is thread-invariant. Note
+    /// the effective ceiling: workers pull whole shards, and a round has
+    /// at most `engine::MAX_SHARDS` (16) of them, so values above
+    /// `min(clients_per_round, 16)` buy nothing (the shard count must
+    /// stay machine-invariant to keep the fp reduction tree fixed).
+    pub parallelism: usize,
 }
 
 impl TrainConfig {
@@ -105,6 +113,7 @@ impl TrainConfig {
             log_path: None,
             baseline_rounds: None,
             verbose: false,
+            parallelism: 0,
         }
     }
 
@@ -145,6 +154,7 @@ impl TrainConfig {
             log_path: v.get("log_path").and_then(|p| p.as_str()).map(PathBuf::from),
             baseline_rounds: v.get("baseline_rounds").and_then(|b| b.as_usize()),
             verbose: v.opt_bool("verbose", false),
+            parallelism: v.opt_usize("parallelism", 0),
         })
     }
 
@@ -198,6 +208,7 @@ impl TrainConfig {
                 "log_path" => self.log_path = Some(PathBuf::from(val)),
                 "baseline_rounds" => self.baseline_rounds = Some(val.parse()?),
                 "verbose" => self.verbose = val.parse()?,
+                "parallelism" => self.parallelism = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -281,6 +292,7 @@ mod tests {
         assert_eq!(cfg.task, "cifar10");
         assert_eq!(cfg.rounds, 50);
         assert_eq!(cfg.scale.num_clients, 500);
+        assert_eq!(cfg.parallelism, 0, "parallelism defaults to auto");
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, cols, masking, .. } => {
                 assert_eq!(k, 100);
@@ -300,10 +312,12 @@ mod tests {
             "strategy.k=7".into(),
             "lr=constant:0.05".into(),
             "scale.num_clients=42".into(),
+            "parallelism=4".into(),
         ])
         .unwrap();
         assert_eq!(cfg.rounds, 99);
         assert_eq!(cfg.scale.num_clients, 42);
+        assert_eq!(cfg.parallelism, 4);
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, .. } => assert_eq!(k, 7),
             _ => panic!(),

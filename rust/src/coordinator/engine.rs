@@ -1,0 +1,277 @@
+//! The parallel round engine: fan client compute out over a worker
+//! pool, merge uploads into shard accumulators as they arrive, reduce
+//! shards in a fixed order.
+//!
+//! ## Determinism
+//!
+//! Results are **bitwise identical for a given seed at any thread
+//! count**. The invariants that guarantee it:
+//!
+//! 1. The shard *layout* is a pure function of the cohort size:
+//!    [`shard_count`] caps at [`MAX_SHARDS`] and slot `i` belongs to
+//!    shard `i % shards` — never a function of `threads`.
+//! 2. Each shard absorbs its slots in increasing slot order (one worker
+//!    owns a shard at a time, and walks its slots in order).
+//! 3. Shards are reduced strictly in shard order
+//!    ([`crate::compression::aggregate::reduce_shards`], which uses
+//!    [`crate::sketch::CountSketch::merge_shards`] for sketch shards).
+//! 4. Per-slot losses are written into slot-indexed cells and summed in
+//!    slot order by the caller.
+//!
+//! Threads only change *which worker* runs a shard, never the
+//! floating-point reduction tree.
+//!
+//! ## Scheduling
+//!
+//! Workers pull whole shards off an atomic counter (shard = unit of
+//! work stealing). With `W` participants and `S = min(W, MAX_SHARDS)`
+//! shards, each shard holds `~W/S` clients, so the pool load-balances
+//! at shard granularity while the per-shard scratch memory stays
+//! bounded at `S` accumulators regardless of cohort size.
+
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::compression::aggregate::{reduce_shards, RoundAccum};
+use crate::compression::{ClientCompute, UploadSpec};
+use crate::data::FedDataset;
+use crate::runtime::artifact::TaskArtifacts;
+
+/// Upper bound on shard accumulators per round. Bounds both the final
+/// fan-in cost and the scratch memory (`MAX_SHARDS` dense vectors /
+/// sketch tables), and is deliberately independent of the machine's
+/// core count so the reduction tree is machine-invariant.
+pub const MAX_SHARDS: usize = 16;
+
+/// Number of shard accumulators for a cohort of `participants` clients.
+pub fn shard_count(participants: usize) -> usize {
+    participants.clamp(1, MAX_SHARDS)
+}
+
+/// Resolve a configured parallelism knob: 0 = all available cores.
+pub fn resolve_parallelism(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Everything one round of client compute produces.
+pub struct RoundOutput {
+    /// Per-slot client training loss, in participant order.
+    pub losses: Vec<f32>,
+    /// Merged weighted upload sum (`Σ λ_i · upload_i`).
+    pub merged: RoundAccum,
+    /// Payload bytes of slot 0's upload (all uploads of a strategy are
+    /// the same size; used for communication accounting).
+    pub upload_bytes_per_client: u64,
+}
+
+struct ShardOut {
+    accum: RoundAccum,
+    /// (slot, loss) pairs for the slots this shard owns.
+    losses: Vec<(usize, f32)>,
+    /// Upload payload bytes of this shard's lowest slot.
+    payload_bytes: u64,
+}
+
+/// Execute one federated round's client work: for each participant
+/// slot, generate the batch, run the client compute, and absorb the
+/// upload (weighted by `weights[slot]`) into the slot's shard
+/// accumulator. Returns the fully merged accumulator and per-slot
+/// losses.
+#[allow(clippy::too_many_arguments)]
+pub fn run_round(
+    client: &dyn ClientCompute,
+    artifacts: &TaskArtifacts,
+    dataset: &dyn FedDataset,
+    participants: &[usize],
+    weights: &[f32],
+    spec: &UploadSpec,
+    w: &[f32],
+    lr: f32,
+    round_seed: u64,
+    threads: usize,
+) -> Result<RoundOutput> {
+    assert_eq!(participants.len(), weights.len(), "one weight per participant");
+    let slots = participants.len();
+    let shards = shard_count(slots);
+    let threads = threads.clamp(1, shards);
+    let stacked_k = client.wants_stacked_batches();
+
+    let run_shard = |shard: usize| -> Result<ShardOut> {
+        let mut accum = RoundAccum::new(spec)?;
+        let mut losses = Vec::with_capacity(slots / shards + 1);
+        let mut payload_bytes = 0u64;
+        let mut slot = shard;
+        while slot < slots {
+            let c = participants[slot];
+            let batch = dataset.client_batch(c, round_seed);
+            let stacked = stacked_k.map(|k| dataset.client_batches_stacked(c, k, round_seed));
+            let res = client
+                .client_round(artifacts, w, &batch, c, stacked, lr)
+                .with_context(|| format!("client {c} (slot {slot})"))?;
+            if slot == shard {
+                payload_bytes = res.upload.payload_bytes();
+            }
+            losses.push((slot, res.loss));
+            accum.absorb(res.upload, weights[slot])?;
+            slot += shards;
+        }
+        Ok(ShardOut { accum, losses, payload_bytes })
+    };
+
+    let mut shard_outs: Vec<Option<Result<ShardOut>>> = (0..shards).map(|_| None).collect();
+    if threads <= 1 {
+        for (shard, out) in shard_outs.iter_mut().enumerate() {
+            *out = Some(run_shard(shard));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let completed = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut outs = Vec::new();
+                        loop {
+                            let shard = next.fetch_add(1, Ordering::Relaxed);
+                            if shard >= shards {
+                                break;
+                            }
+                            outs.push((shard, run_shard(shard)));
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("round worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for (shard, out) in completed {
+            shard_outs[shard] = Some(out);
+        }
+    }
+
+    // Surface the lowest-shard error first (deterministic failure too).
+    let mut losses = vec![0f32; slots];
+    let mut upload_bytes_per_client = 0u64;
+    let mut accums = Vec::with_capacity(shards);
+    for (shard, out) in shard_outs.into_iter().enumerate() {
+        let out = out.expect("every shard scheduled")?;
+        if shard == 0 {
+            upload_bytes_per_client = out.payload_bytes;
+        }
+        for (slot, loss) in out.losses {
+            losses[slot] = loss;
+        }
+        accums.push(out.accum);
+    }
+    let merged = reduce_shards(accums)?;
+    Ok(RoundOutput { losses, merged, upload_bytes_per_client })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+    use crate::compression::ServerAggregator;
+
+    const DIM: usize = 5000;
+    const ROWS: usize = 5;
+    const COLS: usize = 512;
+    const SEED: u64 = 21;
+
+    fn sim_round(threads: usize, w_cohort: usize) -> (Vec<f32>, Vec<f32>) {
+        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+        let dataset = SimDataset { num_clients: 100 };
+        let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
+        let participants: Vec<usize> = (0..w_cohort).collect();
+        let weights = vec![1.0 / w_cohort as f32; w_cohort];
+        let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
+        let w = vec![0f32; DIM];
+        let out = run_round(
+            &client,
+            &artifacts,
+            &dataset,
+            &participants,
+            &weights,
+            &spec,
+            &w,
+            0.1,
+            0xFEED,
+            threads,
+        )
+        .unwrap();
+        assert_eq!(out.merged.absorbed(), w_cohort);
+        assert_eq!(out.upload_bytes_per_client, (ROWS * COLS * 4) as u64);
+        let table = out.merged.into_sketch().unwrap().table().to_vec();
+        (out.losses, table)
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        for cohort in [3usize, 16, 33] {
+            let (l1, t1) = sim_round(1, cohort);
+            for threads in [2usize, 4, 8] {
+                let (ln, tn) = sim_round(threads, cohort);
+                assert_eq!(
+                    l1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    ln.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "losses differ at {threads} threads (cohort {cohort})"
+                );
+                assert_eq!(
+                    t1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    tn.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "merged sketch differs at {threads} threads (cohort {cohort})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shard_layout_is_parallelism_invariant() {
+        assert_eq!(shard_count(1), 1);
+        assert_eq!(shard_count(7), 7);
+        assert_eq!(shard_count(MAX_SHARDS), MAX_SHARDS);
+        assert_eq!(shard_count(100), MAX_SHARDS);
+        assert_eq!(shard_count(0), 1);
+        assert!(resolve_parallelism(0) >= 1);
+        assert_eq!(resolve_parallelism(3), 3);
+    }
+
+    #[test]
+    fn engine_feeds_a_full_aggregator_pipeline() {
+        // One end-to-end sim round through a real FetchSGD server.
+        use crate::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+        let dataset = SimDataset { num_clients: 50 };
+        let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
+        let mut server = FetchSgdServer::new(
+            ROWS, COLS, SEED, DIM, 20, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+        )
+        .unwrap();
+        let participants: Vec<usize> = (0..10).collect();
+        let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let mut w = vec![0f32; DIM];
+        let out = run_round(
+            &client,
+            &artifacts,
+            &dataset,
+            &participants,
+            &weights,
+            &server.upload_spec(),
+            &w,
+            0.1,
+            7,
+            4,
+        )
+        .unwrap();
+        let update = server.finish(out.merged, &mut w, 0.1).unwrap();
+        assert!(update.nnz(DIM) > 0);
+        assert!(w.iter().any(|&x| x != 0.0), "model should move");
+    }
+}

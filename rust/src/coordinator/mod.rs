@@ -1,7 +1,13 @@
 //! The federated coordinator (L3): owns the round loop, client
 //! selection, strategy dispatch, evaluation, and communication
 //! accounting. This is the paper's "central aggregator".
+//!
+//! - [`engine`] — the parallel round engine: client compute on a worker
+//!   pool, deterministic sharded upload aggregation.
+//! - [`trainer`] — the run loop tying selection, engine, strategy
+//!   server halves, metrics and accounting together.
 
+pub mod engine;
 pub mod selection;
 pub mod trainer;
 

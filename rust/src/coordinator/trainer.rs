@@ -2,26 +2,32 @@
 //!
 //! Per round (paper Algorithm 1 + the baselines' equivalents):
 //! 1. sample W clients uniformly,
-//! 2. each client executes its local computation through the PJRT
-//!    runtime (gradient + in-graph sketch for FetchSGD; plain gradient
-//!    for top-k/uncompressed; K local steps for FedAvg),
-//! 3. the strategy's server step aggregates uploads and updates the flat
-//!    weight vector,
+//! 2. the round engine fans the clients' local computation out over a
+//!    worker pool (gradient + in-graph sketch for FetchSGD via PJRT;
+//!    plain gradient for top-k/uncompressed; K local steps for FedAvg)
+//!    and merges uploads into shard accumulators as they complete,
+//! 3. the strategy's server half consumes the merged weighted sum and
+//!    updates the flat weight vector,
 //! 4. communication is accounted (upload / per-round download /
 //!    staleness-aware download) and metrics logged.
+//!
+//! Parallelism is a pure throughput knob: the engine's shard layout is
+//! thread-invariant, so `parallelism = 1` and `parallelism = N` produce
+//! bitwise-identical weights and summaries for the same seed.
 
 use anyhow::{bail, Context, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
+use crate::compression::fedavg::{FedAvgClient, FedAvgServer};
+use crate::compression::fetchsgd::{ErrorUpdate, FetchSgdClient, FetchSgdServer};
+use crate::compression::local_topk::{LocalTopKClient, LocalTopKServer};
 use crate::compression::timing::{CommTime, LinkProfile};
-use crate::compression::fedavg::FedAvg;
-use crate::compression::fetchsgd::{ErrorUpdate, FetchSgd};
-use crate::compression::local_topk::LocalTopK;
-use crate::compression::true_topk::TrueTopK;
-use crate::compression::uncompressed::Uncompressed;
-use crate::compression::{ClientUpload, Strategy};
+use crate::compression::true_topk::{DenseGradClient, TrueTopKServer};
+use crate::compression::uncompressed::UncompressedServer;
+use crate::compression::{ClientCompute, ServerAggregator};
 use crate::config::{StrategyConfig, TrainConfig};
+use crate::coordinator::engine;
 use crate::coordinator::selection::ClientSelector;
 use crate::data::FedDataset;
 use crate::metrics::{EvalRecord, MetricsLogger, RoundRecord};
@@ -56,7 +62,8 @@ pub struct Trainer {
     cfg: TrainConfig,
     artifacts: TaskArtifacts,
     dataset: Box<dyn FedDataset>,
-    strategy: Box<dyn Strategy>,
+    client: Box<dyn ClientCompute>,
+    aggregator: Box<dyn ServerAggregator>,
     selector: ClientSelector,
     comm: CommStats,
     comm_time_res: CommTime,
@@ -65,32 +72,36 @@ pub struct Trainer {
     pub logger: MetricsLogger,
     w: Vec<f32>,
     dim: usize,
+    /// Resolved worker-pool width (cfg.parallelism, 0 = cores).
+    threads: usize,
 }
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Self> {
-        let runtime = Rc::new(Runtime::cpu().context("PJRT runtime")?);
+        let runtime = Arc::new(Runtime::cpu().context("PJRT runtime")?);
         Self::with_runtime(cfg, runtime)
     }
 
     /// Share one PJRT runtime across many trainers (experiment sweeps).
-    pub fn with_runtime(cfg: TrainConfig, runtime: Rc<Runtime>) -> Result<Self> {
+    pub fn with_runtime(cfg: TrainConfig, runtime: Arc<Runtime>) -> Result<Self> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let artifacts = TaskArtifacts::new(runtime, &manifest, &cfg.task)?;
         let tm = &artifacts.manifest;
         let dim = tm.dim;
-        let strategy = Self::build_strategy(&cfg, &artifacts)?;
+        let (client, aggregator) = Self::build_strategy(&cfg, &artifacts)?;
         let dataset = build_dataset(tm, &cfg.scale)?;
         let selector =
             ClientSelector::new(dataset.num_clients(), cfg.clients_per_round, cfg.seed);
         let stale = StalenessTracker::new(dataset.num_clients(), dim);
         let logger = MetricsLogger::new(cfg.log_path.as_deref())?;
         let w = artifacts.init_weights()?;
+        let threads = engine::resolve_parallelism(cfg.parallelism);
         Ok(Trainer {
             cfg,
             artifacts,
             dataset,
-            strategy,
+            client,
+            aggregator,
             selector,
             comm: CommStats::default(),
             comm_time_res: CommTime::default(),
@@ -99,10 +110,15 @@ impl Trainer {
             logger,
             w,
             dim,
+            threads,
         })
     }
 
-    fn build_strategy(cfg: &TrainConfig, artifacts: &TaskArtifacts) -> Result<Box<dyn Strategy>> {
+    #[allow(clippy::type_complexity)]
+    fn build_strategy(
+        cfg: &TrainConfig,
+        artifacts: &TaskArtifacts,
+    ) -> Result<(Box<dyn ClientCompute>, Box<dyn ServerAggregator>)> {
         let tm = &artifacts.manifest;
         Ok(match &cfg.strategy {
             StrategyConfig::FetchSgd { k, cols, rho, error_update, error_window, masking } => {
@@ -119,21 +135,25 @@ impl Trainer {
                     "subtract" => ErrorUpdate::Subtract,
                     other => bail!("error_update must be zero_out|subtract, got '{other}'"),
                 };
-                Box::new(FetchSgd::new(
-                    tm.sketch.rows,
-                    *cols,
-                    tm.sketch.seed,
-                    tm.dim,
-                    *k,
-                    *rho,
-                    eu,
-                    *masking,
-                    error_window,
-                )?)
+                (
+                    Box::new(FetchSgdClient::new(tm.sketch.rows, *cols, tm.sketch.seed)),
+                    Box::new(FetchSgdServer::new(
+                        tm.sketch.rows,
+                        *cols,
+                        tm.sketch.seed,
+                        tm.dim,
+                        *k,
+                        *rho,
+                        eu,
+                        *masking,
+                        error_window,
+                    )?),
+                )
             }
-            StrategyConfig::LocalTopK { k, rho_g, masking, local_error } => {
-                Box::new(LocalTopK::new(tm.dim, *k, *rho_g, *masking, *local_error))
-            }
+            StrategyConfig::LocalTopK { k, rho_g, masking, local_error } => (
+                Box::new(LocalTopKClient::new(*k, *local_error)),
+                Box::new(LocalTopKServer::new(tm.dim, *rho_g, *masking)),
+            ),
             StrategyConfig::FedAvg { local_steps, rho_g } => {
                 if !tm.fedavg_steps.contains(local_steps) {
                     bail!(
@@ -143,12 +163,19 @@ impl Trainer {
                         tm.fedavg_steps
                     );
                 }
-                Box::new(FedAvg::new(tm.dim, *local_steps, *rho_g))
+                (
+                    Box::new(FedAvgClient::new(*local_steps)),
+                    Box::new(FedAvgServer::new(tm.dim, *rho_g)),
+                )
             }
-            StrategyConfig::Uncompressed { rho_g } => Box::new(Uncompressed::new(tm.dim, *rho_g)),
-            StrategyConfig::TrueTopK { k, rho, masking } => {
-                Box::new(TrueTopK::new(tm.dim, *k, *rho, *masking))
-            }
+            StrategyConfig::Uncompressed { rho_g } => (
+                Box::new(DenseGradClient::new("uncompressed")),
+                Box::new(UncompressedServer::new(tm.dim, *rho_g)),
+            ),
+            StrategyConfig::TrueTopK { k, rho, masking } => (
+                Box::new(DenseGradClient::new("true_topk")),
+                Box::new(TrueTopKServer::new(tm.dim, *k, *rho, *masking)),
+            ),
         })
     }
 
@@ -166,24 +193,30 @@ impl Trainer {
         let participants = self.selector.select(round);
         let sizes: Vec<f32> =
             participants.iter().map(|&c| self.dataset.client_size(c) as f32).collect();
-        self.strategy.begin_round(&sizes);
+        let weights = self.aggregator.begin_round(&sizes);
+        let spec = self.aggregator.upload_spec();
 
         let round_seed = derive_seed(self.cfg.seed ^ 0xB0B0, round as u64);
-        let mut uploads: Vec<ClientUpload> = Vec::with_capacity(participants.len());
+        let out = engine::run_round(
+            self.client.as_ref(),
+            &self.artifacts,
+            self.dataset.as_ref(),
+            &participants,
+            &weights,
+            &spec,
+            &self.w,
+            lr,
+            round_seed,
+            self.threads,
+        )
+        .with_context(|| format!("round {round}"))?;
+        // Slot-order reduction keeps the mean independent of scheduling.
         let mut loss_sum = 0f64;
-        let stacked_k = self.strategy.wants_stacked_batches();
-        for &client in &participants {
-            let batch = self.dataset.client_batch(client, round_seed);
-            let stacked = stacked_k.map(|k| self.dataset.client_batches_stacked(client, k, round_seed));
-            let res = self
-                .strategy
-                .client_round(&self.artifacts, &self.w, &batch, client, stacked, lr)
-                .with_context(|| format!("client {client} round {round}"))?;
-            loss_sum += res.loss as f64;
-            uploads.push(res.upload);
+        for &l in &out.losses {
+            loss_sum += l as f64;
         }
-        let upload_per_client = uploads.first().map(|u| u.payload_bytes()).unwrap_or(0);
-        let update = self.strategy.server_round(uploads, &mut self.w, lr)?;
+        let upload_per_client = out.upload_bytes_per_client;
+        let update = self.aggregator.finish(out.merged, &mut self.w, lr)?;
         let update_nnz = update.nnz(self.dim);
         let stale_bytes = self.stale.round(round as u64, &participants, update_nnz);
         self.comm.record_round(
@@ -213,7 +246,7 @@ impl Trainer {
         if self.cfg.verbose {
             eprintln!(
                 "[{}] round {round:>4} loss {mean_loss:.4} lr {lr:.4} nnz {update_nnz}",
-                self.strategy.name()
+                self.aggregator.name()
             );
         }
         Ok(mean_loss)
@@ -265,7 +298,7 @@ impl Trainer {
         let ratios =
             self.comm.ratios(baseline_rounds, self.cfg.clients_per_round as u64, self.dim);
         Ok(RunSummary {
-            strategy: self.strategy.name().to_string(),
+            strategy: self.aggregator.name().to_string(),
             task: self.cfg.task.clone(),
             rounds: self.cfg.rounds,
             final_loss: self.logger.recent_loss(10),

@@ -26,7 +26,12 @@ use crate::runtime::exec::Batch;
 use crate::runtime::Tensor;
 
 /// A federated dataset: a population of clients plus a held-out eval set.
-pub trait FedDataset {
+///
+/// `Send + Sync` because the round engine generates client batches from
+/// worker threads; implementations are pure functions of
+/// `(dataset seed, client id, sample id)` with no interior mutability,
+/// which is also what makes 50k-client populations free.
+pub trait FedDataset: Send + Sync {
     fn num_clients(&self) -> usize;
     /// Number of local examples held by `client`.
     fn client_size(&self, client: usize) -> usize;

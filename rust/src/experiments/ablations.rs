@@ -42,6 +42,7 @@ fn base_config(p: &AblationParams, rounds: usize) -> TrainConfig {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     }
 }
 

@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::{LrSchedule, StrategyConfig, TrainConfig};
 use crate::coordinator::Trainer;
@@ -67,9 +67,10 @@ pub fn run(p: AssumptionParams) -> Result<()> {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     };
 
-    let runtime = Rc::new(Runtime::cpu()?);
+    let runtime = Arc::new(Runtime::cpu()?);
     let mut trainer = Trainer::with_runtime(cfg, runtime)?;
     let dim = trainer.dim();
 

@@ -52,6 +52,7 @@ fn base_config(p: &Fig3Params, rounds: usize) -> TrainConfig {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     }
 }
 

@@ -41,6 +41,7 @@ fn base_config(p: &Fig4Params, rounds: usize) -> TrainConfig {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     }
 }
 

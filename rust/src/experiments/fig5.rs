@@ -44,6 +44,7 @@ pub fn base_config(p: &Fig5Params, rounds: usize) -> TrainConfig {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     }
 }
 

@@ -3,7 +3,7 @@
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::config::TrainConfig;
 use crate::coordinator::Trainer;
@@ -97,7 +97,7 @@ impl Sweep {
     /// dump JSONL into `results/`.
     pub fn execute(mut self, out_dir: &PathBuf) -> Result<Vec<SweepRow>> {
         std::fs::create_dir_all(out_dir)?;
-        let runtime = Rc::new(Runtime::cpu()?);
+        let runtime = Arc::new(Runtime::cpu()?);
         let total = self.runs.len();
         let mut rows = Vec::new();
         let runs = std::mem::take(&mut self.runs);

@@ -12,7 +12,7 @@ use crate::experiments::runner::ExperimentScale;
 use crate::runtime::Runtime;
 use crate::serialize::json::{num, obj, s};
 use crate::util::stats::{mean, stddev};
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub struct Table1Params {
     pub scale: ExperimentScale,
@@ -99,7 +99,7 @@ pub fn run(p: Table1Params) -> Result<()> {
     ];
 
     std::fs::create_dir_all(&p.out_dir)?;
-    let runtime = Rc::new(Runtime::cpu()?);
+    let runtime = Arc::new(Runtime::cpu()?);
     println!("\n=== Table 1 (persona task, {} seeds) ===", p.seeds);
     println!(
         "{:<26} {:>16} {:>8} {:>8} {:>8}",

@@ -18,10 +18,18 @@
 //! Changing anything here is a breaking change to every serialized
 //! artifact; bump `SPEC_VERSION` and re-run `make artifacts` if you do.
 
+use anyhow::{bail, Result};
+
 use crate::util::rng::splitmix64;
 
 /// Version tag recorded in the artifact manifest; checked at load time.
 pub const SPEC_VERSION: u32 = 1;
+
+/// Maximum sketch depth. The unsketch hot path keeps one value per row
+/// in a fixed stack buffer (`[f32; MAX_ROWS]`), and production
+/// geometries use R in {3, 5}; rejecting deeper tables at construction
+/// is what lets every downstream loop iterate `0..rows` unchecked.
+pub const MAX_ROWS: usize = 16;
 
 /// Per-row hash constants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,14 +51,21 @@ pub struct SketchHasher {
 }
 
 impl SketchHasher {
-    /// Build the hasher. `cols` must be a power of two >= 2; `rows >= 1`.
-    pub fn new(rows: usize, cols: usize, seed: u64) -> Self {
-        assert!(rows >= 1, "rows must be >= 1");
-        assert!(
-            cols >= 2 && cols.is_power_of_two(),
-            "cols must be a power of two >= 2, got {cols}"
-        );
-        assert!(cols <= 1 << 31, "cols too large for u32 hashing");
+    /// Build the hasher. Fails unless `1 <= rows <= MAX_ROWS` and `cols`
+    /// is a power of two in `[2, 2^31]` — the bucket hash computes
+    /// `(a·i + b) >> (32 - log2(C))`, which silently produces garbage
+    /// indices for any non-power-of-two width, so the geometry is
+    /// validated here once instead of trusted everywhere.
+    pub fn new(rows: usize, cols: usize, seed: u64) -> Result<Self> {
+        if rows < 1 || rows > MAX_ROWS {
+            bail!("sketch rows must be in [1, {MAX_ROWS}], got {rows}");
+        }
+        if cols < 2 || !cols.is_power_of_two() {
+            bail!("sketch cols must be a power of two >= 2, got {cols}");
+        }
+        if cols > 1 << 31 {
+            bail!("sketch cols {cols} too large for u32 multiply-shift hashing (max 2^31)");
+        }
         let shift = 32 - cols.trailing_zeros();
         let mut row_hashes = Vec::with_capacity(rows);
         // Mirror python: state = seed; 4 splitmix64 draws per row, taking
@@ -63,7 +78,7 @@ impl SketchHasher {
             let b_sign = splitmix64(&mut state) as u32;
             row_hashes.push(RowHash { a_bucket, b_bucket, a_sign, b_sign });
         }
-        SketchHasher { rows, cols, seed, shift, row_hashes }
+        Ok(SketchHasher { rows, cols, seed, shift, row_hashes })
     }
 
     #[inline]
@@ -102,9 +117,9 @@ mod tests {
 
     #[test]
     fn deterministic_and_seed_sensitive() {
-        let h1 = SketchHasher::new(3, 256, 99);
-        let h2 = SketchHasher::new(3, 256, 99);
-        let h3 = SketchHasher::new(3, 256, 100);
+        let h1 = SketchHasher::new(3, 256, 99).unwrap();
+        let h2 = SketchHasher::new(3, 256, 99).unwrap();
+        let h3 = SketchHasher::new(3, 256, 100).unwrap();
         for i in 0..1000u32 {
             for r in 0..3 {
                 assert_eq!(h1.bucket(r, i), h2.bucket(r, i));
@@ -118,7 +133,7 @@ mod tests {
     #[test]
     fn buckets_in_range_and_roughly_uniform() {
         let cols = 128;
-        let h = SketchHasher::new(1, cols, 7);
+        let h = SketchHasher::new(1, cols, 7).unwrap();
         let mut counts = vec![0usize; cols];
         let n = 128 * 200;
         for i in 0..n as u32 {
@@ -137,7 +152,7 @@ mod tests {
 
     #[test]
     fn signs_balanced_per_row() {
-        let h = SketchHasher::new(5, 64, 21);
+        let h = SketchHasher::new(5, 64, 21).unwrap();
         for r in 0..5 {
             let pos = (0..10_000u32).filter(|&i| h.sign(r, i) > 0.0).count();
             assert!((4000..6000).contains(&pos), "row {r} pos {pos}");
@@ -146,16 +161,25 @@ mod tests {
 
     #[test]
     fn rows_are_independent_ish() {
-        let h = SketchHasher::new(2, 64, 5);
+        let h = SketchHasher::new(2, 64, 5).unwrap();
         let coll = (0..10_000u32).filter(|&i| h.bucket(0, i) == h.bucket(1, i)).count();
         // expect ~1/64 collisions = ~156
         assert!(coll < 500, "rows look correlated: {coll}");
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_non_power_of_two() {
-        SketchHasher::new(3, 100, 1);
+    fn rejects_bad_geometries() {
+        // Non-power-of-two widths used to silently hash into garbage
+        // buckets (`32 - cols.trailing_zeros()` is meaningless there).
+        let err = SketchHasher::new(3, 100, 1).unwrap_err();
+        assert!(format!("{err}").contains("power of two"), "{err}");
+        assert!(SketchHasher::new(3, 0, 1).is_err());
+        assert!(SketchHasher::new(3, 1, 1).is_err());
+        // Depth 0 and depth > MAX_ROWS are both rejected up front.
+        assert!(SketchHasher::new(0, 64, 1).is_err());
+        let err = SketchHasher::new(MAX_ROWS + 1, 64, 1).unwrap_err();
+        assert!(format!("{err}").contains("rows"), "{err}");
+        assert!(SketchHasher::new(MAX_ROWS, 64, 1).is_ok());
     }
 
     /// Golden vectors pinning the cross-language spec. The same values
@@ -163,7 +187,7 @@ mod tests {
     /// changed, both must be.
     #[test]
     fn golden_cross_language_vectors() {
-        let h = SketchHasher::new(3, 1 << 12, 0xFE7C_5D11);
+        let h = SketchHasher::new(3, 1 << 12, 0xFE7C_5D11).unwrap();
         let idx = [0u32, 1, 2, 1000, 65_537, 4_000_000_000];
         let buckets: Vec<Vec<usize>> =
             (0..3).map(|r| idx.iter().map(|&i| h.bucket(r, i)).collect()).collect();

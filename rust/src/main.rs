@@ -214,7 +214,7 @@ fn cmd_selfcheck(artifacts_dir: &PathBuf) -> Result<()> {
     use fetchsgd::runtime::{Runtime, TaskArtifacts};
     use fetchsgd::sketch::CountSketch;
 
-    let runtime = std::rc::Rc::new(Runtime::cpu()?);
+    let runtime = std::sync::Arc::new(Runtime::cpu()?);
     println!("platform: {}", runtime.platform());
     let manifest = Manifest::load(artifacts_dir)?;
     let task = manifest
@@ -236,7 +236,7 @@ fn cmd_selfcheck(artifacts_dir: &PathBuf) -> Result<()> {
     let (loss1, sketch_jax) = run_client_step(&step_exe, &w, &batch, rows, cols, seed)?;
     let grad_exe = arts.executable("client_grad")?;
     let (loss2, grad) = run_client_grad(&grad_exe, &w, &batch)?;
-    let sketch_rust = CountSketch::encode(rows, cols, seed, &grad);
+    let sketch_rust = CountSketch::encode(rows, cols, seed, &grad)?;
 
     anyhow::ensure!((loss1 - loss2).abs() < 1e-5, "losses disagree: {loss1} vs {loss2}");
     let mut max_err = 0f32;

@@ -169,15 +169,26 @@ impl Manifest {
 }
 
 /// Loaded executables for one task, compiled lazily and cached.
+///
+/// Shared across the round engine's worker threads: the runtime handle
+/// is an `Arc` and the lazy compile cache sits behind an `RwLock`, so
+/// any worker can look up (or compile) an executable concurrently. Two
+/// workers racing on an uncached kind may both compile it; the second
+/// insert wins and the duplicate is dropped — wasteful but correct, and
+/// only possible on each kind's first round.
 pub struct TaskArtifacts {
-    runtime: std::rc::Rc<Runtime>,
+    runtime: std::sync::Arc<Runtime>,
     dir: PathBuf,
     pub manifest: TaskManifest,
-    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+    cache: std::sync::RwLock<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
 impl TaskArtifacts {
-    pub fn new(runtime: std::rc::Rc<Runtime>, manifest: &Manifest, task: &str) -> Result<Self> {
+    pub fn new(
+        runtime: std::sync::Arc<Runtime>,
+        manifest: &Manifest,
+        task: &str,
+    ) -> Result<Self> {
         let tm = manifest.task(task)?.clone();
         Ok(TaskArtifacts {
             runtime,
@@ -187,10 +198,23 @@ impl TaskArtifacts {
         })
     }
 
+    /// Artifacts bound to a hand-built task manifest, with no artifact
+    /// directory behind them. Used by simulation benches and tests that
+    /// drive the round engine with [`crate::compression::sim`] clients
+    /// (which never execute HLO); any executable lookup will fail.
+    pub fn detached(manifest: TaskManifest) -> Result<Self> {
+        Ok(TaskArtifacts {
+            runtime: std::sync::Arc::new(Runtime::cpu()?),
+            dir: PathBuf::from("."),
+            manifest,
+            cache: Default::default(),
+        })
+    }
+
     /// Get (compiling on first use) the executable for an artifact kind,
     /// e.g. "client_grad", "eval", "client_step_c4096", "fedavg_k2".
-    pub fn executable(&self, kind: &str) -> Result<std::rc::Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(kind) {
+    pub fn executable(&self, kind: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.read().expect("artifact cache poisoned").get(kind) {
             return Ok(e.clone());
         }
         let file = self
@@ -202,8 +226,11 @@ impl TaskArtifacts {
                 self.manifest.name,
                 self.manifest.artifacts.keys().collect::<Vec<_>>()
             ))?;
-        let exe = std::rc::Rc::new(self.runtime.load_hlo(&self.dir.join(file))?);
-        self.cache.borrow_mut().insert(kind.to_string(), exe.clone());
+        let exe = std::sync::Arc::new(self.runtime.load_hlo(&self.dir.join(file))?);
+        self.cache
+            .write()
+            .expect("artifact cache poisoned")
+            .insert(kind.to_string(), exe.clone());
         Ok(exe)
     }
 

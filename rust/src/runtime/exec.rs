@@ -39,7 +39,7 @@ pub fn run_client_step(
     }
     let loss = out[0].as_scalar_f32()?;
     let table = out[1].clone().into_f32()?;
-    Ok((loss, CountSketch::from_table(rows, cols, w.len(), seed, table)))
+    Ok((loss, CountSketch::from_table(rows, cols, w.len(), seed, table)?))
 }
 
 /// Baseline client step: returns (loss, dense gradient).

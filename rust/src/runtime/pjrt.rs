@@ -1,19 +1,28 @@
-//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+//! Thin typed wrapper over the PJRT CPU client, with two backends:
 //!
-//! Interchange format is HLO *text* (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax >= 0.5 serialized protos use 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.
+//! - **`xla-backend` feature** — the real path: HLO *text* artifacts
+//!   (see `python/compile/aot.py` and /opt/xla-example/README.md) are
+//!   parsed, compiled and executed through the external `xla` crate.
+//!   jax >= 0.5 serialized protos use 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//!   round-trips cleanly. The `xla` crate is not available in the
+//!   offline build image, so the dependency must be added manually
+//!   before enabling the feature (see Cargo.toml).
+//! - **default (offline stub)** — everything that does not execute an
+//!   HLO artifact works normally (sketching, aggregation, the parallel
+//!   round engine over simulated clients, accounting, experiments
+//!   plumbing); [`Executable::run`] returns a clear error.
 //!
-//! Concurrency note: the `xla` crate's handles wrap raw PJRT pointers
-//! and are not `Send`. The coordinator therefore executes artifacts from
-//! a single thread; XLA:CPU parallelizes *inside* each execution via its
-//! own intra-op thread pool, which is where the FLOPs are. Rust-side
-//! parallelism (sketch merges, data generation) uses plain `std::thread`
-//! over pure-Rust data.
+//! Concurrency: the parallel round engine executes client steps from a
+//! worker pool, so [`Runtime`] and [`Executable`] must be `Send + Sync`.
+//! The stub types trivially are. The `xla` crate's handles are `!Send`
+//! because they clone a non-atomic refcount on the shared client handle
+//! internally, so the feature-gated real backend serializes **every**
+//! xla call behind one process-wide mutex (`XLA_CALL_LOCK`) and only
+//! then asserts `Send`/`Sync`; XLA:CPU's intra-op thread pool still
+//! parallelizes the FLOPs inside each execution.
 
-use anyhow::{bail, Context, Result};
-use std::path::Path;
+use anyhow::{bail, Result};
 
 /// A typed host tensor crossing the PJRT boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -53,43 +62,6 @@ impl Tensor {
             other => bail!("expected scalar f32, got {:?}", shape_of(other)),
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Tensor::F32 { data, shape } => {
-                let l = xla::Literal::vec1(data.as_slice());
-                if shape.is_empty() {
-                    // rank-0: reshape to scalar
-                    l.reshape(&[])?
-                } else {
-                    l.reshape(shape)?
-                }
-            }
-            Tensor::I32 { data, shape } => {
-                let l = xla::Literal::vec1(data.as_slice());
-                if shape.is_empty() {
-                    l.reshape(&[])?
-                } else {
-                    l.reshape(shape)?
-                }
-            }
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape().context("output literal shape")?;
-        let dims: Vec<i64> = shape.dims().to_vec();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape: dims })
-            }
-            xla::ElementType::S32 => {
-                Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape: dims })
-            }
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
 }
 
 fn shape_of(t: &Tensor) -> &Vec<i64> {
@@ -99,61 +71,228 @@ fn shape_of(t: &Tensor) -> &Vec<i64> {
     }
 }
 
-/// Owns the PJRT client. One per process.
-pub struct Runtime {
-    client: xla::PjRtClient,
+#[cfg(feature = "xla-backend")]
+mod backend {
+    use super::Tensor;
+    use anyhow::{bail, Context, Result};
+    use std::path::Path;
+
+    impl Tensor {
+        pub(super) fn to_literal(&self) -> Result<xla::Literal> {
+            let lit = match self {
+                Tensor::F32 { data, shape } => {
+                    let l = xla::Literal::vec1(data.as_slice());
+                    if shape.is_empty() {
+                        // rank-0: reshape to scalar
+                        l.reshape(&[])?
+                    } else {
+                        l.reshape(shape)?
+                    }
+                }
+                Tensor::I32 { data, shape } => {
+                    let l = xla::Literal::vec1(data.as_slice());
+                    if shape.is_empty() {
+                        l.reshape(&[])?
+                    } else {
+                        l.reshape(shape)?
+                    }
+                }
+            };
+            Ok(lit)
+        }
+
+        pub(super) fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+            let shape = lit.array_shape().context("output literal shape")?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            match shape.ty() {
+                xla::ElementType::F32 => {
+                    Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape: dims })
+                }
+                xla::ElementType::S32 => {
+                    Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape: dims })
+                }
+                other => bail!("unsupported output element type {other:?}"),
+            }
+        }
+    }
+
+    /// Serializes every call into the `xla` crate. Its handle types are
+    /// `!Send` for a reason: they clone a **non-atomic** refcount on the
+    /// shared client handle internally, so two concurrent xla calls —
+    /// even on different executables of the same client — race the
+    /// refcount (UB). The engine's worker pool therefore funnels all
+    /// xla-crate work through this one process-wide lock; XLA:CPU still
+    /// parallelizes *inside* each execution via its intra-op thread
+    /// pool, which is where the FLOPs are, so coordinator-side
+    /// parallelism still pays for data generation and sketch merging.
+    static XLA_CALL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// Wraps an xla-crate handle so that its destructor also runs under
+    /// [`XLA_CALL_LOCK`]: dropping a handle decrements the same
+    /// non-atomic refcount the calls touch, so an unlocked drop racing a
+    /// locked call would be the exact UB the lock exists to prevent
+    /// (e.g. the documented double-compile race in `TaskArtifacts`
+    /// drops the losing `Arc<Executable>` on a worker thread).
+    struct Locked<T>(Option<T>);
+
+    impl<T> Locked<T> {
+        fn new(value: T) -> Self {
+            Locked(Some(value))
+        }
+
+        /// Borrow the handle. Callers must already hold XLA_CALL_LOCK.
+        fn get(&self) -> &T {
+            self.0.as_ref().expect("xla handle already dropped")
+        }
+    }
+
+    impl<T> Drop for Locked<T> {
+        fn drop(&mut self) {
+            // Never double-panic out of Drop on a poisoned lock.
+            let _xla = XLA_CALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+            self.0.take();
+        }
+    }
+
+    /// Owns the PJRT client. One per process.
+    pub struct Runtime {
+        client: Locked<xla::PjRtClient>,
+    }
+
+    // SAFETY: all access to the wrapped handles (and the non-atomic
+    // refcounts they clone internally) goes through XLA_CALL_LOCK —
+    // including destruction, via `Locked` — so no two threads ever
+    // touch xla-crate state concurrently.
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            let _xla = XLA_CALL_LOCK.lock().expect("xla lock poisoned");
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client: Locked::new(client) })
+        }
+
+        pub fn platform(&self) -> String {
+            let _xla = XLA_CALL_LOCK.lock().expect("xla lock poisoned");
+            self.client.get().platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+            let _xla = XLA_CALL_LOCK.lock().expect("xla lock poisoned");
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .get()
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe: Locked::new(exe), name: path.display().to_string() })
+        }
+    }
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: Locked<xla::PjRtLoadedExecutable>,
+        name: String,
+    }
+
+    // SAFETY: see `Runtime` above — every use and the destructor run
+    // under XLA_CALL_LOCK.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with host tensors; returns the flattened output tuple.
+        /// All our artifacts are lowered with `return_tuple=True`, so the
+        /// single device output is a tuple literal we decompose.
+        /// The guard spans the whole body, so the intermediate literals
+        /// and buffers also drop under the lock.
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let _xla = XLA_CALL_LOCK.lock().expect("xla lock poisoned");
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .get()
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let buffer = &result
+                .first()
+                .and_then(|r| r.first())
+                .ok_or_else(|| anyhow::anyhow!("no output buffer from {}", self.name))?;
+            let tuple_lit = buffer.to_literal_sync()?;
+            let parts = tuple_lit.to_tuple()?;
+            parts.iter().map(Tensor::from_literal).collect()
+        }
+    }
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+#[cfg(not(feature = "xla-backend"))]
+mod backend {
+    use super::Tensor;
+    use anyhow::{bail, Result};
+    use std::path::{Path, PathBuf};
+
+    const STUB_MSG: &str = "PJRT backend unavailable: this build uses the offline stub \
+         (add the `xla` crate and build with `--features xla-backend` to execute HLO artifacts)";
+
+    /// Offline stand-in for the PJRT client: construction succeeds (so
+    /// simulation paths, benches and artifact-free tests run), but any
+    /// attempt to execute an HLO artifact reports the missing backend.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Ok(Runtime { _private: () })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no XLA backend in this build)".to_string()
+        }
+
+        /// Loading defers the failure to execution so that artifact
+        /// enumeration and cache bookkeeping still work in stub builds.
+        pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+            if !path.exists() {
+                bail!("HLO artifact {} not found", path.display());
+            }
+            Ok(Executable { name: path.display().to_string(), _path: path.to_path_buf() })
+        }
     }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+    /// Stub executable: remembers its identity, refuses to run.
+    pub struct Executable {
+        name: String,
+        _path: PathBuf,
+    }
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            bail!("{STUB_MSG} (artifact: {})", self.name)
+        }
     }
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
+pub use backend::{Executable, Runtime};
 
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Execute with host tensors; returns the flattened output tuple.
-    /// All our artifacts are lowered with `return_tuple=True`, so the
-    /// single device output is a tuple literal we decompose.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let buffer = &result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow::anyhow!("no output buffer from {}", self.name))?;
-        let tuple_lit = buffer.to_literal_sync()?;
-        let parts = tuple_lit.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
+// The parallel round engine shares Runtime/Executable across worker
+// threads; both backends must uphold this.
+#[allow(dead_code)]
+fn assert_backend_is_threadsafe() {
+    fn check<T: Send + Sync>() {}
+    check::<Runtime>();
+    check::<Executable>();
 }

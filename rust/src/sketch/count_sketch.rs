@@ -8,9 +8,23 @@
 //! used on the server hot path every round: merge W client sketches,
 //! momentum/error updates, `Top-k(U(S_e))`, and the zero-out update.
 //!
+//! Construction is fallible: the sketch geometry (power-of-two width,
+//! depth <= [`crate::hashing::MAX_ROWS`]) is validated once by
+//! [`crate::hashing::SketchHasher`], so the hot-path loops can trust it.
+//!
+//! The linear ops (`add_scaled` / `scale` / `clear`) also come in
+//! row-strip variants so callers can chunk work over rows, and
+//! [`CountSketch::merge_shards`] is the fan-in primitive the parallel
+//! round engine uses to reduce per-worker scratch sketches in a fixed
+//! deterministic order.
+//!
 //! The hash spec (`crate::hashing`) is shared bit-for-bit with the Pallas
 //! kernel so sketches produced inside the AOT HLO graph and sketches
 //! produced here are interchangeable.
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
 
 use crate::hashing::SketchHasher;
 use crate::sketch::topk::{top_k_indices, SparseVec};
@@ -26,25 +40,34 @@ pub struct CountSketch {
 }
 
 impl CountSketch {
-    /// Fresh zero sketch.
-    pub fn zeros(rows: usize, cols: usize, dim: usize, seed: u64) -> Self {
-        let hasher = SketchHasher::new(rows, cols, seed);
-        CountSketch { hasher, table: vec![0f32; rows * cols], dim }
+    /// Fresh zero sketch. Errors on invalid geometry (non-power-of-two
+    /// `cols`, or `rows` outside `[1, MAX_ROWS]`).
+    pub fn zeros(rows: usize, cols: usize, dim: usize, seed: u64) -> Result<Self> {
+        let hasher = SketchHasher::new(rows, cols, seed)?;
+        Ok(CountSketch { hasher, table: vec![0f32; rows * cols], dim })
     }
 
     /// Sketch a dense vector: `S(g)`.
-    pub fn encode(rows: usize, cols: usize, seed: u64, g: &[f32]) -> Self {
-        let mut s = Self::zeros(rows, cols, g.len(), seed);
+    pub fn encode(rows: usize, cols: usize, seed: u64, g: &[f32]) -> Result<Self> {
+        let mut s = Self::zeros(rows, cols, g.len(), seed)?;
         s.accumulate_dense(g, 1.0);
-        s
+        Ok(s)
     }
 
     /// Construct from an existing table (e.g. the sketch output of the
     /// AOT client-step executable). `table` is row-major `rows x cols`.
-    pub fn from_table(rows: usize, cols: usize, dim: usize, seed: u64, table: Vec<f32>) -> Self {
-        assert_eq!(table.len(), rows * cols);
-        let hasher = SketchHasher::new(rows, cols, seed);
-        CountSketch { hasher, table, dim }
+    pub fn from_table(
+        rows: usize,
+        cols: usize,
+        dim: usize,
+        seed: u64,
+        table: Vec<f32>,
+    ) -> Result<Self> {
+        let hasher = SketchHasher::new(rows, cols, seed)?;
+        if table.len() != rows * cols {
+            bail!("sketch table has {} cells, expected {rows}x{cols}", table.len());
+        }
+        Ok(CountSketch { hasher, table, dim })
     }
 
     pub fn rows(&self) -> usize {
@@ -125,21 +148,73 @@ impl CountSketch {
     /// `self += scale * other` (sketch-space linear combination).
     pub fn add_scaled(&mut self, other: &CountSketch, scale: f32) {
         self.assert_compatible(other);
-        for (a, &b) in self.table.iter_mut().zip(&other.table) {
+        self.add_scaled_rows(other, scale, 0..self.rows());
+    }
+
+    /// `self[rows] += scale * other[rows]` over a strip of rows only —
+    /// the chunked form, letting callers split one merge across workers
+    /// by row strip while keeping per-cell op order identical to the
+    /// full-table call.
+    pub fn add_scaled_rows(&mut self, other: &CountSketch, scale: f32, rows: Range<usize>) {
+        self.assert_compatible(other);
+        debug_assert!(rows.end <= self.rows());
+        let cols = self.cols();
+        let span = rows.start * cols..rows.end * cols;
+        for (a, &b) in self.table[span.clone()].iter_mut().zip(&other.table[span]) {
             *a += scale * b;
         }
     }
 
     /// `self *= scale` (e.g. momentum decay `rho * S_u`).
     pub fn scale(&mut self, scale: f32) {
-        for a in self.table.iter_mut() {
+        self.scale_rows(scale, 0..self.rows());
+    }
+
+    /// `self[rows] *= scale` over a strip of rows only.
+    pub fn scale_rows(&mut self, scale: f32, rows: Range<usize>) {
+        debug_assert!(rows.end <= self.rows());
+        let cols = self.cols();
+        for a in self.table[rows.start * cols..rows.end * cols].iter_mut() {
             *a *= scale;
         }
     }
 
     /// Reset to the zero sketch (reuses the allocation).
     pub fn clear(&mut self) {
-        self.table.iter_mut().for_each(|x| *x = 0.0);
+        self.clear_rows(0..self.rows());
+    }
+
+    /// Zero a strip of rows only.
+    pub fn clear_rows(&mut self, rows: Range<usize>) {
+        debug_assert!(rows.end <= self.rows());
+        let cols = self.cols();
+        self.table[rows.start * cols..rows.end * cols].iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Fan-in primitive for the parallel round engine: `self += Σ shards`,
+    /// reduced strictly in slice order so the result is bitwise
+    /// reproducible for a fixed shard layout regardless of how many
+    /// worker threads produced the shards.
+    ///
+    /// The sweep is row-strip-major (for each row, add that row from
+    /// every shard) so the destination strip stays hot in cache across
+    /// the whole fan-in; per cell this performs the same
+    /// `(((self + s0) + s1) + ...)` additions as calling
+    /// [`CountSketch::add_scaled`] once per shard in order.
+    pub fn merge_shards(&mut self, shards: &[CountSketch]) {
+        for sh in shards {
+            self.assert_compatible(sh);
+        }
+        let cols = self.cols();
+        for r in 0..self.rows() {
+            let span = r * cols..(r + 1) * cols;
+            let dst = &mut self.table[span.clone()];
+            for sh in shards {
+                for (a, &b) in dst.iter_mut().zip(&sh.table[span.clone()]) {
+                    *a += b;
+                }
+            }
+        }
     }
 
     /// Unbiased point estimate of coordinate `i`: median over rows of
@@ -147,8 +222,10 @@ impl CountSketch {
     pub fn estimate(&self, i: u32) -> f32 {
         debug_assert!((i as usize) < self.dim);
         let cols = self.cols();
-        let mut vals = [0f32; 16];
-        let rows = self.rows().min(16);
+        // Construction guarantees rows <= MAX_ROWS, so the stack buffer
+        // covers every row (no silent truncation).
+        let mut vals = [0f32; crate::hashing::MAX_ROWS];
+        let rows = self.rows();
         for r in 0..rows {
             let (b, sgn) = self.hasher.bucket_sign(r, i);
             vals[r] = sgn * self.table[r * cols + b];
@@ -176,7 +253,7 @@ impl CountSketch {
         // strip to avoid d*R random accesses. Strips of 4096 coords.
         const STRIP: usize = 4096;
         let mut scratch = vec![0f32; rows * STRIP];
-        let mut vals = [0f32; 16];
+        let mut vals = [0f32; crate::hashing::MAX_ROWS];
         let mut start = 0;
         while start < self.dim {
             let len = STRIP.min(self.dim - start);
@@ -236,7 +313,7 @@ impl CountSketch {
         let rows = self.rows();
         let cols = self.cols();
         let shift = 32 - cols.trailing_zeros();
-        let mut vals = [0f32; 16];
+        let mut vals = [0f32; crate::hashing::MAX_ROWS];
         for (i, o) in out.iter_mut().enumerate() {
             let iu = i as u32;
             for r in 0..rows {
@@ -355,7 +432,7 @@ mod tests {
         let d = 10_000;
         let mut g = vec![0f32; d];
         g[1234] = 7.5;
-        let s = CountSketch::encode(R, C, SEED, &g);
+        let s = CountSketch::encode(R, C, SEED, &g).unwrap();
         assert!((s.estimate(1234) - 7.5).abs() < 1e-6);
         // all other estimates should be 0 or +-7.5 only on colliding rows;
         // median kills them since collisions across >=3 of 5 rows are
@@ -366,15 +443,46 @@ mod tests {
     }
 
     #[test]
+    fn rejects_invalid_geometry_at_construction() {
+        // Regression: depth used to be silently capped at 16 inside
+        // `estimate` (rows beyond the stack buffer were dropped from the
+        // median); now any un-representable depth is a construction error.
+        let err = CountSketch::zeros(17, 64, 100, 1).unwrap_err();
+        assert!(format!("{err}").contains("rows"), "{err}");
+        assert!(CountSketch::zeros(16, 64, 100, 1).is_ok());
+        // Non-power-of-two width is an error, not garbage buckets.
+        let err = CountSketch::zeros(5, 100, 100, 1).unwrap_err();
+        assert!(format!("{err}").contains("power of two"), "{err}");
+        assert!(CountSketch::encode(5, 96, 1, &[1.0; 8]).is_err());
+        assert!(CountSketch::from_table(3, 24, 8, 1, vec![0.0; 72]).is_err());
+        // from_table additionally validates the cell count.
+        let err = CountSketch::from_table(3, 64, 8, 1, vec![0.0; 10]).unwrap_err();
+        assert!(format!("{err}").contains("cells"), "{err}");
+    }
+
+    #[test]
+    fn deep_sketch_estimates_use_every_row() {
+        // With the old 16-row cap this sketch would estimate from a
+        // truncated median; at exactly MAX_ROWS all rows participate.
+        let d = 500;
+        let mut g = vec![0f32; d];
+        g[7] = 3.0;
+        let s = CountSketch::encode(crate::hashing::MAX_ROWS, 256, 3, &g).unwrap();
+        assert!((s.estimate(7) - 3.0).abs() < 1e-6);
+        let all = s.estimate_all();
+        assert_eq!(all[7], s.estimate(7));
+    }
+
+    #[test]
     fn linearity_encode_of_sum_equals_sum_of_encodes() {
         check("sketch linearity", 30, |g| {
             let d = g.usize_in(10, 2000);
             let a = g.vec_f32(d, d + 1, -5.0, 5.0);
             let b = g.vec_f32(d, d + 1, -5.0, 5.0);
             let sum: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
-            let mut sa = CountSketch::encode(3, 256, 7, &a);
-            let sb = CountSketch::encode(3, 256, 7, &b);
-            let ssum = CountSketch::encode(3, 256, 7, &sum);
+            let mut sa = CountSketch::encode(3, 256, 7, &a).unwrap();
+            let sb = CountSketch::encode(3, 256, 7, &b).unwrap();
+            let ssum = CountSketch::encode(3, 256, 7, &sum).unwrap();
             sa.add_scaled(&sb, 1.0);
             for (x, y) in sa.table().iter().zip(ssum.table()) {
                 assert!((x - y).abs() < 1e-4, "linearity violated: {x} vs {y}");
@@ -389,19 +497,65 @@ mod tests {
             let d = 500;
             let w = g.usize_in(2, 8);
             let grads: Vec<Vec<f32>> = (0..w).map(|_| g.vec_f32(d, d + 1, -1.0, 1.0)).collect();
-            let mut agg = CountSketch::zeros(3, 128, d, 99);
+            let mut agg = CountSketch::zeros(3, 128, d, 99).unwrap();
             for gr in &grads {
-                let s = CountSketch::encode(3, 128, 99, gr);
+                let s = CountSketch::encode(3, 128, 99, gr).unwrap();
                 agg.add_scaled(&s, 1.0 / w as f32);
             }
             let mean: Vec<f32> = (0..d)
                 .map(|i| grads.iter().map(|gr| gr[i]).sum::<f32>() / w as f32)
                 .collect();
-            let direct = CountSketch::encode(3, 128, 99, &mean);
+            let direct = CountSketch::encode(3, 128, 99, &mean).unwrap();
             for (x, y) in agg.table().iter().zip(direct.table()) {
                 assert!((x - y).abs() < 1e-4);
             }
         });
+    }
+
+    #[test]
+    fn merge_shards_is_bitwise_sequential_fan_in() {
+        let d = 4000;
+        let mut rng = crate::util::Rng::new(31);
+        let shards: Vec<CountSketch> = (0..6)
+            .map(|_| {
+                let g: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+                CountSketch::encode(5, 512, 9, &g).unwrap()
+            })
+            .collect();
+        let mut via_merge = CountSketch::zeros(5, 512, d, 9).unwrap();
+        via_merge.merge_shards(&shards);
+        let mut via_adds = CountSketch::zeros(5, 512, d, 9).unwrap();
+        for s in &shards {
+            via_adds.add_scaled(s, 1.0);
+        }
+        for (a, b) in via_merge.table().iter().zip(via_adds.table()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "merge_shards must match ordered adds exactly");
+        }
+    }
+
+    #[test]
+    fn row_strip_ops_compose_to_full_table_ops() {
+        let d = 2000;
+        let mut rng = crate::util::Rng::new(77);
+        let g: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let other = CountSketch::encode(5, 256, 4, &g).unwrap();
+
+        let mut whole = CountSketch::encode(5, 256, 4, &g).unwrap();
+        let mut strips = whole.clone();
+        whole.add_scaled(&other, 0.5);
+        strips.add_scaled_rows(&other, 0.5, 0..2);
+        strips.add_scaled_rows(&other, 0.5, 2..5);
+        assert_eq!(whole.table(), strips.table());
+
+        whole.scale(0.25);
+        strips.scale_rows(0.25, 0..1);
+        strips.scale_rows(0.25, 1..5);
+        assert_eq!(whole.table(), strips.table());
+
+        whole.clear();
+        strips.clear_rows(0..3);
+        strips.clear_rows(3..5);
+        assert_eq!(whole.table(), strips.table());
     }
 
     #[test]
@@ -421,8 +575,8 @@ mod tests {
                 dense[i as usize] = v;
             }
             let sv = SparseVec::from_pairs(d, pairs);
-            let s1 = CountSketch::encode(3, 64, 5, &dense);
-            let mut s2 = CountSketch::zeros(3, 64, d, 5);
+            let s1 = CountSketch::encode(3, 64, 5, &dense).unwrap();
+            let mut s2 = CountSketch::zeros(3, 64, d, 5).unwrap();
             s2.accumulate_sparse(&sv, 1.0);
             for (x, y) in s1.table().iter().zip(s2.table()) {
                 assert!((x - y).abs() < 1e-5);
@@ -436,7 +590,7 @@ mod tests {
         check("heavy hitter recovery", 10, |g| {
             let d = 20_000;
             let v = g.heavy_vec(d, 10, 10.0, 0.05);
-            let s = CountSketch::encode(5, 2048, 42, &v);
+            let s = CountSketch::encode(5, 2048, 42, &v).unwrap();
             let norm = l2_norm(&v);
             for (i, &x) in v.iter().enumerate() {
                 if x.abs() > 5.0 {
@@ -463,7 +617,7 @@ mod tests {
         for x in g.iter_mut() {
             *x += rng.next_gaussian() as f32 * 0.01;
         }
-        let s = CountSketch::encode(5, 4096, 17, &g);
+        let s = CountSketch::encode(5, 4096, 17, &g).unwrap();
         let top = s.top_k(5);
         let mut got = top.idx.clone();
         got.sort();
@@ -476,7 +630,7 @@ mod tests {
         let mut g = vec![0f32; d];
         g[10] = 100.0;
         g[20] = -80.0;
-        let mut s = CountSketch::encode(5, 512, 3, &g);
+        let mut s = CountSketch::encode(5, 512, 3, &g).unwrap();
         let delta = s.top_k(2);
         s.zero_out_sparse(&delta);
         assert!(s.estimate(10).abs() < 1e-3);
@@ -488,7 +642,7 @@ mod tests {
         let d = 1000;
         let mut g = vec![0f32; d];
         g[10] = 100.0;
-        let mut s = CountSketch::encode(5, 512, 3, &g);
+        let mut s = CountSketch::encode(5, 512, 3, &g).unwrap();
         let delta = s.top_k(1);
         assert_eq!(delta.idx, vec![10]);
         s.subtract_sparse(&delta);
@@ -498,7 +652,7 @@ mod tests {
     #[test]
     fn scale_and_clear() {
         let g = vec![1f32; 100];
-        let mut s = CountSketch::encode(3, 64, 1, &g);
+        let mut s = CountSketch::encode(3, 64, 1, &g).unwrap();
         let before: f32 = s.table().iter().map(|x| x.abs()).sum();
         s.scale(0.5);
         let after: f32 = s.table().iter().map(|x| x.abs()).sum();
@@ -511,7 +665,7 @@ mod tests {
     fn l2_estimate_tracks_true_norm() {
         check("l2 estimate", 10, |g| {
             let v = g.vec_f32(5000, 5001, -1.0, 1.0);
-            let s = CountSketch::encode(5, 4096, 23, &v);
+            let s = CountSketch::encode(5, 4096, 23, &v).unwrap();
             let est = s.l2_estimate();
             let truth = l2_norm(&v);
             assert!(
@@ -526,7 +680,7 @@ mod tests {
         let mut rng = crate::util::Rng::new(77);
         let d = 3000;
         let v: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-        let s = CountSketch::encode(5, 1024, 6, &v);
+        let s = CountSketch::encode(5, 1024, 6, &v).unwrap();
         let all = s.estimate_all();
         for i in (0..d).step_by(97) {
             assert_eq!(all[i], s.estimate(i as u32), "coord {i}");
@@ -591,7 +745,7 @@ mod tests {
             let mut rng = crate::util::Rng::new(rows as u64);
             let d = 2000;
             let v: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
-            let s = CountSketch::encode(rows, 256, 9, &v);
+            let s = CountSketch::encode(rows, 256, 9, &v).unwrap();
             let all = s.estimate_all();
             for i in (0..d).step_by(53) {
                 assert_eq!(all[i], s.estimate(i as u32), "rows={rows} coord {i}");
@@ -602,8 +756,8 @@ mod tests {
     #[test]
     #[should_panic]
     fn incompatible_sketches_refuse_to_merge() {
-        let a = CountSketch::zeros(3, 64, 10, 1);
-        let b = CountSketch::zeros(3, 64, 10, 2); // different seed
+        let a = CountSketch::zeros(3, 64, 10, 1).unwrap();
+        let b = CountSketch::zeros(3, 64, 10, 2).unwrap(); // different seed
         let mut a = a;
         a.add_scaled(&b, 1.0);
     }

@@ -21,6 +21,8 @@
 //! applied to all live sketches. The paper's experiments use a single
 //! vanilla sketch (§5); ablation abl3 compares all three.
 
+use anyhow::{bail, Result};
+
 use crate::sketch::count_sketch::CountSketch;
 use crate::sketch::topk::{top_k_indices, SparseVec};
 
@@ -48,8 +50,8 @@ pub struct VanillaAccumulator {
 }
 
 impl VanillaAccumulator {
-    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64) -> Self {
-        VanillaAccumulator { sketch: CountSketch::zeros(rows, cols, dim, seed) }
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64) -> Result<Self> {
+        Ok(VanillaAccumulator { sketch: CountSketch::zeros(rows, cols, dim, seed)? })
     }
 }
 
@@ -80,11 +82,14 @@ pub struct RingWindowSketch {
 }
 
 impl RingWindowSketch {
-    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Self {
-        assert!(window >= 1);
-        let sketches =
-            (0..window).map(|_| CountSketch::zeros(rows, cols, dim, seed)).collect();
-        RingWindowSketch { sketches, window, t: 0 }
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Result<Self> {
+        if window < 1 {
+            bail!("ring window must be >= 1");
+        }
+        let sketches = (0..window)
+            .map(|_| CountSketch::zeros(rows, cols, dim, seed))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RingWindowSketch { sketches, window, t: 0 })
     }
 
     /// Estimates from the sketch holding the *longest* complete window
@@ -163,16 +168,18 @@ pub struct LogWindowSketch {
 }
 
 impl LogWindowSketch {
-    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Self {
-        assert!(window >= 1);
+    pub fn new(rows: usize, cols: usize, dim: usize, seed: u64, window: usize) -> Result<Self> {
+        if window < 1 {
+            bail!("log window must be >= 1");
+        }
         let levels = (usize::BITS - window.next_power_of_two().leading_zeros()) as usize;
         let mut sketches = Vec::new();
         let mut periods = Vec::new();
         for j in 0..levels.max(1) {
-            sketches.push(CountSketch::zeros(rows, cols, dim, seed));
+            sketches.push(CountSketch::zeros(rows, cols, dim, seed)?);
             periods.push(1usize << j);
         }
-        LogWindowSketch { sketches, periods, t: 0 }
+        Ok(LogWindowSketch { sketches, periods, t: 0 })
     }
 
     pub fn num_sketches(&self) -> usize {
@@ -236,19 +243,19 @@ pub fn make_accumulator(
     cols: usize,
     dim: usize,
     seed: u64,
-) -> anyhow::Result<Box<dyn ErrorAccumulator>> {
+) -> Result<Box<dyn ErrorAccumulator>> {
     if kind == "vanilla" {
-        return Ok(Box::new(VanillaAccumulator::new(rows, cols, dim, seed)));
+        return Ok(Box::new(VanillaAccumulator::new(rows, cols, dim, seed)?));
     }
     if let Some(rest) = kind.strip_prefix("ring:") {
         let i: usize = rest.parse()?;
-        return Ok(Box::new(RingWindowSketch::new(rows, cols, dim, seed, i)));
+        return Ok(Box::new(RingWindowSketch::new(rows, cols, dim, seed, i)?));
     }
     if let Some(rest) = kind.strip_prefix("log:") {
         let i: usize = rest.parse()?;
-        return Ok(Box::new(LogWindowSketch::new(rows, cols, dim, seed, i)));
+        return Ok(Box::new(LogWindowSketch::new(rows, cols, dim, seed, i)?));
     }
-    anyhow::bail!("unknown error accumulator kind '{kind}' (vanilla | ring:I | log:I)")
+    bail!("unknown error accumulator kind '{kind}' (vanilla | ring:I | log:I)")
 }
 
 #[cfg(test)]
@@ -257,7 +264,7 @@ mod tests {
 
     fn sketch_of(d: usize, pairs: &[(u32, f32)]) -> CountSketch {
         let sv = SparseVec::from_pairs(d, pairs.to_vec());
-        let mut s = CountSketch::zeros(5, 512, d, 13);
+        let mut s = CountSketch::zeros(5, 512, d, 13).unwrap();
         s.accumulate_sparse(&sv, 1.0);
         s
     }
@@ -266,7 +273,7 @@ mod tests {
     fn ring_window_forgets_old_noise_but_keeps_window_signal() {
         let d = 2000;
         let window = 4;
-        let mut ring = RingWindowSketch::new(5, 512, d, 13, window);
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, window).unwrap();
         // Inject weak signal at coord 100 for `window` consecutive steps:
         // individually small, heavy in the window sum.
         for _ in 0..window {
@@ -283,7 +290,7 @@ mod tests {
     fn ring_window_expires_signal_older_than_window() {
         let d = 2000;
         let window = 3;
-        let mut ring = RingWindowSketch::new(5, 512, d, 13, window);
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, window).unwrap();
         let up = sketch_of(d, &[(55, 10.0)]);
         ring.add_scaled(&up, 1.0);
         // Advance far past the window with zero updates.
@@ -296,16 +303,16 @@ mod tests {
 
     #[test]
     fn log_window_uses_log_many_sketches() {
-        let lw = LogWindowSketch::new(3, 128, 100, 1, 16);
+        let lw = LogWindowSketch::new(3, 128, 100, 1, 16).unwrap();
         assert_eq!(lw.num_sketches(), 5); // windows 1,2,4,8,16
-        let lw1 = LogWindowSketch::new(3, 128, 100, 1, 1);
+        let lw1 = LogWindowSketch::new(3, 128, 100, 1, 1).unwrap();
         assert_eq!(lw1.num_sketches(), 1);
     }
 
     #[test]
     fn log_window_covers_window_signal() {
         let d = 2000;
-        let mut lw = LogWindowSketch::new(5, 512, d, 13, 8);
+        let mut lw = LogWindowSketch::new(5, 512, d, 13, 8).unwrap();
         for _ in 0..6 {
             let up = sketch_of(d, &[(70, 1.5)]);
             lw.add_scaled(&up, 1.0);
@@ -318,7 +325,7 @@ mod tests {
     #[test]
     fn vanilla_never_forgets() {
         let d = 500;
-        let mut v = VanillaAccumulator::new(5, 512, d, 13);
+        let mut v = VanillaAccumulator::new(5, 512, d, 13).unwrap();
         let up = sketch_of(d, &[(9, 3.0)]);
         v.add_scaled(&up, 1.0);
         for _ in 0..20 {
@@ -331,7 +338,7 @@ mod tests {
     #[test]
     fn zero_out_applies_to_all_window_sketches() {
         let d = 500;
-        let mut ring = RingWindowSketch::new(5, 512, d, 13, 4);
+        let mut ring = RingWindowSketch::new(5, 512, d, 13, 4).unwrap();
         let up = sketch_of(d, &[(9, 30.0)]);
         ring.add_scaled(&up, 1.0);
         let delta = ring.top_k(1);
@@ -350,9 +357,9 @@ mod tests {
 
     #[test]
     fn memory_footprints_ordered() {
-        let v = VanillaAccumulator::new(3, 64, 10, 1);
-        let ring = RingWindowSketch::new(3, 64, 10, 1, 16);
-        let log = LogWindowSketch::new(3, 64, 10, 1, 16);
+        let v = VanillaAccumulator::new(3, 64, 10, 1).unwrap();
+        let ring = RingWindowSketch::new(3, 64, 10, 1, 16).unwrap();
+        let log = LogWindowSketch::new(3, 64, 10, 1, 16).unwrap();
         assert!(v.cells() < log.cells());
         assert!(log.cells() < ring.cells());
     }

@@ -7,7 +7,7 @@
 //! with today.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fetchsgd::model::{build_dataset, DataScale};
 use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
@@ -25,7 +25,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn smoke_setup(runtime: Rc<Runtime>, dir: &PathBuf) -> (TaskArtifacts, Vec<f32>) {
+fn smoke_setup(runtime: Arc<Runtime>, dir: &PathBuf) -> (TaskArtifacts, Vec<f32>) {
     let manifest = Manifest::load(dir).unwrap();
     let arts = TaskArtifacts::new(runtime, &manifest, "smoke").unwrap();
     let w = arts.init_weights().unwrap();
@@ -49,7 +49,7 @@ fn cross_language_sketch_equality() {
     // kernel *inside* the HLO graph == sketch computed by the Rust
     // CountSketch on the gradient from the same graph.
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, w) = smoke_setup(runtime, &dir);
     let tm = arts.manifest.clone();
     let cols = tm.sketch.cols_options[0];
@@ -63,7 +63,7 @@ fn cross_language_sketch_equality() {
         let grad_exe = arts.executable("client_grad").unwrap();
         let (loss2, grad) = run_client_grad(&grad_exe, &w, &batch).unwrap();
         assert!((loss1 - loss2).abs() < 1e-5);
-        let rust_sk = CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &grad);
+        let rust_sk = CountSketch::encode(tm.sketch.rows, cols, tm.sketch.seed, &grad).unwrap();
         let gmax = grad.iter().fold(0f32, |a, &b| a.max(b.abs())).max(1.0);
         for (a, b) in sk.table().iter().zip(rust_sk.table()) {
             assert!((a - b).abs() < 1e-4 * gmax, "client {client}: {a} vs {b}");
@@ -74,7 +74,7 @@ fn cross_language_sketch_equality() {
 #[test]
 fn gradients_are_finite_and_nonzero() {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, w) = smoke_setup(runtime, &dir);
     let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
     let batch = ds.client_batch(1, 1);
@@ -91,7 +91,7 @@ fn gradient_matches_finite_differences() {
     // coordinates — validates the whole lower-to-execute pipeline, not
     // just shapes.
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, w) = smoke_setup(runtime, &dir);
     let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
     let batch = ds.client_batch(0, 9);
@@ -123,7 +123,7 @@ fn gradient_matches_finite_differences() {
 #[test]
 fn eval_stats_are_consistent() {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, w) = smoke_setup(runtime, &dir);
     let ds = build_dataset(&arts.manifest, &DataScale::smoke()).unwrap();
     let exe = arts.executable("eval").unwrap();
@@ -137,7 +137,7 @@ fn eval_stats_are_consistent() {
 #[test]
 fn fedavg_delta_zero_at_zero_lr_and_descends_otherwise() {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, w) = smoke_setup(runtime, &dir);
     let tm = arts.manifest.clone();
     let k = tm.fedavg_steps[0];
@@ -161,7 +161,7 @@ fn fedavg_delta_zero_at_zero_lr_and_descends_otherwise() {
 #[test]
 fn unknown_artifact_kind_errors_cleanly() {
     let Some(dir) = artifacts_dir() else { return };
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let (arts, _) = smoke_setup(runtime, &dir);
     let err = match arts.executable("nonexistent_kind") {
         Ok(_) => panic!("expected error for unknown artifact kind"),

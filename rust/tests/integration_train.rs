@@ -3,7 +3,7 @@
 //! compression accounting must reflect each method's wire format.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
 use fetchsgd::coordinator::Trainer;
@@ -32,6 +32,7 @@ fn smoke_cfg(strategy: StrategyConfig, rounds: usize) -> TrainConfig {
         log_path: None,
         baseline_rounds: None,
         verbose: false,
+        parallelism: 0,
     }
 }
 
@@ -63,7 +64,7 @@ fn every_strategy_reduces_training_loss() {
     if !artifacts_ready() {
         return;
     }
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     for (name, strat) in all_strategies() {
         let mut t = Trainer::with_runtime(smoke_cfg(strat, 25), runtime.clone()).unwrap();
         let s = t.run().unwrap();
@@ -82,7 +83,7 @@ fn runs_are_deterministic() {
     if !artifacts_ready() {
         return;
     }
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let run = || {
         let mut t = Trainer::with_runtime(
             smoke_cfg(
@@ -113,7 +114,7 @@ fn accounting_matches_wire_formats() {
     if !artifacts_ready() {
         return;
     }
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     let manifest =
         fetchsgd::runtime::artifact::Manifest::load(&smoke_cfg(all_strategies()[0].1.clone(), 1).artifacts_dir)
             .unwrap();
@@ -173,7 +174,7 @@ fn sliding_window_error_accumulator_trains() {
     if !artifacts_ready() {
         return;
     }
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     for window in ["ring:4", "log:8"] {
         let mut t = Trainer::with_runtime(
             smoke_cfg(
@@ -200,7 +201,7 @@ fn trainer_rejects_invalid_configs() {
     if !artifacts_ready() {
         return;
     }
-    let runtime = Rc::new(Runtime::cpu().unwrap());
+    let runtime = Arc::new(Runtime::cpu().unwrap());
     // cols not lowered for this task
     let err = Trainer::with_runtime(
         smoke_cfg(

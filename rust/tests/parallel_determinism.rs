@@ -1,0 +1,145 @@
+//! Parallel determinism: the round engine's thread count must be a pure
+//! throughput knob. Same config + seed ⇒ bitwise-identical final
+//! weights, losses, and run summaries at `parallelism = 1` and
+//! `parallelism = 8`.
+//!
+//! The multi-round loops here run on simulated clients (no PJRT, no
+//! artifacts) for fetchsgd and a dense baseline; a Trainer-level check
+//! over the real smoke artifacts runs when `artifacts/` is present.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimDenseClient, SimSketchClient};
+use fetchsgd::compression::uncompressed::UncompressedServer;
+use fetchsgd::compression::{ClientCompute, ServerAggregator};
+use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
+use fetchsgd::coordinator::{engine, ClientSelector, Trainer};
+use fetchsgd::model::DataScale;
+use fetchsgd::runtime::Runtime;
+use fetchsgd::util::rng::derive_seed;
+
+const DIM: usize = 30_000;
+const ROWS: usize = 5;
+const COLS: usize = 1024;
+const SEED: u64 = 0xD5;
+const ROUNDS: usize = 5;
+const COHORT: usize = 24; // > MAX_SHARDS, so shards hold multiple slots
+
+/// A miniature training loop over the sim stack; returns
+/// (final weights, all per-round losses).
+fn sim_train(
+    client: &dyn ClientCompute,
+    server: &mut dyn ServerAggregator,
+    threads: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let selector = ClientSelector::new(dataset.num_clients, COHORT, SEED);
+    let mut w = vec![0f32; DIM];
+    let mut losses = Vec::new();
+    for round in 0..ROUNDS {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let out = engine::run_round(
+            client,
+            &artifacts,
+            &dataset,
+            &participants,
+            &weights,
+            &server.upload_spec(),
+            &w,
+            0.05,
+            derive_seed(SEED, round as u64),
+            threads,
+        )
+        .unwrap();
+        losses.extend(out.losses);
+        server.finish(out.merged, &mut w, 0.05).unwrap();
+    }
+    (w, losses)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn fetchsgd_is_bitwise_identical_across_parallelism() {
+    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 };
+    let run = |threads: usize| {
+        let mut server = FetchSgdServer::new(
+            ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+        )
+        .unwrap();
+        sim_train(&client, &mut server, threads)
+    };
+    let (w1, l1) = run(1);
+    let (w8, l8) = run(8);
+    assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
+    assert_eq!(bits(&w1), bits(&w8), "fetchsgd weights diverge at parallelism 8");
+    assert_eq!(bits(&l1), bits(&l8), "fetchsgd losses diverge at parallelism 8");
+}
+
+#[test]
+fn dense_baseline_is_bitwise_identical_across_parallelism() {
+    let client = SimDenseClient { dim: DIM, heavy: 4 };
+    let run = |threads: usize| {
+        let mut server = UncompressedServer::new(DIM, 0.9);
+        sim_train(&client, &mut server, threads)
+    };
+    let (w1, l1) = run(1);
+    let (w8, l8) = run(8);
+    assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
+    assert_eq!(bits(&w1), bits(&w8), "dense weights diverge at parallelism 8");
+    assert_eq!(bits(&l1), bits(&l8), "dense losses diverge at parallelism 8");
+}
+
+#[test]
+fn trainer_runs_are_bitwise_identical_across_parallelism() {
+    // Full-stack variant over the real smoke artifacts; skips politely
+    // on a fresh checkout like the other integration tests.
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let runtime = Arc::new(Runtime::cpu().unwrap());
+    let run = |parallelism: usize| {
+        let cfg = TrainConfig {
+            task: "smoke".into(),
+            strategy: StrategyConfig::FetchSgd {
+                k: 50,
+                cols: 512,
+                rho: 0.9,
+                error_update: "zero_out".into(),
+                error_window: "vanilla".into(),
+                masking: true,
+            },
+            rounds: 6,
+            clients_per_round: 4,
+            lr: LrSchedule::Triangular { peak: 0.2, pivot: 0.25 },
+            scale: DataScale::smoke(),
+            eval_every: 0,
+            seed: 5,
+            artifacts_dir: dir.clone(),
+            log_path: None,
+            baseline_rounds: None,
+            verbose: false,
+            parallelism,
+        };
+        let mut t = Trainer::with_runtime(cfg, runtime.clone()).unwrap();
+        let s = t.run().unwrap();
+        (t.weights().to_vec(), s)
+    };
+    let (w1, s1) = run(1);
+    let (w8, s8) = run(8);
+    assert_eq!(bits(&w1), bits(&w8), "trainer weights diverge at parallelism 8");
+    assert_eq!(s1.final_loss.to_bits(), s8.final_loss.to_bits());
+    assert_eq!(s1.eval_loss.to_bits(), s8.eval_loss.to_bits());
+    assert_eq!(s1.accuracy.to_bits(), s8.accuracy.to_bits());
+    assert_eq!(s1.upload_bytes, s8.upload_bytes);
+    assert_eq!(s1.download_bytes, s8.download_bytes);
+}

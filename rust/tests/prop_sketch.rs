@@ -22,7 +22,7 @@ fn prop_merge_is_commutative_and_associative() {
         let a = g.vec_f32(d, d + 1, -2.0, 2.0);
         let b = g.vec_f32(d, d + 1, -2.0, 2.0);
         let c = g.vec_f32(d, d + 1, -2.0, 2.0);
-        let s = |v: &[f32]| CountSketch::encode(ROWS, COLS, SEED, v);
+        let s = |v: &[f32]| CountSketch::encode(ROWS, COLS, SEED, v).unwrap();
         // (a+b)+c == a+(b+c), a+b == b+a in sketch space
         let mut ab_c = s(&a);
         ab_c.add_scaled(&s(&b), 1.0);
@@ -43,9 +43,9 @@ fn prop_scale_distributes_over_encode() {
         let v = g.vec_f32(d, d + 1, -3.0, 3.0);
         let alpha = g.f32_in(-2.0, 2.0);
         let scaled: Vec<f32> = v.iter().map(|&x| alpha * x).collect();
-        let mut s1 = CountSketch::encode(ROWS, COLS, SEED, &v);
+        let mut s1 = CountSketch::encode(ROWS, COLS, SEED, &v).unwrap();
         s1.scale(alpha);
-        let s2 = CountSketch::encode(ROWS, COLS, SEED, &scaled);
+        let s2 = CountSketch::encode(ROWS, COLS, SEED, &scaled).unwrap();
         for (x, y) in s1.table().iter().zip(s2.table()) {
             assert!((x - y).abs() < 1e-3);
         }
@@ -65,15 +65,15 @@ fn prop_server_side_equals_client_side_error_accumulation() {
             .map(|_| (0..w_clients).map(|_| g.vec_f32(d, d + 1, -1.0, 1.0)).collect())
             .collect();
         // server-side: merge sketches per round, accumulate
-        let mut server = CountSketch::zeros(ROWS, COLS, d, SEED);
+        let mut server = CountSketch::zeros(ROWS, COLS, d, SEED).unwrap();
         for round in &grads {
             for gr in round {
-                server.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, gr), 1.0 / w_clients as f32);
+                server.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, gr).unwrap(), 1.0 / w_clients as f32);
             }
         }
         // client-side: each client sums its own gradients densely, then
         // sketches once at the end
-        let mut client = CountSketch::zeros(ROWS, COLS, d, SEED);
+        let mut client = CountSketch::zeros(ROWS, COLS, d, SEED).unwrap();
         for ci in 0..w_clients {
             let mut acc = vec![0f32; d];
             for round in &grads {
@@ -81,7 +81,7 @@ fn prop_server_side_equals_client_side_error_accumulation() {
                     *a += x / w_clients as f32;
                 }
             }
-            client.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, &acc), 1.0);
+            client.add_scaled(&CountSketch::encode(ROWS, COLS, SEED, &acc).unwrap(), 1.0);
         }
         for (x, y) in server.table().iter().zip(client.table()) {
             assert!((x - y).abs() < 1e-3, "{x} vs {y}");
@@ -96,7 +96,7 @@ fn prop_estimates_bounded_by_tail_noise() {
     check("estimate error bound", 15, |g| {
         let d = 5000;
         let v = g.heavy_vec(d, 5, 20.0, 0.1);
-        let s = CountSketch::encode(ROWS, 2048, g.u64(), &v);
+        let s = CountSketch::encode(ROWS, 2048, g.u64(), &v).unwrap();
         let bound = 5.0 * l2_norm(&v) / (2048f64).sqrt();
         let mut violations = 0;
         for i in (0..d).step_by(37) {
@@ -125,7 +125,7 @@ fn prop_topk_of_unsketch_matches_true_topk_for_separated_vectors() {
             planted.push(i);
             v[i] = 30.0 * (j + 1) as f32 * if g.bool() { 1.0 } else { -1.0 };
         }
-        let s = CountSketch::encode(ROWS, 4096, g.u64(), &v);
+        let s = CountSketch::encode(ROWS, 4096, g.u64(), &v).unwrap();
         let mut got = s.top_k(k).idx;
         got.sort();
         let mut want: Vec<u32> = planted.iter().map(|&i| i as u32).collect();
@@ -139,7 +139,7 @@ fn prop_zero_out_is_idempotent() {
     check("zero_out idempotent", 20, |g| {
         let d = 600;
         let v = g.vec_f32(d, d + 1, -2.0, 2.0);
-        let mut s = CountSketch::encode(ROWS, COLS, SEED, &v);
+        let mut s = CountSketch::encode(ROWS, COLS, SEED, &v).unwrap();
         let delta = s.top_k(g.usize_in(1, 20));
         s.zero_out_sparse(&delta);
         let t1 = s.table().to_vec();
@@ -201,14 +201,14 @@ fn prop_merged_sketch_estimates_mean_gradient() {
         let w = g.usize_in(2, 6);
         let heavy_coord = g.usize_in(0, d);
         let mut mean = vec![0f32; d];
-        let mut agg = CountSketch::zeros(ROWS, 4096, d, SEED);
+        let mut agg = CountSketch::zeros(ROWS, 4096, d, SEED).unwrap();
         for _ in 0..w {
             let mut gr = g.heavy_vec(d, 0, 0.0, 0.05);
             gr[heavy_coord] += 8.0;
             for (m, &x) in mean.iter_mut().zip(&gr) {
                 *m += x / w as f32;
             }
-            agg.add_scaled(&CountSketch::encode(ROWS, 4096, SEED, &gr), 1.0 / w as f32);
+            agg.add_scaled(&CountSketch::encode(ROWS, 4096, SEED, &gr).unwrap(), 1.0 / w as f32);
         }
         let est = agg.estimate(heavy_coord as u32);
         assert!(
