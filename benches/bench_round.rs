@@ -1,6 +1,6 @@
 //! End-to-end round latency and round-engine scaling.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! 1. **Engine throughput (no artifacts needed)** — a 100-client
 //!    FetchSGD cohort of simulated clients (synthetic gradient +
@@ -8,7 +8,10 @@
 //!    step) driven through the parallel round engine at 1/2/4/N
 //!    threads. Reports rounds/s and speedup vs single-thread; the
 //!    shard-merge design keeps all of these bitwise identical.
-//! 2. **Artifact round decomposition (requires `make artifacts`)** —
+//! 2. **Codec throughput (no artifacts needed)** — encode/decode GB/s
+//!    per wire codec over a dense-payload-sized value buffer, bounding
+//!    what wire mode costs on top of client compute.
+//! 3. **Artifact round decomposition (requires `make artifacts`)** —
 //!    client compute (PJRT execution of the fused grad+sketch HLO),
 //!    server sketch update, and data generation, establishing where the
 //!    bottleneck sits (the paper's contribution is the coordinator; it
@@ -19,17 +22,23 @@ use std::sync::Arc;
 use fetchsgd::bench_util::{bench, print_table, BenchResult};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
-use fetchsgd::compression::ServerAggregator;
+use fetchsgd::compression::{ClientUpload, ServerAggregator};
 use fetchsgd::coordinator::engine;
 use fetchsgd::model::{build_dataset, DataScale};
 use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
 use fetchsgd::runtime::exec::run_client_step;
 use fetchsgd::runtime::Runtime;
 use fetchsgd::sketch::CountSketch;
+use fetchsgd::wire::{encode_upload, Codec, F16LE, F32LE};
 
 /// One simulated FetchSGD round (client compute + sharded aggregation +
-/// server finish) at a given worker count.
-fn engine_round_bench(threads: usize) -> anyhow::Result<BenchResult> {
+/// server finish) at a given worker count, optionally through the wire
+/// encoding. Scratch accumulators are reused across iterations exactly
+/// as the Trainer reuses them across rounds.
+fn engine_round_bench(
+    threads: usize,
+    wire: Option<&'static dyn Codec>,
+) -> anyhow::Result<BenchResult> {
     const DIM: usize = 200_000;
     const ROWS: usize = 5;
     const COLS: usize = 4096;
@@ -39,30 +48,68 @@ fn engine_round_bench(threads: usize) -> anyhow::Result<BenchResult> {
     let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED)?;
     let dataset = SimDataset { num_clients: 10_000 };
     let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 8 };
-    let mut server =
-        FetchSgdServer::new(ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")?;
+    let mut server = FetchSgdServer::new(
+        ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+    )?;
     let participants: Vec<usize> = (0..COHORT).collect();
     let mut w = vec![0f32; DIM];
+    let mut scratch = Vec::new();
     let mut round = 0u64;
-    Ok(bench(&format!("engine round W=100 d=200k threads={threads}"), 1, 5, || {
+    let tag = wire.map(|c| c.name()).unwrap_or("off");
+    Ok(bench(&format!("engine round W=100 d=200k threads={threads} wire={tag}"), 1, 5, || {
         round += 1;
         let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
         let weights = server.begin_round(&sizes);
-        let out = engine::run_round(
-            &client,
-            &artifacts,
-            &dataset,
-            &participants,
-            &weights,
-            &server.upload_spec(),
-            &w,
-            0.1,
-            round,
+        let ctx = engine::RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: round,
             threads,
-        )
-        .expect("sim round");
-        server.finish(out.merged, &mut w, 0.1).expect("server finish")
+            wire,
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+                .expect("sim round");
+        let update = server.finish(&out.merged, 0.1).expect("server finish");
+        scratch.push(out.merged);
+        update.apply(&mut w);
+        update
     }))
+}
+
+/// Encode/decode throughput per codec over a dense 4M-value payload
+/// (16 MB of f32): GB/s of *decoded* f32 data each way.
+fn codec_throughput() -> Vec<BenchResult> {
+    const N: usize = 1 << 22;
+    let vals: Vec<f32> = (0..N).map(|i| (i as f32 * 0.37).sin()).collect();
+    let upload = ClientUpload::Dense(vals);
+    let gb = (N * 4) as f64 / 1e9;
+    let mut results = Vec::new();
+    for codec in [&F32LE as &'static dyn Codec, &F16LE as &'static dyn Codec] {
+        let r = bench(&format!("wire encode 4M f32 [{}]", codec.name()), 1, 5, || {
+            encode_upload(&upload, codec)
+        });
+        eprintln!("  encode {:>6}: {:>6.2} GB/s", codec.name(), gb / r.mean_s);
+        results.push(r);
+        let frame = encode_upload(&upload, codec);
+        let mut sink = 0f32;
+        let r = bench(&format!("wire decode 4M f32 [{}]", codec.name()), 1, 5, || {
+            let parsed = fetchsgd::wire::Frame::parse(&frame).expect("parse");
+            match parsed.body {
+                fetchsgd::wire::Body::Dense { values, .. } => {
+                    values.for_each(&mut |v| sink += v);
+                }
+                _ => unreachable!(),
+            }
+            sink
+        });
+        eprintln!("  decode {:>6}: {:>6.2} GB/s", codec.name(), gb / r.mean_s);
+        results.push(r);
+    }
+    results
 }
 
 fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
@@ -77,7 +124,7 @@ fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
     let mut results = Vec::new();
     let mut base = None;
     for &t in &counts {
-        let r = engine_round_bench(t)?;
+        let r = engine_round_bench(t, None)?;
         if t == 1 {
             base = Some(r.mean_s);
         }
@@ -90,12 +137,26 @@ fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
         }
         results.push(r);
     }
+    // Wire-mode overhead at the widest sweep point.
+    let wide = *counts.last().unwrap();
+    for codec in [&F32LE as &'static dyn Codec, &F16LE as &'static dyn Codec] {
+        let r = engine_round_bench(wide, Some(codec))?;
+        eprintln!(
+            "  threads={wide:<3} {:>8.1} ms/round  (wire={})",
+            r.mean_s * 1e3,
+            codec.name()
+        );
+        results.push(r);
+    }
     Ok(results)
 }
 
 fn main() -> anyhow::Result<()> {
     eprintln!("== round engine scaling (simulated 100-client fetchsgd cohort) ==");
     let mut results = engine_scaling()?;
+
+    eprintln!("== wire codec throughput (encode/decode, dense 4M-value payload) ==");
+    results.extend(codec_throughput());
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

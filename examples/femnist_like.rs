@@ -36,6 +36,7 @@ fn base() -> TrainConfig {
         baseline_rounds: Some(40),
         verbose: false,
         parallelism: 0,
+        wire: None,
     }
 }
 

@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         baseline_rounds: Some(rounds),
         verbose: true,
         parallelism: 0,
+        wire: None,
     };
 
     eprintln!("== e2e: FetchSGD finetune of {task} over 800 persona clients, {rounds} rounds ==");

@@ -9,12 +9,23 @@
 //! - per-round download for sparse methods is the round's broadcast
 //!   nnz; FedAvg/uncompressed download the full model.
 //!
+//! ## Measured vs. idealized
+//!
+//! The numbers above are an accounting *fiction*: footnote 5 assumes a
+//! zero-overhead sparse index encoding and no framing. When wire mode
+//! is on (`TrainConfig.wire`), every upload and broadcast additionally
+//! passes through the real framed encoding (`crate::wire`) and the
+//! **measured** frame bytes — header, shape, explicit `u32` indices,
+//! codec payload — are recorded in [`CommStats::wire_upload_bytes`] /
+//! [`CommStats::wire_download_bytes`]. Measured is always ≥ idealized
+//! under `f32le` (pure overhead); a lossy codec like `f16le` can dip
+//! below it on dense payloads (2 bytes/value). Figures can then show
+//! both conventions side by side.
+//!
 //! [`StalenessTracker`] implements the stricter model the paper
 //! discusses qualitatively in §5: a client downloads the union of all
 //! sparse updates since it last held the current model, so infrequent
 //! participants pay more. Both numbers are logged.
-
-use crate::compression::RoundUpdate;
 
 /// Running communication totals for one training run.
 #[derive(Clone, Debug, Default)]
@@ -25,6 +36,11 @@ pub struct CommStats {
     pub download_bytes: u64,
     /// Total bytes downloaded (staleness-aware convention).
     pub download_bytes_stale: u64,
+    /// Total *measured* wire-frame bytes uploaded (0 when wire mode is
+    /// off; see the module docs on measured vs. idealized).
+    pub wire_upload_bytes: u64,
+    /// Total *measured* wire-frame bytes broadcast.
+    pub wire_download_bytes: u64,
     pub rounds: u64,
     pub client_rounds: u64,
 }
@@ -34,15 +50,18 @@ impl CommStats {
         &mut self,
         participants: usize,
         upload_per_client: u64,
-        update: &RoundUpdate,
-        dim: usize,
+        download_per_client: u64,
         stale_download: u64,
+        wire_upload_per_client: u64,
+        wire_download_per_client: u64,
     ) {
         self.rounds += 1;
         self.client_rounds += participants as u64;
         self.upload_bytes += upload_per_client * participants as u64;
-        self.download_bytes += update.download_bytes(dim) * participants as u64;
+        self.download_bytes += download_per_client * participants as u64;
         self.download_bytes_stale += stale_download;
+        self.wire_upload_bytes += wire_upload_per_client * participants as u64;
+        self.wire_download_bytes += wire_download_per_client * participants as u64;
     }
 
     /// Compression ratios vs an uncompressed run of `baseline_rounds`
@@ -114,6 +133,7 @@ impl StalenessTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::RoundUpdate;
     use crate::sketch::SparseVec;
 
     #[test]
@@ -122,13 +142,17 @@ mod tests {
         let update = RoundUpdate::Sparse(SparseVec::from_pairs(100, vec![(1, 1.0), (2, 2.0)]));
         // 10 rounds, 2 clients, 40-byte uploads (10 floats)
         for _ in 0..10 {
-            c.record_round(2, 40, &update, 100, 0);
+            c.record_round(2, 40, update.payload_bytes(), 0, 64, 48);
         }
         let r = c.ratios(10, 2, 100);
         // dense: 4*100*10*2 = 8000 bytes each way
         assert!((r.upload - 8000.0 / 800.0).abs() < 1e-9);
         assert!((r.download - 8000.0 / 160.0).abs() < 1e-9);
         assert!((r.overall - 16000.0 / 960.0).abs() < 1e-9);
+        // measured frame bytes accumulate independently of the estimate
+        assert_eq!(c.wire_upload_bytes, 64 * 2 * 10);
+        assert_eq!(c.wire_download_bytes, 48 * 2 * 10);
+        assert!(c.wire_upload_bytes >= c.upload_bytes);
     }
 
     #[test]

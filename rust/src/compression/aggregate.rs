@@ -5,7 +5,22 @@
 //! once, strategy-agnostic: a [`RoundAccum`] absorbs uploads as they
 //! arrive — no `Vec<ClientUpload>` of the whole cohort is ever
 //! buffered — and accumulators produced by different workers reduce
-//! with [`reduce_shards`] in a fixed order.
+//! with [`reduce_shards_in_place`] in a fixed order.
+//!
+//! Uploads arrive in one of two forms:
+//!
+//! - [`RoundAccum::absorb`] — an in-memory [`ClientUpload`] (the
+//!   default path);
+//! - [`RoundAccum::absorb_bytes`] — an encoded wire frame
+//!   (`crate::wire`), decoded *streaming*: values fold straight from
+//!   the frame bytes into the accumulator without materializing an
+//!   intermediate upload. Under the lossless `f32le` codec the two
+//!   paths perform bit-identical arithmetic in the same order.
+//!
+//! Accumulators are designed for reuse: the round engine keeps its
+//! shard scratch alive across rounds ([`RoundAccum::reset`] zeroes in
+//! place via `clear_rows`/`fill`) instead of allocating and zeroing up
+//! to `MAX_SHARDS` fresh tables every round.
 //!
 //! Determinism contract: for a fixed *shard layout* (how slots are
 //! assigned to shards, fixed by the engine independently of thread
@@ -19,6 +34,7 @@ use anyhow::{bail, Result};
 
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 use crate::sketch::CountSketch;
+use crate::wire::{Body, Frame};
 
 enum Acc {
     Sketch(CountSketch),
@@ -28,6 +44,7 @@ enum Acc {
 /// A partial weighted sum of uploads (one worker's scratch, or the
 /// whole round's merged result).
 pub struct RoundAccum {
+    spec: UploadSpec,
     acc: Acc,
     absorbed: usize,
 }
@@ -40,7 +57,27 @@ impl RoundAccum {
             }
             UploadSpec::Dense { dim } => Acc::Dense(vec![0f32; *dim]),
         };
-        Ok(RoundAccum { acc, absorbed: 0 })
+        Ok(RoundAccum { spec: spec.clone(), acc, absorbed: 0 })
+    }
+
+    /// The upload shape this accumulator was built for.
+    pub fn spec(&self) -> &UploadSpec {
+        &self.spec
+    }
+
+    /// Whether this accumulator can be reused for `spec` (same shape).
+    pub fn matches_spec(&self, spec: &UploadSpec) -> bool {
+        &self.spec == spec
+    }
+
+    /// Zero in place, keeping the allocation — the cross-round reuse
+    /// path (ROADMAP: don't re-allocate up to 16 accumulators a round).
+    pub fn reset(&mut self) {
+        match &mut self.acc {
+            Acc::Sketch(s) => s.clear_rows(0..s.rows()),
+            Acc::Dense(v) => v.fill(0.0),
+        }
+        self.absorbed = 0;
     }
 
     /// Number of uploads absorbed (across merges).
@@ -90,9 +127,53 @@ impl RoundAccum {
         Ok(())
     }
 
+    /// `self += weight * decode(frame)` without materializing the
+    /// upload: values stream straight from the (already length- and
+    /// index-validated) frame payload into the accumulator. Shape, seed,
+    /// and kind mismatches fail loudly via
+    /// [`UploadSpec::validate_frame`]; under `f32le` this performs the
+    /// same additions in the same order as [`RoundAccum::absorb`], so
+    /// wire mode is bitwise identical to in-memory aggregation.
+    pub fn absorb_bytes(&mut self, frame_bytes: &[u8], weight: f32) -> Result<()> {
+        let frame = Frame::parse(frame_bytes)?;
+        self.spec.validate_frame(&frame)?;
+        match (&mut self.acc, &frame.body) {
+            (Acc::Sketch(acc), Body::Sketch { values, .. }) => {
+                let table = acc.table_mut();
+                let mut i = 0;
+                values.for_each(&mut |v| {
+                    table[i] += weight * v;
+                    i += 1;
+                });
+                debug_assert_eq!(i, table.len());
+            }
+            (Acc::Dense(acc), Body::Dense { values, .. }) => {
+                let mut i = 0;
+                values.for_each(&mut |v| {
+                    acc[i] += weight * v;
+                    i += 1;
+                });
+                debug_assert_eq!(i, acc.len());
+            }
+            (Acc::Dense(acc), Body::Sparse { idx, values, .. }) => {
+                // Parse validated the index array (strictly increasing,
+                // < dim), so the paired walk cannot write out of bounds.
+                let mut cursor = idx.chunks_exact(4);
+                values.for_each(&mut |v| {
+                    let chunk = cursor.next().expect("frame parse matched idx to values");
+                    let i = u32::from_le_bytes(chunk.try_into().unwrap());
+                    acc[i as usize] += weight * v;
+                });
+            }
+            _ => unreachable!("validate_frame pinned the frame kind"),
+        }
+        self.absorbed += 1;
+        Ok(())
+    }
+
     /// The merged sketch (fetchsgd). Errors for dense aggregators.
-    pub fn into_sketch(self) -> Result<CountSketch> {
-        match self.acc {
+    pub fn as_sketch(&self) -> Result<&CountSketch> {
+        match &self.acc {
             Acc::Sketch(s) => Ok(s),
             Acc::Dense(_) => bail!("round accumulator holds a dense sum, not a sketch"),
         }
@@ -100,6 +181,22 @@ impl RoundAccum {
 
     /// The merged dense vector (all baselines). Errors for sketch
     /// aggregators.
+    pub fn as_dense(&self) -> Result<&[f32]> {
+        match &self.acc {
+            Acc::Dense(v) => Ok(v),
+            Acc::Sketch(_) => bail!("round accumulator holds a sketch, not a dense sum"),
+        }
+    }
+
+    /// Consuming form of [`RoundAccum::as_sketch`] (tests/diagnostics).
+    pub fn into_sketch(self) -> Result<CountSketch> {
+        match self.acc {
+            Acc::Sketch(s) => Ok(s),
+            Acc::Dense(_) => bail!("round accumulator holds a dense sum, not a sketch"),
+        }
+    }
+
+    /// Consuming form of [`RoundAccum::as_dense`] (tests/diagnostics).
     pub fn into_dense(self) -> Result<Vec<f32>> {
         match self.acc {
             Acc::Dense(v) => Ok(v),
@@ -108,46 +205,47 @@ impl RoundAccum {
     }
 }
 
-/// Fan-in: reduce per-worker shard accumulators **in slice order** into
-/// one merged accumulator. Sketch shards reduce through
-/// [`CountSketch::merge_shards`]; dense shards fold elementwise.
-pub fn reduce_shards(shards: Vec<RoundAccum>) -> Result<RoundAccum> {
-    let mut iter = shards.into_iter();
-    let Some(first) = iter.next() else {
-        bail!("reduce_shards: no shards");
-    };
-    let mut absorbed = first.absorbed;
-    match first.acc {
-        Acc::Sketch(mut base) => {
-            let mut rest = Vec::new();
-            for sh in iter {
-                absorbed += sh.absorbed;
-                match sh.acc {
-                    Acc::Sketch(s) => rest.push(s),
-                    Acc::Dense(_) => bail!("mixed shard kinds in reduce_shards"),
+/// Fan-in: reduce shard accumulators **in slice order** into
+/// `shards[0]`, leaving the tail shards' allocations intact for reuse.
+/// Sketch shards reduce through [`CountSketch::merge_shard_refs`];
+/// dense shards fold elementwise. Per cell this performs
+/// `((s0 + s1) + s2) + …` exactly as sequential absorbs would, so the
+/// result is bitwise reproducible for a fixed shard layout.
+pub fn reduce_shards_in_place(shards: &mut [RoundAccum]) -> Result<()> {
+    if shards.is_empty() {
+        bail!("reduce_shards_in_place: no shards");
+    }
+    let (head, rest) = shards.split_at_mut(1);
+    let tail_absorbed: usize = rest.iter().map(|s| s.absorbed).sum();
+    match &mut head[0].acc {
+        Acc::Sketch(base) => {
+            let mut refs = Vec::with_capacity(rest.len());
+            for sh in rest.iter() {
+                match &sh.acc {
+                    Acc::Sketch(s) => refs.push(s),
+                    Acc::Dense(_) => bail!("mixed shard kinds in reduce_shards_in_place"),
                 }
             }
-            base.merge_shards(&rest);
-            Ok(RoundAccum { acc: Acc::Sketch(base), absorbed })
+            base.merge_shard_refs(&refs);
         }
-        Acc::Dense(mut base) => {
-            for sh in iter {
-                absorbed += sh.absorbed;
-                match sh.acc {
+        Acc::Dense(base) => {
+            for sh in rest.iter() {
+                match &sh.acc {
                     Acc::Dense(v) => {
                         if v.len() != base.len() {
-                            bail!("shard dim mismatch in reduce_shards");
+                            bail!("shard dim mismatch in reduce_shards_in_place");
                         }
-                        for (a, &b) in base.iter_mut().zip(&v) {
+                        for (a, &b) in base.iter_mut().zip(v) {
                             *a += b;
                         }
                     }
-                    Acc::Sketch(_) => bail!("mixed shard kinds in reduce_shards"),
+                    Acc::Sketch(_) => bail!("mixed shard kinds in reduce_shards_in_place"),
                 }
             }
-            Ok(RoundAccum { acc: Acc::Dense(base), absorbed })
         }
     }
+    head[0].absorbed += tail_absorbed;
+    Ok(())
 }
 
 /// Sequential convenience: absorb `uploads[i]` with `weights[i]`, in
@@ -170,10 +268,10 @@ pub fn accumulate_uploads(
 }
 
 /// Sequential convenience driving one full server round —
-/// `begin_round → absorb each upload in order → finish` — exactly the
-/// pipeline the round engine runs in sharded form. Used by strategy
-/// unit tests and the server-cost benches so the contract lives in one
-/// place.
+/// `begin_round → absorb each upload in order → finish → apply` —
+/// exactly the pipeline the round engine runs in sharded form. Used by
+/// strategy unit tests and the server-cost benches so the contract
+/// lives in one place.
 pub fn run_server_round(
     agg: &mut dyn ServerAggregator,
     client_sizes: &[f32],
@@ -183,13 +281,16 @@ pub fn run_server_round(
 ) -> Result<RoundUpdate> {
     let weights = agg.begin_round(client_sizes);
     let merged = accumulate_uploads(&agg.upload_spec(), uploads, &weights)?;
-    agg.finish(merged, w, lr)
+    let update = agg.finish(&merged, lr)?;
+    update.apply(w);
+    Ok(update)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sketch::topk::SparseVec;
+    use crate::wire::{encode_upload, F32LE};
 
     fn sketch_spec() -> UploadSpec {
         UploadSpec::Sketch { rows: 3, cols: 128, dim: 200, seed: 11 }
@@ -219,6 +320,78 @@ mod tests {
     }
 
     #[test]
+    fn absorb_bytes_is_bitwise_identical_to_absorb_under_f32le() {
+        let mut rng = crate::util::Rng::new(13);
+        let make_upload = |rng: &mut crate::util::Rng, kind: usize| -> ClientUpload {
+            let g: Vec<f32> = (0..200).map(|_| rng.next_gaussian() as f32).collect();
+            match kind {
+                0 => ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap()),
+                1 => ClientUpload::Dense(g),
+                _ => ClientUpload::Sparse(crate::sketch::topk::top_k_sparse(&g, 17)),
+            }
+        };
+        // Sketch spec path.
+        let mut via_mem = RoundAccum::new(&sketch_spec()).unwrap();
+        let mut via_wire = RoundAccum::new(&sketch_spec()).unwrap();
+        for i in 0..3 {
+            let u = make_upload(&mut rng, 0);
+            let frame = encode_upload(&u, &F32LE);
+            via_wire.absorb_bytes(&frame, 0.3 + i as f32).unwrap();
+            via_mem.absorb(u, 0.3 + i as f32).unwrap();
+        }
+        assert_eq!(via_wire.absorbed(), 3);
+        let (mem, wire) = (via_mem.as_sketch().unwrap(), via_wire.as_sketch().unwrap());
+        for (a, b) in mem.table().iter().zip(wire.table()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Dense spec path folds dense and sparse frames alike.
+        let spec = UploadSpec::Dense { dim: 200 };
+        let mut via_mem = RoundAccum::new(&spec).unwrap();
+        let mut via_wire = RoundAccum::new(&spec).unwrap();
+        for kind in [1usize, 2] {
+            let u = make_upload(&mut rng, kind);
+            let frame = encode_upload(&u, &F32LE);
+            via_wire.absorb_bytes(&frame, 0.5).unwrap();
+            via_mem.absorb(u, 0.5).unwrap();
+        }
+        for (a, b) in via_mem.as_dense().unwrap().iter().zip(via_wire.as_dense().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn absorb_bytes_rejects_mismatched_frames() {
+        let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
+        // wrong seed
+        let s = CountSketch::zeros(3, 128, 200, 999).unwrap();
+        let frame = encode_upload(&ClientUpload::Sketch(s), &F32LE);
+        assert!(acc.absorb_bytes(&frame, 1.0).is_err());
+        // wrong kind
+        let frame = encode_upload(&ClientUpload::Dense(vec![0.0; 200]), &F32LE);
+        assert!(acc.absorb_bytes(&frame, 1.0).is_err());
+        // wrong dim on a dense aggregator
+        let mut acc = RoundAccum::new(&UploadSpec::Dense { dim: 10 }).unwrap();
+        let frame = encode_upload(&ClientUpload::Dense(vec![0.0; 4]), &F32LE);
+        assert!(acc.absorb_bytes(&frame, 1.0).is_err());
+        assert_eq!(acc.absorbed(), 0, "failed absorbs must not count");
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_zeroes_state() {
+        let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
+        let g = vec![1f32; 200];
+        acc.absorb(ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap()), 1.0)
+            .unwrap();
+        assert_eq!(acc.absorbed(), 1);
+        assert!(acc.as_sketch().unwrap().table().iter().any(|&x| x != 0.0));
+        acc.reset();
+        assert_eq!(acc.absorbed(), 0);
+        assert!(acc.as_sketch().unwrap().table().iter().all(|&x| x == 0.0));
+        assert!(acc.matches_spec(&sketch_spec()));
+        assert!(!acc.matches_spec(&UploadSpec::Dense { dim: 200 }));
+    }
+
+    #[test]
     fn sharded_reduce_is_bitwise_stable_across_layout_reuse() {
         // Same shard layout, different "thread counts" is a no-op at
         // this layer: reducing the same shard list twice is identical.
@@ -240,14 +413,20 @@ mod tests {
                 })
                 .collect::<Vec<_>>()
         };
-        let a = reduce_shards(make_shards(&mut rng)).unwrap();
+        let mut a = make_shards(&mut rng);
+        reduce_shards_in_place(&mut a).unwrap();
         let mut rng = crate::util::Rng::new(9);
-        let b = reduce_shards(make_shards(&mut rng)).unwrap();
-        assert_eq!(a.absorbed(), 6);
-        let (ta, tb) = (a.into_sketch().unwrap(), b.into_sketch().unwrap());
+        let mut b = make_shards(&mut rng);
+        reduce_shards_in_place(&mut b).unwrap();
+        assert_eq!(a[0].absorbed(), 6);
+        assert_eq!(b[0].absorbed(), 6);
+        let (ta, tb) = (a[0].as_sketch().unwrap(), b[0].as_sketch().unwrap());
         for (x, y) in ta.table().iter().zip(tb.table()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+        // tail shards keep their allocations (and contents) for reuse
+        assert_eq!(a[1].absorbed(), 2);
+        assert!(a[1].as_sketch().unwrap().table().iter().any(|&x| x != 0.0));
     }
 
     #[test]

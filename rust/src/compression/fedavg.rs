@@ -93,21 +93,17 @@ impl ServerAggregator for FedAvgServer {
         UploadSpec::Dense { dim: self.dim }
     }
 
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], _lr: f32) -> Result<RoundUpdate> {
-        let mean = merged.into_dense()?;
-        if self.rho_g > 0.0 {
-            for (m, &d) in self.momentum.iter_mut().zip(&mean) {
+    fn finish(&mut self, merged: &RoundAccum, _lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.as_dense()?;
+        let step = if self.rho_g > 0.0 {
+            for (m, &d) in self.momentum.iter_mut().zip(mean) {
                 *m = self.rho_g * *m + d;
             }
-            for (wi, &m) in w.iter_mut().zip(&self.momentum) {
-                *wi -= m;
-            }
+            self.momentum.clone()
         } else {
-            for (wi, &d) in w.iter_mut().zip(&mean) {
-                *wi -= d;
-            }
-        }
-        Ok(RoundUpdate::Dense)
+            mean.to_vec()
+        };
+        Ok(RoundUpdate::Dense(step))
     }
 }
 

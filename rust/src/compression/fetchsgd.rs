@@ -143,12 +143,11 @@ impl ServerAggregator for FetchSgdServer {
         UploadSpec::Sketch { rows: self.rows, cols: self.cols, dim: self.dim, seed: self.seed }
     }
 
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
-        assert_eq!(w.len(), self.dim);
-        let round = merged.into_sketch()?;
+    fn finish(&mut self, merged: &RoundAccum, lr: f32) -> Result<RoundUpdate> {
+        let round = merged.as_sketch()?;
         // Momentum in sketch space.
         self.momentum.scale(self.rho);
-        self.momentum.add_scaled(&round, 1.0);
+        self.momentum.add_scaled(round, 1.0);
         // Error feedback in sketch space.
         self.error.add_scaled(&self.momentum, lr);
         // Extract Δ and apply the error update rule.
@@ -162,8 +161,7 @@ impl ServerAggregator for FetchSgdServer {
             self.momentum.zero_out_sparse(&delta);
         }
         self.error.advance();
-        // w -= Δ
-        delta.add_into(w, -1.0);
+        // The broadcast Δ; the caller applies w -= Δ.
         Ok(RoundUpdate::Sparse(delta))
     }
 }

@@ -116,16 +116,16 @@ impl ServerAggregator for LocalTopKServer {
         UploadSpec::Dense { dim: self.dim }
     }
 
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
-        let mean = merged.into_dense()?;
+    fn finish(&mut self, merged: &RoundAccum, lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.as_dense()?;
         // Global momentum on the aggregated sparse update.
         let update: &[f32] = if self.rho_g > 0.0 {
-            for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+            for (m, &g) in self.momentum.iter_mut().zip(mean) {
                 *m = self.rho_g * *m + g;
             }
             &self.momentum
         } else {
-            &mean
+            mean
         };
         // The broadcast update: non-zero coords of `update` scaled by lr.
         let mut pairs = Vec::new();
@@ -135,7 +135,6 @@ impl ServerAggregator for LocalTopKServer {
             }
         }
         let sparse = SparseVec::from_pairs(self.dim, pairs);
-        sparse.add_into(w, -1.0);
         // NOTE: momentum factor masking is NOT applied to the *global*
         // momentum here. Unlike FetchSGD/true-top-k — where the server
         // extracts a k-sparse subset of an accumulated signal and
@@ -197,7 +196,7 @@ mod tests {
             })
             .collect();
         let up = server_round(&mut s, uploads, &mut w, 1.0);
-        assert_eq!(up.nnz(100), 50, "disjoint supports union");
+        assert_eq!(up.nnz(), 50, "disjoint supports union");
     }
 
     #[test]

@@ -33,7 +33,16 @@
 //! non-zero f32 payloads count, assuming a zero-overhead sparse index
 //! encoding. [`accounting`] additionally implements staleness-aware
 //! download tracking (clients fetch the union of sparse updates since
-//! their last participation) as a stricter alternative.
+//! their last participation) as a stricter alternative. When wire mode
+//! is on (`TrainConfig.wire`), uploads and broadcasts additionally
+//! round-trip through the framed binary encoding in [`crate::wire`] and
+//! the *measured* frame bytes are recorded next to the estimates.
+//!
+//! [`RoundUpdate`] is the broadcast message itself — [`ServerAggregator::finish`]
+//! produces it without touching the model, and the caller applies it
+//! with [`RoundUpdate::apply`] (possibly after a wire encode→decode, so
+//! lossy codecs affect the applied update exactly as a real deployment
+//! would).
 
 pub mod accounting;
 pub mod aggregate;
@@ -70,26 +79,44 @@ impl ClientUpload {
     }
 }
 
-/// The model update the server broadcasts after a round.
+/// The model update the server broadcasts after a round. This is the
+/// actual broadcast *message*: it carries the step values, applies to a
+/// weight vector via [`RoundUpdate::apply`], and encodes onto the wire
+/// via [`crate::wire::encode_update`].
 pub enum RoundUpdate {
-    /// k-sparse update (FetchSGD, local/true top-k).
+    /// k-sparse step (FetchSGD, local/true top-k): `w -= Δ`.
     Sparse(SparseVec),
-    /// Dense update (uncompressed, FedAvg).
-    Dense,
+    /// Dense step vector (uncompressed, FedAvg): `w -= step`.
+    Dense(Vec<f32>),
 }
 
 impl RoundUpdate {
-    pub fn download_bytes(&self, dim: usize) -> u64 {
+    /// Apply the broadcast to a weight vector: `w -= update`.
+    pub fn apply(&self, w: &mut [f32]) {
         match self {
-            RoundUpdate::Sparse(sv) => sv.payload_bytes(),
-            RoundUpdate::Dense => 4 * dim as u64,
+            RoundUpdate::Sparse(sv) => sv.add_into(w, -1.0),
+            RoundUpdate::Dense(step) => {
+                assert_eq!(step.len(), w.len(), "dense update dim mismatch");
+                for (wi, &s) in w.iter_mut().zip(step) {
+                    *wi -= s;
+                }
+            }
         }
     }
 
-    pub fn nnz(&self, dim: usize) -> usize {
+    /// Download payload bytes under the paper's idealized accounting
+    /// convention (non-zero f32 values only, zero-overhead indices).
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            RoundUpdate::Sparse(sv) => sv.payload_bytes(),
+            RoundUpdate::Dense(step) => 4 * step.len() as u64,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
         match self {
             RoundUpdate::Sparse(sv) => sv.nnz(),
-            RoundUpdate::Dense => dim,
+            RoundUpdate::Dense(step) => step.len(),
         }
     }
 }
@@ -107,6 +134,45 @@ pub struct ClientResult {
 pub enum UploadSpec {
     Sketch { rows: usize, cols: usize, dim: usize, seed: u64 },
     Dense { dim: usize },
+}
+
+impl UploadSpec {
+    /// Validate a parsed wire frame against the shape this aggregator
+    /// consumes. Kind, geometry, dimension, and hash-seed mismatches all
+    /// fail loudly — a client on a stale sketch seed must never be
+    /// silently folded into the round. (Frame-level integrity — magic,
+    /// version, lengths, index bounds — is already enforced by
+    /// [`crate::wire::Frame::parse`].)
+    pub fn validate_frame(&self, frame: &crate::wire::Frame<'_>) -> Result<()> {
+        use crate::wire::Body;
+        match (self, &frame.body) {
+            (
+                UploadSpec::Sketch { rows, cols, dim, seed },
+                Body::Sketch { rows: fr, cols: fc, dim: fd, seed: fs, .. },
+            ) => {
+                if (fr, fc, fd, fs) != (rows, cols, dim, seed) {
+                    anyhow::bail!(
+                        "sketch frame {fr}x{fc} (dim {fd}, seed {fs}) incompatible with \
+                         expected {rows}x{cols} (dim {dim}, seed {seed})"
+                    );
+                }
+                Ok(())
+            }
+            (UploadSpec::Sketch { .. }, _) => {
+                anyhow::bail!("aggregator expects sketch frames, got a {:?} frame", frame.kind())
+            }
+            (UploadSpec::Dense { dim }, Body::Dense { dim: fd, .. })
+            | (UploadSpec::Dense { dim }, Body::Sparse { dim: fd, .. }) => {
+                if fd != dim {
+                    anyhow::bail!("frame dim {fd} != aggregator dim {dim}");
+                }
+                Ok(())
+            }
+            (UploadSpec::Dense { .. }, Body::Sketch { .. }) => {
+                anyhow::bail!("aggregator expects dense/sparse frames, got a sketch frame")
+            }
+        }
+    }
 }
 
 /// The client half of a strategy: one client's local work for a round.
@@ -151,7 +217,9 @@ pub trait ServerAggregator: Send {
     /// allocation and upload validation in [`aggregate::RoundAccum`]).
     fn upload_spec(&self) -> UploadSpec;
 
-    /// Consume the merged weighted sum, update `w` in place, and return
-    /// the broadcast update for download accounting.
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate>;
+    /// Consume the merged weighted sum (by reference — the accumulator's
+    /// allocation is reused across rounds) and produce the broadcast
+    /// update. Must NOT touch the model: the caller applies the update
+    /// via [`RoundUpdate::apply`], optionally after a wire round-trip.
+    fn finish(&mut self, merged: &RoundAccum, lr: f32) -> Result<RoundUpdate>;
 }

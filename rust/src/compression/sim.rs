@@ -152,6 +152,34 @@ impl ClientCompute for SimSketchClient {
     }
 }
 
+/// Local-top-k-shaped sim client: sparse (k-sparse gradient) uploads —
+/// the third wire payload kind, exercised by the wire-mode tests.
+pub struct SimTopKClient {
+    pub dim: usize,
+    pub heavy: usize,
+    pub k: usize,
+}
+
+impl ClientCompute for SimTopKClient {
+    fn name(&self) -> &'static str {
+        "sim_local_topk"
+    }
+
+    fn client_round(
+        &self,
+        _artifacts: &TaskArtifacts,
+        _w: &[f32],
+        batch: &Batch,
+        client: usize,
+        _stacked: Option<(Tensor, Tensor, Tensor)>,
+        _lr: f32,
+    ) -> Result<ClientResult> {
+        let g = synth_grad(self.dim, self.heavy, client, batch_round_seed(batch));
+        let sparse = crate::sketch::topk::top_k_sparse(&g, self.k);
+        Ok(ClientResult { loss: sim_loss(&g), upload: ClientUpload::Sparse(sparse) })
+    }
+}
+
 /// Dense-baseline sim client (uncompressed / true top-k shape).
 pub struct SimDenseClient {
     pub dim: usize,

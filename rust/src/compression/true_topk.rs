@@ -90,11 +90,11 @@ impl ServerAggregator for TrueTopKServer {
         UploadSpec::Dense { dim: self.dim }
     }
 
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
-        let mean = merged.into_dense()?;
+    fn finish(&mut self, merged: &RoundAccum, lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.as_dense()?;
         // Dense momentum + error feedback — the exact (unsketched)
         // counterpart of FetchSGD's server update.
-        for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+        for (m, &g) in self.momentum.iter_mut().zip(mean) {
             *m = self.rho * *m + g;
         }
         for (e, &m) in self.error.iter_mut().zip(&self.momentum) {
@@ -110,7 +110,6 @@ impl ServerAggregator for TrueTopKServer {
             }
         }
         let delta = SparseVec::from_pairs(self.dim, pairs);
-        delta.add_into(w, -1.0);
         Ok(RoundUpdate::Sparse(delta))
     }
 }

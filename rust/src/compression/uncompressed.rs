@@ -40,21 +40,17 @@ impl ServerAggregator for UncompressedServer {
         UploadSpec::Dense { dim: self.dim }
     }
 
-    fn finish(&mut self, merged: RoundAccum, w: &mut [f32], lr: f32) -> Result<RoundUpdate> {
-        let mean = merged.into_dense()?;
-        if self.rho_g > 0.0 {
-            for (m, &g) in self.momentum.iter_mut().zip(&mean) {
+    fn finish(&mut self, merged: &RoundAccum, lr: f32) -> Result<RoundUpdate> {
+        let mean = merged.as_dense()?;
+        let step: Vec<f32> = if self.rho_g > 0.0 {
+            for (m, &g) in self.momentum.iter_mut().zip(mean) {
                 *m = self.rho_g * *m + g;
             }
-            for (wi, &m) in w.iter_mut().zip(&self.momentum) {
-                *wi -= lr * m;
-            }
+            self.momentum.iter().map(|&m| lr * m).collect()
         } else {
-            for (wi, &g) in w.iter_mut().zip(&mean) {
-                *wi -= lr * g;
-            }
-        }
-        Ok(RoundUpdate::Dense)
+            mean.iter().map(|&g| lr * g).collect()
+        };
+        Ok(RoundUpdate::Dense(step))
     }
 }
 
@@ -83,8 +79,9 @@ mod tests {
         ];
         let up = server_round(&mut s, u, &mut w, 0.5);
         assert_eq!(w, vec![0.0, 1.0, 0.5]);
-        assert!(matches!(up, RoundUpdate::Dense));
-        assert_eq!(up.download_bytes(3), 12);
+        assert!(matches!(up, RoundUpdate::Dense(_)));
+        assert_eq!(up.payload_bytes(), 12);
+        assert_eq!(up.nnz(), 3);
     }
 
     #[test]

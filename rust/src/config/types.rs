@@ -44,6 +44,16 @@ pub enum StrategyConfig {
     },
 }
 
+/// Normalize the `wire` config value: "off"/"" = no wire mode, anything
+/// else names a codec (validated against the registry at Trainer
+/// construction, so typos fail before any round runs).
+fn parse_wire(v: &str) -> Option<String> {
+    match v {
+        "" | "off" | "none" => None,
+        codec => Some(codec.to_string()),
+    }
+}
+
 impl StrategyConfig {
     pub fn name(&self) -> &'static str {
         match self {
@@ -88,6 +98,14 @@ pub struct TrainConfig {
     /// `min(clients_per_round, 16)` buy nothing (the shard count must
     /// stay machine-invariant to keep the fp reduction tree fixed).
     pub parallelism: usize,
+    /// Wire mode: `Some(codec)` round-trips every upload and broadcast
+    /// through the framed binary encoding of `crate::wire` under the
+    /// named codec ("f32le" | "f16le"), recording *measured* frame
+    /// bytes next to the paper-convention estimates. `None` keeps
+    /// uploads in memory (estimates only). Under "f32le" the training
+    /// trajectory is bitwise identical to wire-off; "f16le" quantizes
+    /// the payloads (lossy, half the value bytes).
+    pub wire: Option<String>,
 }
 
 impl TrainConfig {
@@ -114,6 +132,7 @@ impl TrainConfig {
             baseline_rounds: None,
             verbose: false,
             parallelism: 0,
+            wire: None,
         }
     }
 
@@ -155,6 +174,7 @@ impl TrainConfig {
             baseline_rounds: v.get("baseline_rounds").and_then(|b| b.as_usize()),
             verbose: v.opt_bool("verbose", false),
             parallelism: v.opt_usize("parallelism", 0),
+            wire: parse_wire(v.opt_str("wire", "off")),
         })
     }
 
@@ -209,6 +229,7 @@ impl TrainConfig {
                 "baseline_rounds" => self.baseline_rounds = Some(val.parse()?),
                 "verbose" => self.verbose = val.parse()?,
                 "parallelism" => self.parallelism = val.parse()?,
+                "wire" => self.wire = parse_wire(val),
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -318,6 +339,11 @@ mod tests {
         assert_eq!(cfg.rounds, 99);
         assert_eq!(cfg.scale.num_clients, 42);
         assert_eq!(cfg.parallelism, 4);
+        assert_eq!(cfg.wire, None, "wire defaults to off");
+        cfg.apply_overrides(&["wire=f16le".into()]).unwrap();
+        assert_eq!(cfg.wire.as_deref(), Some("f16le"));
+        cfg.apply_overrides(&["wire=off".into()]).unwrap();
+        assert_eq!(cfg.wire, None);
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, .. } => assert_eq!(k, 7),
             _ => panic!(),

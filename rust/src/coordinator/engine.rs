@@ -13,13 +13,16 @@
 //! 2. Each shard absorbs its slots in increasing slot order (one worker
 //!    owns a shard at a time, and walks its slots in order).
 //! 3. Shards are reduced strictly in shard order
-//!    ([`crate::compression::aggregate::reduce_shards`], which uses
-//!    [`crate::sketch::CountSketch::merge_shards`] for sketch shards).
+//!    ([`crate::compression::aggregate::reduce_shards_in_place`], which
+//!    uses [`crate::sketch::CountSketch::merge_shard_refs`] for sketch
+//!    shards).
 //! 4. Per-slot losses are written into slot-indexed cells and summed in
 //!    slot order by the caller.
 //!
 //! Threads only change *which worker* runs a shard, never the
-//! floating-point reduction tree.
+//! floating-point reduction tree. Wire mode ([`RoundCtx::wire`]) doesn't
+//! either, under the lossless `f32le` codec: encode→`absorb_bytes`
+//! performs the same additions in the same order as in-memory absorbs.
 //!
 //! ## Scheduling
 //!
@@ -28,14 +31,26 @@
 //! shards, each shard holds `~W/S` clients, so the pool load-balances
 //! at shard granularity while the per-shard scratch memory stays
 //! bounded at `S` accumulators regardless of cohort size.
+//!
+//! ## Scratch reuse
+//!
+//! Shard accumulators are taken from a caller-owned `scratch` pool and
+//! reset in place (workers zero their own shard, in parallel) instead
+//! of being allocated fresh: at large `dim`, re-allocating and paging
+//! in up to `MAX_SHARDS` tables every round is measurable. The caller
+//! gets the merged accumulator back in [`RoundOutput::merged`] and
+//! returns it to the pool once the server is done with it (see
+//! `coordinator::trainer`).
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-use crate::compression::aggregate::{reduce_shards, RoundAccum};
+use crate::compression::aggregate::{reduce_shards_in_place, RoundAccum};
 use crate::compression::{ClientCompute, UploadSpec};
 use crate::data::FedDataset;
 use crate::runtime::artifact::TaskArtifacts;
+use crate::wire::{encode_upload, Codec};
 
 /// Upper bound on shard accumulators per round. Bounds both the final
 /// fan-in cost and the scratch memory (`MAX_SHARDS` dense vectors /
@@ -57,69 +72,120 @@ pub fn resolve_parallelism(configured: usize) -> usize {
     }
 }
 
+/// The round-invariant context for [`run_round`]: what to run, on what
+/// data, against which weights, and how (threads / wire codec).
+pub struct RoundCtx<'a> {
+    pub client: &'a dyn ClientCompute,
+    pub artifacts: &'a TaskArtifacts,
+    pub dataset: &'a dyn FedDataset,
+    /// Current model weights (read-only during the round).
+    pub w: &'a [f32],
+    pub lr: f32,
+    pub round_seed: u64,
+    /// Worker threads (clamped to [1, shard count]).
+    pub threads: usize,
+    /// When set, every upload round-trips through the framed wire
+    /// encoding under this codec: the engine encodes each
+    /// `ClientUpload` to a frame and the shard accumulator decodes it
+    /// streaming ([`RoundAccum::absorb_bytes`]), recording measured
+    /// frame bytes alongside the idealized estimate.
+    pub wire: Option<&'a dyn Codec>,
+}
+
 /// Everything one round of client compute produces.
 pub struct RoundOutput {
     /// Per-slot client training loss, in participant order.
     pub losses: Vec<f32>,
-    /// Merged weighted upload sum (`Σ λ_i · upload_i`).
+    /// Merged weighted upload sum (`Σ λ_i · upload_i`). Return it to the
+    /// scratch pool after the server consumes it.
     pub merged: RoundAccum,
-    /// Payload bytes of slot 0's upload (all uploads of a strategy are
-    /// the same size; used for communication accounting).
+    /// Payload bytes of slot 0's upload under the paper's idealized
+    /// accounting (all uploads of a strategy are the same size).
     pub upload_bytes_per_client: u64,
+    /// Measured wire-frame bytes of slot 0's upload (0 when wire mode
+    /// is off).
+    pub wire_upload_bytes_per_client: u64,
 }
 
 struct ShardOut {
     accum: RoundAccum,
     /// (slot, loss) pairs for the slots this shard owns.
     losses: Vec<(usize, f32)>,
-    /// Upload payload bytes of this shard's lowest slot.
+    /// Idealized upload payload bytes of this shard's lowest slot.
     payload_bytes: u64,
+    /// Measured wire bytes of this shard's lowest slot (wire mode only).
+    wire_bytes: u64,
 }
 
 /// Execute one federated round's client work: for each participant
 /// slot, generate the batch, run the client compute, and absorb the
 /// upload (weighted by `weights[slot]`) into the slot's shard
-/// accumulator. Returns the fully merged accumulator and per-slot
-/// losses.
-#[allow(clippy::too_many_arguments)]
+/// accumulator — through the wire encoding when `ctx.wire` is set.
+/// Returns the fully merged accumulator and per-slot losses.
+///
+/// `scratch` is the reusable shard-accumulator pool: entries matching
+/// `spec` are reset and reused, anything else is dropped and rebuilt.
 pub fn run_round(
-    client: &dyn ClientCompute,
-    artifacts: &TaskArtifacts,
-    dataset: &dyn FedDataset,
+    ctx: &RoundCtx<'_>,
     participants: &[usize],
     weights: &[f32],
     spec: &UploadSpec,
-    w: &[f32],
-    lr: f32,
-    round_seed: u64,
-    threads: usize,
+    scratch: &mut Vec<RoundAccum>,
 ) -> Result<RoundOutput> {
     assert_eq!(participants.len(), weights.len(), "one weight per participant");
     let slots = participants.len();
     let shards = shard_count(slots);
-    let threads = threads.clamp(1, shards);
-    let stacked_k = client.wants_stacked_batches();
+    let threads = ctx.threads.clamp(1, shards);
+    let stacked_k = ctx.client.wants_stacked_batches();
+
+    // Refill the scratch pool: keep spec-compatible accumulators (reset
+    // happens in the worker, so zeroing parallelizes), rebuild the rest.
+    scratch.retain(|a| a.matches_spec(spec));
+    while scratch.len() < shards {
+        scratch.push(RoundAccum::new(spec)?);
+    }
+    let cells: Vec<Mutex<Option<RoundAccum>>> =
+        scratch.drain(..).map(|a| Mutex::new(Some(a))).collect();
 
     let run_shard = |shard: usize| -> Result<ShardOut> {
-        let mut accum = RoundAccum::new(spec)?;
+        let mut accum = cells[shard]
+            .lock()
+            .expect("scratch cell poisoned")
+            .take()
+            .expect("each shard claims its scratch exactly once");
+        accum.reset();
         let mut losses = Vec::with_capacity(slots / shards + 1);
         let mut payload_bytes = 0u64;
+        let mut wire_bytes = 0u64;
         let mut slot = shard;
         while slot < slots {
             let c = participants[slot];
-            let batch = dataset.client_batch(c, round_seed);
-            let stacked = stacked_k.map(|k| dataset.client_batches_stacked(c, k, round_seed));
-            let res = client
-                .client_round(artifacts, w, &batch, c, stacked, lr)
+            let batch = ctx.dataset.client_batch(c, ctx.round_seed);
+            let stacked =
+                stacked_k.map(|k| ctx.dataset.client_batches_stacked(c, k, ctx.round_seed));
+            let res = ctx
+                .client
+                .client_round(ctx.artifacts, ctx.w, &batch, c, stacked, ctx.lr)
                 .with_context(|| format!("client {c} (slot {slot})"))?;
             if slot == shard {
                 payload_bytes = res.upload.payload_bytes();
             }
             losses.push((slot, res.loss));
-            accum.absorb(res.upload, weights[slot])?;
+            match ctx.wire {
+                Some(codec) => {
+                    let frame = encode_upload(&res.upload, codec);
+                    if slot == shard {
+                        wire_bytes = frame.len() as u64;
+                    }
+                    accum
+                        .absorb_bytes(&frame, weights[slot])
+                        .with_context(|| format!("wire upload from client {c} (slot {slot})"))?;
+                }
+                None => accum.absorb(res.upload, weights[slot])?,
+            }
             slot += shards;
         }
-        Ok(ShardOut { accum, losses, payload_bytes })
+        Ok(ShardOut { accum, losses, payload_bytes, wire_bytes })
     };
 
     let mut shard_outs: Vec<Option<Result<ShardOut>>> = (0..shards).map(|_| None).collect();
@@ -158,19 +224,32 @@ pub fn run_round(
     // Surface the lowest-shard error first (deterministic failure too).
     let mut losses = vec![0f32; slots];
     let mut upload_bytes_per_client = 0u64;
+    let mut wire_upload_bytes_per_client = 0u64;
     let mut accums = Vec::with_capacity(shards);
     for (shard, out) in shard_outs.into_iter().enumerate() {
         let out = out.expect("every shard scheduled")?;
         if shard == 0 {
             upload_bytes_per_client = out.payload_bytes;
+            wire_upload_bytes_per_client = out.wire_bytes;
         }
         for (slot, loss) in out.losses {
             losses[slot] = loss;
         }
         accums.push(out.accum);
     }
-    let merged = reduce_shards(accums)?;
-    Ok(RoundOutput { losses, merged, upload_bytes_per_client })
+    reduce_shards_in_place(&mut accums)?;
+    if accums[0].absorbed() != slots {
+        bail!("absorbed {} uploads for {slots} slots", accums[0].absorbed());
+    }
+    // Shard 0 carries the merged sum; the rest go back to the pool.
+    let merged = accums.swap_remove(0);
+    scratch.extend(accums);
+    Ok(RoundOutput {
+        losses,
+        merged,
+        upload_bytes_per_client,
+        wire_upload_bytes_per_client,
+    })
 }
 
 #[cfg(test)]
@@ -178,13 +257,14 @@ mod tests {
     use super::*;
     use crate::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
     use crate::compression::ServerAggregator;
+    use crate::wire::F32LE;
 
     const DIM: usize = 5000;
     const ROWS: usize = 5;
     const COLS: usize = 512;
     const SEED: u64 = 21;
 
-    fn sim_round(threads: usize, w_cohort: usize) -> (Vec<f32>, Vec<f32>) {
+    fn sim_round(threads: usize, w_cohort: usize, wire: bool) -> (Vec<f32>, Vec<f32>) {
         let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
         let dataset = SimDataset { num_clients: 100 };
         let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
@@ -192,21 +272,29 @@ mod tests {
         let weights = vec![1.0 / w_cohort as f32; w_cohort];
         let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
         let w = vec![0f32; DIM];
-        let out = run_round(
-            &client,
-            &artifacts,
-            &dataset,
-            &participants,
-            &weights,
-            &spec,
-            &w,
-            0.1,
-            0xFEED,
+        let ctx = RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: 0xFEED,
             threads,
-        )
-        .unwrap();
+            wire: if wire { Some(&F32LE) } else { None },
+        };
+        let mut scratch = Vec::new();
+        let out = run_round(&ctx, &participants, &weights, &spec, &mut scratch).unwrap();
         assert_eq!(out.merged.absorbed(), w_cohort);
         assert_eq!(out.upload_bytes_per_client, (ROWS * COLS * 4) as u64);
+        if wire {
+            assert!(
+                out.wire_upload_bytes_per_client > out.upload_bytes_per_client,
+                "frames carry header+shape overhead"
+            );
+        } else {
+            assert_eq!(out.wire_upload_bytes_per_client, 0);
+        }
+        assert_eq!(scratch.len(), shard_count(w_cohort) - 1, "tail shards return to the pool");
         let table = out.merged.into_sketch().unwrap().table().to_vec();
         (out.losses, table)
     }
@@ -214,9 +302,9 @@ mod tests {
     #[test]
     fn thread_count_does_not_change_bits() {
         for cohort in [3usize, 16, 33] {
-            let (l1, t1) = sim_round(1, cohort);
+            let (l1, t1) = sim_round(1, cohort, false);
             for threads in [2usize, 4, 8] {
-                let (ln, tn) = sim_round(threads, cohort);
+                let (ln, tn) = sim_round(threads, cohort, false);
                 assert_eq!(
                     l1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
                     ln.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
@@ -228,6 +316,59 @@ mod tests {
                     "merged sketch differs at {threads} threads (cohort {cohort})"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn wire_mode_does_not_change_bits_under_f32le() {
+        for (threads, cohort) in [(1usize, 5usize), (4, 33)] {
+            let (l_mem, t_mem) = sim_round(threads, cohort, false);
+            let (l_wire, t_wire) = sim_round(threads, cohort, true);
+            assert_eq!(
+                l_mem.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                l_wire.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            );
+            assert_eq!(
+                t_mem.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                t_wire.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "wire round-trip changed the merged sketch (threads {threads})"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_across_rounds() {
+        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+        let dataset = SimDataset { num_clients: 100 };
+        let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
+        let participants: Vec<usize> = (0..8).collect();
+        let weights = vec![0.125f32; 8];
+        let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
+        let w = vec![0f32; DIM];
+        let mut scratch = Vec::new();
+        let mut tables = Vec::new();
+        for _ in 0..3 {
+            let ctx = RoundCtx {
+                client: &client,
+                artifacts: &artifacts,
+                dataset: &dataset,
+                w: &w,
+                lr: 0.1,
+                round_seed: 0xFEED, // same seed: rounds must be identical
+                threads: 4,
+                wire: None,
+            };
+            let out = run_round(&ctx, &participants, &weights, &spec, &mut scratch).unwrap();
+            tables.push(out.merged.as_sketch().unwrap().table().to_vec());
+            scratch.push(out.merged); // trainer's return-to-pool step
+            assert_eq!(scratch.len(), 8);
+        }
+        // Reused (reset) scratch must not leak state between rounds.
+        for t in &tables[1..] {
+            assert_eq!(
+                tables[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                t.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
         }
     }
 
@@ -257,21 +398,22 @@ mod tests {
         let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
         let weights = server.begin_round(&sizes);
         let mut w = vec![0f32; DIM];
-        let out = run_round(
-            &client,
-            &artifacts,
-            &dataset,
-            &participants,
-            &weights,
-            &server.upload_spec(),
-            &w,
-            0.1,
-            7,
-            4,
-        )
-        .unwrap();
-        let update = server.finish(out.merged, &mut w, 0.1).unwrap();
-        assert!(update.nnz(DIM) > 0);
+        let ctx = RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: 7,
+            threads: 4,
+            wire: None,
+        };
+        let mut scratch = Vec::new();
+        let out = run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+            .unwrap();
+        let update = server.finish(&out.merged, 0.1).unwrap();
+        update.apply(&mut w);
+        assert!(update.nnz() > 0);
         assert!(w.iter().any(|&x| x != 0.0), "model should move");
     }
 }

@@ -14,11 +14,20 @@
 //! Parallelism is a pure throughput knob: the engine's shard layout is
 //! thread-invariant, so `parallelism = 1` and `parallelism = N` produce
 //! bitwise-identical weights and summaries for the same seed.
+//!
+//! With `TrainConfig.wire` set, every upload is encoded to a framed
+//! wire message and absorbed from bytes (`RoundAccum::absorb_bytes`),
+//! and the broadcast update round-trips encode→decode before it is
+//! applied — so a lossy codec affects the weights exactly as a real
+//! deployment would, while the lossless `f32le` codec is bitwise
+//! identical to wire-off. Measured frame bytes land in [`CommStats`]
+//! and the metrics log next to the idealized estimates.
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
+use crate::compression::aggregate::RoundAccum;
 use crate::compression::fedavg::{FedAvgClient, FedAvgServer};
 use crate::compression::fetchsgd::{ErrorUpdate, FetchSgdClient, FetchSgdServer};
 use crate::compression::local_topk::{LocalTopKClient, LocalTopKServer};
@@ -36,6 +45,7 @@ use crate::runtime::artifact::{Manifest, TaskArtifacts};
 use crate::runtime::exec::run_eval;
 use crate::runtime::Runtime;
 use crate::util::rng::derive_seed;
+use crate::wire;
 
 /// Outcome of a training run.
 #[derive(Clone, Debug)]
@@ -50,6 +60,14 @@ pub struct RunSummary {
     pub upload_bytes: u64,
     pub download_bytes: u64,
     pub download_bytes_stale: u64,
+    /// Measured wire-frame bytes, both directions (0 unless
+    /// `TrainConfig.wire` is set). Under the lossless `f32le` codec
+    /// these are always ≥ the idealized numbers (frames carry
+    /// header/shape/index overhead the paper's footnote-5 convention
+    /// ignores); a lossy codec like `f16le` can dip below them on
+    /// dense payloads (2 bytes/value).
+    pub wire_upload_bytes: u64,
+    pub wire_download_bytes: u64,
     pub ratios: Ratios,
     /// Estimated per-client communication wallclock over the whole run
     /// under the paper's motivating ~1 Mbps asymmetric residential link.
@@ -74,6 +92,11 @@ pub struct Trainer {
     dim: usize,
     /// Resolved worker-pool width (cfg.parallelism, 0 = cores).
     threads: usize,
+    /// Resolved wire codec (from cfg.wire; validated at construction).
+    wire_codec: Option<&'static dyn wire::Codec>,
+    /// Reusable shard accumulators (reset in place each round instead
+    /// of re-allocating up to MAX_SHARDS tables — ROADMAP open item).
+    scratch: Vec<RoundAccum>,
 }
 
 impl Trainer {
@@ -96,6 +119,10 @@ impl Trainer {
         let logger = MetricsLogger::new(cfg.log_path.as_deref())?;
         let w = artifacts.init_weights()?;
         let threads = engine::resolve_parallelism(cfg.parallelism);
+        let wire_codec = match &cfg.wire {
+            Some(name) => Some(wire::codec_by_name(name).context("TrainConfig.wire")?),
+            None => None,
+        };
         Ok(Trainer {
             cfg,
             artifacts,
@@ -111,6 +138,8 @@ impl Trainer {
             w,
             dim,
             threads,
+            wire_codec,
+            scratch: Vec::new(),
         })
     }
 
@@ -197,36 +226,53 @@ impl Trainer {
         let spec = self.aggregator.upload_spec();
 
         let round_seed = derive_seed(self.cfg.seed ^ 0xB0B0, round as u64);
-        let out = engine::run_round(
-            self.client.as_ref(),
-            &self.artifacts,
-            self.dataset.as_ref(),
-            &participants,
-            &weights,
-            &spec,
-            &self.w,
+        let ctx = engine::RoundCtx {
+            client: self.client.as_ref(),
+            artifacts: &self.artifacts,
+            dataset: self.dataset.as_ref(),
+            w: &self.w,
             lr,
             round_seed,
-            self.threads,
-        )
-        .with_context(|| format!("round {round}"))?;
+            threads: self.threads,
+            wire: self.wire_codec,
+        };
+        let out = engine::run_round(&ctx, &participants, &weights, &spec, &mut self.scratch)
+            .with_context(|| format!("round {round}"))?;
         // Slot-order reduction keeps the mean independent of scheduling.
         let mut loss_sum = 0f64;
         for &l in &out.losses {
             loss_sum += l as f64;
         }
         let upload_per_client = out.upload_bytes_per_client;
-        let update = self.aggregator.finish(out.merged, &mut self.w, lr)?;
-        let update_nnz = update.nnz(self.dim);
+        let update = self.aggregator.finish(&out.merged, lr)?;
+        // The server is done with the merged sum: return the
+        // accumulator to the scratch pool for next round.
+        self.scratch.push(out.merged);
+        // Wire mode: the broadcast the clients apply is the decoded
+        // frame, not the in-memory update — a lossy codec therefore
+        // shapes the trajectory exactly as a real deployment would.
+        let (update, wire_down_per_client) = match self.wire_codec {
+            Some(codec) => {
+                let frame = wire::encode_update(&update, codec);
+                let measured = frame.len() as u64;
+                let decoded = wire::decode_update(&frame)
+                    .with_context(|| format!("broadcast frame, round {round}"))?;
+                (decoded, measured)
+            }
+            None => (update, 0),
+        };
+        update.apply(&mut self.w);
+        let update_nnz = update.nnz();
         let stale_bytes = self.stale.round(round as u64, &participants, update_nnz);
+        let down_per_client = update.payload_bytes();
         self.comm.record_round(
             participants.len(),
             upload_per_client,
-            &update,
-            self.dim,
+            down_per_client,
             stale_bytes,
+            out.wire_upload_bytes_per_client,
+            wire_down_per_client,
         );
-        let down_per_client = update.download_bytes(self.dim);
         self.comm_time_res.record_round(
             &LinkProfile::residential(),
             upload_per_client,
@@ -235,12 +281,15 @@ impl Trainer {
         self.comm_time_wifi
             .record_round(&LinkProfile::wifi(), upload_per_client, down_per_client);
         let mean_loss = loss_sum / participants.len().max(1) as f64;
+        let n = participants.len() as u64;
         self.logger.log_round(RoundRecord {
             round,
             loss: mean_loss,
             lr: lr as f64,
-            upload_bytes: upload_per_client * participants.len() as u64,
-            download_bytes: update.download_bytes(self.dim) * participants.len() as u64,
+            upload_bytes: upload_per_client * n,
+            download_bytes: down_per_client * n,
+            wire_upload_bytes: out.wire_upload_bytes_per_client * n,
+            wire_download_bytes: wire_down_per_client * n,
             update_nnz,
         });
         if self.cfg.verbose {
@@ -308,6 +357,8 @@ impl Trainer {
             upload_bytes: self.comm.upload_bytes,
             download_bytes: self.comm.download_bytes,
             download_bytes_stale: self.comm.download_bytes_stale,
+            wire_upload_bytes: self.comm.wire_upload_bytes,
+            wire_download_bytes: self.comm.wire_download_bytes,
             ratios,
             comm_time_residential_s: self.comm_time_res.total_s,
             comm_time_wifi_s: self.comm_time_wifi.total_s,

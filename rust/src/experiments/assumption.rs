@@ -68,6 +68,7 @@ pub fn run(p: AssumptionParams) -> Result<()> {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
+        wire: None,
     };
 
     let runtime = Arc::new(Runtime::cpu()?);

@@ -42,6 +42,7 @@ fn base_config(p: &Fig4Params, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
+        wire: None,
     }
 }
 

@@ -45,6 +45,7 @@ pub fn base_config(p: &Fig5Params, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
+        wire: None,
     }
 }
 

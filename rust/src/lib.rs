@@ -43,3 +43,4 @@ pub mod runtime;
 pub mod serialize;
 pub mod sketch;
 pub mod util;
+pub mod wire;

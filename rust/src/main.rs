@@ -136,6 +136,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         "compression: up {:.1}x down {:.1}x overall {:.1}x (stale-download bytes: {})",
         s.ratios.upload, s.ratios.download, s.ratios.overall, s.download_bytes_stale
     );
+    if s.wire_upload_bytes > 0 {
+        println!(
+            "wire (measured frames): up {} B vs idealized {} B; down {} B vs idealized {} B",
+            s.wire_upload_bytes, s.upload_bytes, s.wire_download_bytes, s.download_bytes
+        );
+    }
     Ok(())
 }
 

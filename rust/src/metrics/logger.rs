@@ -14,8 +14,16 @@ pub struct RoundRecord {
     pub round: usize,
     pub loss: f64,
     pub lr: f64,
+    /// Idealized upload bytes (paper footnote-5 convention).
     pub upload_bytes: u64,
+    /// Idealized download bytes.
     pub download_bytes: u64,
+    /// Measured wire-frame upload bytes (0 when wire mode is off) —
+    /// logged next to the estimate so figures can show both
+    /// conventions.
+    pub wire_upload_bytes: u64,
+    /// Measured wire-frame download bytes.
+    pub wire_download_bytes: u64,
     pub update_nnz: usize,
 }
 
@@ -59,15 +67,22 @@ impl MetricsLogger {
     }
 
     pub fn log_round(&mut self, r: RoundRecord) {
-        self.write_line(obj(vec![
+        let mut fields = vec![
             ("type", s("round")),
             ("round", num(r.round as f64)),
             ("loss", num(r.loss)),
             ("lr", num(r.lr)),
             ("upload_bytes", num(r.upload_bytes as f64)),
             ("download_bytes", num(r.download_bytes as f64)),
-            ("update_nnz", num(r.update_nnz as f64)),
-        ]));
+        ];
+        // Measured wire bytes only exist in wire mode; omit the keys
+        // otherwise so estimate-only logs stay unchanged.
+        if r.wire_upload_bytes > 0 || r.wire_download_bytes > 0 {
+            fields.push(("wire_upload_bytes", num(r.wire_upload_bytes as f64)));
+            fields.push(("wire_download_bytes", num(r.wire_download_bytes as f64)));
+        }
+        fields.push(("update_nnz", num(r.update_nnz as f64)));
+        self.write_line(obj(fields));
         self.rounds.push(r);
     }
 
@@ -111,6 +126,8 @@ mod tests {
                 lr: 0.1,
                 upload_bytes: 100,
                 download_bytes: 50,
+                wire_upload_bytes: 132,
+                wire_download_bytes: 70,
                 update_nnz: 5,
             });
             m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
@@ -120,6 +137,10 @@ mod tests {
         assert_eq!(lines.len(), 2);
         let v = crate::serialize::json::parse(lines[0]).unwrap();
         assert_eq!(v.req_str("type").unwrap(), "round");
+        // measured wire bytes land next to the idealized estimates
+        assert!((v.req_f64("upload_bytes").unwrap() - 100.0).abs() < 1e-9);
+        assert!((v.req_f64("wire_upload_bytes").unwrap() - 132.0).abs() < 1e-9);
+        assert!((v.req_f64("wire_download_bytes").unwrap() - 70.0).abs() < 1e-9);
         let v = crate::serialize::json::parse(lines[1]).unwrap();
         assert!((v.req_f64("perplexity").unwrap() - 7.4).abs() < 1e-9);
         std::fs::remove_dir_all(&dir).ok();
@@ -135,6 +156,8 @@ mod tests {
                 lr: 0.0,
                 upload_bytes: 0,
                 download_bytes: 0,
+                wire_upload_bytes: 0,
+                wire_download_bytes: 0,
                 update_nnz: 0,
             });
         }

@@ -6,26 +6,21 @@
 //! magic and the element count so truncated/wrong files fail loudly.
 
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
+
+use crate::serialize::le::{f32s_from_le, write_f32_le};
 
 const MAGIC: &[u8; 8] = b"FSGDF32\0";
 
 /// Write a flat f32 tensor.
 pub fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
+    use std::io::Write;
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     f.write_all(MAGIC)?;
     f.write_all(&(data.len() as u64).to_le_bytes())?;
-    // Safe little-endian serialization without unsafe: chunked buffer.
-    let mut buf = Vec::with_capacity(data.len().min(1 << 16) * 4);
-    for chunk in data.chunks(1 << 14) {
-        buf.clear();
-        for &x in chunk {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-        f.write_all(&buf)?;
-    }
+    write_f32_le(&mut f, data)?;
     Ok(())
 }
 
@@ -45,11 +40,7 @@ pub fn read_f32(path: &Path) -> Result<Vec<f32>> {
     if raw.len() != n * 4 {
         bail!("{}: expected {} bytes of payload, found {}", path.display(), n * 4, raw.len());
     }
-    let mut out = Vec::with_capacity(n);
-    for chunk in raw.chunks_exact(4) {
-        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
-    }
-    Ok(out)
+    f32s_from_le(&raw)
 }
 
 #[cfg(test)]

@@ -1,0 +1,116 @@
+//! Shared little-endian f32/u32 slice↔bytes helpers.
+//!
+//! One home for the chunked-buffer loops that used to be duplicated
+//! between the weight-file I/O (`serialize::bin`) and that the wire
+//! codecs (`crate::wire::codec`) now share: encoding appends to a byte
+//! buffer, decoding either materializes a `Vec<f32>` or streams values
+//! through a callback so hot paths (e.g.
+//! `compression::aggregate::RoundAccum::absorb_bytes`) can fold encoded
+//! frames without an intermediate allocation.
+
+use anyhow::{bail, Result};
+use std::io::Write;
+
+/// Append `vals` to `out` as little-endian f32 bytes.
+pub fn extend_f32_le(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(vals.len() * 4);
+    for &x in vals {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `vals` to `out` as little-endian u32 bytes.
+pub fn extend_u32_le(out: &mut Vec<u8>, vals: &[u32]) {
+    out.reserve(vals.len() * 4);
+    for &x in vals {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Stream `vals` to a writer as little-endian f32 bytes via a bounded
+/// scratch buffer (no `unsafe`, no full-size copy).
+pub fn write_f32_le<W: Write>(w: &mut W, vals: &[f32]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(vals.len().min(1 << 14) * 4);
+    for chunk in vals.chunks(1 << 14) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Decode a little-endian f32 byte slice. Errors unless `bytes` is an
+/// exact multiple of 4.
+pub fn f32s_from_le(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("f32 byte payload of {} bytes is not a multiple of 4", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(out)
+}
+
+/// Walk a little-endian f32 byte slice in place, handing each value to
+/// `f` in order — the zero-copy decode path (no `Vec<f32>` is built).
+/// The caller must have validated that `bytes.len() % 4 == 0`.
+pub fn for_each_f32_le(bytes: &[u8], f: &mut dyn FnMut(f32)) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    for chunk in bytes.chunks_exact(4) {
+        f(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+}
+
+/// Walk a little-endian u32 byte slice in place (sparse index arrays).
+pub fn for_each_u32_le(bytes: &[u8], f: &mut dyn FnMut(u32)) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    for chunk in bytes.chunks_exact(4) {
+        f(u32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e3).collect();
+        let mut bytes = Vec::new();
+        extend_f32_le(&mut bytes, &vals);
+        assert_eq!(bytes.len(), 4000);
+        assert_eq!(f32s_from_le(&bytes).unwrap(), vals);
+        let mut streamed = Vec::new();
+        for_each_f32_le(&bytes, &mut |v| streamed.push(v));
+        assert_eq!(streamed, vals);
+    }
+
+    #[test]
+    fn writer_matches_extend() {
+        let vals: Vec<f32> = (0..40_000).map(|i| i as f32 * 0.25).collect();
+        let mut via_extend = Vec::new();
+        extend_f32_le(&mut via_extend, &vals);
+        let mut via_writer = Vec::new();
+        write_f32_le(&mut via_writer, &vals).unwrap();
+        assert_eq!(via_extend, via_writer);
+    }
+
+    #[test]
+    fn rejects_ragged_payload() {
+        assert!(f32s_from_le(&[0u8; 7]).is_err());
+        assert!(f32s_from_le(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let vals = vec![0u32, 1, 0xFFFF_FFFF, 42];
+        let mut bytes = Vec::new();
+        extend_u32_le(&mut bytes, &vals);
+        let mut back = Vec::new();
+        for_each_u32_le(&bytes, &mut |v| back.push(v));
+        assert_eq!(back, vals);
+    }
+}

@@ -1,6 +1,9 @@
 //! Serialization substrates: a minimal JSON parser/writer (serde is not
-//! available offline) and raw little-endian f32 tensor I/O used for
-//! initial model weights produced by the AOT pipeline.
+//! available offline), raw little-endian f32 tensor I/O used for
+//! initial model weights produced by the AOT pipeline, and the shared
+//! LE slice↔bytes helpers ([`le`]) that both the tensor files and the
+//! wire codecs (`crate::wire`) build on.
 
 pub mod bin;
 pub mod json;
+pub mod le;

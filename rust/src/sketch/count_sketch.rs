@@ -85,6 +85,15 @@ impl CountSketch {
     pub fn table(&self) -> &[f32] {
         &self.table
     }
+
+    /// Mutable view of the raw table — the wire absorb path
+    /// (`compression::aggregate::RoundAccum::absorb_bytes`) folds
+    /// decoded frame values straight into the cells. Crate-internal:
+    /// external callers go through the linear ops, which preserve the
+    /// geometry invariants.
+    pub(crate) fn table_mut(&mut self) -> &mut [f32] {
+        &mut self.table
+    }
     pub fn hasher(&self) -> &SketchHasher {
         &self.hasher
     }
@@ -202,6 +211,14 @@ impl CountSketch {
     /// `(((self + s0) + s1) + ...)` additions as calling
     /// [`CountSketch::add_scaled`] once per shard in order.
     pub fn merge_shards(&mut self, shards: &[CountSketch]) {
+        let refs: Vec<&CountSketch> = shards.iter().collect();
+        self.merge_shard_refs(&refs);
+    }
+
+    /// [`CountSketch::merge_shards`] over borrowed shards — the form the
+    /// round engine's reusable scratch accumulators need (the shards
+    /// stay alive, and allocated, for the next round).
+    pub fn merge_shard_refs(&mut self, shards: &[&CountSketch]) {
         for sh in shards {
             self.assert_compatible(sh);
         }

@@ -23,6 +23,24 @@ impl SparseVec {
         self.idx.len()
     }
 
+    /// Build from already-sorted parallel arrays, validating the
+    /// invariant (strictly increasing indices, in range, matched
+    /// lengths) instead of assuming it — the constructor wire decoding
+    /// uses, where the input is untrusted bytes.
+    pub fn from_sorted(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> anyhow::Result<Self> {
+        if idx.len() != val.len() {
+            anyhow::bail!("{} indices but {} values", idx.len(), val.len());
+        }
+        let mut prev: i64 = -1;
+        for &i in &idx {
+            if (i as i64) <= prev || (i as usize) >= dim {
+                anyhow::bail!("sparse index {i} out of order or exceeds dim {dim}");
+            }
+            prev = i as i64;
+        }
+        Ok(SparseVec { dim, idx, val })
+    }
+
     /// Build from (unsorted) pairs; sorts by index and asserts no dups.
     pub fn from_pairs(dim: usize, mut pairs: Vec<(u32, f32)>) -> Self {
         pairs.sort_unstable_by_key(|&(i, _)| i);
@@ -116,6 +134,15 @@ mod tests {
         assert_eq!(top_k_indices(&[1.0, 2.0], 5).len(), 2);
         let sv = top_k_sparse(&[0.0f32; 4], 2);
         assert_eq!(sv.nnz(), 2); // ties are fine, any 2 of the zeros
+    }
+
+    #[test]
+    fn from_sorted_validates_untrusted_input() {
+        assert!(SparseVec::from_sorted(10, vec![1, 4], vec![1.0, 2.0]).is_ok());
+        assert!(SparseVec::from_sorted(10, vec![4, 1], vec![1.0, 2.0]).is_err());
+        assert!(SparseVec::from_sorted(10, vec![1, 1], vec![1.0, 2.0]).is_err());
+        assert!(SparseVec::from_sorted(10, vec![1, 10], vec![1.0, 2.0]).is_err());
+        assert!(SparseVec::from_sorted(10, vec![1], vec![1.0, 2.0]).is_err());
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Pluggable value codecs for wire frames.
+//!
+//! A [`Codec`] turns an f32 value sequence into payload bytes and back.
+//! The frame grammar (`crate::wire::frame`) carries the codec id in its
+//! header, so a receiver picks the decoder from the frame itself. Two
+//! implementations ship:
+//!
+//! - [`F32Le`] (id 0, lossless) — raw little-endian f32; the default and
+//!   the codec under which wire mode is bitwise identical to in-memory
+//!   aggregation.
+//! - [`F16Le`] (id 1, lossy) — IEEE 754 binary16 with round-to-nearest-
+//!   even and saturation at ±65504, halving upload bytes at a bounded
+//!   relative error of 2⁻¹¹ (absolute 2⁻²⁵ in the subnormal range).
+//!   This is the extension-point proof: quantized uploads in the spirit
+//!   of Konečný et al.'s "Strategies for Improving Communication
+//!   Efficiency" / FedSKETCH.
+//!
+//! Decoding streams values through a callback rather than materializing
+//! a `Vec<f32>` — see
+//! [`crate::compression::aggregate::RoundAccum::absorb_bytes`], which
+//! folds frames straight into the accumulator.
+
+use anyhow::{bail, Result};
+
+use crate::serialize::le::{extend_f32_le, for_each_f32_le};
+
+/// A value codec: f32 sequence ↔ payload bytes.
+pub trait Codec: Send + Sync {
+    /// Wire id carried in the frame header (stable across versions).
+    fn id(&self) -> u8;
+    /// Human-readable name (config values, logs).
+    fn name(&self) -> &'static str;
+    /// Whether decode∘encode is the identity on every finite f32.
+    fn lossless(&self) -> bool;
+    /// Payload bytes for `n` values.
+    fn encoded_len(&self, n: usize) -> usize;
+    /// Append the encoding of `vals` to `out`.
+    fn encode_values(&self, vals: &[f32], out: &mut Vec<u8>);
+    /// Stream every value of a payload (whose length the frame parser
+    /// has already validated against [`Codec::encoded_len`]) to `sink`,
+    /// in order, without materializing an intermediate buffer.
+    fn decode_values(&self, bytes: &[u8], sink: &mut dyn FnMut(f32));
+}
+
+/// Raw little-endian f32 (lossless default).
+pub struct F32Le;
+
+impl Codec for F32Le {
+    fn id(&self) -> u8 {
+        0
+    }
+    fn name(&self) -> &'static str {
+        "f32le"
+    }
+    fn lossless(&self) -> bool {
+        true
+    }
+    fn encoded_len(&self, n: usize) -> usize {
+        4 * n
+    }
+    fn encode_values(&self, vals: &[f32], out: &mut Vec<u8>) {
+        extend_f32_le(out, vals);
+    }
+    fn decode_values(&self, bytes: &[u8], sink: &mut dyn FnMut(f32)) {
+        for_each_f32_le(bytes, sink);
+    }
+}
+
+/// IEEE 754 binary16, little-endian (lossy, 2 bytes/value).
+pub struct F16Le;
+
+impl Codec for F16Le {
+    fn id(&self) -> u8 {
+        1
+    }
+    fn name(&self) -> &'static str {
+        "f16le"
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+    fn encoded_len(&self, n: usize) -> usize {
+        2 * n
+    }
+    fn encode_values(&self, vals: &[f32], out: &mut Vec<u8>) {
+        out.reserve(vals.len() * 2);
+        for &x in vals {
+            out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+    fn decode_values(&self, bytes: &[u8], sink: &mut dyn FnMut(f32)) {
+        debug_assert_eq!(bytes.len() % 2, 0);
+        for chunk in bytes.chunks_exact(2) {
+            sink(f16_bits_to_f32(u16::from_le_bytes(chunk.try_into().unwrap())));
+        }
+    }
+}
+
+/// The codec instances, indexable by wire id.
+pub static F32LE: F32Le = F32Le;
+pub static F16LE: F16Le = F16Le;
+
+/// Look a codec up by its wire id (frame header byte).
+pub fn codec_by_id(id: u8) -> Result<&'static dyn Codec> {
+    match id {
+        0 => Ok(&F32LE),
+        1 => Ok(&F16LE),
+        other => bail!("unknown wire codec id {other}"),
+    }
+}
+
+/// Look a codec up by name (config values: "f32le" | "f16le").
+pub fn codec_by_name(name: &str) -> Result<&'static dyn Codec> {
+    match name {
+        "f32le" => Ok(&F32LE),
+        "f16le" => Ok(&F16LE),
+        other => bail!("unknown wire codec '{other}' (expected f32le|f16le)"),
+    }
+}
+
+/// f32 → binary16 bits with round-to-nearest-even. Finite values beyond
+/// the half range saturate to ±65504 (keeping the decode error bounded
+/// instead of overflowing to ±inf); ±inf maps to ±inf and NaN to the
+/// canonical quiet NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // inf / NaN
+        return sign | if abs > 0x7f80_0000 { 0x7e00 } else { 0x7c00 };
+    }
+    // 0x477f_f000 = 65520.0, the smallest f32 that rounds (ties-to-even)
+    // past the max finite half 65504: saturate from there up.
+    if abs >= 0x477f_f000 {
+        return sign | 0x7bff;
+    }
+    if abs >= 0x3880_0000 {
+        // Normal half range (|x| >= 2^-14): rebias exponent, round the
+        // 23-bit mantissa to 10 bits. A mantissa carry into the exponent
+        // is correct and cannot overflow (saturation above).
+        let mut h = (((abs >> 23) - 112) << 10) | ((abs >> 13) & 0x3ff);
+        let rem = abs & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    // Subnormal half range (|x| < 2^-14): the half value is
+    // round(mantissa * 2^(e-126)) units of 2^-24.
+    let e = (abs >> 23) as i32; // biased f32 exponent (0 for f32 subnormals)
+    let m = (abs & 0x007f_ffff) | if e > 0 { 0x0080_0000 } else { 0 };
+    let shift = 126 - e.max(1);
+    if shift > 24 {
+        return sign; // underflows to ±0 even after rounding
+    }
+    let mut h = m >> shift;
+    let rem = m & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && h & 1 == 1) {
+        h += 1; // may carry into the exponent: smallest normal, correct
+    }
+    sign | h as u16
+}
+
+/// binary16 bits → f32 (exact: every half value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e = 113u32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn f32le_roundtrip_is_identity() {
+        check("f32le identity", 30, |g| {
+            let vals = g.vec_f32(1, 500, -1e6, 1e6);
+            let mut bytes = Vec::new();
+            F32LE.encode_values(&vals, &mut bytes);
+            assert_eq!(bytes.len(), F32LE.encoded_len(vals.len()));
+            let mut back = Vec::new();
+            F32LE.decode_values(&bytes, &mut |v| back.push(v));
+            assert_eq!(
+                vals.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        });
+    }
+
+    #[test]
+    fn f16_roundtrip_over_all_bit_patterns() {
+        // decode is exact, so encode(decode(h)) must reproduce every
+        // non-NaN half bit pattern (NaNs canonicalize).
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert_eq!(f32_to_f16_bits(x) & 0x7e00, 0x7e00);
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "half bits 0x{h:04x} (value {x})");
+        }
+    }
+
+    #[test]
+    fn f16_error_is_bounded() {
+        check("f16 bounded error", 50, |g| {
+            let vals = g.vec_f32(1, 300, -60_000.0, 60_000.0);
+            let mut bytes = Vec::new();
+            F16LE.encode_values(&vals, &mut bytes);
+            assert_eq!(bytes.len(), F16LE.encoded_len(vals.len()));
+            let mut i = 0;
+            F16LE.decode_values(&bytes, &mut |v| {
+                let x = vals[i];
+                // relative 2^-11 for normals, absolute 2^-25 below them.
+                let bound = (x.abs() / 2048.0).max(1.0 / (1u64 << 25) as f32);
+                assert!((v - x).abs() <= bound, "x={x} decoded={v}");
+                i += 1;
+            });
+            assert_eq!(i, vals.len());
+        });
+    }
+
+    #[test]
+    fn f16_saturates_and_keeps_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), 65504.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), -65504.0);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        // round-to-nearest-even at the representable midpoint
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2049.0)), 2048.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2051.0)), 2052.0);
+        // tiny values underflow to zero
+        assert_eq!(f32_to_f16_bits(1e-9), 0);
+    }
+
+    #[test]
+    fn registry_resolves_both_ways() {
+        for codec in [&F32LE as &dyn Codec, &F16LE as &dyn Codec] {
+            assert_eq!(codec_by_id(codec.id()).unwrap().name(), codec.name());
+            assert_eq!(codec_by_name(codec.name()).unwrap().id(), codec.id());
+        }
+        assert!(codec_by_id(99).is_err());
+        assert!(codec_by_name("zstd").is_err());
+    }
+}

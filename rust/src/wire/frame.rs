@@ -1,0 +1,437 @@
+//! Frame encoding/parsing for uploads and broadcasts.
+//!
+//! See `crate::wire` module docs for the byte-level layout table. A
+//! parsed [`Frame`] is a *borrowed view* into the frame bytes: shape
+//! fields are decoded, payload bytes are sliced but not decoded, so
+//! consumers can stream values straight out of the receive buffer
+//! ([`Values::for_each`]) — the zero-copy absorb path.
+
+use anyhow::{bail, Context, Result};
+
+use crate::compression::{ClientUpload, RoundUpdate};
+use crate::serialize::le::{extend_u32_le, for_each_u32_le};
+use crate::sketch::{CountSketch, SparseVec};
+use crate::wire::codec::{codec_by_id, Codec};
+
+/// Frame magic: "FSGW" (FetchSGD Wire).
+pub const MAGIC: [u8; 4] = *b"FSGW";
+/// Current frame version. Receivers reject any other value — versioning
+/// rule: bump on ANY layout change; decoders never guess.
+pub const VERSION: u8 = 1;
+/// Fixed prefix: magic + version + codec id + kind + reserved zero.
+pub const HEADER_LEN: usize = 8;
+
+/// Payload kind tag (header byte 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// R×C Count-Sketch table (FetchSGD uploads).
+    Sketch = 0,
+    /// k-sparse vector: sorted u32 indices + values (top-k uploads,
+    /// sparse broadcasts).
+    Sparse = 1,
+    /// Dense vector (dense-baseline uploads, dense broadcasts).
+    Dense = 2,
+}
+
+impl Kind {
+    fn from_tag(tag: u8) -> Result<Kind> {
+        match tag {
+            0 => Ok(Kind::Sketch),
+            1 => Ok(Kind::Sparse),
+            2 => Ok(Kind::Dense),
+            other => bail!("unknown wire payload kind {other}"),
+        }
+    }
+}
+
+/// A codec-tagged, length-validated view of a frame's value payload.
+pub struct Values<'a> {
+    codec: &'static dyn Codec,
+    bytes: &'a [u8],
+    n: usize,
+}
+
+impl Values<'_> {
+    /// Number of encoded values.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Stream every value, in order, without materializing a buffer.
+    pub fn for_each(&self, sink: &mut dyn FnMut(f32)) {
+        self.codec.decode_values(self.bytes, sink);
+    }
+
+    /// Materialize (frame→struct decode; tests).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n);
+        self.for_each(&mut |v| out.push(v));
+        out
+    }
+}
+
+/// A parsed frame: borrowed shape header + payload slices.
+pub struct Frame<'a> {
+    pub codec: &'static dyn Codec,
+    pub body: Body<'a>,
+}
+
+/// Kind-specific shape header + payload views.
+pub enum Body<'a> {
+    Sketch { rows: usize, cols: usize, dim: usize, seed: u64, values: Values<'a> },
+    Sparse { dim: usize, idx: &'a [u8], values: Values<'a> },
+    Dense { dim: usize, values: Values<'a> },
+}
+
+impl<'a> Frame<'a> {
+    pub fn kind(&self) -> Kind {
+        match self.body {
+            Body::Sketch { .. } => Kind::Sketch,
+            Body::Sparse { .. } => Kind::Sparse,
+            Body::Dense { .. } => Kind::Dense,
+        }
+    }
+
+    /// Parse and fully validate a frame: magic, version, codec id, kind
+    /// tag, shape-header bounds, exact payload length (no trailing
+    /// bytes), and — for sparse frames — strictly-increasing in-range
+    /// indices. Everything fails loudly; nothing is decoded lazily
+    /// except the values themselves.
+    pub fn parse(bytes: &'a [u8]) -> Result<Frame<'a>> {
+        if bytes.len() < HEADER_LEN {
+            bail!(
+                "wire frame of {} bytes is shorter than the {HEADER_LEN}-byte header",
+                bytes.len()
+            );
+        }
+        if bytes[..4] != MAGIC {
+            bail!("bad wire magic {:02x?} (expected {MAGIC:02x?})", &bytes[..4]);
+        }
+        if bytes[4] != VERSION {
+            bail!("unsupported wire version {} (this build speaks {VERSION})", bytes[4]);
+        }
+        let codec = codec_by_id(bytes[5]).context("frame codec id")?;
+        let kind = Kind::from_tag(bytes[6])?;
+        if bytes[7] != 0 {
+            bail!("nonzero reserved header byte {}", bytes[7]);
+        }
+        let rest = &bytes[HEADER_LEN..];
+        let body = match kind {
+            Kind::Sketch => {
+                let (shape, payload) = split_shape(rest, 24)?;
+                let rows = u32::from_le_bytes(shape[0..4].try_into().unwrap()) as usize;
+                let cols = u32::from_le_bytes(shape[4..8].try_into().unwrap()) as usize;
+                // Sanity bounds (generous vs. the hasher's own limits)
+                // keep `rows * cols` far from overflow and forged frames
+                // from requesting absurd allocations downstream.
+                if rows == 0 || rows > 256 || !cols.is_power_of_two() || cols > 1 << 30 {
+                    bail!("sketch frame geometry {rows}x{cols} out of range");
+                }
+                let dim = checked_dim(u64::from_le_bytes(shape[8..16].try_into().unwrap()))?;
+                let seed = u64::from_le_bytes(shape[16..24].try_into().unwrap());
+                let values = take_values(codec, payload, rows * cols)?;
+                Body::Sketch { rows, cols, dim, seed, values }
+            }
+            Kind::Sparse => {
+                let (shape, payload) = split_shape(rest, 16)?;
+                let dim = checked_dim(u64::from_le_bytes(shape[0..8].try_into().unwrap()))?;
+                let nnz = u64::from_le_bytes(shape[8..16].try_into().unwrap()) as usize;
+                if nnz > dim {
+                    bail!("sparse frame claims {nnz} nonzeros in dimension {dim}");
+                }
+                let idx_len = nnz.saturating_mul(4);
+                if payload.len() < idx_len {
+                    bail!(
+                        "sparse frame truncated: {} payload bytes, need {idx_len} for indices alone",
+                        payload.len()
+                    );
+                }
+                let (idx, vals) = payload.split_at(idx_len);
+                validate_sparse_indices(idx, dim)?;
+                let values = take_values(codec, vals, nnz)?;
+                Body::Sparse { dim, idx, values }
+            }
+            Kind::Dense => {
+                let (shape, payload) = split_shape(rest, 8)?;
+                let dim = checked_dim(u64::from_le_bytes(shape[0..8].try_into().unwrap()))?;
+                let values = take_values(codec, payload, dim)?;
+                Body::Dense { dim, values }
+            }
+        };
+        Ok(Frame { codec, body })
+    }
+}
+
+fn split_shape(rest: &[u8], shape_len: usize) -> Result<(&[u8], &[u8])> {
+    if rest.len() < shape_len {
+        bail!("wire frame truncated inside the {shape_len}-byte shape header");
+    }
+    Ok(rest.split_at(shape_len))
+}
+
+fn checked_dim(dim: u64) -> Result<usize> {
+    if dim == 0 || dim > u32::MAX as u64 {
+        bail!("wire frame dim {dim} out of range");
+    }
+    Ok(dim as usize)
+}
+
+fn take_values<'a>(codec: &'static dyn Codec, payload: &'a [u8], n: usize) -> Result<Values<'a>> {
+    let want = codec.encoded_len(n);
+    if payload.len() != want {
+        bail!(
+            "wire payload is {} bytes, expected {want} ({n} values under {})",
+            payload.len(),
+            codec.name()
+        );
+    }
+    Ok(Values { codec, bytes: payload, n })
+}
+
+/// Sparse index arrays must be strictly increasing and in range — the
+/// invariant `SparseVec` maintains, checked here so a corrupt frame
+/// cannot smuggle out-of-bounds writes into an accumulator.
+fn validate_sparse_indices(idx: &[u8], dim: usize) -> Result<()> {
+    let mut prev: i64 = -1;
+    let mut bad = None;
+    for_each_u32_le(idx, &mut |i| {
+        if bad.is_none() && (i as i64 <= prev || i as usize >= dim) {
+            bad = Some(i);
+        }
+        prev = i as i64;
+    });
+    if let Some(i) = bad {
+        bail!("sparse frame index {i} is out of order or exceeds dim {dim}");
+    }
+    Ok(())
+}
+
+fn header(codec: &dyn Codec, kind: Kind, cap: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + cap);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(codec.id());
+    out.push(kind as u8);
+    out.push(0);
+    out
+}
+
+fn encode_sketch(s: &CountSketch, codec: &dyn Codec) -> Vec<u8> {
+    let mut out = header(codec, Kind::Sketch, 24 + codec.encoded_len(s.cells()));
+    out.extend_from_slice(&(s.rows() as u32).to_le_bytes());
+    out.extend_from_slice(&(s.cols() as u32).to_le_bytes());
+    out.extend_from_slice(&(s.dim() as u64).to_le_bytes());
+    out.extend_from_slice(&s.seed().to_le_bytes());
+    codec.encode_values(s.table(), &mut out);
+    out
+}
+
+fn encode_sparse(sv: &SparseVec, codec: &dyn Codec) -> Vec<u8> {
+    let mut out = header(codec, Kind::Sparse, 16 + 4 * sv.nnz() + codec.encoded_len(sv.nnz()));
+    out.extend_from_slice(&(sv.dim as u64).to_le_bytes());
+    out.extend_from_slice(&(sv.nnz() as u64).to_le_bytes());
+    extend_u32_le(&mut out, &sv.idx);
+    codec.encode_values(&sv.val, &mut out);
+    out
+}
+
+fn encode_dense(v: &[f32], codec: &dyn Codec) -> Vec<u8> {
+    let mut out = header(codec, Kind::Dense, 8 + codec.encoded_len(v.len()));
+    out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    codec.encode_values(v, &mut out);
+    out
+}
+
+/// Encode a client upload as one frame.
+pub fn encode_upload(upload: &ClientUpload, codec: &dyn Codec) -> Vec<u8> {
+    match upload {
+        ClientUpload::Sketch(s) => encode_sketch(s, codec),
+        ClientUpload::Sparse(sv) => encode_sparse(sv, codec),
+        ClientUpload::Dense(v) => encode_dense(v, codec),
+    }
+}
+
+/// Decode a frame into an owned [`ClientUpload`] (generic consumers and
+/// tests; the aggregation hot path uses
+/// `RoundAccum::absorb_bytes` instead, which never materializes this).
+pub fn decode_upload(bytes: &[u8]) -> Result<ClientUpload> {
+    let frame = Frame::parse(bytes)?;
+    Ok(match frame.body {
+        Body::Sketch { rows, cols, dim, seed, values } => {
+            ClientUpload::Sketch(CountSketch::from_table(rows, cols, dim, seed, values.to_vec())?)
+        }
+        Body::Sparse { dim, idx, values } => {
+            let mut indices = Vec::with_capacity(idx.len() / 4);
+            for_each_u32_le(idx, &mut |i| indices.push(i));
+            ClientUpload::Sparse(SparseVec::from_sorted(dim, indices, values.to_vec())?)
+        }
+        Body::Dense { values, .. } => ClientUpload::Dense(values.to_vec()),
+    })
+}
+
+/// Encode the server's broadcast update as one frame (same grammar as
+/// uploads; broadcasts are never sketches).
+pub fn encode_update(update: &RoundUpdate, codec: &dyn Codec) -> Vec<u8> {
+    match update {
+        RoundUpdate::Sparse(sv) => encode_sparse(sv, codec),
+        RoundUpdate::Dense(step) => encode_dense(step, codec),
+    }
+}
+
+/// Decode a broadcast frame. Rejects sketch frames: no strategy
+/// broadcasts a sketch.
+pub fn decode_update(bytes: &[u8]) -> Result<RoundUpdate> {
+    match decode_upload(bytes)? {
+        ClientUpload::Sparse(sv) => Ok(RoundUpdate::Sparse(sv)),
+        ClientUpload::Dense(v) => Ok(RoundUpdate::Dense(v)),
+        ClientUpload::Sketch(_) => bail!("broadcast frames cannot carry a sketch payload"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::codec::{F16LE, F32LE};
+
+    fn sketch_upload() -> ClientUpload {
+        let g: Vec<f32> = (0..500).map(|i| (i as f32 * 0.7).sin()).collect();
+        ClientUpload::Sketch(CountSketch::encode(3, 128, 9, &g).unwrap())
+    }
+
+    fn sparse_upload() -> ClientUpload {
+        ClientUpload::Sparse(SparseVec::from_pairs(
+            1000,
+            vec![(3, 1.5), (17, -2.25), (999, 0.125)],
+        ))
+    }
+
+    fn dense_upload() -> ClientUpload {
+        ClientUpload::Dense((0..257).map(|i| i as f32 - 128.0).collect())
+    }
+
+    #[test]
+    fn f32le_upload_roundtrip_is_exact_for_all_kinds() {
+        for upload in [sketch_upload(), sparse_upload(), dense_upload()] {
+            let frame = encode_upload(&upload, &F32LE);
+            let back = decode_upload(&frame).unwrap();
+            match (&upload, &back) {
+                (ClientUpload::Sketch(a), ClientUpload::Sketch(b)) => {
+                    assert_eq!(a.rows(), b.rows());
+                    assert_eq!(a.cols(), b.cols());
+                    assert_eq!(a.dim(), b.dim());
+                    assert_eq!(a.seed(), b.seed());
+                    for (x, y) in a.table().iter().zip(b.table()) {
+                        assert_eq!(x.to_bits(), y.to_bits());
+                    }
+                }
+                (ClientUpload::Sparse(a), ClientUpload::Sparse(b)) => assert_eq!(a, b),
+                (ClientUpload::Dense(a), ClientUpload::Dense(b)) => assert_eq!(a, b),
+                _ => panic!("payload kind changed across the wire"),
+            }
+        }
+    }
+
+    #[test]
+    fn frame_bytes_exceed_idealized_payload() {
+        for upload in [sketch_upload(), sparse_upload(), dense_upload()] {
+            let frame = encode_upload(&upload, &F32LE);
+            assert!(
+                frame.len() as u64 > upload.payload_bytes(),
+                "measured {} <= idealized {}",
+                frame.len(),
+                upload.payload_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn f16_halves_value_bytes() {
+        let frame32 = encode_upload(&dense_upload(), &F32LE);
+        let frame16 = encode_upload(&dense_upload(), &F16LE);
+        assert_eq!(frame32.len() - HEADER_LEN - 8, 2 * (frame16.len() - HEADER_LEN - 8));
+        assert!(decode_upload(&frame16).is_ok());
+    }
+
+    #[test]
+    fn corrupt_frames_fail_loudly() {
+        let good = encode_upload(&sparse_upload(), &F32LE);
+        assert!(decode_upload(&good).is_ok());
+
+        let mut bad = good.clone();
+        bad[0] = b'X'; // magic
+        assert!(decode_upload(&bad).unwrap_err().to_string().contains("magic"));
+
+        let mut bad = good.clone();
+        bad[4] = 2; // version
+        assert!(decode_upload(&bad).unwrap_err().to_string().contains("version"));
+
+        let mut bad = good.clone();
+        bad[5] = 250; // codec id
+        assert!(decode_upload(&bad).unwrap_err().to_string().contains("codec"));
+
+        let mut bad = good.clone();
+        bad[6] = 9; // kind
+        assert!(decode_upload(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[7] = 1; // reserved
+        assert!(decode_upload(&bad).unwrap_err().to_string().contains("reserved"));
+
+        // truncation at every prefix length must error, never panic
+        for cut in 0..good.len() {
+            assert!(decode_upload(&good[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        // trailing garbage
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_upload(&bad).is_err());
+    }
+
+    #[test]
+    fn sparse_index_corruption_is_rejected() {
+        let good = encode_upload(&sparse_upload(), &F32LE);
+        // first index (offset: header + dim + nnz) bumped past the second
+        let off = HEADER_LEN + 16;
+        let mut bad = good.clone();
+        bad[off..off + 4].copy_from_slice(&100u32.to_le_bytes());
+        let err = decode_upload(&bad).unwrap_err().to_string();
+        assert!(err.contains("out of order"), "{err}");
+        // index >= dim
+        let mut bad = good.clone();
+        bad[off..off + 4].copy_from_slice(&5000u32.to_le_bytes());
+        assert!(decode_upload(&bad).is_err());
+    }
+
+    #[test]
+    fn sketch_frames_with_bad_geometry_are_rejected() {
+        let frame = encode_upload(&sketch_upload(), &F32LE);
+        // cols field (header + rows) → non-power-of-two 100: the payload
+        // length no longer matches rows*cols, and even a length-matched
+        // forgery dies in CountSketch::from_table's geometry check.
+        let mut bad = frame.clone();
+        bad[HEADER_LEN + 4..HEADER_LEN + 8].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_upload(&bad).is_err());
+    }
+
+    #[test]
+    fn update_frames_roundtrip_and_reject_sketches() {
+        let sv = SparseVec::from_pairs(50, vec![(1, 1.0), (30, -0.5)]);
+        let frame = encode_update(&RoundUpdate::Sparse(sv.clone()), &F32LE);
+        match decode_update(&frame).unwrap() {
+            RoundUpdate::Sparse(back) => assert_eq!(back, sv),
+            _ => panic!(),
+        }
+        let step: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let frame = encode_update(&RoundUpdate::Dense(step.clone()), &F32LE);
+        match decode_update(&frame).unwrap() {
+            RoundUpdate::Dense(back) => assert_eq!(back, step),
+            _ => panic!(),
+        }
+        let sketch_frame = encode_upload(&sketch_upload(), &F32LE);
+        assert!(decode_update(&sketch_frame).unwrap_err().to_string().contains("broadcast"));
+    }
+}

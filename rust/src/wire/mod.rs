@@ -1,0 +1,75 @@
+//! The wire protocol for the client↔server boundary.
+//!
+//! FetchSGD's claim is *communication* efficiency, so the thing clients
+//! and the server exchange needs to be actual bytes, not in-memory Rust
+//! enums, and byte accounting needs a measured number next to the
+//! paper's idealized estimate (footnote 5). This module defines the
+//! framed, versioned binary encoding for every upload
+//! ([`crate::compression::ClientUpload`]) and broadcast
+//! ([`crate::compression::RoundUpdate`]), behind a pluggable value
+//! [`Codec`] ([`F32Le`] lossless default, [`F16Le`] lossy half-precision
+//! proving the extension point).
+//!
+//! ## Frame layout (version 1)
+//!
+//! All integers little-endian. One frame = header, shape, payload; the
+//! total length must match exactly (no trailing bytes).
+//!
+//! | offset | size | field                                        |
+//! |--------|------|----------------------------------------------|
+//! | 0      | 4    | magic `"FSGW"`                               |
+//! | 4      | 1    | version (`1`)                                |
+//! | 5      | 1    | codec id (`0` = f32le, `1` = f16le)          |
+//! | 6      | 1    | payload kind (`0` sketch, `1` sparse, `2` dense) |
+//! | 7      | 1    | reserved, must be `0`                        |
+//! | 8      | …    | kind-specific shape header (below)           |
+//! | …      | …    | payload (codec-encoded values)               |
+//!
+//! Shape headers and payloads per kind:
+//!
+//! | kind   | shape header                                | payload |
+//! |--------|---------------------------------------------|---------|
+//! | sketch | `rows: u32, cols: u32, dim: u64, seed: u64` | `rows·cols` encoded values (row-major table) |
+//! | sparse | `dim: u64, nnz: u64`                        | `nnz` raw `u32` indices (strictly increasing, `< dim`), then `nnz` encoded values |
+//! | dense  | `dim: u64`                                  | `dim` encoded values |
+//!
+//! ## Versioning rules
+//!
+//! - Byte 4 is bumped on **any** change to the header, shape, or payload
+//!   layout; receivers reject unknown versions outright (no best-effort
+//!   decoding of newer frames).
+//! - New codecs and new payload kinds extend their one-byte id spaces
+//!   *without* a version bump — an old receiver rejects the unknown id
+//!   loudly, which is the intended failure mode.
+//! - Sparse indices are always raw little-endian `u32`, independent of
+//!   the value codec: the codec compresses *values*, index compression
+//!   would be a new payload kind.
+//!
+//! ## Validation
+//!
+//! [`Frame::parse`] checks magic, version, codec id, kind tag, the
+//! reserved byte, shape-header bounds, exact payload length, and sparse
+//! index monotonicity/range, so a corrupted or truncated frame can never
+//! reach an accumulator. [`crate::compression::UploadSpec::validate_frame`]
+//! additionally pins a parsed frame against the geometry the server
+//! expects this round (rows/cols/dim/seed), making shape or seed drift
+//! between client and server a loud error rather than silent garbage.
+//!
+//! ## Zero-copy absorb
+//!
+//! A parsed [`Frame`] borrows the receive buffer; value payloads are
+//! decoded by streaming ([`frame::Values::for_each`]) so the server's
+//! aggregation path
+//! ([`crate::compression::aggregate::RoundAccum::absorb_bytes`])
+//! folds `weight · value` straight from the wire bytes into the
+//! accumulator — no intermediate `ClientUpload`, table, or `Vec<f32>`
+//! is ever materialized for uploads in wire mode.
+
+pub mod codec;
+pub mod frame;
+
+pub use codec::{codec_by_id, codec_by_name, Codec, F16Le, F16LE, F32Le, F32LE};
+pub use frame::{
+    decode_update, decode_upload, encode_update, encode_upload, Body, Frame, Kind, HEADER_LEN,
+    MAGIC, VERSION,
+};

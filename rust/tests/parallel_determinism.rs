@@ -1,17 +1,22 @@
 //! Parallel determinism: the round engine's thread count must be a pure
-//! throughput knob. Same config + seed ⇒ bitwise-identical final
-//! weights, losses, and run summaries at `parallelism = 1` and
-//! `parallelism = 8`.
+//! throughput knob, and wire mode under the lossless `f32le` codec must
+//! be a pure accounting knob. Same config + seed ⇒ bitwise-identical
+//! final weights, losses, and run summaries at `parallelism = 1` and
+//! `parallelism = 8`, wire on or off.
 //!
 //! The multi-round loops here run on simulated clients (no PJRT, no
-//! artifacts) for fetchsgd and a dense baseline; a Trainer-level check
-//! over the real smoke artifacts runs when `artifacts/` is present.
+//! artifacts) for fetchsgd, a sparse top-k, and a dense baseline; a
+//! Trainer-level check over the real smoke artifacts runs when
+//! `artifacts/` is present.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
-use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimDenseClient, SimSketchClient};
+use fetchsgd::compression::local_topk::LocalTopKServer;
+use fetchsgd::compression::sim::{
+    sim_artifacts, SimDataset, SimDenseClient, SimSketchClient, SimTopKClient,
+};
 use fetchsgd::compression::uncompressed::UncompressedServer;
 use fetchsgd::compression::{ClientCompute, ServerAggregator};
 use fetchsgd::config::{LrSchedule, StrategyConfig, TrainConfig};
@@ -19,6 +24,7 @@ use fetchsgd::coordinator::{engine, ClientSelector, Trainer};
 use fetchsgd::model::DataScale;
 use fetchsgd::runtime::Runtime;
 use fetchsgd::util::rng::derive_seed;
+use fetchsgd::wire::{Codec, F32LE};
 
 const DIM: usize = 30_000;
 const ROWS: usize = 5;
@@ -27,39 +33,62 @@ const SEED: u64 = 0xD5;
 const ROUNDS: usize = 5;
 const COHORT: usize = 24; // > MAX_SHARDS, so shards hold multiple slots
 
-/// A miniature training loop over the sim stack; returns
-/// (final weights, all per-round losses).
+/// A miniature training loop over the sim stack — the engine pipeline
+/// exactly as the Trainer drives it, including scratch-accumulator
+/// reuse and the optional wire round-trip of uploads and broadcasts.
+/// Returns (final weights, all per-round losses, total measured wire
+/// upload bytes).
 fn sim_train(
     client: &dyn ClientCompute,
     server: &mut dyn ServerAggregator,
     threads: usize,
-) -> (Vec<f32>, Vec<f32>) {
+    wire: Option<&'static dyn Codec>,
+) -> (Vec<f32>, Vec<f32>, u64) {
     let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
     let dataset = SimDataset { num_clients: 200 };
     let selector = ClientSelector::new(dataset.num_clients, COHORT, SEED);
     let mut w = vec![0f32; DIM];
     let mut losses = Vec::new();
+    let mut scratch = Vec::new();
+    let mut wire_upload_bytes = 0u64;
     for round in 0..ROUNDS {
         let participants = selector.select(round);
         let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
         let weights = server.begin_round(&sizes);
-        let out = engine::run_round(
+        let ctx = engine::RoundCtx {
             client,
-            &artifacts,
-            &dataset,
-            &participants,
-            &weights,
-            &server.upload_spec(),
-            &w,
-            0.05,
-            derive_seed(SEED, round as u64),
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.05,
+            round_seed: derive_seed(SEED, round as u64),
             threads,
-        )
-        .unwrap();
-        losses.extend(out.losses);
-        server.finish(out.merged, &mut w, 0.05).unwrap();
+            wire,
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+                .unwrap();
+        losses.extend_from_slice(&out.losses);
+        wire_upload_bytes += out.wire_upload_bytes_per_client * participants.len() as u64;
+        if wire.is_some() {
+            assert!(
+                out.wire_upload_bytes_per_client > out.upload_bytes_per_client,
+                "measured frame bytes must exceed the idealized estimate"
+            );
+        }
+        let update = server.finish(&out.merged, 0.05).unwrap();
+        scratch.push(out.merged);
+        let update = match wire {
+            Some(codec) => {
+                let frame = fetchsgd::wire::encode_update(&update, codec);
+                assert!(frame.len() as u64 >= update.payload_bytes());
+                fetchsgd::wire::decode_update(&frame).unwrap()
+            }
+            None => update,
+        };
+        update.apply(&mut w);
     }
-    (w, losses)
+    (w, losses, wire_upload_bytes)
 }
 
 fn bits(v: &[f32]) -> Vec<u32> {
@@ -74,10 +103,10 @@ fn fetchsgd_is_bitwise_identical_across_parallelism() {
             ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
         )
         .unwrap();
-        sim_train(&client, &mut server, threads)
+        sim_train(&client, &mut server, threads, None)
     };
-    let (w1, l1) = run(1);
-    let (w8, l8) = run(8);
+    let (w1, l1, _) = run(1);
+    let (w8, l8, _) = run(8);
     assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
     assert_eq!(bits(&w1), bits(&w8), "fetchsgd weights diverge at parallelism 8");
     assert_eq!(bits(&l1), bits(&l8), "fetchsgd losses diverge at parallelism 8");
@@ -88,13 +117,70 @@ fn dense_baseline_is_bitwise_identical_across_parallelism() {
     let client = SimDenseClient { dim: DIM, heavy: 4 };
     let run = |threads: usize| {
         let mut server = UncompressedServer::new(DIM, 0.9);
-        sim_train(&client, &mut server, threads)
+        sim_train(&client, &mut server, threads, None)
     };
-    let (w1, l1) = run(1);
-    let (w8, l8) = run(8);
+    let (w1, l1, _) = run(1);
+    let (w8, l8, _) = run(8);
     assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
     assert_eq!(bits(&w1), bits(&w8), "dense weights diverge at parallelism 8");
     assert_eq!(bits(&l1), bits(&l8), "dense losses diverge at parallelism 8");
+}
+
+/// Acceptance: wire mode under the lossless `f32le` codec is a pure
+/// accounting knob — weights bitwise identical to wire-off at
+/// parallelism 1 and 8, for the sketch, sparse, and dense upload paths.
+#[test]
+fn wire_mode_f32le_is_bitwise_identical_to_in_memory() {
+    type ServerFactory = Box<dyn Fn() -> Box<dyn ServerAggregator>>;
+    let cases: Vec<(&str, Box<dyn ClientCompute>, ServerFactory)> = vec![
+        (
+            "fetchsgd",
+            Box::new(SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 }),
+            Box::new(|| {
+                Box::new(
+                    FetchSgdServer::new(
+                        ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+                    )
+                    .unwrap(),
+                ) as Box<dyn ServerAggregator>
+            }),
+        ),
+        (
+            "local_topk",
+            Box::new(SimTopKClient { dim: DIM, heavy: 4, k: 40 }),
+            Box::new(|| {
+                Box::new(LocalTopKServer::new(DIM, 0.9, false)) as Box<dyn ServerAggregator>
+            }),
+        ),
+        (
+            "uncompressed",
+            Box::new(SimDenseClient { dim: DIM, heavy: 4 }),
+            Box::new(|| Box::new(UncompressedServer::new(DIM, 0.9)) as Box<dyn ServerAggregator>),
+        ),
+    ];
+    for (name, client, make_server) in &cases {
+        let run = |threads: usize, wire: Option<&'static dyn Codec>| {
+            let mut server = make_server();
+            sim_train(client.as_ref(), server.as_mut(), threads, wire)
+        };
+        let (w_mem, l_mem, wire0) = run(1, None);
+        assert_eq!(wire0, 0, "{name}: no wire bytes measured when wire is off");
+        assert!(w_mem.iter().any(|&x| x != 0.0), "{name}: training must move the model");
+        for threads in [1usize, 8] {
+            let (w_wire, l_wire, measured) = run(threads, Some(&F32LE));
+            assert!(measured > 0, "{name}: wire mode must measure frame bytes");
+            assert_eq!(
+                bits(&w_mem),
+                bits(&w_wire),
+                "{name}: wire round-trip changed the weights (threads {threads})"
+            );
+            assert_eq!(
+                bits(&l_mem),
+                bits(&l_wire),
+                "{name}: wire round-trip changed the losses (threads {threads})"
+            );
+        }
+    }
 }
 
 #[test]
@@ -107,7 +193,7 @@ fn trainer_runs_are_bitwise_identical_across_parallelism() {
         return;
     }
     let runtime = Arc::new(Runtime::cpu().unwrap());
-    let run = |parallelism: usize| {
+    let run = |parallelism: usize, wire: Option<&str>| {
         let cfg = TrainConfig {
             task: "smoke".into(),
             strategy: StrategyConfig::FetchSgd {
@@ -129,17 +215,26 @@ fn trainer_runs_are_bitwise_identical_across_parallelism() {
             baseline_rounds: None,
             verbose: false,
             parallelism,
+            wire: wire.map(String::from),
         };
         let mut t = Trainer::with_runtime(cfg, runtime.clone()).unwrap();
         let s = t.run().unwrap();
         (t.weights().to_vec(), s)
     };
-    let (w1, s1) = run(1);
-    let (w8, s8) = run(8);
+    let (w1, s1) = run(1, None);
+    let (w8, s8) = run(8, None);
     assert_eq!(bits(&w1), bits(&w8), "trainer weights diverge at parallelism 8");
     assert_eq!(s1.final_loss.to_bits(), s8.final_loss.to_bits());
     assert_eq!(s1.eval_loss.to_bits(), s8.eval_loss.to_bits());
     assert_eq!(s1.accuracy.to_bits(), s8.accuracy.to_bits());
     assert_eq!(s1.upload_bytes, s8.upload_bytes);
     assert_eq!(s1.download_bytes, s8.download_bytes);
+    assert_eq!(s1.wire_upload_bytes, 0);
+    // Wire mode through the full Trainer: bitwise-identical weights,
+    // measured bytes >= idealized bytes.
+    let (w_wire, s_wire) = run(8, Some("f32le"));
+    assert_eq!(bits(&w1), bits(&w_wire), "trainer weights diverge in wire mode");
+    assert_eq!(s1.final_loss.to_bits(), s_wire.final_loss.to_bits());
+    assert!(s_wire.wire_upload_bytes >= s_wire.upload_bytes);
+    assert!(s_wire.wire_download_bytes >= s_wire.download_bytes);
 }
