@@ -37,6 +37,8 @@ fn base() -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

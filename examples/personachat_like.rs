@@ -69,6 +69,8 @@ fn main() -> anyhow::Result<()> {
         verbose: true,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     };
 
     eprintln!("== e2e: FetchSGD finetune of {task} over 800 persona clients, {rounds} rounds ==");

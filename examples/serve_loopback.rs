@@ -1,0 +1,128 @@
+//! Loopback serve/join: a FetchSGD round server on a real TCP socket
+//! with two in-process workers driving the client compute over it —
+//! the deployment topology of the paper's Figure 1, on one machine.
+//!
+//! ```bash
+//! cargo run --release --example serve_loopback
+//! ```
+//!
+//! Uses the PJRT-free sim stack, so no `make artifacts` is needed. The
+//! example cross-checks the served run against the in-process engine:
+//! final weights must be bitwise identical — the transport is a
+//! deployment knob, not a numerics knob. For a real two-process run
+//! over the AOT artifacts, see `fetchsgd serve` / `fetchsgd join`.
+
+use std::time::Duration;
+
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+use fetchsgd::compression::ServerAggregator;
+use fetchsgd::coordinator::{engine, ClientSelector};
+use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
+use fetchsgd::util::rng::derive_seed;
+
+const DIM: usize = 20_000;
+const ROWS: usize = 5;
+const COLS: usize = 1024;
+const SEED: u64 = 42;
+const ROUNDS: usize = 5;
+const COHORT: usize = 10;
+const WORKERS: usize = 2;
+const NUM_CLIENTS: usize = 100;
+
+fn make_server() -> FetchSgdServer {
+    FetchSgdServer::new(ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
+        .unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
+    let selector = ClientSelector::new(NUM_CLIENTS, COHORT, SEED);
+
+    // -- served run: server on a TCP socket, workers join over it --
+    let opts = ServeOptions { workers: WORKERS, ..Default::default() };
+    let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts)?;
+    let ep = srv.local_endpoint()?;
+    println!("serving on {ep} for {WORKERS} workers, {ROUNDS} rounds of W={COHORT}");
+
+    let mut agg = make_server();
+    let mut w = vec![0f32; DIM];
+    let mut total_wire = 0u64;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        for id in 0..WORKERS {
+            let ep = ep.clone();
+            let client = &client;
+            s.spawn(move || {
+                let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                let dataset = SimDataset { num_clients: NUM_CLIENTS };
+                let opts = JoinOptions {
+                    read_timeout: Some(Duration::from_secs(30)),
+                    ..Default::default()
+                };
+                let sum = join(&ep, client, &dataset, &artifacts, &opts).unwrap();
+                println!(
+                    "worker {id}: {} uploads over {} rounds ({} B up, {} B down)",
+                    sum.uploads, sum.rounds, sum.bytes_sent, sum.bytes_received
+                );
+            });
+        }
+        for round in 0..ROUNDS {
+            let participants = selector.select(round);
+            let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+            let params = RoundParams {
+                round: round as u64,
+                round_seed: derive_seed(SEED, round as u64),
+                lr: 0.1,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv.run_round(&mut agg, &params, &mut w)?;
+            total_wire += stats.transport_bytes;
+            println!(
+                "round {round}: loss {:.4} nnz {} wire {} B (frames: {} B/up, {} B/down)",
+                stats.mean_loss,
+                stats.update_nnz,
+                stats.transport_bytes,
+                stats.wire_upload_bytes_per_client,
+                stats.wire_download_bytes_per_client
+            );
+        }
+        srv.shutdown();
+        Ok(())
+    })?;
+
+    // -- in-process reference: same seeds, same math, no sockets --
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED)?;
+    let dataset = SimDataset { num_clients: NUM_CLIENTS };
+    let mut agg_ref = make_server();
+    let mut w_ref = vec![0f32; DIM];
+    let mut scratch = Vec::new();
+    for round in 0..ROUNDS {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let lambdas = agg_ref.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w_ref,
+            lr: 0.1,
+            round_seed: derive_seed(SEED, round as u64),
+            threads: 0,
+            wire: None,
+        };
+        let spec = agg_ref.upload_spec();
+        let out = engine::run_round(&ctx, &participants, &lambdas, &spec, &mut scratch)?;
+        let update = agg_ref.finish(&out.merged, 0.1)?;
+        scratch.push(out.merged);
+        update.apply(&mut w_ref);
+    }
+
+    let identical = w
+        .iter()
+        .zip(&w_ref)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    anyhow::ensure!(identical, "served weights diverged from the in-process engine");
+    println!("\nserved == in-process, bitwise ({total_wire} B on the wire total)");
+    Ok(())
+}

@@ -30,11 +30,34 @@
 //! in shard order. Floating-point addition order is therefore a pure
 //! function of the layout, never of scheduling.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 use crate::sketch::CountSketch;
 use crate::wire::{Body, Frame};
+
+/// Upper bound on shard accumulators per round. Bounds both the final
+/// fan-in cost and the scratch memory (`MAX_SHARDS` dense vectors /
+/// sketch tables), and is deliberately independent of the machine's
+/// core count so the reduction tree is machine-invariant.
+pub const MAX_SHARDS: usize = 16;
+
+/// Number of shard accumulators for a cohort of `participants` clients.
+pub fn shard_count(participants: usize) -> usize {
+    participants.clamp(1, MAX_SHARDS)
+}
+
+/// The shard that owns participant slot `slot`. This layout is the
+/// *single* source of truth shared by the in-process round engine and
+/// the transport server's streaming absorber: both absorb a shard's
+/// slots in increasing slot order and reduce shards in shard order, so
+/// the floating-point reduction tree — and therefore the merged bits —
+/// is a pure function of the cohort, never of scheduling or of frame
+/// arrival order.
+pub fn shard_of(slot: usize, shards: usize) -> usize {
+    slot % shards
+}
 
 enum Acc {
     Sketch(CountSketch),
@@ -248,6 +271,162 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum]) -> Result<()> {
     Ok(())
 }
 
+/// Order-preserving streaming absorption of wire frames arriving in
+/// *any* order — the transport server's aggregation core.
+///
+/// A socket server cannot choose upload arrival order, but the
+/// determinism contract (module docs) requires each shard to absorb its
+/// slots in increasing slot order. `StreamAbsorber` reconciles the two:
+/// a frame whose slot is the next expected one for its shard is
+/// absorbed immediately (and may unblock buffered successors); a frame
+/// that arrives early is parked as raw bytes until its turn. In the
+/// common case — clients finishing in roughly slot order — everything
+/// absorbs on arrival and nothing waits for the cohort (the ROADMAP's
+/// async/streaming-absorb item); in the worst case the buffer holds
+/// encoded frames, never decoded payloads, and the merged result is
+/// bitwise identical to the in-process engine either way.
+///
+/// Slot bookkeeping doubles as integrity protection: out-of-range and
+/// duplicate slots are rejected before any bytes reach an accumulator,
+/// so a malicious peer cannot scribble over another client's
+/// contribution.
+pub struct StreamAbsorber {
+    /// Shard accumulators, `shard_count(slots)` of them.
+    shards: Vec<RoundAccum>,
+    /// Per shard: slots absorbed so far. The next slot shard `s` will
+    /// accept is `s + done[s] * shards.len()`.
+    done: Vec<usize>,
+    /// Early frames, parked by slot until their shard catches up.
+    pending: BTreeMap<usize, Vec<u8>>,
+    /// Per-slot aggregation weights λ (also fixes the slot count).
+    weights: Vec<f32>,
+    /// Which slots have been offered (duplicate protection).
+    seen: Vec<bool>,
+    absorbed: usize,
+}
+
+impl StreamAbsorber {
+    /// Build the shard pool for a round of `weights.len()` slots,
+    /// reusing spec-compatible accumulators from `scratch` (reset in
+    /// place) and allocating only what is missing.
+    pub fn new(
+        spec: &UploadSpec,
+        weights: Vec<f32>,
+        scratch: &mut Vec<RoundAccum>,
+    ) -> Result<StreamAbsorber> {
+        if weights.is_empty() {
+            bail!("StreamAbsorber needs at least one slot");
+        }
+        let shards = shard_count(weights.len());
+        scratch.retain(|a| a.matches_spec(spec));
+        while scratch.len() < shards {
+            scratch.push(RoundAccum::new(spec)?);
+        }
+        let mut accs: Vec<RoundAccum> = scratch.drain(..shards).collect();
+        for a in &mut accs {
+            a.reset();
+        }
+        let slots = weights.len();
+        Ok(StreamAbsorber {
+            shards: accs,
+            done: vec![0; shards],
+            pending: BTreeMap::new(),
+            weights,
+            seen: vec![false; slots],
+            absorbed: 0,
+        })
+    }
+
+    /// Total slots this round.
+    pub fn slots(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Uploads absorbed into shard accumulators so far.
+    pub fn absorbed(&self) -> usize {
+        self.absorbed
+    }
+
+    /// Frames parked waiting for an earlier slot of their shard.
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.absorbed == self.weights.len()
+    }
+
+    /// Hand the absorber `slot`'s upload frame. Absorbs immediately when
+    /// the slot is next in its shard's order (then drains any parked
+    /// successors), parks the bytes otherwise. Frame validation happens
+    /// at absorb time via [`RoundAccum::absorb_bytes`] — a bad frame
+    /// fails the round loudly and counts nothing.
+    pub fn offer(&mut self, slot: usize, frame: Vec<u8>) -> Result<()> {
+        let slots = self.weights.len();
+        if slot >= slots {
+            bail!("upload slot {slot} out of range (round has {slots} slots)");
+        }
+        if self.seen[slot] {
+            bail!("duplicate upload for slot {slot}");
+        }
+        self.seen[slot] = true;
+        let nshards = self.shards.len();
+        let shard = shard_of(slot, nshards);
+        if slot != shard + self.done[shard] * nshards {
+            // Early for its shard (slot < expected is impossible: that
+            // slot would already be marked seen). Park the bytes.
+            self.pending.insert(slot, frame);
+            return Ok(());
+        }
+        self.absorb_now(shard, slot, &frame)?;
+        // Absorbing this slot may unblock parked successors in-shard.
+        while let Some(buf) = self.pending.remove(&(shard + self.done[shard] * nshards)) {
+            let next = shard + self.done[shard] * nshards;
+            self.absorb_now(shard, next, &buf)?;
+        }
+        Ok(())
+    }
+
+    fn absorb_now(&mut self, shard: usize, slot: usize, frame: &[u8]) -> Result<()> {
+        self.shards[shard]
+            .absorb_bytes(frame, self.weights[slot])
+            .with_context(|| format!("absorbing upload for slot {slot}"))?;
+        self.done[shard] += 1;
+        self.absorbed += 1;
+        Ok(())
+    }
+
+    /// Reduce the shard accumulators (strictly in shard order) into the
+    /// merged round sum, returning tail shards to `scratch` for reuse.
+    /// Errors if any slot is still outstanding — in that case every
+    /// shard still goes back to `scratch` (they reset on reuse), so an
+    /// aborted round costs no reallocation.
+    pub fn finish(self, scratch: &mut Vec<RoundAccum>) -> Result<RoundAccum> {
+        if !self.is_complete() {
+            let (absorbed, slots, parked) =
+                (self.absorbed, self.weights.len(), self.pending.len());
+            scratch.extend(self.shards);
+            bail!(
+                "round incomplete: absorbed {absorbed} of {slots} uploads \
+                 ({parked} parked out of order)"
+            );
+        }
+        let mut shards = self.shards;
+        reduce_shards_in_place(&mut shards)?;
+        let merged = shards.swap_remove(0);
+        scratch.extend(shards);
+        Ok(merged)
+    }
+
+    /// Abandon the round, returning every shard accumulator to
+    /// `scratch` — the error-path counterpart of
+    /// [`StreamAbsorber::finish`] (partial sums are fine: accumulators
+    /// reset in place on reuse).
+    pub fn into_scratch(self, scratch: &mut Vec<RoundAccum>) {
+        scratch.extend(self.shards);
+    }
+}
+
 /// Sequential convenience: absorb `uploads[i]` with `weights[i]`, in
 /// order, into a fresh accumulator. Used by strategy unit tests and the
 /// server-cost benches; the trainer goes through the round engine
@@ -439,6 +618,121 @@ mod tests {
         let acc = accumulate_uploads(&spec, uploads, &[0.5, 0.5]).unwrap();
         let dense = acc.into_dense().unwrap();
         assert_eq!(dense, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn stream_absorber_is_arrival_order_invariant() {
+        // 20 slots > MAX_SHARDS=16, so shards own multiple slots and
+        // the in-shard ordering buffer actually engages. Offering in
+        // reverse (every frame early except the last-discovered ones)
+        // must produce bits identical to strictly sequential absorb.
+        let mut rng = crate::util::Rng::new(31);
+        let slots = 20usize;
+        let frames: Vec<Vec<u8>> = (0..slots)
+            .map(|_| {
+                let g: Vec<f32> = (0..200).map(|_| rng.next_gaussian() as f32).collect();
+                let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap());
+                encode_upload(&u, &F32LE)
+            })
+            .collect();
+        let weights: Vec<f32> = (0..slots).map(|i| 0.1 + 0.01 * i as f32).collect();
+
+        let mut scratch = Vec::new();
+        let mut seq = StreamAbsorber::new(&sketch_spec(), weights.clone(), &mut scratch).unwrap();
+        for (slot, f) in frames.iter().enumerate() {
+            seq.offer(slot, f.clone()).unwrap();
+            assert_eq!(seq.buffered(), 0, "in-order offers never park");
+        }
+        let merged_seq = seq.finish(&mut scratch).unwrap();
+        assert_eq!(merged_seq.absorbed(), slots);
+
+        let mut rev = StreamAbsorber::new(&sketch_spec(), weights, &mut scratch).unwrap();
+        for (slot, f) in frames.iter().enumerate().rev() {
+            rev.offer(slot, f.clone()).unwrap();
+        }
+        assert!(rev.is_complete());
+        let merged_rev = rev.finish(&mut scratch).unwrap();
+        for (a, b) in merged_seq
+            .as_sketch()
+            .unwrap()
+            .table()
+            .iter()
+            .zip(merged_rev.as_sketch().unwrap().table())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Tail shards went back to the pool both times.
+        assert_eq!(scratch.len(), shard_count(slots) - 1);
+    }
+
+    #[test]
+    fn stream_absorber_matches_engine_style_sharded_absorb() {
+        // Reference: the engine's layout, run by hand — shard s absorbs
+        // slots s, s+S, ... in order, shards reduce in shard order.
+        let mut rng = crate::util::Rng::new(77);
+        let slots = 19usize;
+        let grads: Vec<Vec<f32>> = (0..slots)
+            .map(|_| (0..200).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let weights: Vec<f32> = (0..slots).map(|i| 1.0 / (1.0 + i as f32)).collect();
+        let nshards = shard_count(slots);
+        let mut shards: Vec<RoundAccum> =
+            (0..nshards).map(|_| RoundAccum::new(&sketch_spec()).unwrap()).collect();
+        for slot in 0..slots {
+            let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &grads[slot]).unwrap());
+            shards[shard_of(slot, nshards)].absorb(u, weights[slot]).unwrap();
+        }
+        reduce_shards_in_place(&mut shards).unwrap();
+
+        let mut scratch = Vec::new();
+        let mut ab = StreamAbsorber::new(&sketch_spec(), weights, &mut scratch).unwrap();
+        // A scrambled-but-fixed arrival order.
+        let mut order: Vec<usize> = (0..slots).collect();
+        order.reverse();
+        order.swap(0, 7);
+        order.swap(3, 11);
+        for &slot in &order {
+            let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &grads[slot]).unwrap());
+            ab.offer(slot, encode_upload(&u, &F32LE)).unwrap();
+        }
+        let merged = ab.finish(&mut scratch).unwrap();
+        let (by_hand, streamed) = (shards[0].as_sketch().unwrap(), merged.as_sketch().unwrap());
+        for (a, b) in by_hand.table().iter().zip(streamed.table()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn stream_absorber_rejects_bad_slots_and_incomplete_rounds() {
+        let spec = UploadSpec::Dense { dim: 8 };
+        let frame = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
+        let mut scratch = Vec::new();
+        let mut ab = StreamAbsorber::new(&spec, vec![1.0; 3], &mut scratch).unwrap();
+        assert!(ab.offer(3, frame(1.0)).unwrap_err().to_string().contains("out of range"));
+        ab.offer(1, frame(2.0)).unwrap();
+        assert!(ab.offer(1, frame(2.0)).unwrap_err().to_string().contains("duplicate"));
+        assert_eq!(ab.absorbed(), 1);
+        // Incomplete finish fails loudly instead of merging a partial sum.
+        let err = ab.finish(&mut scratch).unwrap_err().to_string();
+        assert!(err.contains("absorbed 1 of 3"), "{err}");
+        // A malformed frame fails the offer and counts nothing.
+        let mut ab = StreamAbsorber::new(&spec, vec![1.0; 2], &mut scratch).unwrap();
+        let mut bad = frame(1.0);
+        bad[0] = b'X';
+        assert!(ab.offer(0, bad).is_err());
+        assert_eq!(ab.absorbed(), 0);
+    }
+
+    #[test]
+    fn shard_layout_is_parallelism_invariant() {
+        assert_eq!(shard_count(1), 1);
+        assert_eq!(shard_count(7), 7);
+        assert_eq!(shard_count(MAX_SHARDS), MAX_SHARDS);
+        assert_eq!(shard_count(100), MAX_SHARDS);
+        assert_eq!(shard_count(0), 1);
+        assert_eq!(shard_of(0, 5), 0);
+        assert_eq!(shard_of(12, 5), 2);
+        assert_eq!(shard_of(12, 16), 12);
     }
 
     #[test]

@@ -44,9 +44,10 @@ pub enum StrategyConfig {
     },
 }
 
-/// Normalize the `wire` config value: "off"/"" = no wire mode, anything
-/// else names a codec (validated against the registry at Trainer
-/// construction, so typos fail before any round runs).
+/// Normalize an optional string knob (`wire`, `transport`): "off"/""/
+/// "none" = disabled, anything else is kept and validated downstream
+/// (codec registry / endpoint parser), so typos fail before any round
+/// runs.
 fn parse_wire(v: &str) -> Option<String> {
     match v {
         "" | "off" | "none" => None,
@@ -106,6 +107,16 @@ pub struct TrainConfig {
     /// trajectory is bitwise identical to wire-off; "f16le" quantizes
     /// the payloads (lossy, half the value bytes).
     pub wire: Option<String>,
+    /// Transport endpoint for served training (`fetchsgd serve` /
+    /// `fetchsgd join`): `tcp:HOST:PORT` or `uds:/path.sock`; "off" /
+    /// "" / "none" = in-process training. Serving implies wire framing:
+    /// uploads and broadcasts cross this socket as `FSGW` frames under
+    /// the `wire` codec (default `f32le`, under which a served run is
+    /// bitwise identical to `fetchsgd train` on the same config).
+    pub transport: Option<String>,
+    /// Worker connections a `serve` run waits for; each worker computes
+    /// one or more participant slots per round. Ignored in-process.
+    pub transport_workers: usize,
 }
 
 impl TrainConfig {
@@ -133,6 +144,8 @@ impl TrainConfig {
             verbose: false,
             parallelism: 0,
             wire: None,
+            transport: None,
+            transport_workers: 1,
         }
     }
 
@@ -175,6 +188,8 @@ impl TrainConfig {
             verbose: v.opt_bool("verbose", false),
             parallelism: v.opt_usize("parallelism", 0),
             wire: parse_wire(v.opt_str("wire", "off")),
+            transport: parse_wire(v.opt_str("transport", "off")),
+            transport_workers: v.opt_usize("transport_workers", 1),
         })
     }
 
@@ -230,6 +245,8 @@ impl TrainConfig {
                 "verbose" => self.verbose = val.parse()?,
                 "parallelism" => self.parallelism = val.parse()?,
                 "wire" => self.wire = parse_wire(val),
+                "transport" => self.transport = parse_wire(val),
+                "transport_workers" => self.transport_workers = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -344,6 +361,14 @@ mod tests {
         assert_eq!(cfg.wire.as_deref(), Some("f16le"));
         cfg.apply_overrides(&["wire=off".into()]).unwrap();
         assert_eq!(cfg.wire, None);
+        assert_eq!(cfg.transport, None, "transport defaults to off");
+        assert_eq!(cfg.transport_workers, 1, "one worker by default");
+        cfg.apply_overrides(&["transport=uds:/tmp/f.sock".into(), "transport_workers=4".into()])
+            .unwrap();
+        assert_eq!(cfg.transport.as_deref(), Some("uds:/tmp/f.sock"));
+        assert_eq!(cfg.transport_workers, 4);
+        cfg.apply_overrides(&["transport=none".into()]).unwrap();
+        assert_eq!(cfg.transport, None);
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, .. } => assert_eq!(k, 7),
             _ => panic!(),

@@ -52,16 +52,12 @@ use crate::data::FedDataset;
 use crate::runtime::artifact::TaskArtifacts;
 use crate::wire::{encode_upload, Codec};
 
-/// Upper bound on shard accumulators per round. Bounds both the final
-/// fan-in cost and the scratch memory (`MAX_SHARDS` dense vectors /
-/// sketch tables), and is deliberately independent of the machine's
-/// core count so the reduction tree is machine-invariant.
-pub const MAX_SHARDS: usize = 16;
-
-/// Number of shard accumulators for a cohort of `participants` clients.
-pub fn shard_count(participants: usize) -> usize {
-    participants.clamp(1, MAX_SHARDS)
-}
+// The shard layout (slot `i` belongs to shard `shard_of(i, S)`, with
+// `S = shard_count(W)` capped at `MAX_SHARDS`) lives next to the
+// accumulators in `compression::aggregate` since the transport server's
+// streaming absorber must replicate it bit-for-bit; re-exported here
+// because the engine is where the layout is *scheduled*.
+pub use crate::compression::aggregate::{shard_count, shard_of, MAX_SHARDS};
 
 /// Resolve a configured parallelism knob: 0 = all available cores.
 pub fn resolve_parallelism(configured: usize) -> usize {

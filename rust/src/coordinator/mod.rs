@@ -12,4 +12,4 @@ pub mod selection;
 pub mod trainer;
 
 pub use selection::ClientSelector;
-pub use trainer::{RunSummary, Trainer};
+pub use trainer::{build_strategy, RunSummary, Trainer};

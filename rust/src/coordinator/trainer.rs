@@ -111,7 +111,7 @@ impl Trainer {
         let artifacts = TaskArtifacts::new(runtime, &manifest, &cfg.task)?;
         let tm = &artifacts.manifest;
         let dim = tm.dim;
-        let (client, aggregator) = Self::build_strategy(&cfg, &artifacts)?;
+        let (client, aggregator) = build_strategy(&cfg, &artifacts)?;
         let dataset = build_dataset(tm, &cfg.scale)?;
         let selector =
             ClientSelector::new(dataset.num_clients(), cfg.clients_per_round, cfg.seed);
@@ -143,71 +143,6 @@ impl Trainer {
         })
     }
 
-    #[allow(clippy::type_complexity)]
-    fn build_strategy(
-        cfg: &TrainConfig,
-        artifacts: &TaskArtifacts,
-    ) -> Result<(Box<dyn ClientCompute>, Box<dyn ServerAggregator>)> {
-        let tm = &artifacts.manifest;
-        Ok(match &cfg.strategy {
-            StrategyConfig::FetchSgd { k, cols, rho, error_update, error_window, masking } => {
-                if !tm.sketch.cols_options.contains(cols) {
-                    bail!(
-                        "task '{}' has no client_step artifact for cols={cols} \
-                         (available: {:?}) — add it to aot.py or pick another width",
-                        tm.name,
-                        tm.sketch.cols_options
-                    );
-                }
-                let eu = match error_update.as_str() {
-                    "zero_out" => ErrorUpdate::ZeroOut,
-                    "subtract" => ErrorUpdate::Subtract,
-                    other => bail!("error_update must be zero_out|subtract, got '{other}'"),
-                };
-                (
-                    Box::new(FetchSgdClient::new(tm.sketch.rows, *cols, tm.sketch.seed)),
-                    Box::new(FetchSgdServer::new(
-                        tm.sketch.rows,
-                        *cols,
-                        tm.sketch.seed,
-                        tm.dim,
-                        *k,
-                        *rho,
-                        eu,
-                        *masking,
-                        error_window,
-                    )?),
-                )
-            }
-            StrategyConfig::LocalTopK { k, rho_g, masking, local_error } => (
-                Box::new(LocalTopKClient::new(*k, *local_error)),
-                Box::new(LocalTopKServer::new(tm.dim, *rho_g, *masking)),
-            ),
-            StrategyConfig::FedAvg { local_steps, rho_g } => {
-                if !tm.fedavg_steps.contains(local_steps) {
-                    bail!(
-                        "task '{}' has no fedavg artifact for local_steps={local_steps} \
-                         (available: {:?})",
-                        tm.name,
-                        tm.fedavg_steps
-                    );
-                }
-                (
-                    Box::new(FedAvgClient::new(*local_steps)),
-                    Box::new(FedAvgServer::new(tm.dim, *rho_g)),
-                )
-            }
-            StrategyConfig::Uncompressed { rho_g } => (
-                Box::new(DenseGradClient::new("uncompressed")),
-                Box::new(UncompressedServer::new(tm.dim, *rho_g)),
-            ),
-            StrategyConfig::TrueTopK { k, rho, masking } => (
-                Box::new(DenseGradClient::new("true_topk")),
-                Box::new(TrueTopKServer::new(tm.dim, *k, *rho, *masking)),
-            ),
-        })
-    }
-
     pub fn weights(&self) -> &[f32] {
         &self.w
     }
@@ -215,7 +150,78 @@ impl Trainer {
     pub fn dim(&self) -> usize {
         self.dim
     }
+}
 
+/// Build a strategy's two halves from a config. Shared by the
+/// in-process [`Trainer`], the transport server (which keeps only the
+/// [`ServerAggregator`]), and transport workers (which keep only the
+/// [`ClientCompute`]).
+#[allow(clippy::type_complexity)]
+pub fn build_strategy(
+    cfg: &TrainConfig,
+    artifacts: &TaskArtifacts,
+) -> Result<(Box<dyn ClientCompute>, Box<dyn ServerAggregator>)> {
+    let tm = &artifacts.manifest;
+    Ok(match &cfg.strategy {
+        StrategyConfig::FetchSgd { k, cols, rho, error_update, error_window, masking } => {
+            if !tm.sketch.cols_options.contains(cols) {
+                bail!(
+                    "task '{}' has no client_step artifact for cols={cols} \
+                     (available: {:?}) — add it to aot.py or pick another width",
+                    tm.name,
+                    tm.sketch.cols_options
+                );
+            }
+            let eu = match error_update.as_str() {
+                "zero_out" => ErrorUpdate::ZeroOut,
+                "subtract" => ErrorUpdate::Subtract,
+                other => bail!("error_update must be zero_out|subtract, got '{other}'"),
+            };
+            (
+                Box::new(FetchSgdClient::new(tm.sketch.rows, *cols, tm.sketch.seed)),
+                Box::new(FetchSgdServer::new(
+                    tm.sketch.rows,
+                    *cols,
+                    tm.sketch.seed,
+                    tm.dim,
+                    *k,
+                    *rho,
+                    eu,
+                    *masking,
+                    error_window,
+                )?),
+            )
+        }
+        StrategyConfig::LocalTopK { k, rho_g, masking, local_error } => (
+            Box::new(LocalTopKClient::new(*k, *local_error)),
+            Box::new(LocalTopKServer::new(tm.dim, *rho_g, *masking)),
+        ),
+        StrategyConfig::FedAvg { local_steps, rho_g } => {
+            if !tm.fedavg_steps.contains(local_steps) {
+                bail!(
+                    "task '{}' has no fedavg artifact for local_steps={local_steps} \
+                     (available: {:?})",
+                    tm.name,
+                    tm.fedavg_steps
+                );
+            }
+            (
+                Box::new(FedAvgClient::new(*local_steps)),
+                Box::new(FedAvgServer::new(tm.dim, *rho_g)),
+            )
+        }
+        StrategyConfig::Uncompressed { rho_g } => (
+            Box::new(DenseGradClient::new("uncompressed")),
+            Box::new(UncompressedServer::new(tm.dim, *rho_g)),
+        ),
+        StrategyConfig::TrueTopK { k, rho, masking } => (
+            Box::new(DenseGradClient::new("true_topk")),
+            Box::new(TrueTopKServer::new(tm.dim, *k, *rho, *masking)),
+        ),
+    })
+}
+
+impl Trainer {
     /// One federated round. Returns the mean client training loss.
     pub fn step(&mut self, round: usize) -> Result<f64> {
         let lr = self.cfg.lr.at(round, self.cfg.rounds);
@@ -290,6 +296,7 @@ impl Trainer {
             download_bytes: down_per_client * n,
             wire_upload_bytes: out.wire_upload_bytes_per_client * n,
             wire_download_bytes: wire_down_per_client * n,
+            transport_bytes: 0,
             update_nnz,
         });
         if self.cfg.verbose {

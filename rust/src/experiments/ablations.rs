@@ -44,6 +44,8 @@ fn base_config(p: &AblationParams, rounds: usize) -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

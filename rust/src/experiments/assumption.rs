@@ -69,6 +69,8 @@ pub fn run(p: AssumptionParams) -> Result<()> {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     };
 
     let runtime = Arc::new(Runtime::cpu()?);

@@ -54,6 +54,8 @@ fn base_config(p: &Fig3Params, rounds: usize) -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

@@ -43,6 +43,8 @@ fn base_config(p: &Fig4Params, rounds: usize) -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

@@ -46,6 +46,8 @@ pub fn base_config(p: &Fig5Params, rounds: usize) -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

@@ -42,5 +42,6 @@ pub mod model;
 pub mod runtime;
 pub mod serialize;
 pub mod sketch;
+pub mod transport;
 pub mod util;
 pub mod wire;

@@ -2,6 +2,10 @@
 //!
 //! Subcommands:
 //!   train       run one training config (JSON file + key=value overrides)
+//!   serve       run the server half of a training config over a real
+//!               transport (TCP/UDS), waiting for `join` workers
+//!   join        connect to a `serve` instance and compute client
+//!               uploads for it
 //!   experiment  regenerate a paper table/figure (fig3|fig4|fig5|fig10|
 //!               table1|ablation)
 //!   inspect     print manifest / artifact info
@@ -26,6 +30,10 @@ fetchsgd — communication-efficient federated learning with sketching
 
 USAGE:
   fetchsgd train --config CFG.json [key=value ...]
+  fetchsgd serve --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
+            [--config CFG.json] [key=value ...]
+  fetchsgd join --connect tcp:HOST:PORT|uds:/path.sock
+            [--config CFG.json] [key=value ...]
   fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>
             [--dataset cifar10|cifar100] [--scale smoke|small|full]
             [--which ABLATION] [--curves] [--seeds N]
@@ -96,6 +104,8 @@ fn run() -> Result<()> {
 
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "join" => cmd_join(&args),
         "experiment" => cmd_experiment(&args, artifacts_dir, out_dir),
         "inspect" => cmd_inspect(&artifacts_dir),
         "selfcheck" => cmd_selfcheck(&artifacts_dir),
@@ -142,6 +152,61 @@ fn cmd_train(args: &Args) -> Result<()> {
             s.wire_upload_bytes, s.upload_bytes, s.wire_download_bytes, s.download_bytes
         );
     }
+    Ok(())
+}
+
+/// Shared config loading for `serve` / `join`: config file + overrides,
+/// with `--listen` / `--connect` setting the transport endpoint and
+/// `--workers` the pool size.
+fn transport_cfg(args: &Args, endpoint_flag: &str) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path), &args.overrides)?,
+        None => {
+            let mut cfg = TrainConfig::default_smoke();
+            cfg.apply_overrides(&args.overrides)?;
+            cfg
+        }
+    };
+    if let Some(ep) = args.get(endpoint_flag) {
+        cfg.transport = Some(ep.to_string());
+    }
+    if let Some(n) = args.get("workers") {
+        cfg.transport_workers = n.parse().context("--workers")?;
+    }
+    if args.has("verbose") {
+        cfg.verbose = true;
+    }
+    if cfg.transport.is_none() {
+        bail!("no transport endpoint: pass --{endpoint_flag} or set transport= in the config");
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = transport_cfg(args, "listen")?;
+    let s = fetchsgd::transport::serve_training(&cfg)?;
+    println!(
+        "task={} strategy={} rounds={} final_loss={:.4}",
+        s.task, s.strategy, s.rounds, s.final_loss
+    );
+    println!(
+        "bytes: idealized up {} down {}; measured frames up {} down {}; on-the-wire total {}",
+        s.upload_bytes,
+        s.download_bytes,
+        s.wire_upload_bytes,
+        s.wire_download_bytes,
+        s.transport_bytes
+    );
+    Ok(())
+}
+
+fn cmd_join(args: &Args) -> Result<()> {
+    let cfg = transport_cfg(args, "connect")?;
+    let s = fetchsgd::transport::join_training(&cfg)?;
+    println!(
+        "joined: rounds={} uploads={} sent={} B received={} B",
+        s.rounds, s.uploads, s.bytes_sent, s.bytes_received
+    );
     Ok(())
 }
 

@@ -24,6 +24,11 @@ pub struct RoundRecord {
     pub wire_upload_bytes: u64,
     /// Measured wire-frame download bytes.
     pub wire_download_bytes: u64,
+    /// Total measured on-the-wire bytes for the round when training is
+    /// served over a real transport (`fetchsgd serve`): every
+    /// round-start, upload, and round-end message including length
+    /// prefixes and control headers. 0 for in-process runs.
+    pub transport_bytes: u64,
     pub update_nnz: usize,
 }
 
@@ -81,6 +86,10 @@ impl MetricsLogger {
             fields.push(("wire_upload_bytes", num(r.wire_upload_bytes as f64)));
             fields.push(("wire_download_bytes", num(r.wire_download_bytes as f64)));
         }
+        // On-the-wire transport bytes only exist for served runs.
+        if r.transport_bytes > 0 {
+            fields.push(("transport_bytes", num(r.transport_bytes as f64)));
+        }
         fields.push(("update_nnz", num(r.update_nnz as f64)));
         self.write_line(obj(fields));
         self.rounds.push(r);
@@ -128,6 +137,7 @@ mod tests {
                 download_bytes: 50,
                 wire_upload_bytes: 132,
                 wire_download_bytes: 70,
+                transport_bytes: 180,
                 update_nnz: 5,
             });
             m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
@@ -141,6 +151,7 @@ mod tests {
         assert!((v.req_f64("upload_bytes").unwrap() - 100.0).abs() < 1e-9);
         assert!((v.req_f64("wire_upload_bytes").unwrap() - 132.0).abs() < 1e-9);
         assert!((v.req_f64("wire_download_bytes").unwrap() - 70.0).abs() < 1e-9);
+        assert!((v.req_f64("transport_bytes").unwrap() - 180.0).abs() < 1e-9);
         let v = crate::serialize::json::parse(lines[1]).unwrap();
         assert!((v.req_f64("perplexity").unwrap() - 7.4).abs() < 1e-9);
         std::fs::remove_dir_all(&dir).ok();
@@ -158,6 +169,7 @@ mod tests {
                 download_bytes: 0,
                 wire_upload_bytes: 0,
                 wire_download_bytes: 0,
+                transport_bytes: 0,
                 update_nnz: 0,
             });
         }

@@ -1,0 +1,134 @@
+//! The transport client: drive any [`ClientCompute`] over a socket.
+//!
+//! A joined worker is the network mirror of one of the round engine's
+//! worker threads: it receives the current weights and a list of
+//! `(slot, client_id)` assignments each round, runs the strategy's
+//! client compute for each assignment *in order* (the server relies on
+//! per-connection upload order), and ships each upload frame as soon as
+//! it is computed — which is what lets the server absorb streaming
+//! instead of waiting for the cohort.
+//!
+//! Clients stay stateless across rounds (FetchSGD's whole point): the
+//! model arrives fresh every `RoundStart` as a lossless dense frame, so
+//! a worker can join, crash, and rejoin without any resync protocol.
+
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+use crate::compression::ClientCompute;
+use crate::data::FedDataset;
+use crate::runtime::artifact::TaskArtifacts;
+use crate::transport::framing::{read_msg, write_msg, DEFAULT_MAX_MSG_BYTES};
+use crate::transport::proto::{Msg, PROTO_VERSION};
+use crate::transport::{Conn, Endpoint};
+use crate::wire::{codec_by_id, decode_dense_frame, decode_update, encode_upload};
+
+/// Client knobs.
+pub struct JoinOptions {
+    /// Read deadline while waiting for the server (None = block; the
+    /// server controls round pacing, so the default is patient).
+    pub read_timeout: Option<Duration>,
+    /// Per-message size cap (mirrors the server's).
+    pub max_msg: usize,
+}
+
+impl Default for JoinOptions {
+    fn default() -> Self {
+        JoinOptions { read_timeout: None, max_msg: DEFAULT_MAX_MSG_BYTES }
+    }
+}
+
+/// What a worker did over its connection's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct JoinSummary {
+    /// Rounds this worker saw through to the broadcast.
+    pub rounds: usize,
+    /// Total slot uploads sent.
+    pub uploads: usize,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+/// Connect to a round server and serve client compute until the server
+/// says `Shutdown`. Errors on protocol violations, aborted rounds, and
+/// dropped connections — a deployment would wrap this in a reconnect
+/// loop; tests want the loud failure.
+pub fn join(
+    ep: &Endpoint,
+    client: &dyn ClientCompute,
+    dataset: &dyn FedDataset,
+    artifacts: &TaskArtifacts,
+    opts: &JoinOptions,
+) -> Result<JoinSummary> {
+    let mut conn = Conn::connect(ep)?;
+    conn.set_timeouts(opts.read_timeout, opts.read_timeout)?;
+    let hello = write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode())?;
+    let mut sum = JoinSummary { bytes_sent: hello, ..Default::default() };
+    let stacked_k = client.wants_stacked_batches();
+    loop {
+        let (bytes, n) = read_msg(&mut conn, opts.max_msg).context("waiting for server")?;
+        sum.bytes_received += n;
+        match Msg::decode(bytes)? {
+            Msg::RoundStart { round, round_seed, lr, codec_id, assignments, weights_frame } => {
+                let codec = codec_by_id(codec_id).context("round-start codec")?;
+                let w = decode_dense_frame(&weights_frame).context("round-start weights")?;
+                for (slot, client_id) in assignments {
+                    let c = client_id as usize;
+                    let batch = dataset.client_batch(c, round_seed);
+                    let stacked =
+                        stacked_k.map(|k| dataset.client_batches_stacked(c, k, round_seed));
+                    let res = client
+                        .client_round(artifacts, &w, &batch, c, stacked, lr)
+                        .with_context(|| format!("client {c} (slot {slot}, round {round})"))?;
+                    let frame = encode_upload(&res.upload, codec);
+                    let msg = Msg::Upload { slot, loss: res.loss, frame };
+                    sum.bytes_sent += write_msg(&mut conn, &msg.encode())?;
+                    sum.uploads += 1;
+                }
+            }
+            Msg::RoundEnd { round, update_frame } => {
+                // Validate the broadcast like any deployment would; the
+                // next RoundStart carries fresh weights, so there is no
+                // local model to patch.
+                decode_update(&update_frame)
+                    .with_context(|| format!("broadcast frame, round {round}"))?;
+                sum.rounds += 1;
+            }
+            Msg::Shutdown => break,
+            Msg::Abort { reason } => bail!("server aborted: {reason}"),
+            other => bail!("unexpected {} message from server", other.kind_name()),
+        }
+    }
+    Ok(sum)
+}
+
+/// Join a served training run from a `TrainConfig` — the worker half of
+/// `fetchsgd serve` (`fetchsgd join`). Builds the strategy's client
+/// compute, the dataset, and the AOT artifacts exactly as `train`
+/// does, then drives them over `cfg.transport`.
+pub fn join_training(cfg: &crate::config::TrainConfig) -> Result<JoinSummary> {
+    use crate::coordinator::build_strategy;
+    use crate::model::build_dataset;
+    use crate::runtime::artifact::{Manifest, TaskArtifacts};
+    use crate::runtime::Runtime;
+
+    let spec = cfg
+        .transport
+        .as_deref()
+        .context("join mode needs a transport endpoint (transport=tcp:HOST:PORT | uds:/path)")?;
+    let ep = Endpoint::parse(spec)?;
+    let runtime = std::sync::Arc::new(Runtime::cpu().context("PJRT runtime")?);
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let artifacts = TaskArtifacts::new(runtime, &manifest, &cfg.task)?;
+    let (client, _agg) = build_strategy(cfg, &artifacts)?;
+    let dataset = build_dataset(&artifacts.manifest, &cfg.scale)?;
+    let opts = JoinOptions {
+        // Room for the ~4·dim-byte weights broadcast plus the 8-byte
+        // per-slot assignment table (mirrors serve_training's cap).
+        max_msg: DEFAULT_MAX_MSG_BYTES
+            .max(4 * artifacts.manifest.dim + 8 * cfg.clients_per_round + (1 << 12)),
+        ..Default::default()
+    };
+    eprintln!("[join] connecting to {ep} as a {} worker", client.name());
+    join(&ep, client.as_ref(), dataset.as_ref(), &artifacts, &opts)
+}

@@ -1,0 +1,116 @@
+//! Length-prefixed message framing.
+//!
+//! Every transport message is `u32-le length ‖ body`. The length is
+//! validated against an explicit cap *before* any allocation, so a
+//! forged or corrupt prefix (e.g. `0xFFFF_FFFF`) is a loud protocol
+//! error, never a multi-gigabyte allocation or a wedged read. Reads
+//! inherit the socket's read deadline ([`crate::transport::Conn`]):
+//! a peer that stalls mid-message surfaces as a timed-out I/O error.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Bytes of the `u32` little-endian length prefix.
+pub const LEN_PREFIX_BYTES: u64 = 4;
+
+/// Default cap on a single message body. Generous for any realistic
+/// frame (a 64 MiB dense f32 payload is a 16M-parameter model) while
+/// keeping forged prefixes cheap to reject.
+pub const DEFAULT_MAX_MSG_BYTES: usize = 64 << 20;
+
+/// Write one length-prefixed message. Returns total bytes put on the
+/// wire (prefix + body).
+pub fn write_msg<W: Write>(w: &mut W, msg: &[u8]) -> Result<u64> {
+    let len = u32::try_from(msg.len()).context("message too large for a u32 length prefix")?;
+    w.write_all(&len.to_le_bytes()).context("writing length prefix")?;
+    w.write_all(msg).context("writing message body")?;
+    w.flush().context("flushing message")?;
+    Ok(LEN_PREFIX_BYTES + msg.len() as u64)
+}
+
+/// Write one length-prefixed message whose body is `head ‖ tail`
+/// without concatenating them first — the server's round-start path
+/// uses this to share one weights-frame buffer across all workers
+/// instead of cloning a whole-model byte vector per connection.
+pub fn write_msg_parts<W: Write>(w: &mut W, head: &[u8], tail: &[u8]) -> Result<u64> {
+    let total = head.len() + tail.len();
+    let len = u32::try_from(total).context("message too large for a u32 length prefix")?;
+    w.write_all(&len.to_le_bytes()).context("writing length prefix")?;
+    w.write_all(head).context("writing message head")?;
+    w.write_all(tail).context("writing message tail")?;
+    w.flush().context("flushing message")?;
+    Ok(LEN_PREFIX_BYTES + total as u64)
+}
+
+/// Read one length-prefixed message, rejecting bodies over `max_msg`
+/// bytes. Returns the body and the total bytes consumed off the wire.
+pub fn read_msg<R: Read>(r: &mut R, max_msg: usize) -> Result<(Vec<u8>, u64)> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix).context("reading length prefix")?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_msg {
+        bail!("length prefix claims {len} bytes, over the {max_msg}-byte message cap");
+    }
+    if len == 0 {
+        bail!("zero-length transport message");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).with_context(|| format!("reading {len}-byte message body"))?;
+    Ok((body, LEN_PREFIX_BYTES + len as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_and_byte_accounting() {
+        let mut buf = Vec::new();
+        let n1 = write_msg(&mut buf, b"hello").unwrap();
+        let n2 = write_msg(&mut buf, &[7u8; 300]).unwrap();
+        assert_eq!(n1, 9);
+        assert_eq!(n2, 304);
+        assert_eq!(buf.len() as u64, n1 + n2);
+        let mut r = Cursor::new(buf);
+        let (m1, c1) = read_msg(&mut r, 1024).unwrap();
+        assert_eq!((m1.as_slice(), c1), (b"hello".as_slice(), 9));
+        let (m2, c2) = read_msg(&mut r, 1024).unwrap();
+        assert_eq!((m2.len(), c2), (300, 304));
+    }
+
+    #[test]
+    fn split_write_is_indistinguishable_from_whole_write() {
+        let (head, tail) = (&[1u8, 2, 3][..], &[4u8, 5][..]);
+        let mut whole = Vec::new();
+        let n1 = write_msg(&mut whole, &[head, tail].concat()).unwrap();
+        let mut split = Vec::new();
+        let n2 = write_msg_parts(&mut split, head, tail).unwrap();
+        assert_eq!(whole, split);
+        assert_eq!(n1, n2);
+        let (body, _) = read_msg(&mut Cursor::new(split), 1024).unwrap();
+        assert_eq!(body, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn oversize_prefix_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_msg(&mut Cursor::new(buf), 1024).unwrap_err().to_string();
+        assert!(err.contains("message cap"), "{err}");
+    }
+
+    #[test]
+    fn truncation_and_empty_messages_fail() {
+        // Body shorter than the prefix claims → read error, not a hang.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        assert!(read_msg(&mut Cursor::new(buf), 1024).is_err());
+        // Zero-length messages are a protocol error.
+        let buf = 0u32.to_le_bytes().to_vec();
+        assert!(read_msg(&mut Cursor::new(buf), 1024).is_err());
+        // Truncated prefix itself.
+        assert!(read_msg(&mut Cursor::new(vec![1u8, 2]), 1024).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Serving `FSGW` frames over a real transport (TCP / Unix-domain
+//! sockets).
+//!
+//! FetchSGD's deployment story — stateless clients, all momentum and
+//! error feedback carried server-side in mergeable Count Sketches —
+//! only holds up if uploads actually cross a process boundary. The
+//! [`crate::wire`] module (PR 2) defined the framed byte grammar and
+//! the byte-level absorb path; this module puts a socket under it:
+//!
+//! - [`server::RoundServer`] — binds TCP or UDS, accepts a fixed pool
+//!   of worker connections, fans each round's participant slots out
+//!   over them, validates every incoming upload frame against the
+//!   round's `UploadSpec`, and **streams frames into the shard
+//!   accumulator pool as they arrive** via
+//!   [`crate::compression::aggregate::StreamAbsorber`] — no barrier
+//!   waits for the whole cohort, and a straggler only delays its own
+//!   shard's later slots. The resulting `RoundUpdate` frame is
+//!   broadcast back to every participant.
+//! - [`client::join`] — drives any [`crate::compression::ClientCompute`]
+//!   over a socket: receives round assignments plus the current weights
+//!   as a dense frame, runs the client compute for each assigned slot,
+//!   and uploads the encoded frames.
+//! - [`framing`] — length-prefixed message framing with an explicit
+//!   message-size cap, so a forged length prefix is rejected before any
+//!   allocation.
+//! - [`proto`] — the small control grammar (hello / round-start /
+//!   upload / round-end / abort / shutdown) wrapped around `FSGW`
+//!   payload frames.
+//!
+//! ## Determinism
+//!
+//! A transport round is bitwise identical to the in-process engine at
+//! any parallelism: the server replicates the engine's shard layout
+//! (`aggregate::shard_of`), absorbs each shard's slots in increasing
+//! slot order (early frames are parked as bytes until their turn),
+//! reduces shards in shard order, and round-trips the broadcast through
+//! encode→decode exactly as wire mode does. Weights are always sent
+//! losslessly (`f32le`) regardless of the upload codec. Enforced by
+//! `rust/tests/transport_determinism.rs`.
+//!
+//! ## Fault containment
+//!
+//! Per-connection read/write deadlines bound how long a stalled or
+//! malicious peer can hold a round open; frame validation (magic,
+//! version, geometry, seed, index bounds) plus slot bookkeeping
+//! (range, duplicates, per-connection order) mean a bad peer fails the
+//! round *loudly* without an accumulator ever being scribbled — the
+//! server drops the round's connections, keeps its scratch pool, and
+//! is immediately reusable for the next round. Enforced by
+//! `rust/tests/transport_faults.rs`.
+
+pub mod client;
+pub mod framing;
+pub mod proto;
+pub mod server;
+
+pub use client::{join, join_training, JoinOptions, JoinSummary};
+pub use server::{serve_training, RoundParams, RoundServer, RoundStats, ServeOptions, ServeSummary};
+
+use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A transport endpoint: where a server listens / a client connects.
+///
+/// Textual form (the `TrainConfig.transport` knob and the CLI
+/// `--listen`/`--connect` flags): `tcp:HOST:PORT` or `uds:/path.sock`
+/// (alias `unix:`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP socket address, e.g. `127.0.0.1:7070` (port 0 = ephemeral).
+    Tcp(String),
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse `tcp:HOST:PORT` | `uds:PATH` | `unix:PATH`.
+    pub fn parse(s: &str) -> Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                bail!("empty tcp endpoint address");
+            }
+            return Ok(Endpoint::Tcp(addr.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("uds:").or_else(|| s.strip_prefix("unix:")) {
+            if path.is_empty() {
+                bail!("empty unix socket path");
+            }
+            #[cfg(unix)]
+            {
+                return Ok(Endpoint::Unix(PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            bail!("unix-domain sockets are unavailable on this platform");
+        }
+        bail!("transport endpoint '{s}' must be tcp:HOST:PORT or uds:/path.sock")
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "tcp:{addr}"),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => write!(f, "uds:{}", path.display()),
+        }
+    }
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+/// One bidirectional transport connection (either family), with
+/// socket-level read/write deadlines.
+pub struct Conn {
+    stream: Stream,
+}
+
+impl Conn {
+    /// Connect to a server endpoint (blocking).
+    pub fn connect(ep: &Endpoint) -> Result<Conn> {
+        let stream = match ep {
+            Endpoint::Tcp(addr) => {
+                let s = TcpStream::connect(addr.as_str())
+                    .with_context(|| format!("connecting to tcp:{addr}"))?;
+                s.set_nodelay(true).ok();
+                Stream::Tcp(s)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to uds:{}", path.display()))?;
+                Stream::Unix(s)
+            }
+        };
+        Ok(Conn { stream })
+    }
+
+    pub(crate) fn from_tcp(s: TcpStream) -> Conn {
+        s.set_nodelay(true).ok();
+        Conn { stream: Stream::Tcp(s) }
+    }
+
+    #[cfg(unix)]
+    pub(crate) fn from_unix(s: UnixStream) -> Conn {
+        Conn { stream: Stream::Unix(s) }
+    }
+
+    /// Ensure blocking mode (accepted sockets may inherit the
+    /// listener's non-blocking flag on some platforms).
+    pub(crate) fn set_blocking(&self) -> Result<()> {
+        match &self.stream {
+            Stream::Tcp(s) => s.set_nonblocking(false)?,
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(false)?,
+        }
+        Ok(())
+    }
+
+    /// Set the read/write deadlines. `None` blocks forever; `Some(d)`
+    /// makes a stalled peer surface as a timed-out I/O error instead of
+    /// wedging the round.
+    pub fn set_timeouts(&self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
+        match &self.stream {
+            Stream::Tcp(s) => {
+                s.set_read_timeout(read).context("set_read_timeout")?;
+                s.set_write_timeout(write).context("set_write_timeout")?;
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.set_read_timeout(read).context("set_read_timeout")?;
+                s.set_write_timeout(write).context("set_write_timeout")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Best-effort full shutdown (both directions).
+    pub fn shutdown(&self) {
+        match &self.stream {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match &mut self.stream {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match &mut self.stream {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match &mut self.stream {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parse_roundtrips() {
+        let ep = Endpoint::parse("tcp:127.0.0.1:7070").unwrap();
+        assert_eq!(ep, Endpoint::Tcp("127.0.0.1:7070".into()));
+        assert_eq!(ep.to_string(), "tcp:127.0.0.1:7070");
+        #[cfg(unix)]
+        {
+            let ep = Endpoint::parse("uds:/tmp/fsgw.sock").unwrap();
+            assert_eq!(ep.to_string(), "uds:/tmp/fsgw.sock");
+            assert_eq!(Endpoint::parse("unix:/tmp/fsgw.sock").unwrap(), ep);
+        }
+        assert!(Endpoint::parse("tcp:").is_err());
+        assert!(Endpoint::parse("uds:").is_err());
+        assert!(Endpoint::parse("http://x").is_err());
+        assert!(Endpoint::parse("").is_err());
+    }
+}

@@ -1,0 +1,286 @@
+//! The transport control grammar.
+//!
+//! Each length-prefixed message ([`crate::transport::framing`]) is one
+//! tag byte followed by a tag-specific body. `FSGW` payload frames
+//! (`crate::wire`) travel *inside* these messages verbatim — the
+//! transport never re-encodes values, so the bytes the accumulator
+//! absorbs are exactly the bytes the client produced.
+//!
+//! | tag | message     | body (all integers little-endian)                       |
+//! |-----|-------------|---------------------------------------------------------|
+//! | 1   | Hello       | `proto_version u8`                                      |
+//! | 2   | RoundStart  | `round u64, round_seed u64, lr f32, codec_id u8, n u32, (slot u32, client u32)×n, weights frame…` |
+//! | 3   | Upload      | `slot u32, loss f32, upload frame…`                     |
+//! | 4   | RoundEnd    | `round u64, update frame…`                              |
+//! | 5   | Abort       | `utf-8 reason…`                                         |
+//! | 6   | Shutdown    | (empty)                                                 |
+//!
+//! Versioning: [`PROTO_VERSION`] is exchanged in `Hello` and bumped on
+//! any change to this table; servers drop peers speaking another
+//! version. The `FSGW` frame grammar versions independently (its own
+//! header byte).
+
+use anyhow::{bail, Context, Result};
+
+/// Transport protocol version (`Hello` handshake).
+pub const PROTO_VERSION: u8 = 1;
+
+const TAG_HELLO: u8 = 1;
+const TAG_ROUND_START: u8 = 2;
+const TAG_UPLOAD: u8 = 3;
+const TAG_ROUND_END: u8 = 4;
+const TAG_ABORT: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+/// One transport control message.
+pub enum Msg {
+    /// Client → server greeting (protocol version check).
+    Hello { version: u8 },
+    /// Server → client: this round's assignments. `assignments` pairs
+    /// `(slot, client_id)`; `weights_frame` is the current model as a
+    /// dense `FSGW` frame (always lossless `f32le`); `codec_id` names
+    /// the codec clients must encode uploads with.
+    RoundStart {
+        round: u64,
+        round_seed: u64,
+        lr: f32,
+        codec_id: u8,
+        assignments: Vec<(u32, u32)>,
+        weights_frame: Vec<u8>,
+    },
+    /// Client → server: one slot's upload frame plus its training loss
+    /// (loss travels as raw f32 bits — bitwise exact).
+    Upload { slot: u32, loss: f32, frame: Vec<u8> },
+    /// Server → every client: the round's broadcast update frame.
+    RoundEnd { round: u64, update_frame: Vec<u8> },
+    /// Server → client: the round failed; the connection is done.
+    Abort { reason: String },
+    /// Server → client: training is over, disconnect cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    /// Short name for error messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::RoundStart { .. } => "round-start",
+            Msg::Upload { .. } => "upload",
+            Msg::RoundEnd { .. } => "round-end",
+            Msg::Abort { .. } => "abort",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Msg::Hello { version } => vec![TAG_HELLO, *version],
+            Msg::RoundStart { round, round_seed, lr, codec_id, assignments, weights_frame } => {
+                let mut out = Vec::with_capacity(26 + 8 * assignments.len() + weights_frame.len());
+                out.push(TAG_ROUND_START);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&round_seed.to_le_bytes());
+                out.extend_from_slice(&lr.to_le_bytes());
+                out.push(*codec_id);
+                out.extend_from_slice(&(assignments.len() as u32).to_le_bytes());
+                for &(slot, client) in assignments {
+                    out.extend_from_slice(&slot.to_le_bytes());
+                    out.extend_from_slice(&client.to_le_bytes());
+                }
+                out.extend_from_slice(weights_frame);
+                out
+            }
+            Msg::Upload { slot, loss, frame } => {
+                let mut out = Vec::with_capacity(9 + frame.len());
+                out.push(TAG_UPLOAD);
+                out.extend_from_slice(&slot.to_le_bytes());
+                out.extend_from_slice(&loss.to_le_bytes());
+                out.extend_from_slice(frame);
+                out
+            }
+            Msg::RoundEnd { round, update_frame } => {
+                let mut out = Vec::with_capacity(9 + update_frame.len());
+                out.push(TAG_ROUND_END);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(update_frame);
+                out
+            }
+            Msg::Abort { reason } => {
+                let mut out = Vec::with_capacity(1 + reason.len());
+                out.push(TAG_ABORT);
+                out.extend_from_slice(reason.as_bytes());
+                out
+            }
+            Msg::Shutdown => vec![TAG_SHUTDOWN],
+        }
+    }
+
+    /// Decode a message body. Consumes the buffer so frame payloads are
+    /// split off without copying. Every length is validated before any
+    /// indexing — malformed bytes error, never panic.
+    pub fn decode(mut bytes: Vec<u8>) -> Result<Msg> {
+        let Some(&tag) = bytes.first() else {
+            bail!("empty transport message");
+        };
+        match tag {
+            TAG_HELLO => {
+                if bytes.len() != 2 {
+                    bail!("hello message must be exactly 2 bytes, got {}", bytes.len());
+                }
+                Ok(Msg::Hello { version: bytes[1] })
+            }
+            TAG_ROUND_START => {
+                const FIXED: usize = 1 + 8 + 8 + 4 + 1 + 4;
+                if bytes.len() < FIXED {
+                    bail!("round-start message truncated at {} bytes", bytes.len());
+                }
+                let round = u64::from_le_bytes(bytes[1..9].try_into().unwrap());
+                let round_seed = u64::from_le_bytes(bytes[9..17].try_into().unwrap());
+                let lr = f32::from_le_bytes(bytes[17..21].try_into().unwrap());
+                let codec_id = bytes[21];
+                let n = u32::from_le_bytes(bytes[22..26].try_into().unwrap()) as usize;
+                let table = 8usize
+                    .checked_mul(n)
+                    .and_then(|t| t.checked_add(FIXED))
+                    .context("round-start assignment count overflows")?;
+                if bytes.len() < table {
+                    bail!("round-start claims {n} assignments but is {} bytes", bytes.len());
+                }
+                let mut assignments = Vec::with_capacity(n);
+                for i in 0..n {
+                    let at = FIXED + 8 * i;
+                    assignments.push((
+                        u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()),
+                        u32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap()),
+                    ));
+                }
+                let weights_frame = bytes.split_off(table);
+                if weights_frame.is_empty() {
+                    bail!("round-start message carries no weights frame");
+                }
+                Ok(Msg::RoundStart { round, round_seed, lr, codec_id, assignments, weights_frame })
+            }
+            TAG_UPLOAD => {
+                const FIXED: usize = 1 + 4 + 4;
+                if bytes.len() <= FIXED {
+                    bail!("upload message of {} bytes carries no frame", bytes.len());
+                }
+                let slot = u32::from_le_bytes(bytes[1..5].try_into().unwrap());
+                let loss = f32::from_le_bytes(bytes[5..9].try_into().unwrap());
+                let frame = bytes.split_off(FIXED);
+                Ok(Msg::Upload { slot, loss, frame })
+            }
+            TAG_ROUND_END => {
+                const FIXED: usize = 1 + 8;
+                if bytes.len() <= FIXED {
+                    bail!("round-end message of {} bytes carries no frame", bytes.len());
+                }
+                let round = u64::from_le_bytes(bytes[1..9].try_into().unwrap());
+                let update_frame = bytes.split_off(FIXED);
+                Ok(Msg::RoundEnd { round, update_frame })
+            }
+            TAG_ABORT => {
+                let reason = String::from_utf8_lossy(&bytes[1..]).into_owned();
+                Ok(Msg::Abort { reason })
+            }
+            TAG_SHUTDOWN => {
+                if bytes.len() != 1 {
+                    bail!("shutdown message must be exactly 1 byte, got {}", bytes.len());
+                }
+                Ok(Msg::Shutdown)
+            }
+            other => bail!("unknown transport message tag {other}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) -> Msg {
+        Msg::decode(msg.encode()).unwrap()
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        match roundtrip(Msg::Hello { version: 3 }) {
+            Msg::Hello { version: 3 } => {}
+            _ => panic!(),
+        }
+        let start = Msg::RoundStart {
+            round: 7,
+            round_seed: 0xDEAD_BEEF_CAFE_F00D,
+            lr: 0.125,
+            codec_id: 1,
+            assignments: vec![(0, 42), (3, 7)],
+            weights_frame: vec![9, 8, 7],
+        };
+        match roundtrip(start) {
+            Msg::RoundStart { round, round_seed, lr, codec_id, assignments, weights_frame } => {
+                assert_eq!(round, 7);
+                assert_eq!(round_seed, 0xDEAD_BEEF_CAFE_F00D);
+                assert_eq!(lr.to_bits(), 0.125f32.to_bits());
+                assert_eq!(codec_id, 1);
+                assert_eq!(assignments, vec![(0, 42), (3, 7)]);
+                assert_eq!(weights_frame, vec![9, 8, 7]);
+            }
+            _ => panic!(),
+        }
+        match roundtrip(Msg::Upload { slot: 5, loss: -1.5, frame: vec![1, 2] }) {
+            Msg::Upload { slot, loss, frame } => {
+                assert_eq!((slot, frame), (5, vec![1, 2]));
+                assert_eq!(loss.to_bits(), (-1.5f32).to_bits());
+            }
+            _ => panic!(),
+        }
+        match roundtrip(Msg::RoundEnd { round: 2, update_frame: vec![4] }) {
+            Msg::RoundEnd { round: 2, update_frame } => assert_eq!(update_frame, vec![4]),
+            _ => panic!(),
+        }
+        match roundtrip(Msg::Abort { reason: "bad frame".into() }) {
+            Msg::Abort { reason } => assert_eq!(reason, "bad frame"),
+            _ => panic!(),
+        }
+        assert!(matches!(roundtrip(Msg::Shutdown), Msg::Shutdown));
+    }
+
+    #[test]
+    fn malformed_messages_error_not_panic() {
+        assert!(Msg::decode(Vec::new()).is_err());
+        assert!(Msg::decode(vec![99]).is_err());
+        assert!(Msg::decode(vec![TAG_HELLO]).is_err());
+        assert!(Msg::decode(vec![TAG_UPLOAD, 0, 0, 0, 0]).is_err());
+        assert!(Msg::decode(vec![TAG_ROUND_END, 1, 2]).is_err());
+        assert!(Msg::decode(vec![TAG_SHUTDOWN, 0]).is_err());
+        // round-start whose assignment count lies about the length
+        let mut bad = Msg::RoundStart {
+            round: 0,
+            round_seed: 0,
+            lr: 0.0,
+            codec_id: 0,
+            assignments: vec![(0, 0)],
+            weights_frame: vec![1],
+        }
+        .encode();
+        bad[22..26].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(Msg::decode(bad).is_err());
+        // truncation at every prefix length must error, never panic
+        let good = Msg::RoundStart {
+            round: 1,
+            round_seed: 2,
+            lr: 0.5,
+            codec_id: 0,
+            assignments: vec![(1, 9)],
+            weights_frame: vec![1, 2, 3, 4],
+        }
+        .encode();
+        // Truncation anywhere before the weights frame must error,
+        // never panic. (Cuts *inside* the trailing frame still decode
+        // here — the FSGW parser rejects those downstream.)
+        let frame_start = 26 + 8;
+        for cut in 0..=frame_start {
+            assert!(Msg::decode(good[..cut].to_vec()).is_err(), "prefix {cut} accepted");
+        }
+    }
+}

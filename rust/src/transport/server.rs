@@ -1,0 +1,719 @@
+//! The round server: accept worker connections, fan participant slots
+//! out, stream upload frames into the shard accumulator pool as they
+//! arrive, broadcast the round update.
+//!
+//! See the module docs ([`crate::transport`]) for the determinism and
+//! fault-containment contracts. The shapes worth knowing here:
+//!
+//! - One [`RoundServer`] lives across rounds. Its shard scratch pool is
+//!   reused round to round (same as the in-process engine) and its
+//!   worker connections persist until a fault or [`RoundServer::shutdown`].
+//! - [`RoundServer::run_round`] is one full server round:
+//!   `begin_round → RoundStart to each worker → concurrent reads
+//!   streaming into a `StreamAbsorber` → reduce → finish → RoundEnd
+//!   broadcast → apply the *decoded* update`, mirroring the trainer's
+//!   wire mode exactly.
+//! - Any fault — bad frame, bad slot, stalled peer (read deadline),
+//!   oversize prefix, disconnect — fails the round loudly: connections
+//!   are dropped (workers get a best-effort `Abort`), the partially
+//!   filled accumulators are discarded, and the server is immediately
+//!   ready for the next round with fresh connections.
+
+use anyhow::{bail, Context, Result};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compression::aggregate::{RoundAccum, StreamAbsorber};
+use crate::compression::ServerAggregator;
+use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
+use crate::transport::proto::{Msg, PROTO_VERSION};
+use crate::transport::{Conn, Endpoint};
+use crate::wire::{decode_update, encode_dense_frame, encode_update, Body, Codec, Frame, F32LE};
+
+/// Server knobs. Defaults suit a loopback deployment; raise the
+/// deadlines for real networks.
+pub struct ServeOptions {
+    /// Worker connections the server waits for (each serves one or more
+    /// participant slots per round).
+    pub workers: usize,
+    /// Value codec for upload and update frames (weights broadcasts are
+    /// always lossless `f32le` so transport never perturbs the model).
+    pub codec: &'static dyn Codec,
+    /// Per-connection read/write deadline. A peer that stalls longer
+    /// than this mid-round fails the round instead of wedging it.
+    pub read_timeout: Duration,
+    /// How long to wait for the worker pool to fill at round start.
+    pub accept_timeout: Duration,
+    /// Per-message size cap (forged length prefixes are rejected
+    /// against this before any allocation).
+    pub max_msg: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 1,
+            codec: &F32LE,
+            read_timeout: Duration::from_secs(30),
+            accept_timeout: Duration::from_secs(30),
+            max_msg: DEFAULT_MAX_MSG_BYTES,
+        }
+    }
+}
+
+/// Per-round inputs (the caller owns selection, sizing, and the lr
+/// schedule — everything the trainer owns in-process).
+pub struct RoundParams<'a> {
+    pub round: u64,
+    /// Seed clients use to draw this round's batches.
+    pub round_seed: u64,
+    pub lr: f32,
+    /// Participant client ids, in slot order.
+    pub participants: &'a [usize],
+    /// Participants' local dataset sizes, in slot order (drives
+    /// `ServerAggregator::begin_round` weights).
+    pub client_sizes: &'a [f32],
+}
+
+/// What one transport round produced.
+pub struct RoundStats {
+    /// Per-slot client training loss, in slot order.
+    pub losses: Vec<f32>,
+    /// Mean loss, reduced in slot order (scheduling-invariant).
+    pub mean_loss: f64,
+    pub update_nnz: usize,
+    /// Idealized (footnote-5) payload bytes of slot 0's upload.
+    pub upload_bytes_per_client: u64,
+    /// Idealized payload bytes of the broadcast update.
+    pub download_bytes_per_client: u64,
+    /// Measured `FSGW` frame bytes of slot 0's upload.
+    pub wire_upload_bytes_per_client: u64,
+    /// Measured `FSGW` frame bytes of the broadcast update.
+    pub wire_download_bytes_per_client: u64,
+    /// Total measured on-the-wire bytes this round, both directions:
+    /// every round-start (weights + assignments), upload, and round-end
+    /// message including length prefixes and control headers — the
+    /// number a packet capture would report.
+    pub transport_bytes: u64,
+}
+
+enum ListenerKind {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// A round server bound to one endpoint. See module docs.
+pub struct RoundServer {
+    listener: ListenerKind,
+    opts: ServeOptions,
+    conns: Vec<Conn>,
+    /// Reusable shard accumulators (reset in place each round).
+    scratch: Vec<RoundAccum>,
+    /// Live count of uploads absorbed this round — the streaming-absorb
+    /// probe (`absorbed_probe`), updated as frames fold in.
+    absorbed: Arc<AtomicUsize>,
+    #[cfg(unix)]
+    uds_path: Option<PathBuf>,
+}
+
+impl RoundServer {
+    /// Bind a listener (TCP port 0 = ephemeral; a stale UDS socket file
+    /// is removed first).
+    pub fn bind(ep: &Endpoint, opts: ServeOptions) -> Result<RoundServer> {
+        if opts.workers == 0 {
+            bail!("ServeOptions.workers must be >= 1");
+        }
+        let listener = match ep {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp:{addr}"))?;
+                l.set_nonblocking(true).context("listener nonblocking")?;
+                ListenerKind::Tcp(l)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {}", path.display()))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding uds:{}", path.display()))?;
+                l.set_nonblocking(true).context("listener nonblocking")?;
+                ListenerKind::Unix(l)
+            }
+        };
+        Ok(RoundServer {
+            listener,
+            opts,
+            conns: Vec::new(),
+            scratch: Vec::new(),
+            absorbed: Arc::new(AtomicUsize::new(0)),
+            #[cfg(unix)]
+            uds_path: match ep {
+                Endpoint::Unix(p) => Some(p.clone()),
+                _ => None,
+            },
+        })
+    }
+
+    /// The endpoint actually bound (resolves TCP port 0).
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match &self.listener {
+            ListenerKind::Tcp(l) => {
+                Ok(Endpoint::Tcp(l.local_addr().context("local_addr")?.to_string()))
+            }
+            #[cfg(unix)]
+            ListenerKind::Unix(_) => {
+                let path = self.uds_path.clone().context("uds path missing")?;
+                Ok(Endpoint::Unix(path))
+            }
+        }
+    }
+
+    /// Currently connected workers.
+    pub fn connected(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Shared live counter of uploads absorbed in the current round —
+    /// lets tests (and dashboards) observe streaming absorption while
+    /// stragglers are still out.
+    pub fn absorbed_probe(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.absorbed)
+    }
+
+    /// Accept + handshake until the worker pool is full. Connections
+    /// that fail the hello handshake (bad version, garbage, stall) are
+    /// dropped and accepting continues until the deadline.
+    pub fn ensure_workers(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.opts.accept_timeout;
+        while self.conns.len() < self.opts.workers {
+            if Instant::now() >= deadline {
+                bail!(
+                    "timed out waiting for worker connections ({}/{} connected)",
+                    self.conns.len(),
+                    self.opts.workers
+                );
+            }
+            let mut conn = self.accept_one(deadline)?;
+            // Bound each handshake by the *remaining* pool deadline: a
+            // stream of silent connectors burns its own clock, not an
+            // unbounded read_timeout per peer.
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let hs = self.opts.read_timeout.min(remaining).max(Duration::from_millis(10));
+            let _ = conn.set_timeouts(Some(hs), Some(hs));
+            match handshake(&mut conn, self.opts.max_msg) {
+                Ok(()) => {
+                    let t = self.opts.read_timeout;
+                    conn.set_timeouts(Some(t), Some(t))?;
+                    self.conns.push(conn);
+                }
+                Err(_) => {
+                    let abort = Msg::Abort { reason: "handshake failed".into() }.encode();
+                    let _ = write_msg(&mut conn, &abort);
+                    conn.shutdown();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_one(&self, deadline: Instant) -> Result<Conn> {
+        loop {
+            let accepted = match &self.listener {
+                ListenerKind::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
+                #[cfg(unix)]
+                ListenerKind::Unix(l) => l.accept().map(|(s, _)| Conn::from_unix(s)),
+            };
+            match accepted {
+                Ok(conn) => {
+                    conn.set_blocking()?;
+                    let t = self.opts.read_timeout;
+                    conn.set_timeouts(Some(t), Some(t))?;
+                    return Ok(conn);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out waiting for worker connections ({}/{} connected)",
+                            self.conns.len(),
+                            self.opts.workers
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        }
+    }
+
+    /// One full server round. On any fault the round's connections are
+    /// dropped (best-effort `Abort` first) and the error returned; the
+    /// server — scratch pool, listener, probe — stays reusable.
+    pub fn run_round(
+        &mut self,
+        agg: &mut dyn ServerAggregator,
+        p: &RoundParams<'_>,
+        w: &mut [f32],
+    ) -> Result<RoundStats> {
+        let slots = p.participants.len();
+        if slots == 0 {
+            bail!("round {} has no participants", p.round);
+        }
+        if p.client_sizes.len() != slots {
+            bail!("{} participants but {} client sizes", slots, p.client_sizes.len());
+        }
+        self.ensure_workers()?;
+        let nconns = self.conns.len();
+        let lambdas = agg.begin_round(p.client_sizes);
+        let spec = agg.upload_spec();
+        self.absorbed.store(0, Ordering::SeqCst);
+
+        // Slot → worker layout: round-robin, like slots over shards.
+        // Which worker computes a slot never affects the result (client
+        // compute is a pure function and absorb order is enforced by
+        // the StreamAbsorber), so this is purely load balancing.
+        let mut assignments: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nconns];
+        for (slot, &c) in p.participants.iter().enumerate() {
+            let client = u32::try_from(c).context("client id exceeds u32")?;
+            assignments[slot % nconns].push((slot as u32, client));
+        }
+
+        let mut transport_bytes = 0u64;
+        let w_frame = encode_dense_frame(w, &F32LE);
+        let mut start_err = None;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            // Encode the fixed part with an empty frame and splice the
+            // shared weights buffer in at write time — the whole-model
+            // bytes are never cloned per worker.
+            let head = Msg::RoundStart {
+                round: p.round,
+                round_seed: p.round_seed,
+                lr: p.lr,
+                codec_id: self.opts.codec.id(),
+                assignments: assignments[i].clone(),
+                weights_frame: Vec::new(),
+            }
+            .encode();
+            match write_msg_parts(conn, &head, &w_frame) {
+                Ok(n) => transport_bytes += n,
+                Err(e) => {
+                    start_err = Some(e.context(format!("sending round-start to worker {i}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = start_err {
+            self.abort_round("round-start delivery failed");
+            return Err(e);
+        }
+
+        // Concurrent upload readers: one thread per connection, all
+        // streaming into one ordered absorber. Absorption happens as
+        // frames arrive — the only synchronization is the absorber
+        // lock, never a cohort barrier.
+        let absorber = match StreamAbsorber::new(&spec, lambdas, &mut self.scratch) {
+            Ok(a) => Mutex::new(a),
+            Err(e) => {
+                self.abort_round("absorber setup failed");
+                return Err(e);
+            }
+        };
+        let failed = AtomicBool::new(false);
+        let probe = Arc::clone(&self.absorbed);
+        let max_msg = self.opts.max_msg;
+
+        struct ConnRead {
+            /// (slot, loss) in this connection's upload order.
+            pairs: Vec<(usize, f32)>,
+            bytes_in: u64,
+            /// (frame bytes, idealized payload bytes) of slot 0, if
+            /// this connection carried it.
+            slot0: Option<(u64, u64)>,
+        }
+
+        let results: Vec<Result<ConnRead>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .conns
+                .iter_mut()
+                .zip(assignments.iter())
+                .map(|(conn, assigned)| {
+                    let absorber = &absorber;
+                    let failed = &failed;
+                    let probe = &probe;
+                    s.spawn(move || -> Result<ConnRead> {
+                        let mut out = ConnRead {
+                            pairs: Vec::with_capacity(assigned.len()),
+                            bytes_in: 0,
+                            slot0: None,
+                        };
+                        for &(expect_slot, client) in assigned.iter() {
+                            if failed.load(Ordering::SeqCst) {
+                                bail!("round already failed on another connection");
+                            }
+                            let step =
+                                read_one_upload(conn, expect_slot, max_msg, absorber, probe);
+                            match step {
+                                Ok(up) => {
+                                    out.bytes_in += up.bytes_in;
+                                    if expect_slot == 0 {
+                                        out.slot0 = Some((up.frame_bytes, up.ideal_bytes));
+                                    }
+                                    out.pairs.push((expect_slot as usize, up.loss));
+                                }
+                                Err(e) => {
+                                    failed.store(true, Ordering::SeqCst);
+                                    return Err(e).with_context(|| {
+                                        format!("upload from client {client} (slot {expect_slot})")
+                                    });
+                                }
+                            }
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("transport reader panicked"))
+                .collect()
+        });
+
+        let mut conn_reads = Vec::with_capacity(nconns);
+        let mut first_err = None;
+        for r in results {
+            match r {
+                Ok(cr) => conn_reads.push(cr),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        let absorber = absorber.into_inner().expect("absorber poisoned");
+        if let Some(e) = first_err {
+            // Keep the shard allocations: a faulted round must not cost
+            // the next one a realloc of up to MAX_SHARDS tables.
+            absorber.into_scratch(&mut self.scratch);
+            self.abort_round("upload stream failed");
+            return Err(e.context(format!("round {}", p.round)));
+        }
+
+        let merged = match absorber.finish(&mut self.scratch) {
+            Ok(m) => m,
+            Err(e) => {
+                self.abort_round("merge failed");
+                return Err(e);
+            }
+        };
+        let update = match agg.finish(&merged, p.lr) {
+            Ok(u) => u,
+            Err(e) => {
+                self.abort_round("aggregator finish failed");
+                return Err(e);
+            }
+        };
+        self.scratch.push(merged);
+        let update_nnz = update.nnz();
+        let download_bytes_per_client = update.payload_bytes();
+        let update_frame = encode_update(&update, self.opts.codec);
+
+        // Broadcast the update frame to every participant connection.
+        let end_bytes = Msg::RoundEnd { round: p.round, update_frame: update_frame.clone() }
+            .encode();
+        let mut bcast_err = None;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            match write_msg(conn, &end_bytes) {
+                Ok(n) => transport_bytes += n,
+                Err(e) => {
+                    bcast_err = Some(e.context(format!("broadcasting round-end to worker {i}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = bcast_err {
+            // The aggregator has already advanced (momentum, error
+            // sketches) — the round is lost, not replayable. Drop the
+            // connections; the model vector is left un-stepped.
+            self.abort_round("round-end delivery failed");
+            return Err(e);
+        }
+
+        // Apply the *decoded* broadcast, exactly as wire-mode training
+        // does, so lossy codecs shape the trajectory identically over
+        // transport and in-process.
+        let decoded = decode_update(&update_frame).context("decoding own broadcast")?;
+        decoded.apply(w);
+
+        let mut losses = vec![0f32; slots];
+        let mut wire_up0 = 0u64;
+        let mut ideal_up0 = 0u64;
+        for cr in conn_reads {
+            transport_bytes += cr.bytes_in;
+            if let Some((frame_bytes, ideal_bytes)) = cr.slot0 {
+                wire_up0 = frame_bytes;
+                ideal_up0 = ideal_bytes;
+            }
+            for (slot, loss) in cr.pairs {
+                losses[slot] = loss;
+            }
+        }
+        let mut loss_sum = 0f64;
+        for &l in &losses {
+            loss_sum += l as f64;
+        }
+        Ok(RoundStats {
+            mean_loss: loss_sum / slots as f64,
+            losses,
+            update_nnz,
+            upload_bytes_per_client: ideal_up0,
+            download_bytes_per_client,
+            wire_upload_bytes_per_client: wire_up0,
+            wire_download_bytes_per_client: update_frame.len() as u64,
+            transport_bytes,
+        })
+    }
+
+    /// Fail the in-flight round: best-effort `Abort` to every worker,
+    /// then drop all connections. Scratch and listener stay.
+    fn abort_round(&mut self, reason: &str) {
+        let bytes = Msg::Abort { reason: reason.to_string() }.encode();
+        for conn in &mut self.conns {
+            let _ = write_msg(conn, &bytes);
+            conn.shutdown();
+        }
+        self.conns.clear();
+    }
+
+    /// End training: tell every worker to disconnect cleanly.
+    pub fn shutdown(&mut self) {
+        let bytes = Msg::Shutdown.encode();
+        for conn in &mut self.conns {
+            let _ = write_msg(conn, &bytes);
+            conn.shutdown();
+        }
+        self.conns.clear();
+    }
+}
+
+impl Drop for RoundServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        #[cfg(unix)]
+        if let Some(p) = &self.uds_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// What one successfully absorbed upload reports back to the reader
+/// loop.
+struct UploadRead {
+    loss: f32,
+    bytes_in: u64,
+    /// Measured `FSGW` frame bytes of this upload.
+    frame_bytes: u64,
+    /// Idealized payload bytes of this upload.
+    ideal_bytes: u64,
+}
+
+/// Read, validate, and absorb one upload from `conn`. `expect_slot` is
+/// the next slot this connection owes (clients deliver their assignment
+/// list in order, so anything else is a protocol violation). The frame
+/// is offered to the shared absorber *immediately* — this is the
+/// streaming-absorb path; the absorber parks it only if an earlier slot
+/// of the same shard is still outstanding.
+fn read_one_upload(
+    conn: &mut Conn,
+    expect_slot: u32,
+    max_msg: usize,
+    absorber: &Mutex<StreamAbsorber>,
+    probe: &AtomicUsize,
+) -> Result<UploadRead> {
+    let (bytes, bytes_in) = read_msg(conn, max_msg)?;
+    let (slot, loss, frame) = match Msg::decode(bytes)? {
+        Msg::Upload { slot, loss, frame } => (slot, loss, frame),
+        other => bail!("expected an upload message, got {}", other.kind_name()),
+    };
+    if slot != expect_slot {
+        bail!("upload for slot {slot}, but slot {expect_slot} is next on this connection");
+    }
+    let frame_bytes = frame.len() as u64;
+    // Byte accounting samples slot 0 only (the engine's convention —
+    // all of a strategy's uploads are the same size); don't pay an
+    // extra full parse for the slots whose number would be discarded.
+    let ideal_bytes =
+        if expect_slot == 0 { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
+    let mut ab = absorber.lock().expect("absorber lock poisoned");
+    ab.offer(slot as usize, frame)?;
+    probe.store(ab.absorbed(), Ordering::SeqCst);
+    drop(ab);
+    Ok(UploadRead { loss, bytes_in, frame_bytes, ideal_bytes })
+}
+
+/// Server side of the hello handshake: the peer must lead with a
+/// matching-version `Hello` within the read deadline.
+fn handshake(conn: &mut Conn, max_msg: usize) -> Result<()> {
+    let (bytes, _) = read_msg(conn, max_msg)?;
+    match Msg::decode(bytes)? {
+        Msg::Hello { version } if version == PROTO_VERSION => Ok(()),
+        Msg::Hello { version } => {
+            bail!("peer speaks transport protocol v{version}, this build speaks v{PROTO_VERSION}")
+        }
+        other => bail!("expected hello, got {} message", other.kind_name()),
+    }
+}
+
+/// Idealized (paper footnote-5) payload bytes of a parsed frame:
+/// 4 bytes per encoded value, regardless of codec or index overhead.
+fn idealized_payload(frame: &Frame<'_>) -> u64 {
+    let n = match &frame.body {
+        Body::Sketch { values, .. } => values.len(),
+        Body::Sparse { values, .. } => values.len(),
+        Body::Dense { values, .. } => values.len(),
+    };
+    4 * n as u64
+}
+
+/// Outcome of a served training run (`fetchsgd serve`).
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub strategy: String,
+    pub task: String,
+    pub rounds: usize,
+    /// Mean training loss over the last 10 rounds.
+    pub final_loss: f64,
+    /// Idealized totals (paper convention), all clients and rounds.
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    /// Measured `FSGW` frame totals.
+    pub wire_upload_bytes: u64,
+    pub wire_download_bytes: u64,
+    /// Measured on-the-wire totals including framing and control
+    /// messages — what the sockets actually carried.
+    pub transport_bytes: u64,
+}
+
+/// Serve a full training run over `cfg.transport`: the server half of
+/// `fetchsgd train`, with remote workers doing the client compute via
+/// [`crate::transport::client::join`] / `fetchsgd join`.
+///
+/// Round seeds, client selection, aggregation order, and the broadcast
+/// round-trip all match the in-process `Trainer` exactly, so a served
+/// run is bitwise identical to `fetchsgd train` on the same config
+/// (under a lossless upload codec). Evaluation is not run here — score
+/// the resulting metrics log or weights offline.
+pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> {
+    use crate::compression::accounting::CommStats;
+    use crate::coordinator::{build_strategy, ClientSelector};
+    use crate::metrics::{MetricsLogger, RoundRecord};
+    use crate::model::build_dataset;
+    use crate::runtime::artifact::{Manifest, TaskArtifacts};
+    use crate::runtime::Runtime;
+    use crate::util::rng::derive_seed;
+
+    let spec = cfg
+        .transport
+        .as_deref()
+        .context("serve mode needs a transport endpoint (transport=tcp:HOST:PORT | uds:/path)")?;
+    let ep = Endpoint::parse(spec)?;
+    let codec: &'static dyn Codec = match &cfg.wire {
+        Some(name) => crate::wire::codec_by_name(name).context("TrainConfig.wire")?,
+        None => &F32LE,
+    };
+    let runtime = std::sync::Arc::new(Runtime::cpu().context("PJRT runtime")?);
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let artifacts = TaskArtifacts::new(runtime, &manifest, &cfg.task)?;
+    let (_client, mut agg) = build_strategy(cfg, &artifacts)?;
+    let dataset = build_dataset(&artifacts.manifest, &cfg.scale)?;
+    let selector = ClientSelector::new(dataset.num_clients(), cfg.clients_per_round, cfg.seed);
+    let mut logger = MetricsLogger::new(cfg.log_path.as_deref())?;
+    let mut w = artifacts.init_weights()?;
+
+    let opts = ServeOptions {
+        workers: cfg.transport_workers,
+        codec,
+        // The round-start is a ~4·dim-byte weights frame plus 8 bytes
+        // per assigned slot: scale the message cap so big models and
+        // big cohorts clear it (with slack for headers). Keep in sync
+        // with join_training's mirror formula.
+        max_msg: DEFAULT_MAX_MSG_BYTES
+            .max(4 * artifacts.manifest.dim + 8 * cfg.clients_per_round + (1 << 12)),
+        ..Default::default()
+    };
+    let mut server = RoundServer::bind(&ep, opts)?;
+    eprintln!(
+        "[serve] listening on {} for {} worker(s), strategy={}",
+        server.local_endpoint()?,
+        cfg.transport_workers,
+        agg.name()
+    );
+    let mut comm = CommStats::default();
+    let mut transport_bytes = 0u64;
+    for round in 0..cfg.rounds {
+        let lr = cfg.lr.at(round, cfg.rounds);
+        let participants = selector.select(round);
+        let sizes: Vec<f32> =
+            participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        // Same derivation as Trainer::step — a served run replays the
+        // exact in-process trajectory for the same config.
+        let round_seed = derive_seed(cfg.seed ^ 0xB0B0, round as u64);
+        let params = RoundParams {
+            round: round as u64,
+            round_seed,
+            lr,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = server
+            .run_round(agg.as_mut(), &params, &mut w)
+            .with_context(|| format!("round {round}"))?;
+        transport_bytes += stats.transport_bytes;
+        comm.record_round(
+            participants.len(),
+            stats.upload_bytes_per_client,
+            stats.download_bytes_per_client,
+            0,
+            stats.wire_upload_bytes_per_client,
+            stats.wire_download_bytes_per_client,
+        );
+        let n = participants.len() as u64;
+        logger.log_round(RoundRecord {
+            round,
+            loss: stats.mean_loss,
+            lr: lr as f64,
+            upload_bytes: stats.upload_bytes_per_client * n,
+            download_bytes: stats.download_bytes_per_client * n,
+            wire_upload_bytes: stats.wire_upload_bytes_per_client * n,
+            wire_download_bytes: stats.wire_download_bytes_per_client * n,
+            transport_bytes: stats.transport_bytes,
+            update_nnz: stats.update_nnz,
+        });
+        if cfg.verbose {
+            eprintln!(
+                "[serve] round {round:>4} loss {:.4} lr {lr:.4} nnz {} wire {} B",
+                stats.mean_loss, stats.update_nnz, stats.transport_bytes
+            );
+        }
+    }
+    server.shutdown();
+    Ok(ServeSummary {
+        strategy: agg.name().to_string(),
+        task: cfg.task.clone(),
+        rounds: cfg.rounds,
+        final_loss: logger.recent_loss(10),
+        upload_bytes: comm.upload_bytes,
+        download_bytes: comm.download_bytes,
+        wire_upload_bytes: comm.wire_upload_bytes,
+        wire_download_bytes: comm.wire_download_bytes,
+        transport_bytes,
+    })
+}

@@ -246,6 +246,25 @@ fn encode_dense(v: &[f32], codec: &dyn Codec) -> Vec<u8> {
     out
 }
 
+/// Encode a bare dense vector as one frame — the transport layer's
+/// per-round weights broadcast (same grammar as dense uploads/updates,
+/// so receivers need no extra machinery).
+pub fn encode_dense_frame(v: &[f32], codec: &dyn Codec) -> Vec<u8> {
+    encode_dense(v, codec)
+}
+
+/// Decode a frame that must carry a dense payload (the transport
+/// client's view of the weights broadcast). Rejects sketch/sparse
+/// frames.
+pub fn decode_dense_frame(bytes: &[u8]) -> Result<Vec<f32>> {
+    match Frame::parse(bytes)?.body {
+        Body::Dense { values, .. } => Ok(values.to_vec()),
+        Body::Sketch { .. } | Body::Sparse { .. } => {
+            bail!("expected a dense frame, got a different payload kind")
+        }
+    }
+}
+
 /// Encode a client upload as one frame.
 pub fn encode_upload(upload: &ClientUpload, codec: &dyn Codec) -> Vec<u8> {
     match upload {

@@ -34,6 +34,8 @@ fn smoke_cfg(strategy: StrategyConfig, rounds: usize) -> TrainConfig {
         verbose: false,
         parallelism: 0,
         wire: None,
+        transport: None,
+        transport_workers: 1,
     }
 }
 

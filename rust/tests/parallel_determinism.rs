@@ -216,6 +216,8 @@ fn trainer_runs_are_bitwise_identical_across_parallelism() {
             verbose: false,
             parallelism,
             wire: wire.map(String::from),
+            transport: None,
+            transport_workers: 1,
         };
         let mut t = Trainer::with_runtime(cfg, runtime.clone()).unwrap();
         let s = t.run().unwrap();

@@ -1,0 +1,219 @@
+//! Transport determinism: serving rounds over a real socket must be a
+//! pure deployment knob. A multi-round run with N socket workers over
+//! UDS (and TCP) produces bitwise-identical final weights and losses to
+//! the in-process engine at parallelism 1 and 8, for the sketch,
+//! sparse, and dense upload paths — the acceptance bar for the
+//! transport subsystem.
+//!
+//! Why this holds: the server replays the engine's shard layout
+//! (`aggregate::shard_of`), the `StreamAbsorber` enforces in-shard slot
+//! order no matter when frames arrive, weights broadcasts are lossless
+//! `f32le`, and the update round-trips encode→decode exactly like wire
+//! mode (itself pinned bitwise-identical in
+//! `parallel_determinism.rs`).
+
+use std::time::Duration;
+
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::local_topk::LocalTopKServer;
+use fetchsgd::compression::sim::{
+    sim_artifacts, SimDataset, SimDenseClient, SimSketchClient, SimTopKClient,
+};
+use fetchsgd::compression::uncompressed::UncompressedServer;
+use fetchsgd::compression::{ClientCompute, ServerAggregator};
+use fetchsgd::coordinator::{engine, ClientSelector};
+use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
+use fetchsgd::util::rng::derive_seed;
+use fetchsgd::wire::Codec;
+
+const DIM: usize = 30_000;
+const ROWS: usize = 5;
+const COLS: usize = 1024;
+const SEED: u64 = 0xD5;
+const ROUNDS: usize = 4;
+const COHORT: usize = 24; // > MAX_SHARDS ⇒ shards own multiple slots
+const NUM_CLIENTS: usize = 200;
+
+/// The in-process reference loop — the engine pipeline exactly as the
+/// Trainer drives it (mirrors `parallel_determinism.rs::sim_train`).
+fn sim_train(
+    client: &dyn ClientCompute,
+    server: &mut dyn ServerAggregator,
+    threads: usize,
+    wire: Option<&'static dyn Codec>,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: NUM_CLIENTS };
+    let selector = ClientSelector::new(NUM_CLIENTS, COHORT, SEED);
+    let mut w = vec![0f32; DIM];
+    let mut losses = Vec::new();
+    let mut scratch = Vec::new();
+    let mut wire_upload_bytes = 0u64;
+    for round in 0..ROUNDS {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.05,
+            round_seed: derive_seed(SEED, round as u64),
+            threads,
+            wire,
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+                .unwrap();
+        losses.extend_from_slice(&out.losses);
+        wire_upload_bytes += out.wire_upload_bytes_per_client * participants.len() as u64;
+        let update = server.finish(&out.merged, 0.05).unwrap();
+        scratch.push(out.merged);
+        let update = match wire {
+            Some(codec) => {
+                let frame = fetchsgd::wire::encode_update(&update, codec);
+                fetchsgd::wire::decode_update(&frame).unwrap()
+            }
+            None => update,
+        };
+        update.apply(&mut w);
+    }
+    (w, losses, wire_upload_bytes)
+}
+
+/// The same training loop served over a socket: the server side runs
+/// `RoundServer::run_round` per round while `workers` socket clients
+/// drive the client compute through `transport::join`.
+fn transport_train(
+    ep: &Endpoint,
+    workers: usize,
+    client: &dyn ClientCompute,
+    server: &mut dyn ServerAggregator,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let opts = ServeOptions {
+        workers,
+        read_timeout: Duration::from_secs(60),
+        accept_timeout: Duration::from_secs(60),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let selector = ClientSelector::new(NUM_CLIENTS, COHORT, SEED);
+    let mut w = vec![0f32; DIM];
+    let mut losses = Vec::new();
+    let mut wire_upload_bytes = 0u64;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let ep = actual.clone();
+            s.spawn(move || {
+                let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                let dataset = SimDataset { num_clients: NUM_CLIENTS };
+                let opts = JoinOptions {
+                    read_timeout: Some(Duration::from_secs(60)),
+                    ..Default::default()
+                };
+                let sum = join(&ep, client, &dataset, &artifacts, &opts).unwrap();
+                assert_eq!(sum.rounds, ROUNDS);
+                assert!(sum.uploads > 0);
+            });
+        }
+        for round in 0..ROUNDS {
+            let participants = selector.select(round);
+            let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+            let params = RoundParams {
+                round: round as u64,
+                round_seed: derive_seed(SEED, round as u64),
+                lr: 0.05,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv.run_round(server, &params, &mut w).unwrap();
+            assert_eq!(stats.losses.len(), participants.len());
+            wire_upload_bytes += stats.wire_upload_bytes_per_client * participants.len() as u64;
+            losses.extend_from_slice(&stats.losses);
+        }
+        srv.shutdown();
+    });
+    (w, losses, wire_upload_bytes)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[cfg(unix)]
+fn uds_endpoint(tag: &str) -> Endpoint {
+    let path = std::env::temp_dir().join(format!("fsgw_{}_{tag}.sock", std::process::id()));
+    Endpoint::Unix(path)
+}
+
+type ServerFactory = Box<dyn Fn() -> Box<dyn ServerAggregator>>;
+
+fn strategies() -> Vec<(&'static str, Box<dyn ClientCompute>, ServerFactory)> {
+    vec![
+        (
+            "fetchsgd",
+            Box::new(SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 }),
+            Box::new(|| {
+                Box::new(
+                    FetchSgdServer::new(
+                        ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+                    )
+                    .unwrap(),
+                ) as Box<dyn ServerAggregator>
+            }),
+        ),
+        (
+            "local_topk",
+            Box::new(SimTopKClient { dim: DIM, heavy: 4, k: 40 }),
+            Box::new(|| {
+                Box::new(LocalTopKServer::new(DIM, 0.9, false)) as Box<dyn ServerAggregator>
+            }),
+        ),
+        (
+            "uncompressed",
+            Box::new(SimDenseClient { dim: DIM, heavy: 4 }),
+            Box::new(|| Box::new(UncompressedServer::new(DIM, 0.9)) as Box<dyn ServerAggregator>),
+        ),
+    ]
+}
+
+/// Acceptance: a full multi-round run over UDS with 3 socket workers is
+/// bitwise identical to the in-process engine at parallelism 1 and 8,
+/// for sketch, sparse, and dense upload paths.
+#[cfg(unix)]
+#[test]
+fn uds_serve_join_is_bitwise_identical_to_in_process() {
+    for (name, client, make_server) in &strategies() {
+        let (w1, l1, _) = sim_train(client.as_ref(), make_server().as_mut(), 1, None);
+        let (w8, l8, _) = sim_train(client.as_ref(), make_server().as_mut(), 8, None);
+        assert!(w1.iter().any(|&x| x != 0.0), "{name}: training must move the model");
+        assert_eq!(bits(&w1), bits(&w8), "{name}: in-process p1 vs p8 diverged");
+        let ep = uds_endpoint(name);
+        let (wt, lt, _) = transport_train(&ep, 3, client.as_ref(), make_server().as_mut());
+        assert_eq!(bits(&w1), bits(&wt), "{name}: transport weights diverge from in-process");
+        assert_eq!(bits(&l1), bits(&lt), "{name}: transport losses diverge from in-process");
+        assert_eq!(bits(&l1), bits(&l8), "{name}: losses diverge at parallelism 8");
+    }
+}
+
+/// The same loopback round over TCP, plus measured-frame-byte parity
+/// with in-process wire mode (the transport carries exactly the frames
+/// wire mode accounts for).
+#[test]
+fn tcp_serve_join_matches_in_process_and_wire_accounting() {
+    let strategies = strategies();
+    let (name, client, make_server) = &strategies[0];
+    let (w1, l1, _) = sim_train(client.as_ref(), make_server().as_mut(), 1, None);
+    let (_, _, wire_bytes_mem) =
+        sim_train(client.as_ref(), make_server().as_mut(), 1, Some(&fetchsgd::wire::F32LE));
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let (wt, lt, wire_bytes_net) = transport_train(&ep, 2, client.as_ref(), make_server().as_mut());
+    assert_eq!(bits(&w1), bits(&wt), "{name}: tcp transport weights diverge");
+    assert_eq!(bits(&l1), bits(&lt), "{name}: tcp transport losses diverge");
+    assert_eq!(
+        wire_bytes_mem, wire_bytes_net,
+        "{name}: measured frame bytes differ between wire mode and transport"
+    );
+}

@@ -1,0 +1,271 @@
+//! Transport fault injection: every malformed or hostile peer behavior
+//! must fail the round *loudly* — never panic the server, never let a
+//! byte reach an accumulator — and leave the server reusable for the
+//! next round.
+//!
+//! One server instance survives the whole gauntlet: truncated frame,
+//! corrupt magic, wrong frame version, mid-stream disconnect, oversize
+//! length prefix, and an out-of-assignment slot. After each fault a
+//! clean recovery round runs on fresh connections; at the end the
+//! weights must be bitwise identical to an in-process reference that
+//! saw only the successful rounds — proving no fault left a fingerprint
+//! on round state.
+
+use std::io::Write;
+use std::time::Duration;
+
+use fetchsgd::compression::aggregate::run_server_round;
+use fetchsgd::compression::sim::{sim_artifacts, synth_grad, SimDataset, SimDenseClient};
+use fetchsgd::compression::uncompressed::UncompressedServer;
+use fetchsgd::compression::ClientUpload;
+use fetchsgd::transport::framing::{read_msg, write_msg};
+use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
+use fetchsgd::transport::{
+    join, Conn, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions,
+};
+use fetchsgd::wire::{encode_upload, F32LE};
+
+const DIM: usize = 64;
+const HEAVY: usize = 2;
+const NUM_CLIENTS: usize = 10;
+const LR: f32 = 0.05;
+
+fn round_seed(k: u64) -> u64 {
+    0x5EED_0000 ^ (k * 7919)
+}
+
+/// Hand-rolled worker: handshake, read the round start, return the
+/// parsed assignment. The test's evil peers diverge after this point.
+fn start_round(conn: &mut Conn) -> (u64, Vec<(u32, u32)>) {
+    write_msg(conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(conn, 64 << 20).unwrap();
+    match Msg::decode(bytes).unwrap() {
+        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
+        _ => panic!("expected round-start"),
+    }
+}
+
+/// A well-behaved hand-rolled worker for one round: uploads the same
+/// deterministic dense gradient the sim client would, then reads until
+/// the server says abort / round-end / EOF.
+fn good_worker(ep: &Endpoint) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20))).unwrap();
+    let (seed, assignments) = start_round(&mut conn);
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.25, frame }.encode()).unwrap();
+    }
+    // Round-end on success, abort (or a dropped conn) on failure —
+    // either way this worker is done.
+    if let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) {
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundEnd { .. } | Msg::Abort { .. } => {}
+            other => panic!("unexpected {} after upload", other.kind_name()),
+        }
+    }
+}
+
+/// One evil behavior, injected after a legitimate handshake +
+/// round-start so the fault lands mid-round where it hurts.
+type Evil = fn(&mut Conn, u32, u64);
+
+fn valid_dense_frame(seed: u64, client: u32) -> Vec<u8> {
+    let g = synth_grad(DIM, HEAVY, client as usize, seed);
+    encode_upload(&ClientUpload::Dense(g), &F32LE)
+}
+
+fn evil_truncated_frame(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame.truncate(frame.len() - 3);
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+fn evil_corrupt_magic(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame[0] = b'X';
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+fn evil_wrong_version(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame[4] = 99;
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+fn evil_midstream_disconnect(conn: &mut Conn, _slot: u32, _seed: u64) {
+    // Claim a 4096-byte message, deliver 10 bytes, vanish.
+    conn.write_all(&4096u32.to_le_bytes()).unwrap();
+    conn.write_all(&[7u8; 10]).unwrap();
+    conn.flush().unwrap();
+    conn.shutdown();
+}
+
+fn evil_oversize_prefix(conn: &mut Conn, _slot: u32, _seed: u64) {
+    conn.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    conn.flush().unwrap();
+}
+
+fn evil_wrong_slot(conn: &mut Conn, _slot: u32, seed: u64) {
+    let frame = valid_dense_frame(seed, 0);
+    write_msg(conn, &Msg::Upload { slot: 999, loss: 0.0, frame }.encode()).unwrap();
+}
+
+#[test]
+fn faults_fail_loudly_and_leave_the_server_reusable() {
+    let cases: Vec<(&str, Evil, &str)> = vec![
+        ("truncated frame", evil_truncated_frame, "wire payload"),
+        ("corrupt magic", evil_corrupt_magic, "magic"),
+        ("wrong frame version", evil_wrong_version, "version"),
+        ("mid-stream disconnect", evil_midstream_disconnect, "message body"),
+        ("oversize length prefix", evil_oversize_prefix, "message cap"),
+        ("out-of-assignment slot", evil_wrong_slot, "next on this connection"),
+    ];
+
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(10),
+        accept_timeout: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants = [0usize, 1];
+    let sizes = [1.0f32, 1.0];
+    let mut successful_seeds = Vec::new();
+    let mut round = 0u64;
+
+    for (name, evil, expect) in cases {
+        // Fault round: one good worker, one evil worker.
+        let seed = round_seed(round);
+        std::thread::scope(|s| {
+            let ep = actual.clone();
+            s.spawn(move || good_worker(&ep));
+            let ep = actual.clone();
+            s.spawn(move || {
+                let mut conn = Conn::connect(&ep).unwrap();
+                conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
+                    .unwrap();
+                let (seed, assignments) = start_round(&mut conn);
+                let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
+                evil(&mut conn, slot, seed);
+                // Stay alive until the server aborts us so the failure
+                // is the bad bytes, not a racing disconnect.
+                let _ = read_msg(&mut conn, 64 << 20);
+            });
+            let params = RoundParams {
+                round,
+                round_seed: seed,
+                lr: LR,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let err = srv.run_round(&mut agg, &params, &mut w).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(expect), "{name}: error was: {msg}");
+        });
+        assert_eq!(srv.connected(), 0, "{name}: faulted round must drop its connections");
+        round += 1;
+
+        // Recovery round: two good workers on fresh connections. The
+        // server — same instance, same scratch pool — must serve it
+        // cleanly.
+        let seed = round_seed(round);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let ep = actual.clone();
+                s.spawn(move || good_worker(&ep));
+            }
+            let params = RoundParams {
+                round,
+                round_seed: seed,
+                lr: LR,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv
+                .run_round(&mut agg, &params, &mut w)
+                .unwrap_or_else(|e| panic!("{name}: recovery round failed: {e:#}"));
+            assert_eq!(stats.losses.len(), 2);
+            assert!(stats.wire_upload_bytes_per_client > 0);
+        });
+        srv.shutdown();
+        successful_seeds.push(seed);
+        round += 1;
+    }
+
+    // No fault may have left a fingerprint: the weights equal an
+    // in-process reference that saw only the successful rounds.
+    let mut w_ref = vec![0f32; DIM];
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    for &seed in &successful_seeds {
+        let uploads: Vec<ClientUpload> = participants
+            .iter()
+            .map(|&c| ClientUpload::Dense(synth_grad(DIM, HEAVY, c, seed)))
+            .collect();
+        run_server_round(&mut agg_ref, &sizes, uploads, &mut w_ref, LR).unwrap();
+    }
+    assert!(w_ref.iter().any(|&x| x != 0.0), "recovery rounds must move the model");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&w_ref),
+        bits(&w),
+        "a faulted round scribbled on the accumulator or model state"
+    );
+}
+
+/// A peer speaking the wrong *transport* protocol version is dropped at
+/// the handshake; a well-behaved pool still gets served.
+#[test]
+fn bad_handshake_is_dropped_and_round_proceeds() {
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 1,
+        read_timeout: Duration::from_secs(10),
+        accept_timeout: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    std::thread::scope(|s| {
+        let ep = actual.clone();
+        s.spawn(move || {
+            // Wrong protocol version: the server must reject us…
+            let mut conn = Conn::connect(&ep).unwrap();
+            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
+                .unwrap();
+            write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION + 1 }.encode()).unwrap();
+            // …with an abort (or a plain close).
+            if let Ok((bytes, _)) = read_msg(&mut conn, 1 << 20) {
+                assert!(matches!(Msg::decode(bytes).unwrap(), Msg::Abort { .. }));
+            }
+            // …and then serve a well-behaved worker in its place.
+            let artifacts = sim_artifacts(DIM, 1, 64, 1).unwrap();
+            let dataset = SimDataset { num_clients: NUM_CLIENTS };
+            let client = SimDenseClient { dim: DIM, heavy: HEAVY };
+            let opts =
+                JoinOptions { read_timeout: Some(Duration::from_secs(20)), ..Default::default() };
+            let sum = join(&ep, &client, &dataset, &artifacts, &opts).unwrap();
+            assert_eq!(sum.rounds, 1);
+        });
+        let participants = [3usize];
+        let sizes = [1.0f32];
+        let params = RoundParams {
+            round: 0,
+            round_seed: 11,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        assert_eq!(stats.losses.len(), 1);
+        srv.shutdown();
+    });
+    assert!(w.iter().any(|&x| x != 0.0));
+}

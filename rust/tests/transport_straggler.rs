@@ -1,0 +1,130 @@
+//! Streaming absorb under a straggler: one deliberately slow client
+//! must not block absorption of already-arrived uploads.
+//!
+//! The proof is direct observation, not timing: the server's
+//! absorbed-count probe must reach W−1 while the straggler's upload is
+//! still *withheld* (it waits on a channel the test releases only after
+//! seeing the count), which is impossible if the server buffered the
+//! cohort behind a barrier. The round then completes and the result is
+//! bitwise identical to the in-process reference, so streaming changed
+//! latency, never bits.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use fetchsgd::compression::aggregate::run_server_round;
+use fetchsgd::compression::sim::synth_grad;
+use fetchsgd::compression::uncompressed::UncompressedServer;
+use fetchsgd::compression::ClientUpload;
+use fetchsgd::transport::framing::{read_msg, write_msg};
+use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
+use fetchsgd::transport::{Conn, Endpoint, RoundParams, RoundServer, ServeOptions};
+use fetchsgd::wire::{encode_upload, F32LE};
+
+const DIM: usize = 64;
+const HEAVY: usize = 2;
+const W: usize = 4;
+const LR: f32 = 0.05;
+const SEED: u64 = 0xABCD;
+
+/// Hand-rolled worker: handshake, take the one assigned slot, wait for
+/// `gate` (None = no wait), upload, drain round-end + shutdown.
+fn worker(ep: &Endpoint, gate: Option<mpsc::Receiver<()>>) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(&mut conn, 64 << 20).unwrap();
+    let (seed, assignments) = match Msg::decode(bytes).unwrap() {
+        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
+        _ => panic!("expected round-start"),
+    };
+    if let Some(rx) = gate {
+        rx.recv_timeout(Duration::from_secs(30)).expect("straggler gate never released");
+    }
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode()).unwrap();
+    }
+    loop {
+        let (bytes, _) = read_msg(&mut conn, 64 << 20).unwrap();
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundEnd { .. } => {}
+            Msg::Shutdown => break,
+            other => panic!("unexpected {}", other.kind_name()),
+        }
+    }
+}
+
+#[test]
+fn straggler_does_not_block_streaming_absorb() {
+    let opts = ServeOptions {
+        workers: W,
+        read_timeout: Duration::from_secs(30),
+        accept_timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let probe = srv.absorbed_probe();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = (0..W).collect();
+    let sizes = vec![1.0f32; W];
+    let (tx, rx) = mpsc::channel();
+
+    std::thread::scope(|s| {
+        // Three prompt workers and one gated straggler.
+        for _ in 0..W - 1 {
+            let ep = actual.clone();
+            s.spawn(move || worker(&ep, None));
+        }
+        let ep = actual.clone();
+        s.spawn(move || worker(&ep, Some(rx)));
+
+        // The round runs on its own thread so this one can watch the
+        // probe while the straggler is still withholding its upload.
+        let server_round = s.spawn(|| {
+            let params = RoundParams {
+                round: 0,
+                round_seed: SEED,
+                lr: LR,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+            srv.shutdown();
+            stats
+        });
+
+        // Streaming absorb, observed: all prompt uploads must fold in
+        // while the straggler is provably still waiting on our gate.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while probe.load(Ordering::SeqCst) < W - 1 {
+            assert!(Instant::now() < deadline, "prompt uploads were not absorbed while waiting");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            probe.load(Ordering::SeqCst),
+            W - 1,
+            "the withheld upload cannot have been absorbed"
+        );
+        // Release the straggler; the round must now complete.
+        tx.send(()).unwrap();
+        let stats = server_round.join().expect("server round panicked");
+        assert_eq!(stats.losses.len(), W);
+        assert_eq!(probe.load(Ordering::SeqCst), W);
+    });
+
+    // Streaming changed latency, never bits.
+    let uploads: Vec<ClientUpload> = participants
+        .iter()
+        .map(|&c| ClientUpload::Dense(synth_grad(DIM, HEAVY, c, SEED)))
+        .collect();
+    let mut w_ref = vec![0f32; DIM];
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    run_server_round(&mut agg_ref, &sizes, uploads, &mut w_ref, LR).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&w_ref), bits(&w));
+}

@@ -4,10 +4,13 @@
 //! bytes dominate the idealized footnote-5 estimates for every
 //! strategy's upload and broadcast shape.
 
-use fetchsgd::compression::{ClientUpload, RoundUpdate};
+use fetchsgd::compression::aggregate::RoundAccum;
+use fetchsgd::compression::{ClientUpload, RoundUpdate, UploadSpec};
 use fetchsgd::sketch::{CountSketch, SparseVec};
 use fetchsgd::util::proptest::check;
-use fetchsgd::wire::{decode_update, decode_upload, encode_update, encode_upload, F16LE, F32LE};
+use fetchsgd::wire::{
+    decode_update, decode_upload, encode_update, encode_upload, Frame, F16LE, F32LE, HEADER_LEN,
+};
 
 fn random_sketch(g: &mut fetchsgd::util::proptest::Gen) -> CountSketch {
     let rows = 1 + g.usize_in(0, 5);
@@ -187,4 +190,101 @@ fn lossy_codec_still_shrinks_dense_payloads_below_idealized() {
     let frame = encode_update(&update, &F16LE);
     assert!((frame.len() as u64) < update.payload_bytes());
     assert!(decode_update(&frame).is_ok());
+}
+
+// ---- UploadSpec::validate_frame edge cases the transport relies on ----
+
+/// A zero-length sparse payload (a client whose top-k came up empty) is
+/// a *legal* frame: it parses, validates against a dense spec, absorbs
+/// as a no-op that still counts toward the cohort, and is rejected by a
+/// sketch spec like any other kind mismatch.
+#[test]
+fn zero_length_sparse_payload_is_legal_and_absorbs_as_a_noop() {
+    let dim = 100;
+    let empty = SparseVec::from_sorted(dim, Vec::new(), Vec::new()).unwrap();
+    let frame = encode_upload(&ClientUpload::Sparse(empty), &F32LE);
+    let parsed = Frame::parse(&frame).unwrap();
+    UploadSpec::Dense { dim }.validate_frame(&parsed).unwrap();
+    assert!(UploadSpec::Sketch { rows: 3, cols: 128, dim, seed: 1 }
+        .validate_frame(&parsed)
+        .is_err());
+
+    let mut acc = RoundAccum::new(&UploadSpec::Dense { dim }).unwrap();
+    acc.absorb_bytes(&frame, 1.0).unwrap();
+    assert_eq!(acc.absorbed(), 1, "an empty upload still counts toward the cohort");
+    assert!(acc.as_dense().unwrap().iter().all(|&x| x == 0.0));
+}
+
+/// A sparse frame claiming more nonzeros than the dimension (k > d) is
+/// structurally impossible and must die at parse, before validation or
+/// absorption ever sees it.
+#[test]
+fn sparse_frame_claiming_k_greater_than_d_is_rejected_at_parse() {
+    let dim = 50u64;
+    let sv = SparseVec::from_pairs(dim as usize, vec![(1, 1.0), (7, -2.0)]);
+    let mut frame = encode_upload(&ClientUpload::Sparse(sv), &F32LE);
+    // Sparse shape header: dim u64 at HEADER_LEN, nnz u64 right after.
+    let nnz_at = HEADER_LEN + 8;
+    frame[nnz_at..nnz_at + 8].copy_from_slice(&(dim + 1).to_le_bytes());
+    let err = decode_upload(&frame).unwrap_err().to_string();
+    assert!(err.contains("claims"), "{err}");
+}
+
+/// A sketch frame whose geometry is off by a single row parses fine
+/// (it is a valid sketch — just not *this round's* sketch) and must be
+/// caught by `validate_frame` / `absorb_bytes`, the seam the transport
+/// server trusts.
+#[test]
+fn sketch_shape_mismatch_by_one_row_is_rejected_by_validate_frame() {
+    let dim = 500;
+    let g: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.3).sin()).collect();
+    let spec = UploadSpec::Sketch { rows: 3, cols: 128, dim, seed: 9 };
+    let off_by_one = CountSketch::encode(4, 128, 9, &g).unwrap();
+    let frame = encode_upload(&ClientUpload::Sketch(off_by_one), &F32LE);
+    let parsed = Frame::parse(&frame).unwrap();
+    let err = spec.validate_frame(&parsed).unwrap_err().to_string();
+    assert!(err.contains("incompatible"), "{err}");
+    let mut acc = RoundAccum::new(&spec).unwrap();
+    assert!(acc.absorb_bytes(&frame, 1.0).is_err());
+    assert_eq!(acc.absorbed(), 0);
+    // The matching geometry sails through.
+    let ok = CountSketch::encode(3, 128, 9, &g).unwrap();
+    acc.absorb_bytes(&encode_upload(&ClientUpload::Sketch(ok), &F32LE), 1.0).unwrap();
+}
+
+/// The f16le broadcast round-trip for each strategy's update shape:
+/// sparse (fetchsgd / local top-k / true top-k) and dense (fedavg /
+/// uncompressed). Kind and indices must survive exactly; values within
+/// the binary16 error bound.
+#[test]
+fn f16le_broadcast_roundtrip_per_strategy_shape() {
+    let bound = |x: f32| (x.abs() / 2048.0).max(1.0 / (1u64 << 25) as f32);
+    let dim = 2000;
+    let g: Vec<f32> = (0..dim).map(|i| ((i * 13) % 89) as f32 * 0.25 - 11.0).collect();
+    let sparse = RoundUpdate::Sparse(fetchsgd::sketch::topk::top_k_sparse(&g, 40));
+    let dense = RoundUpdate::Dense(g.clone());
+    for (name, update) in [("sparse", &sparse), ("dense", &dense)] {
+        let frame = encode_update(update, &F16LE);
+        let back = decode_update(&frame).unwrap();
+        match (update, &back) {
+            (RoundUpdate::Sparse(a), RoundUpdate::Sparse(b)) => {
+                assert_eq!(a.idx, b.idx, "{name}: indices are never quantized");
+                for (x, y) in a.val.iter().zip(&b.val) {
+                    assert!((x - y).abs() <= bound(*x), "{name}: {x} -> {y}");
+                }
+            }
+            (RoundUpdate::Dense(a), RoundUpdate::Dense(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x - y).abs() <= bound(*x), "{name}: {x} -> {y}");
+                }
+            }
+            _ => panic!("{name}: broadcast kind changed across the wire"),
+        }
+        // Applying the decoded broadcast must be well-formed for the
+        // trainer's weight vector.
+        let mut w = vec![0f32; dim];
+        back.apply(&mut w);
+        assert!(w.iter().any(|&x| x != 0.0));
+    }
 }
