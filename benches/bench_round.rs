@@ -20,6 +20,7 @@
 use std::sync::Arc;
 
 use fetchsgd::bench_util::{bench, print_table, BenchResult};
+use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
 use fetchsgd::compression::{ClientUpload, ServerAggregator};
@@ -53,7 +54,7 @@ fn engine_round_bench(
     )?;
     let participants: Vec<usize> = (0..COHORT).collect();
     let mut w = vec![0f32; DIM];
-    let mut scratch = Vec::new();
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut round = 0u64;
     let tag = wire.map(|c| c.name()).unwrap_or("off");
     Ok(bench(&format!("engine round W=100 d=200k threads={threads} wire={tag}"), 1, 5, || {
@@ -71,10 +72,10 @@ fn engine_round_bench(
             wire,
         };
         let out =
-            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
                 .expect("sim round");
         let update = server.finish(&out.merged, 0.1).expect("server finish");
-        scratch.push(out.merged);
+        pipeline.recycle(out.merged);
         update.apply(&mut w);
         update
     }))
@@ -115,10 +116,11 @@ fn codec_throughput() -> Vec<BenchResult> {
 fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut counts = vec![1usize, 2, 4];
-    // Workers pull whole shards, so thread counts above MAX_SHARDS are
-    // a no-op by design — cap the sweep there.
+    // Workers pull individual slots off the round pipeline, so thread
+    // counts keep paying off up to the cohort size (the old whole-shard
+    // scheduler capped useful parallelism at MAX_SHARDS = 16).
     if cores > 4 {
-        counts.push(cores.min(engine::MAX_SHARDS));
+        counts.push(cores);
     }
     counts.dedup();
     let mut results = Vec::new();

@@ -92,6 +92,43 @@ fn main() {
         }));
     }
 
+    // row-strip-parallel shard reduce: the round pipeline's fan-in of
+    // MAX_SHARDS accumulators, sequential vs striped (one strip per
+    // table row ⇒ up to `rows` workers). Bits are identical at any
+    // width — this sizes the speedup the reduce_parallelism knob buys.
+    {
+        use fetchsgd::compression::aggregate::{reduce_shards_in_place, RoundAccum, MAX_SHARDS};
+        use fetchsgd::compression::{ClientUpload, UploadSpec};
+        let d = 100_000;
+        let spec = UploadSpec::Sketch { rows: 5, cols: 16384, dim: d, seed: 7 };
+        let mut shards: Vec<RoundAccum> = (0..MAX_SHARDS)
+            .map(|i| {
+                let mut a = RoundAccum::new(&spec).unwrap();
+                a.absorb(
+                    ClientUpload::Sketch(
+                        CountSketch::encode(5, 16384, 7, &random_vec(d, 50 + i as u64)).unwrap(),
+                    ),
+                    1.0 / MAX_SHARDS as f32,
+                )
+                .unwrap();
+                a
+            })
+            .collect();
+        for strips in [1usize, 5] {
+            results.push(bench(
+                &format!("reduce {MAX_SHARDS} shards (5x16384) strip-par={strips}"),
+                2,
+                20,
+                || {
+                    // Re-zero the destination so every iteration folds
+                    // the same work.
+                    shards[0].reset();
+                    reduce_shards_in_place(&mut shards, strips).unwrap();
+                },
+            ));
+        }
+    }
+
     // full server round (merge + momentum + error + topk + zero-out),
     // d=100k, W=20 — the end-to-end L3 cost per round.
     {

@@ -36,9 +36,7 @@ fn base() -> TrainConfig {
         baseline_rounds: Some(40),
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     }
 }
 

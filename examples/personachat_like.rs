@@ -68,9 +68,7 @@ fn main() -> anyhow::Result<()> {
         baseline_rounds: Some(rounds),
         verbose: true,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     };
 
     eprintln!("== e2e: FetchSGD finetune of {task} over 800 persona clients, {rounds} rounds ==");

@@ -14,6 +14,7 @@
 
 use std::time::Duration;
 
+use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
 use fetchsgd::compression::ServerAggregator;
@@ -96,7 +97,7 @@ fn main() -> anyhow::Result<()> {
     let dataset = SimDataset { num_clients: NUM_CLIENTS };
     let mut agg_ref = make_server();
     let mut w_ref = vec![0f32; DIM];
-    let mut scratch = Vec::new();
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     for round in 0..ROUNDS {
         let participants = selector.select(round);
         let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
@@ -112,9 +113,9 @@ fn main() -> anyhow::Result<()> {
             wire: None,
         };
         let spec = agg_ref.upload_spec();
-        let out = engine::run_round(&ctx, &participants, &lambdas, &spec, &mut scratch)?;
+        let out = engine::run_round(&ctx, &participants, &lambdas, &spec, &mut pipeline)?;
         let update = agg_ref.finish(&out.merged, 0.1)?;
-        scratch.push(out.merged);
+        pipeline.recycle(out.merged);
         update.apply(&mut w_ref);
     }
 

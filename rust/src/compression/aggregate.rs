@@ -1,34 +1,40 @@
-//! Incremental, shardable upload aggregation.
+//! The round pipeline: incremental, shardable, absorb-on-arrival upload
+//! aggregation — the *single* fan-in implementation shared by the
+//! in-process round engine and the transport server.
 //!
 //! Every strategy's fan-in is a weighted sum `Σ_i λ_i · upload_i`
 //! (see `compression` module docs), so the merge machinery lives here
-//! once, strategy-agnostic: a [`RoundAccum`] absorbs uploads as they
-//! arrive — no `Vec<ClientUpload>` of the whole cohort is ever
-//! buffered — and accumulators produced by different workers reduce
-//! with [`reduce_shards_in_place`] in a fixed order.
+//! once, strategy-agnostic. [`RoundPipeline`] owns the three pieces:
+//!
+//! - **the shard layout** ([`shard_count`] / [`shard_of`], capped at
+//!   [`MAX_SHARDS`]) — a pure function of the cohort, never of thread
+//!   count or arrival order;
+//! - **the scratch-accumulator pool** — shard [`RoundAccum`]s are reset
+//!   in place and reused across rounds instead of re-allocating up to
+//!   `MAX_SHARDS` tables a round;
+//! - **absorb-on-arrival** — [`RoundPipeline::begin`] hands out a
+//!   [`RoundInFlight`] whose `offer`/`offer_frame` fold each upload into
+//!   its shard the moment it completes (parking early arrivals until
+//!   their in-shard turn), and [`RoundPipeline::finish`] runs the
+//!   **row-strip-parallel** shard reduction.
 //!
 //! Uploads arrive in one of two forms:
 //!
-//! - [`RoundAccum::absorb`] — an in-memory [`ClientUpload`] (the
-//!   default path);
-//! - [`RoundAccum::absorb_bytes`] — an encoded wire frame
-//!   (`crate::wire`), decoded *streaming*: values fold straight from
-//!   the frame bytes into the accumulator without materializing an
-//!   intermediate upload. Under the lossless `f32le` codec the two
-//!   paths perform bit-identical arithmetic in the same order.
+//! - [`RoundInFlight::offer`] — an in-memory [`ClientUpload`] (the
+//!   in-process engine's default path);
+//! - [`RoundInFlight::offer_frame`] — an encoded wire frame
+//!   (`crate::wire`), decoded *streaming* into the accumulator via
+//!   [`RoundAccum::absorb_bytes`]. Under the lossless `f32le` codec the
+//!   two paths perform bit-identical arithmetic in the same order.
 //!
-//! Accumulators are designed for reuse: the round engine keeps its
-//! shard scratch alive across rounds ([`RoundAccum::reset`] zeroes in
-//! place via `clear_rows`/`fill`) instead of allocating and zeroing up
-//! to `MAX_SHARDS` fresh tables every round.
-//!
-//! Determinism contract: for a fixed *shard layout* (how slots are
-//! assigned to shards, fixed by the engine independently of thread
-//! count), the merged result is bitwise identical no matter how many
-//! workers produced the shards, because (a) each shard absorbs its
-//! slots in increasing slot order, and (b) shards are reduced strictly
-//! in shard order. Floating-point addition order is therefore a pure
-//! function of the layout, never of scheduling.
+//! Determinism contract: for a fixed *shard layout*, the merged result
+//! is bitwise identical no matter how many workers produced the uploads,
+//! in what order they arrived, or how many threads reduced the shards,
+//! because (a) each shard absorbs its slots in increasing slot order
+//! (early arrivals are parked), (b) shards are reduced strictly in shard
+//! order, and (c) the reduction's strip partition is a pure function of
+//! accumulator geometry — a worker count only changes *which thread*
+//! folds a strip, never the per-cell floating-point op order.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -43,20 +49,39 @@ use crate::wire::{Body, Frame};
 /// core count so the reduction tree is machine-invariant.
 pub const MAX_SHARDS: usize = 16;
 
+/// Cells per strip when the *dense* shard reduction is parallelized
+/// (sketch reductions strip by table row instead). A pure function of
+/// nothing — the dense strip partition depends only on the accumulator
+/// length, so the reduction tree never varies with worker count.
+pub const DENSE_REDUCE_STRIP: usize = 1 << 15;
+
+/// Below this many total cells a parallel reduce costs more in thread
+/// spawns than it saves; stay sequential (a pure perf heuristic — the
+/// bits are identical either way).
+const PARALLEL_REDUCE_MIN_CELLS: usize = 1 << 16;
+
 /// Number of shard accumulators for a cohort of `participants` clients.
 pub fn shard_count(participants: usize) -> usize {
     participants.clamp(1, MAX_SHARDS)
 }
 
 /// The shard that owns participant slot `slot`. This layout is the
-/// *single* source of truth shared by the in-process round engine and
-/// the transport server's streaming absorber: both absorb a shard's
-/// slots in increasing slot order and reduce shards in shard order, so
-/// the floating-point reduction tree — and therefore the merged bits —
-/// is a pure function of the cohort, never of scheduling or of frame
-/// arrival order.
+/// *single* source of truth for the whole pipeline: every consumer
+/// absorbs a shard's slots in increasing slot order and reduces shards
+/// in shard order, so the floating-point reduction tree — and therefore
+/// the merged bits — is a pure function of the cohort, never of
+/// scheduling or of upload arrival order.
 pub fn shard_of(slot: usize, shards: usize) -> usize {
     slot % shards
+}
+
+/// Resolve a configured parallelism knob: 0 = all available cores.
+pub fn resolve_parallelism(configured: usize) -> usize {
+    if configured > 0 {
+        configured
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
 }
 
 enum Acc {
@@ -64,7 +89,7 @@ enum Acc {
     Dense(Vec<f32>),
 }
 
-/// A partial weighted sum of uploads (one worker's scratch, or the
+/// A partial weighted sum of uploads (one shard's scratch, or the
 /// whole round's merged result).
 pub struct RoundAccum {
     spec: UploadSpec,
@@ -94,13 +119,21 @@ impl RoundAccum {
     }
 
     /// Zero in place, keeping the allocation — the cross-round reuse
-    /// path (ROADMAP: don't re-allocate up to 16 accumulators a round).
+    /// path (don't re-allocate up to 16 accumulators a round).
     pub fn reset(&mut self) {
         match &mut self.acc {
             Acc::Sketch(s) => s.clear_rows(0..s.rows()),
             Acc::Dense(v) => v.fill(0.0),
         }
         self.absorbed = 0;
+    }
+
+    /// Number of f32 cells in the accumulator table/vector.
+    fn cells(&self) -> usize {
+        match &self.acc {
+            Acc::Sketch(s) => s.table().len(),
+            Acc::Dense(v) => v.len(),
+        }
     }
 
     /// Number of uploads absorbed (across merges).
@@ -230,14 +263,26 @@ impl RoundAccum {
 
 /// Fan-in: reduce shard accumulators **in slice order** into
 /// `shards[0]`, leaving the tail shards' allocations intact for reuse.
-/// Sketch shards reduce through [`CountSketch::merge_shard_refs`];
-/// dense shards fold elementwise. Per cell this performs
+///
+/// `parallelism > 1` splits the work over **row strips** (one strip per
+/// sketch table row; [`DENSE_REDUCE_STRIP`]-cell chunks for dense
+/// accumulators): each worker folds its disjoint strips from every tail
+/// shard strictly in shard order, via [`CountSketch::add_rows_to`]. The
+/// strip partition is a pure function of the accumulator geometry —
+/// never of `parallelism` — and every cell still accumulates
 /// `((s0 + s1) + s2) + …` exactly as sequential absorbs would, so the
-/// result is bitwise reproducible for a fixed shard layout.
-pub fn reduce_shards_in_place(shards: &mut [RoundAccum]) -> Result<()> {
+/// result is bitwise identical at any worker count (including 1).
+pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> Result<()> {
     if shards.is_empty() {
         bail!("reduce_shards_in_place: no shards");
     }
+    if shards.len() == 1 {
+        // Single-shard rounds have nothing to fan in — don't pay the
+        // strip workers' spawn cost for an empty fold.
+        return Ok(());
+    }
+    let cells = shards[0].cells();
+    let threads = if cells < PARALLEL_REDUCE_MIN_CELLS { 1 } else { parallelism.max(1) };
     let (head, rest) = shards.split_at_mut(1);
     let tail_absorbed: usize = rest.iter().map(|s| s.absorbed).sum();
     match &mut head[0].acc {
@@ -249,21 +294,53 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum]) -> Result<()> {
                     Acc::Dense(_) => bail!("mixed shard kinds in reduce_shards_in_place"),
                 }
             }
-            base.merge_shard_refs(&refs);
+            if threads <= 1 || base.rows() <= 1 {
+                base.merge_shard_refs(&refs);
+            } else {
+                for sh in &refs {
+                    if sh.hasher() != base.hasher() || sh.dim() != base.dim() {
+                        bail!("sketch shard geometry mismatch in reduce_shards_in_place");
+                    }
+                }
+                let cols = base.cols();
+                let refs = &refs;
+                // One strip per table row; workers fold disjoint rows.
+                parallel_strips(base.table_mut(), cols, threads, &|row, dst| {
+                    for sh in refs {
+                        sh.add_rows_to(dst, row..row + 1);
+                    }
+                });
+            }
         }
         Acc::Dense(base) => {
+            let mut refs: Vec<&[f32]> = Vec::with_capacity(rest.len());
             for sh in rest.iter() {
                 match &sh.acc {
                     Acc::Dense(v) => {
                         if v.len() != base.len() {
                             bail!("shard dim mismatch in reduce_shards_in_place");
                         }
-                        for (a, &b) in base.iter_mut().zip(v) {
-                            *a += b;
-                        }
+                        refs.push(v);
                     }
                     Acc::Sketch(_) => bail!("mixed shard kinds in reduce_shards_in_place"),
                 }
+            }
+            if threads <= 1 {
+                for sh in &refs {
+                    for (a, &b) in base.iter_mut().zip(sh.iter()) {
+                        *a += b;
+                    }
+                }
+            } else {
+                let refs = &refs;
+                parallel_strips(base, DENSE_REDUCE_STRIP, threads, &|strip, dst| {
+                    let start = strip * DENSE_REDUCE_STRIP;
+                    for sh in refs {
+                        for (a, &b) in dst.iter_mut().zip(&sh[start..start + dst.len()]) {
+                            *a += b;
+                        }
+                    }
+                });
             }
         }
     }
@@ -271,63 +348,124 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum]) -> Result<()> {
     Ok(())
 }
 
-/// Order-preserving streaming absorption of wire frames arriving in
-/// *any* order — the transport server's aggregation core.
-///
-/// A socket server cannot choose upload arrival order, but the
-/// determinism contract (module docs) requires each shard to absorb its
-/// slots in increasing slot order. `StreamAbsorber` reconciles the two:
-/// a frame whose slot is the next expected one for its shard is
-/// absorbed immediately (and may unblock buffered successors); a frame
-/// that arrives early is parked as raw bytes until its turn. In the
-/// common case — clients finishing in roughly slot order — everything
-/// absorbs on arrival and nothing waits for the cohort (the ROADMAP's
-/// async/streaming-absorb item); in the worst case the buffer holds
-/// encoded frames, never decoded payloads, and the merged result is
-/// bitwise identical to the in-process engine either way.
-///
-/// Slot bookkeeping doubles as integrity protection: out-of-range and
-/// duplicate slots are rejected before any bytes reach an accumulator,
-/// so a malicious peer cannot scribble over another client's
-/// contribution.
-pub struct StreamAbsorber {
-    /// Shard accumulators, `shard_count(slots)` of them.
-    shards: Vec<RoundAccum>,
-    /// Per shard: slots absorbed so far. The next slot shard `s` will
-    /// accept is `s + done[s] * shards.len()`.
-    done: Vec<usize>,
-    /// Early frames, parked by slot until their shard catches up.
-    pending: BTreeMap<usize, Vec<u8>>,
-    /// Per-slot aggregation weights λ (also fixes the slot count).
-    weights: Vec<f32>,
-    /// Which slots have been offered (duplicate protection).
-    seen: Vec<bool>,
-    absorbed: usize,
+/// Split `dst` into `strip_len`-cell strips (the last may be short) and
+/// fold each exactly once, distributing strips round-robin over up to
+/// `threads` scoped workers. Which worker runs a strip is the *only*
+/// thing `threads` changes — each cell is written by exactly one call of
+/// `fold`, so the result is bitwise identical at any worker count.
+fn parallel_strips(
+    dst: &mut [f32],
+    strip_len: usize,
+    threads: usize,
+    fold: &(dyn Fn(usize, &mut [f32]) + Sync),
+) {
+    let strips: Vec<(usize, &mut [f32])> = dst.chunks_mut(strip_len).enumerate().collect();
+    let threads = threads.clamp(1, strips.len().max(1));
+    if threads <= 1 {
+        for (i, strip) in strips {
+            fold(i, strip);
+        }
+        return;
+    }
+    let mut per_worker: Vec<Vec<(usize, &mut [f32])>> = Vec::new();
+    per_worker.resize_with(threads, Vec::new);
+    for (j, s) in strips.into_iter().enumerate() {
+        per_worker[j % threads].push(s);
+    }
+    std::thread::scope(|scope| {
+        for list in per_worker {
+            scope.spawn(move || {
+                for (i, strip) in list {
+                    fold(i, strip);
+                }
+            });
+        }
+    });
 }
 
-impl StreamAbsorber {
-    /// Build the shard pool for a round of `weights.len()` slots,
-    /// reusing spec-compatible accumulators from `scratch` (reset in
-    /// place) and allocating only what is missing.
-    pub fn new(
-        spec: &UploadSpec,
-        weights: Vec<f32>,
-        scratch: &mut Vec<RoundAccum>,
-    ) -> Result<StreamAbsorber> {
+/// Knobs for [`RoundPipeline`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineOptions {
+    /// Worker threads for the row-strip shard reduction at round finish
+    /// (0 = all available cores). Any value produces bitwise-identical
+    /// merged results — the strip partition is a pure function of the
+    /// accumulator geometry; this only sets how many threads fold the
+    /// strips.
+    pub reduce_parallelism: usize,
+}
+
+/// The one round-aggregation pipeline, shared by the in-process engine
+/// (`coordinator::engine`) and the transport server
+/// (`transport::server`). Owns the shard layout, the reusable
+/// scratch-accumulator pool, and the row-strip-parallel reduction; per
+/// round it hands out a [`RoundInFlight`] that absorbs uploads on
+/// arrival.
+///
+/// Lifecycle per round:
+///
+/// ```text
+/// begin(spec, λ)  →  offer/offer_frame per slot (any order, any thread
+///                    behind a lock)  →  finish() → merged RoundAccum
+///                    →  …server consumes it…  →  recycle(merged)
+/// ```
+///
+/// On a failed round, [`RoundPipeline::abort`] returns every shard to
+/// the pool so the fault costs no reallocation.
+pub struct RoundPipeline {
+    opts: PipelineOptions,
+    pool: Vec<RoundAccum>,
+}
+
+impl RoundPipeline {
+    pub fn new(opts: PipelineOptions) -> RoundPipeline {
+        RoundPipeline { opts, pool: Vec::new() }
+    }
+
+    pub fn options(&self) -> &PipelineOptions {
+        &self.opts
+    }
+
+    /// Accumulators currently parked in the pool (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Start a round of `weights.len()` slots: take
+    /// `shard_count(slots)` accumulators from the pool (spec-compatible
+    /// ones are reset in place — in parallel for large tables — and
+    /// anything else is dropped and rebuilt) and hand back the
+    /// in-flight round state.
+    pub fn begin(&mut self, spec: &UploadSpec, weights: Vec<f32>) -> Result<RoundInFlight> {
         if weights.is_empty() {
-            bail!("StreamAbsorber needs at least one slot");
+            bail!("a round needs at least one participant slot");
         }
         let shards = shard_count(weights.len());
-        scratch.retain(|a| a.matches_spec(spec));
-        while scratch.len() < shards {
-            scratch.push(RoundAccum::new(spec)?);
+        self.pool.retain(|a| a.matches_spec(spec));
+        while self.pool.len() < shards {
+            self.pool.push(RoundAccum::new(spec)?);
         }
-        let mut accs: Vec<RoundAccum> = scratch.drain(..shards).collect();
-        for a in &mut accs {
-            a.reset();
+        let mut accs: Vec<RoundAccum> = self.pool.drain(..shards).collect();
+        let threads = resolve_parallelism(self.opts.reduce_parallelism).min(accs.len());
+        if threads <= 1 || accs[0].cells() < PARALLEL_REDUCE_MIN_CELLS {
+            for a in &mut accs {
+                a.reset();
+            }
+        } else {
+            // Zeroing up to MAX_SHARDS large tables is measurable;
+            // resets are independent, so parallelize them.
+            let chunk = accs.len().div_ceil(threads);
+            std::thread::scope(|scope| {
+                for group in accs.chunks_mut(chunk) {
+                    scope.spawn(move || {
+                        for a in group {
+                            a.reset();
+                        }
+                    });
+                }
+            });
         }
         let slots = weights.len();
-        Ok(StreamAbsorber {
+        Ok(RoundInFlight {
             shards: accs,
             done: vec![0; shards],
             pending: BTreeMap::new(),
@@ -337,6 +475,86 @@ impl StreamAbsorber {
         })
     }
 
+    /// Fan-in: reduce the round's shard accumulators (strictly in shard
+    /// order, row-strip-parallel per [`reduce_shards_in_place`]) into
+    /// the merged round sum, returning tail shards to the pool for
+    /// reuse. Errors if any slot is still outstanding — in that case
+    /// every shard still goes back to the pool (they reset on reuse), so
+    /// an aborted round costs no reallocation.
+    pub fn finish(&mut self, round: RoundInFlight) -> Result<RoundAccum> {
+        if !round.is_complete() {
+            let (absorbed, slots, parked) =
+                (round.absorbed, round.weights.len(), round.pending.len());
+            self.pool.extend(round.shards);
+            bail!(
+                "round incomplete: absorbed {absorbed} of {slots} uploads \
+                 ({parked} parked out of order)"
+            );
+        }
+        let mut shards = round.shards;
+        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
+        let merged = shards.swap_remove(0);
+        self.pool.extend(shards);
+        Ok(merged)
+    }
+
+    /// Abandon a round, returning every shard accumulator to the pool —
+    /// the error-path counterpart of [`RoundPipeline::finish`] (partial
+    /// sums are fine: accumulators reset in place on reuse).
+    pub fn abort(&mut self, round: RoundInFlight) {
+        self.pool.extend(round.shards);
+    }
+
+    /// Return the merged accumulator once the server half is done with
+    /// it — the caller's return-to-pool step after
+    /// `ServerAggregator::finish`.
+    pub fn recycle(&mut self, merged: RoundAccum) {
+        self.pool.push(merged);
+    }
+}
+
+/// An upload waiting for an earlier slot of its shard.
+enum Parked {
+    Upload(ClientUpload),
+    Frame(Vec<u8>),
+}
+
+/// One round's absorb-on-arrival state, handed out by
+/// [`RoundPipeline::begin`].
+///
+/// Neither the engine's worker pool nor a socket server can choose
+/// upload completion order, but the determinism contract (module docs)
+/// requires each shard to absorb its slots in increasing slot order.
+/// `RoundInFlight` reconciles the two: an upload whose slot is the next
+/// expected one for its shard is absorbed immediately (and may unblock
+/// parked successors); one that arrives early is parked — as raw frame
+/// bytes on the wire path, as the in-memory upload on the engine path —
+/// until its turn. In the common case of roughly slot-ordered
+/// completion everything absorbs on arrival and nothing waits for the
+/// cohort; in the worst case the parking buffer holds at most the
+/// cohort's uploads, and the merged result is bitwise identical either
+/// way.
+///
+/// Slot bookkeeping doubles as integrity protection: out-of-range and
+/// duplicate slots are rejected before any values reach an accumulator,
+/// so a malicious peer cannot scribble over another client's
+/// contribution.
+pub struct RoundInFlight {
+    /// Shard accumulators, `shard_count(slots)` of them.
+    shards: Vec<RoundAccum>,
+    /// Per shard: slots absorbed so far. The next slot shard `s` will
+    /// accept is `s + done[s] * shards.len()`.
+    done: Vec<usize>,
+    /// Early uploads, parked by slot until their shard catches up.
+    pending: BTreeMap<usize, Parked>,
+    /// Per-slot aggregation weights λ (also fixes the slot count).
+    weights: Vec<f32>,
+    /// Which slots have been offered (duplicate protection).
+    seen: Vec<bool>,
+    absorbed: usize,
+}
+
+impl RoundInFlight {
     /// Total slots this round.
     pub fn slots(&self) -> usize {
         self.weights.len()
@@ -347,7 +565,7 @@ impl StreamAbsorber {
         self.absorbed
     }
 
-    /// Frames parked waiting for an earlier slot of their shard.
+    /// Uploads parked waiting for an earlier slot of their shard.
     pub fn buffered(&self) -> usize {
         self.pending.len()
     }
@@ -356,12 +574,22 @@ impl StreamAbsorber {
         self.absorbed == self.weights.len()
     }
 
-    /// Hand the absorber `slot`'s upload frame. Absorbs immediately when
-    /// the slot is next in its shard's order (then drains any parked
-    /// successors), parks the bytes otherwise. Frame validation happens
-    /// at absorb time via [`RoundAccum::absorb_bytes`] — a bad frame
-    /// fails the round loudly and counts nothing.
-    pub fn offer(&mut self, slot: usize, frame: Vec<u8>) -> Result<()> {
+    /// Hand the round `slot`'s in-memory upload — the engine path.
+    /// Absorbs immediately when the slot is next in its shard's order
+    /// (then drains any parked successors), parks the upload otherwise.
+    pub fn offer(&mut self, slot: usize, upload: ClientUpload) -> Result<()> {
+        self.route(slot, Parked::Upload(upload))
+    }
+
+    /// Hand the round `slot`'s encoded upload frame — the wire path.
+    /// Frame validation happens at absorb time via
+    /// [`RoundAccum::absorb_bytes`] — a bad frame fails the round loudly
+    /// and counts nothing.
+    pub fn offer_frame(&mut self, slot: usize, frame: Vec<u8>) -> Result<()> {
+        self.route(slot, Parked::Frame(frame))
+    }
+
+    fn route(&mut self, slot: usize, item: Parked) -> Result<()> {
         let slots = self.weights.len();
         if slot >= slots {
             bail!("upload slot {slot} out of range (round has {slots} slots)");
@@ -374,56 +602,29 @@ impl StreamAbsorber {
         let shard = shard_of(slot, nshards);
         if slot != shard + self.done[shard] * nshards {
             // Early for its shard (slot < expected is impossible: that
-            // slot would already be marked seen). Park the bytes.
-            self.pending.insert(slot, frame);
+            // slot would already be marked seen). Park it.
+            self.pending.insert(slot, item);
             return Ok(());
         }
-        self.absorb_now(shard, slot, &frame)?;
+        self.absorb_now(shard, slot, item)?;
         // Absorbing this slot may unblock parked successors in-shard.
-        while let Some(buf) = self.pending.remove(&(shard + self.done[shard] * nshards)) {
+        while let Some(parked) = self.pending.remove(&(shard + self.done[shard] * nshards)) {
             let next = shard + self.done[shard] * nshards;
-            self.absorb_now(shard, next, &buf)?;
+            self.absorb_now(shard, next, parked)?;
         }
         Ok(())
     }
 
-    fn absorb_now(&mut self, shard: usize, slot: usize, frame: &[u8]) -> Result<()> {
-        self.shards[shard]
-            .absorb_bytes(frame, self.weights[slot])
-            .with_context(|| format!("absorbing upload for slot {slot}"))?;
+    fn absorb_now(&mut self, shard: usize, slot: usize, item: Parked) -> Result<()> {
+        let lam = self.weights[slot];
+        match item {
+            Parked::Upload(u) => self.shards[shard].absorb(u, lam),
+            Parked::Frame(f) => self.shards[shard].absorb_bytes(&f, lam),
+        }
+        .with_context(|| format!("absorbing upload for slot {slot}"))?;
         self.done[shard] += 1;
         self.absorbed += 1;
         Ok(())
-    }
-
-    /// Reduce the shard accumulators (strictly in shard order) into the
-    /// merged round sum, returning tail shards to `scratch` for reuse.
-    /// Errors if any slot is still outstanding — in that case every
-    /// shard still goes back to `scratch` (they reset on reuse), so an
-    /// aborted round costs no reallocation.
-    pub fn finish(self, scratch: &mut Vec<RoundAccum>) -> Result<RoundAccum> {
-        if !self.is_complete() {
-            let (absorbed, slots, parked) =
-                (self.absorbed, self.weights.len(), self.pending.len());
-            scratch.extend(self.shards);
-            bail!(
-                "round incomplete: absorbed {absorbed} of {slots} uploads \
-                 ({parked} parked out of order)"
-            );
-        }
-        let mut shards = self.shards;
-        reduce_shards_in_place(&mut shards)?;
-        let merged = shards.swap_remove(0);
-        scratch.extend(shards);
-        Ok(merged)
-    }
-
-    /// Abandon the round, returning every shard accumulator to
-    /// `scratch` — the error-path counterpart of
-    /// [`StreamAbsorber::finish`] (partial sums are fine: accumulators
-    /// reset in place on reuse).
-    pub fn into_scratch(self, scratch: &mut Vec<RoundAccum>) {
-        scratch.extend(self.shards);
     }
 }
 
@@ -473,6 +674,10 @@ mod tests {
 
     fn sketch_spec() -> UploadSpec {
         UploadSpec::Sketch { rows: 3, cols: 128, dim: 200, seed: 11 }
+    }
+
+    fn pipeline() -> RoundPipeline {
+        RoundPipeline::new(PipelineOptions::default())
     }
 
     #[test]
@@ -571,11 +776,12 @@ mod tests {
     }
 
     #[test]
-    fn sharded_reduce_is_bitwise_stable_across_layout_reuse() {
-        // Same shard layout, different "thread counts" is a no-op at
-        // this layer: reducing the same shard list twice is identical.
+    fn sharded_reduce_is_bitwise_stable_across_parallelism() {
+        // The row-strip contract: reducing the same shard list at any
+        // worker count gives identical bits (strip partition is pure
+        // geometry). Checked for sketch and dense shard kinds.
         let mut rng = crate::util::Rng::new(9);
-        let make_shards = |rng: &mut crate::util::Rng| {
+        let make_sketch_shards = |rng: &mut crate::util::Rng| {
             (0..3)
                 .map(|_| {
                     let mut acc = RoundAccum::new(&sketch_spec()).unwrap();
@@ -592,20 +798,46 @@ mod tests {
                 })
                 .collect::<Vec<_>>()
         };
-        let mut a = make_shards(&mut rng);
-        reduce_shards_in_place(&mut a).unwrap();
-        let mut rng = crate::util::Rng::new(9);
-        let mut b = make_shards(&mut rng);
-        reduce_shards_in_place(&mut b).unwrap();
-        assert_eq!(a[0].absorbed(), 6);
-        assert_eq!(b[0].absorbed(), 6);
-        let (ta, tb) = (a[0].as_sketch().unwrap(), b[0].as_sketch().unwrap());
-        for (x, y) in ta.table().iter().zip(tb.table()) {
-            assert_eq!(x.to_bits(), y.to_bits());
+        let mut a = make_sketch_shards(&mut rng);
+        reduce_shards_in_place(&mut a, 1).unwrap();
+        for parallelism in [2usize, 8] {
+            let mut rng = crate::util::Rng::new(9);
+            let mut b = make_sketch_shards(&mut rng);
+            reduce_shards_in_place(&mut b, parallelism).unwrap();
+            assert_eq!(a[0].absorbed(), 6);
+            assert_eq!(b[0].absorbed(), 6);
+            let (ta, tb) = (a[0].as_sketch().unwrap(), b[0].as_sketch().unwrap());
+            for (x, y) in ta.table().iter().zip(tb.table()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
         // tail shards keep their allocations (and contents) for reuse
         assert_eq!(a[1].absorbed(), 2);
         assert!(a[1].as_sketch().unwrap().table().iter().any(|&x| x != 0.0));
+
+        // Dense path, sized past the parallel-reduce gate so the
+        // striped code actually runs.
+        let dim = PARALLEL_REDUCE_MIN_CELLS + 1000;
+        let spec = UploadSpec::Dense { dim };
+        let make_dense_shards = |rng: &mut crate::util::Rng| {
+            (0..3)
+                .map(|_| {
+                    let mut acc = RoundAccum::new(&spec).unwrap();
+                    let g: Vec<f32> = (0..dim).map(|_| rng.next_gaussian() as f32).collect();
+                    acc.absorb(ClientUpload::Dense(g), 0.5).unwrap();
+                    acc
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut rng = crate::util::Rng::new(10);
+        let mut a = make_dense_shards(&mut rng);
+        reduce_shards_in_place(&mut a, 1).unwrap();
+        let mut rng = crate::util::Rng::new(10);
+        let mut b = make_dense_shards(&mut rng);
+        reduce_shards_in_place(&mut b, 8).unwrap();
+        for (x, y) in a[0].as_dense().unwrap().iter().zip(b[0].as_dense().unwrap()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]
@@ -621,37 +853,38 @@ mod tests {
     }
 
     #[test]
-    fn stream_absorber_is_arrival_order_invariant() {
+    fn round_in_flight_is_arrival_order_invariant() {
         // 20 slots > MAX_SHARDS=16, so shards own multiple slots and
-        // the in-shard ordering buffer actually engages. Offering in
-        // reverse (every frame early except the last-discovered ones)
-        // must produce bits identical to strictly sequential absorb.
+        // the in-shard parking buffer actually engages. Offering in
+        // reverse (every upload early except the last-discovered ones)
+        // must produce bits identical to strictly sequential absorb —
+        // for the frame path and the in-memory path alike.
         let mut rng = crate::util::Rng::new(31);
         let slots = 20usize;
-        let frames: Vec<Vec<u8>> = (0..slots)
+        let uploads: Vec<ClientUpload> = (0..slots)
             .map(|_| {
                 let g: Vec<f32> = (0..200).map(|_| rng.next_gaussian() as f32).collect();
-                let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap());
-                encode_upload(&u, &F32LE)
+                ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap())
             })
             .collect();
+        let frames: Vec<Vec<u8>> = uploads.iter().map(|u| encode_upload(u, &F32LE)).collect();
         let weights: Vec<f32> = (0..slots).map(|i| 0.1 + 0.01 * i as f32).collect();
 
-        let mut scratch = Vec::new();
-        let mut seq = StreamAbsorber::new(&sketch_spec(), weights.clone(), &mut scratch).unwrap();
+        let mut pl = pipeline();
+        let mut seq = pl.begin(&sketch_spec(), weights.clone()).unwrap();
         for (slot, f) in frames.iter().enumerate() {
-            seq.offer(slot, f.clone()).unwrap();
+            seq.offer_frame(slot, f.clone()).unwrap();
             assert_eq!(seq.buffered(), 0, "in-order offers never park");
         }
-        let merged_seq = seq.finish(&mut scratch).unwrap();
+        let merged_seq = pl.finish(seq).unwrap();
         assert_eq!(merged_seq.absorbed(), slots);
 
-        let mut rev = StreamAbsorber::new(&sketch_spec(), weights, &mut scratch).unwrap();
+        let mut rev = pl.begin(&sketch_spec(), weights.clone()).unwrap();
         for (slot, f) in frames.iter().enumerate().rev() {
-            rev.offer(slot, f.clone()).unwrap();
+            rev.offer_frame(slot, f.clone()).unwrap();
         }
         assert!(rev.is_complete());
-        let merged_rev = rev.finish(&mut scratch).unwrap();
+        let merged_rev = pl.finish(rev).unwrap();
         for (a, b) in merged_seq
             .as_sketch()
             .unwrap()
@@ -661,13 +894,30 @@ mod tests {
         {
             assert_eq!(a.to_bits(), b.to_bits());
         }
-        // Tail shards went back to the pool both times.
-        assert_eq!(scratch.len(), shard_count(slots) - 1);
+
+        // In-memory uploads through the same scrambled order match too.
+        let mut mem = pl.begin(&sketch_spec(), weights).unwrap();
+        for (slot, u) in uploads.iter().enumerate().rev() {
+            mem.offer(slot, u.clone()).unwrap();
+        }
+        let merged_mem = pl.finish(mem).unwrap();
+        for (a, b) in merged_seq
+            .as_sketch()
+            .unwrap()
+            .table()
+            .iter()
+            .zip(merged_mem.as_sketch().unwrap().table())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Tail shards went back to the pool each time, plus nothing
+        // leaked: pool holds exactly the tail shards of the last round.
+        assert_eq!(pl.pooled(), shard_count(slots) - 1);
     }
 
     #[test]
-    fn stream_absorber_matches_engine_style_sharded_absorb() {
-        // Reference: the engine's layout, run by hand — shard s absorbs
+    fn round_in_flight_matches_hand_sharded_absorb() {
+        // Reference: the fixed layout, run by hand — shard s absorbs
         // slots s, s+S, ... in order, shards reduce in shard order.
         let mut rng = crate::util::Rng::new(77);
         let slots = 19usize;
@@ -682,10 +932,10 @@ mod tests {
             let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &grads[slot]).unwrap());
             shards[shard_of(slot, nshards)].absorb(u, weights[slot]).unwrap();
         }
-        reduce_shards_in_place(&mut shards).unwrap();
+        reduce_shards_in_place(&mut shards, 1).unwrap();
 
-        let mut scratch = Vec::new();
-        let mut ab = StreamAbsorber::new(&sketch_spec(), weights, &mut scratch).unwrap();
+        let mut pl = pipeline();
+        let mut inflight = pl.begin(&sketch_spec(), weights).unwrap();
         // A scrambled-but-fixed arrival order.
         let mut order: Vec<usize> = (0..slots).collect();
         order.reverse();
@@ -693,9 +943,9 @@ mod tests {
         order.swap(3, 11);
         for &slot in &order {
             let u = ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &grads[slot]).unwrap());
-            ab.offer(slot, encode_upload(&u, &F32LE)).unwrap();
+            inflight.offer_frame(slot, encode_upload(&u, &F32LE)).unwrap();
         }
-        let merged = ab.finish(&mut scratch).unwrap();
+        let merged = pl.finish(inflight).unwrap();
         let (by_hand, streamed) = (shards[0].as_sketch().unwrap(), merged.as_sketch().unwrap());
         for (a, b) in by_hand.table().iter().zip(streamed.table()) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -703,24 +953,37 @@ mod tests {
     }
 
     #[test]
-    fn stream_absorber_rejects_bad_slots_and_incomplete_rounds() {
+    fn round_in_flight_rejects_bad_slots_and_incomplete_rounds() {
         let spec = UploadSpec::Dense { dim: 8 };
         let frame = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
-        let mut scratch = Vec::new();
-        let mut ab = StreamAbsorber::new(&spec, vec![1.0; 3], &mut scratch).unwrap();
-        assert!(ab.offer(3, frame(1.0)).unwrap_err().to_string().contains("out of range"));
-        ab.offer(1, frame(2.0)).unwrap();
-        assert!(ab.offer(1, frame(2.0)).unwrap_err().to_string().contains("duplicate"));
-        assert_eq!(ab.absorbed(), 1);
-        // Incomplete finish fails loudly instead of merging a partial sum.
-        let err = ab.finish(&mut scratch).unwrap_err().to_string();
+        let mut pl = pipeline();
+        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        assert!(r.offer_frame(3, frame(1.0)).unwrap_err().to_string().contains("out of range"));
+        r.offer_frame(1, frame(2.0)).unwrap();
+        assert!(r.offer_frame(1, frame(2.0)).unwrap_err().to_string().contains("duplicate"));
+        assert!(r
+            .offer(1, ClientUpload::Dense(vec![2.0; 8]))
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate"));
+        assert_eq!(r.absorbed(), 1);
+        // Incomplete finish fails loudly instead of merging a partial
+        // sum — and every shard still returns to the pool.
+        let err = pl.finish(r).unwrap_err().to_string();
         assert!(err.contains("absorbed 1 of 3"), "{err}");
+        assert_eq!(pl.pooled(), shard_count(3));
         // A malformed frame fails the offer and counts nothing.
-        let mut ab = StreamAbsorber::new(&spec, vec![1.0; 2], &mut scratch).unwrap();
+        let mut r = pl.begin(&spec, vec![1.0; 2]).unwrap();
         let mut bad = frame(1.0);
         bad[0] = b'X';
-        assert!(ab.offer(0, bad).is_err());
-        assert_eq!(ab.absorbed(), 0);
+        assert!(r.offer_frame(0, bad).is_err());
+        assert_eq!(r.absorbed(), 0);
+        pl.abort(r);
+        // All three accumulators from the first round are pooled again
+        // (one sat out the 2-slot round, two came back via abort).
+        assert_eq!(pl.pooled(), shard_count(3));
+        // Empty rounds are rejected up front.
+        assert!(pl.begin(&spec, vec![]).is_err());
     }
 
     #[test]
@@ -733,6 +996,8 @@ mod tests {
         assert_eq!(shard_of(0, 5), 0);
         assert_eq!(shard_of(12, 5), 2);
         assert_eq!(shard_of(12, 16), 12);
+        assert!(resolve_parallelism(0) >= 1);
+        assert_eq!(resolve_parallelism(3), 3);
     }
 
     #[test]

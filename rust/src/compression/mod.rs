@@ -9,12 +9,13 @@
 //!   (`crate::coordinator::engine`) fans these out over a worker pool.
 //! - [`ServerAggregator`] — the stateful server half: it declares the
 //!   shape of the uploads it consumes ([`UploadSpec`]) and the per-slot
-//!   aggregation weights ([`ServerAggregator::begin_round`]), the engine
-//!   merges uploads incrementally into shard accumulators
-//!   ([`aggregate::RoundAccum`]) as they arrive, and
-//!   [`ServerAggregator::finish`] turns the merged weighted sum into a
-//!   model update (momentum, error feedback, top-k — the strategy's
-//!   actual math).
+//!   aggregation weights ([`ServerAggregator::begin_round`]); the round
+//!   pipeline ([`aggregate::RoundPipeline`]) folds uploads into shard
+//!   accumulators ([`aggregate::RoundAccum`]) the moment they arrive —
+//!   driven in-process by the engine and over sockets by the transport
+//!   server — and [`ServerAggregator::finish`] turns the merged
+//!   weighted sum into a model update (momentum, error feedback, top-k
+//!   — the strategy's actual math).
 //!
 //! Every strategy's fan-in is a *weighted sum* of uploads (FetchSGD:
 //! uniform `1/W` over sketches — sketch linearity; FedAvg: dataset-size
@@ -62,6 +63,7 @@ use crate::runtime::exec::Batch;
 use crate::sketch::{CountSketch, SparseVec};
 
 /// What a client sends to the aggregator.
+#[derive(Clone, Debug)]
 pub enum ClientUpload {
     Sketch(CountSketch),
     Sparse(SparseVec),

@@ -93,11 +93,10 @@ pub struct TrainConfig {
     pub verbose: bool,
     /// Worker threads for per-round client compute (0 = all available
     /// cores). Any value produces bitwise-identical results for a given
-    /// seed — the round engine's shard layout is thread-invariant. Note
-    /// the effective ceiling: workers pull whole shards, and a round has
-    /// at most `engine::MAX_SHARDS` (16) of them, so values above
-    /// `min(clients_per_round, 16)` buy nothing (the shard count must
-    /// stay machine-invariant to keep the fp reduction tree fixed).
+    /// seed — the round pipeline's shard layout and reduction tree are
+    /// thread-invariant (`compression::aggregate`). Workers pull
+    /// individual participant slots, so values up to
+    /// `clients_per_round` keep paying off; beyond that they idle.
     pub parallelism: usize,
     /// Wire mode: `Some(codec)` round-trips every upload and broadcast
     /// through the framed binary encoding of `crate::wire` under the
@@ -117,6 +116,28 @@ pub struct TrainConfig {
     /// Worker connections a `serve` run waits for; each worker computes
     /// one or more participant slots per round. Ignored in-process.
     pub transport_workers: usize,
+    /// Worker threads for the round pipeline's row-strip shard
+    /// reduction. 0 = inherit `parallelism` for in-process training; in
+    /// serve mode (where `parallelism` governs nothing — client compute
+    /// is remote) 0 means all available cores. Like `parallelism`, a
+    /// pure throughput knob: the strip partition is a function of the
+    /// accumulator geometry only, so any value produces bitwise-
+    /// identical results.
+    pub reduce_parallelism: usize,
+    /// Serve mode: per-connection read/write deadline in seconds. A
+    /// peer that stalls longer than this mid-round fails the round
+    /// instead of wedging it. The 30 s default suits loopback and LAN;
+    /// raise it for WAN workers with slow links or big models.
+    pub serve_read_timeout_s: f64,
+    /// Serve mode: how long to wait for the worker pool to fill at
+    /// round start, in seconds.
+    pub serve_accept_timeout_s: f64,
+    /// Serve/join mode: per-message size cap in bytes — forged length
+    /// prefixes are rejected against this before any allocation. 0 =
+    /// auto-size from the model dimension and cohort (the default; set
+    /// explicitly only to clamp hostile peers harder or to lift the cap
+    /// for giant frames).
+    pub serve_max_msg: usize,
 }
 
 impl TrainConfig {
@@ -146,6 +167,10 @@ impl TrainConfig {
             wire: None,
             transport: None,
             transport_workers: 1,
+            reduce_parallelism: 0,
+            serve_read_timeout_s: 30.0,
+            serve_accept_timeout_s: 30.0,
+            serve_max_msg: 0,
         }
     }
 
@@ -190,6 +215,10 @@ impl TrainConfig {
             wire: parse_wire(v.opt_str("wire", "off")),
             transport: parse_wire(v.opt_str("transport", "off")),
             transport_workers: v.opt_usize("transport_workers", 1),
+            reduce_parallelism: v.opt_usize("reduce_parallelism", 0),
+            serve_read_timeout_s: v.opt_f64("serve_read_timeout_s", 30.0),
+            serve_accept_timeout_s: v.opt_f64("serve_accept_timeout_s", 30.0),
+            serve_max_msg: v.opt_usize("serve_max_msg", 0),
         })
     }
 
@@ -247,6 +276,10 @@ impl TrainConfig {
                 "wire" => self.wire = parse_wire(val),
                 "transport" => self.transport = parse_wire(val),
                 "transport_workers" => self.transport_workers = val.parse()?,
+                "reduce_parallelism" => self.reduce_parallelism = val.parse()?,
+                "serve_read_timeout_s" => self.serve_read_timeout_s = val.parse()?,
+                "serve_accept_timeout_s" => self.serve_accept_timeout_s = val.parse()?,
+                "serve_max_msg" => self.serve_max_msg = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -331,6 +364,10 @@ mod tests {
         assert_eq!(cfg.rounds, 50);
         assert_eq!(cfg.scale.num_clients, 500);
         assert_eq!(cfg.parallelism, 0, "parallelism defaults to auto");
+        assert_eq!(cfg.reduce_parallelism, 0, "reduce parallelism defaults to inherit");
+        assert_eq!(cfg.serve_read_timeout_s, 30.0, "loopback-tuned default");
+        assert_eq!(cfg.serve_accept_timeout_s, 30.0);
+        assert_eq!(cfg.serve_max_msg, 0, "message cap defaults to auto-size");
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, cols, masking, .. } => {
                 assert_eq!(k, 100);
@@ -369,6 +406,17 @@ mod tests {
         assert_eq!(cfg.transport_workers, 4);
         cfg.apply_overrides(&["transport=none".into()]).unwrap();
         assert_eq!(cfg.transport, None);
+        cfg.apply_overrides(&[
+            "reduce_parallelism=3".into(),
+            "serve_read_timeout_s=120".into(),
+            "serve_accept_timeout_s=7.5".into(),
+            "serve_max_msg=1048576".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.reduce_parallelism, 3);
+        assert_eq!(cfg.serve_read_timeout_s, 120.0);
+        assert_eq!(cfg.serve_accept_timeout_s, 7.5);
+        assert_eq!(cfg.serve_max_msg, 1 << 20);
         match cfg.strategy {
             StrategyConfig::FetchSgd { k, .. } => assert_eq!(k, 7),
             _ => panic!(),

@@ -1,72 +1,72 @@
 //! The parallel round engine: fan client compute out over a worker
-//! pool, merge uploads into shard accumulators as they arrive, reduce
-//! shards in a fixed order.
+//! pool, folding every upload into the shared round pipeline the moment
+//! it completes.
+//!
+//! This is the in-process driver of
+//! [`crate::compression::aggregate::RoundPipeline`] — the same
+//! absorb-on-arrival fan-in the transport server
+//! (`crate::transport::server`) drives over sockets, so the
+//! slot→shard→reduce logic exists exactly once.
 //!
 //! ## Determinism
 //!
 //! Results are **bitwise identical for a given seed at any thread
 //! count**. The invariants that guarantee it:
 //!
-//! 1. The shard *layout* is a pure function of the cohort size:
-//!    [`shard_count`] caps at [`MAX_SHARDS`] and slot `i` belongs to
-//!    shard `i % shards` — never a function of `threads`.
-//! 2. Each shard absorbs its slots in increasing slot order (one worker
-//!    owns a shard at a time, and walks its slots in order).
-//! 3. Shards are reduced strictly in shard order
-//!    ([`crate::compression::aggregate::reduce_shards_in_place`], which
-//!    uses [`crate::sketch::CountSketch::merge_shard_refs`] for sketch
-//!    shards).
+//! 1. The shard *layout* is a pure function of the cohort size
+//!    ([`crate::compression::aggregate::shard_count`] caps at
+//!    [`crate::compression::aggregate::MAX_SHARDS`]; slot `i` belongs
+//!    to shard `i % shards`) — never a function of `threads`.
+//! 2. Each shard absorbs its slots in increasing slot order: workers
+//!    offer uploads to the shared [`RoundInFlight`] as they finish, and
+//!    it parks early arrivals until their in-shard turn.
+//! 3. Shards reduce strictly in shard order over geometry-pure row
+//!    strips ([`crate::compression::aggregate::reduce_shards_in_place`]).
 //! 4. Per-slot losses are written into slot-indexed cells and summed in
 //!    slot order by the caller.
 //!
-//! Threads only change *which worker* runs a shard, never the
-//! floating-point reduction tree. Wire mode ([`RoundCtx::wire`]) doesn't
-//! either, under the lossless `f32le` codec: encode→`absorb_bytes`
-//! performs the same additions in the same order as in-memory absorbs.
+//! Threads only change *which worker* computes a slot and *when* its
+//! upload is offered, never the floating-point reduction tree. Wire
+//! mode ([`RoundCtx::wire`]) doesn't either, under the lossless `f32le`
+//! codec: encode→`offer_frame` performs the same additions in the same
+//! order as in-memory offers.
 //!
 //! ## Scheduling
 //!
-//! Workers pull whole shards off an atomic counter (shard = unit of
-//! work stealing). With `W` participants and `S = min(W, MAX_SHARDS)`
-//! shards, each shard holds `~W/S` clients, so the pool load-balances
-//! at shard granularity while the per-shard scratch memory stays
-//! bounded at `S` accumulators regardless of cohort size.
+//! Workers pull individual *slots* off an atomic counter, so the pool
+//! load-balances at client granularity: a straggling client delays only
+//! its own shard's later slots, and thread counts above the shard cap
+//! keep paying off up to the cohort size. (Before the pipeline
+//! refactor, workers owned whole shards and parallelism was capped at
+//! `MAX_SHARDS`.) Out-of-order completions are parked by the pipeline —
+//! worst case the parking buffer holds the cohort's uploads, the price
+//! of never blocking a worker on another worker's slot.
+//!
+//! Absorption itself happens behind the in-flight round's single lock
+//! (the same discipline the transport server uses). The lock covers
+//! only the O(table) fold, never client compute, so it only matters
+//! when folds rival compute cost; a per-shard lock split is the noted
+//! next rung if a profile ever shows contention here (ROADMAP).
 //!
 //! ## Scratch reuse
 //!
-//! Shard accumulators are taken from a caller-owned `scratch` pool and
-//! reset in place (workers zero their own shard, in parallel) instead
-//! of being allocated fresh: at large `dim`, re-allocating and paging
-//! in up to `MAX_SHARDS` tables every round is measurable. The caller
-//! gets the merged accumulator back in [`RoundOutput::merged`] and
-//! returns it to the pool once the server is done with it (see
-//! `coordinator::trainer`).
+//! Shard accumulators come from the pipeline's pool and are reset in
+//! place (in parallel for large tables) instead of being allocated
+//! fresh: at large `dim`, re-allocating and paging in up to
+//! `MAX_SHARDS` tables every round is measurable. The caller gets the
+//! merged accumulator back in [`RoundOutput::merged`] and returns it to
+//! the pool via [`RoundPipeline::recycle`] once the server is done with
+//! it (see `coordinator::trainer`).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::compression::aggregate::{reduce_shards_in_place, RoundAccum};
+use crate::compression::aggregate::{RoundAccum, RoundInFlight, RoundPipeline};
 use crate::compression::{ClientCompute, UploadSpec};
 use crate::data::FedDataset;
 use crate::runtime::artifact::TaskArtifacts;
 use crate::wire::{encode_upload, Codec};
-
-// The shard layout (slot `i` belongs to shard `shard_of(i, S)`, with
-// `S = shard_count(W)` capped at `MAX_SHARDS`) lives next to the
-// accumulators in `compression::aggregate` since the transport server's
-// streaming absorber must replicate it bit-for-bit; re-exported here
-// because the engine is where the layout is *scheduled*.
-pub use crate::compression::aggregate::{shard_count, shard_of, MAX_SHARDS};
-
-/// Resolve a configured parallelism knob: 0 = all available cores.
-pub fn resolve_parallelism(configured: usize) -> usize {
-    if configured > 0 {
-        configured
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    }
-}
 
 /// The round-invariant context for [`run_round`]: what to run, on what
 /// data, against which weights, and how (threads / wire codec).
@@ -78,13 +78,13 @@ pub struct RoundCtx<'a> {
     pub w: &'a [f32],
     pub lr: f32,
     pub round_seed: u64,
-    /// Worker threads (clamped to [1, shard count]).
+    /// Worker threads (clamped to [1, cohort size]).
     pub threads: usize,
     /// When set, every upload round-trips through the framed wire
     /// encoding under this codec: the engine encodes each
-    /// `ClientUpload` to a frame and the shard accumulator decodes it
-    /// streaming ([`RoundAccum::absorb_bytes`]), recording measured
-    /// frame bytes alongside the idealized estimate.
+    /// `ClientUpload` to a frame and the pipeline decodes it streaming
+    /// ([`RoundInFlight::offer_frame`]), recording measured frame bytes
+    /// alongside the idealized estimate.
     pub wire: Option<&'a dyn Codec>,
 }
 
@@ -93,7 +93,8 @@ pub struct RoundOutput {
     /// Per-slot client training loss, in participant order.
     pub losses: Vec<f32>,
     /// Merged weighted upload sum (`Σ λ_i · upload_i`). Return it to the
-    /// scratch pool after the server consumes it.
+    /// pipeline's pool ([`RoundPipeline::recycle`]) after the server
+    /// consumes it.
     pub merged: RoundAccum,
     /// Payload bytes of slot 0's upload under the paper's idealized
     /// accounting (all uploads of a strategy are the same size).
@@ -103,143 +104,144 @@ pub struct RoundOutput {
     pub wire_upload_bytes_per_client: u64,
 }
 
-struct ShardOut {
-    accum: RoundAccum,
-    /// (slot, loss) pairs for the slots this shard owns.
-    losses: Vec<(usize, f32)>,
-    /// Idealized upload payload bytes of this shard's lowest slot.
-    payload_bytes: u64,
-    /// Measured wire bytes of this shard's lowest slot (wire mode only).
-    wire_bytes: u64,
+/// One worker's contribution to the round (everything except the
+/// uploads themselves, which stream into the shared pipeline).
+struct WorkerOut {
+    /// (slot, loss) pairs for the slots this worker computed.
+    pairs: Vec<(usize, f32)>,
+    /// (idealized payload bytes, wire frame bytes) of slot 0, if this
+    /// worker ran it.
+    slot0: Option<(u64, u64)>,
+    /// First failure this worker hit, tagged with its slot so the
+    /// caller can surface the lowest-slot error deterministically.
+    err: Option<(usize, anyhow::Error)>,
 }
 
-/// Execute one federated round's client work: for each participant
-/// slot, generate the batch, run the client compute, and absorb the
-/// upload (weighted by `weights[slot]`) into the slot's shard
-/// accumulator — through the wire encoding when `ctx.wire` is set.
-/// Returns the fully merged accumulator and per-slot losses.
-///
-/// `scratch` is the reusable shard-accumulator pool: entries matching
-/// `spec` are reset and reused, anything else is dropped and rebuilt.
+/// Execute one federated round's client work: workers pull participant
+/// slots off a shared counter, run the client compute, and offer each
+/// upload (weighted by `weights[slot]`) to the round pipeline the
+/// moment it completes — through the wire encoding when `ctx.wire` is
+/// set. Returns the fully merged accumulator and per-slot losses.
 pub fn run_round(
     ctx: &RoundCtx<'_>,
     participants: &[usize],
     weights: &[f32],
     spec: &UploadSpec,
-    scratch: &mut Vec<RoundAccum>,
+    pipeline: &mut RoundPipeline,
 ) -> Result<RoundOutput> {
     assert_eq!(participants.len(), weights.len(), "one weight per participant");
     let slots = participants.len();
-    let shards = shard_count(slots);
-    let threads = ctx.threads.clamp(1, shards);
+    let round = pipeline.begin(spec, weights.to_vec())?;
+    let threads = ctx.threads.clamp(1, slots);
     let stacked_k = ctx.client.wants_stacked_batches();
 
-    // Refill the scratch pool: keep spec-compatible accumulators (reset
-    // happens in the worker, so zeroing parallelizes), rebuild the rest.
-    scratch.retain(|a| a.matches_spec(spec));
-    while scratch.len() < shards {
-        scratch.push(RoundAccum::new(spec)?);
-    }
-    let cells: Vec<Mutex<Option<RoundAccum>>> =
-        scratch.drain(..).map(|a| Mutex::new(Some(a))).collect();
+    let shared: Mutex<RoundInFlight> = Mutex::new(round);
+    let next = AtomicUsize::new(0);
 
-    let run_shard = |shard: usize| -> Result<ShardOut> {
-        let mut accum = cells[shard]
-            .lock()
-            .expect("scratch cell poisoned")
-            .take()
-            .expect("each shard claims its scratch exactly once");
-        accum.reset();
-        let mut losses = Vec::with_capacity(slots / shards + 1);
-        let mut payload_bytes = 0u64;
-        let mut wire_bytes = 0u64;
-        let mut slot = shard;
-        while slot < slots {
+    // No cross-worker abort flag: every slot is computed exactly once
+    // even when another slot has already failed, so the *set* of
+    // failing slots — and therefore the lowest-slot error the caller
+    // sees — is a pure function of the round, not of scheduling. (A
+    // failed round costs one full round of client compute, exactly as
+    // the pre-pipeline engine did.)
+    let run_worker = || -> WorkerOut {
+        let mut out = WorkerOut { pairs: Vec::new(), slot0: None, err: None };
+        loop {
+            let slot = next.fetch_add(1, Ordering::Relaxed);
+            if slot >= slots {
+                break;
+            }
             let c = participants[slot];
             let batch = ctx.dataset.client_batch(c, ctx.round_seed);
             let stacked =
                 stacked_k.map(|k| ctx.dataset.client_batches_stacked(c, k, ctx.round_seed));
-            let res = ctx
+            let res = match ctx
                 .client
                 .client_round(ctx.artifacts, ctx.w, &batch, c, stacked, ctx.lr)
-                .with_context(|| format!("client {c} (slot {slot})"))?;
-            if slot == shard {
-                payload_bytes = res.upload.payload_bytes();
-            }
-            losses.push((slot, res.loss));
-            match ctx.wire {
+                .with_context(|| format!("client {c} (slot {slot})"))
+            {
+                Ok(r) => r,
+                Err(e) => {
+                    if out.err.is_none() {
+                        out.err = Some((slot, e));
+                    }
+                    continue;
+                }
+            };
+            out.pairs.push((slot, res.loss));
+            let payload_bytes = res.upload.payload_bytes();
+            // Offer the upload to the shared pipeline immediately —
+            // absorb-on-arrival; the lock covers only the fold, never
+            // client compute.
+            let offered = match ctx.wire {
                 Some(codec) => {
                     let frame = encode_upload(&res.upload, codec);
-                    if slot == shard {
-                        wire_bytes = frame.len() as u64;
+                    if slot == 0 {
+                        out.slot0 = Some((payload_bytes, frame.len() as u64));
                     }
-                    accum
-                        .absorb_bytes(&frame, weights[slot])
-                        .with_context(|| format!("wire upload from client {c} (slot {slot})"))?;
+                    let mut r = shared.lock().expect("round pipeline poisoned");
+                    r.offer_frame(slot, frame)
+                        .with_context(|| format!("wire upload from client {c} (slot {slot})"))
                 }
-                None => accum.absorb(res.upload, weights[slot])?,
+                None => {
+                    if slot == 0 {
+                        out.slot0 = Some((payload_bytes, 0));
+                    }
+                    let mut r = shared.lock().expect("round pipeline poisoned");
+                    r.offer(slot, res.upload)
+                        .with_context(|| format!("upload from client {c} (slot {slot})"))
+                }
+            };
+            if let Err(e) = offered {
+                if out.err.is_none() {
+                    out.err = Some((slot, e));
+                }
             }
-            slot += shards;
         }
-        Ok(ShardOut { accum, losses, payload_bytes, wire_bytes })
+        out
     };
 
-    let mut shard_outs: Vec<Option<Result<ShardOut>>> = (0..shards).map(|_| None).collect();
-    if threads <= 1 {
-        for (shard, out) in shard_outs.iter_mut().enumerate() {
-            *out = Some(run_shard(shard));
-        }
+    let worker_outs: Vec<WorkerOut> = if threads <= 1 {
+        vec![run_worker()]
     } else {
-        let next = AtomicUsize::new(0);
-        let completed = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..threads)
-                .map(|_| {
-                    scope.spawn(|| {
-                        let mut outs = Vec::new();
-                        loop {
-                            let shard = next.fetch_add(1, Ordering::Relaxed);
-                            if shard >= shards {
-                                break;
-                            }
-                            outs.push((shard, run_shard(shard)));
-                        }
-                        outs
-                    })
-                })
-                .collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads).map(|_| scope.spawn(&run_worker)).collect();
             handles
                 .into_iter()
-                .flat_map(|h| h.join().expect("round worker panicked"))
-                .collect::<Vec<_>>()
-        });
-        for (shard, out) in completed {
-            shard_outs[shard] = Some(out);
-        }
-    }
+                .map(|h| h.join().expect("round worker panicked"))
+                .collect()
+        })
+    };
 
-    // Surface the lowest-shard error first (deterministic failure too).
+    // Surface the lowest-slot error first (deterministic failure too).
+    let round = shared.into_inner().expect("round pipeline poisoned");
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
     let mut losses = vec![0f32; slots];
     let mut upload_bytes_per_client = 0u64;
     let mut wire_upload_bytes_per_client = 0u64;
-    let mut accums = Vec::with_capacity(shards);
-    for (shard, out) in shard_outs.into_iter().enumerate() {
-        let out = out.expect("every shard scheduled")?;
-        if shard == 0 {
-            upload_bytes_per_client = out.payload_bytes;
-            wire_upload_bytes_per_client = out.wire_bytes;
+    for wo in worker_outs {
+        if let Some((slot, e)) = wo.err {
+            let lowest_so_far = match &first_err {
+                None => true,
+                Some((s, _)) => slot < *s,
+            };
+            if lowest_so_far {
+                first_err = Some((slot, e));
+            }
         }
-        for (slot, loss) in out.losses {
+        if let Some((payload, wire)) = wo.slot0 {
+            upload_bytes_per_client = payload;
+            wire_upload_bytes_per_client = wire;
+        }
+        for (slot, loss) in wo.pairs {
             losses[slot] = loss;
         }
-        accums.push(out.accum);
     }
-    reduce_shards_in_place(&mut accums)?;
-    if accums[0].absorbed() != slots {
-        bail!("absorbed {} uploads for {slots} slots", accums[0].absorbed());
+    if let Some((_, e)) = first_err {
+        pipeline.abort(round);
+        return Err(e);
     }
-    // Shard 0 carries the merged sum; the rest go back to the pool.
-    let merged = accums.swap_remove(0);
-    scratch.extend(accums);
+    let merged = pipeline.finish(round)?;
     Ok(RoundOutput {
         losses,
         merged,
@@ -251,6 +253,9 @@ pub fn run_round(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::aggregate::{
+        resolve_parallelism, shard_count, PipelineOptions, MAX_SHARDS,
+    };
     use crate::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
     use crate::compression::ServerAggregator;
     use crate::wire::F32LE;
@@ -278,8 +283,8 @@ mod tests {
             threads,
             wire: if wire { Some(&F32LE) } else { None },
         };
-        let mut scratch = Vec::new();
-        let out = run_round(&ctx, &participants, &weights, &spec, &mut scratch).unwrap();
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+        let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
         assert_eq!(out.merged.absorbed(), w_cohort);
         assert_eq!(out.upload_bytes_per_client, (ROWS * COLS * 4) as u64);
         if wire {
@@ -290,7 +295,11 @@ mod tests {
         } else {
             assert_eq!(out.wire_upload_bytes_per_client, 0);
         }
-        assert_eq!(scratch.len(), shard_count(w_cohort) - 1, "tail shards return to the pool");
+        assert_eq!(
+            pipeline.pooled(),
+            shard_count(w_cohort) - 1,
+            "tail shards return to the pool"
+        );
         let table = out.merged.into_sketch().unwrap().table().to_vec();
         (out.losses, table)
     }
@@ -299,7 +308,9 @@ mod tests {
     fn thread_count_does_not_change_bits() {
         for cohort in [3usize, 16, 33] {
             let (l1, t1) = sim_round(1, cohort, false);
-            for threads in [2usize, 4, 8] {
+            // 40 > cohort exercises the slot-count clamp; 8 and 3 leave
+            // multiple slots per worker with uneven hand-offs.
+            for threads in [2usize, 3, 8, 40] {
                 let (ln, tn) = sim_round(threads, cohort, false);
                 assert_eq!(
                     l1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
@@ -333,7 +344,7 @@ mod tests {
     }
 
     #[test]
-    fn scratch_is_reused_across_rounds() {
+    fn pipeline_pool_is_reused_across_rounds() {
         let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
         let dataset = SimDataset { num_clients: 100 };
         let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 };
@@ -341,7 +352,7 @@ mod tests {
         let weights = vec![0.125f32; 8];
         let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
         let w = vec![0f32; DIM];
-        let mut scratch = Vec::new();
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let mut tables = Vec::new();
         for _ in 0..3 {
             let ctx = RoundCtx {
@@ -354,12 +365,12 @@ mod tests {
                 threads: 4,
                 wire: None,
             };
-            let out = run_round(&ctx, &participants, &weights, &spec, &mut scratch).unwrap();
+            let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
             tables.push(out.merged.as_sketch().unwrap().table().to_vec());
-            scratch.push(out.merged); // trainer's return-to-pool step
-            assert_eq!(scratch.len(), 8);
+            pipeline.recycle(out.merged); // trainer's return-to-pool step
+            assert_eq!(pipeline.pooled(), 8);
         }
-        // Reused (reset) scratch must not leak state between rounds.
+        // Reused (reset) accumulators must not leak state between rounds.
         for t in &tables[1..] {
             assert_eq!(
                 tables[0].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
@@ -404,8 +415,8 @@ mod tests {
             threads: 4,
             wire: None,
         };
-        let mut scratch = Vec::new();
-        let out = run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+        let out = run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
             .unwrap();
         let update = server.finish(&out.merged, 0.1).unwrap();
         update.apply(&mut w);

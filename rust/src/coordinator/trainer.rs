@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
-use crate::compression::aggregate::RoundAccum;
+use crate::compression::aggregate::{resolve_parallelism, PipelineOptions, RoundPipeline};
 use crate::compression::fedavg::{FedAvgClient, FedAvgServer};
 use crate::compression::fetchsgd::{ErrorUpdate, FetchSgdClient, FetchSgdServer};
 use crate::compression::local_topk::{LocalTopKClient, LocalTopKServer};
@@ -94,9 +94,9 @@ pub struct Trainer {
     threads: usize,
     /// Resolved wire codec (from cfg.wire; validated at construction).
     wire_codec: Option<&'static dyn wire::Codec>,
-    /// Reusable shard accumulators (reset in place each round instead
-    /// of re-allocating up to MAX_SHARDS tables — ROADMAP open item).
-    scratch: Vec<RoundAccum>,
+    /// The round-aggregation pipeline: shard layout, reusable
+    /// accumulator pool, absorb-on-arrival, row-strip parallel reduce.
+    pipeline: RoundPipeline,
 }
 
 impl Trainer {
@@ -118,11 +118,14 @@ impl Trainer {
         let stale = StalenessTracker::new(dataset.num_clients(), dim);
         let logger = MetricsLogger::new(cfg.log_path.as_deref())?;
         let w = artifacts.init_weights()?;
-        let threads = engine::resolve_parallelism(cfg.parallelism);
+        let threads = resolve_parallelism(cfg.parallelism);
         let wire_codec = match &cfg.wire {
             Some(name) => Some(wire::codec_by_name(name).context("TrainConfig.wire")?),
             None => None,
         };
+        // 0 = inherit the compute parallelism (itself 0 = all cores).
+        let reduce = if cfg.reduce_parallelism > 0 { cfg.reduce_parallelism } else { threads };
+        let pipeline = RoundPipeline::new(PipelineOptions { reduce_parallelism: reduce });
         Ok(Trainer {
             cfg,
             artifacts,
@@ -139,7 +142,7 @@ impl Trainer {
             dim,
             threads,
             wire_codec,
-            scratch: Vec::new(),
+            pipeline,
         })
     }
 
@@ -242,7 +245,7 @@ impl Trainer {
             threads: self.threads,
             wire: self.wire_codec,
         };
-        let out = engine::run_round(&ctx, &participants, &weights, &spec, &mut self.scratch)
+        let out = engine::run_round(&ctx, &participants, &weights, &spec, &mut self.pipeline)
             .with_context(|| format!("round {round}"))?;
         // Slot-order reduction keeps the mean independent of scheduling.
         let mut loss_sum = 0f64;
@@ -252,8 +255,8 @@ impl Trainer {
         let upload_per_client = out.upload_bytes_per_client;
         let update = self.aggregator.finish(&out.merged, lr)?;
         // The server is done with the merged sum: return the
-        // accumulator to the scratch pool for next round.
-        self.scratch.push(out.merged);
+        // accumulator to the pipeline's pool for next round.
+        self.pipeline.recycle(out.merged);
         // Wire mode: the broadcast the clients apply is the decoded
         // frame, not the in-memory update — a lossy codec therefore
         // shapes the trajectory exactly as a real deployment would.

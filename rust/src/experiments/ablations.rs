@@ -43,9 +43,7 @@ fn base_config(p: &AblationParams, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     }
 }
 

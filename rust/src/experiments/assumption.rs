@@ -68,9 +68,7 @@ pub fn run(p: AssumptionParams) -> Result<()> {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     };
 
     let runtime = Arc::new(Runtime::cpu()?);

@@ -42,9 +42,7 @@ fn base_config(p: &Fig4Params, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     }
 }
 

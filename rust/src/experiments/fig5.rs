@@ -45,9 +45,7 @@ pub fn base_config(p: &Fig5Params, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     }
 }
 

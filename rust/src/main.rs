@@ -32,6 +32,8 @@ USAGE:
   fetchsgd train --config CFG.json [key=value ...]
   fetchsgd serve --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
             [--config CFG.json] [key=value ...]
+            (serve knobs: serve_read_timeout_s=S serve_accept_timeout_s=S
+             serve_max_msg=BYTES reduce_parallelism=N)
   fetchsgd join --connect tcp:HOST:PORT|uds:/path.sock
             [--config CFG.json] [key=value ...]
   fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>

@@ -174,6 +174,23 @@ impl CountSketch {
         }
     }
 
+    /// `dst_strip += self[rows]` where `dst_strip` is another table's
+    /// slice for exactly the row range `rows` — the split-borrow form of
+    /// [`CountSketch::add_scaled_rows`] (at scale 1) that the row-strip-
+    /// parallel fan-in needs: workers hold disjoint `&mut` strips of one
+    /// destination table and each folds its strip from every shard in
+    /// shard order. Per cell this is the same `+=` as the whole-table
+    /// merge, so any strip partition produces identical bits.
+    pub fn add_rows_to(&self, dst_strip: &mut [f32], rows: Range<usize>) {
+        debug_assert!(rows.end <= self.rows());
+        let cols = self.cols();
+        let span = rows.start * cols..rows.end * cols;
+        debug_assert_eq!(dst_strip.len(), span.len(), "strip/span length mismatch");
+        for (a, &b) in dst_strip.iter_mut().zip(&self.table[span]) {
+            *a += b;
+        }
+    }
+
     /// `self *= scale` (e.g. momentum decay `rho * S_u`).
     pub fn scale(&mut self, scale: f32) {
         self.scale_rows(scale, 0..self.rows());
@@ -224,12 +241,9 @@ impl CountSketch {
         }
         let cols = self.cols();
         for r in 0..self.rows() {
-            let span = r * cols..(r + 1) * cols;
-            let dst = &mut self.table[span.clone()];
+            let dst = &mut self.table[r * cols..(r + 1) * cols];
             for sh in shards {
-                for (a, &b) in dst.iter_mut().zip(&sh.table[span.clone()]) {
-                    *a += b;
-                }
+                sh.add_rows_to(dst, r..r + 1);
             }
         }
     }

@@ -123,10 +123,9 @@ pub fn join_training(cfg: &crate::config::TrainConfig) -> Result<JoinSummary> {
     let (client, _agg) = build_strategy(cfg, &artifacts)?;
     let dataset = build_dataset(&artifacts.manifest, &cfg.scale)?;
     let opts = JoinOptions {
-        // Room for the ~4·dim-byte weights broadcast plus the 8-byte
-        // per-slot assignment table (mirrors serve_training's cap).
-        max_msg: DEFAULT_MAX_MSG_BYTES
-            .max(4 * artifacts.manifest.dim + 8 * cfg.clients_per_round + (1 << 12)),
+        // One shared formula with serve_training — the caps on the two
+        // sides of the socket cannot drift apart.
+        max_msg: crate::transport::effective_max_msg(cfg, artifacts.manifest.dim)?,
         ..Default::default()
     };
     eprintln!("[join] connecting to {ep} as a {} worker", client.name());

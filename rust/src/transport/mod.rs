@@ -11,11 +11,12 @@
 //!   of worker connections, fans each round's participant slots out
 //!   over them, validates every incoming upload frame against the
 //!   round's `UploadSpec`, and **streams frames into the shard
-//!   accumulator pool as they arrive** via
-//!   [`crate::compression::aggregate::StreamAbsorber`] — no barrier
-//!   waits for the whole cohort, and a straggler only delays its own
-//!   shard's later slots. The resulting `RoundUpdate` frame is
-//!   broadcast back to every participant.
+//!   accumulator pool as they arrive** via the shared
+//!   [`crate::compression::aggregate::RoundPipeline`] (the same fan-in
+//!   the in-process engine drives) — no barrier waits for the whole
+//!   cohort, and a straggler only delays its own shard's later slots.
+//!   The resulting `RoundUpdate` frame is broadcast back to every
+//!   participant.
 //! - [`client::join`] — drives any [`crate::compression::ClientCompute`]
 //!   over a socket: receives round assignments plus the current weights
 //!   as a dense frame, runs the client compute for each assigned slot,
@@ -30,11 +31,11 @@
 //! ## Determinism
 //!
 //! A transport round is bitwise identical to the in-process engine at
-//! any parallelism: the server replicates the engine's shard layout
-//! (`aggregate::shard_of`), absorbs each shard's slots in increasing
-//! slot order (early frames are parked as bytes until their turn),
-//! reduces shards in shard order, and round-trips the broadcast through
-//! encode→decode exactly as wire mode does. Weights are always sent
+//! any parallelism: both drive the *same* `aggregate::RoundPipeline` —
+//! one shard layout (`aggregate::shard_of`), in-shard slot order (early
+//! frames are parked as bytes until their turn), shard-order row-strip
+//! reduction — and the broadcast round-trips encode→decode exactly as
+//! wire mode does. Weights are always sent
 //! losslessly (`f32le`) regardless of the upload codec. Enforced by
 //! `rust/tests/transport_determinism.rs`.
 //!
@@ -59,6 +60,30 @@ pub use server::{serve_training, RoundParams, RoundServer, RoundStats, ServeOpti
 
 use anyhow::{bail, Context, Result};
 use std::fmt;
+
+/// The per-message size cap both sides of a serve/join deployment use:
+/// `cfg.serve_max_msg` when set, otherwise auto-sized so the biggest
+/// legitimate message — the round-start's ~4·dim-byte lossless weights
+/// frame plus an 8-byte-per-slot assignment table — clears it with
+/// slack for headers. One formula, called by `serve_training` and
+/// `join_training`, so the two caps cannot drift apart. An explicit cap
+/// smaller than that round-start floor is a config error here, at
+/// startup — not a confusing per-round oversize-frame abort that blames
+/// the peer.
+pub(crate) fn effective_max_msg(cfg: &crate::config::TrainConfig, dim: usize) -> Result<usize> {
+    let floor = 4 * dim + 8 * cfg.clients_per_round + (1 << 12);
+    if cfg.serve_max_msg == 0 {
+        return Ok(framing::DEFAULT_MAX_MSG_BYTES.max(floor));
+    }
+    if cfg.serve_max_msg < floor {
+        bail!(
+            "serve_max_msg={} is below the {floor}-byte round-start frame this model needs \
+             (4*dim + 8*clients_per_round + header slack); every round would abort as oversize",
+            cfg.serve_max_msg
+        );
+    }
+    Ok(cfg.serve_max_msg)
+}
 use std::io::{Read, Write};
 use std::net::TcpStream;
 #[cfg(unix)]
@@ -247,5 +272,23 @@ mod tests {
         assert!(Endpoint::parse("uds:").is_err());
         assert!(Endpoint::parse("http://x").is_err());
         assert!(Endpoint::parse("").is_err());
+    }
+
+    #[test]
+    fn max_msg_auto_sizes_and_enforces_the_round_start_floor() {
+        let mut cfg = crate::config::TrainConfig::default_smoke();
+        cfg.clients_per_round = 10;
+        let dim = 100_000;
+        let floor = 4 * dim + 8 * cfg.clients_per_round + (1 << 12);
+        // Auto (0) always clears the round-start frame.
+        assert!(effective_max_msg(&cfg, dim).unwrap() >= floor);
+        // An explicit cap below the frame is a config error at startup,
+        // not a per-round oversize abort.
+        cfg.serve_max_msg = 1 << 16;
+        let err = effective_max_msg(&cfg, dim).unwrap_err().to_string();
+        assert!(err.contains("serve_max_msg"), "{err}");
+        // An explicit cap above the floor is taken verbatim.
+        cfg.serve_max_msg = 8 << 20;
+        assert_eq!(effective_max_msg(&cfg, dim).unwrap(), 8 << 20);
     }
 }

@@ -5,14 +5,16 @@
 //! See the module docs ([`crate::transport`]) for the determinism and
 //! fault-containment contracts. The shapes worth knowing here:
 //!
-//! - One [`RoundServer`] lives across rounds. Its shard scratch pool is
-//!   reused round to round (same as the in-process engine) and its
-//!   worker connections persist until a fault or [`RoundServer::shutdown`].
+//! - One [`RoundServer`] lives across rounds. It owns a
+//!   [`RoundPipeline`] — the *same* aggregation machinery the
+//!   in-process engine drives — whose shard accumulator pool is reused
+//!   round to round, and its worker connections persist until a fault
+//!   or [`RoundServer::shutdown`].
 //! - [`RoundServer::run_round`] is one full server round:
 //!   `begin_round → RoundStart to each worker → concurrent reads
-//!   streaming into a `StreamAbsorber` → reduce → finish → RoundEnd
-//!   broadcast → apply the *decoded* update`, mirroring the trainer's
-//!   wire mode exactly.
+//!   streaming into the pipeline's `RoundInFlight` → row-strip reduce →
+//!   finish → RoundEnd broadcast → apply the *decoded* update`,
+//!   mirroring the trainer's wire mode exactly.
 //! - Any fault — bad frame, bad slot, stalled peer (read deadline),
 //!   oversize prefix, disconnect — fails the round loudly: connections
 //!   are dropped (workers get a best-effort `Abort`), the partially
@@ -29,7 +31,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::compression::aggregate::{RoundAccum, StreamAbsorber};
+use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::ServerAggregator;
 use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
 use crate::transport::proto::{Msg, PROTO_VERSION};
@@ -53,6 +55,10 @@ pub struct ServeOptions {
     /// Per-message size cap (forged length prefixes are rejected
     /// against this before any allocation).
     pub max_msg: usize,
+    /// Worker threads for the round pipeline's row-strip shard
+    /// reduction (0 = all cores). Purely a throughput knob — the merged
+    /// bits are identical at any value.
+    pub reduce_parallelism: usize,
 }
 
 impl Default for ServeOptions {
@@ -63,6 +69,7 @@ impl Default for ServeOptions {
             read_timeout: Duration::from_secs(30),
             accept_timeout: Duration::from_secs(30),
             max_msg: DEFAULT_MAX_MSG_BYTES,
+            reduce_parallelism: 0,
         }
     }
 }
@@ -114,8 +121,10 @@ pub struct RoundServer {
     listener: ListenerKind,
     opts: ServeOptions,
     conns: Vec<Conn>,
-    /// Reusable shard accumulators (reset in place each round).
-    scratch: Vec<RoundAccum>,
+    /// The shared round-aggregation pipeline (same machinery the
+    /// in-process engine drives): shard layout, reusable accumulator
+    /// pool, absorb-on-arrival, row-strip parallel reduce.
+    pipeline: RoundPipeline,
     /// Live count of uploads absorbed this round — the streaming-absorb
     /// probe (`absorbed_probe`), updated as frames fold in.
     absorbed: Arc<AtomicUsize>,
@@ -149,11 +158,13 @@ impl RoundServer {
                 ListenerKind::Unix(l)
             }
         };
+        let pipeline =
+            RoundPipeline::new(PipelineOptions { reduce_parallelism: opts.reduce_parallelism });
         Ok(RoundServer {
             listener,
             opts,
             conns: Vec::new(),
-            scratch: Vec::new(),
+            pipeline,
             absorbed: Arc::new(AtomicUsize::new(0)),
             #[cfg(unix)]
             uds_path: match ep {
@@ -279,7 +290,8 @@ impl RoundServer {
         // Slot → worker layout: round-robin, like slots over shards.
         // Which worker computes a slot never affects the result (client
         // compute is a pure function and absorb order is enforced by
-        // the StreamAbsorber), so this is purely load balancing.
+        // the round pipeline's in-flight state), so this is purely load
+        // balancing.
         let mut assignments: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nconns];
         for (slot, &c) in p.participants.iter().enumerate() {
             let client = u32::try_from(c).context("client id exceeds u32")?;
@@ -316,13 +328,13 @@ impl RoundServer {
         }
 
         // Concurrent upload readers: one thread per connection, all
-        // streaming into one ordered absorber. Absorption happens as
-        // frames arrive — the only synchronization is the absorber
-        // lock, never a cohort barrier.
-        let absorber = match StreamAbsorber::new(&spec, lambdas, &mut self.scratch) {
+        // streaming into one ordered in-flight round. Absorption
+        // happens as frames arrive — the only synchronization is the
+        // round lock, never a cohort barrier.
+        let absorber = match self.pipeline.begin(&spec, lambdas) {
             Ok(a) => Mutex::new(a),
             Err(e) => {
-                self.abort_round("absorber setup failed");
+                self.abort_round("round pipeline setup failed");
                 return Err(e);
             }
         };
@@ -402,12 +414,12 @@ impl RoundServer {
         if let Some(e) = first_err {
             // Keep the shard allocations: a faulted round must not cost
             // the next one a realloc of up to MAX_SHARDS tables.
-            absorber.into_scratch(&mut self.scratch);
+            self.pipeline.abort(absorber);
             self.abort_round("upload stream failed");
             return Err(e.context(format!("round {}", p.round)));
         }
 
-        let merged = match absorber.finish(&mut self.scratch) {
+        let merged = match self.pipeline.finish(absorber) {
             Ok(m) => m,
             Err(e) => {
                 self.abort_round("merge failed");
@@ -417,11 +429,12 @@ impl RoundServer {
         let update = match agg.finish(&merged, p.lr) {
             Ok(u) => u,
             Err(e) => {
+                self.pipeline.recycle(merged);
                 self.abort_round("aggregator finish failed");
                 return Err(e);
             }
         };
-        self.scratch.push(merged);
+        self.pipeline.recycle(merged);
         let update_nnz = update.nnz();
         let download_bytes_per_client = update.payload_bytes();
         let update_frame = encode_update(&update, self.opts.codec);
@@ -535,7 +548,7 @@ fn read_one_upload(
     conn: &mut Conn,
     expect_slot: u32,
     max_msg: usize,
-    absorber: &Mutex<StreamAbsorber>,
+    absorber: &Mutex<RoundInFlight>,
     probe: &AtomicUsize,
 ) -> Result<UploadRead> {
     let (bytes, bytes_in) = read_msg(conn, max_msg)?;
@@ -553,7 +566,7 @@ fn read_one_upload(
     let ideal_bytes =
         if expect_slot == 0 { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
     let mut ab = absorber.lock().expect("absorber lock poisoned");
-    ab.offer(slot as usize, frame)?;
+    ab.offer_frame(slot as usize, frame)?;
     probe.store(ab.absorbed(), Ordering::SeqCst);
     drop(ab);
     Ok(UploadRead { loss, bytes_in, frame_bytes, ideal_bytes })
@@ -602,6 +615,18 @@ pub struct ServeSummary {
     pub transport_bytes: u64,
 }
 
+/// Validate a configured serve deadline: finite, strictly positive,
+/// representable seconds (the socket layer treats zero as "no
+/// deadline", which would silently disable fault containment, and
+/// `Duration::from_secs_f64` panics on out-of-range floats).
+fn duration_from_cfg_secs(secs: f64, knob: &str) -> Result<Duration> {
+    if !secs.is_finite() || secs <= 0.0 {
+        bail!("{knob} must be a positive number of seconds, got {secs}");
+    }
+    Duration::try_from_secs_f64(secs)
+        .with_context(|| format!("{knob}: {secs} seconds is out of range"))
+}
+
 /// Serve a full training run over `cfg.transport`: the server half of
 /// `fetchsgd train`, with remote workers doing the client compute via
 /// [`crate::transport::client::join`] / `fetchsgd join`.
@@ -641,13 +666,13 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
     let opts = ServeOptions {
         workers: cfg.transport_workers,
         codec,
-        // The round-start is a ~4·dim-byte weights frame plus 8 bytes
-        // per assigned slot: scale the message cap so big models and
-        // big cohorts clear it (with slack for headers). Keep in sync
-        // with join_training's mirror formula.
-        max_msg: DEFAULT_MAX_MSG_BYTES
-            .max(4 * artifacts.manifest.dim + 8 * cfg.clients_per_round + (1 << 12)),
-        ..Default::default()
+        read_timeout: duration_from_cfg_secs(cfg.serve_read_timeout_s, "serve_read_timeout_s")?,
+        accept_timeout: duration_from_cfg_secs(
+            cfg.serve_accept_timeout_s,
+            "serve_accept_timeout_s",
+        )?,
+        max_msg: crate::transport::effective_max_msg(cfg, artifacts.manifest.dim)?,
+        reduce_parallelism: cfg.reduce_parallelism,
     };
     let mut server = RoundServer::bind(&ep, opts)?;
     eprintln!(

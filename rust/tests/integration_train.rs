@@ -33,9 +33,7 @@ fn smoke_cfg(strategy: StrategyConfig, rounds: usize) -> TrainConfig {
         baseline_rounds: None,
         verbose: false,
         parallelism: 0,
-        wire: None,
-        transport: None,
-        transport_workers: 1,
+        ..TrainConfig::default_smoke()
     }
 }
 

@@ -1,8 +1,9 @@
 //! Parallel determinism: the round engine's thread count must be a pure
 //! throughput knob, and wire mode under the lossless `f32le` codec must
 //! be a pure accounting knob. Same config + seed ⇒ bitwise-identical
-//! final weights, losses, and run summaries at `parallelism = 1` and
-//! `parallelism = 8`, wire on or off.
+//! final weights and losses whether the round runs on the PR-1-style
+//! sequential reduce path, the streaming engine at parallelism 1, 3, or
+//! 8, or the wire-framed variant of any of those.
 //!
 //! The multi-round loops here run on simulated clients (no PJRT, no
 //! artifacts) for fetchsgd, a sparse top-k, and a dense baseline; a
@@ -12,6 +13,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use fetchsgd::compression::aggregate::{
+    reduce_shards_in_place, shard_count, shard_of, PipelineOptions, RoundAccum, RoundPipeline,
+};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::local_topk::LocalTopKServer;
 use fetchsgd::compression::sim::{
@@ -33,11 +37,11 @@ const SEED: u64 = 0xD5;
 const ROUNDS: usize = 5;
 const COHORT: usize = 24; // > MAX_SHARDS, so shards hold multiple slots
 
-/// A miniature training loop over the sim stack — the engine pipeline
-/// exactly as the Trainer drives it, including scratch-accumulator
-/// reuse and the optional wire round-trip of uploads and broadcasts.
-/// Returns (final weights, all per-round losses, total measured wire
-/// upload bytes).
+/// A miniature training loop over the sim stack — the streaming engine
+/// pipeline exactly as the Trainer drives it, including pool reuse and
+/// the optional wire round-trip of uploads and broadcasts. Returns
+/// (final weights, all per-round losses, total measured wire upload
+/// bytes).
 fn sim_train(
     client: &dyn ClientCompute,
     server: &mut dyn ServerAggregator,
@@ -49,7 +53,7 @@ fn sim_train(
     let selector = ClientSelector::new(dataset.num_clients, COHORT, SEED);
     let mut w = vec![0f32; DIM];
     let mut losses = Vec::new();
-    let mut scratch = Vec::new();
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut wire_upload_bytes = 0u64;
     for round in 0..ROUNDS {
         let participants = selector.select(round);
@@ -66,7 +70,7 @@ fn sim_train(
             wire,
         };
         let out =
-            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
                 .unwrap();
         losses.extend_from_slice(&out.losses);
         wire_upload_bytes += out.wire_upload_bytes_per_client * participants.len() as u64;
@@ -77,7 +81,7 @@ fn sim_train(
             );
         }
         let update = server.finish(&out.merged, 0.05).unwrap();
-        scratch.push(out.merged);
+        pipeline.recycle(out.merged);
         let update = match wire {
             Some(codec) => {
                 let frame = fetchsgd::wire::encode_update(&update, codec);
@@ -91,48 +95,55 @@ fn sim_train(
     (w, losses, wire_upload_bytes)
 }
 
+/// The PR-1 reference reduce path, by hand: compute every slot
+/// *sequentially in slot order*, absorb each upload into the fixed
+/// shard layout, join, then reduce shards sequentially. No pipeline, no
+/// parking, no threads, no wire — the ground truth the streaming engine
+/// must reproduce bit for bit.
+fn reference_train(
+    client: &dyn ClientCompute,
+    server: &mut dyn ServerAggregator,
+) -> (Vec<f32>, Vec<f32>) {
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let selector = ClientSelector::new(dataset.num_clients, COHORT, SEED);
+    let stacked_k = client.wants_stacked_batches();
+    let mut w = vec![0f32; DIM];
+    let mut losses = Vec::new();
+    for round in 0..ROUNDS {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let lambdas = server.begin_round(&sizes);
+        let round_seed = derive_seed(SEED, round as u64);
+        let spec = server.upload_spec();
+        let nshards = shard_count(participants.len());
+        let mut shards: Vec<RoundAccum> =
+            (0..nshards).map(|_| RoundAccum::new(&spec).unwrap()).collect();
+        for (slot, &c) in participants.iter().enumerate() {
+            let batch = dataset.client_batch(c, round_seed);
+            let stacked = stacked_k.map(|k| dataset.client_batches_stacked(c, k, round_seed));
+            let res = client
+                .client_round(&artifacts, &w, &batch, c, stacked, 0.05)
+                .unwrap();
+            losses.push(res.loss);
+            shards[shard_of(slot, nshards)].absorb(res.upload, lambdas[slot]).unwrap();
+        }
+        reduce_shards_in_place(&mut shards, 1).unwrap();
+        assert_eq!(shards[0].absorbed(), participants.len());
+        let update = server.finish(&shards[0], 0.05).unwrap();
+        update.apply(&mut w);
+    }
+    (w, losses)
+}
+
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
-#[test]
-fn fetchsgd_is_bitwise_identical_across_parallelism() {
-    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 };
-    let run = |threads: usize| {
-        let mut server = FetchSgdServer::new(
-            ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
-        )
-        .unwrap();
-        sim_train(&client, &mut server, threads, None)
-    };
-    let (w1, l1, _) = run(1);
-    let (w8, l8, _) = run(8);
-    assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
-    assert_eq!(bits(&w1), bits(&w8), "fetchsgd weights diverge at parallelism 8");
-    assert_eq!(bits(&l1), bits(&l8), "fetchsgd losses diverge at parallelism 8");
-}
+type ServerFactory = Box<dyn Fn() -> Box<dyn ServerAggregator>>;
 
-#[test]
-fn dense_baseline_is_bitwise_identical_across_parallelism() {
-    let client = SimDenseClient { dim: DIM, heavy: 4 };
-    let run = |threads: usize| {
-        let mut server = UncompressedServer::new(DIM, 0.9);
-        sim_train(&client, &mut server, threads, None)
-    };
-    let (w1, l1, _) = run(1);
-    let (w8, l8, _) = run(8);
-    assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
-    assert_eq!(bits(&w1), bits(&w8), "dense weights diverge at parallelism 8");
-    assert_eq!(bits(&l1), bits(&l8), "dense losses diverge at parallelism 8");
-}
-
-/// Acceptance: wire mode under the lossless `f32le` codec is a pure
-/// accounting knob — weights bitwise identical to wire-off at
-/// parallelism 1 and 8, for the sketch, sparse, and dense upload paths.
-#[test]
-fn wire_mode_f32le_is_bitwise_identical_to_in_memory() {
-    type ServerFactory = Box<dyn Fn() -> Box<dyn ServerAggregator>>;
-    let cases: Vec<(&str, Box<dyn ClientCompute>, ServerFactory)> = vec![
+fn strategy_cases() -> Vec<(&'static str, Box<dyn ClientCompute>, ServerFactory)> {
+    vec![
         (
             "fetchsgd",
             Box::new(SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 }),
@@ -157,28 +168,46 @@ fn wire_mode_f32le_is_bitwise_identical_to_in_memory() {
             Box::new(SimDenseClient { dim: DIM, heavy: 4 }),
             Box::new(|| Box::new(UncompressedServer::new(DIM, 0.9)) as Box<dyn ServerAggregator>),
         ),
-    ];
-    for (name, client, make_server) in &cases {
-        let run = |threads: usize, wire: Option<&'static dyn Codec>| {
+    ]
+}
+
+/// Acceptance: the streaming engine is bitwise identical to the PR-1
+/// sequential reduce path across the whole strategy × wire-on/off ×
+/// parallelism-{1,3,8} matrix. Wire mode under the lossless `f32le`
+/// codec additionally measures nonzero frame bytes; the reference path
+/// (and wire-off runs) measure none.
+#[test]
+fn streaming_engine_matches_reference_reduce_across_matrix() {
+    for (name, client, make_server) in &strategy_cases() {
+        let (w_ref, l_ref) = {
             let mut server = make_server();
-            sim_train(client.as_ref(), server.as_mut(), threads, wire)
+            reference_train(client.as_ref(), server.as_mut())
         };
-        let (w_mem, l_mem, wire0) = run(1, None);
-        assert_eq!(wire0, 0, "{name}: no wire bytes measured when wire is off");
-        assert!(w_mem.iter().any(|&x| x != 0.0), "{name}: training must move the model");
-        for threads in [1usize, 8] {
-            let (w_wire, l_wire, measured) = run(threads, Some(&F32LE));
-            assert!(measured > 0, "{name}: wire mode must measure frame bytes");
-            assert_eq!(
-                bits(&w_mem),
-                bits(&w_wire),
-                "{name}: wire round-trip changed the weights (threads {threads})"
-            );
-            assert_eq!(
-                bits(&l_mem),
-                bits(&l_wire),
-                "{name}: wire round-trip changed the losses (threads {threads})"
-            );
+        assert!(w_ref.iter().any(|&x| x != 0.0), "{name}: training must move the model");
+        for wire in [None, Some(&F32LE as &'static dyn Codec)] {
+            for threads in [1usize, 3, 8] {
+                let mut server = make_server();
+                let (w, l, measured) =
+                    sim_train(client.as_ref(), server.as_mut(), threads, wire);
+                let tag = if wire.is_some() { "wire=f32le" } else { "wire=off" };
+                if wire.is_some() {
+                    assert!(measured > 0, "{name}: wire mode must measure frame bytes");
+                } else {
+                    assert_eq!(measured, 0, "{name}: no wire bytes measured when wire is off");
+                }
+                assert_eq!(
+                    bits(&w_ref),
+                    bits(&w),
+                    "{name}: weights diverge from the reference reduce \
+                     (threads {threads}, {tag})"
+                );
+                assert_eq!(
+                    bits(&l_ref),
+                    bits(&l),
+                    "{name}: losses diverge from the reference reduce \
+                     (threads {threads}, {tag})"
+                );
+            }
         }
     }
 }
@@ -216,8 +245,10 @@ fn trainer_runs_are_bitwise_identical_across_parallelism() {
             verbose: false,
             parallelism,
             wire: wire.map(String::from),
-            transport: None,
-            transport_workers: 1,
+            // Pin a nontrivial reduce width: the row-strip reduction
+            // must not perturb the full-stack trajectory either.
+            reduce_parallelism: 4,
+            ..TrainConfig::default_smoke()
         };
         let mut t = Trainer::with_runtime(cfg, runtime.clone()).unwrap();
         let s = t.run().unwrap();

@@ -236,3 +236,109 @@ fn prop_sparsevec_from_pairs_sorts() {
         assert!(sv.idx.windows(2).all(|w| w[0] < w[1]));
     });
 }
+
+#[test]
+fn prop_any_row_strip_partition_equals_whole_sketch_merge() {
+    // The row-strip fan-in contract behind `aggregate::RoundPipeline`'s
+    // parallel reduction: folding each shard's rows strip by strip (any
+    // partition of the row range, strips outer / shards inner) performs
+    // the same per-cell additions in the same order as the whole-table
+    // merge, so the result is *bitwise* identical — not approximately.
+    check("strip partition == whole merge", 20, |g| {
+        let d = g.usize_in(100, 2000);
+        let nshards = g.usize_in(1, 5);
+        let shards: Vec<CountSketch> = (0..nshards)
+            .map(|_| {
+                let v = g.vec_f32(d, d + 1, -2.0, 2.0);
+                CountSketch::encode(ROWS, COLS, SEED, &v).unwrap()
+            })
+            .collect();
+        let mut whole = CountSketch::zeros(ROWS, COLS, d, SEED).unwrap();
+        let mut striped = CountSketch::zeros(ROWS, COLS, d, SEED).unwrap();
+        for s in &shards {
+            whole.add_scaled(s, 1.0);
+        }
+        // A random partition of 0..ROWS into contiguous strips.
+        let mut cuts = vec![0usize, ROWS];
+        for _ in 0..g.usize_in(0, ROWS) {
+            cuts.push(g.usize_in(1, ROWS));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        for win in cuts.windows(2) {
+            for s in &shards {
+                striped.add_scaled_rows(s, 1.0, win[0]..win[1]);
+            }
+        }
+        for (a, b) in whole.table().iter().zip(striped.table()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "strips {cuts:?} diverged from whole merge");
+        }
+    });
+}
+
+#[test]
+fn prop_strip_parallel_shard_reduce_is_bitwise_equal_to_sequential() {
+    // End-to-end through `aggregate::reduce_shards_in_place`: the
+    // row-strip-parallel reduction must be bitwise identical to the
+    // sequential fan-in at any worker count, for sketch and dense shard
+    // kinds. Tables are sized past the parallel-reduce gate so the
+    // striped code path actually runs.
+    use fetchsgd::compression::aggregate::{reduce_shards_in_place, RoundAccum};
+    use fetchsgd::compression::{ClientUpload, UploadSpec};
+    check("reduce parallelism invariance", 6, |g| {
+        // Sketch shards: 5x16384 = 81920 cells.
+        let d = g.usize_in(500, 3000);
+        let cols = 16384usize;
+        let spec = UploadSpec::Sketch { rows: ROWS, cols, dim: d, seed: SEED };
+        let n = g.usize_in(2, 5);
+        let sketches: Vec<CountSketch> = (0..n)
+            .map(|_| {
+                let v = g.vec_f32(d, d + 1, -2.0, 2.0);
+                CountSketch::encode(ROWS, cols, SEED, &v).unwrap()
+            })
+            .collect();
+        let build = |sketches: &[CountSketch]| -> Vec<RoundAccum> {
+            sketches
+                .iter()
+                .map(|s| {
+                    let mut a = RoundAccum::new(&spec).unwrap();
+                    a.absorb(ClientUpload::Sketch(s.clone()), 0.5).unwrap();
+                    a
+                })
+                .collect()
+        };
+        let mut seq = build(&sketches);
+        reduce_shards_in_place(&mut seq, 1).unwrap();
+        for par in [2usize, 5, 9] {
+            let mut p = build(&sketches);
+            reduce_shards_in_place(&mut p, par).unwrap();
+            assert_eq!(p[0].absorbed(), seq[0].absorbed());
+            for (a, b) in
+                seq[0].as_sketch().unwrap().table().iter().zip(p[0].as_sketch().unwrap().table())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "sketch reduce diverged at par={par}");
+            }
+        }
+
+        // Dense shards, past the gate too.
+        let dim = 70_000 + g.usize_in(0, 5000);
+        let dspec = UploadSpec::Dense { dim };
+        let vecs: Vec<Vec<f32>> = (0..2).map(|_| g.vec_f32(dim, dim + 1, -1.0, 1.0)).collect();
+        let build_dense = |vecs: &[Vec<f32>]| -> Vec<RoundAccum> {
+            vecs.iter()
+                .map(|v| {
+                    let mut a = RoundAccum::new(&dspec).unwrap();
+                    a.absorb(ClientUpload::Dense(v.clone()), 0.25).unwrap();
+                    a
+                })
+                .collect()
+        };
+        let mut seq = build_dense(&vecs);
+        reduce_shards_in_place(&mut seq, 1).unwrap();
+        let mut par = build_dense(&vecs);
+        reduce_shards_in_place(&mut par, 7).unwrap();
+        for (a, b) in seq[0].as_dense().unwrap().iter().zip(par[0].as_dense().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dense reduce diverged");
+        }
+    });
+}

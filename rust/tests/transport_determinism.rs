@@ -5,15 +5,16 @@
 //! sparse, and dense upload paths — the acceptance bar for the
 //! transport subsystem.
 //!
-//! Why this holds: the server replays the engine's shard layout
-//! (`aggregate::shard_of`), the `StreamAbsorber` enforces in-shard slot
-//! order no matter when frames arrive, weights broadcasts are lossless
-//! `f32le`, and the update round-trips encode→decode exactly like wire
-//! mode (itself pinned bitwise-identical in
-//! `parallel_determinism.rs`).
+//! Why this holds: server and engine drive the *same*
+//! `aggregate::RoundPipeline` — one shard layout, an in-flight round
+//! that enforces in-shard slot order no matter when frames arrive, one
+//! row-strip shard reduction — weights broadcasts are lossless `f32le`,
+//! and the update round-trips encode→decode exactly like wire mode
+//! (itself pinned bitwise-identical in `parallel_determinism.rs`).
 
 use std::time::Duration;
 
+use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::local_topk::LocalTopKServer;
 use fetchsgd::compression::sim::{
@@ -47,7 +48,7 @@ fn sim_train(
     let selector = ClientSelector::new(NUM_CLIENTS, COHORT, SEED);
     let mut w = vec![0f32; DIM];
     let mut losses = Vec::new();
-    let mut scratch = Vec::new();
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut wire_upload_bytes = 0u64;
     for round in 0..ROUNDS {
         let participants = selector.select(round);
@@ -64,12 +65,12 @@ fn sim_train(
             wire,
         };
         let out =
-            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut scratch)
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
                 .unwrap();
         losses.extend_from_slice(&out.losses);
         wire_upload_bytes += out.wire_upload_bytes_per_client * participants.len() as u64;
         let update = server.finish(&out.merged, 0.05).unwrap();
-        scratch.push(out.merged);
+        pipeline.recycle(out.merged);
         let update = match wire {
             Some(codec) => {
                 let frame = fetchsgd::wire::encode_update(&update, codec);
@@ -187,14 +188,16 @@ fn strategies() -> Vec<(&'static str, Box<dyn ClientCompute>, ServerFactory)> {
 fn uds_serve_join_is_bitwise_identical_to_in_process() {
     for (name, client, make_server) in &strategies() {
         let (w1, l1, _) = sim_train(client.as_ref(), make_server().as_mut(), 1, None);
-        let (w8, l8, _) = sim_train(client.as_ref(), make_server().as_mut(), 8, None);
         assert!(w1.iter().any(|&x| x != 0.0), "{name}: training must move the model");
-        assert_eq!(bits(&w1), bits(&w8), "{name}: in-process p1 vs p8 diverged");
+        for threads in [3usize, 8] {
+            let (wn, ln, _) = sim_train(client.as_ref(), make_server().as_mut(), threads, None);
+            assert_eq!(bits(&w1), bits(&wn), "{name}: in-process p1 vs p{threads} diverged");
+            assert_eq!(bits(&l1), bits(&ln), "{name}: losses diverge at parallelism {threads}");
+        }
         let ep = uds_endpoint(name);
         let (wt, lt, _) = transport_train(&ep, 3, client.as_ref(), make_server().as_mut());
         assert_eq!(bits(&w1), bits(&wt), "{name}: transport weights diverge from in-process");
         assert_eq!(bits(&l1), bits(&lt), "{name}: transport losses diverge from in-process");
-        assert_eq!(bits(&l1), bits(&l8), "{name}: losses diverge at parallelism 8");
     }
 }
 
