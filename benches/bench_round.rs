@@ -1,6 +1,6 @@
 //! End-to-end round latency and round-engine scaling.
 //!
-//! Three sections:
+//! Four sections:
 //!
 //! 1. **Engine throughput (no artifacts needed)** — a 100-client
 //!    FetchSGD cohort of simulated clients (synthetic gradient +
@@ -8,10 +8,14 @@
 //!    step) driven through the parallel round engine at 1/2/4/N
 //!    threads. Reports rounds/s and speedup vs single-thread; the
 //!    shard-merge design keeps all of these bitwise identical.
-//! 2. **Codec throughput (no artifacts needed)** — encode/decode GB/s
+//! 2. **Participation sweep (no artifacts needed)** — the same cohort
+//!    with 0% / 20% / 50% of clients dropped at a 0.5 quorum, so the
+//!    cost of membership bookkeeping and dropped-slot renormalization
+//!    shows up in the perf trajectory.
+//! 3. **Codec throughput (no artifacts needed)** — encode/decode GB/s
 //!    per wire codec over a dense-payload-sized value buffer, bounding
 //!    what wire mode costs on top of client compute.
-//! 3. **Artifact round decomposition (requires `make artifacts`)** —
+//! 4. **Artifact round decomposition (requires `make artifacts`)** —
 //!    client compute (PJRT execution of the fused grad+sketch HLO),
 //!    server sketch update, and data generation, establishing where the
 //!    bottleneck sits (the paper's contribution is the coordinator; it
@@ -20,9 +24,10 @@
 use std::sync::Arc;
 
 use fetchsgd::bench_util::{bench, print_table, BenchResult};
+use fetchsgd::cohort::QuorumPolicy;
 use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
-use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimFlakyClient, SimSketchClient};
 use fetchsgd::compression::{ClientUpload, ServerAggregator};
 use fetchsgd::coordinator::engine;
 use fetchsgd::model::{build_dataset, DataScale};
@@ -57,6 +62,7 @@ fn engine_round_bench(
     let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut round = 0u64;
     let tag = wire.map(|c| c.name()).unwrap_or("off");
+    let policy = QuorumPolicy::strict();
     Ok(bench(&format!("engine round W=100 d=200k threads={threads} wire={tag}"), 1, 5, || {
         round += 1;
         let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
@@ -70,6 +76,7 @@ fn engine_round_bench(
             round_seed: round,
             threads,
             wire,
+            policy: &policy,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -111,6 +118,71 @@ fn codec_throughput() -> Vec<BenchResult> {
         results.push(r);
     }
     results
+}
+
+/// Participation sweep: the same 100-client round with a fraction of
+/// clients deterministically failing, closed at a 50% quorum — what a
+/// dropped-slot round costs on top of a full one (extra membership
+/// bookkeeping plus the finalize-at-quorum renormalization scale over
+/// the merged table).
+fn participation_round_bench(fail_mod: usize, label: &str) -> anyhow::Result<BenchResult> {
+    const DIM: usize = 200_000;
+    const ROWS: usize = 5;
+    const COLS: usize = 4096;
+    const SEED: u64 = 7;
+    const COHORT: usize = 100;
+
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED)?;
+    let dataset = SimDataset { num_clients: 10_000 };
+    let client = SimFlakyClient {
+        inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 8 },
+        fail: (0..COHORT).filter(|c| fail_mod > 0 && c % fail_mod == 0).collect(),
+    };
+    let expect_drop = client.fail.len();
+    let mut server = FetchSgdServer::new(
+        ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+    )?;
+    let participants: Vec<usize> = (0..COHORT).collect();
+    let mut w = vec![0f32; DIM];
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+    let mut round = 0u64;
+    let policy = QuorumPolicy::new(0.5, 0, 0)?;
+    Ok(bench(&format!("engine round W=100 d=200k quorum=0.5 {label}"), 1, 5, || {
+        round += 1;
+        let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: round,
+            threads: 0,
+            wire: None,
+            policy: &policy,
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
+                .expect("sim round");
+        assert_eq!(out.membership.summary().dropped_slots, expect_drop);
+        let update = server.finish(&out.merged, 0.1).expect("server finish");
+        pipeline.recycle(out.merged);
+        update.apply(&mut w);
+        update
+    }))
+}
+
+fn participation_sweep() -> anyhow::Result<Vec<BenchResult>> {
+    let mut results = Vec::new();
+    // fail_mod 0 = full cohort; 5 = 20% dropped; 2 = 50% dropped (the
+    // quorum floor).
+    for (fail_mod, label) in [(0usize, "arrive=100%"), (5, "arrive=80%"), (2, "arrive=50%")] {
+        let r = participation_round_bench(fail_mod, label)?;
+        eprintln!("  {label:<12} {:>8.1} ms/round", r.mean_s * 1e3);
+        results.push(r);
+    }
+    Ok(results)
 }
 
 fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
@@ -156,6 +228,9 @@ fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
 fn main() -> anyhow::Result<()> {
     eprintln!("== round engine scaling (simulated 100-client fetchsgd cohort) ==");
     let mut results = engine_scaling()?;
+
+    eprintln!("== participation sweep (full vs 80% vs 50% arrival at a 0.5 quorum) ==");
+    results.extend(participation_sweep()?);
 
     eprintln!("== wire codec throughput (encode/decode, dense 4M-value payload) ==");
     results.extend(codec_throughput());

@@ -102,6 +102,7 @@ fn main() -> anyhow::Result<()> {
         let participants = selector.select(round);
         let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
         let lambdas = agg_ref.begin_round(&sizes);
+        let policy = fetchsgd::cohort::QuorumPolicy::strict();
         let ctx = engine::RoundCtx {
             client: &client,
             artifacts: &artifacts,
@@ -111,6 +112,7 @@ fn main() -> anyhow::Result<()> {
             round_seed: derive_seed(SEED, round as u64),
             threads: 0,
             wire: None,
+            policy: &policy,
         };
         let spec = agg_ref.upload_spec();
         let out = engine::run_round(&ctx, &participants, &lambdas, &spec, &mut pipeline)?;

@@ -1,0 +1,319 @@
+//! The per-round membership tracker: what happened to each planned
+//! slot, and whether the arrived subset clears the quorum.
+
+use anyhow::{bail, Result};
+
+use crate::cohort::policy::QuorumPolicy;
+
+/// Why a slot was dropped from the round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// The client compute or its upload faulted (bad frame, compute
+    /// error) and the retry budget is exhausted.
+    Faulted,
+    /// The peer carrying the slot disconnected and the retry budget is
+    /// exhausted.
+    Disconnected,
+    /// The round deadline fired before the upload arrived.
+    Deadline,
+}
+
+impl std::fmt::Display for DropReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DropReason::Faulted => write!(f, "faulted"),
+            DropReason::Disconnected => write!(f, "disconnected"),
+            DropReason::Deadline => write!(f, "deadline"),
+        }
+    }
+}
+
+/// Final state of one participant slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotOutcome {
+    /// No outcome recorded yet.
+    Pending,
+    /// Upload absorbed on the first offer.
+    Arrived,
+    /// Upload absorbed after `n ≥ 1` retries / reassignments.
+    Retried(usize),
+    /// Slot excluded from the round.
+    Dropped(DropReason),
+}
+
+/// The membership counts a round reports into metrics
+/// (`RoundRecord.participants` / `dropped_slots` / `retried_slots`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MembershipSummary {
+    /// Slots whose upload was absorbed (`Arrived` or `Retried`).
+    pub participants: usize,
+    /// Slots excluded from the round.
+    pub dropped_slots: usize,
+    /// Slots that needed at least one retry (whether or not the upload
+    /// eventually arrived).
+    pub retried_slots: usize,
+}
+
+/// Per-slot outcome tracker for one round, plus the
+/// **finalize-at-quorum** decision.
+///
+/// Drivers record events as they happen (`record_retry` before each
+/// re-offer, `record_arrival` when the upload is absorbed,
+/// `record_drop` when a slot is given up on); once every slot is
+/// settled, [`RoundMembership::quorum_met`] decides whether the round
+/// closes with the arrived subset. Recording is intentionally
+/// assert-guarded rather than fallible: a double arrival or an
+/// arrival-after-drop is a driver bug, not a runtime condition —
+/// upstream slot bookkeeping (`RoundInFlight`'s seen-set, the
+/// transport's per-connection order check) already rejects hostile
+/// duplicates before they reach here.
+#[derive(Clone, Debug)]
+pub struct RoundMembership {
+    policy: QuorumPolicy,
+    outcomes: Vec<SlotOutcome>,
+    /// Retries recorded per slot (survives into `Retried(n)` on
+    /// arrival, and is reported for dropped slots too).
+    retries: Vec<usize>,
+    arrived: usize,
+    dropped: usize,
+}
+
+impl RoundMembership {
+    pub fn new(slots: usize, policy: QuorumPolicy) -> Result<RoundMembership> {
+        if slots == 0 {
+            bail!("a round needs at least one participant slot");
+        }
+        Ok(RoundMembership {
+            policy,
+            outcomes: vec![SlotOutcome::Pending; slots],
+            retries: vec![0; slots],
+            arrived: 0,
+            dropped: 0,
+        })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn policy(&self) -> &QuorumPolicy {
+        &self.policy
+    }
+
+    /// Arrived-slot count required to close this round.
+    pub fn quorum_target(&self) -> usize {
+        self.policy.quorum_target(self.slots())
+    }
+
+    /// Record one retry / reassignment attempt for `slot`; returns the
+    /// total retries now charged against it.
+    pub fn record_retry(&mut self, slot: usize) -> usize {
+        assert!(
+            matches!(self.outcomes[slot], SlotOutcome::Pending),
+            "retry recorded for settled slot {slot}"
+        );
+        self.retries[slot] += 1;
+        self.retries[slot]
+    }
+
+    /// Whether `slot` still has retry budget left.
+    pub fn retries_remaining(&self, slot: usize) -> bool {
+        self.retries[slot] < self.policy.max_slot_retries()
+    }
+
+    /// The slot's upload was absorbed into the round.
+    pub fn record_arrival(&mut self, slot: usize) {
+        assert!(
+            matches!(self.outcomes[slot], SlotOutcome::Pending),
+            "arrival recorded for settled slot {slot}"
+        );
+        self.outcomes[slot] = match self.retries[slot] {
+            0 => SlotOutcome::Arrived,
+            n => SlotOutcome::Retried(n),
+        };
+        self.arrived += 1;
+    }
+
+    /// The slot is excluded from the round.
+    pub fn record_drop(&mut self, slot: usize, reason: DropReason) {
+        assert!(
+            matches!(self.outcomes[slot], SlotOutcome::Pending),
+            "drop recorded for settled slot {slot}"
+        );
+        self.outcomes[slot] = SlotOutcome::Dropped(reason);
+        self.dropped += 1;
+    }
+
+    pub fn outcome(&self, slot: usize) -> SlotOutcome {
+        self.outcomes[slot]
+    }
+
+    pub fn is_arrived(&self, slot: usize) -> bool {
+        matches!(self.outcomes[slot], SlotOutcome::Arrived | SlotOutcome::Retried(_))
+    }
+
+    /// Slots whose upload was absorbed.
+    pub fn arrived(&self) -> usize {
+        self.arrived
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Every slot has an outcome (nothing `Pending`).
+    pub fn is_settled(&self) -> bool {
+        self.arrived + self.dropped == self.slots()
+    }
+
+    /// The full planned cohort arrived.
+    pub fn is_full(&self) -> bool {
+        self.arrived == self.slots()
+    }
+
+    pub fn quorum_met(&self) -> bool {
+        self.arrived >= self.quorum_target()
+    }
+
+    /// The arrived slots, in increasing slot order — the canonical
+    /// representation of the final membership set.
+    pub fn arrived_slots(&self) -> Vec<usize> {
+        (0..self.slots()).filter(|&s| self.is_arrived(s)).collect()
+    }
+
+    /// Mean of the per-slot `losses` over the arrived slots, summed in
+    /// slot order — the scheduling-invariant round training loss both
+    /// round drivers report. Dropped slots' entries are ignored.
+    pub fn mean_loss_over_arrived(&self, losses: &[f32]) -> f64 {
+        let mut sum = 0f64;
+        for slot in 0..self.slots() {
+            if self.is_arrived(slot) {
+                sum += losses[slot] as f64;
+            }
+        }
+        sum / self.arrived.max(1) as f64
+    }
+
+    /// The factor that renormalizes the round's original per-slot
+    /// aggregation weights λ over the actual participants:
+    /// `1 / Σ_{i ∈ arrived} λ_i`, the sum taken in slot order. A pure
+    /// function of (original weights, final membership set) — never of
+    /// arrival order, thread count, or transport — so two runs ending
+    /// with the same set scale identically, bit for bit.
+    pub fn renormalization_scale(&self, weights: &[f32]) -> Result<f32> {
+        if weights.len() != self.slots() {
+            bail!("{} weights for a {}-slot membership", weights.len(), self.slots());
+        }
+        let mut sum = 0f64;
+        for slot in 0..self.slots() {
+            if self.is_arrived(slot) {
+                sum += weights[slot] as f64;
+            }
+        }
+        if !(sum > 0.0) {
+            bail!("arrived slots carry no aggregation weight (sum {sum})");
+        }
+        Ok((1.0 / sum) as f32)
+    }
+
+    pub fn summary(&self) -> MembershipSummary {
+        MembershipSummary {
+            participants: self.arrived,
+            dropped_slots: self.dropped,
+            retried_slots: (0..self.slots()).filter(|&s| self.retries[s] > 0).count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(frac: f64, retries: usize) -> QuorumPolicy {
+        QuorumPolicy::new(frac, 0, retries).unwrap()
+    }
+
+    #[test]
+    fn tracks_outcomes_and_quorum() {
+        let mut m = RoundMembership::new(4, policy(0.5, 1)).unwrap();
+        assert_eq!(m.quorum_target(), 2);
+        assert!(!m.is_settled());
+        m.record_arrival(0);
+        assert!(!m.quorum_met());
+        m.record_retry(1);
+        assert!(!m.retries_remaining(1), "budget of 1 is spent");
+        m.record_arrival(1);
+        assert_eq!(m.outcome(1), SlotOutcome::Retried(1));
+        assert!(m.quorum_met());
+        m.record_retry(2);
+        m.record_drop(2, DropReason::Disconnected);
+        m.record_drop(3, DropReason::Deadline);
+        assert!(m.is_settled());
+        assert!(!m.is_full());
+        assert_eq!(m.arrived_slots(), vec![0, 1]);
+        let s = m.summary();
+        assert_eq!(
+            s,
+            MembershipSummary { participants: 2, dropped_slots: 2, retried_slots: 2 }
+        );
+    }
+
+    #[test]
+    fn strict_policy_requires_everyone() {
+        let mut m = RoundMembership::new(3, QuorumPolicy::strict()).unwrap();
+        m.record_arrival(0);
+        m.record_arrival(1);
+        m.record_drop(2, DropReason::Faulted);
+        assert!(m.is_settled());
+        assert!(!m.quorum_met());
+        assert!(!m.retries_remaining(0));
+    }
+
+    #[test]
+    fn renormalization_is_a_pure_function_of_the_set() {
+        let weights = [0.25f32, 0.25, 0.25, 0.25];
+        let mut a = RoundMembership::new(4, policy(0.5, 2)).unwrap();
+        a.record_arrival(0);
+        a.record_arrival(2);
+        a.record_drop(1, DropReason::Faulted);
+        a.record_drop(3, DropReason::Deadline);
+        // Same final set, different history (retries, drop reasons,
+        // recording order) — identical scale bits.
+        let mut b = RoundMembership::new(4, policy(0.9, 2)).unwrap();
+        b.record_drop(3, DropReason::Disconnected);
+        b.record_retry(2);
+        b.record_arrival(2);
+        b.record_arrival(0);
+        b.record_drop(1, DropReason::Deadline);
+        let (sa, sb) = (
+            a.renormalization_scale(&weights).unwrap(),
+            b.renormalization_scale(&weights).unwrap(),
+        );
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        assert!((sa - 2.0).abs() < 1e-6, "half the uniform cohort doubles the weights");
+        // Full arrival scales by exactly the reciprocal of the sum.
+        let mut f = RoundMembership::new(2, policy(1.0, 0)).unwrap();
+        f.record_arrival(0);
+        f.record_arrival(1);
+        assert!(f.is_full());
+        // Mismatched weight length and zero-weight subsets error.
+        assert!(f.renormalization_scale(&[1.0]).is_err());
+        let mut z = RoundMembership::new(2, policy(0.5, 0)).unwrap();
+        z.record_arrival(0);
+        z.record_drop(1, DropReason::Faulted);
+        assert!(z.renormalization_scale(&[0.0, 1.0]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "settled slot")]
+    fn double_arrival_is_a_driver_bug() {
+        let mut m = RoundMembership::new(2, QuorumPolicy::strict()).unwrap();
+        m.record_arrival(0);
+        m.record_arrival(0);
+    }
+
+    #[test]
+    fn empty_rounds_are_rejected() {
+        assert!(RoundMembership::new(0, QuorumPolicy::strict()).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! Round membership as a first-class, typed state machine.
+//!
+//! FetchSGD's central robustness claim (paper §1, §3) is that a round
+//! is valid with *whatever subset of clients actually shows up*:
+//! momentum and error accumulation live in the server's sketches, and
+//! every strategy's fan-in is a weighted sum, so the arrived subset is
+//! all the server needs. This module owns that subset:
+//!
+//! - [`CohortPlan`] — the *sampled* round: participant client ids (from
+//!   `coordinator::selection`) plus their dataset sizes, in slot order.
+//!   What the round intends.
+//! - [`QuorumPolicy`] — how much of the plan must materialize: a
+//!   minimum arrival fraction, an optional round deadline, and a
+//!   per-slot retry budget. The default ([`QuorumPolicy::strict`])
+//!   requires the full cohort with no deadline and no retries —
+//!   exactly the pre-cohort behavior, so existing configs are
+//!   untouched.
+//! - [`RoundMembership`] — what actually happened: a per-slot outcome
+//!   ([`SlotOutcome`]: `Arrived`, `Retried(n)`, `Dropped(reason)`)
+//!   recorded by the round drivers (the in-process engine and the
+//!   transport server), plus the **finalize-at-quorum** decision:
+//!   once every slot is settled, the round closes iff the arrived
+//!   count meets [`RoundMembership::quorum_target`].
+//!
+//! ## Determinism contract
+//!
+//! *Which* slots drop can depend on wall-clock (deadlines) or on flaky
+//! peers — that is inherent to partial participation. Everything
+//! downstream of the final membership set is a **pure function of that
+//! set**: [`RoundMembership::renormalization_scale`] renormalizes the
+//! per-slot aggregation weights over the arrived subset in slot order,
+//! and `aggregate::RoundPipeline::finalize_partial` absorbs the arrived
+//! slots in the same in-shard order the full-cohort path uses. Two runs
+//! — in-process or served, at any parallelism — that end with the same
+//! arrived set produce bitwise-identical merged weights (enforced by
+//! `rust/tests/cohort_quorum.rs`).
+
+pub mod membership;
+pub mod plan;
+pub mod policy;
+
+pub use membership::{DropReason, MembershipSummary, RoundMembership, SlotOutcome};
+pub use plan::CohortPlan;
+pub use policy::QuorumPolicy;

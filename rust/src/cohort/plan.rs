@@ -1,0 +1,89 @@
+//! The sampled round: which clients the coordinator *intends* to hear
+//! from, in slot order.
+
+use anyhow::{bail, Result};
+
+use crate::cohort::membership::RoundMembership;
+use crate::cohort::policy::QuorumPolicy;
+use crate::coordinator::selection::ClientSelector;
+use crate::data::FedDataset;
+
+/// One round's planned cohort: the participant client ids drawn by
+/// `coordinator::selection` plus their local dataset sizes (slot order
+/// throughout). The plan is what [`RoundMembership`] is measured
+/// against: slot `i` of the plan either arrives or is dropped.
+#[derive(Clone, Debug)]
+pub struct CohortPlan {
+    pub round: usize,
+    /// Participant client ids, in slot order.
+    pub participants: Vec<usize>,
+    /// Participants' local dataset sizes, in slot order — the input to
+    /// `ServerAggregator::begin_round`, which turns them into per-slot
+    /// aggregation weights λ.
+    pub sizes: Vec<f32>,
+}
+
+impl CohortPlan {
+    /// Draw the round's cohort: uniform sampling via the selector, with
+    /// dataset sizes resolved per slot. Deterministic given the
+    /// selector's seed and the round index.
+    pub fn sample(selector: &ClientSelector, dataset: &dyn FedDataset, round: usize) -> CohortPlan {
+        let participants = selector.select(round);
+        let sizes = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        CohortPlan { round, participants, sizes }
+    }
+
+    /// Build a plan from pre-resolved parts (transport drivers and
+    /// tests that own selection themselves).
+    pub fn from_parts(
+        round: usize,
+        participants: Vec<usize>,
+        sizes: Vec<f32>,
+    ) -> Result<CohortPlan> {
+        if participants.is_empty() {
+            bail!("round {round} has no participants");
+        }
+        if participants.len() != sizes.len() {
+            bail!("{} participants but {} client sizes", participants.len(), sizes.len());
+        }
+        Ok(CohortPlan { round, participants, sizes })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.participants.len()
+    }
+
+    /// A fresh outcome tracker for this plan under `policy`.
+    pub fn membership(&self, policy: QuorumPolicy) -> Result<RoundMembership> {
+        RoundMembership::new(self.slots(), policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::sim::SimDataset;
+
+    #[test]
+    fn sample_is_deterministic_and_sized() {
+        let selector = ClientSelector::new(50, 8, 7);
+        let ds = SimDataset { num_clients: 50 };
+        let a = CohortPlan::sample(&selector, &ds, 3);
+        let b = CohortPlan::sample(&selector, &ds, 3);
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.slots(), 8);
+        for (slot, &c) in a.participants.iter().enumerate() {
+            assert_eq!(a.sizes[slot], ds.client_size(c) as f32);
+        }
+        let m = a.membership(QuorumPolicy::strict()).unwrap();
+        assert_eq!(m.slots(), 8);
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        assert!(CohortPlan::from_parts(0, vec![], vec![]).is_err());
+        assert!(CohortPlan::from_parts(0, vec![1, 2], vec![1.0]).is_err());
+        let p = CohortPlan::from_parts(0, vec![1, 2], vec![1.0, 2.0]).unwrap();
+        assert_eq!(p.slots(), 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! The quorum policy: how much of a planned cohort must actually arrive
+//! for a round to close, how long to wait, and how often a lost slot is
+//! re-offered before being dropped.
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Partial-participation knobs for one training run. Built from
+/// `TrainConfig` (`quorum_fraction` / `round_deadline_ms` /
+/// `max_slot_retries`) and consulted by both round drivers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuorumPolicy {
+    /// Minimum fraction of the planned cohort that must arrive, in
+    /// (0, 1]. 1.0 = the full cohort (the pre-cohort behavior).
+    min_fraction: f64,
+    /// Wall-clock budget for a round. Once it expires with quorum met,
+    /// outstanding slots are dropped (`DropReason::Deadline`) instead
+    /// of holding the round open. `None` = wait forever (the default).
+    round_deadline: Option<Duration>,
+    /// How many times a faulted slot is re-offered (in-process: the
+    /// client compute re-run; served: the slot reassigned to a healthy
+    /// connection) before it is dropped.
+    max_slot_retries: usize,
+}
+
+impl QuorumPolicy {
+    /// Full cohort, no deadline, no retries: one bad slot fails the
+    /// round loudly — exactly the behavior before the cohort subsystem.
+    pub fn strict() -> QuorumPolicy {
+        QuorumPolicy { min_fraction: 1.0, round_deadline: None, max_slot_retries: 0 }
+    }
+
+    /// Validating constructor. `round_deadline_ms` of 0 means
+    /// wait-forever (preserves the strict default's pacing); a quorum
+    /// fraction outside (0, 1] is a config error, caught here rather
+    /// than as a never-closing or trivially-empty round later.
+    pub fn new(
+        min_fraction: f64,
+        round_deadline_ms: u64,
+        max_slot_retries: usize,
+    ) -> Result<QuorumPolicy> {
+        if !min_fraction.is_finite() || min_fraction <= 0.0 || min_fraction > 1.0 {
+            bail!("quorum_fraction must be in (0, 1], got {min_fraction}");
+        }
+        let round_deadline =
+            (round_deadline_ms > 0).then(|| Duration::from_millis(round_deadline_ms));
+        Ok(QuorumPolicy { min_fraction, round_deadline, max_slot_retries })
+    }
+
+    pub fn min_fraction(&self) -> f64 {
+        self.min_fraction
+    }
+
+    pub fn round_deadline(&self) -> Option<Duration> {
+        self.round_deadline
+    }
+
+    pub fn max_slot_retries(&self) -> usize {
+        self.max_slot_retries
+    }
+
+    /// Arrived-slot count required to close a round of `slots` slots:
+    /// `ceil(min_fraction · slots)`, clamped to [1, slots].
+    pub fn quorum_target(&self, slots: usize) -> usize {
+        ((self.min_fraction * slots as f64).ceil() as usize).clamp(1, slots.max(1))
+    }
+
+    /// Whether a single slot fault is already fatal (full quorum, no
+    /// retry budget) — drivers use this to keep the pre-cohort
+    /// fail-fast behavior: once one slot is lost the round cannot
+    /// close, so there is no point finishing the cohort.
+    pub fn is_strict(&self) -> bool {
+        self.min_fraction >= 1.0 && self.max_slot_retries == 0
+    }
+}
+
+impl Default for QuorumPolicy {
+    fn default() -> Self {
+        QuorumPolicy::strict()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_fraction_bounds() {
+        assert!(QuorumPolicy::new(0.0, 0, 0).is_err());
+        assert!(QuorumPolicy::new(-0.5, 0, 0).is_err());
+        assert!(QuorumPolicy::new(1.5, 0, 0).is_err());
+        assert!(QuorumPolicy::new(f64::NAN, 0, 0).is_err());
+        assert!(QuorumPolicy::new(f64::INFINITY, 0, 0).is_err());
+        assert!(QuorumPolicy::new(0.001, 0, 0).is_ok());
+        assert!(QuorumPolicy::new(1.0, 0, 0).is_ok());
+    }
+
+    #[test]
+    fn deadline_zero_means_wait_forever() {
+        let p = QuorumPolicy::new(1.0, 0, 0).unwrap();
+        assert_eq!(p.round_deadline(), None);
+        assert_eq!(p, QuorumPolicy::strict());
+        let p = QuorumPolicy::new(0.5, 250, 2).unwrap();
+        assert_eq!(p.round_deadline(), Some(Duration::from_millis(250)));
+        assert_eq!(p.max_slot_retries(), 2);
+    }
+
+    #[test]
+    fn quorum_target_rounds_up_and_clamps() {
+        let p = QuorumPolicy::new(0.5, 0, 0).unwrap();
+        assert_eq!(p.quorum_target(4), 2);
+        assert_eq!(p.quorum_target(5), 3); // ceil, not floor
+        assert_eq!(p.quorum_target(1), 1);
+        let p = QuorumPolicy::new(0.01, 0, 0).unwrap();
+        assert_eq!(p.quorum_target(10), 1, "quorum never drops below one upload");
+        let p = QuorumPolicy::strict();
+        assert_eq!(p.quorum_target(7), 7);
+        assert!(p.is_strict());
+        assert!(!QuorumPolicy::new(1.0, 0, 1).unwrap().is_strict());
+        assert!(!QuorumPolicy::new(0.9, 0, 0).unwrap().is_strict());
+    }
+}

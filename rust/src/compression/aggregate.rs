@@ -36,9 +36,10 @@
 //! accumulator geometry — a worker count only changes *which thread*
 //! folds a strip, never the per-cell floating-point op order.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+use crate::cohort::RoundMembership;
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 use crate::sketch::CountSketch;
 use crate::wire::{Body, Frame};
@@ -225,6 +226,20 @@ impl RoundAccum {
         }
         self.absorbed += 1;
         Ok(())
+    }
+
+    /// `self *= s`, every cell. The finalize-at-quorum path uses this
+    /// to renormalize a partial round's weighted sum over the slots
+    /// that actually arrived (`Σ_{i∈S} λ_i·u_i → (Σ λ_i·u_i)/Σ λ_i`).
+    pub fn scale(&mut self, s: f32) {
+        match &mut self.acc {
+            Acc::Sketch(t) => t.scale(s),
+            Acc::Dense(v) => {
+                for x in v.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
     }
 
     /// The merged sketch (fetchsgd). Errors for dense aggregators.
@@ -498,6 +513,79 @@ impl RoundPipeline {
         Ok(merged)
     }
 
+    /// Finalize-at-quorum: close the round with only the slots the
+    /// membership tracker recorded as arrived, renormalizing the
+    /// aggregation weights over the actual participants.
+    ///
+    /// Uploads were absorbed with their *planned* weights λ; closing
+    /// over the arrived subset `S` therefore scales the merged sum by
+    /// `1 / Σ_{i∈S} λ_i` ([`RoundMembership::renormalization_scale`]) —
+    /// for uniform 1/W weights that recovers the mean over `|S|`, for
+    /// FedAvg's size weights the size-weighted mean over `S`. Everything
+    /// here is a pure function of the final membership set: parked
+    /// arrivals whose in-shard predecessors were dropped are drained in
+    /// increasing slot order (exactly where the full-cohort path would
+    /// have absorbed them), shards reduce in shard order, and the scale
+    /// depends only on (weights, set). Two runs ending with the same
+    /// set — in-process or served, any parallelism — merge to identical
+    /// bits.
+    ///
+    /// A fully-arrived membership defers to [`RoundPipeline::finish`]
+    /// verbatim (no scale), so quorum config on a healthy cohort
+    /// changes nothing. Errors if the quorum is not met or the
+    /// membership disagrees with the offered slots; shards return to
+    /// the pool either way.
+    pub fn finalize_partial(
+        &mut self,
+        mut round: RoundInFlight,
+        membership: &RoundMembership,
+    ) -> Result<RoundAccum> {
+        if membership.slots() != round.slots() {
+            let (m, r) = (membership.slots(), round.slots());
+            self.pool.extend(round.shards);
+            bail!("membership tracks {m} slots but the round has {r}");
+        }
+        if !membership.quorum_met() {
+            let (arrived, slots, target) =
+                (membership.arrived(), membership.slots(), membership.quorum_target());
+            self.pool.extend(round.shards);
+            bail!("quorum not met: {arrived} of {slots} uploads arrived (target {target})");
+        }
+        if membership.is_full() {
+            return self.finish(round);
+        }
+        for slot in 0..round.slots() {
+            if round.seen[slot] != membership.is_arrived(slot) {
+                let (offered, arrived) = (round.seen[slot], membership.is_arrived(slot));
+                self.pool.extend(round.shards);
+                bail!(
+                    "slot {slot}: upload offered={offered} but membership records \
+                     arrived={arrived}"
+                );
+            }
+        }
+        // Compute the scale before consuming the round so error paths
+        // can still return the shards to the pool.
+        let scale = match membership.renormalization_scale(&round.weights) {
+            Ok(s) => s,
+            Err(e) => {
+                self.pool.extend(round.shards);
+                return Err(e);
+            }
+        };
+        if let Err(e) = round.drain_parked() {
+            self.pool.extend(round.shards);
+            return Err(e);
+        }
+        debug_assert_eq!(round.absorbed, membership.arrived());
+        let mut shards = round.shards;
+        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
+        let mut merged = shards.swap_remove(0);
+        self.pool.extend(shards);
+        merged.scale(scale);
+        Ok(merged)
+    }
+
     /// Abandon a round, returning every shard accumulator to the pool —
     /// the error-path counterpart of [`RoundPipeline::finish`] (partial
     /// sums are fine: accumulators reset in place on reuse).
@@ -602,7 +690,21 @@ impl RoundInFlight {
         let shard = shard_of(slot, nshards);
         if slot != shard + self.done[shard] * nshards {
             // Early for its shard (slot < expected is impossible: that
-            // slot would already be marked seen). Park it.
+            // slot would already be marked seen). Validate a wire frame
+            // *before* parking: a corrupt or mismatched frame must fail
+            // its own offer — not the in-shard predecessor whose later
+            // arrival drains the park — so fault attribution (and any
+            // retry of this slot) lands on the right peer. The deferred
+            // absorb re-parses the same bytes, so it cannot fail on
+            // anything validated here.
+            if let Parked::Frame(bytes) = &item {
+                let checked = Frame::parse(bytes)
+                    .and_then(|frame| self.shards[shard].spec.validate_frame(&frame));
+                if let Err(e) = checked {
+                    self.seen[slot] = false;
+                    return Err(e.context(format!("parking upload for slot {slot}")));
+                }
+            }
             self.pending.insert(slot, item);
             return Ok(());
         }
@@ -617,13 +719,35 @@ impl RoundInFlight {
 
     fn absorb_now(&mut self, shard: usize, slot: usize, item: Parked) -> Result<()> {
         let lam = self.weights[slot];
-        match item {
+        let absorbed = match item {
             Parked::Upload(u) => self.shards[shard].absorb(u, lam),
             Parked::Frame(f) => self.shards[shard].absorb_bytes(&f, lam),
+        };
+        if let Err(e) = absorbed {
+            // A failed absorb touches no accumulator cell (validation
+            // runs before any add), so un-mark the slot: a retry /
+            // reassignment may legitimately offer it again.
+            self.seen[slot] = false;
+            return Err(e.context(format!("absorbing upload for slot {slot}")));
         }
-        .with_context(|| format!("absorbing upload for slot {slot}"))?;
         self.done[shard] += 1;
         self.absorbed += 1;
+        Ok(())
+    }
+
+    /// Absorb every parked upload in increasing slot order — the
+    /// finalize-at-quorum path, where a dropped in-shard predecessor
+    /// will never arrive to unblock its successors. Ascending slot
+    /// order globally implies ascending order within each shard, so the
+    /// per-shard absorb sequence over the arrived set is exactly what a
+    /// full-cohort round would have performed on those slots.
+    fn drain_parked(&mut self) -> Result<()> {
+        let nshards = self.shards.len();
+        let pending = std::mem::take(&mut self.pending);
+        for (slot, item) in pending {
+            let shard = shard_of(slot, nshards);
+            self.absorb_now(shard, slot, item)?;
+        }
         Ok(())
     }
 }
@@ -984,6 +1108,173 @@ mod tests {
         assert_eq!(pl.pooled(), shard_count(3));
         // Empty rounds are rejected up front.
         assert!(pl.begin(&spec, vec![]).is_err());
+    }
+
+    #[test]
+    fn finalize_partial_matches_hand_renormalized_merge() {
+        use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
+        // 20 slots over 16 shards: slots 2 and 18 share shard 2, so
+        // dropping slot 2 leaves slot 18 parked until finalize drains
+        // it — the path a full-cohort round never exercises.
+        let mut rng = crate::util::Rng::new(41);
+        let slots = 20usize;
+        let uploads: Vec<ClientUpload> = (0..slots)
+            .map(|_| {
+                let g: Vec<f32> = (0..200).map(|_| rng.next_gaussian() as f32).collect();
+                ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap())
+            })
+            .collect();
+        let weights: Vec<f32> = (0..slots).map(|i| 0.05 + 0.01 * i as f32).collect();
+        let dropped = [2usize, 5, 18];
+        let arrived: Vec<usize> = (0..slots).filter(|s| !dropped.contains(s)).collect();
+        let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+
+        // Hand reference: absorb the arrived slots into the fixed shard
+        // layout in slot order, reduce, scale by 1/Σλ over the set.
+        let nshards = shard_count(slots);
+        let mut shards: Vec<RoundAccum> =
+            (0..nshards).map(|_| RoundAccum::new(&sketch_spec()).unwrap()).collect();
+        for &slot in &arrived {
+            shards[shard_of(slot, nshards)]
+                .absorb(uploads[slot].clone(), weights[slot])
+                .unwrap();
+        }
+        reduce_shards_in_place(&mut shards, 1).unwrap();
+        let lam_sum: f64 = arrived.iter().map(|&s| weights[s] as f64).sum();
+        shards[0].scale((1.0 / lam_sum) as f32);
+
+        // Streamed, two opposite arrival orders: identical bits.
+        for reverse in [false, true] {
+            let mut pl = pipeline();
+            let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
+            let mut r = pl.begin(&sketch_spec(), weights.clone()).unwrap();
+            let mut order = arrived.clone();
+            if reverse {
+                order.reverse();
+            }
+            for &slot in &order {
+                r.offer(slot, uploads[slot].clone()).unwrap();
+                m.record_arrival(slot);
+            }
+            for &slot in &dropped {
+                m.record_drop(slot, DropReason::Faulted);
+            }
+            assert!(m.is_settled() && m.quorum_met() && !m.is_full());
+            let merged = pl.finalize_partial(r, &m).unwrap();
+            assert_eq!(merged.absorbed(), arrived.len());
+            let (by_hand, streamed) =
+                (shards[0].as_sketch().unwrap(), merged.as_sketch().unwrap());
+            for (a, b) in by_hand.table().iter().zip(streamed.table()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "reverse={reverse}");
+            }
+            assert_eq!(pl.pooled(), nshards - 1, "tail shards return to the pool");
+        }
+    }
+
+    #[test]
+    fn finalize_partial_full_membership_defers_to_finish() {
+        use crate::cohort::{QuorumPolicy, RoundMembership};
+        let spec = UploadSpec::Dense { dim: 8 };
+        let upload = |v: f32| ClientUpload::Dense(vec![v; 8]);
+        let run = |partial: bool| {
+            let mut pl = pipeline();
+            let mut r = pl.begin(&spec, vec![0.3, 0.7]).unwrap();
+            r.offer(0, upload(1.0)).unwrap();
+            r.offer(1, upload(2.0)).unwrap();
+            if partial {
+                let mut m =
+                    RoundMembership::new(2, QuorumPolicy::new(0.5, 0, 0).unwrap()).unwrap();
+                m.record_arrival(0);
+                m.record_arrival(1);
+                pl.finalize_partial(r, &m).unwrap()
+            } else {
+                pl.finish(r).unwrap()
+            }
+        };
+        let (full, via_partial) = (run(false), run(true));
+        // No renormalization on a full cohort — finish() verbatim, even
+        // though Σλ = 1.0 only approximately in floating point.
+        for (a, b) in full.as_dense().unwrap().iter().zip(via_partial.as_dense().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn finalize_partial_rejects_unmet_quorum_and_membership_mismatch() {
+        use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
+        let spec = UploadSpec::Dense { dim: 8 };
+        let mut pl = pipeline();
+        // Quorum not met: 1 of 3 arrived under a 0.9 quorum.
+        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        r.offer(0, ClientUpload::Dense(vec![1.0; 8])).unwrap();
+        let mut m = RoundMembership::new(3, QuorumPolicy::new(0.9, 0, 0).unwrap()).unwrap();
+        m.record_arrival(0);
+        m.record_drop(1, DropReason::Faulted);
+        m.record_drop(2, DropReason::Deadline);
+        let err = pl.finalize_partial(r, &m).unwrap_err().to_string();
+        assert!(err.contains("quorum not met"), "{err}");
+        assert_eq!(pl.pooled(), shard_count(3), "shards still return to the pool");
+        // Membership that disagrees with the offered slots is a driver
+        // bug and fails loudly.
+        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        r.offer(0, ClientUpload::Dense(vec![1.0; 8])).unwrap();
+        let mut m = RoundMembership::new(3, QuorumPolicy::new(0.3, 0, 0).unwrap()).unwrap();
+        m.record_arrival(1); // claims slot 1 arrived; only slot 0 was offered
+        m.record_drop(0, DropReason::Faulted);
+        m.record_drop(2, DropReason::Faulted);
+        let err = pl.finalize_partial(r, &m).unwrap_err().to_string();
+        assert!(err.contains("membership records"), "{err}");
+        // Slot-count mismatch.
+        let r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        let m = RoundMembership::new(2, QuorumPolicy::strict()).unwrap();
+        assert!(pl.finalize_partial(r, &m).is_err());
+    }
+
+    #[test]
+    fn corrupt_parked_frame_fails_its_own_offer() {
+        // Slot 16 shares shard 0 with slot 0 (17 slots → 16 shards), so
+        // an early offer of slot 16 parks. A corrupt parked frame must
+        // fail slot 16's own offer — not slot 0's later arrival, which
+        // would blame (and burn) the wrong peer in a quorum round.
+        let spec = UploadSpec::Dense { dim: 8 };
+        let good = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
+        let mut pl = pipeline();
+        let mut r = pl.begin(&spec, vec![1.0; 17]).unwrap();
+        let mut bad = good(1.0);
+        bad[0] = b'X';
+        let err = r.offer_frame(16, bad).unwrap_err().to_string();
+        assert!(err.contains("parking upload for slot 16"), "{err}");
+        assert_eq!(r.buffered(), 0, "a rejected frame is not parked");
+        // Wrong-shape frames are caught at park time too.
+        let wrong_dim = encode_upload(&ClientUpload::Dense(vec![0.0; 4]), &F32LE);
+        assert!(r.offer_frame(16, wrong_dim).is_err());
+        // The slot is not burned: a healthy re-offer parks…
+        r.offer_frame(16, good(2.0)).unwrap();
+        assert_eq!(r.buffered(), 1);
+        // …and the predecessor's arrival drains it cleanly.
+        r.offer_frame(0, good(3.0)).unwrap();
+        assert_eq!(r.absorbed(), 2);
+        assert_eq!(r.buffered(), 0);
+        pl.abort(r);
+    }
+
+    #[test]
+    fn failed_absorb_unmarks_the_slot_for_retry() {
+        let spec = UploadSpec::Dense { dim: 8 };
+        let good = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
+        let mut pl = pipeline();
+        let mut r = pl.begin(&spec, vec![0.5; 2]).unwrap();
+        let mut bad = good(1.0);
+        bad[0] = b'X';
+        assert!(r.offer_frame(0, bad).is_err());
+        assert_eq!(r.absorbed(), 0);
+        // The faulted slot may be offered again — the transport's
+        // retry/reassignment path re-delivers it from another worker.
+        r.offer_frame(0, good(1.0)).unwrap();
+        r.offer(1, ClientUpload::Dense(vec![2.0; 8])).unwrap();
+        assert!(r.is_complete());
+        let merged = pl.finish(r).unwrap();
+        assert_eq!(merged.as_dense().unwrap()[0], 1.5);
     }
 
     #[test]

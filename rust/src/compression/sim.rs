@@ -205,6 +205,42 @@ impl ClientCompute for SimDenseClient {
     }
 }
 
+/// Wraps any sim client and deterministically fails a chosen set of
+/// client ids — the flaky-client scenario the cohort subsystem's quorum
+/// rounds exist for. Failure is a pure function of the client id, so
+/// the dropped-slot set (and therefore the surviving membership) is
+/// identical at any parallelism.
+pub struct SimFlakyClient<C: ClientCompute> {
+    pub inner: C,
+    /// Client ids whose compute always errors.
+    pub fail: std::collections::BTreeSet<usize>,
+}
+
+impl<C: ClientCompute> ClientCompute for SimFlakyClient<C> {
+    fn name(&self) -> &'static str {
+        "sim_flaky"
+    }
+
+    fn wants_stacked_batches(&self) -> Option<usize> {
+        self.inner.wants_stacked_batches()
+    }
+
+    fn client_round(
+        &self,
+        artifacts: &TaskArtifacts,
+        w: &[f32],
+        batch: &Batch,
+        client: usize,
+        stacked: Option<(Tensor, Tensor, Tensor)>,
+        lr: f32,
+    ) -> Result<ClientResult> {
+        if self.fail.contains(&client) {
+            anyhow::bail!("sim flaky client {client} refused the round");
+        }
+        self.inner.client_round(artifacts, w, batch, client, stacked, lr)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

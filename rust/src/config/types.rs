@@ -55,6 +55,17 @@ fn parse_wire(v: &str) -> Option<String> {
     }
 }
 
+/// Validate a JSON `round_deadline_ms` before the float→integer cast:
+/// a negative or non-finite value would silently saturate to 0
+/// (wait-forever) instead of erroring like the same value does on the
+/// CLI override path.
+fn deadline_ms_from_json(ms: f64) -> Result<u64> {
+    if !ms.is_finite() || ms < 0.0 {
+        bail!("round_deadline_ms must be a non-negative number of milliseconds, got {ms}");
+    }
+    Ok(ms as u64)
+}
+
 impl StrategyConfig {
     pub fn name(&self) -> &'static str {
         match self {
@@ -138,6 +149,22 @@ pub struct TrainConfig {
     /// explicitly only to clamp hostile peers harder or to lift the cap
     /// for giant frames).
     pub serve_max_msg: usize,
+    /// Minimum fraction of the sampled cohort that must deliver an
+    /// upload for a round to close, in (0, 1]. Below the quorum the
+    /// round fails; at or above it, missing slots are dropped and the
+    /// aggregation weights are renormalized over the actual
+    /// participants (`cohort::RoundMembership`). 1.0 (the default)
+    /// requires the full cohort — the pre-cohort behavior.
+    pub quorum_fraction: f64,
+    /// Wall-clock budget per round in milliseconds. Once it expires
+    /// with the quorum met, outstanding stragglers are dropped instead
+    /// of holding the round open. 0 (the default) = wait forever,
+    /// preserving the pre-cohort pacing.
+    pub round_deadline_ms: u64,
+    /// How many times a faulted slot is retried (in-process: the client
+    /// compute re-run; served: the slot re-offered to a healthy worker
+    /// connection) before it is dropped. 0 (the default) = no retries.
+    pub max_slot_retries: usize,
 }
 
 impl TrainConfig {
@@ -171,7 +198,22 @@ impl TrainConfig {
             serve_read_timeout_s: 30.0,
             serve_accept_timeout_s: 30.0,
             serve_max_msg: 0,
+            quorum_fraction: 1.0,
+            round_deadline_ms: 0,
+            max_slot_retries: 0,
         }
+    }
+
+    /// The quorum policy these knobs describe; the single validation
+    /// point for `quorum_fraction` / `round_deadline_ms` /
+    /// `max_slot_retries` (also run eagerly at config parse time so a
+    /// bad value fails before any round starts).
+    pub fn quorum_policy(&self) -> Result<crate::cohort::QuorumPolicy> {
+        crate::cohort::QuorumPolicy::new(
+            self.quorum_fraction,
+            self.round_deadline_ms,
+            self.max_slot_retries,
+        )
     }
 
     /// Load from a JSON file then apply `key=value` overrides.
@@ -198,7 +240,7 @@ impl TrainConfig {
             scale.partition = s.opt_str("partition", &scale.partition).to_string();
             scale.seed = s.opt_f64("seed", scale.seed as f64) as u64;
         }
-        Ok(TrainConfig {
+        let cfg = TrainConfig {
             task: v.req_str("task")?.to_string(),
             strategy,
             rounds: v.req_usize("rounds")?,
@@ -219,7 +261,12 @@ impl TrainConfig {
             serve_read_timeout_s: v.opt_f64("serve_read_timeout_s", 30.0),
             serve_accept_timeout_s: v.opt_f64("serve_accept_timeout_s", 30.0),
             serve_max_msg: v.opt_usize("serve_max_msg", 0),
-        })
+            quorum_fraction: v.opt_f64("quorum_fraction", 1.0),
+            round_deadline_ms: deadline_ms_from_json(v.opt_f64("round_deadline_ms", 0.0))?,
+            max_slot_retries: v.opt_usize("max_slot_retries", 0),
+        };
+        cfg.quorum_policy()?;
+        Ok(cfg)
     }
 
     fn strategy_from_json(v: &Value) -> Result<StrategyConfig> {
@@ -280,6 +327,9 @@ impl TrainConfig {
                 "serve_read_timeout_s" => self.serve_read_timeout_s = val.parse()?,
                 "serve_accept_timeout_s" => self.serve_accept_timeout_s = val.parse()?,
                 "serve_max_msg" => self.serve_max_msg = val.parse()?,
+                "quorum_fraction" => self.quorum_fraction = val.parse()?,
+                "round_deadline_ms" => self.round_deadline_ms = val.parse()?,
+                "max_slot_retries" => self.max_slot_retries = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -294,6 +344,7 @@ impl TrainConfig {
                 }
             }
         }
+        self.quorum_policy()?;
         Ok(())
     }
 
@@ -423,6 +474,40 @@ mod tests {
         }
         assert!(cfg.apply_overrides(&["nope=1".into()]).is_err());
         assert!(cfg.apply_overrides(&["strategy.local_steps=2".into()]).is_err());
+    }
+
+    #[test]
+    fn quorum_knobs_parse_validate_and_default_to_strict() {
+        let v = parse(CFG).unwrap();
+        let mut cfg = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.quorum_fraction, 1.0, "full cohort by default");
+        assert_eq!(cfg.round_deadline_ms, 0, "wait-forever by default");
+        assert_eq!(cfg.max_slot_retries, 0, "no retries by default");
+        assert!(cfg.quorum_policy().unwrap().is_strict());
+        cfg.apply_overrides(&[
+            "quorum_fraction=0.5".into(),
+            "round_deadline_ms=1500".into(),
+            "max_slot_retries=2".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.quorum_fraction, 0.5);
+        assert_eq!(cfg.round_deadline_ms, 1500);
+        assert_eq!(cfg.max_slot_retries, 2);
+        let p = cfg.quorum_policy().unwrap();
+        assert_eq!(p.quorum_target(10), 5);
+        // Out-of-range fractions are rejected at override time…
+        assert!(cfg.apply_overrides(&["quorum_fraction=0".into()]).is_err());
+        assert!(cfg.apply_overrides(&["quorum_fraction=1.5".into()]).is_err());
+        // …and at JSON parse time.
+        let bad = CFG.replace("\"eval_every\": 10", "\"eval_every\": 10, \"quorum_fraction\": -1");
+        let v = parse(&bad).unwrap();
+        assert!(TrainConfig::from_json(&v).is_err());
+        // A negative deadline must error, not saturate to wait-forever.
+        let bad =
+            CFG.replace("\"eval_every\": 10", "\"eval_every\": 10, \"round_deadline_ms\": -500");
+        let v = parse(&bad).unwrap();
+        let err = TrainConfig::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("round_deadline_ms"), "{err}");
     }
 
     #[test]

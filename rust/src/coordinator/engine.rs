@@ -29,7 +29,12 @@
 //! upload is offered, never the floating-point reduction tree. Wire
 //! mode ([`RoundCtx::wire`]) doesn't either, under the lossless `f32le`
 //! codec: encode→`offer_frame` performs the same additions in the same
-//! order as in-memory offers.
+//! order as in-memory offers. Partial-cohort rounds
+//! ([`RoundCtx::policy`]) extend the contract: *which* slots drop may
+//! depend on wall-clock or flaky clients, but conditioned on the final
+//! membership set the merged (renormalized) bits are identical at any
+//! parallelism — `finalize_partial` absorbs the arrived slots in the
+//! same in-shard order and scales by a pure function of the set.
 //!
 //! ## Scheduling
 //!
@@ -58,10 +63,12 @@
 //! the pool via [`RoundPipeline::recycle`] once the server is done with
 //! it (see `coordinator::trainer`).
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
+use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
 use crate::compression::aggregate::{RoundAccum, RoundInFlight, RoundPipeline};
 use crate::compression::{ClientCompute, UploadSpec};
 use crate::data::FedDataset;
@@ -69,7 +76,8 @@ use crate::runtime::artifact::TaskArtifacts;
 use crate::wire::{encode_upload, Codec};
 
 /// The round-invariant context for [`run_round`]: what to run, on what
-/// data, against which weights, and how (threads / wire codec).
+/// data, against which weights, and how (threads / wire codec /
+/// quorum policy).
 pub struct RoundCtx<'a> {
     pub client: &'a dyn ClientCompute,
     pub artifacts: &'a TaskArtifacts,
@@ -86,35 +94,57 @@ pub struct RoundCtx<'a> {
     /// ([`RoundInFlight::offer_frame`]), recording measured frame bytes
     /// alongside the idealized estimate.
     pub wire: Option<&'a dyn Codec>,
+    /// Partial-participation policy. [`QuorumPolicy::strict`] (the
+    /// default config) reproduces the pre-cohort behavior: any slot
+    /// fault fails the round with the lowest-slot error. A tolerant
+    /// policy retries faulted slots up to its budget, drops what still
+    /// fails, and closes the round at quorum via
+    /// [`RoundPipeline::finalize_partial`].
+    pub policy: &'a QuorumPolicy,
 }
 
 /// Everything one round of client compute produces.
 pub struct RoundOutput {
-    /// Per-slot client training loss, in participant order.
+    /// Per-slot client training loss, in participant order (0.0 for
+    /// dropped slots — consult `membership` before averaging).
     pub losses: Vec<f32>,
-    /// Merged weighted upload sum (`Σ λ_i · upload_i`). Return it to the
-    /// pipeline's pool ([`RoundPipeline::recycle`]) after the server
-    /// consumes it.
+    /// Mean training loss over the *arrived* slots, reduced in slot
+    /// order (scheduling-invariant).
+    pub mean_loss: f64,
+    /// Merged weighted upload sum (`Σ λ_i · upload_i`, renormalized
+    /// over the arrived subset when the round closed at quorum).
+    /// Return it to the pipeline's pool ([`RoundPipeline::recycle`])
+    /// after the server consumes it.
     pub merged: RoundAccum,
-    /// Payload bytes of slot 0's upload under the paper's idealized
-    /// accounting (all uploads of a strategy are the same size).
+    /// Per-slot outcomes: who arrived, who retried, who dropped.
+    pub membership: RoundMembership,
+    /// Payload bytes of one upload under the paper's idealized
+    /// accounting (all uploads of a strategy are the same size; sampled
+    /// from the lowest computed slot, so the number stays real even
+    /// when slot 0 drops out of a quorum round).
     pub upload_bytes_per_client: u64,
-    /// Measured wire-frame bytes of slot 0's upload (0 when wire mode
-    /// is off).
+    /// Measured wire-frame bytes of one upload (0 when wire mode is
+    /// off).
     pub wire_upload_bytes_per_client: u64,
 }
 
 /// One worker's contribution to the round (everything except the
 /// uploads themselves, which stream into the shared pipeline).
 struct WorkerOut {
-    /// (slot, loss) pairs for the slots this worker computed.
-    pairs: Vec<(usize, f32)>,
-    /// (idealized payload bytes, wire frame bytes) of slot 0, if this
-    /// worker ran it.
-    slot0: Option<(u64, u64)>,
-    /// First failure this worker hit, tagged with its slot so the
-    /// caller can surface the lowest-slot error deterministically.
-    err: Option<(usize, anyhow::Error)>,
+    /// (slot, loss, retries used) for the slots this worker delivered.
+    pairs: Vec<(usize, f32, usize)>,
+    /// (slot, idealized payload bytes, wire frame bytes) of the lowest
+    /// slot this worker computed. All of a strategy's uploads are the
+    /// same size (the accounting convention), but sampling the lowest
+    /// *computed* slot — instead of slot 0 — keeps the numbers real
+    /// when slot 0 drops out of a quorum round.
+    byte_sample: Option<(usize, u64, u64)>,
+    /// (slot, final error, retries used) for slots this worker gave up
+    /// on; sorted by slot at the join so failure reporting stays
+    /// deterministic.
+    errs: Vec<(usize, anyhow::Error, usize)>,
+    /// Slots skipped because the round deadline had already fired.
+    missed: Vec<usize>,
 }
 
 /// Execute one federated round's client work: workers pull participant
@@ -137,38 +167,67 @@ pub fn run_round(
 
     let shared: Mutex<RoundInFlight> = Mutex::new(round);
     let next = AtomicUsize::new(0);
+    let deadline = ctx.policy.round_deadline().map(|d| Instant::now() + d);
+    let max_retries = ctx.policy.max_slot_retries();
 
-    // No cross-worker abort flag: every slot is computed exactly once
-    // even when another slot has already failed, so the *set* of
-    // failing slots — and therefore the lowest-slot error the caller
-    // sees — is a pure function of the round, not of scheduling. (A
-    // failed round costs one full round of client compute, exactly as
-    // the pre-pipeline engine did.)
+    // No cross-worker abort flag: every slot is attempted even when
+    // another slot has already failed, so the *set* of failing slots —
+    // and therefore the lowest-slot error the caller sees — is a pure
+    // function of the round, not of scheduling. (A failed round costs
+    // one full round of client compute, exactly as the pre-pipeline
+    // engine did.) The round deadline is the one wall-clock input:
+    // slots not yet started when it fires are skipped, to be dropped —
+    // or to fail the round — at the join depending on the quorum.
     let run_worker = || -> WorkerOut {
-        let mut out = WorkerOut { pairs: Vec::new(), slot0: None, err: None };
+        let mut out = WorkerOut {
+            pairs: Vec::new(),
+            byte_sample: None,
+            errs: Vec::new(),
+            missed: Vec::new(),
+        };
+        let note_bytes = |out: &mut WorkerOut, slot: usize, payload: u64, wire: u64| {
+            if out.byte_sample.map_or(true, |(s, _, _)| slot < s) {
+                out.byte_sample = Some((slot, payload, wire));
+            }
+        };
         loop {
             let slot = next.fetch_add(1, Ordering::Relaxed);
             if slot >= slots {
                 break;
             }
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    out.missed.push(slot);
+                    continue;
+                }
+            }
             let c = participants[slot];
-            let batch = ctx.dataset.client_batch(c, ctx.round_seed);
-            let stacked =
-                stacked_k.map(|k| ctx.dataset.client_batches_stacked(c, k, ctx.round_seed));
-            let res = match ctx
-                .client
-                .client_round(ctx.artifacts, ctx.w, &batch, c, stacked, ctx.lr)
-                .with_context(|| format!("client {c} (slot {slot})"))
-            {
+            let mut retries = 0usize;
+            let res = loop {
+                let batch = ctx.dataset.client_batch(c, ctx.round_seed);
+                let stacked =
+                    stacked_k.map(|k| ctx.dataset.client_batches_stacked(c, k, ctx.round_seed));
+                match ctx
+                    .client
+                    .client_round(ctx.artifacts, ctx.w, &batch, c, stacked, ctx.lr)
+                    .with_context(|| format!("client {c} (slot {slot})"))
+                {
+                    Ok(r) => break Ok(r),
+                    Err(e) => {
+                        if retries >= max_retries {
+                            break Err(e);
+                        }
+                        retries += 1;
+                    }
+                }
+            };
+            let res = match res {
                 Ok(r) => r,
                 Err(e) => {
-                    if out.err.is_none() {
-                        out.err = Some((slot, e));
-                    }
+                    out.errs.push((slot, e, retries));
                     continue;
                 }
             };
-            out.pairs.push((slot, res.loss));
             let payload_bytes = res.upload.payload_bytes();
             // Offer the upload to the shared pipeline immediately —
             // absorb-on-arrival; the lock covers only the fold, never
@@ -176,26 +235,21 @@ pub fn run_round(
             let offered = match ctx.wire {
                 Some(codec) => {
                     let frame = encode_upload(&res.upload, codec);
-                    if slot == 0 {
-                        out.slot0 = Some((payload_bytes, frame.len() as u64));
-                    }
+                    note_bytes(&mut out, slot, payload_bytes, frame.len() as u64);
                     let mut r = shared.lock().expect("round pipeline poisoned");
                     r.offer_frame(slot, frame)
                         .with_context(|| format!("wire upload from client {c} (slot {slot})"))
                 }
                 None => {
-                    if slot == 0 {
-                        out.slot0 = Some((payload_bytes, 0));
-                    }
+                    note_bytes(&mut out, slot, payload_bytes, 0);
                     let mut r = shared.lock().expect("round pipeline poisoned");
                     r.offer(slot, res.upload)
                         .with_context(|| format!("upload from client {c} (slot {slot})"))
                 }
             };
-            if let Err(e) = offered {
-                if out.err.is_none() {
-                    out.err = Some((slot, e));
-                }
+            match offered {
+                Ok(()) => out.pairs.push((slot, res.loss, retries)),
+                Err(e) => out.errs.push((slot, e, retries)),
             }
         }
         out
@@ -213,38 +267,69 @@ pub fn run_round(
         })
     };
 
-    // Surface the lowest-slot error first (deterministic failure too).
+    // Settle the membership; surface the lowest-slot error first when
+    // the round cannot close (deterministic failure too).
     let round = shared.into_inner().expect("round pipeline poisoned");
-    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    let mut membership = RoundMembership::new(slots, ctx.policy.clone())?;
+    let mut faults: Vec<(usize, anyhow::Error)> = Vec::new();
+    let mut missed: Vec<usize> = Vec::new();
     let mut losses = vec![0f32; slots];
     let mut upload_bytes_per_client = 0u64;
     let mut wire_upload_bytes_per_client = 0u64;
+    let mut sample_slot = usize::MAX;
     for wo in worker_outs {
-        if let Some((slot, e)) = wo.err {
-            let lowest_so_far = match &first_err {
-                None => true,
-                Some((s, _)) => slot < *s,
-            };
-            if lowest_so_far {
-                first_err = Some((slot, e));
+        if let Some((s, payload, wire)) = wo.byte_sample {
+            if s < sample_slot {
+                sample_slot = s;
+                upload_bytes_per_client = payload;
+                wire_upload_bytes_per_client = wire;
             }
         }
-        if let Some((payload, wire)) = wo.slot0 {
-            upload_bytes_per_client = payload;
-            wire_upload_bytes_per_client = wire;
-        }
-        for (slot, loss) in wo.pairs {
+        for (slot, loss, retries) in wo.pairs {
+            for _ in 0..retries {
+                membership.record_retry(slot);
+            }
+            membership.record_arrival(slot);
             losses[slot] = loss;
         }
+        for (slot, e, retries) in wo.errs {
+            for _ in 0..retries {
+                membership.record_retry(slot);
+            }
+            faults.push((slot, e));
+        }
+        missed.extend(wo.missed);
     }
-    if let Some((_, e)) = first_err {
+    faults.sort_by_key(|(slot, _)| *slot);
+    for &(slot, _) in &faults {
+        membership.record_drop(slot, DropReason::Faulted);
+    }
+    for slot in missed {
+        membership.record_drop(slot, DropReason::Deadline);
+    }
+    debug_assert!(membership.is_settled());
+    if !membership.quorum_met() {
         pipeline.abort(round);
-        return Err(e);
+        let (arrived, target) = (membership.arrived(), membership.quorum_target());
+        return Err(match faults.into_iter().next() {
+            Some((_, e)) => e,
+            None => anyhow!(
+                "round deadline expired with {arrived} of {slots} uploads \
+                 (quorum target {target})"
+            ),
+        });
     }
-    let merged = pipeline.finish(round)?;
+    let merged = if membership.is_full() {
+        pipeline.finish(round)?
+    } else {
+        pipeline.finalize_partial(round, &membership)?
+    };
+    let mean_loss = membership.mean_loss_over_arrived(&losses);
     Ok(RoundOutput {
         losses,
+        mean_loss,
         merged,
+        membership,
         upload_bytes_per_client,
         wire_upload_bytes_per_client,
     })
@@ -253,10 +338,11 @@ pub fn run_round(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cohort::SlotOutcome;
     use crate::compression::aggregate::{
         resolve_parallelism, shard_count, PipelineOptions, MAX_SHARDS,
     };
-    use crate::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+    use crate::compression::sim::{sim_artifacts, SimDataset, SimFlakyClient, SimSketchClient};
     use crate::compression::ServerAggregator;
     use crate::wire::F32LE;
 
@@ -273,6 +359,7 @@ mod tests {
         let weights = vec![1.0 / w_cohort as f32; w_cohort];
         let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
         let w = vec![0f32; DIM];
+        let policy = QuorumPolicy::strict();
         let ctx = RoundCtx {
             client: &client,
             artifacts: &artifacts,
@@ -282,10 +369,12 @@ mod tests {
             round_seed: 0xFEED,
             threads,
             wire: if wire { Some(&F32LE) } else { None },
+            policy: &policy,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
         assert_eq!(out.merged.absorbed(), w_cohort);
+        assert!(out.membership.is_full());
         assert_eq!(out.upload_bytes_per_client, (ROWS * COLS * 4) as u64);
         if wire {
             assert!(
@@ -354,6 +443,7 @@ mod tests {
         let w = vec![0f32; DIM];
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let mut tables = Vec::new();
+        let policy = QuorumPolicy::strict();
         for _ in 0..3 {
             let ctx = RoundCtx {
                 client: &client,
@@ -364,6 +454,7 @@ mod tests {
                 round_seed: 0xFEED, // same seed: rounds must be identical
                 threads: 4,
                 wire: None,
+                policy: &policy,
             };
             let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
             tables.push(out.merged.as_sketch().unwrap().table().to_vec());
@@ -391,6 +482,100 @@ mod tests {
     }
 
     #[test]
+    fn strict_policy_fails_on_a_flaky_slot_with_the_lowest_slot_error() {
+        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+        let dataset = SimDataset { num_clients: 100 };
+        let client = SimFlakyClient {
+            inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 },
+            fail: [2usize, 5].into_iter().collect(),
+        };
+        let participants: Vec<usize> = (0..8).collect();
+        let weights = vec![0.125f32; 8];
+        let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
+        let w = vec![0f32; DIM];
+        let policy = QuorumPolicy::strict();
+        let ctx = RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: 1,
+            threads: 4,
+            wire: None,
+            policy: &policy,
+        };
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+        let err = run_round(&ctx, &participants, &weights, &spec, &mut pipeline)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("client 2"), "lowest-slot error first: {err}");
+    }
+
+    #[test]
+    fn quorum_policy_drops_flaky_slots_and_renormalizes() {
+        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+        let dataset = SimDataset { num_clients: 100 };
+        let client = SimFlakyClient {
+            inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 3 },
+            fail: [2usize, 5].into_iter().collect(),
+        };
+        let participants: Vec<usize> = (0..8).collect();
+        let weights = vec![0.125f32; 8];
+        let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
+        let w = vec![0f32; DIM];
+        // Retries are charged (and visible) even though a deterministic
+        // failure never recovers.
+        let policy = QuorumPolicy::new(0.5, 0, 1).unwrap();
+        let run = |threads: usize| {
+            let ctx = RoundCtx {
+                client: &client,
+                artifacts: &artifacts,
+                dataset: &dataset,
+                w: &w,
+                lr: 0.1,
+                round_seed: 1,
+                threads,
+                wire: None,
+                policy: &policy,
+            };
+            let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+            let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
+            assert_eq!(out.membership.arrived(), 6);
+            assert_eq!(out.membership.summary().dropped_slots, 2);
+            assert_eq!(out.membership.summary().retried_slots, 2);
+            assert!(matches!(out.membership.outcome(2), SlotOutcome::Dropped(_)));
+            assert_eq!(out.merged.absorbed(), 6);
+            (out.merged.into_sketch().unwrap().table().to_vec(), out.mean_loss)
+        };
+        let (t1, m1) = run(1);
+        for threads in [3usize, 8] {
+            let (tn, mn) = run(threads);
+            assert_eq!(
+                t1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                tn.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "partial-round merge differs at {threads} threads"
+            );
+            assert_eq!(m1.to_bits(), mn.to_bits());
+        }
+        // Below quorum the round still fails loudly.
+        let policy = QuorumPolicy::new(0.9, 0, 0).unwrap();
+        let ctx = RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.1,
+            round_seed: 1,
+            threads: 4,
+            wire: None,
+            policy: &policy,
+        };
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+        assert!(run_round(&ctx, &participants, &weights, &spec, &mut pipeline).is_err());
+    }
+
+    #[test]
     fn engine_feeds_a_full_aggregator_pipeline() {
         // One end-to-end sim round through a real FetchSGD server.
         use crate::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
@@ -405,6 +590,7 @@ mod tests {
         let sizes: Vec<f32> = participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
         let weights = server.begin_round(&sizes);
         let mut w = vec![0f32; DIM];
+        let policy = QuorumPolicy::strict();
         let ctx = RoundCtx {
             client: &client,
             artifacts: &artifacts,
@@ -414,6 +600,7 @@ mod tests {
             round_seed: 7,
             threads: 4,
             wire: None,
+            policy: &policy,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let out = run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)

@@ -2,6 +2,12 @@
 //! round (paper §3.1: "the aggregator chooses W clients uniformly at
 //! random"). Deterministic given the run seed; a round's participant set
 //! is reproducible independently of execution order.
+//!
+//! Selection produces the *plan* only — `crate::cohort::CohortPlan`
+//! wraps a selected cohort with its dataset sizes, and
+//! `crate::cohort::RoundMembership` tracks which of the planned slots
+//! actually deliver an upload (partial-cohort rounds close at a quorum
+//! of the plan, not necessarily all of it).
 
 use crate::util::rng::{derive_seed, Rng};
 
@@ -25,6 +31,12 @@ impl ClientSelector {
     pub fn select(&self, round: usize) -> Vec<usize> {
         let mut rng = Rng::new(derive_seed(self.seed, round as u64));
         rng.sample_distinct(self.num_clients, self.per_round)
+    }
+
+    /// Clients sampled per round (W) — the planned cohort size every
+    /// `select` returns.
+    pub fn per_round(&self) -> usize {
+        self.per_round
     }
 }
 

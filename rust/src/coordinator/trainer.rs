@@ -26,6 +26,7 @@
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
+use crate::cohort::{CohortPlan, QuorumPolicy};
 use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
 use crate::compression::aggregate::{resolve_parallelism, PipelineOptions, RoundPipeline};
 use crate::compression::fedavg::{FedAvgClient, FedAvgServer};
@@ -68,6 +69,11 @@ pub struct RunSummary {
     /// dense payloads (2 bytes/value).
     pub wire_upload_bytes: u64,
     pub wire_download_bytes: u64,
+    /// Planned slots dropped across the run (faults / deadline, after
+    /// retries) — 0 under the strict default policy.
+    pub dropped_slots: u64,
+    /// Slots that needed at least one retry across the run.
+    pub retried_slots: u64,
     pub ratios: Ratios,
     /// Estimated per-client communication wallclock over the whole run
     /// under the paper's motivating ~1 Mbps asymmetric residential link.
@@ -94,6 +100,10 @@ pub struct Trainer {
     threads: usize,
     /// Resolved wire codec (from cfg.wire; validated at construction).
     wire_codec: Option<&'static dyn wire::Codec>,
+    /// Partial-participation policy (cfg.quorum_fraction /
+    /// round_deadline_ms / max_slot_retries; validated at
+    /// construction). Strict by default.
+    quorum: QuorumPolicy,
     /// The round-aggregation pipeline: shard layout, reusable
     /// accumulator pool, absorb-on-arrival, row-strip parallel reduce.
     pipeline: RoundPipeline,
@@ -123,6 +133,7 @@ impl Trainer {
             Some(name) => Some(wire::codec_by_name(name).context("TrainConfig.wire")?),
             None => None,
         };
+        let quorum = cfg.quorum_policy()?;
         // 0 = inherit the compute parallelism (itself 0 = all cores).
         let reduce = if cfg.reduce_parallelism > 0 { cfg.reduce_parallelism } else { threads };
         let pipeline = RoundPipeline::new(PipelineOptions { reduce_parallelism: reduce });
@@ -142,6 +153,7 @@ impl Trainer {
             dim,
             threads,
             wire_codec,
+            quorum,
             pipeline,
         })
     }
@@ -225,13 +237,12 @@ pub fn build_strategy(
 }
 
 impl Trainer {
-    /// One federated round. Returns the mean client training loss.
+    /// One federated round. Returns the mean client training loss
+    /// (over the arrived participants).
     pub fn step(&mut self, round: usize) -> Result<f64> {
         let lr = self.cfg.lr.at(round, self.cfg.rounds);
-        let participants = self.selector.select(round);
-        let sizes: Vec<f32> =
-            participants.iter().map(|&c| self.dataset.client_size(c) as f32).collect();
-        let weights = self.aggregator.begin_round(&sizes);
+        let plan = CohortPlan::sample(&self.selector, self.dataset.as_ref(), round);
+        let weights = self.aggregator.begin_round(&plan.sizes);
         let spec = self.aggregator.upload_spec();
 
         let round_seed = derive_seed(self.cfg.seed ^ 0xB0B0, round as u64);
@@ -244,14 +255,15 @@ impl Trainer {
             round_seed,
             threads: self.threads,
             wire: self.wire_codec,
+            policy: &self.quorum,
         };
-        let out = engine::run_round(&ctx, &participants, &weights, &spec, &mut self.pipeline)
+        let out = engine::run_round(&ctx, &plan.participants, &weights, &spec, &mut self.pipeline)
             .with_context(|| format!("round {round}"))?;
-        // Slot-order reduction keeps the mean independent of scheduling.
-        let mut loss_sum = 0f64;
-        for &l in &out.losses {
-            loss_sum += l as f64;
-        }
+        let mem = out.membership.summary();
+        // Only clients whose upload made it into the round count for
+        // communication and staleness accounting.
+        let arrived_clients: Vec<usize> =
+            out.membership.arrived_slots().iter().map(|&s| plan.participants[s]).collect();
         let upload_per_client = out.upload_bytes_per_client;
         let update = self.aggregator.finish(&out.merged, lr)?;
         // The server is done with the merged sum: return the
@@ -272,10 +284,10 @@ impl Trainer {
         };
         update.apply(&mut self.w);
         let update_nnz = update.nnz();
-        let stale_bytes = self.stale.round(round as u64, &participants, update_nnz);
+        let stale_bytes = self.stale.round(round as u64, &arrived_clients, update_nnz);
         let down_per_client = update.payload_bytes();
         self.comm.record_round(
-            participants.len(),
+            arrived_clients.len(),
             upload_per_client,
             down_per_client,
             stale_bytes,
@@ -289,8 +301,8 @@ impl Trainer {
         );
         self.comm_time_wifi
             .record_round(&LinkProfile::wifi(), upload_per_client, down_per_client);
-        let mean_loss = loss_sum / participants.len().max(1) as f64;
-        let n = participants.len() as u64;
+        let mean_loss = out.mean_loss;
+        let n = arrived_clients.len() as u64;
         self.logger.log_round(RoundRecord {
             round,
             loss: mean_loss,
@@ -300,12 +312,18 @@ impl Trainer {
             wire_upload_bytes: out.wire_upload_bytes_per_client * n,
             wire_download_bytes: wire_down_per_client * n,
             transport_bytes: 0,
+            participants: mem.participants,
+            dropped_slots: mem.dropped_slots,
+            retried_slots: mem.retried_slots,
             update_nnz,
         });
         if self.cfg.verbose {
             eprintln!(
-                "[{}] round {round:>4} loss {mean_loss:.4} lr {lr:.4} nnz {update_nnz}",
-                self.aggregator.name()
+                "[{}] round {round:>4} loss {mean_loss:.4} lr {lr:.4} nnz {update_nnz} \
+                 cohort {}/{}",
+                self.aggregator.name(),
+                mem.participants,
+                plan.slots()
             );
         }
         Ok(mean_loss)
@@ -369,6 +387,8 @@ impl Trainer {
             download_bytes_stale: self.comm.download_bytes_stale,
             wire_upload_bytes: self.comm.wire_upload_bytes,
             wire_download_bytes: self.comm.wire_download_bytes,
+            dropped_slots: self.logger.rounds.iter().map(|r| r.dropped_slots as u64).sum(),
+            retried_slots: self.logger.rounds.iter().map(|r| r.retried_slots as u64).sum(),
             ratios,
             comm_time_residential_s: self.comm_time_res.total_s,
             comm_time_wifi_s: self.comm_time_wifi.total_s,

@@ -31,6 +31,7 @@
 //! ```
 
 pub mod bench_util;
+pub mod cohort;
 pub mod compression;
 pub mod config;
 pub mod coordinator;

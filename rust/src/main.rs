@@ -30,6 +30,13 @@ fetchsgd — communication-efficient federated learning with sketching
 
 USAGE:
   fetchsgd train --config CFG.json [key=value ...]
+            (quorum knobs, train and serve alike:
+             quorum_fraction=F    close a round once F of the cohort
+                                  arrived, in (0,1]; default 1.0 = all
+             round_deadline_ms=T  drop stragglers T ms into a round
+                                  once quorum is met; 0 = wait forever
+             max_slot_retries=N   re-offer a faulted slot N times
+                                  before dropping it; default 0)
   fetchsgd serve --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
             [--config CFG.json] [key=value ...]
             (serve knobs: serve_read_timeout_s=S serve_accept_timeout_s=S

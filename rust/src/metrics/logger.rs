@@ -29,6 +29,15 @@ pub struct RoundRecord {
     /// round-start, upload, and round-end message including length
     /// prefixes and control headers. 0 for in-process runs.
     pub transport_bytes: u64,
+    /// Slots whose upload was actually absorbed this round — the
+    /// cohort's arrived subset (equal to the planned cohort size unless
+    /// quorum rounds dropped stragglers or faulted peers).
+    pub participants: usize,
+    /// Planned slots excluded from the round (fault / disconnect /
+    /// deadline, after retries).
+    pub dropped_slots: usize,
+    /// Slots that needed at least one retry or reassignment.
+    pub retried_slots: usize,
     pub update_nnz: usize,
 }
 
@@ -90,6 +99,11 @@ impl MetricsLogger {
         if r.transport_bytes > 0 {
             fields.push(("transport_bytes", num(r.transport_bytes as f64)));
         }
+        // Cohort membership: always reported, so participation sweeps
+        // (paper-style 0.1% cohorts) can be read straight off the log.
+        fields.push(("participants", num(r.participants as f64)));
+        fields.push(("dropped_slots", num(r.dropped_slots as f64)));
+        fields.push(("retried_slots", num(r.retried_slots as f64)));
         fields.push(("update_nnz", num(r.update_nnz as f64)));
         self.write_line(obj(fields));
         self.rounds.push(r);
@@ -138,6 +152,9 @@ mod tests {
                 wire_upload_bytes: 132,
                 wire_download_bytes: 70,
                 transport_bytes: 180,
+                participants: 3,
+                dropped_slots: 1,
+                retried_slots: 2,
                 update_nnz: 5,
             });
             m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
@@ -152,6 +169,10 @@ mod tests {
         assert!((v.req_f64("wire_upload_bytes").unwrap() - 132.0).abs() < 1e-9);
         assert!((v.req_f64("wire_download_bytes").unwrap() - 70.0).abs() < 1e-9);
         assert!((v.req_f64("transport_bytes").unwrap() - 180.0).abs() < 1e-9);
+        // cohort membership lands next to the byte accounting
+        assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
+        assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
+        assert!((v.req_f64("retried_slots").unwrap() - 2.0).abs() < 1e-9);
         let v = crate::serialize::json::parse(lines[1]).unwrap();
         assert!((v.req_f64("perplexity").unwrap() - 7.4).abs() < 1e-9);
         std::fs::remove_dir_all(&dir).ok();
@@ -170,6 +191,9 @@ mod tests {
                 wire_upload_bytes: 0,
                 wire_download_bytes: 0,
                 transport_bytes: 0,
+                participants: 1,
+                dropped_slots: 0,
+                retried_slots: 0,
                 update_nnz: 0,
             });
         }

@@ -11,6 +11,10 @@
 //! Clients stay stateless across rounds (FetchSGD's whole point): the
 //! model arrives fresh every `RoundStart` as a lossless dense frame, so
 //! a worker can join, crash, and rejoin without any resync protocol.
+//! Mid-round the server may hand over a `SlotAssign` — the
+//! retry/reassignment of a slot whose original worker faulted — which
+//! is computed against the same round state and uploaded like any
+//! assigned slot.
 
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
@@ -49,6 +53,44 @@ pub struct JoinSummary {
     pub bytes_received: u64,
 }
 
+/// The per-round state a worker keeps between `RoundStart` and
+/// `RoundEnd`, so a mid-round `SlotAssign` (retry/reassignment of
+/// another worker's slot) can be computed without any resync.
+struct RoundState {
+    round: u64,
+    round_seed: u64,
+    lr: f32,
+    codec: &'static dyn crate::wire::Codec,
+    w: Vec<f32>,
+}
+
+/// Compute one slot against the current round state and upload it.
+#[allow(clippy::too_many_arguments)]
+fn run_slot(
+    conn: &mut Conn,
+    client: &dyn ClientCompute,
+    dataset: &dyn FedDataset,
+    artifacts: &TaskArtifacts,
+    st: &RoundState,
+    slot: u32,
+    client_id: u32,
+    sum: &mut JoinSummary,
+) -> Result<()> {
+    let c = client_id as usize;
+    let batch = dataset.client_batch(c, st.round_seed);
+    let stacked = client
+        .wants_stacked_batches()
+        .map(|k| dataset.client_batches_stacked(c, k, st.round_seed));
+    let res = client
+        .client_round(artifacts, &st.w, &batch, c, stacked, st.lr)
+        .with_context(|| format!("client {c} (slot {slot}, round {})", st.round))?;
+    let frame = encode_upload(&res.upload, st.codec);
+    let msg = Msg::Upload { slot, loss: res.loss, frame };
+    sum.bytes_sent += write_msg(conn, &msg.encode())?;
+    sum.uploads += 1;
+    Ok(())
+}
+
 /// Connect to a round server and serve client compute until the server
 /// says `Shutdown`. Errors on protocol violations, aborted rounds, and
 /// dropped connections — a deployment would wrap this in a reconnect
@@ -64,7 +106,7 @@ pub fn join(
     conn.set_timeouts(opts.read_timeout, opts.read_timeout)?;
     let hello = write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode())?;
     let mut sum = JoinSummary { bytes_sent: hello, ..Default::default() };
-    let stacked_k = client.wants_stacked_batches();
+    let mut current: Option<RoundState> = None;
     loop {
         let (bytes, n) = read_msg(&mut conn, opts.max_msg).context("waiting for server")?;
         sum.bytes_received += n;
@@ -72,19 +114,17 @@ pub fn join(
             Msg::RoundStart { round, round_seed, lr, codec_id, assignments, weights_frame } => {
                 let codec = codec_by_id(codec_id).context("round-start codec")?;
                 let w = decode_dense_frame(&weights_frame).context("round-start weights")?;
-                for (slot, client_id) in assignments {
-                    let c = client_id as usize;
-                    let batch = dataset.client_batch(c, round_seed);
-                    let stacked =
-                        stacked_k.map(|k| dataset.client_batches_stacked(c, k, round_seed));
-                    let res = client
-                        .client_round(artifacts, &w, &batch, c, stacked, lr)
-                        .with_context(|| format!("client {c} (slot {slot}, round {round})"))?;
-                    let frame = encode_upload(&res.upload, codec);
-                    let msg = Msg::Upload { slot, loss: res.loss, frame };
-                    sum.bytes_sent += write_msg(&mut conn, &msg.encode())?;
-                    sum.uploads += 1;
+                let st = RoundState { round, round_seed, lr, codec, w };
+                for (slot, cid) in assignments {
+                    run_slot(&mut conn, client, dataset, artifacts, &st, slot, cid, &mut sum)?;
                 }
+                current = Some(st);
+            }
+            Msg::SlotAssign { slot, client: client_id } => {
+                let st = current
+                    .as_ref()
+                    .context("slot-assign before any round-start on this connection")?;
+                run_slot(&mut conn, client, dataset, artifacts, st, slot, client_id, &mut sum)?;
             }
             Msg::RoundEnd { round, update_frame } => {
                 // Validate the broadcast like any deployment would; the

@@ -49,6 +49,17 @@
 //! server drops the round's connections, keeps its scratch pool, and
 //! is immediately reusable for the next round. Enforced by
 //! `rust/tests/transport_faults.rs`.
+//!
+//! ## Partial-cohort rounds
+//!
+//! With a tolerant `cohort::QuorumPolicy` (`quorum_fraction` /
+//! `round_deadline_ms` / `max_slot_retries`), a fault no longer aborts
+//! the round: the lost worker's slots are reassigned to healthy
+//! connections mid-round (`SlotAssign`), stragglers past the deadline
+//! are dropped, and the round closes at quorum with weights
+//! renormalized over the actual participants — FetchSGD's sparse-
+//! participation story served over a real socket. Enforced by
+//! `rust/tests/cohort_quorum.rs` and `transport_straggler.rs`.
 
 pub mod client;
 pub mod framing;

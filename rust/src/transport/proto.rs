@@ -14,16 +14,18 @@
 //! | 4   | RoundEnd    | `round u64, update frame…`                              |
 //! | 5   | Abort       | `utf-8 reason…`                                         |
 //! | 6   | Shutdown    | (empty)                                                 |
+//! | 7   | SlotAssign  | `slot u32, client u32`                                  |
 //!
 //! Versioning: [`PROTO_VERSION`] is exchanged in `Hello` and bumped on
-//! any change to this table; servers drop peers speaking another
-//! version. The `FSGW` frame grammar versions independently (its own
-//! header byte).
+//! any change to this table (v2 added `SlotAssign`, the mid-round
+//! retry/reassignment of a faulted worker's slot); servers drop peers
+//! speaking another version. The `FSGW` frame grammar versions
+//! independently (its own header byte).
 
 use anyhow::{bail, Context, Result};
 
 /// Transport protocol version (`Hello` handshake).
-pub const PROTO_VERSION: u8 = 1;
+pub const PROTO_VERSION: u8 = 2;
 
 const TAG_HELLO: u8 = 1;
 const TAG_ROUND_START: u8 = 2;
@@ -31,6 +33,7 @@ const TAG_UPLOAD: u8 = 3;
 const TAG_ROUND_END: u8 = 4;
 const TAG_ABORT: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_SLOT_ASSIGN: u8 = 7;
 
 /// One transport control message.
 pub enum Msg {
@@ -57,6 +60,12 @@ pub enum Msg {
     Abort { reason: String },
     /// Server → client: training is over, disconnect cleanly.
     Shutdown,
+    /// Server → client, mid-round: compute one additional slot — the
+    /// retry/reassignment of a slot whose original worker faulted or
+    /// disconnected. Uses the most recent `RoundStart`'s weights,
+    /// round seed, lr, and codec; the client answers with a normal
+    /// `Upload` for the slot.
+    SlotAssign { slot: u32, client: u32 },
 }
 
 impl Msg {
@@ -69,6 +78,7 @@ impl Msg {
             Msg::RoundEnd { .. } => "round-end",
             Msg::Abort { .. } => "abort",
             Msg::Shutdown => "shutdown",
+            Msg::SlotAssign { .. } => "slot-assign",
         }
     }
 
@@ -112,6 +122,13 @@ impl Msg {
                 out
             }
             Msg::Shutdown => vec![TAG_SHUTDOWN],
+            Msg::SlotAssign { slot, client } => {
+                let mut out = Vec::with_capacity(9);
+                out.push(TAG_SLOT_ASSIGN);
+                out.extend_from_slice(&slot.to_le_bytes());
+                out.extend_from_slice(&client.to_le_bytes());
+                out
+            }
         }
     }
 
@@ -189,6 +206,15 @@ impl Msg {
                 }
                 Ok(Msg::Shutdown)
             }
+            TAG_SLOT_ASSIGN => {
+                if bytes.len() != 9 {
+                    bail!("slot-assign message must be exactly 9 bytes, got {}", bytes.len());
+                }
+                Ok(Msg::SlotAssign {
+                    slot: u32::from_le_bytes(bytes[1..5].try_into().unwrap()),
+                    client: u32::from_le_bytes(bytes[5..9].try_into().unwrap()),
+                })
+            }
             other => bail!("unknown transport message tag {other}"),
         }
     }
@@ -243,6 +269,10 @@ mod tests {
             _ => panic!(),
         }
         assert!(matches!(roundtrip(Msg::Shutdown), Msg::Shutdown));
+        match roundtrip(Msg::SlotAssign { slot: 9, client: 1234 }) {
+            Msg::SlotAssign { slot, client } => assert_eq!((slot, client), (9, 1234)),
+            _ => panic!(),
+        }
     }
 
     #[test]
@@ -253,6 +283,8 @@ mod tests {
         assert!(Msg::decode(vec![TAG_UPLOAD, 0, 0, 0, 0]).is_err());
         assert!(Msg::decode(vec![TAG_ROUND_END, 1, 2]).is_err());
         assert!(Msg::decode(vec![TAG_SHUTDOWN, 0]).is_err());
+        assert!(Msg::decode(vec![TAG_SLOT_ASSIGN, 0, 0, 0]).is_err());
+        assert!(Msg::decode(vec![TAG_SLOT_ASSIGN; 11]).is_err());
         // round-start whose assignment count lies about the length
         let mut bad = Msg::RoundStart {
             round: 0,

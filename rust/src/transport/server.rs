@@ -15,13 +15,24 @@
 //!   streaming into the pipeline's `RoundInFlight` → row-strip reduce →
 //!   finish → RoundEnd broadcast → apply the *decoded* update`,
 //!   mirroring the trainer's wire mode exactly.
-//! - Any fault — bad frame, bad slot, stalled peer (read deadline),
-//!   oversize prefix, disconnect — fails the round loudly: connections
-//!   are dropped (workers get a best-effort `Abort`), the partially
-//!   filled accumulators are discarded, and the server is immediately
-//!   ready for the next round with fresh connections.
+//! - Under the default strict [`QuorumPolicy`], any fault — bad frame,
+//!   bad slot, stalled peer (read deadline), oversize prefix,
+//!   disconnect — fails the round loudly: connections are dropped
+//!   (workers get a best-effort `Abort`), the partially filled
+//!   accumulators are discarded, and the server is immediately ready
+//!   for the next round with fresh connections.
+//! - Under a tolerant quorum policy the round *survives* faults: a
+//!   faulted or disconnected worker's unserved slots are re-offered to
+//!   healthy connections (`SlotAssign`, up to `max_slot_retries` per
+//!   slot), a straggler past the round deadline is dropped rather than
+//!   aborting the round, and once every slot is settled the round
+//!   closes at quorum via `RoundPipeline::finalize_partial` — the
+//!   aggregation weights renormalized over the slots that actually
+//!   arrived, bitwise identical to any other driver ending with the
+//!   same membership set.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
 use std::net::TcpListener;
 #[cfg(unix)]
 use std::os::unix::net::UnixListener;
@@ -31,6 +42,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::ServerAggregator;
 use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
@@ -48,7 +60,8 @@ pub struct ServeOptions {
     /// always lossless `f32le` so transport never perturbs the model).
     pub codec: &'static dyn Codec,
     /// Per-connection read/write deadline. A peer that stalls longer
-    /// than this mid-round fails the round instead of wedging it.
+    /// than this mid-round faults its connection instead of wedging the
+    /// round.
     pub read_timeout: Duration,
     /// How long to wait for the worker pool to fill at round start.
     pub accept_timeout: Duration,
@@ -59,6 +72,14 @@ pub struct ServeOptions {
     /// reduction (0 = all cores). Purely a throughput knob — the merged
     /// bits are identical at any value.
     pub reduce_parallelism: usize,
+    /// Partial-participation policy. [`QuorumPolicy::strict`] (the
+    /// default) keeps the pre-cohort behavior: any fault fails the
+    /// round. A tolerant policy re-offers a faulted or disconnected
+    /// worker's slots to healthy connections (`SlotAssign`, up to
+    /// `max_slot_retries` per slot), drops stragglers once the round
+    /// deadline fires, and closes the round at quorum with the
+    /// aggregation weights renormalized over the arrived subset.
+    pub quorum: QuorumPolicy,
 }
 
 impl Default for ServeOptions {
@@ -70,6 +91,7 @@ impl Default for ServeOptions {
             accept_timeout: Duration::from_secs(30),
             max_msg: DEFAULT_MAX_MSG_BYTES,
             reduce_parallelism: 0,
+            quorum: QuorumPolicy::strict(),
         }
     }
 }
@@ -90,16 +112,27 @@ pub struct RoundParams<'a> {
 
 /// What one transport round produced.
 pub struct RoundStats {
-    /// Per-slot client training loss, in slot order.
+    /// Per-slot client training loss, in slot order (0.0 for dropped
+    /// slots).
     pub losses: Vec<f32>,
-    /// Mean loss, reduced in slot order (scheduling-invariant).
+    /// Mean loss over the arrived slots, reduced in slot order
+    /// (scheduling-invariant).
     pub mean_loss: f64,
+    /// Slots whose upload was absorbed this round.
+    pub participants: usize,
+    /// Planned slots dropped (fault / disconnect / deadline, after
+    /// retries).
+    pub dropped_slots: usize,
+    /// Slots that needed at least one retry or reassignment.
+    pub retried_slots: usize,
     pub update_nnz: usize,
-    /// Idealized (footnote-5) payload bytes of slot 0's upload.
+    /// Idealized (footnote-5) payload bytes of one upload (sampled from
+    /// the lowest delivered slot — all of a strategy's uploads are the
+    /// same size).
     pub upload_bytes_per_client: u64,
     /// Idealized payload bytes of the broadcast update.
     pub download_bytes_per_client: u64,
-    /// Measured `FSGW` frame bytes of slot 0's upload.
+    /// Measured `FSGW` frame bytes of one upload.
     pub wire_upload_bytes_per_client: u64,
     /// Measured `FSGW` frame bytes of the broadcast update.
     pub wire_download_bytes_per_client: u64,
@@ -283,6 +316,14 @@ impl RoundServer {
         }
         self.ensure_workers()?;
         let nconns = self.conns.len();
+        let policy = self.opts.quorum.clone();
+        let deadline = policy.round_deadline().map(|d| Instant::now() + d);
+        // A previous round's deadline may have left a shortened socket
+        // timeout on a surviving connection; restore the configured one.
+        for conn in &self.conns {
+            let t = self.opts.read_timeout;
+            let _ = conn.set_timeouts(Some(t), Some(t));
+        }
         let lambdas = agg.begin_round(p.client_sizes);
         let spec = agg.upload_spec();
         self.absorbed.store(0, Ordering::SeqCst);
@@ -330,7 +371,13 @@ impl RoundServer {
         // Concurrent upload readers: one thread per connection, all
         // streaming into one ordered in-flight round. Absorption
         // happens as frames arrive — the only synchronization is the
-        // round lock, never a cohort barrier.
+        // round lock, never a cohort barrier. Under a tolerant quorum
+        // policy the readers double as the retry service: a faulted
+        // connection's unserved slots land in a shared orphan queue,
+        // and healthy readers that finish their own assignments pull
+        // from it, re-offering each slot over their own connection
+        // (`SlotAssign`) until it arrives, its retry budget is spent,
+        // or the round deadline fires.
         let absorber = match self.pipeline.begin(&spec, lambdas) {
             Ok(a) => Mutex::new(a),
             Err(e) => {
@@ -339,19 +386,67 @@ impl RoundServer {
             }
         };
         let failed = AtomicBool::new(false);
+        // Strict policy = pre-cohort fail-fast: one fault dooms the
+        // round, so other readers stop at their next message boundary.
+        let fail_fast = policy.is_strict();
+        let max_retries = policy.max_slot_retries();
         let probe = Arc::clone(&self.absorbed);
         let max_msg = self.opts.max_msg;
+        let read_timeout = self.opts.read_timeout;
+
+        /// Slot-resolution ledger shared by all readers: every planned
+        /// slot ends up arrived (a reader's `pairs`) or in `dropped`.
+        struct RetryState {
+            /// Orphaned (slot, client) pairs awaiting reassignment.
+            queue: VecDeque<(u32, u32)>,
+            /// Retries charged per slot.
+            retries: Vec<usize>,
+            dropped: Vec<(u32, DropReason)>,
+            /// Slots not yet arrived or dropped.
+            outstanding: usize,
+        }
+        let retry = Mutex::new(RetryState {
+            queue: VecDeque::new(),
+            retries: vec![0; slots],
+            dropped: Vec::new(),
+            outstanding: slots,
+        });
+        // Resolve a faulted connection's unserved slots: queue for
+        // reassignment while budget and clock allow, drop otherwise.
+        let orphan = |rest: &[(u32, u32)], reason: DropReason| {
+            let mut st = retry.lock().expect("retry state poisoned");
+            let past_deadline = deadline.is_some_and(|dl| Instant::now() >= dl);
+            for &(slot, client) in rest {
+                if reason != DropReason::Deadline
+                    && !past_deadline
+                    && st.retries[slot as usize] < max_retries
+                {
+                    st.queue.push_back((slot, client));
+                } else {
+                    st.dropped.push((slot, reason));
+                    st.outstanding -= 1;
+                }
+            }
+        };
 
         struct ConnRead {
-            /// (slot, loss) in this connection's upload order.
+            /// (slot, loss) in this connection's upload order
+            /// (reassigned slots included).
             pairs: Vec<(usize, f32)>,
             bytes_in: u64,
-            /// (frame bytes, idealized payload bytes) of slot 0, if
-            /// this connection carried it.
-            slot0: Option<(u64, u64)>,
+            /// `SlotAssign` bytes written during the retry phase.
+            bytes_out: u64,
+            /// (slot, frame bytes, idealized payload bytes) of the
+            /// lowest slot this connection carried — all of a
+            /// strategy's uploads are the same size, and sampling the
+            /// lowest *delivered* slot keeps the accounting real when
+            /// slot 0 drops out of a quorum round.
+            byte_sample: Option<(usize, u64, u64)>,
+            /// First error this connection hit (the connection is dead).
+            err: Option<anyhow::Error>,
         }
 
-        let results: Vec<Result<ConnRead>> = std::thread::scope(|s| {
+        let results: Vec<ConnRead> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .conns
                 .iter_mut()
@@ -360,35 +455,133 @@ impl RoundServer {
                     let absorber = &absorber;
                     let failed = &failed;
                     let probe = &probe;
-                    s.spawn(move || -> Result<ConnRead> {
+                    let retry = &retry;
+                    let orphan = &orphan;
+                    s.spawn(move || -> ConnRead {
                         let mut out = ConnRead {
                             pairs: Vec::with_capacity(assigned.len()),
                             bytes_in: 0,
-                            slot0: None,
+                            bytes_out: 0,
+                            byte_sample: None,
+                            err: None,
                         };
-                        for &(expect_slot, client) in assigned.iter() {
-                            if failed.load(Ordering::SeqCst) {
-                                bail!("round already failed on another connection");
+                        // Bound the next read by the round deadline (if
+                        // any) so a straggler read wakes exactly when
+                        // the round must close.
+                        let read_bounded = |conn: &mut Conn, expect_slot: u32, want_ideal: bool| {
+                            if let Some(dl) = deadline {
+                                let rem = dl.saturating_duration_since(Instant::now());
+                                if rem.is_zero() {
+                                    bail!("round deadline expired awaiting slot {expect_slot}");
+                                }
+                                let t = read_timeout.min(rem);
+                                let _ = conn.set_timeouts(Some(t), Some(t));
                             }
-                            let step =
-                                read_one_upload(conn, expect_slot, max_msg, absorber, probe);
-                            match step {
+                            read_one_upload(conn, expect_slot, max_msg, want_ideal, absorber, probe)
+                        };
+                        // Phase 1: this connection's own assignments.
+                        for (i, &(expect_slot, client)) in assigned.iter().enumerate() {
+                            if fail_fast && failed.load(Ordering::SeqCst) {
+                                out.err =
+                                    Some(anyhow!("round already failed on another connection"));
+                                orphan(&assigned[i..], DropReason::Disconnected);
+                                return out;
+                            }
+                            let slot = expect_slot as usize;
+                            let want = out.byte_sample.map_or(true, |(s, _, _)| slot < s);
+                            match read_bounded(&mut *conn, expect_slot, want) {
                                 Ok(up) => {
                                     out.bytes_in += up.bytes_in;
-                                    if expect_slot == 0 {
-                                        out.slot0 = Some((up.frame_bytes, up.ideal_bytes));
+                                    if want {
+                                        out.byte_sample = Some((
+                                            expect_slot as usize,
+                                            up.frame_bytes,
+                                            up.ideal_bytes,
+                                        ));
                                     }
                                     out.pairs.push((expect_slot as usize, up.loss));
+                                    retry.lock().expect("retry state poisoned").outstanding -= 1;
                                 }
                                 Err(e) => {
                                     failed.store(true, Ordering::SeqCst);
-                                    return Err(e).with_context(|| {
-                                        format!("upload from client {client} (slot {expect_slot})")
-                                    });
+                                    let at_deadline =
+                                        deadline.is_some_and(|dl| Instant::now() >= dl);
+                                    let reason = if at_deadline {
+                                        DropReason::Deadline
+                                    } else {
+                                        DropReason::Disconnected
+                                    };
+                                    orphan(&assigned[i..], reason);
+                                    out.err = Some(e.context(format!(
+                                        "upload from client {client} (slot {expect_slot})"
+                                    )));
+                                    return out;
                                 }
                             }
                         }
-                        Ok(out)
+                        // Phase 2: serve the orphan queue until every
+                        // slot is resolved. Only healthy connections
+                        // get here.
+                        loop {
+                            let job = {
+                                let mut st = retry.lock().expect("retry state poisoned");
+                                if st.outstanding == 0 {
+                                    break;
+                                }
+                                match st.queue.pop_front() {
+                                    Some((slot, client)) => {
+                                        if deadline.is_some_and(|dl| Instant::now() >= dl) {
+                                            st.dropped.push((slot, DropReason::Deadline));
+                                            st.outstanding -= 1;
+                                            continue;
+                                        }
+                                        st.retries[slot as usize] += 1;
+                                        Some((slot, client))
+                                    }
+                                    None => None,
+                                }
+                            };
+                            let Some((slot, client)) = job else {
+                                if deadline.is_some_and(|dl| Instant::now() >= dl) {
+                                    // Outstanding slots belong to
+                                    // stragglers; their own readers
+                                    // resolve them at the deadline.
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_millis(2));
+                                continue;
+                            };
+                            let assign = Msg::SlotAssign { slot, client }.encode();
+                            let want =
+                                out.byte_sample.map_or(true, |(s, _, _)| (slot as usize) < s);
+                            let sent = match write_msg(&mut *conn, &assign) {
+                                Ok(n) => read_bounded(&mut *conn, slot, want).map(|up| (n, up)),
+                                Err(e) => Err(e),
+                            };
+                            match sent {
+                                Ok((n, up)) => {
+                                    out.bytes_out += n;
+                                    out.bytes_in += up.bytes_in;
+                                    if want {
+                                        out.byte_sample =
+                                            Some((slot as usize, up.frame_bytes, up.ideal_bytes));
+                                    }
+                                    out.pairs.push((slot as usize, up.loss));
+                                    retry.lock().expect("retry state poisoned").outstanding -= 1;
+                                }
+                                Err(e) => {
+                                    // This connection is dead too; the
+                                    // orphan goes back if budget
+                                    // remains.
+                                    orphan(&[(slot, client)], DropReason::Disconnected);
+                                    out.err = Some(e.context(format!(
+                                        "reassigned upload from client {client} (slot {slot})"
+                                    )));
+                                    return out;
+                                }
+                            }
+                        }
+                        out
                     })
                 })
                 .collect();
@@ -398,28 +591,98 @@ impl RoundServer {
                 .collect()
         });
 
-        let mut conn_reads = Vec::with_capacity(nconns);
-        let mut first_err = None;
-        for r in results {
-            match r {
-                Ok(cr) => conn_reads.push(cr),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
+        // Sweep: orphans left queued because no healthy connection
+        // survived to serve them.
+        drop(orphan);
+        {
+            let mut st = retry.lock().expect("retry state poisoned");
+            while let Some((slot, _)) = st.queue.pop_front() {
+                st.dropped.push((slot, DropReason::Disconnected));
+                st.outstanding -= 1;
+            }
+            debug_assert_eq!(st.outstanding, 0);
+        }
+        let retry = retry.into_inner().expect("retry state poisoned");
+        let absorber = absorber.into_inner().expect("absorber poisoned");
+
+        // Settle the membership ledger.
+        let mut membership = RoundMembership::new(slots, policy.clone())?;
+        let mut losses = vec![0f32; slots];
+        let mut wire_up0 = 0u64;
+        let mut ideal_up0 = 0u64;
+        let mut sample_slot = usize::MAX;
+        let mut transport_in = 0u64;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut dead = vec![false; nconns];
+        for (i, cr) in results.into_iter().enumerate() {
+            transport_in += cr.bytes_in;
+            transport_bytes += cr.bytes_out;
+            if let Some((s, frame_bytes, ideal_bytes)) = cr.byte_sample {
+                if s < sample_slot {
+                    sample_slot = s;
+                    wire_up0 = frame_bytes;
+                    ideal_up0 = ideal_bytes;
+                }
+            }
+            for (slot, loss) in cr.pairs {
+                for _ in 0..retry.retries[slot] {
+                    membership.record_retry(slot);
+                }
+                membership.record_arrival(slot);
+                losses[slot] = loss;
+            }
+            if let Some(e) = cr.err {
+                dead[i] = true;
+                if first_err.is_none() {
+                    first_err = Some(e);
                 }
             }
         }
-        let absorber = absorber.into_inner().expect("absorber poisoned");
-        if let Some(e) = first_err {
+        for (slot, reason) in retry.dropped {
+            let slot = slot as usize;
+            for _ in 0..retry.retries[slot] {
+                membership.record_retry(slot);
+            }
+            membership.record_drop(slot, reason);
+        }
+        debug_assert!(membership.is_settled());
+        transport_bytes += transport_in;
+
+        if !membership.quorum_met() {
             // Keep the shard allocations: a faulted round must not cost
             // the next one a realloc of up to MAX_SHARDS tables.
             self.pipeline.abort(absorber);
-            self.abort_round("upload stream failed");
-            return Err(e.context(format!("round {}", p.round)));
+            self.abort_round("quorum not met");
+            let (arrived, target) = (membership.arrived(), membership.quorum_target());
+            let e = first_err.unwrap_or_else(|| {
+                anyhow!("round deadline expired with {arrived} of {slots} uploads")
+            });
+            return Err(e.context(format!(
+                "round {}: {arrived} of {slots} uploads arrived (quorum target {target})",
+                p.round
+            )));
+        }
+        // The round closes with whoever arrived. Dead connections are
+        // dropped (their workers reconnect via ensure_workers next
+        // round); survivors carry the broadcast.
+        if dead.iter().any(|&d| d) {
+            let abort = Msg::Abort { reason: "connection faulted or straggled".into() }.encode();
+            let mut keep = dead.iter().map(|&d| !d);
+            for (conn, is_dead) in self.conns.iter_mut().zip(dead.iter()) {
+                if *is_dead {
+                    let _ = write_msg(conn, &abort);
+                    conn.shutdown();
+                }
+            }
+            self.conns.retain(|_| keep.next().unwrap());
         }
 
-        let merged = match self.pipeline.finish(absorber) {
+        let merged = if membership.is_full() {
+            self.pipeline.finish(absorber)
+        } else {
+            self.pipeline.finalize_partial(absorber, &membership)
+        };
+        let merged = match merged {
             Ok(m) => m,
             Err(e) => {
                 self.abort_round("merge failed");
@@ -466,26 +729,13 @@ impl RoundServer {
         let decoded = decode_update(&update_frame).context("decoding own broadcast")?;
         decoded.apply(w);
 
-        let mut losses = vec![0f32; slots];
-        let mut wire_up0 = 0u64;
-        let mut ideal_up0 = 0u64;
-        for cr in conn_reads {
-            transport_bytes += cr.bytes_in;
-            if let Some((frame_bytes, ideal_bytes)) = cr.slot0 {
-                wire_up0 = frame_bytes;
-                ideal_up0 = ideal_bytes;
-            }
-            for (slot, loss) in cr.pairs {
-                losses[slot] = loss;
-            }
-        }
-        let mut loss_sum = 0f64;
-        for &l in &losses {
-            loss_sum += l as f64;
-        }
+        let mem = membership.summary();
         Ok(RoundStats {
-            mean_loss: loss_sum / slots as f64,
+            mean_loss: membership.mean_loss_over_arrived(&losses),
             losses,
+            participants: mem.participants,
+            dropped_slots: mem.dropped_slots,
+            retried_slots: mem.retried_slots,
             update_nnz,
             upload_bytes_per_client: ideal_up0,
             download_bytes_per_client,
@@ -548,6 +798,7 @@ fn read_one_upload(
     conn: &mut Conn,
     expect_slot: u32,
     max_msg: usize,
+    want_ideal: bool,
     absorber: &Mutex<RoundInFlight>,
     probe: &AtomicUsize,
 ) -> Result<UploadRead> {
@@ -560,11 +811,11 @@ fn read_one_upload(
         bail!("upload for slot {slot}, but slot {expect_slot} is next on this connection");
     }
     let frame_bytes = frame.len() as u64;
-    // Byte accounting samples slot 0 only (the engine's convention —
-    // all of a strategy's uploads are the same size); don't pay an
-    // extra full parse for the slots whose number would be discarded.
-    let ideal_bytes =
-        if expect_slot == 0 { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
+    // Byte accounting samples one upload per round (all of a strategy's
+    // uploads are the same size); the caller asks for the idealized
+    // number only when this read improves its lowest-slot sample, so
+    // the other slots don't pay an extra full parse.
+    let ideal_bytes = if want_ideal { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
     let mut ab = absorber.lock().expect("absorber lock poisoned");
     ab.offer_frame(slot as usize, frame)?;
     probe.store(ab.absorbed(), Ordering::SeqCst);
@@ -613,6 +864,10 @@ pub struct ServeSummary {
     /// Measured on-the-wire totals including framing and control
     /// messages — what the sockets actually carried.
     pub transport_bytes: u64,
+    /// Planned slots dropped across the run (quorum rounds).
+    pub dropped_slots: u64,
+    /// Slots that needed at least one retry/reassignment.
+    pub retried_slots: u64,
 }
 
 /// Validate a configured serve deadline: finite, strictly positive,
@@ -673,6 +928,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         )?,
         max_msg: crate::transport::effective_max_msg(cfg, artifacts.manifest.dim)?,
         reduce_parallelism: cfg.reduce_parallelism,
+        quorum: cfg.quorum_policy()?,
     };
     let mut server = RoundServer::bind(&ep, opts)?;
     eprintln!(
@@ -683,11 +939,11 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
     );
     let mut comm = CommStats::default();
     let mut transport_bytes = 0u64;
+    let mut dropped_slots = 0u64;
+    let mut retried_slots = 0u64;
     for round in 0..cfg.rounds {
         let lr = cfg.lr.at(round, cfg.rounds);
-        let participants = selector.select(round);
-        let sizes: Vec<f32> =
-            participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+        let plan = crate::cohort::CohortPlan::sample(&selector, dataset.as_ref(), round);
         // Same derivation as Trainer::step — a served run replays the
         // exact in-process trajectory for the same config.
         let round_seed = derive_seed(cfg.seed ^ 0xB0B0, round as u64);
@@ -695,22 +951,24 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             round: round as u64,
             round_seed,
             lr,
-            participants: &participants,
-            client_sizes: &sizes,
+            participants: &plan.participants,
+            client_sizes: &plan.sizes,
         };
         let stats = server
             .run_round(agg.as_mut(), &params, &mut w)
             .with_context(|| format!("round {round}"))?;
         transport_bytes += stats.transport_bytes;
+        dropped_slots += stats.dropped_slots as u64;
+        retried_slots += stats.retried_slots as u64;
         comm.record_round(
-            participants.len(),
+            stats.participants,
             stats.upload_bytes_per_client,
             stats.download_bytes_per_client,
             0,
             stats.wire_upload_bytes_per_client,
             stats.wire_download_bytes_per_client,
         );
-        let n = participants.len() as u64;
+        let n = stats.participants as u64;
         logger.log_round(RoundRecord {
             round,
             loss: stats.mean_loss,
@@ -720,12 +978,19 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             wire_upload_bytes: stats.wire_upload_bytes_per_client * n,
             wire_download_bytes: stats.wire_download_bytes_per_client * n,
             transport_bytes: stats.transport_bytes,
+            participants: stats.participants,
+            dropped_slots: stats.dropped_slots,
+            retried_slots: stats.retried_slots,
             update_nnz: stats.update_nnz,
         });
         if cfg.verbose {
             eprintln!(
-                "[serve] round {round:>4} loss {:.4} lr {lr:.4} nnz {} wire {} B",
-                stats.mean_loss, stats.update_nnz, stats.transport_bytes
+                "[serve] round {round:>4} loss {:.4} lr {lr:.4} nnz {} wire {} B cohort {}/{}",
+                stats.mean_loss,
+                stats.update_nnz,
+                stats.transport_bytes,
+                stats.participants,
+                plan.slots()
             );
         }
     }
@@ -740,5 +1005,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         wire_upload_bytes: comm.wire_upload_bytes,
         wire_download_bytes: comm.wire_download_bytes,
         transport_bytes,
+        dropped_slots,
+        retried_slots,
     })
 }

@@ -1,0 +1,449 @@
+//! Cohort membership acceptance tests: quorum rounds, slot
+//! retry/reassignment, and participation-aware aggregation.
+//!
+//! The contract under test: *which* slots drop may depend on faults and
+//! wall-clock, but conditioned on the final membership set the round's
+//! renormalized merge is a pure function of that set — bitwise
+//! identical across parallelism {1, 3, 8} in-process, and across the
+//! process boundary (a served run over UDS/TCP vs the in-process
+//! engine ending with the same surviving membership).
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use fetchsgd::cohort::{QuorumPolicy, SlotOutcome};
+use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::sim::{
+    sim_artifacts, synth_grad, SimDataset, SimFlakyClient, SimSketchClient,
+};
+use fetchsgd::compression::{ClientUpload, ServerAggregator};
+use fetchsgd::coordinator::{engine, ClientSelector};
+use fetchsgd::metrics::{MetricsLogger, RoundRecord};
+use fetchsgd::sketch::CountSketch;
+use fetchsgd::transport::framing::{read_msg, write_msg};
+use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
+use fetchsgd::transport::{Conn, Endpoint, RoundParams, RoundServer, ServeOptions};
+use fetchsgd::util::rng::derive_seed;
+use fetchsgd::wire::{encode_upload, F32LE};
+
+const DIM: usize = 20_000;
+const ROWS: usize = 5;
+const COLS: usize = 1024;
+const SEED: u64 = 0xC0;
+const HEAVY: usize = 4;
+const LR: f32 = 0.05;
+const MAX_MSG: usize = 64 << 20;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn make_server() -> FetchSgdServer {
+    FetchSgdServer::new(ROWS, COLS, SEED, DIM, 32, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
+        .unwrap()
+}
+
+/// Multi-round in-process loop with a flaky client under a quorum
+/// policy: returns (final weights, per-round membership fingerprints).
+fn flaky_train(
+    fail: &BTreeSet<usize>,
+    policy: &QuorumPolicy,
+    threads: usize,
+    rounds: usize,
+    cohort: usize,
+) -> (Vec<f32>, Vec<(Vec<usize>, usize, usize)>) {
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let selector = ClientSelector::new(200, cohort, SEED);
+    let client = SimFlakyClient {
+        inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: HEAVY },
+        fail: fail.clone(),
+    };
+    let mut server = make_server();
+    let mut w = vec![0f32; DIM];
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+    let mut memberships = Vec::new();
+    for round in 0..rounds {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client: &client,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: LR,
+            round_seed: derive_seed(SEED, round as u64),
+            threads,
+            wire: None,
+            policy,
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
+                .unwrap();
+        let s = out.membership.summary();
+        memberships.push((out.membership.arrived_slots(), s.dropped_slots, s.retried_slots));
+        let update = server.finish(&out.merged, LR).unwrap();
+        pipeline.recycle(out.merged);
+        update.apply(&mut w);
+    }
+    (w, memberships)
+}
+
+/// Same final membership set ⇒ bitwise-identical weights at
+/// parallelism {1, 3, 8}, across a multi-round run where every round
+/// drops the flaky subset and renormalizes over the survivors.
+#[test]
+fn quorum_rounds_are_bitwise_identical_across_parallelism() {
+    // ~14% of the population always faults.
+    let fail: BTreeSet<usize> = (0..200).filter(|c| c % 7 == 0).collect();
+    let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+    let (w1, m1) = flaky_train(&fail, &policy, 1, 3, 24);
+    assert!(w1.iter().any(|&x| x != 0.0), "training must move the model");
+    assert!(
+        m1.iter().any(|(_, dropped, _)| *dropped > 0),
+        "the flaky subset must actually drop slots"
+    );
+    for threads in [3usize, 8] {
+        let (wn, mn) = flaky_train(&fail, &policy, threads, 3, 24);
+        assert_eq!(m1, mn, "membership history diverged at {threads} threads");
+        assert_eq!(bits(&w1), bits(&wn), "weights diverged at {threads} threads");
+    }
+}
+
+/// A hand-rolled worker's role sheet, keyed on the *client ids* it is
+/// assigned — never on spawn or accept order, which the listener does
+/// not guarantee. Every worker of a test gets the same sheet, so
+/// whichever connection draws the marked client acts the part.
+struct Roles {
+    /// Disconnect mid-upload (forged length prefix, partial body) when
+    /// reaching this client id's slot.
+    disconnect_on: Option<u32>,
+    /// Withhold this client id's upload until the gate releases (a
+    /// straggler); tolerate every error afterwards.
+    straggle_on: Option<u32>,
+    gate: Option<mpsc::Receiver<()>>,
+}
+
+impl Roles {
+    fn good() -> Roles {
+        Roles { disconnect_on: None, straggle_on: None, gate: None }
+    }
+}
+
+/// One hand-rolled transport worker: mirrors `SimSketchClient` exactly
+/// (synthetic gradient → client-side sketch) so served uploads are
+/// bit-identical to in-process ones. Uploads every assigned slot, then
+/// serves `SlotAssign` reassignments until shutdown.
+fn worker(ep: &Endpoint, roles: Roles) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(&mut conn, MAX_MSG).unwrap();
+    let (seed, assignments) = match Msg::decode(bytes).unwrap() {
+        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
+        _ => panic!("expected round-start"),
+    };
+    let upload = |conn: &mut Conn, slot: u32, client: u32| -> anyhow::Result<u64> {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let sketch = CountSketch::encode(ROWS, COLS, SEED, &g).unwrap();
+        let frame = encode_upload(&ClientUpload::Sketch(sketch), &F32LE);
+        write_msg(conn, &Msg::Upload { slot, loss: 0.5, frame }.encode())
+    };
+    for &(slot, client) in &assignments {
+        if roles.disconnect_on == Some(client) {
+            // Claim a 4096-byte message, deliver 10 bytes, vanish —
+            // the mid-upload disconnect of the acceptance scenario.
+            conn.write_all(&4096u32.to_le_bytes()).unwrap();
+            conn.write_all(&[7u8; 10]).unwrap();
+            conn.flush().unwrap();
+            conn.shutdown();
+            return;
+        }
+        if roles.straggle_on == Some(client) {
+            // Straggler: the server drops us at the round deadline;
+            // everything after the gate is best-effort.
+            if let Some(rx) = &roles.gate {
+                let _ = rx.recv_timeout(Duration::from_secs(30));
+            }
+            let _ = upload(&mut conn, slot, client);
+            return;
+        }
+        upload(&mut conn, slot, client).unwrap();
+    }
+    // Serve reassignments until the server says we're done.
+    loop {
+        let Ok((bytes, _)) = read_msg(&mut conn, MAX_MSG) else { return };
+        match Msg::decode(bytes) {
+            Ok(Msg::SlotAssign { slot, client }) => {
+                upload(&mut conn, slot, client).unwrap();
+            }
+            Ok(Msg::RoundEnd { .. }) => {}
+            _ => return,
+        }
+    }
+}
+
+/// A served round on a real socket with retries=0: a worker that
+/// disconnects drops exactly its slot, the round closes at quorum, and
+/// the weights are bitwise identical to the in-process engine ending
+/// with the same surviving membership — at parallelism 1, 3, and 8.
+#[cfg(unix)]
+#[test]
+fn uds_dropped_slot_matches_in_process_membership() {
+    let path = std::env::temp_dir().join(format!("fsgw_cq_{}.sock", std::process::id()));
+    let ep = Endpoint::Unix(path);
+    let opts = ServeOptions {
+        workers: 4,
+        read_timeout: Duration::from_secs(20),
+        accept_timeout: Duration::from_secs(20),
+        quorum: QuorumPolicy::new(0.5, 0, 0).unwrap(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = make_server();
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = vec![0, 1, 2, 3];
+    let sizes = vec![1.0f32; 4];
+    let round_seed = derive_seed(SEED, 0);
+
+    std::thread::scope(|s| {
+        // Every worker carries the same role sheet — whichever
+        // connection draws client 2's slot vanishes mid-upload.
+        for _ in 0..4 {
+            let ep = actual.clone();
+            s.spawn(move || {
+                worker(
+                    &ep,
+                    Roles { disconnect_on: Some(2), straggle_on: None, gate: None },
+                )
+            });
+        }
+        let params = RoundParams {
+            round: 0,
+            round_seed,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        assert_eq!(stats.participants, 3, "client 2's slot must drop");
+        assert_eq!(stats.dropped_slots, 1);
+        assert_eq!(stats.retried_slots, 0, "no retry budget configured");
+        srv.shutdown();
+    });
+
+    // In-process engine over the same surviving membership set (client
+    // 2 faults deterministically), at several parallelism levels.
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let flaky = SimFlakyClient {
+        inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: HEAVY },
+        fail: [2usize].into_iter().collect(),
+    };
+    let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+    let w0 = vec![0f32; DIM];
+    for threads in [1usize, 3, 8] {
+        let mut server = make_server();
+        let weights = server.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client: &flaky,
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w0,
+            lr: LR,
+            round_seed,
+            threads,
+            wire: None,
+            policy: &policy,
+        };
+        let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
+                .unwrap();
+        assert_eq!(out.membership.arrived_slots(), vec![0, 1, 3]);
+        let update = server.finish(&out.merged, LR).unwrap();
+        let mut w_ref = vec![0f32; DIM];
+        update.apply(&mut w_ref);
+        assert_eq!(
+            bits(&w),
+            bits(&w_ref),
+            "served partial round diverges from in-process (threads {threads})"
+        );
+    }
+}
+
+/// The issue's acceptance scenario, end to end: one worker disconnects
+/// mid-upload (slot reassigned to a healthy connection — `Retried`),
+/// one straggler holds its upload past the round deadline (`Dropped`),
+/// and the round still completes at `quorum_fraction = 0.5` with
+/// renormalized weights bitwise identical to an in-process run over
+/// the same surviving membership set — with the dropped/retried slots
+/// visible in JSONL metrics.
+#[test]
+fn disconnect_and_straggler_round_completes_at_quorum() {
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 4,
+        read_timeout: Duration::from_secs(20),
+        accept_timeout: Duration::from_secs(20),
+        quorum: QuorumPolicy::new(0.5, 2500, 1).unwrap(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = make_server();
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = vec![0, 1, 2, 3];
+    let sizes = vec![1.0f32; 4];
+    let round_seed = derive_seed(SEED, 9);
+
+    let stats = std::thread::scope(|s| {
+        // Every worker carries the same role sheet, keyed on the
+        // assignment (accept order is not deterministic): the
+        // connection that draws client 1 disconnects mid-upload; the
+        // one that draws client 3 straggles past the deadline; the
+        // rest are good and serve the reassignment. Each worker gets
+        // its own gate; only the actual straggler ever waits on one.
+        let mut senders = Vec::new();
+        for _ in 0..4 {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            let ep = actual.clone();
+            let roles =
+                Roles { disconnect_on: Some(1), straggle_on: Some(3), gate: Some(rx) };
+            s.spawn(move || worker(&ep, roles));
+        }
+        let params = RoundParams {
+            round: 0,
+            round_seed,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        srv.shutdown();
+        // Release the straggler only after the round closed without it.
+        for tx in senders {
+            let _ = tx.send(());
+        }
+        stats
+    });
+
+    assert_eq!(stats.participants, 3, "disconnected slot retried, straggler dropped");
+    assert_eq!(stats.dropped_slots, 1);
+    assert_eq!(stats.retried_slots, 1);
+
+    // JSONL metrics make the membership visible.
+    let dir = std::env::temp_dir().join(format!("fsgd_cq_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let log = dir.join("quorum.jsonl");
+    {
+        let mut logger = MetricsLogger::new(Some(&log)).unwrap();
+        let n = stats.participants as u64;
+        logger.log_round(RoundRecord {
+            round: 0,
+            loss: stats.mean_loss,
+            lr: LR as f64,
+            upload_bytes: stats.upload_bytes_per_client * n,
+            download_bytes: stats.download_bytes_per_client * n,
+            wire_upload_bytes: stats.wire_upload_bytes_per_client * n,
+            wire_download_bytes: stats.wire_download_bytes_per_client * n,
+            transport_bytes: stats.transport_bytes,
+            participants: stats.participants,
+            dropped_slots: stats.dropped_slots,
+            retried_slots: stats.retried_slots,
+            update_nnz: stats.update_nnz,
+        });
+    }
+    let text = std::fs::read_to_string(&log).unwrap();
+    let v = fetchsgd::serialize::json::parse(text.lines().next().unwrap()).unwrap();
+    assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
+    assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
+    assert!((v.req_f64("retried_slots").unwrap() - 1.0).abs() < 1e-9);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // In-process reference over the same surviving membership (client
+    // 3 faults; clients 0, 1, 2 arrive): bitwise-identical weights.
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let flaky = SimFlakyClient {
+        inner: SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: HEAVY },
+        fail: [3usize].into_iter().collect(),
+    };
+    let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+    let mut server = make_server();
+    let weights = server.begin_round(&sizes);
+    let w0 = vec![0f32; DIM];
+    let ctx = engine::RoundCtx {
+        client: &flaky,
+        artifacts: &artifacts,
+        dataset: &dataset,
+        w: &w0,
+        lr: LR,
+        round_seed,
+        threads: 4,
+        wire: None,
+        policy: &policy,
+    };
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+    let out = engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
+        .unwrap();
+    assert_eq!(out.membership.arrived_slots(), vec![0, 1, 2]);
+    assert!(matches!(out.membership.outcome(3), SlotOutcome::Dropped(_)));
+    let update = server.finish(&out.merged, LR).unwrap();
+    let mut w_ref = vec![0f32; DIM];
+    update.apply(&mut w_ref);
+    assert_eq!(
+        bits(&w),
+        bits(&w_ref),
+        "retry + straggler round diverges from the in-process engine on the same membership"
+    );
+}
+
+/// Below the quorum the served round still fails loudly (and the
+/// server stays reusable), exactly like the strict pre-cohort path.
+#[test]
+fn unmet_quorum_fails_the_round_loudly() {
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(20),
+        accept_timeout: Duration::from_secs(20),
+        quorum: QuorumPolicy::new(0.9, 0, 0).unwrap(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = make_server();
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = vec![0, 1];
+    let sizes = vec![1.0f32; 2];
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let ep = actual.clone();
+            // Both workers ready to drop client 1's slot; 1 of 2 < 0.9
+            // quorum.
+            s.spawn(move || {
+                worker(&ep, Roles { disconnect_on: Some(1), ..Roles::good() })
+            });
+        }
+        let params = RoundParams {
+            round: 0,
+            round_seed: 7,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let err = srv.run_round(&mut agg, &params, &mut w).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quorum target"), "{msg}");
+        srv.shutdown();
+    });
+    assert_eq!(srv.connected(), 0, "failed round drops its connections");
+    assert!(w.iter().all(|&x| x == 0.0), "no partial round may step the model");
+}

@@ -13,9 +13,12 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use fetchsgd::cohort::{DropReason, QuorumPolicy, RoundMembership};
 use fetchsgd::compression::aggregate::{
     reduce_shards_in_place, shard_count, shard_of, PipelineOptions, RoundAccum, RoundPipeline,
 };
+use fetchsgd::compression::ClientUpload;
+use fetchsgd::sketch::CountSketch;
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::local_topk::LocalTopKServer;
 use fetchsgd::compression::sim::{
@@ -55,6 +58,7 @@ fn sim_train(
     let mut losses = Vec::new();
     let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut wire_upload_bytes = 0u64;
+    let policy = QuorumPolicy::strict();
     for round in 0..ROUNDS {
         let participants = selector.select(round);
         let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
@@ -68,6 +72,7 @@ fn sim_train(
             round_seed: derive_seed(SEED, round as u64),
             threads,
             wire,
+            policy: &policy,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -209,6 +214,58 @@ fn streaming_engine_matches_reference_reduce_across_matrix() {
                 );
             }
         }
+    }
+}
+
+/// Finalize-at-quorum keeps the determinism contract: for a fixed
+/// final membership set, the renormalized merge is bitwise identical
+/// at any reduce parallelism and any arrival order — renormalization
+/// is a pure function of (weights, set), never of scheduling.
+#[test]
+fn finalize_partial_is_bitwise_stable_across_reduce_parallelism() {
+    let slots = 20usize;
+    let spec = fetchsgd::compression::UploadSpec::Sketch {
+        rows: ROWS,
+        cols: COLS,
+        dim: DIM,
+        seed: SEED,
+    };
+    let mut rng = fetchsgd::util::Rng::new(77);
+    let uploads: Vec<ClientUpload> = (0..slots)
+        .map(|_| {
+            let g: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian() as f32).collect();
+            ClientUpload::Sketch(CountSketch::encode(ROWS, COLS, SEED, &g).unwrap())
+        })
+        .collect();
+    let weights: Vec<f32> = (0..slots).map(|i| 1.0 / (2.0 + i as f32)).collect();
+    let dropped = [0usize, 7, 16]; // 0 and 16 share a shard
+    let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+    let run = |reduce_parallelism: usize, reverse: bool| {
+        let mut pl = RoundPipeline::new(PipelineOptions { reduce_parallelism });
+        let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
+        let mut r = pl.begin(&spec, weights.clone()).unwrap();
+        let mut order: Vec<usize> = (0..slots).filter(|s| !dropped.contains(s)).collect();
+        if reverse {
+            order.reverse();
+        }
+        for &slot in &order {
+            r.offer(slot, uploads[slot].clone()).unwrap();
+            m.record_arrival(slot);
+        }
+        for &slot in &dropped {
+            m.record_drop(slot, DropReason::Deadline);
+        }
+        pl.finalize_partial(r, &m).unwrap().into_sketch().unwrap().table().to_vec()
+    };
+    let base = run(1, false);
+    assert!(base.iter().any(|&x| x != 0.0));
+    for (par, reverse) in [(1usize, true), (3, false), (8, true)] {
+        let other = run(par, reverse);
+        assert_eq!(
+            bits(&base),
+            bits(&other),
+            "partial finalize diverged at reduce_parallelism {par} (reverse {reverse})"
+        );
     }
 }
 

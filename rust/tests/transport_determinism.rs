@@ -50,6 +50,7 @@ fn sim_train(
     let mut losses = Vec::new();
     let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut wire_upload_bytes = 0u64;
+    let policy = fetchsgd::cohort::QuorumPolicy::strict();
     for round in 0..ROUNDS {
         let participants = selector.select(round);
         let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
@@ -63,6 +64,7 @@ fn sim_train(
             round_seed: derive_seed(SEED, round as u64),
             threads,
             wire,
+            policy: &policy,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)

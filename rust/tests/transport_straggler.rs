@@ -8,15 +8,20 @@
 //! cohort behind a barrier. The round then completes and the result is
 //! bitwise identical to the in-process reference, so streaming changed
 //! latency, never bits.
+//!
+//! Under a quorum policy with a round deadline, the same gated
+//! straggler is *dropped* instead of waited for: the round completes
+//! with the arrived subset and renormalized weights (second test).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use fetchsgd::compression::aggregate::run_server_round;
+use fetchsgd::cohort::{DropReason, QuorumPolicy, RoundMembership};
+use fetchsgd::compression::aggregate::{run_server_round, PipelineOptions, RoundPipeline};
 use fetchsgd::compression::sim::synth_grad;
 use fetchsgd::compression::uncompressed::UncompressedServer;
-use fetchsgd::compression::ClientUpload;
+use fetchsgd::compression::{ClientUpload, ServerAggregator, UploadSpec};
 use fetchsgd::transport::framing::{read_msg, write_msg};
 use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
 use fetchsgd::transport::{Conn, Endpoint, RoundParams, RoundServer, ServeOptions};
@@ -127,4 +132,101 @@ fn straggler_does_not_block_streaming_absorb() {
     run_server_round(&mut agg_ref, &sizes, uploads, &mut w_ref, LR).unwrap();
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     assert_eq!(bits(&w_ref), bits(&w));
+}
+
+/// A straggler worker that withholds its upload until the gate opens
+/// and tolerates every error afterwards — under a round deadline the
+/// server legitimately drops its connection before it ever uploads.
+fn tolerant_straggler(ep: &Endpoint, rx: mpsc::Receiver<()>) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) else { return };
+    let (seed, assignments) = match Msg::decode(bytes) {
+        Ok(Msg::RoundStart { round_seed, assignments, .. }) => (round_seed, assignments),
+        _ => return,
+    };
+    let _ = rx.recv_timeout(Duration::from_secs(30));
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        let _ = write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode());
+    }
+}
+
+/// Quorum counterpart of the probe test: with `round_deadline_ms` set
+/// and `quorum_fraction = 0.5`, the round *completes* once the deadline
+/// fires — the gated straggler is dropped, not waited for, and the
+/// merged weights equal a finalize-at-quorum reference over the same
+/// surviving membership set, bit for bit.
+#[test]
+fn straggler_past_deadline_is_dropped_at_quorum() {
+    let policy = QuorumPolicy::new(0.5, 2000, 0).unwrap();
+    let opts = ServeOptions {
+        workers: W,
+        read_timeout: Duration::from_secs(30),
+        accept_timeout: Duration::from_secs(30),
+        quorum: policy.clone(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = (0..W).collect();
+    let sizes = vec![1.0f32; W];
+    let (tx, rx) = mpsc::channel();
+
+    let stats = std::thread::scope(|s| {
+        for _ in 0..W - 1 {
+            let ep = actual.clone();
+            s.spawn(move || worker(&ep, None));
+        }
+        let ep = actual.clone();
+        s.spawn(move || tolerant_straggler(&ep, rx));
+        let params = RoundParams {
+            round: 0,
+            round_seed: SEED,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        srv.shutdown();
+        // Only now may the straggler move — the round closed without
+        // it.
+        tx.send(()).ok();
+        stats
+    });
+
+    assert_eq!(stats.participants, W - 1, "round completes with the arrived subset");
+    assert_eq!(stats.dropped_slots, 1, "the straggler's slot is dropped");
+    assert_eq!(stats.retried_slots, 0);
+    assert!(w.iter().any(|&x| x != 0.0), "the partial round still steps the model");
+
+    // The straggler's slot is the one that reported no loss.
+    let dropped_slot = stats.losses.iter().position(|&l| l == 0.0).expect("one dropped slot");
+
+    // Finalize-at-quorum reference over the same surviving set.
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    let lambdas = agg_ref.begin_round(&sizes);
+    let spec: UploadSpec = agg_ref.upload_spec();
+    let mut pl = RoundPipeline::new(PipelineOptions::default());
+    let mut m = RoundMembership::new(W, policy).unwrap();
+    let mut r = pl.begin(&spec, lambdas).unwrap();
+    for slot in 0..W {
+        if slot == dropped_slot {
+            continue;
+        }
+        let g = synth_grad(DIM, HEAVY, participants[slot], SEED);
+        r.offer(slot, ClientUpload::Dense(g)).unwrap();
+        m.record_arrival(slot);
+    }
+    m.record_drop(dropped_slot, DropReason::Deadline);
+    let merged = pl.finalize_partial(r, &m).unwrap();
+    let update = agg_ref.finish(&merged, LR).unwrap();
+    let mut w_ref = vec![0f32; DIM];
+    update.apply(&mut w_ref);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&w_ref), bits(&w), "deadline drop changed the surviving slots' math");
 }
