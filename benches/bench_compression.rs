@@ -4,9 +4,11 @@
 //! begin_round → incremental absorb → finish — exactly as the round
 //! engine drives it. FetchSGD's server does strictly more work than the
 //! baselines (unsketch + top-k); this bench quantifies the overhead
-//! that the communication savings buy.
+//! that the communication savings buy. Set `BENCH_JSON=<path>` to also
+//! emit machine-readable results (the committed `BENCH_*.json`
+//! baselines).
 
-use fetchsgd::bench_util::{bench, print_table};
+use fetchsgd::bench_util::{bench, print_table, write_json_suite};
 use fetchsgd::compression::aggregate::run_server_round;
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
 use fetchsgd::compression::local_topk::LocalTopKServer;
@@ -103,4 +105,5 @@ fn main() {
     }));
 
     print_table("strategy server-step cost (d=100k, W=10)", &results);
+    write_json_suite("compression", &results);
 }

@@ -1,7 +1,17 @@
 //! End-to-end round latency and round-engine scaling.
 //!
-//! Four sections:
+//! Set `BENCH_JSON=<path>` to also emit machine-readable results (the
+//! committed `BENCH_*.json` baselines); `BENCH_SMOKE=1` runs only a
+//! short-iteration absorb-scaling pass (the CI smoke step).
 //!
+//! Five sections:
+//!
+//! 0. **Absorb scaling (no artifacts needed)** — N workers racing
+//!    pre-encoded sketch frames into one in-flight round: the PR-6
+//!    per-shard-lock absorber vs the pre-PR-6 single-outer-lock design
+//!    (reconstructed as a `Mutex` around the whole round), both
+//!    measured in the same run at parallelism 1/4/8. The merged bits
+//!    are identical; only the wall clock moves.
 //! 1. **Engine throughput (no artifacts needed)** — a 100-client
 //!    FetchSGD cohort of simulated clients (synthetic gradient +
 //!    client-side sketch encode, the same CPU shape as the real client
@@ -21,9 +31,10 @@
 //!    bottleneck sits (the paper's contribution is the coordinator; it
 //!    must not dominate).
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
-use fetchsgd::bench_util::{bench, print_table, BenchResult};
+use fetchsgd::bench_util::{bench, bench_throughput, print_table, write_json_suite, BenchResult};
 use fetchsgd::cohort::QuorumPolicy;
 use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
 use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
@@ -185,6 +196,109 @@ fn participation_sweep() -> anyhow::Result<Vec<BenchResult>> {
     Ok(results)
 }
 
+/// Absorb scaling: the server-side fan-in alone (no client compute, no
+/// reduce), workers pulling pre-encoded sketch frames off a shared
+/// cursor and offering them to the in-flight round. The sharded-lock
+/// rows use the production `&self` offer path; the single-lock rows
+/// serialize every offer through one outer `Mutex` — the pre-PR-6
+/// design, measured in the same run as the baseline the new absorber
+/// is judged against.
+fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
+    use fetchsgd::compression::UploadSpec;
+    use fetchsgd::sketch::CountSketch;
+
+    const ROWS: usize = 5;
+    const COLS: usize = 16384;
+    const DIM: usize = 200_000;
+    const SEED: u64 = 7;
+    let slots: usize = if smoke { 16 } else { 64 };
+    let (warmup, iters) = if smoke { (1, 2) } else { (2, 8) };
+
+    let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: DIM, seed: SEED };
+    let frames: Vec<Vec<u8>> = (0..slots)
+        .map(|i| {
+            let mut rng = fetchsgd::util::Rng::new(0xAB50 + i as u64);
+            let g: Vec<f32> = (0..DIM).map(|_| rng.next_gaussian() as f32).collect();
+            let sk = CountSketch::encode(ROWS, COLS, SEED, &g).unwrap();
+            encode_upload(&ClientUpload::Sketch(sk), &F32LE)
+        })
+        .collect();
+    let weights = vec![1.0 / slots as f32; slots];
+    let cells = (slots * ROWS * COLS) as u64;
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+    let mut results = Vec::new();
+    let mut speeds: Vec<(usize, f64, f64)> = Vec::new();
+
+    for &threads in &[1usize, 4, 8] {
+        let r = bench_throughput(
+            &format!("absorb {slots} sketch frames (5x16384) sharded-lock T={threads}"),
+            warmup,
+            iters,
+            cells,
+            || {
+                let round = pipeline.begin(&spec, weights.clone()).expect("begin");
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| loop {
+                            let i = cursor.fetch_add(1, Ordering::SeqCst);
+                            if i >= slots {
+                                break;
+                            }
+                            round.offer_frame_bytes(i, &frames[i]).expect("offer");
+                        });
+                    }
+                });
+                assert!(round.is_complete());
+                let stats = round.absorb_stats();
+                // Skip the reduce: this section isolates the absorb
+                // path. Shards go back to the pool for the next iter.
+                pipeline.abort(round);
+                stats
+            },
+        );
+        let sharded = cells as f64 / r.mean_s;
+        results.push(r);
+
+        let r = bench_throughput(
+            &format!("absorb {slots} sketch frames (5x16384) single-lock T={threads}"),
+            warmup,
+            iters,
+            cells,
+            || {
+                let round = Mutex::new(pipeline.begin(&spec, weights.clone()).expect("begin"));
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| loop {
+                            let i = cursor.fetch_add(1, Ordering::SeqCst);
+                            if i >= slots {
+                                break;
+                            }
+                            let guard = round.lock().expect("round lock");
+                            guard.offer_frame_bytes(i, &frames[i]).expect("offer");
+                            drop(guard);
+                        });
+                    }
+                });
+                pipeline.abort(round.into_inner().expect("round lock"));
+            },
+        );
+        let single = cells as f64 / r.mean_s;
+        results.push(r);
+        speeds.push((threads, sharded, single));
+    }
+    for (threads, sharded, single) in speeds {
+        eprintln!(
+            "  T={threads:<2} sharded {:>7.2} Mcells/s  single-lock {:>7.2} Mcells/s  ratio {:.2}x",
+            sharded / 1e6,
+            single / 1e6,
+            sharded / single
+        );
+    }
+    Ok(results)
+}
+
 fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut counts = vec![1usize, 2, 4];
@@ -226,8 +340,22 @@ fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
 }
 
 fn main() -> anyhow::Result<()> {
+    // CI smoke mode: just the absorb-scaling section at short
+    // iteration counts — enough to catch a crash, a deadlock, or an
+    // incomplete round without paying the full sweep.
+    if std::env::var("BENCH_SMOKE").is_ok() {
+        eprintln!("== absorb scaling (BENCH_SMOKE: short iterations) ==");
+        let results = absorb_scaling(true)?;
+        print_table("absorb scaling (smoke)", &results);
+        write_json_suite("round_smoke", &results);
+        return Ok(());
+    }
+
+    eprintln!("== absorb scaling (sharded-lock vs single-lock, same run) ==");
+    let mut results = absorb_scaling(false)?;
+
     eprintln!("== round engine scaling (simulated 100-client fetchsgd cohort) ==");
-    let mut results = engine_scaling()?;
+    results.extend(engine_scaling()?);
 
     eprintln!("== participation sweep (full vs 80% vs 50% arrival at a 0.5 quorum) ==");
     results.extend(participation_sweep()?);
@@ -239,6 +367,7 @@ fn main() -> anyhow::Result<()> {
     if !dir.join("manifest.json").exists() {
         eprintln!("bench_round: artifacts/ missing — skipping PJRT round decomposition");
         print_table("round latency", &results);
+        write_json_suite("round", &results);
         return Ok(());
     }
     let runtime = Arc::new(Runtime::cpu()?);
@@ -293,5 +422,6 @@ fn main() -> anyhow::Result<()> {
     }
 
     print_table("round latency decomposition", &results);
+    write_json_suite("round", &results);
     Ok(())
 }

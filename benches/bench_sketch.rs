@@ -4,8 +4,10 @@
 //! error updates (sketch-space linear ops), estimate_all (U(S_e)),
 //! top-k selection, zero-out. These benches size each piece; §Perf in
 //! EXPERIMENTS.md records the befores/afters of the optimization pass.
+//! Set `BENCH_JSON=<path>` to also emit machine-readable results (the
+//! committed `BENCH_*.json` baselines).
 
-use fetchsgd::bench_util::{bench, bench_throughput, print_table};
+use fetchsgd::bench_util::{bench, bench_throughput, print_table, write_json_suite};
 use fetchsgd::sketch::{CountSketch, SparseVec};
 use fetchsgd::util::Rng;
 
@@ -153,4 +155,5 @@ fn main() {
     }
 
     print_table("sketch ops", &results);
+    write_json_suite("sketch", &results);
 }

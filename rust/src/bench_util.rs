@@ -1,12 +1,16 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
-//! Provides warmup + repeated timing with mean/stddev/percentiles and an
-//! aligned table printer. Used by `benches/*.rs` (cargo bench targets
-//! with `harness = false`) and by the performance pass recorded in
-//! EXPERIMENTS.md §Perf.
+//! Provides warmup + repeated timing with mean/stddev/percentiles, an
+//! aligned table printer, and a machine-readable JSON emitter
+//! ([`write_json_suite`], enabled by the `BENCH_JSON` env var) whose
+//! output is committed as the `BENCH_*.json` baselines. Used by
+//! `benches/*.rs` (cargo bench targets with `harness = false`) and by
+//! the performance pass recorded in EXPERIMENTS.md §Perf.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::serialize::json::{arr, num, obj, parse, s, Value};
 use crate::util::stats::{mean, percentile, stddev};
 
 /// Result of one benchmark case.
@@ -104,6 +108,62 @@ pub fn print_table(title: &str, results: &[BenchResult]) {
     }
 }
 
+/// Emit `results` as one named suite in the JSON results file named by
+/// the `BENCH_JSON` env var; no-op when the var is unset. The file is
+/// read-modify-written so each bench binary contributes its own suite
+/// and a re-run replaces a suite in place — regenerating a committed
+/// `BENCH_N.json` is just running every bench with the same
+/// `BENCH_JSON` path (see `benches/README.md`).
+///
+/// Schema:
+/// `{"suites": [{"suite": <name>, "results": [{"name", "iters",
+/// "mean_ns", "p50_ns", "p95_ns", "elements"?, "throughput_per_s"?},
+/// ...]}]}`
+pub fn write_json_suite(suite: &str, results: &[BenchResult]) {
+    let Ok(path) = std::env::var("BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    if let Err(e) = write_json_suite_to(Path::new(&path), suite, results) {
+        eprintln!("bench_util: writing {path} failed: {e:#}");
+    }
+}
+
+fn write_json_suite_to(path: &Path, suite: &str, results: &[BenchResult]) -> anyhow::Result<()> {
+    let mut suites: Vec<Value> = match std::fs::read_to_string(path) {
+        Ok(text) => parse(&text)?
+            .get("suites")
+            .and_then(|v| v.as_array())
+            .map(<[Value]>::to_vec)
+            .unwrap_or_default(),
+        Err(_) => Vec::new(),
+    };
+    suites.retain(|v| v.get("suite").and_then(Value::as_str) != Some(suite));
+    let entries: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            let mut fields = vec![
+                ("name", s(&r.name)),
+                ("iters", num(r.iters as f64)),
+                ("mean_ns", num(r.mean_s * 1e9)),
+                ("p50_ns", num(r.p50_s * 1e9)),
+                ("p95_ns", num(r.p95_s * 1e9)),
+            ];
+            if let Some(e) = r.elements {
+                fields.push(("elements", num(e as f64)));
+            }
+            if let Some(t) = r.throughput() {
+                fields.push(("throughput_per_s", num(t)));
+            }
+            obj(fields)
+        })
+        .collect();
+    suites.push(obj(vec![("suite", s(suite)), ("results", arr(entries))]));
+    let doc = obj(vec![("suites", arr(suites))]);
+    std::fs::write(path, doc.to_json() + "\n")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +188,39 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" µs"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn json_suites_round_trip_and_replace_in_place() {
+        let dir = std::env::temp_dir().join(format!("fsgd_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bench.json");
+        let r1 = BenchResult {
+            name: "case a".into(),
+            iters: 5,
+            mean_s: 2e-6,
+            std_s: 1e-7,
+            p50_s: 2e-6,
+            p95_s: 3e-6,
+            elements: Some(1000),
+        };
+        write_json_suite_to(&p, "alpha", std::slice::from_ref(&r1)).unwrap();
+        write_json_suite_to(&p, "beta", &[]).unwrap();
+        // Re-writing a suite replaces it instead of appending.
+        write_json_suite_to(&p, "alpha", std::slice::from_ref(&r1)).unwrap();
+        let doc = parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let suites = doc.req_array("suites").unwrap();
+        assert_eq!(suites.len(), 2);
+        let alpha = suites
+            .iter()
+            .find(|v| v.get("suite").and_then(Value::as_str) == Some("alpha"))
+            .unwrap();
+        let results = alpha.req_array("results").unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req_str("name").unwrap(), "case a");
+        assert!((results[0].req_f64("mean_ns").unwrap() - 2000.0).abs() < 1e-6);
+        assert!((results[0].req_f64("elements").unwrap() - 1000.0).abs() < 1e-9);
+        assert!(results[0].req_f64("throughput_per_s").unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -18,14 +18,27 @@
 //!   their in-shard turn), and [`RoundPipeline::finish`] runs the
 //!   **row-strip-parallel** shard reduction.
 //!
-//! Uploads arrive in one of two forms:
+//! Absorption is **shard-parallel**: every shard owns its accumulator
+//! and parking buffer behind its own `Mutex`, with a thin lock-free
+//! layer (atomic per-slot claim bits + an absorbed counter) on top, so
+//! all of [`RoundInFlight`]'s offer methods take `&self` and concurrent
+//! workers folding into different shards never contend. Wire frames are
+//! parsed and validated ([`UploadSpec::validate_frame`]) *before* any
+//! lock is taken, so a corrupt peer is rejected without ever holding
+//! round state.
+//!
+//! Uploads arrive in one of three forms:
 //!
 //! - [`RoundInFlight::offer`] — an in-memory [`ClientUpload`] (the
 //!   in-process engine's default path);
-//! - [`RoundInFlight::offer_frame`] — an encoded wire frame
+//! - [`RoundInFlight::offer_frame`] — an owned encoded wire frame
 //!   (`crate::wire`), decoded *streaming* into the accumulator via
-//!   [`RoundAccum::absorb_bytes`]. Under the lossless `f32le` codec the
-//!   two paths perform bit-identical arithmetic in the same order.
+//!   [`RoundAccum::absorb_frame`]. Under the lossless `f32le` codec the
+//!   paths perform bit-identical arithmetic in the same order;
+//! - [`RoundInFlight::offer_frame_bytes`] — the zero-copy variant:
+//!   absorbs straight from a borrowed transport read buffer when the
+//!   frame arrives in-shard-order, copying to an owned parking buffer
+//!   only for truly-early arrivals.
 //!
 //! Determinism contract: for a fixed *shard layout*, the merged result
 //! is bitwise identical no matter how many workers produced the uploads,
@@ -34,10 +47,16 @@
 //! (early arrivals are parked), (b) shards are reduced strictly in shard
 //! order, and (c) the reduction's strip partition is a pure function of
 //! accumulator geometry — a worker count only changes *which thread*
-//! folds a strip, never the per-cell floating-point op order.
+//! folds a strip, never the per-cell floating-point op order. Per-shard
+//! locking does not weaken (a): in-shard order is enforced by each
+//! shard's done-counter under that shard's own lock.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, TryLockError};
+
+use crate::util::kernels;
 
 use crate::cohort::RoundMembership;
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
@@ -166,9 +185,7 @@ impl RoundAccum {
                 if g.len() != acc.len() {
                     bail!("dense upload dim {} != aggregator dim {}", g.len(), acc.len());
                 }
-                for (a, &x) in acc.iter_mut().zip(&g) {
-                    *a += weight * x;
-                }
+                kernels::axpy(acc, &g, weight);
             }
             (Acc::Dense(acc), ClientUpload::Sparse(sv)) => {
                 if sv.dim != acc.len() {
@@ -184,33 +201,29 @@ impl RoundAccum {
         Ok(())
     }
 
+    /// `self += weight * decode(frame_bytes)` — parse then
+    /// [`RoundAccum::absorb_frame`].
+    pub fn absorb_bytes(&mut self, frame_bytes: &[u8], weight: f32) -> Result<()> {
+        let frame = Frame::parse(frame_bytes)?;
+        self.absorb_frame(&frame, weight)
+    }
+
     /// `self += weight * decode(frame)` without materializing the
-    /// upload: values stream straight from the (already length- and
-    /// index-validated) frame payload into the accumulator. Shape, seed,
+    /// upload: values fold straight from the (already length- and
+    /// index-validated) frame payload into the accumulator via the
+    /// blocked [`crate::wire::Values::axpy_into`] kernel. Shape, seed,
     /// and kind mismatches fail loudly via
     /// [`UploadSpec::validate_frame`]; under `f32le` this performs the
     /// same additions in the same order as [`RoundAccum::absorb`], so
     /// wire mode is bitwise identical to in-memory aggregation.
-    pub fn absorb_bytes(&mut self, frame_bytes: &[u8], weight: f32) -> Result<()> {
-        let frame = Frame::parse(frame_bytes)?;
-        self.spec.validate_frame(&frame)?;
+    pub fn absorb_frame(&mut self, frame: &Frame<'_>, weight: f32) -> Result<()> {
+        self.spec.validate_frame(frame)?;
         match (&mut self.acc, &frame.body) {
             (Acc::Sketch(acc), Body::Sketch { values, .. }) => {
-                let table = acc.table_mut();
-                let mut i = 0;
-                values.for_each(&mut |v| {
-                    table[i] += weight * v;
-                    i += 1;
-                });
-                debug_assert_eq!(i, table.len());
+                values.axpy_into(weight, acc.table_mut());
             }
             (Acc::Dense(acc), Body::Dense { values, .. }) => {
-                let mut i = 0;
-                values.for_each(&mut |v| {
-                    acc[i] += weight * v;
-                    i += 1;
-                });
-                debug_assert_eq!(i, acc.len());
+                values.axpy_into(weight, acc);
             }
             (Acc::Dense(acc), Body::Sparse { idx, values, .. }) => {
                 // Parse validated the index array (strictly increasing,
@@ -342,18 +355,14 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> 
             }
             if threads <= 1 {
                 for sh in &refs {
-                    for (a, &b) in base.iter_mut().zip(sh.iter()) {
-                        *a += b;
-                    }
+                    kernels::add(base, sh);
                 }
             } else {
                 let refs = &refs;
                 parallel_strips(base, DENSE_REDUCE_STRIP, threads, &|strip, dst| {
                     let start = strip * DENSE_REDUCE_STRIP;
                     for sh in refs {
-                        for (a, &b) in dst.iter_mut().zip(&sh[start..start + dst.len()]) {
-                            *a += b;
-                        }
+                        kernels::add(dst, &sh[start..start + dst.len()]);
                     }
                 });
             }
@@ -481,12 +490,16 @@ impl RoundPipeline {
         }
         let slots = weights.len();
         Ok(RoundInFlight {
-            shards: accs,
-            done: vec![0; shards],
-            pending: BTreeMap::new(),
+            spec: spec.clone(),
+            shards: accs
+                .into_iter()
+                .map(|accum| Mutex::new(ShardState { accum, done: 0, pending: BTreeMap::new() }))
+                .collect(),
             weights,
-            seen: vec![false; slots],
-            absorbed: 0,
+            seen: (0..slots).map(|_| AtomicBool::new(false)).collect(),
+            absorbed: AtomicUsize::new(0),
+            lock_stalls: AtomicU64::new(0),
+            parked_bytes: AtomicU64::new(0),
         })
     }
 
@@ -499,14 +512,14 @@ impl RoundPipeline {
     pub fn finish(&mut self, round: RoundInFlight) -> Result<RoundAccum> {
         if !round.is_complete() {
             let (absorbed, slots, parked) =
-                (round.absorbed, round.weights.len(), round.pending.len());
-            self.pool.extend(round.shards);
+                (round.absorbed(), round.slots(), round.buffered());
+            self.pool.extend(round.into_accums());
             bail!(
                 "round incomplete: absorbed {absorbed} of {slots} uploads \
                  ({parked} parked out of order)"
             );
         }
-        let mut shards = round.shards;
+        let mut shards = round.into_accums();
         reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
         let merged = shards.swap_remove(0);
         self.pool.extend(shards);
@@ -542,22 +555,22 @@ impl RoundPipeline {
     ) -> Result<RoundAccum> {
         if membership.slots() != round.slots() {
             let (m, r) = (membership.slots(), round.slots());
-            self.pool.extend(round.shards);
+            self.pool.extend(round.into_accums());
             bail!("membership tracks {m} slots but the round has {r}");
         }
         if !membership.quorum_met() {
             let (arrived, slots, target) =
                 (membership.arrived(), membership.slots(), membership.quorum_target());
-            self.pool.extend(round.shards);
+            self.pool.extend(round.into_accums());
             bail!("quorum not met: {arrived} of {slots} uploads arrived (target {target})");
         }
         if membership.is_full() {
             return self.finish(round);
         }
         for slot in 0..round.slots() {
-            if round.seen[slot] != membership.is_arrived(slot) {
-                let (offered, arrived) = (round.seen[slot], membership.is_arrived(slot));
-                self.pool.extend(round.shards);
+            if round.seen_slot(slot) != membership.is_arrived(slot) {
+                let (offered, arrived) = (round.seen_slot(slot), membership.is_arrived(slot));
+                self.pool.extend(round.into_accums());
                 bail!(
                     "slot {slot}: upload offered={offered} but membership records \
                      arrived={arrived}"
@@ -569,16 +582,16 @@ impl RoundPipeline {
         let scale = match membership.renormalization_scale(&round.weights) {
             Ok(s) => s,
             Err(e) => {
-                self.pool.extend(round.shards);
+                self.pool.extend(round.into_accums());
                 return Err(e);
             }
         };
         if let Err(e) = round.drain_parked() {
-            self.pool.extend(round.shards);
+            self.pool.extend(round.into_accums());
             return Err(e);
         }
-        debug_assert_eq!(round.absorbed, membership.arrived());
-        let mut shards = round.shards;
+        debug_assert_eq!(round.absorbed(), membership.arrived());
+        let mut shards = round.into_accums();
         reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
         let mut merged = shards.swap_remove(0);
         self.pool.extend(shards);
@@ -590,7 +603,7 @@ impl RoundPipeline {
     /// the error-path counterpart of [`RoundPipeline::finish`] (partial
     /// sums are fine: accumulators reset in place on reuse).
     pub fn abort(&mut self, round: RoundInFlight) {
-        self.pool.extend(round.shards);
+        self.pool.extend(round.into_accums());
     }
 
     /// Return the merged accumulator once the server half is done with
@@ -607,6 +620,56 @@ enum Parked {
     Frame(Vec<u8>),
 }
 
+/// Frame bytes offered to the round: owned (`offer_frame`) or borrowed
+/// straight from a transport read buffer (`offer_frame_bytes`). Borrowed
+/// bytes are only copied when the frame must park.
+enum FrameBytes<'a> {
+    Owned(Vec<u8>),
+    Borrowed(&'a [u8]),
+}
+
+impl FrameBytes<'_> {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            FrameBytes::Owned(v) => v,
+            FrameBytes::Borrowed(b) => b,
+        }
+    }
+
+    fn into_owned(self) -> Vec<u8> {
+        match self {
+            FrameBytes::Owned(v) => v,
+            FrameBytes::Borrowed(b) => b.to_vec(),
+        }
+    }
+}
+
+/// Contention and parking counters for one round's absorb phase —
+/// surfaced per round in `RoundRecord` / `ServeSummary` JSONL so lock
+/// contention on the absorb path is observable, not guessed at.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AbsorbStats {
+    /// Shard-lock acquisitions that found the lock already held (the
+    /// blocking slow path was taken). Zero means workers never
+    /// contended.
+    pub lock_stalls: u64,
+    /// Bytes copied into the parking buffer for out-of-order arrivals:
+    /// frame bytes on the wire path, idealized payload bytes for
+    /// in-memory uploads. Zero means every upload absorbed on arrival.
+    pub parked_bytes: u64,
+}
+
+/// One shard's absorb state — accumulator, in-shard progress, and
+/// parked early arrivals — everything guarded by that shard's own lock.
+struct ShardState {
+    accum: RoundAccum,
+    /// Slots absorbed so far. The next slot this shard accepts is
+    /// `shard + done * nshards`.
+    done: usize,
+    /// Early uploads, parked by slot until the shard catches up.
+    pending: BTreeMap<usize, Parked>,
+}
+
 /// One round's absorb-on-arrival state, handed out by
 /// [`RoundPipeline::begin`].
 ///
@@ -615,31 +678,39 @@ enum Parked {
 /// requires each shard to absorb its slots in increasing slot order.
 /// `RoundInFlight` reconciles the two: an upload whose slot is the next
 /// expected one for its shard is absorbed immediately (and may unblock
-/// parked successors); one that arrives early is parked — as raw frame
-/// bytes on the wire path, as the in-memory upload on the engine path —
-/// until its turn. In the common case of roughly slot-ordered
+/// parked successors); one that arrives early is parked — as owned
+/// frame bytes on the wire path, as the in-memory upload on the engine
+/// path — until its turn. In the common case of roughly slot-ordered
 /// completion everything absorbs on arrival and nothing waits for the
 /// cohort; in the worst case the parking buffer holds at most the
 /// cohort's uploads, and the merged result is bitwise identical either
 /// way.
+///
+/// All offer methods take `&self`: each shard's state sits behind its
+/// own `Mutex`, and the per-slot claim bits and absorbed counter are
+/// atomics, so concurrent workers folding into different shards never
+/// contend and need no outer lock.
 ///
 /// Slot bookkeeping doubles as integrity protection: out-of-range and
 /// duplicate slots are rejected before any values reach an accumulator,
 /// so a malicious peer cannot scribble over another client's
 /// contribution.
 pub struct RoundInFlight {
-    /// Shard accumulators, `shard_count(slots)` of them.
-    shards: Vec<RoundAccum>,
-    /// Per shard: slots absorbed so far. The next slot shard `s` will
-    /// accept is `s + done[s] * shards.len()`.
-    done: Vec<usize>,
-    /// Early uploads, parked by slot until their shard catches up.
-    pending: BTreeMap<usize, Parked>,
+    /// The round's upload shape — used to validate wire frames before
+    /// any shard lock is taken.
+    spec: UploadSpec,
+    /// Shard absorb states, `shard_count(slots)` of them, each behind
+    /// its own lock.
+    shards: Vec<Mutex<ShardState>>,
     /// Per-slot aggregation weights λ (also fixes the slot count).
     weights: Vec<f32>,
-    /// Which slots have been offered (duplicate protection).
-    seen: Vec<bool>,
-    absorbed: usize,
+    /// Which slots have been offered (duplicate protection). A slot is
+    /// claimed by the atomic swap before its shard lock is touched and
+    /// released on validation/absorb failure so retries stay legal.
+    seen: Vec<AtomicBool>,
+    absorbed: AtomicUsize,
+    lock_stalls: AtomicU64,
+    parked_bytes: AtomicU64,
 }
 
 impl RoundInFlight {
@@ -650,88 +721,161 @@ impl RoundInFlight {
 
     /// Uploads absorbed into shard accumulators so far.
     pub fn absorbed(&self) -> usize {
-        self.absorbed
+        self.absorbed.load(Ordering::SeqCst)
     }
 
     /// Uploads parked waiting for an earlier slot of their shard.
     pub fn buffered(&self) -> usize {
-        self.pending.len()
+        self.shards.iter().map(|s| s.lock().expect("shard state poisoned").pending.len()).sum()
     }
 
     pub fn is_complete(&self) -> bool {
-        self.absorbed == self.weights.len()
+        self.absorbed() == self.weights.len()
+    }
+
+    /// The round's contention/parking counters so far.
+    pub fn absorb_stats(&self) -> AbsorbStats {
+        AbsorbStats {
+            lock_stalls: self.lock_stalls.load(Ordering::SeqCst),
+            parked_bytes: self.parked_bytes.load(Ordering::SeqCst),
+        }
     }
 
     /// Hand the round `slot`'s in-memory upload — the engine path.
     /// Absorbs immediately when the slot is next in its shard's order
     /// (then drains any parked successors), parks the upload otherwise.
-    pub fn offer(&mut self, slot: usize, upload: ClientUpload) -> Result<()> {
-        self.route(slot, Parked::Upload(upload))
+    pub fn offer(&self, slot: usize, upload: ClientUpload) -> Result<()> {
+        self.claim(slot)?;
+        let nshards = self.shards.len();
+        let shard = shard_of(slot, nshards);
+        let mut st = self.lock_shard(shard);
+        if slot != shard + st.done * nshards {
+            // Early for its shard (slot < expected is impossible: that
+            // slot would already be claimed). In-memory uploads carry
+            // their own shape and are validated at absorb time.
+            self.parked_bytes.fetch_add(upload.payload_bytes(), Ordering::Relaxed);
+            st.pending.insert(slot, Parked::Upload(upload));
+            return Ok(());
+        }
+        self.absorb_into(&mut st, slot, Parked::Upload(upload))?;
+        self.drain_successors(&mut st, shard)
     }
 
-    /// Hand the round `slot`'s encoded upload frame — the wire path.
-    /// Frame validation happens at absorb time via
-    /// [`RoundAccum::absorb_bytes`] — a bad frame fails the round loudly
-    /// and counts nothing.
-    pub fn offer_frame(&mut self, slot: usize, frame: Vec<u8>) -> Result<()> {
-        self.route(slot, Parked::Frame(frame))
+    /// Hand the round `slot`'s encoded upload frame (owned) — the wire
+    /// path. The frame is parsed and validated before any lock is
+    /// taken; a bad frame fails its own offer and counts nothing.
+    pub fn offer_frame(&self, slot: usize, frame: Vec<u8>) -> Result<()> {
+        self.route_frame(slot, FrameBytes::Owned(frame))
     }
 
-    fn route(&mut self, slot: usize, item: Parked) -> Result<()> {
+    /// Zero-copy variant of [`RoundInFlight::offer_frame`]: absorb
+    /// straight from a borrowed buffer (the transport's read buffer)
+    /// when the frame arrives in-shard-order; only a truly-early
+    /// arrival is copied into the parking buffer.
+    pub fn offer_frame_bytes(&self, slot: usize, frame: &[u8]) -> Result<()> {
+        self.route_frame(slot, FrameBytes::Borrowed(frame))
+    }
+
+    fn route_frame(&self, slot: usize, fb: FrameBytes<'_>) -> Result<()> {
+        self.claim(slot)?;
+        // Parse + validate BEFORE taking any lock: rejecting a corrupt
+        // or mismatched frame never holds round state, so a hostile
+        // peer cannot stall healthy absorbs — and fault attribution
+        // (plus any retry of this slot) lands on the right peer whether
+        // the frame would have absorbed now or parked.
+        let frame = match Frame::parse(fb.as_slice())
+            .and_then(|f| self.spec.validate_frame(&f).map(|()| f))
+        {
+            Ok(frame) => frame,
+            Err(e) => {
+                self.release(slot);
+                return Err(e.context(format!("validating upload frame for slot {slot}")));
+            }
+        };
+        let nshards = self.shards.len();
+        let shard = shard_of(slot, nshards);
+        let mut st = self.lock_shard(shard);
+        if slot != shard + st.done * nshards {
+            // Truly early: park owned bytes (the only copy a borrowed
+            // frame ever pays). The deferred absorb re-parses the same
+            // bytes, so it cannot fail on anything validated here.
+            drop(frame);
+            let bytes = fb.into_owned();
+            self.parked_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            st.pending.insert(slot, Parked::Frame(bytes));
+            return Ok(());
+        }
+        // In-shard-order arrival: fold straight out of the caller's
+        // buffer — no copy, no re-parse.
+        if let Err(e) = st.accum.absorb_frame(&frame, self.weights[slot]) {
+            self.release(slot);
+            return Err(e.context(format!("absorbing upload for slot {slot}")));
+        }
+        st.done += 1;
+        self.absorbed.fetch_add(1, Ordering::SeqCst);
+        self.drain_successors(&mut st, shard)
+    }
+
+    /// Claim `slot` in the lock-free membership layer: range check plus
+    /// the atomic test-and-set duplicate guard.
+    fn claim(&self, slot: usize) -> Result<()> {
         let slots = self.weights.len();
         if slot >= slots {
             bail!("upload slot {slot} out of range (round has {slots} slots)");
         }
-        if self.seen[slot] {
+        if self.seen[slot].swap(true, Ordering::AcqRel) {
             bail!("duplicate upload for slot {slot}");
-        }
-        self.seen[slot] = true;
-        let nshards = self.shards.len();
-        let shard = shard_of(slot, nshards);
-        if slot != shard + self.done[shard] * nshards {
-            // Early for its shard (slot < expected is impossible: that
-            // slot would already be marked seen). Validate a wire frame
-            // *before* parking: a corrupt or mismatched frame must fail
-            // its own offer — not the in-shard predecessor whose later
-            // arrival drains the park — so fault attribution (and any
-            // retry of this slot) lands on the right peer. The deferred
-            // absorb re-parses the same bytes, so it cannot fail on
-            // anything validated here.
-            if let Parked::Frame(bytes) = &item {
-                let checked = Frame::parse(bytes)
-                    .and_then(|frame| self.shards[shard].spec.validate_frame(&frame));
-                if let Err(e) = checked {
-                    self.seen[slot] = false;
-                    return Err(e.context(format!("parking upload for slot {slot}")));
-                }
-            }
-            self.pending.insert(slot, item);
-            return Ok(());
-        }
-        self.absorb_now(shard, slot, item)?;
-        // Absorbing this slot may unblock parked successors in-shard.
-        while let Some(parked) = self.pending.remove(&(shard + self.done[shard] * nshards)) {
-            let next = shard + self.done[shard] * nshards;
-            self.absorb_now(shard, next, parked)?;
         }
         Ok(())
     }
 
-    fn absorb_now(&mut self, shard: usize, slot: usize, item: Parked) -> Result<()> {
+    /// Un-claim a slot whose validation or absorb failed — nothing
+    /// reached an accumulator, so a retry / reassignment may
+    /// legitimately offer it again.
+    fn release(&self, slot: usize) {
+        self.seen[slot].store(false, Ordering::Release);
+    }
+
+    /// Lock one shard, counting the acquisitions that actually blocked.
+    fn lock_shard(&self, shard: usize) -> MutexGuard<'_, ShardState> {
+        match self.shards[shard].try_lock() {
+            Ok(guard) => guard,
+            Err(TryLockError::WouldBlock) => {
+                self.lock_stalls.fetch_add(1, Ordering::Relaxed);
+                self.shards[shard].lock().expect("shard state poisoned")
+            }
+            Err(TryLockError::Poisoned(_)) => panic!("shard state poisoned"),
+        }
+    }
+
+    /// Absorb one in-order item into its (already locked) shard,
+    /// keeping the lock-free layer consistent on failure.
+    fn absorb_into(&self, st: &mut ShardState, slot: usize, item: Parked) -> Result<()> {
         let lam = self.weights[slot];
         let absorbed = match item {
-            Parked::Upload(u) => self.shards[shard].absorb(u, lam),
-            Parked::Frame(f) => self.shards[shard].absorb_bytes(&f, lam),
+            Parked::Upload(u) => st.accum.absorb(u, lam),
+            Parked::Frame(f) => st.accum.absorb_bytes(&f, lam),
         };
         if let Err(e) = absorbed {
             // A failed absorb touches no accumulator cell (validation
-            // runs before any add), so un-mark the slot: a retry /
-            // reassignment may legitimately offer it again.
-            self.seen[slot] = false;
+            // runs before any add), so un-claim the slot for retry.
+            self.release(slot);
             return Err(e.context(format!("absorbing upload for slot {slot}")));
         }
-        self.done[shard] += 1;
-        self.absorbed += 1;
+        st.done += 1;
+        self.absorbed.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Absorb any parked successors the latest absorb unblocked (the
+    /// caller holds the shard's lock).
+    fn drain_successors(&self, st: &mut ShardState, shard: usize) -> Result<()> {
+        let nshards = self.shards.len();
+        loop {
+            let next = shard + st.done * nshards;
+            let Some(parked) = st.pending.remove(&next) else { break };
+            self.absorb_into(st, next, parked)?;
+        }
         Ok(())
     }
 
@@ -743,12 +887,31 @@ impl RoundInFlight {
     /// full-cohort round would have performed on those slots.
     fn drain_parked(&mut self) -> Result<()> {
         let nshards = self.shards.len();
-        let pending = std::mem::take(&mut self.pending);
-        for (slot, item) in pending {
+        let mut all: BTreeMap<usize, Parked> = BTreeMap::new();
+        for st in &mut self.shards {
+            let st = st.get_mut().expect("shard state poisoned");
+            all.append(&mut st.pending);
+        }
+        for (slot, item) in all {
             let shard = shard_of(slot, nshards);
-            self.absorb_now(shard, slot, item)?;
+            let mut st = self.shards[shard].lock().expect("shard state poisoned");
+            self.absorb_into(&mut st, slot, item)?;
         }
         Ok(())
+    }
+
+    /// Whether `slot` has been offered (and not released by a failure).
+    fn seen_slot(&self, slot: usize) -> bool {
+        self.seen[slot].load(Ordering::SeqCst)
+    }
+
+    /// Tear down into the shard accumulators, in shard order — the
+    /// pipeline's reduce/abort path.
+    fn into_accums(self) -> Vec<RoundAccum> {
+        self.shards
+            .into_iter()
+            .map(|m| m.into_inner().expect("shard state poisoned").accum)
+            .collect()
     }
 }
 
@@ -995,7 +1158,7 @@ mod tests {
         let weights: Vec<f32> = (0..slots).map(|i| 0.1 + 0.01 * i as f32).collect();
 
         let mut pl = pipeline();
-        let mut seq = pl.begin(&sketch_spec(), weights.clone()).unwrap();
+        let seq = pl.begin(&sketch_spec(), weights.clone()).unwrap();
         for (slot, f) in frames.iter().enumerate() {
             seq.offer_frame(slot, f.clone()).unwrap();
             assert_eq!(seq.buffered(), 0, "in-order offers never park");
@@ -1003,7 +1166,7 @@ mod tests {
         let merged_seq = pl.finish(seq).unwrap();
         assert_eq!(merged_seq.absorbed(), slots);
 
-        let mut rev = pl.begin(&sketch_spec(), weights.clone()).unwrap();
+        let rev = pl.begin(&sketch_spec(), weights.clone()).unwrap();
         for (slot, f) in frames.iter().enumerate().rev() {
             rev.offer_frame(slot, f.clone()).unwrap();
         }
@@ -1020,7 +1183,7 @@ mod tests {
         }
 
         // In-memory uploads through the same scrambled order match too.
-        let mut mem = pl.begin(&sketch_spec(), weights).unwrap();
+        let mem = pl.begin(&sketch_spec(), weights).unwrap();
         for (slot, u) in uploads.iter().enumerate().rev() {
             mem.offer(slot, u.clone()).unwrap();
         }
@@ -1059,7 +1222,7 @@ mod tests {
         reduce_shards_in_place(&mut shards, 1).unwrap();
 
         let mut pl = pipeline();
-        let mut inflight = pl.begin(&sketch_spec(), weights).unwrap();
+        let inflight = pl.begin(&sketch_spec(), weights).unwrap();
         // A scrambled-but-fixed arrival order.
         let mut order: Vec<usize> = (0..slots).collect();
         order.reverse();
@@ -1081,7 +1244,7 @@ mod tests {
         let spec = UploadSpec::Dense { dim: 8 };
         let frame = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
         let mut pl = pipeline();
-        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        let r = pl.begin(&spec, vec![1.0; 3]).unwrap();
         assert!(r.offer_frame(3, frame(1.0)).unwrap_err().to_string().contains("out of range"));
         r.offer_frame(1, frame(2.0)).unwrap();
         assert!(r.offer_frame(1, frame(2.0)).unwrap_err().to_string().contains("duplicate"));
@@ -1097,7 +1260,7 @@ mod tests {
         assert!(err.contains("absorbed 1 of 3"), "{err}");
         assert_eq!(pl.pooled(), shard_count(3));
         // A malformed frame fails the offer and counts nothing.
-        let mut r = pl.begin(&spec, vec![1.0; 2]).unwrap();
+        let r = pl.begin(&spec, vec![1.0; 2]).unwrap();
         let mut bad = frame(1.0);
         bad[0] = b'X';
         assert!(r.offer_frame(0, bad).is_err());
@@ -1147,7 +1310,7 @@ mod tests {
         for reverse in [false, true] {
             let mut pl = pipeline();
             let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
-            let mut r = pl.begin(&sketch_spec(), weights.clone()).unwrap();
+            let r = pl.begin(&sketch_spec(), weights.clone()).unwrap();
             let mut order = arrived.clone();
             if reverse {
                 order.reverse();
@@ -1178,7 +1341,7 @@ mod tests {
         let upload = |v: f32| ClientUpload::Dense(vec![v; 8]);
         let run = |partial: bool| {
             let mut pl = pipeline();
-            let mut r = pl.begin(&spec, vec![0.3, 0.7]).unwrap();
+            let r = pl.begin(&spec, vec![0.3, 0.7]).unwrap();
             r.offer(0, upload(1.0)).unwrap();
             r.offer(1, upload(2.0)).unwrap();
             if partial {
@@ -1205,7 +1368,7 @@ mod tests {
         let spec = UploadSpec::Dense { dim: 8 };
         let mut pl = pipeline();
         // Quorum not met: 1 of 3 arrived under a 0.9 quorum.
-        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        let r = pl.begin(&spec, vec![1.0; 3]).unwrap();
         r.offer(0, ClientUpload::Dense(vec![1.0; 8])).unwrap();
         let mut m = RoundMembership::new(3, QuorumPolicy::new(0.9, 0, 0).unwrap()).unwrap();
         m.record_arrival(0);
@@ -1216,7 +1379,7 @@ mod tests {
         assert_eq!(pl.pooled(), shard_count(3), "shards still return to the pool");
         // Membership that disagrees with the offered slots is a driver
         // bug and fails loudly.
-        let mut r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        let r = pl.begin(&spec, vec![1.0; 3]).unwrap();
         r.offer(0, ClientUpload::Dense(vec![1.0; 8])).unwrap();
         let mut m = RoundMembership::new(3, QuorumPolicy::new(0.3, 0, 0).unwrap()).unwrap();
         m.record_arrival(1); // claims slot 1 arrived; only slot 0 was offered
@@ -1233,17 +1396,19 @@ mod tests {
     #[test]
     fn corrupt_parked_frame_fails_its_own_offer() {
         // Slot 16 shares shard 0 with slot 0 (17 slots → 16 shards), so
-        // an early offer of slot 16 parks. A corrupt parked frame must
-        // fail slot 16's own offer — not slot 0's later arrival, which
+        // an early offer of slot 16 parks. A corrupt frame must fail
+        // slot 16's own offer — not slot 0's later arrival, which
         // would blame (and burn) the wrong peer in a quorum round.
+        // Validation runs before any lock, so the rejection never
+        // touches round state at all.
         let spec = UploadSpec::Dense { dim: 8 };
         let good = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
         let mut pl = pipeline();
-        let mut r = pl.begin(&spec, vec![1.0; 17]).unwrap();
+        let r = pl.begin(&spec, vec![1.0; 17]).unwrap();
         let mut bad = good(1.0);
         bad[0] = b'X';
         let err = r.offer_frame(16, bad).unwrap_err().to_string();
-        assert!(err.contains("parking upload for slot 16"), "{err}");
+        assert!(err.contains("validating upload frame for slot 16"), "{err}");
         assert_eq!(r.buffered(), 0, "a rejected frame is not parked");
         // Wrong-shape frames are caught at park time too.
         let wrong_dim = encode_upload(&ClientUpload::Dense(vec![0.0; 4]), &F32LE);
@@ -1263,7 +1428,7 @@ mod tests {
         let spec = UploadSpec::Dense { dim: 8 };
         let good = |v: f32| encode_upload(&ClientUpload::Dense(vec![v; 8]), &F32LE);
         let mut pl = pipeline();
-        let mut r = pl.begin(&spec, vec![0.5; 2]).unwrap();
+        let r = pl.begin(&spec, vec![0.5; 2]).unwrap();
         let mut bad = good(1.0);
         bad[0] = b'X';
         assert!(r.offer_frame(0, bad).is_err());

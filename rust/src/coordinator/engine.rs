@@ -18,8 +18,9 @@
 //!    [`crate::compression::aggregate::MAX_SHARDS`]; slot `i` belongs
 //!    to shard `i % shards`) — never a function of `threads`.
 //! 2. Each shard absorbs its slots in increasing slot order: workers
-//!    offer uploads to the shared [`RoundInFlight`] as they finish, and
-//!    it parks early arrivals until their in-shard turn.
+//!    offer uploads to the shared
+//!    [`crate::compression::aggregate::RoundInFlight`] as they finish,
+//!    and it parks early arrivals until their in-shard turn.
 //! 3. Shards reduce strictly in shard order over geometry-pure row
 //!    strips ([`crate::compression::aggregate::reduce_shards_in_place`]).
 //! 4. Per-slot losses are written into slot-indexed cells and summed in
@@ -47,11 +48,13 @@
 //! worst case the parking buffer holds the cohort's uploads, the price
 //! of never blocking a worker on another worker's slot.
 //!
-//! Absorption itself happens behind the in-flight round's single lock
-//! (the same discipline the transport server uses). The lock covers
-//! only the O(table) fold, never client compute, so it only matters
-//! when folds rival compute cost; a per-shard lock split is the noted
-//! next rung if a profile ever shows contention here (ROADMAP).
+//! Absorption is shard-parallel (the same discipline the transport
+//! server uses): the in-flight round's offer methods take `&self` — each
+//! shard's accumulator sits behind its own lock with a lock-free
+//! claim/counter layer on top — so workers folding into different
+//! shards never contend, and a shard lock covers only that shard's
+//! O(table) fold, never client compute. Contention that does occur is
+//! counted ([`RoundOutput::absorb_stats`]) rather than guessed at.
 //!
 //! ## Scratch reuse
 //!
@@ -65,11 +68,10 @@
 
 use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
-use crate::compression::aggregate::{RoundAccum, RoundInFlight, RoundPipeline};
+use crate::compression::aggregate::{AbsorbStats, RoundAccum, RoundPipeline};
 use crate::compression::{ClientCompute, UploadSpec};
 use crate::data::FedDataset;
 use crate::runtime::artifact::TaskArtifacts;
@@ -91,7 +93,8 @@ pub struct RoundCtx<'a> {
     /// When set, every upload round-trips through the framed wire
     /// encoding under this codec: the engine encodes each
     /// `ClientUpload` to a frame and the pipeline decodes it streaming
-    /// ([`RoundInFlight::offer_frame`]), recording measured frame bytes
+    /// ([`crate::compression::aggregate::RoundInFlight::offer_frame`]),
+    /// recording measured frame bytes
     /// alongside the idealized estimate.
     pub wire: Option<&'a dyn Codec>,
     /// Partial-participation policy. [`QuorumPolicy::strict`] (the
@@ -126,6 +129,9 @@ pub struct RoundOutput {
     /// Measured wire-frame bytes of one upload (0 when wire mode is
     /// off).
     pub wire_upload_bytes_per_client: u64,
+    /// Absorb-phase contention counters (shard-lock stalls, parked
+    /// bytes) for this round.
+    pub absorb_stats: AbsorbStats,
 }
 
 /// One worker's contribution to the round (everything except the
@@ -165,7 +171,6 @@ pub fn run_round(
     let threads = ctx.threads.clamp(1, slots);
     let stacked_k = ctx.client.wants_stacked_batches();
 
-    let shared: Mutex<RoundInFlight> = Mutex::new(round);
     let next = AtomicUsize::new(0);
     let deadline = ctx.policy.round_deadline().map(|d| Instant::now() + d);
     let max_retries = ctx.policy.max_slot_retries();
@@ -229,21 +234,21 @@ pub fn run_round(
                 }
             };
             let payload_bytes = res.upload.payload_bytes();
-            // Offer the upload to the shared pipeline immediately —
-            // absorb-on-arrival; the lock covers only the fold, never
-            // client compute.
+            // Offer the upload to the shared round immediately —
+            // absorb-on-arrival; only the target shard's lock is held,
+            // and only for that shard's fold, never client compute.
             let offered = match ctx.wire {
                 Some(codec) => {
                     let frame = encode_upload(&res.upload, codec);
                     note_bytes(&mut out, slot, payload_bytes, frame.len() as u64);
-                    let mut r = shared.lock().expect("round pipeline poisoned");
-                    r.offer_frame(slot, frame)
+                    round
+                        .offer_frame(slot, frame)
                         .with_context(|| format!("wire upload from client {c} (slot {slot})"))
                 }
                 None => {
                     note_bytes(&mut out, slot, payload_bytes, 0);
-                    let mut r = shared.lock().expect("round pipeline poisoned");
-                    r.offer(slot, res.upload)
+                    round
+                        .offer(slot, res.upload)
                         .with_context(|| format!("upload from client {c} (slot {slot})"))
                 }
             };
@@ -269,7 +274,7 @@ pub fn run_round(
 
     // Settle the membership; surface the lowest-slot error first when
     // the round cannot close (deterministic failure too).
-    let round = shared.into_inner().expect("round pipeline poisoned");
+    let absorb_stats = round.absorb_stats();
     let mut membership = RoundMembership::new(slots, ctx.policy.clone())?;
     let mut faults: Vec<(usize, anyhow::Error)> = Vec::new();
     let mut missed: Vec<usize> = Vec::new();
@@ -332,6 +337,7 @@ pub fn run_round(
         membership,
         upload_bytes_per_client,
         wire_upload_bytes_per_client,
+        absorb_stats,
     })
 }
 

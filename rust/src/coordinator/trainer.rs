@@ -74,6 +74,12 @@ pub struct RunSummary {
     pub dropped_slots: u64,
     /// Slots that needed at least one retry across the run.
     pub retried_slots: u64,
+    /// Shard-lock absorb stalls across the run (contention between
+    /// workers folding into the same shard) — purely observational,
+    /// never affects the merged bits.
+    pub absorb_stalls: u64,
+    /// Upload bytes parked out of shard order across the run.
+    pub parked_bytes: u64,
     pub ratios: Ratios,
     /// Estimated per-client communication wallclock over the whole run
     /// under the paper's motivating ~1 Mbps asymmetric residential link.
@@ -312,6 +318,8 @@ impl Trainer {
             wire_upload_bytes: out.wire_upload_bytes_per_client * n,
             wire_download_bytes: wire_down_per_client * n,
             transport_bytes: 0,
+            absorb_stalls: out.absorb_stats.lock_stalls,
+            parked_bytes: out.absorb_stats.parked_bytes,
             participants: mem.participants,
             dropped_slots: mem.dropped_slots,
             retried_slots: mem.retried_slots,
@@ -389,6 +397,8 @@ impl Trainer {
             wire_download_bytes: self.comm.wire_download_bytes,
             dropped_slots: self.logger.rounds.iter().map(|r| r.dropped_slots as u64).sum(),
             retried_slots: self.logger.rounds.iter().map(|r| r.retried_slots as u64).sum(),
+            absorb_stalls: self.logger.rounds.iter().map(|r| r.absorb_stalls).sum(),
+            parked_bytes: self.logger.rounds.iter().map(|r| r.parked_bytes).sum(),
             ratios,
             comm_time_residential_s: self.comm_time_res.total_s,
             comm_time_wifi_s: self.comm_time_wifi.total_s,

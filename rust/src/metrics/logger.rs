@@ -29,6 +29,15 @@ pub struct RoundRecord {
     /// round-start, upload, and round-end message including length
     /// prefixes and control headers. 0 for in-process runs.
     pub transport_bytes: u64,
+    /// Times an absorb had to block on a shard lock held by another
+    /// worker this round (see
+    /// `compression::aggregate::AbsorbStats::lock_stalls`). 0 when the
+    /// round was absorb-uncontended.
+    pub absorb_stalls: u64,
+    /// Frame bytes parked because an upload arrived ahead of an earlier
+    /// slot on its shard (out-of-order arrivals that could not take the
+    /// zero-copy path). 0 when every arrival folded in order.
+    pub parked_bytes: u64,
     /// Slots whose upload was actually absorbed this round — the
     /// cohort's arrived subset (equal to the planned cohort size unless
     /// quorum rounds dropped stragglers or faulted peers).
@@ -99,6 +108,12 @@ impl MetricsLogger {
         if r.transport_bytes > 0 {
             fields.push(("transport_bytes", num(r.transport_bytes as f64)));
         }
+        // Absorb-contention counters: emitted only when the round saw
+        // any contention or parking, so quiet logs stay compact.
+        if r.absorb_stalls > 0 || r.parked_bytes > 0 {
+            fields.push(("absorb_stalls", num(r.absorb_stalls as f64)));
+            fields.push(("parked_bytes", num(r.parked_bytes as f64)));
+        }
         // Cohort membership: always reported, so participation sweeps
         // (paper-style 0.1% cohorts) can be read straight off the log.
         fields.push(("participants", num(r.participants as f64)));
@@ -152,6 +167,8 @@ mod tests {
                 wire_upload_bytes: 132,
                 wire_download_bytes: 70,
                 transport_bytes: 180,
+                absorb_stalls: 4,
+                parked_bytes: 264,
                 participants: 3,
                 dropped_slots: 1,
                 retried_slots: 2,
@@ -169,6 +186,9 @@ mod tests {
         assert!((v.req_f64("wire_upload_bytes").unwrap() - 132.0).abs() < 1e-9);
         assert!((v.req_f64("wire_download_bytes").unwrap() - 70.0).abs() < 1e-9);
         assert!((v.req_f64("transport_bytes").unwrap() - 180.0).abs() < 1e-9);
+        // absorb-contention counters land next to the transport bytes
+        assert!((v.req_f64("absorb_stalls").unwrap() - 4.0).abs() < 1e-9);
+        assert!((v.req_f64("parked_bytes").unwrap() - 264.0).abs() < 1e-9);
         // cohort membership lands next to the byte accounting
         assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
         assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
@@ -191,6 +211,8 @@ mod tests {
                 wire_upload_bytes: 0,
                 wire_download_bytes: 0,
                 transport_bytes: 0,
+                absorb_stalls: 0,
+                parked_bytes: 0,
                 participants: 1,
                 dropped_slots: 0,
                 retried_slots: 0,

@@ -64,6 +64,28 @@ pub fn for_each_f32_le(bytes: &[u8], f: &mut dyn FnMut(f32)) {
     }
 }
 
+/// `dst[i] += weight * decode_f32_le(bytes)[i]` for every `i`, in index
+/// order — the blocked fold the wire absorb path uses. Same per-cell op
+/// in the same order as streaming `for_each_f32_le` through an axpy
+/// closure, so the result is bitwise identical; the fixed-width block
+/// shape (decode 8 lanes, fold 8 lanes) is what the compiler can
+/// vectorize. The caller must have validated `bytes.len() == 4 * dst.len()`.
+pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+    use crate::util::kernels::LANES;
+    debug_assert_eq!(bytes.len(), 4 * dst.len());
+    let mut b = bytes.chunks_exact(4 * LANES);
+    let mut d = dst.chunks_exact_mut(LANES);
+    for (bb, db) in b.by_ref().zip(d.by_ref()) {
+        let db: &mut [f32; LANES] = db.try_into().unwrap();
+        for i in 0..LANES {
+            db[i] += weight * f32::from_le_bytes(bb[4 * i..4 * i + 4].try_into().unwrap());
+        }
+    }
+    for (bb, a) in b.remainder().chunks_exact(4).zip(d.into_remainder()) {
+        *a += weight * f32::from_le_bytes(bb.try_into().unwrap());
+    }
+}
+
 /// Walk a little-endian u32 byte slice in place (sparse index arrays).
 pub fn for_each_u32_le(bytes: &[u8], f: &mut dyn FnMut(u32)) {
     debug_assert_eq!(bytes.len() % 4, 0);
@@ -102,6 +124,25 @@ mod tests {
     fn rejects_ragged_payload() {
         assert!(f32s_from_le(&[0u8; 7]).is_err());
         assert!(f32s_from_le(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn axpy_matches_streamed_fold_bitwise() {
+        for n in [0usize, 1, 7, 8, 9, 31, 500] {
+            let vals: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).sin() * 50.0).collect();
+            let mut bytes = Vec::new();
+            extend_f32_le(&mut bytes, &vals);
+            let mut blocked: Vec<f32> = (0..n).map(|i| i as f32 * 0.125).collect();
+            let mut streamed = blocked.clone();
+            axpy_f32_le(&bytes, -1.75, &mut blocked);
+            let mut i = 0;
+            for_each_f32_le(&bytes, &mut |v| {
+                streamed[i] += -1.75 * v;
+                i += 1;
+            });
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&blocked), bits(&streamed), "n={n}");
+        }
     }
 
     #[test]

@@ -169,9 +169,10 @@ impl CountSketch {
         debug_assert!(rows.end <= self.rows());
         let cols = self.cols();
         let span = rows.start * cols..rows.end * cols;
-        for (a, &b) in self.table[span.clone()].iter_mut().zip(&other.table[span]) {
-            *a += scale * b;
-        }
+        // Blocked kernel: same per-cell `+= scale * b` in the same
+        // order as the scalar zip it replaced (§Perf, PR 6), so bits
+        // don't move.
+        crate::util::kernels::axpy(&mut self.table[span.clone()], &other.table[span], scale);
     }
 
     /// `dst_strip += self[rows]` where `dst_strip` is another table's
@@ -186,9 +187,7 @@ impl CountSketch {
         let cols = self.cols();
         let span = rows.start * cols..rows.end * cols;
         debug_assert_eq!(dst_strip.len(), span.len(), "strip/span length mismatch");
-        for (a, &b) in dst_strip.iter_mut().zip(&self.table[span]) {
-            *a += b;
-        }
+        crate::util::kernels::add(dst_strip, &self.table[span]);
     }
 
     /// `self *= scale` (e.g. momentum decay `rho * S_u`).

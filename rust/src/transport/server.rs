@@ -14,7 +14,13 @@
 //!   `begin_round → RoundStart to each worker → concurrent reads
 //!   streaming into the pipeline's `RoundInFlight` → row-strip reduce →
 //!   finish → RoundEnd broadcast → apply the *decoded* update`,
-//!   mirroring the trainer's wire mode exactly.
+//!   mirroring the trainer's wire mode exactly. Readers offer frames
+//!   straight from the transport read buffer (`offer_frame_bytes`) —
+//!   an in-shard-order arrival is folded without copying the payload,
+//!   and only truly-early frames are parked as owned bytes. The
+//!   in-flight round shards its lock, so readers delivering to
+//!   different shards absorb concurrently; contention that remains
+//!   shows up in [`RoundStats::absorb_stalls`].
 //! - Under the default strict [`QuorumPolicy`], any fault — bad frame,
 //!   bad slot, stalled peer (read deadline), oversize prefix,
 //!   disconnect — fails the round loudly: connections are dropped
@@ -141,6 +147,14 @@ pub struct RoundStats {
     /// message including length prefixes and control headers — the
     /// number a packet capture would report.
     pub transport_bytes: u64,
+    /// Times a reader found its target shard's absorb lock held and had
+    /// to block. Zero on an uncontended round; a persistently high
+    /// count means uploads are piling onto few shards.
+    pub absorb_stalls: u64,
+    /// Frame bytes copied out of the transport read buffer because the
+    /// upload arrived ahead of an earlier slot on its shard. Zero when
+    /// every arrival took the zero-copy path.
+    pub parked_bytes: u64,
 }
 
 enum ListenerKind {
@@ -371,7 +385,9 @@ impl RoundServer {
         // Concurrent upload readers: one thread per connection, all
         // streaming into one ordered in-flight round. Absorption
         // happens as frames arrive — the only synchronization is the
-        // round lock, never a cohort barrier. Under a tolerant quorum
+        // target shard's own lock (readers delivering to different
+        // shards fold concurrently), never a cohort barrier. Under a
+        // tolerant quorum
         // policy the readers double as the retry service: a faulted
         // connection's unserved slots land in a shared orphan queue,
         // and healthy readers that finish their own assignments pull
@@ -379,7 +395,7 @@ impl RoundServer {
         // (`SlotAssign`) until it arrives, its retry budget is spent,
         // or the round deadline fires.
         let absorber = match self.pipeline.begin(&spec, lambdas) {
-            Ok(a) => Mutex::new(a),
+            Ok(a) => a,
             Err(e) => {
                 self.abort_round("round pipeline setup failed");
                 return Err(e);
@@ -603,7 +619,9 @@ impl RoundServer {
             debug_assert_eq!(st.outstanding, 0);
         }
         let retry = retry.into_inner().expect("retry state poisoned");
-        let absorber = absorber.into_inner().expect("absorber poisoned");
+        // Snapshot contention counters before finish/abort consume the
+        // in-flight round.
+        let absorb = absorber.absorb_stats();
 
         // Settle the membership ledger.
         let mut membership = RoundMembership::new(slots, policy.clone())?;
@@ -742,6 +760,8 @@ impl RoundServer {
             wire_upload_bytes_per_client: wire_up0,
             wire_download_bytes_per_client: update_frame.len() as u64,
             transport_bytes,
+            absorb_stalls: absorb.lock_stalls,
+            parked_bytes: absorb.parked_bytes,
         })
     }
 
@@ -791,15 +811,17 @@ struct UploadRead {
 /// Read, validate, and absorb one upload from `conn`. `expect_slot` is
 /// the next slot this connection owes (clients deliver their assignment
 /// list in order, so anything else is a protocol violation). The frame
-/// is offered to the shared absorber *immediately* — this is the
-/// streaming-absorb path; the absorber parks it only if an earlier slot
-/// of the same shard is still outstanding.
+/// is offered to the shared absorber *immediately*, borrowed straight
+/// from the transport read buffer — this is the zero-copy
+/// streaming-absorb path; the absorber validates before taking any
+/// lock and copies the bytes out only if an earlier slot of the same
+/// shard is still outstanding.
 fn read_one_upload(
     conn: &mut Conn,
     expect_slot: u32,
     max_msg: usize,
     want_ideal: bool,
-    absorber: &Mutex<RoundInFlight>,
+    absorber: &RoundInFlight,
     probe: &AtomicUsize,
 ) -> Result<UploadRead> {
     let (bytes, bytes_in) = read_msg(conn, max_msg)?;
@@ -816,10 +838,10 @@ fn read_one_upload(
     // number only when this read improves its lowest-slot sample, so
     // the other slots don't pay an extra full parse.
     let ideal_bytes = if want_ideal { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
-    let mut ab = absorber.lock().expect("absorber lock poisoned");
-    ab.offer_frame(slot as usize, frame)?;
-    probe.store(ab.absorbed(), Ordering::SeqCst);
-    drop(ab);
+    absorber.offer_frame_bytes(slot as usize, &frame)?;
+    // `fetch_max`, not `store`: another reader may have raced a later
+    // snapshot in — the probe is monotone within a round.
+    probe.fetch_max(absorber.absorbed(), Ordering::SeqCst);
     Ok(UploadRead { loss, bytes_in, frame_bytes, ideal_bytes })
 }
 
@@ -868,6 +890,12 @@ pub struct ServeSummary {
     pub dropped_slots: u64,
     /// Slots that needed at least one retry/reassignment.
     pub retried_slots: u64,
+    /// Shard-lock stalls across the run (see
+    /// [`RoundStats::absorb_stalls`]).
+    pub absorb_stalls: u64,
+    /// Frame bytes parked out of order across the run (see
+    /// [`RoundStats::parked_bytes`]).
+    pub parked_bytes: u64,
 }
 
 /// Validate a configured serve deadline: finite, strictly positive,
@@ -941,6 +969,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
     let mut transport_bytes = 0u64;
     let mut dropped_slots = 0u64;
     let mut retried_slots = 0u64;
+    let mut absorb_stalls = 0u64;
+    let mut parked_bytes = 0u64;
     for round in 0..cfg.rounds {
         let lr = cfg.lr.at(round, cfg.rounds);
         let plan = crate::cohort::CohortPlan::sample(&selector, dataset.as_ref(), round);
@@ -960,6 +990,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         transport_bytes += stats.transport_bytes;
         dropped_slots += stats.dropped_slots as u64;
         retried_slots += stats.retried_slots as u64;
+        absorb_stalls += stats.absorb_stalls;
+        parked_bytes += stats.parked_bytes;
         comm.record_round(
             stats.participants,
             stats.upload_bytes_per_client,
@@ -978,6 +1010,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             wire_upload_bytes: stats.wire_upload_bytes_per_client * n,
             wire_download_bytes: stats.wire_download_bytes_per_client * n,
             transport_bytes: stats.transport_bytes,
+            absorb_stalls: stats.absorb_stalls,
+            parked_bytes: stats.parked_bytes,
             participants: stats.participants,
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,
@@ -1007,5 +1041,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         transport_bytes,
         dropped_slots,
         retried_slots,
+        absorb_stalls,
+        parked_bytes,
     })
 }

@@ -1,0 +1,89 @@
+//! Cache-blocked f32 slice kernels for the absorb/reduce hot path.
+//!
+//! The fixed-width block loops below give the compiler a shape it can
+//! autovectorize (a constant-trip-count inner loop over an array
+//! reference, no bounds checks) while performing exactly the same
+//! per-cell operation in exactly the same order as the scalar `zip`
+//! loops they replace — so the bitwise-determinism contract of
+//! `compression::aggregate` is untouched: within a slice the fold order
+//! is identical, element by element.
+//!
+//! `add` is kept separate from `axpy` rather than calling
+//! `axpy(dst, src, 1.0)`: the accumulate paths that historically did a
+//! bare `+=` must keep doing a bare `+=`, not a `+ 1.0 *` — we do not
+//! lean on `1.0 * x` being a bitwise identity for every f32.
+
+/// Block width of the inner loops. 8 f32 lanes = one 256-bit vector,
+/// and small enough that the scalar remainder is negligible.
+pub const LANES: usize = 8;
+
+/// `dst[i] += scale * src[i]` for every `i` (in index order).
+pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (db, sb) in d.by_ref().zip(s.by_ref()) {
+        let db: &mut [f32; LANES] = db.try_into().unwrap();
+        let sb: &[f32; LANES] = sb.try_into().unwrap();
+        for i in 0..LANES {
+            db[i] += scale * sb[i];
+        }
+    }
+    for (a, &b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *a += scale * b;
+    }
+}
+
+/// `dst[i] += src[i]` for every `i` (in index order).
+pub fn add(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (db, sb) in d.by_ref().zip(s.by_ref()) {
+        let db: &mut [f32; LANES] = db.try_into().unwrap();
+        let sb: &[f32; LANES] = sb.try_into().unwrap();
+        for i in 0..LANES {
+            db[i] += sb[i];
+        }
+    }
+    for (a, &b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference_including_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 63, 100] {
+            let src: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 100.0).collect();
+            let mut blocked: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let mut scalar = blocked.clone();
+            axpy(&mut blocked, &src, -0.625);
+            for (a, &b) in scalar.iter_mut().zip(&src) {
+                *a += -0.625 * b;
+            }
+            assert_eq!(bits(&blocked), bits(&scalar), "n={n}");
+        }
+    }
+
+    #[test]
+    fn add_matches_scalar_reference_including_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 63, 100] {
+            let src: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).sin() * 10.0).collect();
+            let mut blocked: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let mut scalar = blocked.clone();
+            add(&mut blocked, &src);
+            for (a, &b) in scalar.iter_mut().zip(&src) {
+                *a += b;
+            }
+            assert_eq!(bits(&blocked), bits(&scalar), "n={n}");
+        }
+    }
+}

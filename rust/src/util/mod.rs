@@ -5,6 +5,7 @@
 //! `rand`, `proptest`, or `statrs`; everything here is implemented from
 //! scratch and unit-tested in place.
 
+pub mod kernels;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

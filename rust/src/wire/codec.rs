@@ -22,7 +22,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::serialize::le::{extend_f32_le, for_each_f32_le};
+use crate::serialize::le::{axpy_f32_le, extend_f32_le, for_each_f32_le};
 
 /// A value codec: f32 sequence ↔ payload bytes.
 pub trait Codec: Send + Sync {
@@ -40,6 +40,19 @@ pub trait Codec: Send + Sync {
     /// has already validated against [`Codec::encoded_len`]) to `sink`,
     /// in order, without materializing an intermediate buffer.
     fn decode_values(&self, bytes: &[u8], sink: &mut dyn FnMut(f32));
+    /// `dst[i] += weight * decode(bytes)[i]` for every `i` in order —
+    /// the absorb-path fold. The default streams through
+    /// [`Codec::decode_values`]; codecs with a cheap fixed-width layout
+    /// (f32le) override with a blocked kernel that performs the same
+    /// per-cell op in the same order, so results stay bitwise identical.
+    fn axpy_values(&self, bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        let mut i = 0;
+        self.decode_values(bytes, &mut |v| {
+            dst[i] += weight * v;
+            i += 1;
+        });
+        debug_assert_eq!(i, dst.len());
+    }
 }
 
 /// Raw little-endian f32 (lossless default).
@@ -63,6 +76,9 @@ impl Codec for F32Le {
     }
     fn decode_values(&self, bytes: &[u8], sink: &mut dyn FnMut(f32)) {
         for_each_f32_le(bytes, sink);
+    }
+    fn axpy_values(&self, bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        axpy_f32_le(bytes, weight, dst);
     }
 }
 
@@ -256,6 +272,33 @@ mod tests {
         assert_eq!(f16_bits_to_f32(f32_to_f16_bits(2051.0)), 2052.0);
         // tiny values underflow to zero
         assert_eq!(f32_to_f16_bits(1e-9), 0);
+    }
+
+    #[test]
+    fn axpy_values_matches_streamed_fold_for_both_codecs() {
+        check("axpy_values == decode fold", 30, |g| {
+            // Lengths deliberately straddle the 8-lane block boundary.
+            let vals = g.vec_f32(1, 70, -1000.0, 1000.0);
+            for codec in [&F32LE as &dyn Codec, &F16LE as &dyn Codec] {
+                let mut bytes = Vec::new();
+                codec.encode_values(&vals, &mut bytes);
+                let weight = g.f32_in(-2.0, 2.0);
+                let mut blocked: Vec<f32> = (0..vals.len()).map(|i| i as f32 * 0.25).collect();
+                let mut streamed = blocked.clone();
+                codec.axpy_values(&bytes, weight, &mut blocked);
+                let mut i = 0;
+                codec.decode_values(&bytes, &mut |v| {
+                    streamed[i] += weight * v;
+                    i += 1;
+                });
+                assert_eq!(
+                    blocked.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    streamed.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "codec {}",
+                    codec.name()
+                );
+            }
+        });
     }
 
     #[test]

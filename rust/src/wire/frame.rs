@@ -66,6 +66,15 @@ impl Values<'_> {
         self.codec.decode_values(self.bytes, sink);
     }
 
+    /// `dst[i] += weight * value[i]` for every value, in order — the
+    /// blocked absorb fold ([`crate::wire::codec::Codec::axpy_values`]).
+    /// Bitwise identical to streaming [`Values::for_each`] through the
+    /// same fold. `dst.len()` must equal [`Values::len`].
+    pub fn axpy_into(&self, weight: f32, dst: &mut [f32]) {
+        debug_assert_eq!(self.n, dst.len());
+        self.codec.axpy_values(self.bytes, weight, dst);
+    }
+
     /// Materialize (frame→struct decode; tests).
     pub fn to_vec(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.n);

@@ -354,6 +354,8 @@ fn disconnect_and_straggler_round_completes_at_quorum() {
             wire_upload_bytes: stats.wire_upload_bytes_per_client * n,
             wire_download_bytes: stats.wire_download_bytes_per_client * n,
             transport_bytes: stats.transport_bytes,
+            absorb_stalls: stats.absorb_stalls,
+            parked_bytes: stats.parked_bytes,
             participants: stats.participants,
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,

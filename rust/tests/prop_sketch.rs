@@ -342,3 +342,126 @@ fn prop_strip_parallel_shard_reduce_is_bitwise_equal_to_sequential() {
         }
     });
 }
+
+#[test]
+fn prop_blocked_kernels_match_scalar_reference_bitwise() {
+    // PR 6's cache-blocked kernels (`util::kernels`, the LE byte walk,
+    // and `add_scaled_rows` on top of them) must perform the same
+    // per-cell operation in the same order as the scalar loops they
+    // replaced — bitwise, over lengths that land on, under, and past
+    // the 8-lane block boundary, and over random sketch geometries.
+    use fetchsgd::serialize::le::{axpy_f32_le, extend_f32_le};
+    use fetchsgd::util::kernels;
+    check("blocked kernels == scalar", 30, |g| {
+        let n = g.usize_in(1, 700);
+        let src = g.vec_f32(n, n + 1, -3.0, 3.0);
+        let base = g.vec_f32(n, n + 1, -3.0, 3.0);
+        let scale = g.f32_in(-2.0, 2.0);
+
+        // axpy: dst[i] += scale * src[i]
+        let mut got = base.clone();
+        kernels::axpy(&mut got, &src, scale);
+        for i in 0..n {
+            let want = base[i] + scale * src[i];
+            assert_eq!(got[i].to_bits(), want.to_bits(), "axpy diverged at {i} (n={n})");
+        }
+
+        // add: dst[i] += src[i] (its own kernel, not axpy(scale=1))
+        let mut got = base.clone();
+        kernels::add(&mut got, &src);
+        for i in 0..n {
+            let want = base[i] + src[i];
+            assert_eq!(got[i].to_bits(), want.to_bits(), "add diverged at {i} (n={n})");
+        }
+
+        // the blocked LE byte walk: dst[i] += w * decode(bytes[4i..])
+        let mut bytes = Vec::new();
+        extend_f32_le(&mut bytes, &src);
+        let mut got = base.clone();
+        axpy_f32_le(&bytes, scale, &mut got);
+        for i in 0..n {
+            let want = base[i] + scale * src[i];
+            assert_eq!(got[i].to_bits(), want.to_bits(), "le axpy diverged at {i} (n={n})");
+        }
+
+        // add_scaled_rows over a random geometry rides the same kernel.
+        let rows = g.usize_in(1, 9);
+        let cols = 1usize << g.usize_in(5, 12);
+        let d = g.usize_in(10, 400);
+        let a = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let b = g.vec_f32(d, d + 1, -2.0, 2.0);
+        let dst0 = CountSketch::encode(rows, cols, SEED, &a).unwrap();
+        let sb = CountSketch::encode(rows, cols, SEED, &b).unwrap();
+        let mut blocked = dst0.clone();
+        blocked.add_scaled_rows(&sb, scale, 0..rows);
+        for (i, ((&acc, &x), &y)) in
+            dst0.table().iter().zip(sb.table()).zip(blocked.table()).enumerate()
+        {
+            let want = acc + scale * x;
+            assert_eq!(want.to_bits(), y.to_bits(), "add_scaled_rows diverged at cell {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_lock_absorb_matches_sequential_reduce() {
+    // The per-shard-lock stress test: many workers offering frames in
+    // an adversarial (shuffled) arrival order through the lock-free
+    // claim layer and per-shard mutexes must finish to bits identical
+    // to a single thread offering every slot in order.
+    use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
+    use fetchsgd::compression::{ClientUpload, UploadSpec};
+    use fetchsgd::wire::{encode_upload, F32LE};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    check("sharded-lock absorb == sequential", 10, |g| {
+        let d = g.usize_in(50, 400);
+        let slots = g.usize_in(2, 40);
+        let spec = UploadSpec::Sketch { rows: ROWS, cols: COLS, dim: d, seed: SEED };
+        let frames: Vec<Vec<u8>> = (0..slots)
+            .map(|_| {
+                let v = g.vec_f32(d, d + 1, -2.0, 2.0);
+                let s = CountSketch::encode(ROWS, COLS, SEED, &v).unwrap();
+                encode_upload(&ClientUpload::Sketch(s), &F32LE)
+            })
+            .collect();
+        let weights: Vec<f32> = (0..slots).map(|_| g.f32_in(0.1, 1.0)).collect();
+
+        // Sequential reference: one thread, slot order.
+        let mut pl = RoundPipeline::new(PipelineOptions::default());
+        let seq = pl.begin(&spec, weights.clone()).unwrap();
+        for (slot, f) in frames.iter().enumerate() {
+            seq.offer_frame(slot, f.clone()).unwrap();
+        }
+        let seq = pl.finish(seq).unwrap();
+
+        // Adversarial order: Fisher-Yates shuffle of the slots, eight
+        // workers racing to pull the next shuffled slot and offer its
+        // frame zero-copy.
+        let mut order: Vec<usize> = (0..slots).collect();
+        for i in (1..slots).rev() {
+            order.swap(i, g.usize_in(0, i + 1));
+        }
+        let mut pl2 = RoundPipeline::new(PipelineOptions::default());
+        let round = pl2.begin(&spec, weights).unwrap();
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::SeqCst);
+                    if i >= order.len() {
+                        break;
+                    }
+                    let slot = order[i];
+                    round.offer_frame_bytes(slot, &frames[slot]).unwrap();
+                });
+            }
+        });
+        assert!(round.is_complete());
+        let par = pl2.finish(round).unwrap();
+
+        for (a, b) in seq.as_sketch().unwrap().table().iter().zip(par.as_sketch().unwrap().table())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "sharded-lock absorb diverged (slots={slots})");
+        }
+    });
+}

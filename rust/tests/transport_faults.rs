@@ -218,6 +218,86 @@ fn faults_fail_loudly_and_leave_the_server_reusable() {
     );
 }
 
+/// Regression for the PR-6 pre-lock validation fix: a corrupt upload
+/// frame is rejected *before* any round-state lock is taken, so the
+/// slot is never claimed by garbage — under a tolerant quorum policy it
+/// is reassigned to a healthy worker and the round completes with every
+/// slot arrived, bitwise identical to a clean in-process round.
+#[test]
+fn corrupt_frame_slot_is_retryable_and_round_completes() {
+    use fetchsgd::cohort::QuorumPolicy;
+
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(10),
+        accept_timeout: Duration::from_secs(20),
+        // Full quorum + retry budget: the round may only succeed if the
+        // corrupted slot really is re-offered and served.
+        quorum: QuorumPolicy::new(1.0, 0, 2).unwrap(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants = [0usize, 1];
+    let sizes = [1.0f32, 1.0];
+    let seed = round_seed(77);
+
+    let stats = std::thread::scope(|s| {
+        // Healthy worker: a real `join` client, so it can serve the
+        // reassigned slot (`SlotAssign`) after its own.
+        let ep2 = actual.clone();
+        s.spawn(move || {
+            let artifacts = sim_artifacts(DIM, 1, 64, 1).unwrap();
+            let dataset = SimDataset { num_clients: NUM_CLIENTS };
+            let client = SimDenseClient { dim: DIM, heavy: HEAVY };
+            let opts =
+                JoinOptions { read_timeout: Some(Duration::from_secs(20)), ..Default::default() };
+            let sum = join(&ep2, &client, &dataset, &artifacts, &opts).unwrap();
+            assert_eq!(sum.rounds, 1);
+        });
+        // Evil worker: corrupts its own upload's magic, then lingers.
+        let ep2 = actual.clone();
+        s.spawn(move || {
+            let mut conn = Conn::connect(&ep2).unwrap();
+            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
+                .unwrap();
+            let (seed, assignments) = start_round(&mut conn);
+            let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
+            evil_corrupt_magic(&mut conn, slot, seed);
+            let _ = read_msg(&mut conn, 64 << 20);
+        });
+        let params = RoundParams {
+            round: 0,
+            round_seed: seed,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        srv.shutdown();
+        stats
+    });
+
+    assert_eq!(stats.participants, 2, "both slots must arrive after reassignment");
+    assert_eq!(stats.dropped_slots, 0);
+    assert!(stats.retried_slots >= 1, "the corrupted slot must have been retried");
+
+    // The reassigned slot's upload replaced the corrupt one cleanly:
+    // weights equal the in-process reference over both clients.
+    let mut w_ref = vec![0f32; DIM];
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    let uploads: Vec<ClientUpload> = participants
+        .iter()
+        .map(|&c| ClientUpload::Dense(synth_grad(DIM, HEAVY, c, seed)))
+        .collect();
+    run_server_round(&mut agg_ref, &sizes, uploads, &mut w_ref, LR).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&w_ref), bits(&w), "reassigned round diverged from the clean reference");
+}
+
 /// A peer speaking the wrong *transport* protocol version is dropped at
 /// the handshake; a well-behaved pool still gets served.
 #[test]
