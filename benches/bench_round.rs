@@ -4,7 +4,7 @@
 //! committed `BENCH_*.json` baselines); `BENCH_SMOKE=1` runs only a
 //! short-iteration absorb-scaling pass (the CI smoke step).
 //!
-//! Five sections:
+//! Six sections:
 //!
 //! 0. **Absorb scaling (no artifacts needed)** — N workers racing
 //!    pre-encoded sketch frames into one in-flight round: the PR-6
@@ -22,10 +22,16 @@
 //!    with 0% / 20% / 50% of clients dropped at a 0.5 quorum, so the
 //!    cost of membership bookkeeping and dropped-slot renormalization
 //!    shows up in the perf trajectory.
-//! 3. **Codec throughput (no artifacts needed)** — encode/decode GB/s
+//! 3. **Relay fan-out (no artifacts needed)** — the same served round
+//!    flat (4 direct socket workers) vs through a 2-level tree (2
+//!    relays) at downstream fan-out 4 and 16, over loopback TCP. Each
+//!    result's `elements` field records the measured root-link bytes
+//!    per round, which must not move with fan-out: the root sees one
+//!    merged frame per relay no matter how many workers sit below.
+//! 4. **Codec throughput (no artifacts needed)** — encode/decode GB/s
 //!    per wire codec over a dense-payload-sized value buffer, bounding
 //!    what wire mode costs on top of client compute.
-//! 4. **Artifact round decomposition (requires `make artifacts`)** —
+//! 5. **Artifact round decomposition (requires `make artifacts`)** —
 //!    client compute (PJRT execution of the fused grad+sketch HLO),
 //!    server sketch update, and data generation, establishing where the
 //!    bottleneck sits (the paper's contribution is the coordinator; it
@@ -299,6 +305,126 @@ fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
     Ok(results)
 }
 
+/// Relay fan-out: a flat served round vs a 2-level tree (2 relays) at
+/// downstream fan-out 4 and 16, over loopback TCP. The wall clock
+/// tracks what the extra hop costs; the `elements` field rides along
+/// with the measured root-link bytes per round, which must be
+/// independent of fan-out — the root receives one merged frame per
+/// relay regardless of how many workers sit below it.
+fn relay_fanout() -> anyhow::Result<Vec<BenchResult>> {
+    use fetchsgd::relay::{Relay, RelayOptions};
+    use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
+
+    const DIM: usize = 200_000;
+    const ROWS: usize = 5;
+    const COLS: usize = 4096;
+    const SEED: u64 = 7;
+    const COHORT: usize = 64;
+    const RELAYS: usize = 2;
+    let timeout = std::time::Duration::from_secs(60);
+
+    let dataset = SimDataset { num_clients: 10_000 };
+    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 8 };
+    let participants: Vec<usize> = (0..COHORT).collect();
+    let mut results = Vec::new();
+
+    // fanout 0 = the flat baseline: 4 direct workers with the shard
+    // layout pinned to the relay count, so the fold matches the trees
+    // bit for bit and only topology moves the clock.
+    let configs = [("flat workers=4", 0usize), ("tree fanout=4", 4), ("tree fanout=16", 16)];
+    for (label, fanout) in configs {
+        let mut server = FetchSgdServer::new(
+            ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+        )?;
+        let opts = if fanout == 0 {
+            ServeOptions {
+                workers: 4,
+                shards: RELAYS,
+                read_timeout: timeout,
+                accept_timeout: timeout,
+                ..Default::default()
+            }
+        } else {
+            ServeOptions {
+                workers: 0,
+                relay_children: RELAYS,
+                read_timeout: timeout,
+                accept_timeout: timeout,
+                ..Default::default()
+            }
+        };
+        let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts)?;
+        let root = srv.local_endpoint()?;
+        let mut w = vec![0f32; DIM];
+        let cref = &client;
+        let dref = &dataset;
+        let (mut r, root_bytes) = std::thread::scope(|s| {
+            let mut spawn_worker = |ep: Endpoint| {
+                s.spawn(move || {
+                    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                    let opts = JoinOptions { read_timeout: Some(timeout), ..Default::default() };
+                    let _ = join(&ep, cref, dref, &artifacts, &opts);
+                });
+            };
+            if fanout == 0 {
+                for _ in 0..4 {
+                    spawn_worker(root.clone());
+                }
+            } else {
+                for _ in 0..RELAYS {
+                    let mut node = Relay::bind(
+                        &Endpoint::Tcp("127.0.0.1:0".into()),
+                        RelayOptions {
+                            workers: fanout,
+                            read_timeout: timeout,
+                            accept_timeout: timeout,
+                            ..Default::default()
+                        },
+                    )
+                    .expect("relay bind");
+                    let down = node.local_endpoint().expect("relay endpoint");
+                    let up = root.clone();
+                    s.spawn(move || {
+                        let _ = node.run(&up);
+                    });
+                    for _ in 0..fanout {
+                        spawn_worker(down.clone());
+                    }
+                }
+            }
+            let mut round = 0u64;
+            let mut bytes = 0u64;
+            let mut rounds = 0u64;
+            let r = bench(&format!("served round W={COHORT} d=200k {label}"), 1, 4, || {
+                round += 1;
+                let sizes: Vec<f32> =
+                    participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
+                let params = RoundParams {
+                    round,
+                    round_seed: round,
+                    lr: 0.1,
+                    participants: &participants,
+                    client_sizes: &sizes,
+                };
+                let stats = srv.run_round(&mut server, &params, &mut w).expect("served round");
+                bytes += stats.transport_bytes;
+                rounds += 1;
+                stats.participants
+            });
+            srv.shutdown();
+            (r, bytes / rounds)
+        });
+        r.elements = Some(root_bytes);
+        eprintln!(
+            "  {label:<16} {:>8.1} ms/round  root link {:>9} B/round",
+            r.mean_s * 1e3,
+            root_bytes
+        );
+        results.push(r);
+    }
+    Ok(results)
+}
+
 fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut counts = vec![1usize, 2, 4];
@@ -359,6 +485,9 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!("== participation sweep (full vs 80% vs 50% arrival at a 0.5 quorum) ==");
     results.extend(participation_sweep()?);
+
+    eprintln!("== relay fan-out (flat vs 2-level tree over loopback TCP) ==");
+    results.extend(relay_fanout()?);
 
     eprintln!("== wire codec throughput (encode/decode, dense 4M-value payload) ==");
     results.extend(codec_throughput());

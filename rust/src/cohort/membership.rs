@@ -144,6 +144,30 @@ impl RoundMembership {
         self.dropped += 1;
     }
 
+    /// Roll up a subtree-reported outcome into this (root-tier)
+    /// membership — the relay-tree path, where the slot's events
+    /// happened on another tier and arrive as one settled fact. A
+    /// `Retried(n)` report charges the downstream retries against the
+    /// slot without consulting *this* tier's retry budget: the
+    /// downstream policy already spent its own budget, and the root
+    /// only accounts. `Pending` is not a reportable outcome.
+    pub fn record_report(&mut self, slot: usize, outcome: SlotOutcome) {
+        match outcome {
+            SlotOutcome::Pending => panic!("a subtree report cannot be pending (slot {slot})"),
+            SlotOutcome::Arrived => self.record_arrival(slot),
+            SlotOutcome::Retried(n) => {
+                assert!(n >= 1, "Retried(0) reported for slot {slot}");
+                assert!(
+                    matches!(self.outcomes[slot], SlotOutcome::Pending),
+                    "report recorded for settled slot {slot}"
+                );
+                self.retries[slot] += n;
+                self.record_arrival(slot);
+            }
+            SlotOutcome::Dropped(reason) => self.record_drop(slot, reason),
+        }
+    }
+
     pub fn outcome(&self, slot: usize) -> SlotOutcome {
         self.outcomes[slot]
     }
@@ -315,5 +339,74 @@ mod tests {
     #[test]
     fn empty_rounds_are_rejected() {
         assert!(RoundMembership::new(0, QuorumPolicy::strict()).is_err());
+    }
+
+    #[test]
+    fn subtree_reports_roll_up_without_local_retry_budget() {
+        // max_slot_retries = 0 at this tier: a Retried(2) report must
+        // still land (the downstream tier spent its own budget) and be
+        // charged to the retried-slots summary.
+        let mut m = RoundMembership::new(4, policy(0.5, 0)).unwrap();
+        m.record_report(0, SlotOutcome::Arrived);
+        m.record_report(1, SlotOutcome::Retried(2));
+        m.record_report(2, SlotOutcome::Dropped(DropReason::Disconnected));
+        m.record_report(3, SlotOutcome::Dropped(DropReason::Deadline));
+        assert!(m.is_settled());
+        assert_eq!(m.outcome(1), SlotOutcome::Retried(2));
+        assert_eq!(m.outcome(2), SlotOutcome::Dropped(DropReason::Disconnected));
+        assert_eq!(
+            m.summary(),
+            MembershipSummary { participants: 2, dropped_slots: 2, retried_slots: 1 }
+        );
+    }
+
+    #[test]
+    fn quorum_is_global_not_per_subtree() {
+        // Slots {0,2,4} form one subtree that lost everything — locally
+        // 0% arrival, far under quorum — while {1,3,5} fully arrived.
+        // The decision belongs to the root over the whole cohort: 3 of
+        // 6 meets the 0.5 target, so the round closes.
+        let mut m = RoundMembership::new(6, policy(0.5, 0)).unwrap();
+        for slot in [0, 2, 4] {
+            m.record_report(slot, SlotOutcome::Dropped(DropReason::Faulted));
+        }
+        for slot in [1, 3, 5] {
+            m.record_report(slot, SlotOutcome::Arrived);
+        }
+        assert!(m.is_settled());
+        assert!(m.quorum_met());
+        assert_eq!(m.arrived_slots(), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn zero_participant_subtree_still_settles_the_round() {
+        // A relay that answers with all-dropped reports (or an empty
+        // chain) contributes only drops; the round settles and the
+        // renormalization scale is a function of the surviving set.
+        let mut m = RoundMembership::new(4, policy(0.25, 0)).unwrap();
+        m.record_report(0, SlotOutcome::Dropped(DropReason::Disconnected));
+        m.record_report(2, SlotOutcome::Dropped(DropReason::Disconnected));
+        m.record_report(1, SlotOutcome::Arrived);
+        m.record_report(3, SlotOutcome::Arrived);
+        assert!(m.is_settled() && m.quorum_met() && !m.is_full());
+        let s = m.renormalization_scale(&[0.25, 0.25, 0.25, 0.25]).unwrap();
+        assert!((s - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "settled slot")]
+    fn duplicate_slot_across_tiers_is_a_driver_bug() {
+        // Two subtrees both claiming slot 1 must fail loudly — silent
+        // double-counting would corrupt the round.
+        let mut m = RoundMembership::new(2, policy(0.5, 0)).unwrap();
+        m.record_report(1, SlotOutcome::Arrived);
+        m.record_report(1, SlotOutcome::Arrived);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be pending")]
+    fn pending_reports_are_rejected() {
+        let mut m = RoundMembership::new(1, policy(0.5, 0)).unwrap();
+        m.record_report(0, SlotOutcome::Pending);
     }
 }

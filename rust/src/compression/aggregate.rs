@@ -38,7 +38,14 @@
 //! - [`RoundInFlight::offer_frame_bytes`] — the zero-copy variant:
 //!   absorbs straight from a borrowed transport read buffer when the
 //!   frame arrives in-shard-order, copying to an owned parking buffer
-//!   only for truly-early arrivals.
+//!   only for truly-early arrivals;
+//! - [`RoundInFlight::offer_chain_frame`] — a *merged* frame from an
+//!   aggregator relay covering one whole shard chain (tree
+//!   aggregation). Sketches and dense accumulators are linear, so a
+//!   relay's λ-weighted partial sum absorbs with weight 1.0 into an
+//!   untouched shard and reproduces the per-slot fold bit for bit;
+//!   `PipelineOptions::shard_override` pins the layout so flat and tree
+//!   drivers agree on which chain holds which slots.
 //!
 //! Determinism contract: for a fixed *shard layout*, the merged result
 //! is bitwise identical no matter how many workers produced the uploads,
@@ -61,7 +68,7 @@ use crate::util::kernels;
 use crate::cohort::RoundMembership;
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 use crate::sketch::CountSketch;
-use crate::wire::{Body, Frame};
+use crate::wire::{Body, Frame, F32LE};
 
 /// Upper bound on shard accumulators per round. Bounds both the final
 /// fan-in cost and the scratch memory (`MAX_SHARDS` dense vectors /
@@ -416,6 +423,16 @@ pub struct PipelineOptions {
     /// accumulator geometry; this only sets how many threads fold the
     /// strips.
     pub reduce_parallelism: usize,
+    /// Fixed shard count (0 = the default [`shard_count`] layout).
+    /// Changing the layout changes which bits come out — this exists so
+    /// *different drivers can agree on one layout*: a relay-tree root
+    /// sets it to the relay fan-in `R` (each relay then owns exactly
+    /// one shard chain, see [`RoundInFlight::offer_chain_frame`]), a
+    /// relay sets it to 1 (its whole subtree is one chain), and a flat
+    /// server or the in-process engine sets it to the same `R` to
+    /// reproduce the tree's merged bits exactly. Capped at the slot
+    /// count, not at [`MAX_SHARDS`].
+    pub shard_override: usize,
 }
 
 /// The one round-aggregation pipeline, shared by the in-process engine
@@ -458,12 +475,18 @@ impl RoundPipeline {
     /// `shard_count(slots)` accumulators from the pool (spec-compatible
     /// ones are reset in place — in parallel for large tables — and
     /// anything else is dropped and rebuilt) and hand back the
-    /// in-flight round state.
+    /// in-flight round state. `PipelineOptions::shard_override`
+    /// replaces the default layout with a fixed shard count (capped at
+    /// the slot count — a shard chain cannot be emptier than empty).
     pub fn begin(&mut self, spec: &UploadSpec, weights: Vec<f32>) -> Result<RoundInFlight> {
         if weights.is_empty() {
             bail!("a round needs at least one participant slot");
         }
-        let shards = shard_count(weights.len());
+        let shards = if self.opts.shard_override > 0 {
+            self.opts.shard_override.min(weights.len())
+        } else {
+            shard_count(weights.len())
+        };
         self.pool.retain(|a| a.matches_spec(spec));
         while self.pool.len() < shards {
             self.pool.push(RoundAccum::new(spec)?);
@@ -597,6 +620,31 @@ impl RoundPipeline {
         self.pool.extend(shards);
         merged.scale(scale);
         Ok(merged)
+    }
+
+    /// Close a *relay's* subtree round: merge whatever arrived, with no
+    /// quorum check and no renormalization — both belong to the root,
+    /// which sees the whole cohort. A relay only reports; `Ok(None)`
+    /// means a zero-participant subtree (nothing arrived, nothing to
+    /// forward). Parked arrivals whose in-shard predecessors dropped
+    /// are drained in increasing slot order first, exactly as
+    /// [`RoundPipeline::finalize_partial`] would, so the partial sum the
+    /// relay forwards is the same pure function of (weights, arrived
+    /// set) the root would have computed over those slots itself.
+    pub fn finalize_subtree(&mut self, mut round: RoundInFlight) -> Result<Option<RoundAccum>> {
+        if let Err(e) = round.drain_parked() {
+            self.pool.extend(round.into_accums());
+            return Err(e);
+        }
+        if round.absorbed() == 0 {
+            self.pool.extend(round.into_accums());
+            return Ok(None);
+        }
+        let mut shards = round.into_accums();
+        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
+        let merged = shards.swap_remove(0);
+        self.pool.extend(shards);
+        Ok(Some(merged))
     }
 
     /// Abandon a round, returning every shard accumulator to the pool —
@@ -814,6 +862,101 @@ impl RoundInFlight {
         st.done += 1;
         self.absorbed.fetch_add(1, Ordering::SeqCst);
         self.drain_successors(&mut st, shard)
+    }
+
+    /// Hand shard chain `chain` a *merged* frame covering the `arrived`
+    /// slots — the relay-tree root's path. A relay folded its
+    /// downstream uploads, each weighted by its global λ, into one
+    /// accumulator in increasing global-slot order; because the root's
+    /// shard layout assigns exactly the slots `{s : s % nshards ==
+    /// chain}` to shard `chain`, absorbing that partial sum with weight
+    /// 1.0 into the untouched shard reproduces, bit for bit, the
+    /// per-slot fold the shard would have performed itself (`1.0 · x`
+    /// is exact, and the relay↔root hop is required to be lossless
+    /// `f32le`).
+    ///
+    /// `arrived` must list the chain's delivered slots in strictly
+    /// increasing order; every one is claimed in the lock-free
+    /// membership layer (so a slot delivered by two subtrees is a loud
+    /// duplicate, not silent double-counting), and the shard must be
+    /// untouched — a merged frame owns its whole chain and cannot mix
+    /// with per-slot uploads. On any failure nothing is absorbed and
+    /// every claim is released, so fault attribution stays on this
+    /// chain: the caller drops the subtree's slot range and the round
+    /// can still close at quorum.
+    pub fn offer_chain_frame(&self, chain: usize, arrived: &[usize], frame: &[u8]) -> Result<()> {
+        let nshards = self.shards.len();
+        if chain >= nshards {
+            bail!("chain {chain} out of range (round has {nshards} shard chains)");
+        }
+        if arrived.is_empty() {
+            bail!("a merged chain frame must cover at least one arrived slot");
+        }
+        let mut prev: Option<usize> = None;
+        for &slot in arrived {
+            if slot >= self.weights.len() {
+                let slots = self.weights.len();
+                bail!("chain {chain} reports slot {slot} out of range (round has {slots})");
+            }
+            if shard_of(slot, nshards) != chain {
+                let owner = shard_of(slot, nshards);
+                bail!("chain {chain} reports slot {slot}, which belongs to chain {owner}");
+            }
+            if prev.is_some_and(|p| p >= slot) {
+                bail!("chain {chain} reports arrived slots out of order");
+            }
+            prev = Some(slot);
+        }
+        // Parse + validate before claiming anything (same policy as
+        // route_frame: a corrupt frame never holds round state).
+        let parsed = match Frame::parse(frame)
+            .and_then(|f| self.spec.validate_frame(&f).map(|()| f))
+            .and_then(|f| {
+                if f.codec.id() != F32LE.id() {
+                    bail!("merged chain frames must use the lossless f32le codec");
+                }
+                if matches!(self.spec, UploadSpec::Dense { .. })
+                    && matches!(f.body, Body::Sparse { .. })
+                {
+                    bail!("a merged chain frame over a dense accumulator cannot be sparse");
+                }
+                Ok(f)
+            }) {
+            Ok(f) => f,
+            Err(e) => {
+                return Err(e.context(format!("validating merged frame for chain {chain}")))
+            }
+        };
+        for (i, &slot) in arrived.iter().enumerate() {
+            if self.seen[slot].swap(true, Ordering::AcqRel) {
+                for &s in &arrived[..i] {
+                    self.release(s);
+                }
+                bail!("chain {chain}: slot {slot} was already delivered by another peer");
+            }
+        }
+        let mut st = self.lock_shard(chain);
+        if st.done != 0 || !st.pending.is_empty() {
+            drop(st);
+            for &s in arrived {
+                self.release(s);
+            }
+            bail!(
+                "chain {chain} already received per-slot uploads; a merged frame \
+                 must own its whole chain"
+            );
+        }
+        if let Err(e) = st.accum.absorb_frame(&parsed, 1.0) {
+            drop(st);
+            for &s in arrived {
+                self.release(s);
+            }
+            return Err(e.context(format!("absorbing merged frame for chain {chain}")));
+        }
+        st.done += arrived.len();
+        drop(st);
+        self.absorbed.fetch_add(arrived.len(), Ordering::SeqCst);
+        Ok(())
     }
 
     /// Claim `slot` in the lock-free membership layer: range check plus
@@ -1476,5 +1619,216 @@ mod tests {
                 1.0
             )
             .is_err());
+    }
+
+    /// Simulate one relay: fold `chain_slots`' uploads (global λ, local
+    /// slot order = ascending global slot order) through a 1-shard
+    /// pipeline and encode the merged partial sum as a lossless frame.
+    fn relay_merge(
+        spec: &UploadSpec,
+        frames: &[Vec<u8>],
+        weights: &[f32],
+        chain_slots: &[usize],
+        arrived: &[usize],
+    ) -> Option<Vec<u8>> {
+        let mut pl = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: 1,
+            shard_override: 1,
+        });
+        let lams: Vec<f32> = chain_slots.iter().map(|&s| weights[s]).collect();
+        let r = pl.begin(spec, lams).unwrap();
+        for (local, &slot) in chain_slots.iter().enumerate() {
+            if arrived.contains(&slot) {
+                r.offer_frame_bytes(local, &frames[slot]).unwrap();
+            }
+        }
+        let merged = pl.finalize_subtree(r).unwrap()?;
+        Some(match spec {
+            UploadSpec::Sketch { .. } => {
+                crate::wire::encode_sketch_frame(merged.as_sketch().unwrap(), &F32LE)
+            }
+            UploadSpec::Dense { .. } => {
+                crate::wire::encode_dense_frame(merged.as_dense().unwrap(), &F32LE)
+            }
+        })
+    }
+
+    #[test]
+    fn chain_frames_reassociate_to_flat_bits() {
+        // The tree-determinism contract at the unit level: R relays,
+        // each owning one shard chain of a shard_override=R layout,
+        // merge their chains through 1-shard pipelines; the root
+        // absorbs the merged frames with weight 1.0. Bits must equal a
+        // flat per-slot round over the same layout — for sketch and
+        // dense specs, full and partial (quorum) membership.
+        use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
+        let mut rng = crate::util::Rng::new(53);
+        let slots = 9usize;
+        let nrelays = 3usize;
+        let weights: Vec<f32> = (0..slots).map(|i| 0.1 + 0.01 * i as f32).collect();
+        for spec in [sketch_spec(), UploadSpec::Dense { dim: 200 }] {
+            let uploads: Vec<ClientUpload> = (0..slots)
+                .map(|_| {
+                    let g: Vec<f32> = (0..200).map(|_| rng.next_gaussian() as f32).collect();
+                    match spec {
+                        UploadSpec::Sketch { .. } => {
+                            ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap())
+                        }
+                        UploadSpec::Dense { .. } => ClientUpload::Dense(g),
+                    }
+                })
+                .collect();
+            let frames: Vec<Vec<u8>> =
+                uploads.iter().map(|u| encode_upload(u, &F32LE)).collect();
+            let opts = PipelineOptions { reduce_parallelism: 1, shard_override: nrelays };
+            for dropped in [vec![], vec![4usize]] {
+                let arrived: Vec<usize> =
+                    (0..slots).filter(|s| !dropped.contains(s)).collect();
+                let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+                // Flat reference over the same fixed layout.
+                let mut flat = RoundPipeline::new(opts);
+                let r = flat.begin(&spec, weights.clone()).unwrap();
+                let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
+                for &slot in &arrived {
+                    r.offer_frame_bytes(slot, &frames[slot]).unwrap();
+                    m.record_arrival(slot);
+                }
+                for &slot in &dropped {
+                    m.record_drop(slot, DropReason::Disconnected);
+                }
+                let flat_merged = if dropped.is_empty() {
+                    flat.finish(r).unwrap()
+                } else {
+                    flat.finalize_partial(r, &m).unwrap()
+                };
+                // Tree: one merged frame per chain, absorbed at weight
+                // 1.0 into the same layout.
+                let mut root = RoundPipeline::new(opts);
+                let r = root.begin(&spec, weights.clone()).unwrap();
+                for chain in 0..nrelays {
+                    let chain_slots: Vec<usize> =
+                        (chain..slots).step_by(nrelays).collect();
+                    let chain_arrived: Vec<usize> = chain_slots
+                        .iter()
+                        .copied()
+                        .filter(|s| arrived.contains(s))
+                        .collect();
+                    if let Some(frame) =
+                        relay_merge(&spec, &frames, &weights, &chain_slots, &chain_arrived)
+                    {
+                        r.offer_chain_frame(chain, &chain_arrived, &frame).unwrap();
+                    }
+                }
+                assert_eq!(r.absorbed(), arrived.len());
+                let tree_merged = if dropped.is_empty() {
+                    root.finish(r).unwrap()
+                } else {
+                    root.finalize_partial(r, &m).unwrap()
+                };
+                let (a, b) = match spec {
+                    UploadSpec::Sketch { .. } => (
+                        flat_merged.as_sketch().unwrap().table().to_vec(),
+                        tree_merged.as_sketch().unwrap().table().to_vec(),
+                    ),
+                    UploadSpec::Dense { .. } => (
+                        flat_merged.as_dense().unwrap().to_vec(),
+                        tree_merged.as_dense().unwrap().to_vec(),
+                    ),
+                };
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "spec {spec:?} dropped {dropped:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offer_chain_frame_validates_and_releases_on_failure() {
+        let spec = UploadSpec::Dense { dim: 8 };
+        let dense_frame =
+            |v: f32| crate::wire::encode_dense_frame(&vec![v; 8], &F32LE);
+        let opts = PipelineOptions { reduce_parallelism: 1, shard_override: 2 };
+        let mut pl = RoundPipeline::new(opts);
+        let r = pl.begin(&spec, vec![1.0; 6]).unwrap();
+        // Chain / slot-list structural violations.
+        assert!(r.offer_chain_frame(2, &[0], &dense_frame(1.0)).is_err(), "chain out of range");
+        assert!(r.offer_chain_frame(0, &[], &dense_frame(1.0)).is_err(), "empty arrival list");
+        assert!(r.offer_chain_frame(0, &[1], &dense_frame(1.0)).is_err(), "slot 1 is chain 1's");
+        assert!(r.offer_chain_frame(0, &[4, 2], &dense_frame(1.0)).is_err(), "out of order");
+        assert!(r.offer_chain_frame(0, &[0, 8], &dense_frame(1.0)).is_err(), "slot range");
+        // Frame-level violations never claim a slot.
+        let mut bad = dense_frame(1.0);
+        bad[0] = b'X';
+        assert!(r.offer_chain_frame(0, &[0, 2], &bad).is_err(), "corrupt frame");
+        let lossy = crate::wire::encode_dense_frame(&vec![1.0; 8], &crate::wire::F16LE);
+        let err = r.offer_chain_frame(0, &[0, 2], &lossy).unwrap_err().to_string();
+        assert!(err.contains("f32le"), "{err}");
+        let sparse = encode_upload(
+            &ClientUpload::Sparse(SparseVec::from_pairs(8, vec![(1, 2.0)])),
+            &F32LE,
+        );
+        assert!(r.offer_chain_frame(0, &[0, 2], &sparse).is_err(), "sparse merged frame");
+        assert_eq!(r.absorbed(), 0);
+        // A healthy chain frame lands…
+        r.offer_chain_frame(0, &[0, 2], &dense_frame(2.0)).unwrap();
+        assert_eq!(r.absorbed(), 2);
+        // …and slot 4 (released by every failure above) is still
+        // deliverable — but not via a second merged frame for the same
+        // chain, whose shard is no longer untouched.
+        let err = r.offer_chain_frame(0, &[4], &dense_frame(1.0)).unwrap_err().to_string();
+        assert!(err.contains("whole chain"), "{err}");
+        r.offer_chain_frame(1, &[1, 3], &dense_frame(3.0)).unwrap();
+        let err = r.offer_chain_frame(1, &[5], &dense_frame(9.9)).unwrap_err().to_string();
+        assert!(err.contains("whole chain"), "{err}");
+        pl.abort(r);
+        // Per-slot uploads poison a chain for merged delivery.
+        let r = pl.begin(&spec, vec![1.0; 6]).unwrap();
+        r.offer_frame(0, dense_frame(1.0)).unwrap();
+        let err = r.offer_chain_frame(0, &[2, 4], &dense_frame(1.0)).unwrap_err().to_string();
+        assert!(err.contains("per-slot uploads"), "{err}");
+        // The failure released slots 2 and 4 — per-slot delivery still
+        // works, so the round can complete.
+        r.offer_frame(2, dense_frame(1.0)).unwrap();
+        r.offer_frame(4, dense_frame(1.0)).unwrap();
+        // Duplicate slot claimed by two tiers: slot 3 already arrived
+        // per-slot (parked early behind slot 1), so a chain-1 merged
+        // frame covering it is a loud duplicate that releases its fresh
+        // claim on slot 1.
+        r.offer_frame(3, dense_frame(1.0)).unwrap();
+        assert_eq!(r.buffered(), 1);
+        let err =
+            r.offer_chain_frame(1, &[1, 3, 5], &dense_frame(2.0)).unwrap_err().to_string();
+        assert!(err.contains("already delivered"), "{err}");
+        // Slot 1's claim was released: its arrival absorbs and drains
+        // parked slot 3, and the round still completes.
+        r.offer_frame(1, dense_frame(1.0)).unwrap();
+        r.offer_frame(5, dense_frame(1.0)).unwrap();
+        assert!(r.is_complete());
+        let merged = pl.finish(r).unwrap();
+        assert_eq!(merged.as_dense().unwrap()[0], 6.0);
+    }
+
+    #[test]
+    fn finalize_subtree_handles_empty_and_parked_rounds() {
+        let spec = UploadSpec::Dense { dim: 8 };
+        let frame = |v: f32| crate::wire::encode_dense_frame(&vec![v; 8], &F32LE);
+        let mut pl = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: 1,
+            shard_override: 1,
+        });
+        // Zero-participant subtree: nothing arrived → Ok(None), shard
+        // returns to the pool.
+        let r = pl.begin(&spec, vec![1.0; 3]).unwrap();
+        assert!(pl.finalize_subtree(r).unwrap().is_none());
+        assert_eq!(pl.pooled(), 1);
+        // A parked arrival whose predecessor dropped still merges: the
+        // drain absorbs it in slot order before reducing.
+        let r = pl.begin(&spec, vec![0.5, 0.25, 2.0]).unwrap();
+        r.offer_frame(2, frame(1.0)).unwrap();
+        assert_eq!(r.buffered(), 1, "slot 2 parks behind the dropped slots");
+        let merged = pl.finalize_subtree(r).unwrap().expect("one slot arrived");
+        assert_eq!(merged.absorbed(), 1);
+        assert_eq!(merged.as_dense().unwrap()[0], 2.0, "λ₂ applied");
+        pl.recycle(merged);
     }
 }

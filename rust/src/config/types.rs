@@ -165,6 +165,30 @@ pub struct TrainConfig {
     /// compute re-run; served: the slot re-offered to a healthy worker
     /// connection) before it is dropped. 0 (the default) = no retries.
     pub max_slot_retries: usize,
+    /// Root accumulator shards for the round pipeline. 0 (the default)
+    /// = auto (`shard_count(parallelism)`). A flat server or in-process
+    /// run that wants to reproduce a relay tree's bits sets this to the
+    /// tree's relay count: each relay owns exactly one shard chain, so
+    /// matching the shard layout makes the two topologies fold in the
+    /// same order.
+    pub shards: usize,
+    /// Serve mode: number of downstream *relays* this server aggregates
+    /// over instead of direct workers. 0 (the default) = flat serving.
+    /// When set, the server expects `relay-hello` handshakes, assigns
+    /// each relay a slot chain via `subtree-assign`, and absorbs one
+    /// merged frame per relay; `transport_workers` is ignored.
+    pub relay_children: usize,
+    /// Relay mode (`fetchsgd relay`): the downstream endpoint this relay
+    /// listens on for its own workers (`tcp:HOST:PORT` or
+    /// `uds:/path.sock`). The upstream endpoint it joins is `transport`.
+    pub relay_listen: Option<String>,
+    /// Join/relay mode: how many times a lost upstream connection is
+    /// re-dialed before giving up. Each successful round resets the
+    /// counter. 0 (the default) = fail on the first disconnect.
+    pub reconnect_attempts: usize,
+    /// Join/relay mode: initial reconnect backoff in milliseconds;
+    /// doubles per consecutive failure, capped at 10 s.
+    pub reconnect_backoff_ms: u64,
 }
 
 impl TrainConfig {
@@ -201,6 +225,11 @@ impl TrainConfig {
             quorum_fraction: 1.0,
             round_deadline_ms: 0,
             max_slot_retries: 0,
+            shards: 0,
+            relay_children: 0,
+            relay_listen: None,
+            reconnect_attempts: 0,
+            reconnect_backoff_ms: 200,
         }
     }
 
@@ -264,6 +293,11 @@ impl TrainConfig {
             quorum_fraction: v.opt_f64("quorum_fraction", 1.0),
             round_deadline_ms: deadline_ms_from_json(v.opt_f64("round_deadline_ms", 0.0))?,
             max_slot_retries: v.opt_usize("max_slot_retries", 0),
+            shards: v.opt_usize("shards", 0),
+            relay_children: v.opt_usize("relay_children", 0),
+            relay_listen: parse_wire(v.opt_str("relay_listen", "off")),
+            reconnect_attempts: v.opt_usize("reconnect_attempts", 0),
+            reconnect_backoff_ms: v.opt_f64("reconnect_backoff_ms", 200.0) as u64,
         };
         cfg.quorum_policy()?;
         Ok(cfg)
@@ -330,6 +364,11 @@ impl TrainConfig {
                 "quorum_fraction" => self.quorum_fraction = val.parse()?,
                 "round_deadline_ms" => self.round_deadline_ms = val.parse()?,
                 "max_slot_retries" => self.max_slot_retries = val.parse()?,
+                "shards" => self.shards = val.parse()?,
+                "relay_children" => self.relay_children = val.parse()?,
+                "relay_listen" => self.relay_listen = parse_wire(val),
+                "reconnect_attempts" => self.reconnect_attempts = val.parse()?,
+                "reconnect_backoff_ms" => self.reconnect_backoff_ms = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -508,6 +547,46 @@ mod tests {
         let v = parse(&bad).unwrap();
         let err = TrainConfig::from_json(&v).unwrap_err().to_string();
         assert!(err.contains("round_deadline_ms"), "{err}");
+    }
+
+    #[test]
+    fn relay_and_reconnect_knobs_parse_and_override() {
+        let v = parse(CFG).unwrap();
+        let mut cfg = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.shards, 0, "shard layout defaults to auto");
+        assert_eq!(cfg.relay_children, 0, "flat serving by default");
+        assert_eq!(cfg.relay_listen, None);
+        assert_eq!(cfg.reconnect_attempts, 0, "no reconnects by default");
+        assert_eq!(cfg.reconnect_backoff_ms, 200);
+        cfg.apply_overrides(&[
+            "shards=3".into(),
+            "relay_children=2".into(),
+            "relay_listen=uds:/tmp/relay.sock".into(),
+            "reconnect_attempts=5".into(),
+            "reconnect_backoff_ms=50".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.relay_children, 2);
+        assert_eq!(cfg.relay_listen.as_deref(), Some("uds:/tmp/relay.sock"));
+        assert_eq!(cfg.reconnect_attempts, 5);
+        assert_eq!(cfg.reconnect_backoff_ms, 50);
+        cfg.apply_overrides(&["relay_listen=off".into()]).unwrap();
+        assert_eq!(cfg.relay_listen, None);
+        // JSON path accepts the same keys.
+        let json = CFG.replace(
+            "\"eval_every\": 10",
+            "\"eval_every\": 10, \"shards\": 2, \"relay_children\": 4, \
+             \"relay_listen\": \"tcp:127.0.0.1:9001\", \"reconnect_attempts\": 3, \
+             \"reconnect_backoff_ms\": 100",
+        );
+        let v = parse(&json).unwrap();
+        let cfg = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.relay_children, 4);
+        assert_eq!(cfg.relay_listen.as_deref(), Some("tcp:127.0.0.1:9001"));
+        assert_eq!(cfg.reconnect_attempts, 3);
+        assert_eq!(cfg.reconnect_backoff_ms, 100);
     }
 
     #[test]

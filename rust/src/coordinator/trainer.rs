@@ -142,7 +142,10 @@ impl Trainer {
         let quorum = cfg.quorum_policy()?;
         // 0 = inherit the compute parallelism (itself 0 = all cores).
         let reduce = if cfg.reduce_parallelism > 0 { cfg.reduce_parallelism } else { threads };
-        let pipeline = RoundPipeline::new(PipelineOptions { reduce_parallelism: reduce });
+        let pipeline = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: reduce,
+            shard_override: cfg.shards,
+        });
         Ok(Trainer {
             cfg,
             artifacts,
@@ -324,6 +327,7 @@ impl Trainer {
             dropped_slots: mem.dropped_slots,
             retried_slots: mem.retried_slots,
             update_nnz,
+            tier: None,
         });
         if self.cfg.verbose {
             eprintln!(

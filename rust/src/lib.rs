@@ -40,6 +40,7 @@ pub mod experiments;
 pub mod hashing;
 pub mod metrics;
 pub mod model;
+pub mod relay;
 pub mod runtime;
 pub mod serialize;
 pub mod sketch;

@@ -6,6 +6,8 @@
 //!               transport (TCP/UDS), waiting for `join` workers
 //!   join        connect to a `serve` instance and compute client
 //!               uploads for it
+//!   relay       mid-tier aggregator: join an upstream `serve` as one
+//!               subtree while serving downstream `join` workers
 //!   experiment  regenerate a paper table/figure (fig3|fig4|fig5|fig10|
 //!               table1|ablation)
 //!   inspect     print manifest / artifact info
@@ -43,6 +45,16 @@ USAGE:
              serve_max_msg=BYTES reduce_parallelism=N)
   fetchsgd join --connect tcp:HOST:PORT|uds:/path.sock
             [--config CFG.json] [key=value ...]
+            (reconnect knobs, join and relay alike:
+             reconnect_attempts=N   re-dial a lost connection up to N
+                                    consecutive times; default 0
+             reconnect_backoff_ms=T first re-dial delay, doubling per
+                                    failure, capped at 10 s)
+  fetchsgd relay --connect tcp:HOST:PORT|uds:/path.sock
+            --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
+            [--config CFG.json] [key=value ...]
+            (upstream server must run with relay_children=R; see also
+             shards=R to make a flat server bitwise-match the tree)
   fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>
             [--dataset cifar10|cifar100] [--scale smoke|small|full]
             [--which ABLATION] [--curves] [--seeds N]
@@ -115,6 +127,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
+        "relay" => cmd_relay(&args),
         "experiment" => cmd_experiment(&args, artifacts_dir, out_dir),
         "inspect" => cmd_inspect(&artifacts_dir),
         "selfcheck" => cmd_selfcheck(&artifacts_dir),
@@ -215,6 +228,25 @@ fn cmd_join(args: &Args) -> Result<()> {
     println!(
         "joined: rounds={} uploads={} sent={} B received={} B",
         s.rounds, s.uploads, s.bytes_sent, s.bytes_received
+    );
+    Ok(())
+}
+
+fn cmd_relay(args: &Args) -> Result<()> {
+    // Upstream is the ordinary transport endpoint (--connect, like
+    // `join`); the downstream listener comes from --listen or the
+    // relay_listen config knob.
+    let mut cfg = transport_cfg(args, "connect")?;
+    if let Some(ep) = args.get("listen") {
+        cfg.relay_listen = Some(ep.to_string());
+    }
+    if cfg.relay_listen.is_none() {
+        bail!("no downstream endpoint: pass --listen or set relay_listen= in the config");
+    }
+    let s = fetchsgd::relay::relay_training(&cfg)?;
+    println!(
+        "relayed: rounds={} merged_uploads={} reconnects={} upstream {} B downstream {} B",
+        s.rounds, s.merged_uploads, s.reconnects, s.upstream_bytes, s.downstream_bytes
     );
     Ok(())
 }

@@ -48,6 +48,11 @@ pub struct RoundRecord {
     /// Slots that needed at least one retry or reassignment.
     pub retried_slots: usize,
     pub update_nnz: usize,
+    /// Which aggregation tier produced this record when the run is part
+    /// of a relay tree: `"root"` for the tree's round server, `"relay"`
+    /// for a mid-tier aggregator. `None` (flat and in-process runs)
+    /// omits the key, so non-tree logs are unchanged.
+    pub tier: Option<&'static str>,
 }
 
 /// One evaluation record.
@@ -120,6 +125,11 @@ impl MetricsLogger {
         fields.push(("dropped_slots", num(r.dropped_slots as f64)));
         fields.push(("retried_slots", num(r.retried_slots as f64)));
         fields.push(("update_nnz", num(r.update_nnz as f64)));
+        // Tree runs tag each record with its aggregation tier so one
+        // merged log can be split back into root vs relay rows.
+        if let Some(tier) = r.tier {
+            fields.push(("tier", s(tier)));
+        }
         self.write_line(obj(fields));
         self.rounds.push(r);
     }
@@ -173,6 +183,7 @@ mod tests {
                 dropped_slots: 1,
                 retried_slots: 2,
                 update_nnz: 5,
+                tier: Some("root"),
             });
             m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
         }
@@ -193,6 +204,8 @@ mod tests {
         assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
         assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
         assert!((v.req_f64("retried_slots").unwrap() - 2.0).abs() < 1e-9);
+        // tree runs tag their tier; flat runs omit the key entirely
+        assert_eq!(v.req_str("tier").unwrap(), "root");
         let v = crate::serialize::json::parse(lines[1]).unwrap();
         assert!((v.req_f64("perplexity").unwrap() - 7.4).abs() < 1e-9);
         std::fs::remove_dir_all(&dir).ok();
@@ -217,6 +230,7 @@ mod tests {
                 dropped_slots: 0,
                 retried_slots: 0,
                 update_nnz: 0,
+                tier: None,
             });
         }
         assert!((m.recent_loss(2) - 3.0).abs() < 1e-9);

@@ -1,0 +1,824 @@
+//! The relay tier: an aggregator that turns round servers into a tree.
+//!
+//! A relay sits between a [`RoundServer`](crate::transport::server::RoundServer)
+//! in relay mode (`relay_children > 0`) and a pool of ordinary workers.
+//! Upstream it looks like a single client speaking the v3 relay
+//! handshake (`relay-hello`); downstream it looks like a round server
+//! speaking the ordinary worker grammar — workers `join` a relay with
+//! the same binary and the same `fetchsgd join` command they would use
+//! against a flat server, and cannot tell the difference.
+//!
+//! Per round, the flow is:
+//!
+//! 1. Upstream sends `SubtreeAssign`: the relay's slot *chain* — this
+//!    relay's share of the round's global slots, each entry carrying
+//!    the global slot id, the sampled client id, and the slot's
+//!    *global* aggregation weight λ — plus the upload spec and the
+//!    dense weights frame.
+//! 2. The relay fans the chain over its downstream workers with a
+//!    normal `RoundStart` (weights forwarded verbatim, global slot
+//!    ids), and streams their upload frames into its own
+//!    [`RoundPipeline`] via the zero-copy `offer_frame_bytes` path —
+//!    the same absorb machinery the server and the in-process engine
+//!    drive, configured as a single shard chain.
+//! 3. It folds whatever arrived into **one** merged lossless `f32le`
+//!    frame (`RoundPipeline::finalize_subtree`) and answers upstream
+//!    with one `SubtreeUpload`: the merged frame plus a rolled-up
+//!    [`SlotReport`] per assigned slot, in ascending slot order.
+//! 4. Upstream closes the round and broadcasts `RoundEnd`; the relay
+//!    forwards the broadcast verbatim to every downstream worker.
+//!
+//! # Determinism
+//!
+//! The tree reproduces the flat server bit for bit because weighted
+//! subtree sums reassociate exactly (the sketch and the dense
+//! accumulator are linear, and each tier folds in ascending slot
+//! order): the root pins one shard chain per relay, relay `r` owns the
+//! global slots `{s : s mod R == r}` — the same slots shard `r` of a
+//! flat server with `shards = R` would own — folds them in ascending
+//! order with the *global* λ shipped in the assignment, and the root
+//! absorbs each merged frame into its shard with weight 1 before the
+//! ordinary ordered shard reduce. Renormalization over the arrived
+//! subset happens once, at the root, so a partial round closed at
+//! quorum is also bitwise identical to the flat server ending with the
+//! same surviving membership set.
+//!
+//! # Fault containment
+//!
+//! A downstream fault is *contained to its subtree*: a worker that
+//! sends garbage or disconnects mid-round costs only its own unserved
+//! slots (reported upstream as dropped, with the fault/disconnect/
+//! deadline distinction preserved), never the relay's other slots and
+//! never the sibling relays'. The relay runs no retry service of its
+//! own — retry budgets and quorum policy live at the root, which sees
+//! every slot's outcome in the roll-up. Upstream loss is survivable
+//! the same way a worker survives it: with a `reconnect_attempts`
+//! budget the relay re-dials under bounded exponential backoff,
+//! keeping its downstream pool connected across the blip.
+
+use anyhow::{bail, Context, Result};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
+use crate::compression::UploadSpec;
+use crate::metrics::{MetricsLogger, RoundRecord};
+use crate::transport::client::backoff_ms;
+use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
+use crate::transport::proto::{
+    Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
+    OUTCOME_DROPPED_FAULTED, PROTO_VERSION,
+};
+use crate::transport::server::handshake;
+use crate::transport::{Conn, Endpoint};
+use crate::wire::{encode_dense_frame, encode_sketch_frame, F32LE};
+
+/// Relay knobs. Defaults suit a loopback deployment.
+pub struct RelayOptions {
+    /// Downstream worker connections the relay waits for before
+    /// serving a non-empty chain.
+    pub workers: usize,
+    /// Read deadline while waiting for the upstream server (None =
+    /// block; the root controls round pacing, so the default is
+    /// patient — mirroring a joined worker).
+    pub upstream_timeout: Option<Duration>,
+    /// Per-connection downstream read/write deadline. A worker that
+    /// stalls longer than this mid-round drops its unserved slots
+    /// instead of wedging the subtree.
+    pub read_timeout: Duration,
+    /// How long to wait for the downstream pool to fill.
+    pub accept_timeout: Duration,
+    /// Per-message size cap, both directions (mirrors the root's).
+    pub max_msg: usize,
+    /// How many times a lost *upstream* connection is re-dialed before
+    /// the relay gives up; a connection that sees a round through to
+    /// its broadcast resets the counter. 0 = fail on first loss.
+    pub reconnect_attempts: usize,
+    /// Backoff before the first upstream re-dial, in milliseconds;
+    /// doubles per consecutive failure, capped at 10 s.
+    pub reconnect_backoff_ms: u64,
+    /// JSONL metrics log (`tier: "relay"` rows); None = no log.
+    pub log_path: Option<std::path::PathBuf>,
+}
+
+impl Default for RelayOptions {
+    fn default() -> Self {
+        RelayOptions {
+            workers: 1,
+            upstream_timeout: None,
+            read_timeout: Duration::from_secs(30),
+            accept_timeout: Duration::from_secs(30),
+            max_msg: DEFAULT_MAX_MSG_BYTES,
+            reconnect_attempts: 0,
+            reconnect_backoff_ms: 200,
+            log_path: None,
+        }
+    }
+}
+
+/// What a relay did over its lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct RelaySummary {
+    /// Rounds seen through to the upstream broadcast.
+    pub rounds: usize,
+    /// Merged subtree frames sent upstream (rounds with at least one
+    /// arrived downstream slot).
+    pub merged_uploads: usize,
+    /// Upstream connections re-dialed after a loss.
+    pub reconnects: usize,
+    /// Total on-the-wire bytes on the upstream link, both directions.
+    pub upstream_bytes: u64,
+    /// Total on-the-wire bytes across all downstream links, both
+    /// directions.
+    pub downstream_bytes: u64,
+}
+
+enum ListenerKind {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// A round record staged in `run_subtree` and emitted when the
+/// matching `RoundEnd` arrives (so the row can include the broadcast
+/// bytes and the full per-round transport delta).
+struct PendingRecord {
+    round: u64,
+    mean_loss: f64,
+    lr: f32,
+    wire_upload: u64,
+    participants: usize,
+    dropped_slots: usize,
+    absorb_stalls: u64,
+    parked_bytes: u64,
+    /// `upstream_bytes + downstream_bytes` when the subtree round
+    /// began; the delta at `RoundEnd` is this tier's transport bytes
+    /// for the round.
+    bytes_marker: u64,
+}
+
+/// One relay node: upstream `Conn` per `serve_upstream` call,
+/// persistent downstream pool, own round pipeline. See module docs.
+pub struct Relay {
+    listener: ListenerKind,
+    opts: RelayOptions,
+    conns: Vec<Conn>,
+    /// Single-chain instance of the shared round-aggregation pipeline:
+    /// every local slot folds into one accumulator in ascending global
+    /// slot order, which is exactly this relay's shard chain of the
+    /// root's fold.
+    pipeline: RoundPipeline,
+    logger: MetricsLogger,
+    pending: Option<PendingRecord>,
+    sum: RelaySummary,
+    #[cfg(unix)]
+    uds_path: Option<PathBuf>,
+}
+
+impl Relay {
+    /// Bind the downstream listener (TCP port 0 = ephemeral; a stale
+    /// UDS socket file is removed first).
+    pub fn bind(listen: &Endpoint, opts: RelayOptions) -> Result<Relay> {
+        if opts.workers == 0 {
+            bail!("RelayOptions.workers must be >= 1");
+        }
+        let listener = match listen {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("binding tcp:{addr}"))?;
+                l.set_nonblocking(true).context("listener nonblocking")?;
+                ListenerKind::Tcp(l)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                if path.exists() {
+                    std::fs::remove_file(path)
+                        .with_context(|| format!("removing stale socket {}", path.display()))?;
+                }
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding uds:{}", path.display()))?;
+                l.set_nonblocking(true).context("listener nonblocking")?;
+                ListenerKind::Unix(l)
+            }
+        };
+        let pipeline = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: 1,
+            shard_override: 1,
+        });
+        let logger = MetricsLogger::new(opts.log_path.as_deref())?;
+        Ok(Relay {
+            listener,
+            opts,
+            conns: Vec::new(),
+            pipeline,
+            logger,
+            pending: None,
+            sum: RelaySummary::default(),
+            #[cfg(unix)]
+            uds_path: match listen {
+                Endpoint::Unix(p) => Some(p.clone()),
+                _ => None,
+            },
+        })
+    }
+
+    /// The downstream endpoint actually bound (resolves TCP port 0).
+    pub fn local_endpoint(&self) -> Result<Endpoint> {
+        match &self.listener {
+            ListenerKind::Tcp(l) => {
+                Ok(Endpoint::Tcp(l.local_addr().context("local_addr")?.to_string()))
+            }
+            #[cfg(unix)]
+            ListenerKind::Unix(_) => {
+                let path = self.uds_path.clone().context("uds path missing")?;
+                Ok(Endpoint::Unix(path))
+            }
+        }
+    }
+
+    /// Currently connected downstream workers.
+    pub fn connected(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Dial upstream and serve subtree rounds until `Shutdown`, under
+    /// the reconnect budget (see [`RelayOptions::reconnect_attempts`]).
+    /// The downstream pool persists across upstream re-dials — workers
+    /// never notice an upstream blip between rounds.
+    pub fn run(&mut self, upstream: &Endpoint) -> Result<RelaySummary> {
+        let mut attempt = 0usize;
+        loop {
+            let rounds_before = self.sum.rounds;
+            match self.serve_upstream(upstream) {
+                Ok(()) => return Ok(self.sum.clone()),
+                Err(e) => {
+                    if self.sum.rounds > rounds_before {
+                        attempt = 0;
+                    }
+                    if attempt >= self.opts.reconnect_attempts {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.sum.reconnects += 1;
+                    let wait = backoff_ms(self.opts.reconnect_backoff_ms, attempt);
+                    eprintln!(
+                        "[relay] upstream lost ({e:#}); reconnecting in {wait} ms \
+                         (attempt {attempt}/{})",
+                        self.opts.reconnect_attempts
+                    );
+                    std::thread::sleep(Duration::from_millis(wait));
+                }
+            }
+        }
+    }
+
+    /// One upstream connection lifetime: dial, `relay-hello`, serve
+    /// subtree rounds until `Shutdown` (clean exit) or any error.
+    fn serve_upstream(&mut self, upstream: &Endpoint) -> Result<()> {
+        let mut up = Conn::connect(upstream)?;
+        up.set_timeouts(self.opts.upstream_timeout, self.opts.upstream_timeout)?;
+        self.sum.upstream_bytes +=
+            write_msg(&mut up, &Msg::RelayHello { version: PROTO_VERSION }.encode())?;
+        loop {
+            let (bytes, n) = read_msg(&mut up, self.opts.max_msg).context("waiting for upstream")?;
+            self.sum.upstream_bytes += n;
+            match Msg::decode(bytes)? {
+                Msg::SubtreeAssign {
+                    round,
+                    round_seed,
+                    lr,
+                    codec_id,
+                    spec,
+                    entries,
+                    weights_frame,
+                } => {
+                    let reply = self
+                        .run_subtree(round, round_seed, lr, codec_id, &spec, &entries, &weights_frame)
+                        .with_context(|| format!("subtree round {round}"))?;
+                    self.sum.upstream_bytes += write_msg(&mut up, &reply)
+                        .with_context(|| format!("sending subtree upload, round {round}"))?;
+                }
+                Msg::RoundEnd { round, update_frame } => {
+                    // Deterministic encode means the forwarded bytes
+                    // are exactly what the root broadcast.
+                    let wire_download = update_frame.len() as u64;
+                    let fwd = Msg::RoundEnd { round, update_frame }.encode();
+                    self.broadcast_down(&fwd);
+                    self.sum.rounds += 1;
+                    if let Some(p) = self.pending.take() {
+                        if p.round == round {
+                            self.log_round(p, wire_download);
+                        }
+                    }
+                }
+                Msg::Abort { reason } => {
+                    // A round-level abort cascades: downstream workers
+                    // are in this round too and must not wedge waiting
+                    // for a broadcast that will never come.
+                    let fwd =
+                        Msg::Abort { reason: format!("upstream aborted: {reason}") }.encode();
+                    self.broadcast_down(&fwd);
+                    for c in self.conns.drain(..) {
+                        c.shutdown();
+                    }
+                    self.pending = None;
+                    bail!("upstream aborted: {reason}");
+                }
+                Msg::Shutdown => {
+                    let fwd = Msg::Shutdown.encode();
+                    self.broadcast_down(&fwd);
+                    for c in self.conns.drain(..) {
+                        c.shutdown();
+                    }
+                    return Ok(());
+                }
+                other => bail!("unexpected {} message from upstream", other.kind_name()),
+            }
+        }
+    }
+
+    /// One subtree round: fan the chain downstream, absorb uploads,
+    /// fold to one merged frame, return the encoded `SubtreeUpload`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_subtree(
+        &mut self,
+        round: u64,
+        round_seed: u64,
+        lr: f32,
+        codec_id: u8,
+        spec: &UploadSpec,
+        entries: &[(u32, u32, f32)],
+        weights_frame: &[u8],
+    ) -> Result<Vec<u8>> {
+        let bytes_marker = self.sum.upstream_bytes + self.sum.downstream_bytes;
+        if entries.windows(2).any(|w| w[1].0 <= w[0].0) {
+            bail!("subtree-assign slots must be strictly ascending");
+        }
+        let m = entries.len();
+        if m == 0 {
+            // Zero-participant subtree (fewer global slots than
+            // relays this round): answer immediately, don't make the
+            // root's round wait on our downstream pool.
+            self.pending = Some(PendingRecord {
+                round,
+                mean_loss: 0.0,
+                lr,
+                wire_upload: 0,
+                participants: 0,
+                dropped_slots: 0,
+                absorb_stalls: 0,
+                parked_bytes: 0,
+                bytes_marker,
+            });
+            return Ok(Msg::SubtreeUpload { round, reports: Vec::new(), frame: Vec::new() }
+                .encode());
+        }
+        self.ensure_workers()?;
+        let nconns = self.conns.len();
+        for conn in &self.conns {
+            let t = self.opts.read_timeout;
+            let _ = conn.set_timeouts(Some(t), Some(t));
+        }
+
+        // The chain's λs, in ascending global slot order == local slot
+        // order. shard_override = 1 puts every local slot on one chain,
+        // so absorbs fold in exactly the order the root's shard `r`
+        // would have folded these slots in a flat run.
+        let lambdas: Vec<f32> = entries.iter().map(|e| e.2).collect();
+        let inflight = self.pipeline.begin(spec, lambdas)?;
+
+        // Local slot → worker layout: round-robin, like the server's.
+        // Workers see *global* slot ids (they echo them verbatim); the
+        // absorb path uses local indices.
+        let mut assignments: Vec<Vec<(u32, usize, u32)>> = vec![Vec::new(); nconns];
+        for (local, &(gslot, client, _)) in entries.iter().enumerate() {
+            assignments[local % nconns].push((gslot, local, client));
+        }
+
+        // RoundStart downstream, splicing the shared weights frame.
+        let mut alive = vec![true; nconns];
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            let head = Msg::RoundStart {
+                round,
+                round_seed,
+                lr,
+                codec_id,
+                assignments: assignments[i].iter().map(|&(g, _, c)| (g, c)).collect(),
+                weights_frame: Vec::new(),
+            }
+            .encode();
+            match write_msg_parts(conn, &head, weights_frame) {
+                Ok(n) => self.sum.downstream_bytes += n,
+                Err(_) => {
+                    // A dead-at-start worker costs only its own slots;
+                    // the rest of the subtree proceeds.
+                    alive[i] = false;
+                }
+            }
+        }
+
+        // One reader per downstream connection, offering frames
+        // straight from the read buffer. Uploads on one connection
+        // arrive in assignment order (the client contract); absorb
+        // order across connections is enforced by the in-flight state.
+        struct DownRead {
+            /// `(local_slot, loss)` for uploads absorbed, in order.
+            done: Vec<(usize, f32)>,
+            bytes_in: u64,
+            /// Content fault (garbage frame, wrong slot, bad message)
+            /// vs. plain disconnect.
+            fault: bool,
+            /// The failure was a read deadline, not a closed socket.
+            timed_out: bool,
+        }
+        let absorber = &inflight;
+        let max_msg = self.opts.max_msg;
+        let reads: Vec<DownRead> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(nconns);
+            for (i, conn) in self.conns.iter_mut().enumerate() {
+                let assigned = &assignments[i];
+                let live = alive[i];
+                handles.push(scope.spawn(move || {
+                    let mut r = DownRead {
+                        done: Vec::new(),
+                        bytes_in: 0,
+                        fault: false,
+                        timed_out: false,
+                    };
+                    if !live {
+                        return r;
+                    }
+                    for &(gslot, local, _client) in assigned {
+                        let bytes = match read_msg(conn, max_msg) {
+                            Ok((bytes, n)) => {
+                                r.bytes_in += n;
+                                bytes
+                            }
+                            Err(e) => {
+                                r.timed_out = e
+                                    .downcast_ref::<std::io::Error>()
+                                    .map(|io| {
+                                        matches!(
+                                            io.kind(),
+                                            std::io::ErrorKind::WouldBlock
+                                                | std::io::ErrorKind::TimedOut
+                                        )
+                                    })
+                                    .unwrap_or(false);
+                                return r;
+                            }
+                        };
+                        let ok = (|| -> Result<f32> {
+                            match Msg::decode(bytes)? {
+                                Msg::Upload { slot, loss, frame } => {
+                                    if slot != gslot {
+                                        bail!("expected upload for slot {gslot}, got {slot}");
+                                    }
+                                    absorber.offer_frame_bytes(local, &frame)?;
+                                    Ok(loss)
+                                }
+                                other => {
+                                    bail!("expected upload, got {} message", other.kind_name())
+                                }
+                            }
+                        })();
+                        match ok {
+                            Ok(loss) => r.done.push((local, loss)),
+                            Err(_) => {
+                                r.fault = true;
+                                return r;
+                            }
+                        }
+                    }
+                    r
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("downstream reader panicked")).collect()
+        });
+
+        // Roll up outcomes: a worker's unserved tail is dropped with
+        // the fault/disconnect/deadline distinction the root's
+        // membership accounting preserves.
+        let mut outcomes = vec![OUTCOME_DROPPED_DISCONNECTED; m];
+        let mut losses = vec![0.0f32; m];
+        let mut dead = vec![false; nconns];
+        for (i, r) in reads.iter().enumerate() {
+            self.sum.downstream_bytes += r.bytes_in;
+            for &(local, loss) in &r.done {
+                outcomes[local] = OUTCOME_ARRIVED;
+                losses[local] = loss;
+            }
+            if r.done.len() < assignments[i].len() {
+                dead[i] = true;
+                let reason = if r.fault {
+                    OUTCOME_DROPPED_FAULTED
+                } else if r.timed_out {
+                    OUTCOME_DROPPED_DEADLINE
+                } else {
+                    OUTCOME_DROPPED_DISCONNECTED
+                };
+                for &(_, local, _) in &assignments[i][r.done.len()..] {
+                    outcomes[local] = reason;
+                }
+            }
+        }
+
+        // Prune failed workers (best-effort abort so a live-but-slow
+        // peer learns the round moved on without it).
+        let mut idx = 0;
+        self.conns.retain_mut(|conn| {
+            let keep = !dead[idx];
+            idx += 1;
+            if !keep {
+                let abort = Msg::Abort { reason: "subtree slot faulted or straggled".into() }
+                    .encode();
+                let _ = write_msg(conn, &abort);
+                conn.shutdown();
+            }
+            keep
+        });
+
+        let stats = inflight.absorb_stats();
+        let participants = outcomes.iter().filter(|&&o| o == OUTCOME_ARRIVED).count();
+        // Mean loss over arrived slots, reduced in ascending slot
+        // order (scheduling-invariant, same convention as the server).
+        let mean_loss = if participants > 0 {
+            outcomes
+                .iter()
+                .zip(&losses)
+                .filter(|(&o, _)| o == OUTCOME_ARRIVED)
+                .map(|(_, &l)| l as f64)
+                .sum::<f64>()
+                / participants as f64
+        } else {
+            0.0
+        };
+
+        // Fold the arrived subset into one merged frame. Parked frames
+        // past dropped slots drain here; global-λ weighting means the
+        // root absorbs this frame with weight 1 and renormalizes once.
+        let frame = match self.pipeline.finalize_subtree(inflight)? {
+            Some(merged) => {
+                let bytes = match spec {
+                    UploadSpec::Sketch { .. } => {
+                        encode_sketch_frame(merged.as_sketch()?, &F32LE)
+                    }
+                    UploadSpec::Dense { .. } => encode_dense_frame(merged.as_dense()?, &F32LE),
+                };
+                self.pipeline.recycle(merged);
+                self.sum.merged_uploads += 1;
+                bytes
+            }
+            None => Vec::new(),
+        };
+
+        let reports: Vec<SlotReport> = entries
+            .iter()
+            .enumerate()
+            .map(|(local, &(gslot, _, _))| SlotReport {
+                slot: gslot,
+                outcome: outcomes[local],
+                retries: 0,
+                loss: losses[local],
+            })
+            .collect();
+
+        self.pending = Some(PendingRecord {
+            round,
+            mean_loss,
+            lr,
+            wire_upload: frame.len() as u64,
+            participants,
+            dropped_slots: m - participants,
+            absorb_stalls: stats.lock_stalls,
+            parked_bytes: stats.parked_bytes,
+            bytes_marker,
+        });
+        Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
+    }
+
+    /// Forward one encoded message to every downstream worker, pruning
+    /// connections whose write fails.
+    fn broadcast_down(&mut self, bytes: &[u8]) {
+        let mut sent = 0u64;
+        self.conns.retain_mut(|conn| match write_msg(conn, bytes) {
+            Ok(n) => {
+                sent += n;
+                true
+            }
+            Err(_) => {
+                conn.shutdown();
+                false
+            }
+        });
+        self.sum.downstream_bytes += sent;
+    }
+
+    fn log_round(&mut self, p: PendingRecord, wire_download: u64) {
+        let transport =
+            (self.sum.upstream_bytes + self.sum.downstream_bytes).saturating_sub(p.bytes_marker);
+        self.logger.log_round(RoundRecord {
+            round: p.round as usize,
+            loss: p.mean_loss,
+            lr: p.lr as f64,
+            // Idealized byte accounting is the root's concern; relay
+            // rows report only what this tier measured on the wire.
+            upload_bytes: 0,
+            download_bytes: 0,
+            wire_upload_bytes: p.wire_upload,
+            wire_download_bytes: wire_download,
+            transport_bytes: transport,
+            absorb_stalls: p.absorb_stalls,
+            parked_bytes: p.parked_bytes,
+            participants: p.participants,
+            dropped_slots: p.dropped_slots,
+            retried_slots: 0,
+            update_nnz: 0,
+            tier: Some("relay"),
+        });
+    }
+
+    /// Accept + handshake until the downstream pool is full. Same
+    /// contract as the server's: peers failing the hello handshake are
+    /// dropped and accepting continues until the deadline.
+    fn ensure_workers(&mut self) -> Result<()> {
+        let want = self.opts.workers;
+        let deadline = Instant::now() + self.opts.accept_timeout;
+        while self.conns.len() < want {
+            if Instant::now() >= deadline {
+                bail!(
+                    "timed out waiting for downstream workers ({}/{} connected)",
+                    self.conns.len(),
+                    want
+                );
+            }
+            let mut conn = self.accept_one(deadline)?;
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let hs = self.opts.read_timeout.min(remaining).max(Duration::from_millis(10));
+            let _ = conn.set_timeouts(Some(hs), Some(hs));
+            match handshake(&mut conn, self.opts.max_msg, false) {
+                Ok(()) => {
+                    let t = self.opts.read_timeout;
+                    conn.set_timeouts(Some(t), Some(t))?;
+                    self.conns.push(conn);
+                }
+                Err(_) => {
+                    let abort = Msg::Abort { reason: "handshake failed".into() }.encode();
+                    let _ = write_msg(&mut conn, &abort);
+                    conn.shutdown();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_one(&self, deadline: Instant) -> Result<Conn> {
+        loop {
+            let accepted = match &self.listener {
+                ListenerKind::Tcp(l) => l.accept().map(|(s, _)| Conn::from_tcp(s)),
+                #[cfg(unix)]
+                ListenerKind::Unix(l) => l.accept().map(|(s, _)| Conn::from_unix(s)),
+            };
+            match accepted {
+                Ok(conn) => {
+                    conn.set_blocking()?;
+                    let t = self.opts.read_timeout;
+                    conn.set_timeouts(Some(t), Some(t))?;
+                    return Ok(conn);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out waiting for downstream workers ({}/{} connected)",
+                            self.conns.len(),
+                            self.opts.workers
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accepting downstream connection"),
+            }
+        }
+    }
+}
+
+impl Drop for Relay {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Some(p) = &self.uds_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Bind a relay and serve an upstream round server until shutdown —
+/// the library entry `fetchsgd relay` wraps.
+pub fn relay(upstream: &Endpoint, listen: &Endpoint, opts: RelayOptions) -> Result<RelaySummary> {
+    let mut node = Relay::bind(listen, opts)?;
+    node.run(upstream)
+}
+
+/// Run a relay from a `TrainConfig` — the mid-tier of `fetchsgd serve`
+/// / `fetchsgd relay` / `fetchsgd join`. Needs only the task manifest
+/// (for message sizing), not the PJRT runtime: a relay never runs
+/// client compute or applies updates, it only folds frames.
+pub fn relay_training(cfg: &crate::config::TrainConfig) -> Result<RelaySummary> {
+    use crate::runtime::artifact::Manifest;
+    use crate::transport::server::duration_from_cfg_secs;
+
+    let up_spec = cfg
+        .transport
+        .as_deref()
+        .context("relay mode needs an upstream endpoint (transport=tcp:HOST:PORT | uds:/path)")?;
+    let upstream = Endpoint::parse(up_spec)?;
+    let listen_spec = cfg
+        .relay_listen
+        .as_deref()
+        .context("relay mode needs a downstream endpoint (relay_listen=tcp:HOST:PORT | uds:/path)")?;
+    let listen = Endpoint::parse(listen_spec)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let dim = manifest.task(&cfg.task)?.dim;
+    let opts = RelayOptions {
+        workers: cfg.transport_workers,
+        read_timeout: duration_from_cfg_secs(cfg.serve_read_timeout_s, "serve_read_timeout_s")?,
+        accept_timeout: duration_from_cfg_secs(
+            cfg.serve_accept_timeout_s,
+            "serve_accept_timeout_s",
+        )?,
+        max_msg: crate::transport::effective_max_msg(cfg, dim)?,
+        reconnect_attempts: cfg.reconnect_attempts,
+        reconnect_backoff_ms: cfg.reconnect_backoff_ms,
+        log_path: cfg.log_path.clone(),
+        ..Default::default()
+    };
+    let mut node = Relay::bind(&listen, opts)?;
+    eprintln!(
+        "[relay] listening on {} for {} worker(s), upstream {}",
+        node.local_endpoint()?,
+        cfg.transport_workers,
+        upstream
+    );
+    node.run(&upstream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_relay() -> Relay {
+        let ep = Endpoint::parse("tcp:127.0.0.1:0").unwrap();
+        Relay::bind(&ep, RelayOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn empty_chain_answers_immediately() {
+        let mut r = test_relay();
+        // No downstream workers are connected — an empty chain must
+        // not touch the pool at all.
+        let reply = r
+            .run_subtree(5, 99, 0.5, 1, &UploadSpec::Dense { dim: 16 }, &[], &[1, 2, 3])
+            .unwrap();
+        match Msg::decode(reply).unwrap() {
+            Msg::SubtreeUpload { round, reports, frame } => {
+                assert_eq!(round, 5);
+                assert!(reports.is_empty());
+                assert!(frame.is_empty());
+            }
+            _ => panic!("expected subtree-upload"),
+        }
+        // The staged record still logs a zero-participant round.
+        let p = r.pending.take().unwrap();
+        assert_eq!(p.round, 5);
+        assert_eq!(p.participants, 0);
+        assert_eq!(p.dropped_slots, 0);
+    }
+
+    #[test]
+    fn non_ascending_chain_is_rejected() {
+        let mut r = test_relay();
+        let entries = [(2u32, 0u32, 1.0f32), (1, 1, 1.0)];
+        let err = r
+            .run_subtree(0, 0, 0.1, 1, &UploadSpec::Dense { dim: 16 }, &entries, &[1])
+            .unwrap_err();
+        assert!(err.to_string().contains("ascending"), "{err:#}");
+        // Duplicate slots are equally malformed.
+        let entries = [(3u32, 0u32, 1.0f32), (3, 1, 1.0)];
+        assert!(r
+            .run_subtree(0, 0, 0.1, 1, &UploadSpec::Dense { dim: 16 }, &entries, &[1])
+            .is_err());
+    }
+
+    #[test]
+    fn ephemeral_bind_resolves_port() {
+        let r = test_relay();
+        match r.local_endpoint().unwrap() {
+            Endpoint::Tcp(addr) => assert!(!addr.ends_with(":0"), "{addr}"),
+            #[cfg(unix)]
+            _ => panic!("expected tcp endpoint"),
+        }
+    }
+}

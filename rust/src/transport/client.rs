@@ -34,12 +34,34 @@ pub struct JoinOptions {
     pub read_timeout: Option<Duration>,
     /// Per-message size cap (mirrors the server's).
     pub max_msg: usize,
+    /// How many times a lost connection is re-dialed before [`join`]
+    /// gives up. A connection that sees a round through to its
+    /// broadcast resets the counter — the budget bounds *consecutive*
+    /// failures, not lifetime ones, so a long-lived worker on a flaky
+    /// link doesn't slowly exhaust it. 0 (the default) keeps the old
+    /// fail-fast behavior tests rely on.
+    pub reconnect_attempts: usize,
+    /// Backoff before the first reconnect attempt, in milliseconds;
+    /// doubles per consecutive failure, capped at 10 s.
+    pub reconnect_backoff_ms: u64,
 }
 
 impl Default for JoinOptions {
     fn default() -> Self {
-        JoinOptions { read_timeout: None, max_msg: DEFAULT_MAX_MSG_BYTES }
+        JoinOptions {
+            read_timeout: None,
+            max_msg: DEFAULT_MAX_MSG_BYTES,
+            reconnect_attempts: 0,
+            reconnect_backoff_ms: 200,
+        }
     }
+}
+
+/// Exponential reconnect backoff: `base · 2^(attempt-1)`, exponent
+/// capped so the shift cannot overflow, the result capped at 10 s.
+/// Shared with the relay tier's upstream reconnect loop.
+pub(crate) fn backoff_ms(base: u64, attempt: usize) -> u64 {
+    base.saturating_mul(1u64 << attempt.saturating_sub(1).min(6)).min(10_000)
 }
 
 /// What a worker did over its connection's lifetime.
@@ -92,9 +114,13 @@ fn run_slot(
 }
 
 /// Connect to a round server and serve client compute until the server
-/// says `Shutdown`. Errors on protocol violations, aborted rounds, and
-/// dropped connections — a deployment would wrap this in a reconnect
-/// loop; tests want the loud failure.
+/// says `Shutdown`. With `reconnect_attempts = 0` (the default) any
+/// protocol violation, aborted round, or dropped connection errors out
+/// loudly — what tests want. With a budget, a lost connection is
+/// re-dialed under bounded exponential backoff (the worker is stateless
+/// across rounds, so rejoining needs no resync protocol); the budget
+/// bounds consecutive failures and refills whenever a connection
+/// completes a round.
 pub fn join(
     ep: &Endpoint,
     client: &dyn ClientCompute,
@@ -102,10 +128,48 @@ pub fn join(
     artifacts: &TaskArtifacts,
     opts: &JoinOptions,
 ) -> Result<JoinSummary> {
+    let mut sum = JoinSummary::default();
+    let mut attempt = 0usize;
+    loop {
+        let rounds_before = sum.rounds;
+        match join_once(ep, client, dataset, artifacts, opts, &mut sum) {
+            Ok(()) => return Ok(sum),
+            Err(e) => {
+                if sum.rounds > rounds_before {
+                    // This connection made progress; its failure starts
+                    // a fresh consecutive-failure streak.
+                    attempt = 0;
+                }
+                if attempt >= opts.reconnect_attempts {
+                    return Err(e);
+                }
+                attempt += 1;
+                let wait = backoff_ms(opts.reconnect_backoff_ms, attempt);
+                eprintln!(
+                    "[join] connection lost ({e:#}); reconnecting in {wait} ms \
+                     (attempt {attempt}/{})",
+                    opts.reconnect_attempts
+                );
+                std::thread::sleep(Duration::from_millis(wait));
+            }
+        }
+    }
+}
+
+/// One connection lifetime: dial, hello, serve rounds until `Shutdown`
+/// (clean exit) or any error. Progress accumulates into `sum` either
+/// way, so a reconnecting worker's summary spans connections.
+fn join_once(
+    ep: &Endpoint,
+    client: &dyn ClientCompute,
+    dataset: &dyn FedDataset,
+    artifacts: &TaskArtifacts,
+    opts: &JoinOptions,
+    sum: &mut JoinSummary,
+) -> Result<()> {
     let mut conn = Conn::connect(ep)?;
     conn.set_timeouts(opts.read_timeout, opts.read_timeout)?;
-    let hello = write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode())?;
-    let mut sum = JoinSummary { bytes_sent: hello, ..Default::default() };
+    sum.bytes_sent += write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode())?;
     let mut current: Option<RoundState> = None;
     loop {
         let (bytes, n) = read_msg(&mut conn, opts.max_msg).context("waiting for server")?;
@@ -116,7 +180,7 @@ pub fn join(
                 let w = decode_dense_frame(&weights_frame).context("round-start weights")?;
                 let st = RoundState { round, round_seed, lr, codec, w };
                 for (slot, cid) in assignments {
-                    run_slot(&mut conn, client, dataset, artifacts, &st, slot, cid, &mut sum)?;
+                    run_slot(&mut conn, client, dataset, artifacts, &st, slot, cid, sum)?;
                 }
                 current = Some(st);
             }
@@ -124,7 +188,7 @@ pub fn join(
                 let st = current
                     .as_ref()
                     .context("slot-assign before any round-start on this connection")?;
-                run_slot(&mut conn, client, dataset, artifacts, st, slot, client_id, &mut sum)?;
+                run_slot(&mut conn, client, dataset, artifacts, st, slot, client_id, sum)?;
             }
             Msg::RoundEnd { round, update_frame } => {
                 // Validate the broadcast like any deployment would; the
@@ -139,7 +203,7 @@ pub fn join(
             other => bail!("unexpected {} message from server", other.kind_name()),
         }
     }
-    Ok(sum)
+    Ok(())
 }
 
 /// Join a served training run from a `TrainConfig` — the worker half of
@@ -166,8 +230,29 @@ pub fn join_training(cfg: &crate::config::TrainConfig) -> Result<JoinSummary> {
         // One shared formula with serve_training — the caps on the two
         // sides of the socket cannot drift apart.
         max_msg: crate::transport::effective_max_msg(cfg, artifacts.manifest.dim)?,
+        reconnect_attempts: cfg.reconnect_attempts,
+        reconnect_backoff_ms: cfg.reconnect_backoff_ms,
         ..Default::default()
     };
     eprintln!("[join] connecting to {ep} as a {} worker", client.name());
     join(&ep, client.as_ref(), dataset.as_ref(), &artifacts, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::backoff_ms;
+
+    #[test]
+    fn reconnect_backoff_doubles_and_caps() {
+        assert_eq!(backoff_ms(200, 1), 200);
+        assert_eq!(backoff_ms(200, 2), 400);
+        assert_eq!(backoff_ms(200, 3), 800);
+        assert_eq!(backoff_ms(200, 6), 6_400);
+        // 200 · 2⁶ = 12 800 → capped at 10 s.
+        assert_eq!(backoff_ms(200, 7), 10_000);
+        // Huge attempt counts neither overflow the shift nor the cap.
+        assert_eq!(backoff_ms(200, 1_000), 10_000);
+        assert_eq!(backoff_ms(u64::MAX, 7), 10_000);
+        assert_eq!(backoff_ms(0, 5), 0);
+    }
 }

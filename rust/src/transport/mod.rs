@@ -25,8 +25,29 @@
 //!   message-size cap, so a forged length prefix is rejected before any
 //!   allocation.
 //! - [`proto`] — the small control grammar (hello / round-start /
-//!   upload / round-end / abort / shutdown) wrapped around `FSGW`
-//!   payload frames.
+//!   upload / round-end / abort / shutdown, plus the v3 relay messages
+//!   relay-hello / subtree-assign / subtree-upload) wrapped around
+//!   `FSGW` payload frames.
+//!
+//! ## Tree aggregation (the relay tier)
+//!
+//! A [`RoundServer`] in relay mode (`ServeOptions::relay_children > 0`)
+//! aggregates over mid-tier [`crate::relay`] nodes instead of workers:
+//! each relay greets with `relay-hello`, receives its slot *chain* as a
+//! `subtree-assign` (global slot ids, client ids, and **global**
+//! aggregation weights λ), folds its own downstream workers' uploads
+//! through the shared `RoundPipeline`, and answers with exactly one
+//! `subtree-upload` — a merged lossless `f32le` frame plus a per-slot
+//! outcome roll-up the root folds into its membership accounting. The
+//! root link therefore carries one upload-sized frame per relay per
+//! round *regardless of downstream fan-out*. The root pins one shard
+//! chain per relay (slot `s` belongs to relay `s mod R` — the same
+//! layout a flat server uses with `shards = R`), each tier folds in
+//! ascending slot order, and renormalization over the arrived subset
+//! happens once at the root, so a two-level tree is bitwise identical
+//! to the flat server and the in-process engine over the same
+//! surviving membership set. Enforced by
+//! `rust/tests/relay_determinism.rs`.
 //!
 //! ## Determinism
 //!

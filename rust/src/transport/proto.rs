@@ -6,26 +6,45 @@
 //! transport never re-encodes values, so the bytes the accumulator
 //! absorbs are exactly the bytes the client produced.
 //!
-//! | tag | message     | body (all integers little-endian)                       |
-//! |-----|-------------|---------------------------------------------------------|
-//! | 1   | Hello       | `proto_version u8`                                      |
-//! | 2   | RoundStart  | `round u64, round_seed u64, lr f32, codec_id u8, n u32, (slot u32, client u32)×n, weights frame…` |
-//! | 3   | Upload      | `slot u32, loss f32, upload frame…`                     |
-//! | 4   | RoundEnd    | `round u64, update frame…`                              |
-//! | 5   | Abort       | `utf-8 reason…`                                         |
-//! | 6   | Shutdown    | (empty)                                                 |
-//! | 7   | SlotAssign  | `slot u32, client u32`                                  |
+//! | tag | message       | body (all integers little-endian)                       |
+//! |-----|---------------|---------------------------------------------------------|
+//! | 1   | Hello         | `proto_version u8`                                      |
+//! | 2   | RoundStart    | `round u64, round_seed u64, lr f32, codec_id u8, n u32, (slot u32, client u32)×n, weights frame…` |
+//! | 3   | Upload        | `slot u32, loss f32, upload frame…`                     |
+//! | 4   | RoundEnd      | `round u64, update frame…`                              |
+//! | 5   | Abort         | `utf-8 reason…`                                         |
+//! | 6   | Shutdown      | (empty)                                                 |
+//! | 7   | SlotAssign    | `slot u32, client u32`                                  |
+//! | 8   | RelayHello    | `proto_version u8`                                      |
+//! | 9   | SubtreeAssign | `round u64, round_seed u64, lr f32, codec_id u8, spec_kind u8, spec…, n u32, (slot u32, client u32, lambda f32)×n, weights frame…` |
+//! | 10  | SubtreeUpload | `round u64, has_frame u8, n u32, (slot u32, outcome u8, retries u16, loss f32)×n, merged frame…` |
 //!
-//! Versioning: [`PROTO_VERSION`] is exchanged in `Hello` and bumped on
-//! any change to this table (v2 added `SlotAssign`, the mid-round
-//! retry/reassignment of a faulted worker's slot); servers drop peers
-//! speaking another version. The `FSGW` frame grammar versions
-//! independently (its own header byte).
+//! `SubtreeAssign.spec` describes the round's upload shape so a relay
+//! can build its own accumulator without a `ServerAggregator`:
+//! `spec_kind 0` (sketch) is `rows u32, cols u32, dim u64, seed u64`;
+//! `spec_kind 1` (dense) is `dim u64`. Assignment entries carry the
+//! *global* slot id, the sampled client id, and that slot's aggregation
+//! weight `λ` as raw f32 bits, so a relay folds downstream uploads with
+//! exactly the weights the root would have used — weighted subtree sums
+//! compose because the sketch (and the dense accumulator) is linear.
+//!
+//! `SubtreeUpload` reports every assigned slot exactly once, in
+//! ascending slot order, with an `OUTCOME_*` code; the merged `FSGW`
+//! frame (always lossless `f32le`) is present iff at least one slot
+//! arrived (`has_frame = 1`), and covers exactly the arrived slots.
+//!
+//! Versioning: [`PROTO_VERSION`] is exchanged in `Hello`/`RelayHello`
+//! and bumped on any change to this table (v2 added `SlotAssign`, the
+//! mid-round retry/reassignment of a faulted worker's slot; v3 added
+//! the relay tier: `RelayHello`, `SubtreeAssign`, `SubtreeUpload`);
+//! servers drop peers speaking another version. The `FSGW` frame
+//! grammar versions independently (its own header byte).
 
+use crate::compression::UploadSpec;
 use anyhow::{bail, Context, Result};
 
-/// Transport protocol version (`Hello` handshake).
-pub const PROTO_VERSION: u8 = 2;
+/// Transport protocol version (`Hello`/`RelayHello` handshake).
+pub const PROTO_VERSION: u8 = 3;
 
 const TAG_HELLO: u8 = 1;
 const TAG_ROUND_START: u8 = 2;
@@ -34,6 +53,37 @@ const TAG_ROUND_END: u8 = 4;
 const TAG_ABORT: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_SLOT_ASSIGN: u8 = 7;
+const TAG_RELAY_HELLO: u8 = 8;
+const TAG_SUBTREE_ASSIGN: u8 = 9;
+const TAG_SUBTREE_UPLOAD: u8 = 10;
+
+const SPEC_KIND_SKETCH: u8 = 0;
+const SPEC_KIND_DENSE: u8 = 1;
+
+/// `SubtreeUpload` outcome code: the slot's upload arrived and is
+/// folded into the merged frame.
+pub const OUTCOME_ARRIVED: u8 = 0;
+/// Outcome code: dropped — the downstream peer sent garbage.
+pub const OUTCOME_DROPPED_FAULTED: u8 = 1;
+/// Outcome code: dropped — the downstream peer disconnected.
+pub const OUTCOME_DROPPED_DISCONNECTED: u8 = 2;
+/// Outcome code: dropped — the slot straggled past the round deadline.
+pub const OUTCOME_DROPPED_DEADLINE: u8 = 3;
+
+/// One rolled-up slot outcome inside a [`Msg::SubtreeUpload`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlotReport {
+    /// Global slot id (as assigned by `SubtreeAssign`).
+    pub slot: u32,
+    /// One of the `OUTCOME_*` codes.
+    pub outcome: u8,
+    /// Downstream retries spent on the slot — the root merges these
+    /// into its own membership accounting.
+    pub retries: u16,
+    /// Training loss for arrived slots (raw f32 bits — bitwise exact);
+    /// 0.0 for dropped slots.
+    pub loss: f32,
+}
 
 /// One transport control message.
 pub enum Msg {
@@ -66,6 +116,29 @@ pub enum Msg {
     /// round seed, lr, and codec; the client answers with a normal
     /// `Upload` for the slot.
     SlotAssign { slot: u32, client: u32 },
+    /// Relay → upstream server greeting: this peer is an aggregator
+    /// relay, not a worker — it will answer each `SubtreeAssign` with
+    /// one `SubtreeUpload` instead of per-slot `Upload`s.
+    RelayHello { version: u8 },
+    /// Server → relay: this round's subtree. `entries` are
+    /// `(global_slot, client_id, lambda)` in ascending slot order;
+    /// `spec` is the upload shape the relay must accumulate;
+    /// `weights_frame` is the dense broadcast, forwarded downstream
+    /// verbatim.
+    SubtreeAssign {
+        round: u64,
+        round_seed: u64,
+        lr: f32,
+        codec_id: u8,
+        spec: UploadSpec,
+        entries: Vec<(u32, u32, f32)>,
+        weights_frame: Vec<u8>,
+    },
+    /// Relay → server: the subtree's rolled-up round result. `reports`
+    /// cover every assigned slot exactly once, in ascending slot order;
+    /// `frame` is the λ-weighted merged `FSGW` frame over exactly the
+    /// arrived slots (empty iff none arrived).
+    SubtreeUpload { round: u64, reports: Vec<SlotReport>, frame: Vec<u8> },
 }
 
 impl Msg {
@@ -79,6 +152,9 @@ impl Msg {
             Msg::Abort { .. } => "abort",
             Msg::Shutdown => "shutdown",
             Msg::SlotAssign { .. } => "slot-assign",
+            Msg::RelayHello { .. } => "relay-hello",
+            Msg::SubtreeAssign { .. } => "subtree-assign",
+            Msg::SubtreeUpload { .. } => "subtree-upload",
         }
     }
 
@@ -127,6 +203,52 @@ impl Msg {
                 out.push(TAG_SLOT_ASSIGN);
                 out.extend_from_slice(&slot.to_le_bytes());
                 out.extend_from_slice(&client.to_le_bytes());
+                out
+            }
+            Msg::RelayHello { version } => vec![TAG_RELAY_HELLO, *version],
+            Msg::SubtreeAssign { round, round_seed, lr, codec_id, spec, entries, weights_frame } => {
+                let mut out =
+                    Vec::with_capacity(51 + 12 * entries.len() + weights_frame.len());
+                out.push(TAG_SUBTREE_ASSIGN);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&round_seed.to_le_bytes());
+                out.extend_from_slice(&lr.to_le_bytes());
+                out.push(*codec_id);
+                match spec {
+                    UploadSpec::Sketch { rows, cols, dim, seed } => {
+                        out.push(SPEC_KIND_SKETCH);
+                        out.extend_from_slice(&(*rows as u32).to_le_bytes());
+                        out.extend_from_slice(&(*cols as u32).to_le_bytes());
+                        out.extend_from_slice(&(*dim as u64).to_le_bytes());
+                        out.extend_from_slice(&seed.to_le_bytes());
+                    }
+                    UploadSpec::Dense { dim } => {
+                        out.push(SPEC_KIND_DENSE);
+                        out.extend_from_slice(&(*dim as u64).to_le_bytes());
+                    }
+                }
+                out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                for &(slot, client, lambda) in entries {
+                    out.extend_from_slice(&slot.to_le_bytes());
+                    out.extend_from_slice(&client.to_le_bytes());
+                    out.extend_from_slice(&lambda.to_le_bytes());
+                }
+                out.extend_from_slice(weights_frame);
+                out
+            }
+            Msg::SubtreeUpload { round, reports, frame } => {
+                let mut out = Vec::with_capacity(14 + 11 * reports.len() + frame.len());
+                out.push(TAG_SUBTREE_UPLOAD);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.push(u8::from(!frame.is_empty()));
+                out.extend_from_slice(&(reports.len() as u32).to_le_bytes());
+                for r in reports {
+                    out.extend_from_slice(&r.slot.to_le_bytes());
+                    out.push(r.outcome);
+                    out.extend_from_slice(&r.retries.to_le_bytes());
+                    out.extend_from_slice(&r.loss.to_le_bytes());
+                }
+                out.extend_from_slice(frame);
                 out
             }
         }
@@ -215,6 +337,115 @@ impl Msg {
                     client: u32::from_le_bytes(bytes[5..9].try_into().unwrap()),
                 })
             }
+            TAG_RELAY_HELLO => {
+                if bytes.len() != 2 {
+                    bail!("relay-hello message must be exactly 2 bytes, got {}", bytes.len());
+                }
+                Ok(Msg::RelayHello { version: bytes[1] })
+            }
+            TAG_SUBTREE_ASSIGN => {
+                const FIXED: usize = 1 + 8 + 8 + 4 + 1 + 1;
+                if bytes.len() < FIXED {
+                    bail!("subtree-assign message truncated at {} bytes", bytes.len());
+                }
+                let round = u64::from_le_bytes(bytes[1..9].try_into().unwrap());
+                let round_seed = u64::from_le_bytes(bytes[9..17].try_into().unwrap());
+                let lr = f32::from_le_bytes(bytes[17..21].try_into().unwrap());
+                let codec_id = bytes[21];
+                let spec_len = match bytes[22] {
+                    SPEC_KIND_SKETCH => 24,
+                    SPEC_KIND_DENSE => 8,
+                    other => bail!("unknown subtree-assign spec kind {other}"),
+                };
+                let count_at = FIXED + spec_len;
+                if bytes.len() < count_at + 4 {
+                    bail!("subtree-assign message truncated at {} bytes", bytes.len());
+                }
+                let spec = if bytes[22] == SPEC_KIND_SKETCH {
+                    UploadSpec::Sketch {
+                        rows: u32::from_le_bytes(bytes[23..27].try_into().unwrap()) as usize,
+                        cols: u32::from_le_bytes(bytes[27..31].try_into().unwrap()) as usize,
+                        dim: u64::from_le_bytes(bytes[31..39].try_into().unwrap()) as usize,
+                        seed: u64::from_le_bytes(bytes[39..47].try_into().unwrap()),
+                    }
+                } else {
+                    UploadSpec::Dense {
+                        dim: u64::from_le_bytes(bytes[23..31].try_into().unwrap()) as usize,
+                    }
+                };
+                let n = u32::from_le_bytes(bytes[count_at..count_at + 4].try_into().unwrap())
+                    as usize;
+                let table = 12usize
+                    .checked_mul(n)
+                    .and_then(|t| t.checked_add(count_at + 4))
+                    .context("subtree-assign entry count overflows")?;
+                if bytes.len() < table {
+                    bail!("subtree-assign claims {n} entries but is {} bytes", bytes.len());
+                }
+                let mut entries = Vec::with_capacity(n);
+                for i in 0..n {
+                    let at = count_at + 4 + 12 * i;
+                    entries.push((
+                        u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()),
+                        u32::from_le_bytes(bytes[at + 4..at + 8].try_into().unwrap()),
+                        f32::from_le_bytes(bytes[at + 8..at + 12].try_into().unwrap()),
+                    ));
+                }
+                let weights_frame = bytes.split_off(table);
+                if weights_frame.is_empty() {
+                    bail!("subtree-assign message carries no weights frame");
+                }
+                Ok(Msg::SubtreeAssign {
+                    round,
+                    round_seed,
+                    lr,
+                    codec_id,
+                    spec,
+                    entries,
+                    weights_frame,
+                })
+            }
+            TAG_SUBTREE_UPLOAD => {
+                const FIXED: usize = 1 + 8 + 1 + 4;
+                if bytes.len() < FIXED {
+                    bail!("subtree-upload message truncated at {} bytes", bytes.len());
+                }
+                let round = u64::from_le_bytes(bytes[1..9].try_into().unwrap());
+                let has_frame = match bytes[9] {
+                    0 => false,
+                    1 => true,
+                    other => bail!("subtree-upload frame flag must be 0 or 1, got {other}"),
+                };
+                let n = u32::from_le_bytes(bytes[10..14].try_into().unwrap()) as usize;
+                let table = 11usize
+                    .checked_mul(n)
+                    .and_then(|t| t.checked_add(FIXED))
+                    .context("subtree-upload report count overflows")?;
+                if bytes.len() < table {
+                    bail!("subtree-upload claims {n} reports but is {} bytes", bytes.len());
+                }
+                let mut reports = Vec::with_capacity(n);
+                for i in 0..n {
+                    let at = FIXED + 11 * i;
+                    reports.push(SlotReport {
+                        slot: u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()),
+                        outcome: bytes[at + 4],
+                        retries: u16::from_le_bytes(bytes[at + 5..at + 7].try_into().unwrap()),
+                        loss: f32::from_le_bytes(bytes[at + 7..at + 11].try_into().unwrap()),
+                    });
+                }
+                let frame = bytes.split_off(table);
+                if has_frame && frame.is_empty() {
+                    bail!("subtree-upload declares a merged frame but carries none");
+                }
+                if !has_frame && !frame.is_empty() {
+                    bail!(
+                        "subtree-upload declares no merged frame but carries {} bytes",
+                        frame.len()
+                    );
+                }
+                Ok(Msg::SubtreeUpload { round, reports, frame })
+            }
             other => bail!("unknown transport message tag {other}"),
         }
     }
@@ -273,6 +504,101 @@ mod tests {
             Msg::SlotAssign { slot, client } => assert_eq!((slot, client), (9, 1234)),
             _ => panic!(),
         }
+        match roundtrip(Msg::RelayHello { version: 3 }) {
+            Msg::RelayHello { version: 3 } => {}
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn relay_messages_roundtrip() {
+        let assign = Msg::SubtreeAssign {
+            round: 11,
+            round_seed: 0x0123_4567_89AB_CDEF,
+            lr: 0.25,
+            codec_id: 1,
+            spec: UploadSpec::Sketch { rows: 5, cols: 1024, dim: 30_000, seed: 0xD5 },
+            entries: vec![(0, 42, 1.0), (2, 7, 3.5)],
+            weights_frame: vec![9, 8, 7],
+        };
+        match roundtrip(assign) {
+            Msg::SubtreeAssign { round, round_seed, lr, codec_id, spec, entries, weights_frame } => {
+                assert_eq!(round, 11);
+                assert_eq!(round_seed, 0x0123_4567_89AB_CDEF);
+                assert_eq!(lr.to_bits(), 0.25f32.to_bits());
+                assert_eq!(codec_id, 1);
+                assert_eq!(
+                    spec,
+                    UploadSpec::Sketch { rows: 5, cols: 1024, dim: 30_000, seed: 0xD5 }
+                );
+                assert_eq!(entries.len(), 2);
+                assert_eq!((entries[0].0, entries[0].1), (0, 42));
+                assert_eq!(entries[0].2.to_bits(), 1.0f32.to_bits());
+                assert_eq!((entries[1].0, entries[1].1), (2, 7));
+                assert_eq!(entries[1].2.to_bits(), 3.5f32.to_bits());
+                assert_eq!(weights_frame, vec![9, 8, 7]);
+            }
+            _ => panic!(),
+        }
+        // A dense-spec assignment with an empty subtree (the relay has
+        // no chain this round) still needs a weights frame.
+        let empty = Msg::SubtreeAssign {
+            round: 1,
+            round_seed: 2,
+            lr: 0.5,
+            codec_id: 0,
+            spec: UploadSpec::Dense { dim: 64 },
+            entries: vec![],
+            weights_frame: vec![1],
+        };
+        match roundtrip(empty) {
+            Msg::SubtreeAssign { spec, entries, weights_frame, .. } => {
+                assert_eq!(spec, UploadSpec::Dense { dim: 64 });
+                assert!(entries.is_empty());
+                assert_eq!(weights_frame, vec![1]);
+            }
+            _ => panic!(),
+        }
+        let up = Msg::SubtreeUpload {
+            round: 11,
+            reports: vec![
+                SlotReport { slot: 0, outcome: OUTCOME_ARRIVED, retries: 0, loss: 1.5 },
+                SlotReport { slot: 2, outcome: OUTCOME_DROPPED_DISCONNECTED, retries: 2, loss: 0.0 },
+            ],
+            frame: vec![4, 5, 6],
+        };
+        match roundtrip(up) {
+            Msg::SubtreeUpload { round, reports, frame } => {
+                assert_eq!(round, 11);
+                assert_eq!(reports.len(), 2);
+                assert_eq!(reports[0].slot, 0);
+                assert_eq!(reports[0].outcome, OUTCOME_ARRIVED);
+                assert_eq!(reports[0].loss.to_bits(), 1.5f32.to_bits());
+                assert_eq!(reports[1].slot, 2);
+                assert_eq!(reports[1].outcome, OUTCOME_DROPPED_DISCONNECTED);
+                assert_eq!(reports[1].retries, 2);
+                assert_eq!(frame, vec![4, 5, 6]);
+            }
+            _ => panic!(),
+        }
+        // Zero-participant subtree: all-dropped reports, no frame.
+        let none = Msg::SubtreeUpload {
+            round: 3,
+            reports: vec![SlotReport {
+                slot: 1,
+                outcome: OUTCOME_DROPPED_FAULTED,
+                retries: 0,
+                loss: 0.0,
+            }],
+            frame: vec![],
+        };
+        match roundtrip(none) {
+            Msg::SubtreeUpload { reports, frame, .. } => {
+                assert_eq!(reports.len(), 1);
+                assert!(frame.is_empty());
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]
@@ -314,5 +640,59 @@ mod tests {
         for cut in 0..=frame_start {
             assert!(Msg::decode(good[..cut].to_vec()).is_err(), "prefix {cut} accepted");
         }
+    }
+
+    #[test]
+    fn malformed_relay_messages_error_not_panic() {
+        assert!(Msg::decode(vec![TAG_RELAY_HELLO]).is_err());
+        assert!(Msg::decode(vec![TAG_RELAY_HELLO, 3, 0]).is_err());
+        // subtree-assign: truncation anywhere before the weights frame
+        let good = Msg::SubtreeAssign {
+            round: 1,
+            round_seed: 2,
+            lr: 0.5,
+            codec_id: 0,
+            spec: UploadSpec::Sketch { rows: 3, cols: 128, dim: 200, seed: 11 },
+            entries: vec![(0, 9, 1.0)],
+            weights_frame: vec![1, 2, 3, 4],
+        }
+        .encode();
+        let frame_start = 23 + 24 + 4 + 12;
+        for cut in 0..=frame_start {
+            assert!(Msg::decode(good[..cut].to_vec()).is_err(), "prefix {cut} accepted");
+        }
+        // unknown spec kind byte
+        let mut bad = good.clone();
+        bad[22] = 9;
+        assert!(Msg::decode(bad).is_err());
+        // entry count lying about the length
+        let mut bad = good.clone();
+        bad[23 + 24..23 + 24 + 4].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(Msg::decode(bad).is_err());
+        // subtree-upload: truncation through the report table
+        let good = Msg::SubtreeUpload {
+            round: 1,
+            reports: vec![SlotReport { slot: 0, outcome: OUTCOME_ARRIVED, retries: 0, loss: 0.5 }],
+            frame: vec![1, 2, 3, 4],
+        }
+        .encode();
+        let frame_start = 14 + 11;
+        for cut in 0..frame_start {
+            assert!(Msg::decode(good[..cut].to_vec()).is_err(), "prefix {cut} accepted");
+        }
+        // exact table length with has_frame=1 but no frame bytes
+        assert!(Msg::decode(good[..frame_start].to_vec()).is_err());
+        // frame flag must be 0 or 1
+        let mut bad = good.clone();
+        bad[9] = 7;
+        assert!(Msg::decode(bad).is_err());
+        // has_frame=0 with trailing bytes is a violation
+        let mut bad = good;
+        bad[9] = 0;
+        assert!(Msg::decode(bad).is_err());
+        // report count lying about the length
+        let mut bad = Msg::SubtreeUpload { round: 1, reports: vec![], frame: vec![] }.encode();
+        bad[10..14].copy_from_slice(&7u32.to_le_bytes());
+        assert!(Msg::decode(bad).is_err());
     }
 }

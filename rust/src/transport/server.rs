@@ -48,11 +48,14 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
+use crate::cohort::{DropReason, QuorumPolicy, RoundMembership, SlotOutcome};
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::ServerAggregator;
 use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
-use crate::transport::proto::{Msg, PROTO_VERSION};
+use crate::transport::proto::{
+    Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
+    OUTCOME_DROPPED_FAULTED, PROTO_VERSION,
+};
 use crate::transport::{Conn, Endpoint};
 use crate::wire::{decode_update, encode_dense_frame, encode_update, Body, Codec, Frame, F32LE};
 
@@ -86,6 +89,19 @@ pub struct ServeOptions {
     /// deadline fires, and closes the round at quorum with the
     /// aggregation weights renormalized over the arrived subset.
     pub quorum: QuorumPolicy,
+    /// Accumulator shards for the round pipeline. 0 (the default) =
+    /// auto-size from `reduce_parallelism`. A flat server that must be
+    /// bitwise comparable to a relay tree sets this to the tree's relay
+    /// count, matching its fold order (see [`crate::relay`]).
+    pub shards: usize,
+    /// Number of downstream *relays* this server aggregates over
+    /// instead of direct workers. 0 (the default) = flat serving. When
+    /// set, `workers` is ignored: the server accepts `relay-hello`
+    /// peers, hands each one a slot chain (`subtree-assign`), absorbs
+    /// one merged lossless frame per relay, and the shard layout is
+    /// pinned to the relay count so the tree's fold order reproduces
+    /// the flat server's bits.
+    pub relay_children: usize,
 }
 
 impl Default for ServeOptions {
@@ -98,6 +114,8 @@ impl Default for ServeOptions {
             max_msg: DEFAULT_MAX_MSG_BYTES,
             reduce_parallelism: 0,
             quorum: QuorumPolicy::strict(),
+            shards: 0,
+            relay_children: 0,
         }
     }
 }
@@ -183,7 +201,7 @@ impl RoundServer {
     /// Bind a listener (TCP port 0 = ephemeral; a stale UDS socket file
     /// is removed first).
     pub fn bind(ep: &Endpoint, opts: ServeOptions) -> Result<RoundServer> {
-        if opts.workers == 0 {
+        if opts.workers == 0 && opts.relay_children == 0 {
             bail!("ServeOptions.workers must be >= 1");
         }
         let listener = match ep {
@@ -205,8 +223,15 @@ impl RoundServer {
                 ListenerKind::Unix(l)
             }
         };
-        let pipeline =
-            RoundPipeline::new(PipelineOptions { reduce_parallelism: opts.reduce_parallelism });
+        // A relay-mode root pins the shard layout to the relay count —
+        // one shard chain per relay — so the tree's two-level fold
+        // reassociates to exactly the flat fold over the same slots.
+        let shard_override =
+            if opts.relay_children > 0 { opts.relay_children } else { opts.shards };
+        let pipeline = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: opts.reduce_parallelism,
+            shard_override,
+        });
         Ok(RoundServer {
             listener,
             opts,
@@ -247,17 +272,30 @@ impl RoundServer {
         Arc::clone(&self.absorbed)
     }
 
-    /// Accept + handshake until the worker pool is full. Connections
-    /// that fail the hello handshake (bad version, garbage, stall) are
+    /// The number of downstream peers a round needs: relays in relay
+    /// mode, workers otherwise.
+    fn want_peers(&self) -> usize {
+        if self.opts.relay_children > 0 {
+            self.opts.relay_children
+        } else {
+            self.opts.workers
+        }
+    }
+
+    /// Accept + handshake until the downstream pool is full (workers in
+    /// flat mode, relays in relay mode). Connections that fail the
+    /// hello handshake (bad version, wrong tier, garbage, stall) are
     /// dropped and accepting continues until the deadline.
     pub fn ensure_workers(&mut self) -> Result<()> {
+        let want = self.want_peers();
+        let relay = self.opts.relay_children > 0;
         let deadline = Instant::now() + self.opts.accept_timeout;
-        while self.conns.len() < self.opts.workers {
+        while self.conns.len() < want {
             if Instant::now() >= deadline {
                 bail!(
                     "timed out waiting for worker connections ({}/{} connected)",
                     self.conns.len(),
-                    self.opts.workers
+                    want
                 );
             }
             let mut conn = self.accept_one(deadline)?;
@@ -267,7 +305,7 @@ impl RoundServer {
             let remaining = deadline.saturating_duration_since(Instant::now());
             let hs = self.opts.read_timeout.min(remaining).max(Duration::from_millis(10));
             let _ = conn.set_timeouts(Some(hs), Some(hs));
-            match handshake(&mut conn, self.opts.max_msg) {
+            match handshake(&mut conn, self.opts.max_msg, relay) {
                 Ok(()) => {
                     let t = self.opts.read_timeout;
                     conn.set_timeouts(Some(t), Some(t))?;
@@ -302,7 +340,7 @@ impl RoundServer {
                         bail!(
                             "timed out waiting for worker connections ({}/{} connected)",
                             self.conns.len(),
-                            self.opts.workers
+                            self.want_peers()
                         );
                     }
                     std::thread::sleep(Duration::from_millis(5));
@@ -329,6 +367,9 @@ impl RoundServer {
             bail!("{} participants but {} client sizes", slots, p.client_sizes.len());
         }
         self.ensure_workers()?;
+        if self.opts.relay_children > 0 {
+            return self.run_round_relay(agg, p, w);
+        }
         let nconns = self.conns.len();
         let policy = self.opts.quorum.clone();
         let deadline = policy.round_deadline().map(|d| Instant::now() + d);
@@ -765,6 +806,353 @@ impl RoundServer {
         })
     }
 
+    /// One server round over a relay tier: each connected peer is a
+    /// relay ([`crate::relay`]) that aggregates its own downstream
+    /// workers and uploads a single merged frame for its slot chain.
+    ///
+    /// Chain layout: relay `r` owns slots `{s : s % R == r}` (R = relay
+    /// count capped at the slot count) — the same modulo rule the round
+    /// pipeline uses to map slots to shards, with the pipeline built at
+    /// `shard_override = relay count`. Each merged frame is therefore
+    /// absorbed into exactly the shard that would have folded those
+    /// slots in a flat round, in the same in-chain order and with the
+    /// same global λ weights (applied downstream, shipped in the
+    /// assignment), so the tree reproduces the flat server's bits.
+    ///
+    /// Fault attribution is per subtree: a corrupt or inconsistent
+    /// merged frame drops exactly that relay's slot chain (and its
+    /// connection), never its siblings — the quorum policy decides
+    /// whether the round still closes over the surviving chains.
+    fn run_round_relay(
+        &mut self,
+        agg: &mut dyn ServerAggregator,
+        p: &RoundParams<'_>,
+        w: &mut [f32],
+    ) -> Result<RoundStats> {
+        let slots = p.participants.len();
+        let nrelays = self.conns.len();
+        let policy = self.opts.quorum.clone();
+        let deadline = policy.round_deadline().map(|d| Instant::now() + d);
+        for conn in &self.conns {
+            let t = self.opts.read_timeout;
+            let _ = conn.set_timeouts(Some(t), Some(t));
+        }
+        let lambdas = agg.begin_round(p.client_sizes);
+        let spec = agg.upload_spec();
+        self.absorbed.store(0, Ordering::SeqCst);
+
+        // Slot chains: relay r owns {s : s % nchains == r}, ascending.
+        // With fewer slots than relays the tail relays get empty chains
+        // this round; they still receive an assignment and must reply,
+        // keeping the per-round message pattern uniform.
+        let nchains = nrelays.min(slots);
+        let mut chains: Vec<Vec<(u32, u32, f32)>> = vec![Vec::new(); nrelays];
+        for (slot, &c) in p.participants.iter().enumerate() {
+            let client = u32::try_from(c).context("client id exceeds u32")?;
+            chains[slot % nchains].push((slot as u32, client, lambdas[slot]));
+        }
+
+        let mut transport_bytes = 0u64;
+        let w_frame = encode_dense_frame(w, &F32LE);
+        let mut start_err = None;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            let head = Msg::SubtreeAssign {
+                round: p.round,
+                round_seed: p.round_seed,
+                lr: p.lr,
+                codec_id: self.opts.codec.id(),
+                spec: spec.clone(),
+                entries: chains[i].clone(),
+                weights_frame: Vec::new(),
+            }
+            .encode();
+            match write_msg_parts(conn, &head, &w_frame) {
+                Ok(n) => transport_bytes += n,
+                Err(e) => {
+                    start_err = Some(e.context(format!("sending subtree-assign to relay {i}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = start_err {
+            self.abort_round("subtree-assign delivery failed");
+            return Err(e);
+        }
+
+        let absorber = match self.pipeline.begin(&spec, lambdas) {
+            Ok(a) => a,
+            Err(e) => {
+                self.abort_round("round pipeline setup failed");
+                return Err(e);
+            }
+        };
+        let max_msg = self.opts.max_msg;
+        let read_timeout = self.opts.read_timeout;
+
+        /// One relay's reply, read concurrently but *not* absorbed by
+        /// the reader: merged frames fold on the sweep below, in relay
+        /// order, so fault attribution is deterministic regardless of
+        /// arrival interleaving (one frame per chain — there is nothing
+        /// to stream).
+        struct RelayRead {
+            upload: Option<(u64, Vec<SlotReport>, Vec<u8>)>,
+            bytes_in: u64,
+            /// Protocol violation (decode failure, wrong message kind)
+            /// rather than a transport fault.
+            fault: bool,
+            /// The round deadline had fired when the read failed.
+            deadline_hit: bool,
+            err: Option<anyhow::Error>,
+        }
+        let results: Vec<RelayRead> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .conns
+                .iter_mut()
+                .map(|conn| {
+                    s.spawn(move || -> RelayRead {
+                        let mut out = RelayRead {
+                            upload: None,
+                            bytes_in: 0,
+                            fault: false,
+                            deadline_hit: false,
+                            err: None,
+                        };
+                        if let Some(dl) = deadline {
+                            let rem = dl.saturating_duration_since(Instant::now());
+                            if rem.is_zero() {
+                                out.deadline_hit = true;
+                                out.err =
+                                    Some(anyhow!("round deadline expired awaiting subtree upload"));
+                                return out;
+                            }
+                            let t = read_timeout.min(rem);
+                            let _ = conn.set_timeouts(Some(t), Some(t));
+                        }
+                        match read_msg(&mut *conn, max_msg) {
+                            Ok((bytes, n)) => {
+                                out.bytes_in = n;
+                                match Msg::decode(bytes) {
+                                    Ok(Msg::SubtreeUpload { round, reports, frame }) => {
+                                        out.upload = Some((round, reports, frame));
+                                    }
+                                    Ok(other) => {
+                                        out.fault = true;
+                                        out.err = Some(anyhow!(
+                                            "expected a subtree upload, got {}",
+                                            other.kind_name()
+                                        ));
+                                    }
+                                    Err(e) => {
+                                        out.fault = true;
+                                        out.err = Some(e);
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                out.deadline_hit =
+                                    deadline.is_some_and(|dl| Instant::now() >= dl);
+                                out.err = Some(e);
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("relay reader panicked")).collect()
+        });
+
+        // Sweep in relay order: validate each reply against its chain,
+        // absorb the merged frame, then roll the subtree's per-slot
+        // outcomes into the root membership ledger. A failure anywhere
+        // drops exactly that chain — reason Faulted for bad content,
+        // Disconnected/Deadline for transport faults.
+        let mut membership = RoundMembership::new(slots, policy.clone())?;
+        let mut losses = vec![0f32; slots];
+        let mut wire_up0 = 0u64;
+        let mut ideal_up0 = 0u64;
+        let mut have_sample = false;
+        let mut transport_in = 0u64;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut dead = vec![false; nrelays];
+        for (r, rr) in results.into_iter().enumerate() {
+            let RelayRead { upload, bytes_in, fault, deadline_hit, err } = rr;
+            transport_in += bytes_in;
+            let failure = match upload {
+                Some((round, reports, frame)) => {
+                    match absorb_chain(&absorber, r, &chains[r], round, p.round, &reports, &frame)
+                    {
+                        Ok(()) => {
+                            self.absorbed.fetch_max(absorber.absorbed(), Ordering::SeqCst);
+                            for rep in &reports {
+                                let slot = rep.slot as usize;
+                                match rep.outcome {
+                                    OUTCOME_ARRIVED => {
+                                        membership.record_report(
+                                            slot,
+                                            if rep.retries > 0 {
+                                                SlotOutcome::Retried(rep.retries as usize)
+                                            } else {
+                                                SlotOutcome::Arrived
+                                            },
+                                        );
+                                        losses[slot] = rep.loss;
+                                    }
+                                    outcome => {
+                                        // Downstream retries were real
+                                        // work even when the slot
+                                        // ultimately dropped.
+                                        for _ in 0..rep.retries {
+                                            membership.record_retry(slot);
+                                        }
+                                        let reason = match outcome {
+                                            OUTCOME_DROPPED_FAULTED => DropReason::Faulted,
+                                            OUTCOME_DROPPED_DISCONNECTED => {
+                                                DropReason::Disconnected
+                                            }
+                                            _ => DropReason::Deadline,
+                                        };
+                                        membership
+                                            .record_report(slot, SlotOutcome::Dropped(reason));
+                                    }
+                                }
+                            }
+                            if !frame.is_empty() && !have_sample {
+                                // The root link carries one merged frame
+                                // per chain regardless of downstream
+                                // fan-out; sample the first.
+                                have_sample = true;
+                                wire_up0 = frame.len() as u64;
+                                if let Ok(f) = Frame::parse(&frame) {
+                                    ideal_up0 = idealized_payload(&f);
+                                }
+                            }
+                            None
+                        }
+                        Err(e) => Some((
+                            e.context(format!("subtree upload from relay {r}")),
+                            DropReason::Faulted,
+                        )),
+                    }
+                }
+                None => {
+                    let reason = if fault {
+                        DropReason::Faulted
+                    } else if deadline_hit {
+                        DropReason::Deadline
+                    } else {
+                        DropReason::Disconnected
+                    };
+                    let e = err.unwrap_or_else(|| anyhow!("relay sent no subtree upload"));
+                    Some((e.context(format!("subtree upload from relay {r}")), reason))
+                }
+            };
+            if let Some((e, reason)) = failure {
+                dead[r] = true;
+                // Fault containment: only this subtree's slots drop.
+                for &(slot, _, _) in &chains[r] {
+                    membership.record_drop(slot as usize, reason);
+                }
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        debug_assert!(membership.is_settled());
+        transport_bytes += transport_in;
+        let absorb = absorber.absorb_stats();
+
+        if !membership.quorum_met() {
+            self.pipeline.abort(absorber);
+            self.abort_round("quorum not met");
+            let (arrived, target) = (membership.arrived(), membership.quorum_target());
+            let e = first_err.unwrap_or_else(|| {
+                anyhow!("round deadline expired with {arrived} of {slots} uploads")
+            });
+            return Err(e.context(format!(
+                "round {}: {arrived} of {slots} uploads arrived (quorum target {target})",
+                p.round
+            )));
+        }
+        // The round closes with the surviving subtrees. Dead relay
+        // connections are dropped (they reconnect via ensure_workers
+        // next round); survivors carry the broadcast down their trees.
+        if dead.iter().any(|&d| d) {
+            let abort = Msg::Abort { reason: "subtree faulted or straggled".into() }.encode();
+            let mut keep = dead.iter().map(|&d| !d);
+            for (conn, is_dead) in self.conns.iter_mut().zip(dead.iter()) {
+                if *is_dead {
+                    let _ = write_msg(conn, &abort);
+                    conn.shutdown();
+                }
+            }
+            self.conns.retain(|_| keep.next().unwrap());
+        }
+
+        let merged = if membership.is_full() {
+            self.pipeline.finish(absorber)
+        } else {
+            self.pipeline.finalize_partial(absorber, &membership)
+        };
+        let merged = match merged {
+            Ok(m) => m,
+            Err(e) => {
+                self.abort_round("merge failed");
+                return Err(e);
+            }
+        };
+        let update = match agg.finish(&merged, p.lr) {
+            Ok(u) => u,
+            Err(e) => {
+                self.pipeline.recycle(merged);
+                self.abort_round("aggregator finish failed");
+                return Err(e);
+            }
+        };
+        self.pipeline.recycle(merged);
+        let update_nnz = update.nnz();
+        let download_bytes_per_client = update.payload_bytes();
+        let update_frame = encode_update(&update, self.opts.codec);
+
+        // Broadcast round-end to the surviving relays; each forwards it
+        // verbatim down to its own workers.
+        let end_bytes =
+            Msg::RoundEnd { round: p.round, update_frame: update_frame.clone() }.encode();
+        let mut bcast_err = None;
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            match write_msg(conn, &end_bytes) {
+                Ok(n) => transport_bytes += n,
+                Err(e) => {
+                    bcast_err = Some(e.context(format!("broadcasting round-end to relay {i}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = bcast_err {
+            self.abort_round("round-end delivery failed");
+            return Err(e);
+        }
+
+        let decoded = decode_update(&update_frame).context("decoding own broadcast")?;
+        decoded.apply(w);
+
+        let mem = membership.summary();
+        Ok(RoundStats {
+            mean_loss: membership.mean_loss_over_arrived(&losses),
+            losses,
+            participants: mem.participants,
+            dropped_slots: mem.dropped_slots,
+            retried_slots: mem.retried_slots,
+            update_nnz,
+            upload_bytes_per_client: ideal_up0,
+            download_bytes_per_client,
+            wire_upload_bytes_per_client: wire_up0,
+            wire_download_bytes_per_client: update_frame.len() as u64,
+            transport_bytes,
+            absorb_stalls: absorb.lock_stalls,
+            parked_bytes: absorb.parked_bytes,
+        })
+    }
+
     /// Fail the in-flight round: best-effort `Abort` to every worker,
     /// then drop all connections. Scratch and listener stay.
     fn abort_round(&mut self, reason: &str) {
@@ -845,16 +1233,74 @@ fn read_one_upload(
     Ok(UploadRead { loss, bytes_in, frame_bytes, ideal_bytes })
 }
 
+/// Validate one relay's `SubtreeUpload` against its assigned chain and
+/// absorb the merged frame. The reports must cover the assigned slots
+/// exactly, in order (the assignment is ascending, so equality implies
+/// ascending coverage); the merged frame must be present iff at least
+/// one slot arrived. Any violation — including a frame the in-flight
+/// round rejects (bad geometry, lossy codec, wrong chain) — is a
+/// `Faulted` verdict for the whole chain; nothing is partially
+/// absorbed (`offer_chain_frame` is all-or-nothing).
+fn absorb_chain(
+    absorber: &RoundInFlight,
+    chain: usize,
+    assigned: &[(u32, u32, f32)],
+    round: u64,
+    expect_round: u64,
+    reports: &[SlotReport],
+    frame: &[u8],
+) -> Result<()> {
+    if round != expect_round {
+        bail!("subtree upload for round {round}, expected round {expect_round}");
+    }
+    if reports.len() != assigned.len() {
+        bail!("{} slot report(s) for a {}-slot chain", reports.len(), assigned.len());
+    }
+    for (rep, &(slot, _, _)) in reports.iter().zip(assigned) {
+        if rep.slot != slot {
+            bail!("report for slot {}, expected slot {slot}", rep.slot);
+        }
+        if rep.outcome > OUTCOME_DROPPED_DEADLINE {
+            bail!("unknown slot outcome {} for slot {slot}", rep.outcome);
+        }
+    }
+    let arrived: Vec<usize> = reports
+        .iter()
+        .filter(|rep| rep.outcome == OUTCOME_ARRIVED)
+        .map(|rep| rep.slot as usize)
+        .collect();
+    if arrived.is_empty() != frame.is_empty() {
+        bail!(
+            "merged frame presence ({} bytes) disagrees with {} arrived report(s)",
+            frame.len(),
+            arrived.len()
+        );
+    }
+    if !arrived.is_empty() {
+        absorber.offer_chain_frame(chain, &arrived, frame)?;
+    }
+    Ok(())
+}
+
 /// Server side of the hello handshake: the peer must lead with a
-/// matching-version `Hello` within the read deadline.
-fn handshake(conn: &mut Conn, max_msg: usize) -> Result<()> {
+/// matching-version `Hello` (flat mode) or `RelayHello` (relay mode)
+/// within the read deadline. The tiers are deliberately not
+/// interchangeable — a worker dialing a relay-mode root (or a relay
+/// dialing a flat server) is a topology misconfiguration and fails
+/// here, before any round state exists.
+pub(crate) fn handshake(conn: &mut Conn, max_msg: usize, relay: bool) -> Result<()> {
     let (bytes, _) = read_msg(conn, max_msg)?;
-    match Msg::decode(bytes)? {
-        Msg::Hello { version } if version == PROTO_VERSION => Ok(()),
-        Msg::Hello { version } => {
+    match (Msg::decode(bytes)?, relay) {
+        (Msg::Hello { version }, false) | (Msg::RelayHello { version }, true)
+            if version == PROTO_VERSION =>
+        {
+            Ok(())
+        }
+        (Msg::Hello { version }, false) | (Msg::RelayHello { version }, true) => {
             bail!("peer speaks transport protocol v{version}, this build speaks v{PROTO_VERSION}")
         }
-        other => bail!("expected hello, got {} message", other.kind_name()),
+        (other, true) => bail!("expected relay-hello, got {} message", other.kind_name()),
+        (other, false) => bail!("expected hello, got {} message", other.kind_name()),
     }
 }
 
@@ -902,7 +1348,7 @@ pub struct ServeSummary {
 /// representable seconds (the socket layer treats zero as "no
 /// deadline", which would silently disable fault containment, and
 /// `Duration::from_secs_f64` panics on out-of-range floats).
-fn duration_from_cfg_secs(secs: f64, knob: &str) -> Result<Duration> {
+pub(crate) fn duration_from_cfg_secs(secs: f64, knob: &str) -> Result<Duration> {
     if !secs.is_finite() || secs <= 0.0 {
         bail!("{knob} must be a positive number of seconds, got {secs}");
     }
@@ -957,14 +1403,25 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         max_msg: crate::transport::effective_max_msg(cfg, artifacts.manifest.dim)?,
         reduce_parallelism: cfg.reduce_parallelism,
         quorum: cfg.quorum_policy()?,
+        shards: cfg.shards,
+        relay_children: cfg.relay_children,
     };
     let mut server = RoundServer::bind(&ep, opts)?;
-    eprintln!(
-        "[serve] listening on {} for {} worker(s), strategy={}",
-        server.local_endpoint()?,
-        cfg.transport_workers,
-        agg.name()
-    );
+    if cfg.relay_children > 0 {
+        eprintln!(
+            "[serve] listening on {} for {} relay(s), strategy={}",
+            server.local_endpoint()?,
+            cfg.relay_children,
+            agg.name()
+        );
+    } else {
+        eprintln!(
+            "[serve] listening on {} for {} worker(s), strategy={}",
+            server.local_endpoint()?,
+            cfg.transport_workers,
+            agg.name()
+        );
+    }
     let mut comm = CommStats::default();
     let mut transport_bytes = 0u64;
     let mut dropped_slots = 0u64;
@@ -1016,6 +1473,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,
             update_nnz: stats.update_nnz,
+            tier: if cfg.relay_children > 0 { Some("root") } else { None },
         });
         if cfg.verbose {
             eprintln!(

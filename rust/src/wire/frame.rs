@@ -262,6 +262,15 @@ pub fn encode_dense_frame(v: &[f32], codec: &dyn Codec) -> Vec<u8> {
     encode_dense(v, codec)
 }
 
+/// Encode a bare sketch as one frame — the relay tier's merged-subtree
+/// upload (a λ-weighted partial sum of downstream sketches is itself a
+/// valid sketch upload, so it travels in the same grammar). Always pair
+/// with a lossless codec: the merged accumulator must survive the hop
+/// bit-for-bit for tree aggregation to stay deterministic.
+pub fn encode_sketch_frame(s: &CountSketch, codec: &dyn Codec) -> Vec<u8> {
+    encode_sketch(s, codec)
+}
+
 /// Decode a frame that must carry a dense payload (the transport
 /// client's view of the weights broadcast). Rejects sketch/sparse
 /// frames.

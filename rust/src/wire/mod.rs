@@ -70,6 +70,6 @@ pub mod frame;
 
 pub use codec::{codec_by_id, codec_by_name, Codec, F16Le, F16LE, F32Le, F32LE};
 pub use frame::{
-    decode_dense_frame, decode_update, decode_upload, encode_dense_frame, encode_update,
-    encode_upload, Body, Frame, Kind, HEADER_LEN, MAGIC, VERSION,
+    decode_dense_frame, decode_update, decode_upload, encode_dense_frame, encode_sketch_frame,
+    encode_update, encode_upload, Body, Frame, Kind, HEADER_LEN, MAGIC, VERSION,
 };

@@ -360,6 +360,7 @@ fn disconnect_and_straggler_round_completes_at_quorum() {
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,
             update_nnz: stats.update_nnz,
+            tier: None,
         });
     }
     let text = std::fs::read_to_string(&log).unwrap();

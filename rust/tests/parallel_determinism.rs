@@ -241,7 +241,8 @@ fn finalize_partial_is_bitwise_stable_across_reduce_parallelism() {
     let dropped = [0usize, 7, 16]; // 0 and 16 share a shard
     let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
     let run = |reduce_parallelism: usize, reverse: bool| {
-        let mut pl = RoundPipeline::new(PipelineOptions { reduce_parallelism });
+        let mut pl =
+            RoundPipeline::new(PipelineOptions { reduce_parallelism, ..Default::default() });
         let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
         let mut r = pl.begin(&spec, weights.clone()).unwrap();
         let mut order: Vec<usize> = (0..slots).filter(|s| !dropped.contains(s)).collect();

@@ -10,6 +10,12 @@
 //! weights must be bitwise identical to an in-process reference that
 //! saw only the successful rounds — proving no fault left a fingerprint
 //! on round state.
+//!
+//! The relay tier gets its own gauntlet: a hostile *relay* peer
+//! (corrupt merged frame, mid-merge disconnect, wrong-version
+//! `RelayHello`) must cost exactly its own subtree — the sibling
+//! subtree's slots survive, the round closes at quorum, and the root
+//! stays reusable.
 
 use std::io::Write;
 use std::time::Duration;
@@ -348,4 +354,352 @@ fn bad_handshake_is_dropped_and_round_proceeds() {
         srv.shutdown();
     });
     assert!(w.iter().any(|&x| x != 0.0));
+}
+
+/// A worker that serves rounds until the server (or its relay) says
+/// `Shutdown` — the dense twin of `good_worker`, but persistent, so a
+/// relay tier can keep it across the whole test.
+fn persistent_dense_worker(ep: &Endpoint) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    loop {
+        let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) else { return };
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundStart { round_seed, assignments, .. } => {
+                for (slot, client) in assignments {
+                    let g = synth_grad(DIM, HEAVY, client as usize, round_seed);
+                    let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+                    let msg = Msg::Upload { slot, loss: 0.25, frame };
+                    if write_msg(&mut conn, &msg.encode()).is_err() {
+                        return;
+                    }
+                }
+            }
+            Msg::RoundEnd { .. } => {}
+            Msg::Shutdown | Msg::Abort { .. } => return,
+            other => panic!("unexpected {} message", other.kind_name()),
+        }
+    }
+}
+
+/// A hostile relay peer must cost exactly its own subtree: the sibling
+/// subtree (a real `relay::Relay` over a real worker) survives, the
+/// round closes at quorum with only the evil chain's slots dropped, and
+/// the root serves a full round again once a healthy relay replaces the
+/// dead one — merged-frame fault attribution, end to end.
+#[test]
+fn relay_peer_faults_drop_only_their_subtree() {
+    use fetchsgd::cohort::QuorumPolicy;
+    use fetchsgd::compression::aggregate::run_server_round as reference_round;
+    use fetchsgd::relay::{Relay, RelayOptions};
+    use fetchsgd::transport::proto::{SlotReport, OUTCOME_ARRIVED};
+
+    /// Handshake as a relay and wait for the round's subtree.
+    fn start_subtree(conn: &mut Conn) -> (u64, u64, Vec<(u32, u32, f32)>) {
+        write_msg(conn, &Msg::RelayHello { version: PROTO_VERSION }.encode()).unwrap();
+        let (bytes, _) = read_msg(conn, 64 << 20).unwrap();
+        match Msg::decode(bytes).unwrap() {
+            Msg::SubtreeAssign { round, round_seed, entries, .. } => (round, round_seed, entries),
+            other => panic!("expected subtree-assign, got {}", other.kind_name()),
+        }
+    }
+
+    // Reports claim every slot arrived, but the merged frame is
+    // garbage: the root must reject the frame *before* recording any of
+    // the claimed outcomes.
+    fn evil_corrupt_merged(conn: &mut Conn) {
+        let (round, round_seed, entries) = start_subtree(conn);
+        let reports = entries
+            .iter()
+            .map(|&(slot, _, _)| {
+                SlotReport { slot, outcome: OUTCOME_ARRIVED, retries: 0, loss: 0.5 }
+            })
+            .collect();
+        let mut frame = valid_dense_frame(round_seed, 0);
+        frame[0] = b'X';
+        write_msg(conn, &Msg::SubtreeUpload { round, reports, frame }.encode()).unwrap();
+        // Linger until the root aborts us, so the failure is the bad
+        // merge, not a racing disconnect.
+        let _ = read_msg(conn, 64 << 20);
+    }
+
+    // Claim a big subtree upload, deliver 10 bytes, vanish mid-merge.
+    fn evil_vanish_mid_merge(conn: &mut Conn) {
+        let _ = start_subtree(conn);
+        conn.write_all(&4096u32.to_le_bytes()).unwrap();
+        conn.write_all(&[7u8; 10]).unwrap();
+        conn.flush().unwrap();
+        conn.shutdown();
+    }
+
+    let cases: Vec<(&str, fn(&mut Conn))> = vec![
+        ("corrupt merged frame", evil_corrupt_merged),
+        ("mid-merge disconnect", evil_vanish_mid_merge),
+    ];
+
+    for (name, evil) in cases {
+        let ep = Endpoint::Tcp("127.0.0.1:0".into());
+        let opts = ServeOptions {
+            workers: 0,
+            relay_children: 2,
+            read_timeout: Duration::from_secs(10),
+            accept_timeout: Duration::from_secs(20),
+            // Half quorum: losing one of two subtrees must not kill the
+            // round.
+            quorum: QuorumPolicy::new(0.5, 0, 0).unwrap(),
+            ..Default::default()
+        };
+        let mut srv = RoundServer::bind(&ep, opts).unwrap();
+        let actual = srv.local_endpoint().unwrap();
+        let mut agg = UncompressedServer::new(DIM, 0.0);
+        let mut w = vec![0f32; DIM];
+        let participants = [0usize, 1, 2, 3];
+        let sizes = [1.0f32; 4];
+        let seed0 = round_seed(40);
+
+        let w_partial = std::thread::scope(|s| {
+            // The healthy subtree: a real relay over a real worker.
+            let mut node = Relay::bind(
+                &Endpoint::Tcp("127.0.0.1:0".into()),
+                RelayOptions { workers: 1, ..Default::default() },
+            )
+            .unwrap();
+            let down = node.local_endpoint().unwrap();
+            let up = actual.clone();
+            s.spawn(move || {
+                node.run(&up).unwrap();
+            });
+            s.spawn(move || persistent_dense_worker(&down));
+            // The hostile relay peer.
+            let ep2 = actual.clone();
+            s.spawn(move || {
+                let mut conn = Conn::connect(&ep2).unwrap();
+                conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
+                    .unwrap();
+                evil(&mut conn);
+            });
+
+            // Fault round: the evil chain drops, the healthy chain
+            // lands, the round closes at quorum.
+            let params = RoundParams {
+                round: 0,
+                round_seed: seed0,
+                lr: LR,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv
+                .run_round(&mut agg, &params, &mut w)
+                .unwrap_or_else(|e| panic!("{name}: round must survive at quorum: {e:#}"));
+            assert_eq!(stats.participants, 2, "{name}: only the evil chain may drop");
+            assert_eq!(stats.dropped_slots, 2, "{name}: the whole evil chain must drop");
+            assert_eq!(
+                stats.losses.iter().filter(|&&l| l != 0.0).count(),
+                2,
+                "{name}: claimed outcomes from a corrupt reply must not be recorded"
+            );
+            assert_eq!(srv.connected(), 1, "{name}: the dead relay must be pruned");
+            let w_partial = w.clone();
+
+            // Recovery: a fresh healthy relay takes the dead one's
+            // place; the same root serves a full round.
+            let mut node = Relay::bind(
+                &Endpoint::Tcp("127.0.0.1:0".into()),
+                RelayOptions { workers: 1, ..Default::default() },
+            )
+            .unwrap();
+            let down = node.local_endpoint().unwrap();
+            let up = actual.clone();
+            s.spawn(move || {
+                node.run(&up).unwrap();
+            });
+            s.spawn(move || persistent_dense_worker(&down));
+            let params = RoundParams {
+                round: 1,
+                round_seed: round_seed(41),
+                lr: LR,
+                participants: &participants,
+                client_sizes: &sizes,
+            };
+            let stats = srv
+                .run_round(&mut agg, &params, &mut w)
+                .unwrap_or_else(|e| panic!("{name}: recovery round failed: {e:#}"));
+            assert_eq!(stats.participants, 4, "{name}: recovery round must be full");
+            srv.shutdown();
+            w_partial
+        });
+
+        // Fingerprint the partial round: the surviving chain is either
+        // {0,2} or {1,3} (the two relays race to connect), and the
+        // weights must equal an in-process round over exactly that
+        // membership — renormalized over the survivors, no trace of the
+        // evil chain.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let reference = |survivors: [usize; 2]| {
+            let mut w_ref = vec![0f32; DIM];
+            let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+            let uploads: Vec<ClientUpload> = survivors
+                .iter()
+                .map(|&c| ClientUpload::Dense(synth_grad(DIM, HEAVY, c, seed0)))
+                .collect();
+            reference_round(&mut agg_ref, &[1.0, 1.0], uploads, &mut w_ref, LR).unwrap();
+            w_ref
+        };
+        let even = reference([0, 2]);
+        let odd = reference([1, 3]);
+        assert!(
+            bits(&w_partial) == bits(&even) || bits(&w_partial) == bits(&odd),
+            "{name}: partial weights match neither surviving chain's reference"
+        );
+    }
+}
+
+/// A relay peer speaking the wrong protocol version is dropped at the
+/// handshake — same contract as a worker with a bad `Hello` — and a
+/// healthy relay tier still gets served in its place.
+#[test]
+fn wrong_version_relay_hello_is_dropped_and_replaced() {
+    use fetchsgd::compression::aggregate::run_server_round as reference_round;
+    use fetchsgd::relay::{Relay, RelayOptions};
+
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 0,
+        relay_children: 1,
+        read_timeout: Duration::from_secs(10),
+        accept_timeout: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let seed = round_seed(50);
+
+    std::thread::scope(|s| {
+        // Wrong-version relay hello: dialed first, so the root meets it
+        // first (loopback accepts in connect order) and must reject it.
+        let ep2 = actual.clone();
+        s.spawn(move || {
+            let mut conn = Conn::connect(&ep2).unwrap();
+            conn.set_timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
+            write_msg(&mut conn, &Msg::RelayHello { version: PROTO_VERSION + 1 }.encode()).unwrap();
+            if let Ok((bytes, _)) = read_msg(&mut conn, 1 << 20) {
+                assert!(matches!(Msg::decode(bytes).unwrap(), Msg::Abort { .. }));
+            }
+        });
+        // Give the bad peer's dial a head start before the healthy
+        // relay goes up.
+        std::thread::sleep(Duration::from_millis(200));
+        let mut node = Relay::bind(
+            &Endpoint::Tcp("127.0.0.1:0".into()),
+            RelayOptions { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let down = node.local_endpoint().unwrap();
+        let up = actual.clone();
+        s.spawn(move || {
+            node.run(&up).unwrap();
+        });
+        s.spawn(move || persistent_dense_worker(&down));
+
+        let participants = [0usize, 1];
+        let sizes = [1.0f32, 1.0];
+        let params = RoundParams {
+            round: 0,
+            round_seed: seed,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        assert_eq!(stats.participants, 2, "the healthy relay must serve the full round");
+        srv.shutdown();
+    });
+
+    // Single surviving tier, full round: deterministic reference.
+    let mut w_ref = vec![0f32; DIM];
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    let uploads: Vec<ClientUpload> =
+        [0usize, 1].iter().map(|&c| ClientUpload::Dense(synth_grad(DIM, HEAVY, c, seed))).collect();
+    reference_round(&mut agg_ref, &[1.0, 1.0], uploads, &mut w_ref, LR).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&w_ref), bits(&w), "round served through a relay diverged from the reference");
+}
+
+/// A `join` worker with a reconnect budget survives a round its server
+/// had to abort (another worker's fault): the abort costs one
+/// connection lifetime, the worker re-dials under backoff, and the same
+/// `join` call serves the next round to completion.
+#[test]
+fn join_reconnects_after_a_faulted_round() {
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let opts = ServeOptions {
+        workers: 2,
+        read_timeout: Duration::from_secs(10),
+        accept_timeout: Duration::from_secs(20),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&ep, opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants = [0usize, 1];
+    let sizes = [1.0f32, 1.0];
+
+    std::thread::scope(|s| {
+        // The resilient worker: survives the aborted round and serves
+        // the recovery round over a fresh connection.
+        let ep2 = actual.clone();
+        s.spawn(move || {
+            let artifacts = sim_artifacts(DIM, 1, 64, 1).unwrap();
+            let dataset = SimDataset { num_clients: NUM_CLIENTS };
+            let client = SimDenseClient { dim: DIM, heavy: HEAVY };
+            let opts = JoinOptions {
+                read_timeout: Some(Duration::from_secs(20)),
+                reconnect_attempts: 3,
+                reconnect_backoff_ms: 50,
+                ..Default::default()
+            };
+            let sum = join(&ep2, &client, &dataset, &artifacts, &opts).unwrap();
+            assert_eq!(sum.rounds, 1, "only the recovery round completes");
+        });
+        // Fault round: an evil sibling truncates its frame, the server
+        // aborts, both connections drop.
+        let ep2 = actual.clone();
+        s.spawn(move || {
+            let mut conn = Conn::connect(&ep2).unwrap();
+            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
+                .unwrap();
+            let (seed, assignments) = start_round(&mut conn);
+            let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
+            evil_truncated_frame(&mut conn, slot, seed);
+            let _ = read_msg(&mut conn, 64 << 20);
+        });
+        let params = RoundParams {
+            round: 0,
+            round_seed: round_seed(60),
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        srv.run_round(&mut agg, &params, &mut w).unwrap_err();
+        assert_eq!(srv.connected(), 0);
+
+        // Recovery round: the reconnected join worker plus one fresh
+        // single-round worker.
+        let ep2 = actual.clone();
+        s.spawn(move || good_worker(&ep2));
+        let params = RoundParams {
+            round: 1,
+            round_seed: round_seed(61),
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        assert_eq!(stats.participants, 2, "the reconnected worker must serve the recovery round");
+        srv.shutdown();
+    });
 }
