@@ -1,8 +1,9 @@
 //! End-to-end round latency and round-engine scaling.
 //!
 //! Set `BENCH_JSON=<path>` to also emit machine-readable results (the
-//! committed `BENCH_*.json` baselines); `BENCH_SMOKE=1` runs only a
-//! short-iteration absorb-scaling pass (the CI smoke step).
+//! committed `BENCH_*.json` baselines); `BENCH_SMOKE=1` runs only
+//! short-iteration absorb-scaling and relay fan-out passes (the CI
+//! smoke step).
 //!
 //! Six sections:
 //!
@@ -310,31 +311,39 @@ fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
 /// tracks what the extra hop costs; the `elements` field rides along
 /// with the measured root-link bytes per round, which must be
 /// independent of fan-out — the root receives one merged frame per
-/// relay regardless of how many workers sit below it.
-fn relay_fanout() -> anyhow::Result<Vec<BenchResult>> {
+/// relay regardless of how many workers sit below it. `smoke` shrinks
+/// the geometry and drops the wide fan-out point so CI can drive the
+/// full relay socket path (bind, nested handshake, merged upload,
+/// shutdown) in seconds.
+fn relay_fanout(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
     use fetchsgd::relay::{Relay, RelayOptions};
     use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
 
-    const DIM: usize = 200_000;
+    let dim: usize = if smoke { 20_000 } else { 200_000 };
     const ROWS: usize = 5;
-    const COLS: usize = 4096;
+    let cols: usize = if smoke { 1024 } else { 4096 };
     const SEED: u64 = 7;
-    const COHORT: usize = 64;
+    let cohort: usize = if smoke { 8 } else { 64 };
     const RELAYS: usize = 2;
+    let (warmup, iters) = if smoke { (1, 2) } else { (1, 4) };
     let timeout = std::time::Duration::from_secs(60);
 
     let dataset = SimDataset { num_clients: 10_000 };
-    let client = SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 8 };
-    let participants: Vec<usize> = (0..COHORT).collect();
+    let client = SimSketchClient { rows: ROWS, cols, seed: SEED, dim, heavy: 8 };
+    let participants: Vec<usize> = (0..cohort).collect();
     let mut results = Vec::new();
 
     // fanout 0 = the flat baseline: 4 direct workers with the shard
     // layout pinned to the relay count, so the fold matches the trees
-    // bit for bit and only topology moves the clock.
-    let configs = [("flat workers=4", 0usize), ("tree fanout=4", 4), ("tree fanout=16", 16)];
+    // bit for bit and only topology moves the clock. Smoke keeps one
+    // tree point — the socket path is the same at any fan-out.
+    let mut configs = vec![("flat workers=4", 0usize), ("tree fanout=4", 4)];
+    if !smoke {
+        configs.push(("tree fanout=16", 16));
+    }
     for (label, fanout) in configs {
         let mut server = FetchSgdServer::new(
-            ROWS, COLS, SEED, DIM, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
+            ROWS, cols, SEED, dim, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
         )?;
         let opts = if fanout == 0 {
             ServeOptions {
@@ -355,13 +364,13 @@ fn relay_fanout() -> anyhow::Result<Vec<BenchResult>> {
         };
         let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts)?;
         let root = srv.local_endpoint()?;
-        let mut w = vec![0f32; DIM];
+        let mut w = vec![0f32; dim];
         let cref = &client;
         let dref = &dataset;
         let (mut r, root_bytes) = std::thread::scope(|s| {
             let mut spawn_worker = |ep: Endpoint| {
                 s.spawn(move || {
-                    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                    let artifacts = sim_artifacts(dim, ROWS, cols, SEED).unwrap();
                     let opts = JoinOptions { read_timeout: Some(timeout), ..Default::default() };
                     let _ = join(&ep, cref, dref, &artifacts, &opts);
                 });
@@ -395,7 +404,8 @@ fn relay_fanout() -> anyhow::Result<Vec<BenchResult>> {
             let mut round = 0u64;
             let mut bytes = 0u64;
             let mut rounds = 0u64;
-            let r = bench(&format!("served round W={COHORT} d=200k {label}"), 1, 4, || {
+            let name = format!("served round W={cohort} d={}k {label}", dim / 1000);
+            let r = bench(&name, warmup, iters, || {
                 round += 1;
                 let sizes: Vec<f32> =
                     participants.iter().map(|&c| dataset.client_size(c) as f32).collect();
@@ -466,13 +476,17 @@ fn engine_scaling() -> anyhow::Result<Vec<BenchResult>> {
 }
 
 fn main() -> anyhow::Result<()> {
-    // CI smoke mode: just the absorb-scaling section at short
-    // iteration counts — enough to catch a crash, a deadlock, or an
+    // CI smoke mode: the absorb-scaling section at short iteration
+    // counts, plus a shrunk relay fan-out pass so the relay socket
+    // path (bind, nested handshake, merged upload, shutdown) is
+    // exercised too — enough to catch a crash, a deadlock, or an
     // incomplete round without paying the full sweep.
     if std::env::var("BENCH_SMOKE").is_ok() {
         eprintln!("== absorb scaling (BENCH_SMOKE: short iterations) ==");
-        let results = absorb_scaling(true)?;
-        print_table("absorb scaling (smoke)", &results);
+        let mut results = absorb_scaling(true)?;
+        eprintln!("== relay fan-out (BENCH_SMOKE: flat vs one small tree) ==");
+        results.extend(relay_fanout(true)?);
+        print_table("round smoke", &results);
         write_json_suite("round_smoke", &results);
         return Ok(());
     }
@@ -487,7 +501,7 @@ fn main() -> anyhow::Result<()> {
     results.extend(participation_sweep()?);
 
     eprintln!("== relay fan-out (flat vs 2-level tree over loopback TCP) ==");
-    results.extend(relay_fanout()?);
+    results.extend(relay_fanout(false)?);
 
     eprintln!("== wire codec throughput (encode/decode, dense 4M-value payload) ==");
     results.extend(codec_throughput());

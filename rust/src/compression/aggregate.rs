@@ -379,6 +379,67 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> 
     Ok(())
 }
 
+/// Grouped (tree-shaped) fan-in: reduce `accs` with the *association of
+/// a relay tree* whose per-tier fan-outs are `tiers`, returning the
+/// merged head and parking every drained accumulator in `spares`.
+///
+/// Why this exists: IEEE f32 addition is not associative, and the
+/// reduction association of a depth-N relay tree is the tree shape
+/// itself — each relay left-assoc folds its children, then its parent
+/// left-assoc folds the relay heads. A genuinely flat left-assoc fold
+/// over the same shards produces different bits. So a flat server (or
+/// the in-process engine) that wants to bitwise-match a tree adopts the
+/// tree's grouping here instead.
+///
+/// Layout contract: `accs[j]` is flat shard `j` of `L = Π tiers` shards
+/// (slot → shard is `slot % L`). Nested chain striping composes to
+/// exactly that modulus: the root gives chain `r` the slots
+/// `≡ r (mod n1)`, an interior relay with fan-out `n2` gives child `k`
+/// its chain *positions* `≡ k (mod n2)`, so a depth-3 leaf `(r, k)`
+/// owns the globals `≡ r + k·n1 (mod n1·n2)` — flat shard
+/// `j = r + k·n1`. Grouping shards by `j % n1` (ascending `j` within a
+/// group, then recursing on `j / n1` with the remaining tiers)
+/// therefore rebuilds each subtree's fold exactly; `tiers = [R]`
+/// degenerates to the flat left-assoc fold. `parallelism` only sets the
+/// row-strip worker count inside each fold ([`reduce_shards_in_place`])
+/// and never changes bits.
+pub fn reduce_shards_tree(
+    accs: Vec<RoundAccum>,
+    tiers: &[usize],
+    parallelism: usize,
+    spares: &mut Vec<RoundAccum>,
+) -> Result<RoundAccum> {
+    if tiers.iter().any(|&n| n == 0) {
+        bail!("tier fan-outs must be nonzero, got {tiers:?}");
+    }
+    let want: usize = tiers.iter().product::<usize>().max(1);
+    if accs.len() != want {
+        bail!("tier layout {tiers:?} needs {want} shards, got {}", accs.len());
+    }
+    if tiers.len() <= 1 {
+        let mut shards = accs;
+        reduce_shards_in_place(&mut shards, parallelism)?;
+        let merged = shards.swap_remove(0);
+        spares.extend(shards);
+        return Ok(merged);
+    }
+    let n1 = tiers[0];
+    // Group r collects flat shards j ≡ r (mod n1); pushing in ascending
+    // j order makes each group's sub-index j / n1 ascend too.
+    let mut groups: Vec<Vec<RoundAccum>> = (0..n1).map(|_| Vec::new()).collect();
+    for (j, a) in accs.into_iter().enumerate() {
+        groups[j % n1].push(a);
+    }
+    let mut heads = Vec::with_capacity(n1);
+    for g in groups {
+        heads.push(reduce_shards_tree(g, &tiers[1..], parallelism, spares)?);
+    }
+    reduce_shards_in_place(&mut heads, parallelism)?;
+    let merged = heads.swap_remove(0);
+    spares.extend(heads);
+    Ok(merged)
+}
+
 /// Split `dst` into `strip_len`-cell strips (the last may be short) and
 /// fold each exactly once, distributing strips round-robin over up to
 /// `threads` scoped workers. Which worker runs a strip is the *only*
@@ -415,7 +476,7 @@ fn parallel_strips(
 }
 
 /// Knobs for [`RoundPipeline`].
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct PipelineOptions {
     /// Worker threads for the row-strip shard reduction at round finish
     /// (0 = all available cores). Any value produces bitwise-identical
@@ -433,6 +494,16 @@ pub struct PipelineOptions {
     /// reproduce the tree's merged bits exactly. Capped at the slot
     /// count, not at [`MAX_SHARDS`].
     pub shard_override: usize,
+    /// Per-tier relay fan-outs for the tree-shaped reduction
+    /// ([`reduce_shards_tree`]): empty = flat left-assoc reduce.
+    /// A flat server or the in-process engine sets this to the tree's
+    /// fan-outs (root first, e.g. `[2, 2]` for a depth-3 tree of two
+    /// relays with two relay children each) to reproduce a nested
+    /// tree's merged bits exactly. Non-empty tiers *pin* the shard
+    /// layout to `Π tiers` shards — `shard_override` must be 0 or agree
+    /// with the product, and rounds with fewer slots than leaves are
+    /// rejected (a capped layout would break the tree shape).
+    pub reduce_tiers: Vec<usize>,
 }
 
 /// The one round-aggregation pipeline, shared by the in-process engine
@@ -482,7 +553,24 @@ impl RoundPipeline {
         if weights.is_empty() {
             bail!("a round needs at least one participant slot");
         }
-        let shards = if self.opts.shard_override > 0 {
+        let shards = if !self.opts.reduce_tiers.is_empty() {
+            let tiers = &self.opts.reduce_tiers;
+            if tiers.iter().any(|&n| n == 0) {
+                bail!("tier fan-outs must be nonzero, got {tiers:?}");
+            }
+            let leaves: usize = tiers.iter().product();
+            if self.opts.shard_override != 0 && self.opts.shard_override != leaves {
+                let o = self.opts.shard_override;
+                bail!("shard_override {o} disagrees with tier layout {tiers:?} ({leaves} leaves)");
+            }
+            if weights.len() < leaves {
+                bail!(
+                    "round of {} slots cannot fill the {leaves}-leaf tier layout {tiers:?}",
+                    weights.len()
+                );
+            }
+            leaves
+        } else if self.opts.shard_override > 0 {
             self.opts.shard_override.min(weights.len())
         } else {
             shard_count(weights.len())
@@ -542,8 +630,20 @@ impl RoundPipeline {
                  ({parked} parked out of order)"
             );
         }
-        let mut shards = round.into_accums();
-        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
+        let shards = round.into_accums();
+        self.reduce_round(shards)
+    }
+
+    /// Reduce a round's shards into the merged sum, honoring
+    /// [`PipelineOptions::reduce_tiers`] (tree-shaped association) when
+    /// set, and park the drained tail shards in the pool.
+    fn reduce_round(&mut self, mut shards: Vec<RoundAccum>) -> Result<RoundAccum> {
+        let par = resolve_parallelism(self.opts.reduce_parallelism);
+        if !self.opts.reduce_tiers.is_empty() {
+            let tiers = self.opts.reduce_tiers.clone();
+            return reduce_shards_tree(shards, &tiers, par, &mut self.pool);
+        }
+        reduce_shards_in_place(&mut shards, par)?;
         let merged = shards.swap_remove(0);
         self.pool.extend(shards);
         Ok(merged)
@@ -614,10 +714,8 @@ impl RoundPipeline {
             return Err(e);
         }
         debug_assert_eq!(round.absorbed(), membership.arrived());
-        let mut shards = round.into_accums();
-        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
-        let mut merged = shards.swap_remove(0);
-        self.pool.extend(shards);
+        let shards = round.into_accums();
+        let mut merged = self.reduce_round(shards)?;
         merged.scale(scale);
         Ok(merged)
     }
@@ -640,11 +738,8 @@ impl RoundPipeline {
             self.pool.extend(round.into_accums());
             return Ok(None);
         }
-        let mut shards = round.into_accums();
-        reduce_shards_in_place(&mut shards, resolve_parallelism(self.opts.reduce_parallelism))?;
-        let merged = shards.swap_remove(0);
-        self.pool.extend(shards);
-        Ok(Some(merged))
+        let shards = round.into_accums();
+        self.reduce_round(shards).map(Some)
     }
 
     /// Abandon a round, returning every shard accumulator to the pool —
@@ -1634,6 +1729,7 @@ mod tests {
         let mut pl = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: 1,
             shard_override: 1,
+            ..Default::default()
         });
         let lams: Vec<f32> = chain_slots.iter().map(|&s| weights[s]).collect();
         let r = pl.begin(spec, lams).unwrap();
@@ -1680,13 +1776,17 @@ mod tests {
                 .collect();
             let frames: Vec<Vec<u8>> =
                 uploads.iter().map(|u| encode_upload(u, &F32LE)).collect();
-            let opts = PipelineOptions { reduce_parallelism: 1, shard_override: nrelays };
+            let opts = PipelineOptions {
+                reduce_parallelism: 1,
+                shard_override: nrelays,
+                ..Default::default()
+            };
             for dropped in [vec![], vec![4usize]] {
                 let arrived: Vec<usize> =
                     (0..slots).filter(|s| !dropped.contains(s)).collect();
                 let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
                 // Flat reference over the same fixed layout.
-                let mut flat = RoundPipeline::new(opts);
+                let mut flat = RoundPipeline::new(opts.clone());
                 let r = flat.begin(&spec, weights.clone()).unwrap();
                 let mut m = RoundMembership::new(slots, policy.clone()).unwrap();
                 for &slot in &arrived {
@@ -1703,7 +1803,7 @@ mod tests {
                 };
                 // Tree: one merged frame per chain, absorbed at weight
                 // 1.0 into the same layout.
-                let mut root = RoundPipeline::new(opts);
+                let mut root = RoundPipeline::new(opts.clone());
                 let r = root.begin(&spec, weights.clone()).unwrap();
                 for chain in 0..nrelays {
                     let chain_slots: Vec<usize> =
@@ -1743,11 +1843,77 @@ mod tests {
     }
 
     #[test]
+    fn tiered_reduce_rebuilds_the_tree_association() {
+        // f32 addition is not associative; pick magnitudes where the
+        // flat fold ((s0+s1)+s2)+s3 and the tree fold (s0+s2)+(s1+s3)
+        // provably differ, then check reduce_shards_tree reproduces the
+        // tree association exactly (and that the flat fold does not).
+        let spec = UploadSpec::Dense { dim: 2 };
+        let vals = [1.0e8f32, 1.0, -1.0e8, 1.0];
+        let make = |v: f32| {
+            let mut a = RoundAccum::new(&spec).unwrap();
+            a.absorb(ClientUpload::Dense(vec![v; 2]), 1.0).unwrap();
+            a
+        };
+        let accs: Vec<RoundAccum> = vals.iter().map(|&v| make(v)).collect();
+        let mut spares = Vec::new();
+        let merged = reduce_shards_tree(accs, &[2, 2], 1, &mut spares).unwrap();
+        let tree = ((vals[0] + vals[2]) + (vals[1] + vals[3])) as f32;
+        let flat = (((vals[0] + vals[1]) + vals[2]) + vals[3]) as f32;
+        assert_eq!(merged.as_dense().unwrap()[0].to_bits(), tree.to_bits());
+        assert_ne!(tree.to_bits(), flat.to_bits(), "magnitudes failed to expose reassociation");
+        assert_eq!(spares.len(), 3, "every drained shard returns for reuse");
+        assert_eq!(merged.absorbed, 4);
+        // A single tier is the flat fold verbatim.
+        let accs: Vec<RoundAccum> = vals.iter().map(|&v| make(v)).collect();
+        let merged = reduce_shards_tree(accs, &[4], 1, &mut spares).unwrap();
+        assert_eq!(merged.as_dense().unwrap()[0].to_bits(), flat.to_bits());
+        // Layout violations are loud.
+        let accs: Vec<RoundAccum> = vals.iter().map(|&v| make(v)).collect();
+        assert!(reduce_shards_tree(accs, &[3, 2], 1, &mut spares).is_err());
+        let accs: Vec<RoundAccum> = vals.iter().map(|&v| make(v)).collect();
+        assert!(reduce_shards_tree(accs, &[2, 0], 1, &mut spares).is_err());
+    }
+
+    #[test]
+    fn tier_layouts_pin_the_pipeline_shape() {
+        let spec = UploadSpec::Dense { dim: 4 };
+        let frame = |v: f32| crate::wire::encode_dense_frame(&vec![v; 4], &F32LE);
+        let tiered = PipelineOptions {
+            reduce_parallelism: 1,
+            shard_override: 0,
+            reduce_tiers: vec![2, 2],
+        };
+        // Fewer slots than leaves cannot fill the layout.
+        let mut pl = RoundPipeline::new(tiered.clone());
+        assert!(pl.begin(&spec, vec![1.0; 3]).is_err());
+        // shard_override must agree with the tier product.
+        let mut pl = RoundPipeline::new(PipelineOptions {
+            shard_override: 3,
+            ..tiered.clone()
+        });
+        assert!(pl.begin(&spec, vec![1.0; 8]).is_err());
+        // The tiered pipeline merges per-slot uploads with the tree
+        // association: slot → shard is slot % 4, groups are shards
+        // {0,2} and {1,3}.
+        let vals = [1.0e8f32, 1.0, -1.0e8, 1.0];
+        let mut pl = RoundPipeline::new(tiered);
+        let r = pl.begin(&spec, vec![1.0; 4]).unwrap();
+        for (slot, &v) in vals.iter().enumerate() {
+            r.offer_frame_bytes(slot, &frame(v)).unwrap();
+        }
+        let merged = pl.finish(r).unwrap();
+        let tree = (vals[0] + vals[2]) + (vals[1] + vals[3]);
+        assert_eq!(merged.as_dense().unwrap()[0].to_bits(), tree.to_bits());
+    }
+
+    #[test]
     fn offer_chain_frame_validates_and_releases_on_failure() {
         let spec = UploadSpec::Dense { dim: 8 };
         let dense_frame =
             |v: f32| crate::wire::encode_dense_frame(&vec![v; 8], &F32LE);
-        let opts = PipelineOptions { reduce_parallelism: 1, shard_override: 2 };
+        let opts =
+            PipelineOptions { reduce_parallelism: 1, shard_override: 2, ..Default::default() };
         let mut pl = RoundPipeline::new(opts);
         let r = pl.begin(&spec, vec![1.0; 6]).unwrap();
         // Chain / slot-list structural violations.
@@ -1815,6 +1981,7 @@ mod tests {
         let mut pl = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: 1,
             shard_override: 1,
+            ..Default::default()
         });
         // Zero-participant subtree: nothing arrived → Ok(None), shard
         // returns to the pool.

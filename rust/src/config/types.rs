@@ -55,6 +55,23 @@ fn parse_wire(v: &str) -> Option<String> {
     }
 }
 
+/// Parse the `shard_tiers` knob: `"off"`/`""`/`"none"` = flat reduce,
+/// otherwise `x`-separated per-tier relay fan-outs, root first (e.g.
+/// `"2x2"` = a depth-3 tree of 2 relays with 2 relay children each).
+/// Every fan-out must be a positive integer.
+fn parse_tiers(v: &str) -> Result<Vec<usize>> {
+    match v {
+        "" | "off" | "none" => Ok(Vec::new()),
+        s => s
+            .split('x')
+            .map(|t| match t.trim().parse::<usize>() {
+                Ok(n) if n > 0 => Ok(n),
+                _ => bail!("shard_tiers must be x-separated positive fan-outs, got '{s}'"),
+            })
+            .collect(),
+    }
+}
+
 /// Validate a JSON `round_deadline_ms` before the float→integer cast:
 /// a negative or non-finite value would silently saturate to 0
 /// (wait-forever) instead of erroring like the same value does on the
@@ -172,6 +189,14 @@ pub struct TrainConfig {
     /// matching the shard layout makes the two topologies fold in the
     /// same order.
     pub shards: usize,
+    /// Per-tier relay fan-outs (root first) for the tree-shaped shard
+    /// reduction, empty (the default) = flat left-assoc reduce. A flat
+    /// server or in-process run that wants to reproduce a *nested*
+    /// relay tree's bits sets this to the tree's fan-outs (e.g.
+    /// `shard_tiers=2x2` for a depth-3 tree of 2 relays with 2 relay
+    /// children each); a single tier is equivalent to `shards=R`. See
+    /// `compression::aggregate::reduce_shards_tree`.
+    pub shard_tiers: Vec<usize>,
     /// Serve mode: number of downstream *relays* this server aggregates
     /// over instead of direct workers. 0 (the default) = flat serving.
     /// When set, the server expects `relay-hello` handshakes, assigns
@@ -226,6 +251,7 @@ impl TrainConfig {
             round_deadline_ms: 0,
             max_slot_retries: 0,
             shards: 0,
+            shard_tiers: Vec::new(),
             relay_children: 0,
             relay_listen: None,
             reconnect_attempts: 0,
@@ -294,6 +320,7 @@ impl TrainConfig {
             round_deadline_ms: deadline_ms_from_json(v.opt_f64("round_deadline_ms", 0.0))?,
             max_slot_retries: v.opt_usize("max_slot_retries", 0),
             shards: v.opt_usize("shards", 0),
+            shard_tiers: parse_tiers(v.opt_str("shard_tiers", "off"))?,
             relay_children: v.opt_usize("relay_children", 0),
             relay_listen: parse_wire(v.opt_str("relay_listen", "off")),
             reconnect_attempts: v.opt_usize("reconnect_attempts", 0),
@@ -365,6 +392,7 @@ impl TrainConfig {
                 "round_deadline_ms" => self.round_deadline_ms = val.parse()?,
                 "max_slot_retries" => self.max_slot_retries = val.parse()?,
                 "shards" => self.shards = val.parse()?,
+                "shard_tiers" => self.shard_tiers = parse_tiers(val)?,
                 "relay_children" => self.relay_children = val.parse()?,
                 "relay_listen" => self.relay_listen = parse_wire(val),
                 "reconnect_attempts" => self.reconnect_attempts = val.parse()?,
@@ -573,16 +601,25 @@ mod tests {
         assert_eq!(cfg.reconnect_backoff_ms, 50);
         cfg.apply_overrides(&["relay_listen=off".into()]).unwrap();
         assert_eq!(cfg.relay_listen, None);
+        // Tier layouts: x-separated fan-outs, root first.
+        assert!(cfg.shard_tiers.is_empty(), "flat reduce by default");
+        cfg.apply_overrides(&["shard_tiers=2x2".into()]).unwrap();
+        assert_eq!(cfg.shard_tiers, vec![2, 2]);
+        cfg.apply_overrides(&["shard_tiers=off".into()]).unwrap();
+        assert!(cfg.shard_tiers.is_empty());
+        assert!(cfg.apply_overrides(&["shard_tiers=2x0".into()]).is_err());
+        assert!(cfg.apply_overrides(&["shard_tiers=two".into()]).is_err());
         // JSON path accepts the same keys.
         let json = CFG.replace(
             "\"eval_every\": 10",
             "\"eval_every\": 10, \"shards\": 2, \"relay_children\": 4, \
              \"relay_listen\": \"tcp:127.0.0.1:9001\", \"reconnect_attempts\": 3, \
-             \"reconnect_backoff_ms\": 100",
+             \"reconnect_backoff_ms\": 100, \"shard_tiers\": \"3x2\"",
         );
         let v = parse(&json).unwrap();
         let cfg = TrainConfig::from_json(&v).unwrap();
         assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.shard_tiers, vec![3, 2]);
         assert_eq!(cfg.relay_children, 4);
         assert_eq!(cfg.relay_listen.as_deref(), Some("tcp:127.0.0.1:9001"));
         assert_eq!(cfg.reconnect_attempts, 3);

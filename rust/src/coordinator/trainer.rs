@@ -145,6 +145,7 @@ impl Trainer {
         let pipeline = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: reduce,
             shard_override: cfg.shards,
+            reduce_tiers: cfg.shard_tiers.clone(),
         });
         Ok(Trainer {
             cfg,

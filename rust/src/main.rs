@@ -47,14 +47,19 @@ USAGE:
             [--config CFG.json] [key=value ...]
             (reconnect knobs, join and relay alike:
              reconnect_attempts=N   re-dial a lost connection up to N
-                                    consecutive times; default 0
-             reconnect_backoff_ms=T first re-dial delay, doubling per
-                                    failure, capped at 10 s)
+                                    *consecutive* times; a completed
+                                    round resets the streak; default 0
+             reconnect_backoff_ms=T first re-dial delay; the n-th
+                                    consecutive failure waits T*2^(n-1)
+                                    ms, hard-capped at 10 s)
   fetchsgd relay --connect tcp:HOST:PORT|uds:/path.sock
             --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
             [--config CFG.json] [key=value ...]
-            (upstream server must run with relay_children=R; see also
-             shards=R to make a flat server bitwise-match the tree)
+            (upstream must run with relay_children=R; a relay with its
+             own relay_children=K serves K downstream relays instead of
+             workers, so trees nest to any depth; see shards=R, or
+             shard_tiers=RxKx... for a depth>2 tree, to make a flat
+             server bitwise-match the tree)
   fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>
             [--dataset cifar10|cifar100] [--scale smoke|small|full]
             [--which ABLATION] [--curves] [--seeds N]

@@ -1,12 +1,18 @@
 //! The relay tier: an aggregator that turns round servers into a tree.
 //!
 //! A relay sits between a [`RoundServer`](crate::transport::server::RoundServer)
-//! in relay mode (`relay_children > 0`) and a pool of ordinary workers.
-//! Upstream it looks like a single client speaking the v3 relay
-//! handshake (`relay-hello`); downstream it looks like a round server
-//! speaking the ordinary worker grammar — workers `join` a relay with
-//! the same binary and the same `fetchsgd join` command they would use
-//! against a flat server, and cannot tell the difference.
+//! in relay mode (`relay_children > 0`) and a downstream pool that is
+//! either ordinary workers (*leaf* mode, `relay_children == 0` here)
+//! or — since protocol v4 — its own relay peers (*interior* mode,
+//! `relay_children > 0` here), so depth-N trees compose from the same
+//! two shapes at every level. Upstream a relay always looks like a
+//! single client speaking the relay handshake (`relay-hello`);
+//! downstream a leaf relay speaks the ordinary worker grammar —
+//! workers `join` a relay with the same binary and the same `fetchsgd
+//! join` command they would use against a flat server, and cannot tell
+//! the difference — while an interior relay speaks the same
+//! `subtree-assign`/`subtree-upload` grammar its own upstream speaks
+//! to it.
 //!
 //! Per round, the flow is:
 //!
@@ -38,23 +44,36 @@
 //! flat server with `shards = R` would own — folds them in ascending
 //! order with the *global* λ shipped in the assignment, and the root
 //! absorbs each merged frame into its shard with weight 1 before the
-//! ordinary ordered shard reduce. Renormalization over the arrived
-//! subset happens once, at the root, so a partial round closed at
-//! quorum is also bitwise identical to the flat server ending with the
-//! same surviving membership set.
+//! ordinary ordered shard reduce. An interior relay applies the same
+//! rule one level down: its chain's local positions `{i : i mod K ==
+//! k}` go to child `k`, which works out to global slots `{s : s mod
+//! R·K == r + k·R}` — exactly the shards of a flat server whose
+//! reduce is reassociated with `shard_tiers = RxK` (see
+//! [`crate::compression::aggregate::reduce_shards_tree`]), so a
+//! depth-N tree is bitwise identical to a flat server (and the
+//! in-process engine) with the matching tier layout. Renormalization
+//! over the arrived subset happens once, at the root, so a partial
+//! round closed at quorum is also bitwise identical to the flat
+//! server ending with the same surviving membership set.
 //!
 //! # Fault containment
 //!
-//! A downstream fault is *contained to its subtree*: a worker that
+//! A downstream fault is *contained to its subtree*: a peer that
 //! sends garbage or disconnects mid-round costs only its own unserved
 //! slots (reported upstream as dropped, with the fault/disconnect/
 //! deadline distinction preserved), never the relay's other slots and
-//! never the sibling relays'. The relay runs no retry service of its
-//! own — retry budgets and quorum policy live at the root, which sees
-//! every slot's outcome in the roll-up. Upstream loss is survivable
-//! the same way a worker survives it: with a `reconnect_attempts`
-//! budget the relay re-dials under bounded exponential backoff,
-//! keeping its downstream pool connected across the blip.
+//! never the sibling relays'. A relay composes quorum policy rather
+//! than deciding it: under [`RelayOptions::quorum`] it closes its
+//! chain at its own round deadline (stragglers report as
+//! deadline-dropped) and reports a *partial* chain upstream, and an
+//! interior relay with a retry budget re-offers a dead child's whole
+//! sub-chain to a surviving child mid-round (the same re-assignment
+//! the root performs), accumulating the retry counts in the roll-up.
+//! Whether the round closes is still decided once, at the root, which
+//! sees every slot's outcome. Upstream loss is survivable the same
+//! way a worker survives it: with a `reconnect_attempts` budget the
+//! relay re-dials under bounded exponential backoff, keeping its
+//! downstream pool connected across the blip.
 
 use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
@@ -64,10 +83,11 @@ use std::os::unix::net::UnixListener;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::cohort::QuorumPolicy;
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::UploadSpec;
 use crate::metrics::{MetricsLogger, RoundRecord};
-use crate::transport::client::backoff_ms;
+use crate::transport::client::ReconnectSchedule;
 use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
 use crate::transport::proto::{
     Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
@@ -80,8 +100,25 @@ use crate::wire::{encode_dense_frame, encode_sketch_frame, F32LE};
 /// Relay knobs. Defaults suit a loopback deployment.
 pub struct RelayOptions {
     /// Downstream worker connections the relay waits for before
-    /// serving a non-empty chain.
+    /// serving a non-empty chain. Ignored in interior mode
+    /// (`relay_children > 0`).
     pub workers: usize,
+    /// Number of downstream *relay* peers this node aggregates over
+    /// instead of direct workers. 0 (the default) = leaf relay serving
+    /// workers. When set, the relay accepts `relay-hello` peers, hands
+    /// each one a sub-chain of its own chain (nested `subtree-assign`,
+    /// protocol v4), and its shard layout is pinned to the child count
+    /// so the nested fold reassociates to the flat fold (see module
+    /// docs).
+    pub relay_children: usize,
+    /// Relay-side round policy: `round_deadline` bounds the whole
+    /// subtree round (stragglers past it report upstream as
+    /// deadline-dropped — the partial-chain report), and
+    /// `max_slot_retries >= 1` lets an interior relay re-offer a dead
+    /// child's sub-chain to a surviving child mid-round. The quorum
+    /// fraction itself is *not* enforced here — a relay always reports
+    /// what it has; only the root decides whether the round closes.
+    pub quorum: QuorumPolicy,
     /// Read deadline while waiting for the upstream server (None =
     /// block; the root controls round pacing, so the default is
     /// patient — mirroring a joined worker).
@@ -109,6 +146,8 @@ impl Default for RelayOptions {
     fn default() -> Self {
         RelayOptions {
             workers: 1,
+            relay_children: 0,
+            quorum: QuorumPolicy::strict(),
             upstream_timeout: None,
             read_timeout: Duration::from_secs(30),
             accept_timeout: Duration::from_secs(30),
@@ -167,10 +206,12 @@ pub struct Relay {
     listener: ListenerKind,
     opts: RelayOptions,
     conns: Vec<Conn>,
-    /// Single-chain instance of the shared round-aggregation pipeline:
-    /// every local slot folds into one accumulator in ascending global
-    /// slot order, which is exactly this relay's shard chain of the
-    /// root's fold.
+    /// The shared round-aggregation pipeline. Leaf mode: a single
+    /// chain — every local slot folds into one accumulator in
+    /// ascending global slot order, which is exactly this relay's
+    /// shard chain of the root's fold. Interior mode: one shard per
+    /// relay child, each absorbing that child's merged frame, reduced
+    /// left-associated in child order.
     pipeline: RoundPipeline,
     logger: MetricsLogger,
     pending: Option<PendingRecord>,
@@ -183,7 +224,7 @@ impl Relay {
     /// Bind the downstream listener (TCP port 0 = ephemeral; a stale
     /// UDS socket file is removed first).
     pub fn bind(listen: &Endpoint, opts: RelayOptions) -> Result<Relay> {
-        if opts.workers == 0 {
+        if opts.workers == 0 && opts.relay_children == 0 {
             bail!("RelayOptions.workers must be >= 1");
         }
         let listener = match listen {
@@ -205,9 +246,14 @@ impl Relay {
                 ListenerKind::Unix(l)
             }
         };
+        // Leaf mode: every local slot folds into one chain. Interior
+        // mode: one shard chain per relay child, exactly like the
+        // relay-mode root — shard k folds child k's merged frame.
+        let shard_override = if opts.relay_children > 0 { opts.relay_children } else { 1 };
         let pipeline = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: 1,
-            shard_override: 1,
+            shard_override,
+            reduce_tiers: Vec::new(),
         });
         let logger = MetricsLogger::new(opts.log_path.as_deref())?;
         Ok(Relay {
@@ -250,27 +296,27 @@ impl Relay {
     /// The downstream pool persists across upstream re-dials — workers
     /// never notice an upstream blip between rounds.
     pub fn run(&mut self, upstream: &Endpoint) -> Result<RelaySummary> {
-        let mut attempt = 0usize;
+        let mut sched =
+            ReconnectSchedule::new(self.opts.reconnect_backoff_ms, self.opts.reconnect_attempts);
         loop {
             let rounds_before = self.sum.rounds;
             match self.serve_upstream(upstream) {
                 Ok(()) => return Ok(self.sum.clone()),
                 Err(e) => {
                     if self.sum.rounds > rounds_before {
-                        attempt = 0;
+                        sched.progress();
                     }
-                    if attempt >= self.opts.reconnect_attempts {
+                    let Some(wait) = sched.next_delay() else {
                         return Err(e);
-                    }
-                    attempt += 1;
+                    };
                     self.sum.reconnects += 1;
-                    let wait = backoff_ms(self.opts.reconnect_backoff_ms, attempt);
                     eprintln!(
-                        "[relay] upstream lost ({e:#}); reconnecting in {wait} ms \
-                         (attempt {attempt}/{})",
-                        self.opts.reconnect_attempts
+                        "[relay] upstream lost ({e:#}); reconnecting in {} ms (attempt {}/{})",
+                        wait.as_millis(),
+                        sched.attempt(),
+                        sched.budget()
                     );
-                    std::thread::sleep(Duration::from_millis(wait));
+                    std::thread::sleep(wait);
                 }
             }
         }
@@ -378,7 +424,23 @@ impl Relay {
                 .encode());
         }
         self.ensure_workers()?;
+        if self.opts.relay_children > 0 {
+            return self.run_subtree_relay(
+                round,
+                round_seed,
+                lr,
+                codec_id,
+                spec,
+                entries,
+                weights_frame,
+                bytes_marker,
+            );
+        }
         let nconns = self.conns.len();
+        // The relay-side round deadline: the whole subtree round must
+        // fit inside it, so each read below is bounded by whichever of
+        // the per-read timeout and the remaining deadline is tighter.
+        let deadline = self.opts.quorum.round_deadline().map(|d| Instant::now() + d);
         for conn in &self.conns {
             let t = self.opts.read_timeout;
             let _ = conn.set_timeouts(Some(t), Some(t));
@@ -437,6 +499,7 @@ impl Relay {
         }
         let absorber = &inflight;
         let max_msg = self.opts.max_msg;
+        let read_timeout = self.opts.read_timeout;
         let reads: Vec<DownRead> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(nconns);
             for (i, conn) in self.conns.iter_mut().enumerate() {
@@ -453,6 +516,18 @@ impl Relay {
                         return r;
                     }
                     for &(gslot, local, _client) in assigned {
+                        if let Some(dl) = deadline {
+                            let rem = dl.saturating_duration_since(Instant::now());
+                            if rem.is_zero() {
+                                // Straggler past the relay's round
+                                // deadline: close the chain partial,
+                                // report the tail deadline-dropped.
+                                r.timed_out = true;
+                                return r;
+                            }
+                            let t = read_timeout.min(rem);
+                            let _ = conn.set_timeouts(Some(t), Some(t));
+                        }
                         let bytes = match read_msg(conn, max_msg) {
                             Ok((bytes, n)) => {
                                 r.bytes_in += n;
@@ -468,7 +543,8 @@ impl Relay {
                                                 | std::io::ErrorKind::TimedOut
                                         )
                                     })
-                                    .unwrap_or(false);
+                                    .unwrap_or(false)
+                                    || deadline.is_some_and(|dl| Instant::now() >= dl);
                                 return r;
                             }
                         };
@@ -601,6 +677,314 @@ impl Relay {
         Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
     }
 
+    /// One *interior* subtree round (`relay_children > 0`): partition
+    /// the chain over relay children with nested `SubtreeAssign`s,
+    /// absorb one merged frame per child into the matching shard, fold
+    /// the shards, and roll the children's slot reports up verbatim
+    /// (retry counts accumulate; outcome codes pass through).
+    ///
+    /// Child `k` owns the chain's local positions `{i : i mod K == k}`
+    /// in ascending order — the same modulo rule the root applies to
+    /// global slots — and the pipeline is pinned to one shard per
+    /// child, so `offer_chain_frame(k, ...)` lands each merged frame
+    /// on exactly the shard that would have folded those positions.
+    ///
+    /// Faults mirror the root's relay round: a dead child's sub-chain
+    /// is re-offered whole to the lowest-index surviving child when
+    /// the retry budget allows (charging one retry per slot), and
+    /// drops with the fault/disconnect/deadline distinction otherwise.
+    #[allow(clippy::too_many_arguments)]
+    fn run_subtree_relay(
+        &mut self,
+        round: u64,
+        round_seed: u64,
+        lr: f32,
+        codec_id: u8,
+        spec: &UploadSpec,
+        entries: &[(u32, u32, f32)],
+        weights_frame: &[u8],
+        bytes_marker: u64,
+    ) -> Result<Vec<u8>> {
+        let m = entries.len();
+        let nconns = self.conns.len();
+        let deadline = self.opts.quorum.round_deadline().map(|d| Instant::now() + d);
+        let read_timeout = self.opts.read_timeout;
+        let max_msg = self.opts.max_msg;
+        for conn in &self.conns {
+            let t = read_timeout;
+            let _ = conn.set_timeouts(Some(t), Some(t));
+        }
+
+        // Sub-chains: child k owns local positions {i : i % nchains ==
+        // k}, ascending, paired with their global (slot, client, λ)
+        // entries. With fewer positions than children the tail gets
+        // empty sub-chains (and still must answer) — same convention
+        // as the root, and consistent with `shard_of` because i < m
+        // implies i % m == i.
+        let nchains = nconns.min(m);
+        let mut chains: Vec<Vec<(usize, (u32, u32, f32))>> = vec![Vec::new(); nconns];
+        for (local, &e) in entries.iter().enumerate() {
+            chains[local % nchains].push((local, e));
+        }
+
+        // Local λs order the in-shard fold; child frames themselves
+        // absorb at weight 1 (they already carry the global λs applied
+        // one level down).
+        let lambdas: Vec<f32> = entries.iter().map(|e| e.2).collect();
+        let inflight = self.pipeline.begin(spec, lambdas)?;
+
+        let mut alive = vec![true; nconns];
+        for (k, conn) in self.conns.iter_mut().enumerate() {
+            let head = Msg::SubtreeAssign {
+                round,
+                round_seed,
+                lr,
+                codec_id,
+                spec: spec.clone(),
+                entries: chains[k].iter().map(|&(_, e)| e).collect(),
+                weights_frame: Vec::new(),
+            }
+            .encode();
+            match write_msg_parts(conn, &head, weights_frame) {
+                Ok(n) => self.sum.downstream_bytes += n,
+                Err(_) => alive[k] = false,
+            }
+        }
+
+        // One reader per child: a single subtree-upload each, bounded
+        // by the tighter of the per-read timeout and the relay's round
+        // deadline. Frames absorb on the sweep below, in child order.
+        struct ChildRead {
+            upload: Option<(u64, Vec<SlotReport>, Vec<u8>)>,
+            bytes_in: u64,
+            fault: bool,
+            deadline_hit: bool,
+        }
+        let reads: Vec<ChildRead> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .conns
+                .iter_mut()
+                .enumerate()
+                .map(|(k, conn)| {
+                    let live = alive[k];
+                    scope.spawn(move || {
+                        let mut out = ChildRead {
+                            upload: None,
+                            bytes_in: 0,
+                            fault: false,
+                            deadline_hit: false,
+                        };
+                        if !live {
+                            return out;
+                        }
+                        if let Some(dl) = deadline {
+                            let rem = dl.saturating_duration_since(Instant::now());
+                            if rem.is_zero() {
+                                out.deadline_hit = true;
+                                return out;
+                            }
+                            let t = read_timeout.min(rem);
+                            let _ = conn.set_timeouts(Some(t), Some(t));
+                        }
+                        match read_msg(conn, max_msg) {
+                            Ok((bytes, n)) => {
+                                out.bytes_in = n;
+                                match Msg::decode(bytes) {
+                                    Ok(Msg::SubtreeUpload { round, reports, frame }) => {
+                                        out.upload = Some((round, reports, frame));
+                                    }
+                                    Ok(_) | Err(_) => out.fault = true,
+                                }
+                            }
+                            Err(_) => {
+                                out.deadline_hit =
+                                    deadline.is_some_and(|dl| Instant::now() >= dl);
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("child relay reader panicked")).collect()
+        });
+
+        // Sweep in child order; failures collect for the re-offer pass.
+        let mut outcomes = vec![OUTCOME_DROPPED_DISCONNECTED; m];
+        let mut retries = vec![0u32; m];
+        let mut losses = vec![0.0f32; m];
+        let mut dead = vec![false; nconns];
+        let mut failed: Vec<(usize, u8)> = Vec::new();
+        for (k, cr) in reads.into_iter().enumerate() {
+            self.sum.downstream_bytes += cr.bytes_in;
+            let failure = match cr.upload {
+                Some((up_round, reports, frame)) => {
+                    match absorb_child_chain(
+                        &inflight, k, &chains[k], up_round, round, &reports, &frame,
+                    ) {
+                        Ok(()) => {
+                            for (rep, &(local, _)) in reports.iter().zip(&chains[k]) {
+                                outcomes[local] = rep.outcome;
+                                retries[local] += rep.retries as u32;
+                                losses[local] = rep.loss;
+                            }
+                            None
+                        }
+                        Err(_) => Some(OUTCOME_DROPPED_FAULTED),
+                    }
+                }
+                None => Some(if cr.fault {
+                    OUTCOME_DROPPED_FAULTED
+                } else if cr.deadline_hit {
+                    OUTCOME_DROPPED_DEADLINE
+                } else {
+                    OUTCOME_DROPPED_DISCONNECTED
+                }),
+            };
+            if let Some(reason) = failure {
+                dead[k] = true;
+                failed.push((k, reason));
+            }
+        }
+
+        // Mid-round sub-chain re-assignment, one level down from the
+        // root's: a dead child's chain is untouched (absorption is
+        // all-or-nothing), so under a retry budget it is re-offered
+        // whole to the lowest-index surviving child. An unrescued
+        // chain drops with the original fault's reason.
+        for (k, reason) in failed {
+            let assigned = &chains[k];
+            let mut rescued = false;
+            if !assigned.is_empty()
+                && self.opts.quorum.max_slot_retries() >= 1
+                && !deadline.is_some_and(|dl| Instant::now() >= dl)
+            {
+                if let Some(s) = (0..nconns).find(|&i| !dead[i]) {
+                    let res = (|| -> Result<(Vec<SlotReport>, u64)> {
+                        let conn = &mut self.conns[s];
+                        if let Some(dl) = deadline {
+                            let rem = dl.saturating_duration_since(Instant::now());
+                            let t = read_timeout.min(rem);
+                            let _ = conn.set_timeouts(Some(t), Some(t));
+                        }
+                        let head = Msg::SubtreeAssign {
+                            round,
+                            round_seed,
+                            lr,
+                            codec_id,
+                            spec: spec.clone(),
+                            entries: assigned.iter().map(|&(_, e)| e).collect(),
+                            weights_frame: Vec::new(),
+                        }
+                        .encode();
+                        let mut bytes = write_msg_parts(conn, &head, weights_frame)?;
+                        let (msg, n) = read_msg(conn, max_msg)?;
+                        bytes += n;
+                        let (up_round, reports, frame) = match Msg::decode(msg)? {
+                            Msg::SubtreeUpload { round, reports, frame } => {
+                                (round, reports, frame)
+                            }
+                            other => {
+                                bail!("expected a subtree upload, got {}", other.kind_name())
+                            }
+                        };
+                        absorb_child_chain(
+                            &inflight, k, assigned, up_round, round, &reports, &frame,
+                        )?;
+                        Ok((reports, bytes))
+                    })();
+                    match res {
+                        Ok((reports, bytes)) => {
+                            self.sum.downstream_bytes += bytes;
+                            for (rep, &(local, _)) in reports.iter().zip(assigned) {
+                                outcomes[local] = rep.outcome;
+                                // +1: the re-offer itself was a retry.
+                                retries[local] += rep.retries as u32 + 1;
+                                losses[local] = rep.loss;
+                            }
+                            rescued = true;
+                        }
+                        Err(_) => dead[s] = true,
+                    }
+                }
+            }
+            if !rescued {
+                for &(local, _) in assigned {
+                    outcomes[local] = reason;
+                }
+            }
+        }
+
+        // Prune failed children (best-effort abort, like the root).
+        let mut idx = 0;
+        self.conns.retain_mut(|conn| {
+            let keep = !dead[idx];
+            idx += 1;
+            if !keep {
+                let abort =
+                    Msg::Abort { reason: "subtree chain faulted or straggled".into() }.encode();
+                let _ = write_msg(conn, &abort);
+                conn.shutdown();
+            }
+            keep
+        });
+
+        let stats = inflight.absorb_stats();
+        let participants = outcomes.iter().filter(|&&o| o == OUTCOME_ARRIVED).count();
+        let mean_loss = if participants > 0 {
+            outcomes
+                .iter()
+                .zip(&losses)
+                .filter(|(&o, _)| o == OUTCOME_ARRIVED)
+                .map(|(_, &l)| l as f64)
+                .sum::<f64>()
+                / participants as f64
+        } else {
+            0.0
+        };
+
+        // Fold the child shards into one merged frame: left-associated
+        // over children in index order, which is exactly the grouped
+        // reduce `reduce_shards_tree` replays on the flat side.
+        let frame = match self.pipeline.finalize_subtree(inflight)? {
+            Some(merged) => {
+                let bytes = match spec {
+                    UploadSpec::Sketch { .. } => {
+                        encode_sketch_frame(merged.as_sketch()?, &F32LE)
+                    }
+                    UploadSpec::Dense { .. } => encode_dense_frame(merged.as_dense()?, &F32LE),
+                };
+                self.pipeline.recycle(merged);
+                self.sum.merged_uploads += 1;
+                bytes
+            }
+            None => Vec::new(),
+        };
+
+        let reports: Vec<SlotReport> = entries
+            .iter()
+            .enumerate()
+            .map(|(local, &(gslot, _, _))| SlotReport {
+                slot: gslot,
+                outcome: outcomes[local],
+                retries: retries[local].min(u16::MAX as u32) as u16,
+                loss: losses[local],
+            })
+            .collect();
+
+        self.pending = Some(PendingRecord {
+            round,
+            mean_loss,
+            lr,
+            wire_upload: frame.len() as u64,
+            participants,
+            dropped_slots: m - participants,
+            absorb_stalls: stats.lock_stalls,
+            parked_bytes: stats.parked_bytes,
+            bytes_marker,
+        });
+        Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
+    }
+
     /// Forward one encoded message to every downstream worker, pruning
     /// connections whose write fails.
     fn broadcast_down(&mut self, bytes: &[u8]) {
@@ -642,11 +1026,23 @@ impl Relay {
         });
     }
 
-    /// Accept + handshake until the downstream pool is full. Same
-    /// contract as the server's: peers failing the hello handshake are
-    /// dropped and accepting continues until the deadline.
+    /// The number of downstream peers a subtree round needs: relay
+    /// children in interior mode, workers otherwise.
+    fn want_peers(&self) -> usize {
+        if self.opts.relay_children > 0 {
+            self.opts.relay_children
+        } else {
+            self.opts.workers
+        }
+    }
+
+    /// Accept + handshake until the downstream pool is full (workers
+    /// in leaf mode, relay peers in interior mode). Same contract as
+    /// the server's: peers failing the hello handshake are dropped and
+    /// accepting continues until the deadline.
     fn ensure_workers(&mut self) -> Result<()> {
-        let want = self.opts.workers;
+        let want = self.want_peers();
+        let relay = self.opts.relay_children > 0;
         let deadline = Instant::now() + self.opts.accept_timeout;
         while self.conns.len() < want {
             if Instant::now() >= deadline {
@@ -660,7 +1056,7 @@ impl Relay {
             let remaining = deadline.saturating_duration_since(Instant::now());
             let hs = self.opts.read_timeout.min(remaining).max(Duration::from_millis(10));
             let _ = conn.set_timeouts(Some(hs), Some(hs));
-            match handshake(&mut conn, self.opts.max_msg, false) {
+            match handshake(&mut conn, self.opts.max_msg, relay) {
                 Ok(()) => {
                     let t = self.opts.read_timeout;
                     conn.set_timeouts(Some(t), Some(t))?;
@@ -695,7 +1091,7 @@ impl Relay {
                         bail!(
                             "timed out waiting for downstream workers ({}/{} connected)",
                             self.conns.len(),
-                            self.opts.workers
+                            self.want_peers()
                         );
                     }
                     std::thread::sleep(Duration::from_millis(5));
@@ -704,6 +1100,55 @@ impl Relay {
             }
         }
     }
+}
+
+/// Validate one child relay's `SubtreeUpload` against its assigned
+/// sub-chain and absorb the merged frame at this relay's *local* slot
+/// positions — the nested analogue of the root's chain absorption.
+/// `assigned` pairs each local position with its global entry; the
+/// reports must cover the sub-chain's global slots exactly, in order,
+/// and the merged frame must be present iff at least one slot
+/// arrived. All-or-nothing: any violation leaves the shard untouched.
+fn absorb_child_chain(
+    absorber: &RoundInFlight,
+    chain: usize,
+    assigned: &[(usize, (u32, u32, f32))],
+    round: u64,
+    expect_round: u64,
+    reports: &[SlotReport],
+    frame: &[u8],
+) -> Result<()> {
+    if round != expect_round {
+        bail!("subtree upload for round {round}, expected round {expect_round}");
+    }
+    if reports.len() != assigned.len() {
+        bail!("{} slot report(s) for a {}-slot chain", reports.len(), assigned.len());
+    }
+    for (rep, &(_, (gslot, _, _))) in reports.iter().zip(assigned) {
+        if rep.slot != gslot {
+            bail!("report for slot {}, expected slot {gslot}", rep.slot);
+        }
+        if rep.outcome > OUTCOME_DROPPED_DEADLINE {
+            bail!("unknown slot outcome {} for slot {gslot}", rep.outcome);
+        }
+    }
+    let arrived: Vec<usize> = reports
+        .iter()
+        .zip(assigned)
+        .filter(|(rep, _)| rep.outcome == OUTCOME_ARRIVED)
+        .map(|(_, &(local, _))| local)
+        .collect();
+    if arrived.is_empty() != frame.is_empty() {
+        bail!(
+            "merged frame presence ({} bytes) disagrees with {} arrived report(s)",
+            frame.len(),
+            arrived.len()
+        );
+    }
+    if !arrived.is_empty() {
+        absorber.offer_chain_frame(chain, &arrived, frame)?;
+    }
+    Ok(())
 }
 
 impl Drop for Relay {
@@ -744,6 +1189,8 @@ pub fn relay_training(cfg: &crate::config::TrainConfig) -> Result<RelaySummary> 
     let dim = manifest.task(&cfg.task)?.dim;
     let opts = RelayOptions {
         workers: cfg.transport_workers,
+        relay_children: cfg.relay_children,
+        quorum: cfg.quorum_policy()?,
         read_timeout: duration_from_cfg_secs(cfg.serve_read_timeout_s, "serve_read_timeout_s")?,
         accept_timeout: duration_from_cfg_secs(
             cfg.serve_accept_timeout_s,
@@ -756,12 +1203,21 @@ pub fn relay_training(cfg: &crate::config::TrainConfig) -> Result<RelaySummary> 
         ..Default::default()
     };
     let mut node = Relay::bind(&listen, opts)?;
-    eprintln!(
-        "[relay] listening on {} for {} worker(s), upstream {}",
-        node.local_endpoint()?,
-        cfg.transport_workers,
-        upstream
-    );
+    if cfg.relay_children > 0 {
+        eprintln!(
+            "[relay] listening on {} for {} relay child(ren), upstream {}",
+            node.local_endpoint()?,
+            cfg.relay_children,
+            upstream
+        );
+    } else {
+        eprintln!(
+            "[relay] listening on {} for {} worker(s), upstream {}",
+            node.local_endpoint()?,
+            cfg.transport_workers,
+            upstream
+        );
+    }
     node.run(&upstream)
 }
 

@@ -15,6 +15,21 @@
 //! retry/reassignment of a slot whose original worker faulted — which
 //! is computed against the same round state and uploaded like any
 //! assigned slot.
+//!
+//! # Reconnect schedule
+//!
+//! A lost connection is re-dialed under [`ReconnectSchedule`], the
+//! bounded-exponential backoff shared with the relay tier's upstream
+//! loop ([`crate::relay`]). The schedule is pinned, not approximate:
+//! the n-th *consecutive* failure waits `reconnect_backoff_ms ·
+//! 2^(n-1)` milliseconds, capped at
+//! [`RECONNECT_BACKOFF_CAP_MS`] (10 s), and the budget
+//! (`reconnect_attempts`) bounds consecutive failures — a connection
+//! that sees any round through to its broadcast resets the streak, so
+//! a long-lived worker on a flaky link never slowly exhausts it.
+//! `reconnect_attempts = 0` keeps the fail-fast behavior tests rely
+//! on. Both knobs are settable from the CLI (`fetchsgd join
+//! reconnect_attempts=N reconnect_backoff_ms=T`).
 
 use anyhow::{bail, Context, Result};
 use std::time::Duration;
@@ -57,11 +72,61 @@ impl Default for JoinOptions {
     }
 }
 
+/// Hard ceiling on one reconnect delay: no consecutive-failure streak
+/// waits longer than this between re-dials, whatever the base.
+pub const RECONNECT_BACKOFF_CAP_MS: u64 = 10_000;
+
 /// Exponential reconnect backoff: `base · 2^(attempt-1)`, exponent
-/// capped so the shift cannot overflow, the result capped at 10 s.
-/// Shared with the relay tier's upstream reconnect loop.
+/// capped so the shift cannot overflow, the result capped at
+/// [`RECONNECT_BACKOFF_CAP_MS`].
 pub(crate) fn backoff_ms(base: u64, attempt: usize) -> u64 {
-    base.saturating_mul(1u64 << attempt.saturating_sub(1).min(6)).min(10_000)
+    base.saturating_mul(1u64 << attempt.saturating_sub(1).min(6)).min(RECONNECT_BACKOFF_CAP_MS)
+}
+
+/// The bounded-exponential reconnect schedule (see module docs) —
+/// one testable object shared by [`join`] and the relay tier's
+/// upstream loop, so the two reconnect paths cannot drift apart.
+#[derive(Clone, Debug)]
+pub struct ReconnectSchedule {
+    base_ms: u64,
+    budget: usize,
+    attempt: usize,
+}
+
+impl ReconnectSchedule {
+    /// `base_ms` seeds the first delay; `budget` bounds *consecutive*
+    /// failures (0 = fail on the first loss).
+    pub fn new(base_ms: u64, budget: usize) -> ReconnectSchedule {
+        ReconnectSchedule { base_ms, budget, attempt: 0 }
+    }
+
+    /// Record round progress: the connection that just failed saw at
+    /// least one round through, so the next failure starts a fresh
+    /// consecutive-failure streak.
+    pub fn progress(&mut self) {
+        self.attempt = 0;
+    }
+
+    /// Charge one connection failure. `Some(delay)` = sleep then
+    /// re-dial; `None` = the consecutive-failure budget is exhausted,
+    /// give up and surface the error.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempt >= self.budget {
+            return None;
+        }
+        self.attempt += 1;
+        Some(Duration::from_millis(backoff_ms(self.base_ms, self.attempt)))
+    }
+
+    /// Consecutive failures charged since the last reset.
+    pub fn attempt(&self) -> usize {
+        self.attempt
+    }
+
+    /// The configured consecutive-failure budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
 }
 
 /// What a worker did over its connection's lifetime.
@@ -129,28 +194,25 @@ pub fn join(
     opts: &JoinOptions,
 ) -> Result<JoinSummary> {
     let mut sum = JoinSummary::default();
-    let mut attempt = 0usize;
+    let mut sched = ReconnectSchedule::new(opts.reconnect_backoff_ms, opts.reconnect_attempts);
     loop {
         let rounds_before = sum.rounds;
         match join_once(ep, client, dataset, artifacts, opts, &mut sum) {
             Ok(()) => return Ok(sum),
             Err(e) => {
                 if sum.rounds > rounds_before {
-                    // This connection made progress; its failure starts
-                    // a fresh consecutive-failure streak.
-                    attempt = 0;
+                    sched.progress();
                 }
-                if attempt >= opts.reconnect_attempts {
+                let Some(wait) = sched.next_delay() else {
                     return Err(e);
-                }
-                attempt += 1;
-                let wait = backoff_ms(opts.reconnect_backoff_ms, attempt);
+                };
                 eprintln!(
-                    "[join] connection lost ({e:#}); reconnecting in {wait} ms \
-                     (attempt {attempt}/{})",
-                    opts.reconnect_attempts
+                    "[join] connection lost ({e:#}); reconnecting in {} ms (attempt {}/{})",
+                    wait.as_millis(),
+                    sched.attempt(),
+                    sched.budget()
                 );
-                std::thread::sleep(Duration::from_millis(wait));
+                std::thread::sleep(wait);
             }
         }
     }
@@ -240,7 +302,8 @@ pub fn join_training(cfg: &crate::config::TrainConfig) -> Result<JoinSummary> {
 
 #[cfg(test)]
 mod tests {
-    use super::backoff_ms;
+    use super::{backoff_ms, ReconnectSchedule, RECONNECT_BACKOFF_CAP_MS};
+    use std::time::Duration;
 
     #[test]
     fn reconnect_backoff_doubles_and_caps() {
@@ -249,10 +312,38 @@ mod tests {
         assert_eq!(backoff_ms(200, 3), 800);
         assert_eq!(backoff_ms(200, 6), 6_400);
         // 200 · 2⁶ = 12 800 → capped at 10 s.
-        assert_eq!(backoff_ms(200, 7), 10_000);
+        assert_eq!(backoff_ms(200, 7), RECONNECT_BACKOFF_CAP_MS);
         // Huge attempt counts neither overflow the shift nor the cap.
-        assert_eq!(backoff_ms(200, 1_000), 10_000);
-        assert_eq!(backoff_ms(u64::MAX, 7), 10_000);
+        assert_eq!(backoff_ms(200, 1_000), RECONNECT_BACKOFF_CAP_MS);
+        assert_eq!(backoff_ms(u64::MAX, 7), RECONNECT_BACKOFF_CAP_MS);
         assert_eq!(backoff_ms(0, 5), 0);
+    }
+
+    /// Pins the documented schedule end to end: bounded-exponential
+    /// delays, budget over *consecutive* failures only (round progress
+    /// resets the streak), exhaustion is sticky, 0 = fail fast.
+    #[test]
+    fn reconnect_schedule_resets_on_progress_and_exhausts() {
+        let mut s = ReconnectSchedule::new(200, 3);
+        assert_eq!(s.next_delay(), Some(Duration::from_millis(200)));
+        assert_eq!(s.next_delay(), Some(Duration::from_millis(400)));
+        assert_eq!(s.attempt(), 2);
+        // A round completed on the re-dialed connection: the streak
+        // restarts from the base delay with the full budget.
+        s.progress();
+        assert_eq!(s.attempt(), 0);
+        assert_eq!(s.next_delay(), Some(Duration::from_millis(200)));
+        assert_eq!(s.next_delay(), Some(Duration::from_millis(400)));
+        assert_eq!(s.next_delay(), Some(Duration::from_millis(800)));
+        assert_eq!(s.next_delay(), None);
+        assert_eq!(s.next_delay(), None);
+        // Zero budget = the old fail-fast default.
+        assert_eq!(ReconnectSchedule::new(200, 0).next_delay(), None);
+        // A huge base still respects the hard cap.
+        let mut big = ReconnectSchedule::new(u64::MAX, 1);
+        assert_eq!(
+            big.next_delay(),
+            Some(Duration::from_millis(RECONNECT_BACKOFF_CAP_MS))
+        );
     }
 }

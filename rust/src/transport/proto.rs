@@ -33,18 +33,43 @@
 //! frame (always lossless `f32le`) is present iff at least one slot
 //! arrived (`has_frame = 1`), and covers exactly the arrived slots.
 //!
+//! ## v4: recursive trees, partial chains, chain re-offers
+//!
+//! The relay messages *nest*: the downstream side of a relay may itself
+//! be a relay tier, so `RelayHello`/`SubtreeAssign`/`SubtreeUpload`
+//! flow on interior links exactly as on the root link, and depth-N
+//! trees compose from the same two shapes. Three semantic rules (no
+//! byte-layout change) distinguish v4 from v3:
+//!
+//! - **Partial chains.** A relay closes its chain at its own quorum
+//!   deadline and reports whatever arrived: `SubtreeUpload` is a
+//!   per-slot outcome table plus a merged frame over exactly the
+//!   arrived subset — never all-or-nothing. The `retries` field carries
+//!   the subtree's total re-offer count for the slot so membership
+//!   accounting composes across tiers.
+//! - **Chain re-offers.** An upstream peer may send *more than one*
+//!   `SubtreeAssign` for the same round on one connection — the
+//!   mid-round re-assignment of a dead sibling's chain. A relay answers
+//!   every `SubtreeAssign` with its own `SubtreeUpload`, in order.
+//! - **Roll-ups.** An interior relay folds its children's merged frames
+//!   (one accumulator shard per child) and concatenates their slot
+//!   reports; outcome codes pass through verbatim.
+//!
 //! Versioning: [`PROTO_VERSION`] is exchanged in `Hello`/`RelayHello`
 //! and bumped on any change to this table (v2 added `SlotAssign`, the
 //! mid-round retry/reassignment of a faulted worker's slot; v3 added
-//! the relay tier: `RelayHello`, `SubtreeAssign`, `SubtreeUpload`);
-//! servers drop peers speaking another version. The `FSGW` frame
-//! grammar versions independently (its own header byte).
+//! the relay tier: `RelayHello`, `SubtreeAssign`, `SubtreeUpload`; v4
+//! made the tier recursive and failure-tolerant as above — a v3 peer
+//! would treat a repeated `SubtreeAssign` as a protocol error, so the
+//! handshake keeps the tiers apart); servers drop peers speaking
+//! another version. The `FSGW` frame grammar versions independently
+//! (its own header byte).
 
 use crate::compression::UploadSpec;
 use anyhow::{bail, Context, Result};
 
 /// Transport protocol version (`Hello`/`RelayHello` handshake).
-pub const PROTO_VERSION: u8 = 3;
+pub const PROTO_VERSION: u8 = 4;
 
 const TAG_HELLO: u8 = 1;
 const TAG_ROUND_START: u8 = 2;
@@ -461,8 +486,8 @@ mod tests {
 
     #[test]
     fn all_messages_roundtrip() {
-        match roundtrip(Msg::Hello { version: 3 }) {
-            Msg::Hello { version: 3 } => {}
+        match roundtrip(Msg::Hello { version: PROTO_VERSION }) {
+            Msg::Hello { version } => assert_eq!(version, PROTO_VERSION),
             _ => panic!(),
         }
         let start = Msg::RoundStart {
@@ -504,8 +529,8 @@ mod tests {
             Msg::SlotAssign { slot, client } => assert_eq!((slot, client), (9, 1234)),
             _ => panic!(),
         }
-        match roundtrip(Msg::RelayHello { version: 3 }) {
-            Msg::RelayHello { version: 3 } => {}
+        match roundtrip(Msg::RelayHello { version: PROTO_VERSION }) {
+            Msg::RelayHello { version } => assert_eq!(version, PROTO_VERSION),
             _ => panic!(),
         }
     }

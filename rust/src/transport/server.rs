@@ -50,7 +50,7 @@ use std::time::{Duration, Instant};
 
 use crate::cohort::{DropReason, QuorumPolicy, RoundMembership, SlotOutcome};
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
-use crate::compression::ServerAggregator;
+use crate::compression::{ServerAggregator, UploadSpec};
 use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
 use crate::transport::proto::{
     Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
@@ -94,6 +94,16 @@ pub struct ServeOptions {
     /// bitwise comparable to a relay tree sets this to the tree's relay
     /// count, matching its fold order (see [`crate::relay`]).
     pub shards: usize,
+    /// Tiered shard-reduce layout for a flat server that must be
+    /// bitwise comparable to a *multi-level* relay tree: the fan-out at
+    /// each tier from the root down (e.g. `[2, 2]` for a depth-3 tree
+    /// of 2 relays x 2 children). Empty (the default) = ordinary flat
+    /// reduce. Pins the shard count to the product of the fan-outs and
+    /// reassociates the shard reduce to the tree's fold order (see
+    /// [`crate::compression::aggregate::reduce_shards_tree`]). Ignored
+    /// in relay mode — a relay-mode root always reduces one shard per
+    /// child, whatever hangs below them.
+    pub shard_tiers: Vec<usize>,
     /// Number of downstream *relays* this server aggregates over
     /// instead of direct workers. 0 (the default) = flat serving. When
     /// set, `workers` is ignored: the server accepts `relay-hello`
@@ -115,6 +125,7 @@ impl Default for ServeOptions {
             reduce_parallelism: 0,
             quorum: QuorumPolicy::strict(),
             shards: 0,
+            shard_tiers: Vec::new(),
             relay_children: 0,
         }
     }
@@ -228,9 +239,12 @@ impl RoundServer {
         // reassociates to exactly the flat fold over the same slots.
         let shard_override =
             if opts.relay_children > 0 { opts.relay_children } else { opts.shards };
+        let reduce_tiers =
+            if opts.relay_children > 0 { Vec::new() } else { opts.shard_tiers.clone() };
         let pipeline = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: opts.reduce_parallelism,
             shard_override,
+            reduce_tiers,
         });
         Ok(RoundServer {
             listener,
@@ -823,6 +837,10 @@ impl RoundServer {
     /// merged frame drops exactly that relay's slot chain (and its
     /// connection), never its siblings — the quorum policy decides
     /// whether the round still closes over the surviving chains.
+    /// Under a retry budget (`max_slot_retries >= 1`) a dead relay's
+    /// chain is first *re-offered* whole to the lowest-index surviving
+    /// relay (`SubtreeAssign` repeats mid-round, protocol v4); only a
+    /// chain that cannot be rescued drops.
     fn run_round_relay(
         &mut self,
         agg: &mut dyn ServerAggregator,
@@ -974,6 +992,7 @@ impl RoundServer {
         let mut transport_in = 0u64;
         let mut first_err: Option<anyhow::Error> = None;
         let mut dead = vec![false; nrelays];
+        let mut failed: Vec<(usize, DropReason)> = Vec::new();
         for (r, rr) in results.into_iter().enumerate() {
             let RelayRead { upload, bytes_in, fault, deadline_hit, err } = rr;
             transport_in += bytes_in;
@@ -983,39 +1002,7 @@ impl RoundServer {
                     {
                         Ok(()) => {
                             self.absorbed.fetch_max(absorber.absorbed(), Ordering::SeqCst);
-                            for rep in &reports {
-                                let slot = rep.slot as usize;
-                                match rep.outcome {
-                                    OUTCOME_ARRIVED => {
-                                        membership.record_report(
-                                            slot,
-                                            if rep.retries > 0 {
-                                                SlotOutcome::Retried(rep.retries as usize)
-                                            } else {
-                                                SlotOutcome::Arrived
-                                            },
-                                        );
-                                        losses[slot] = rep.loss;
-                                    }
-                                    outcome => {
-                                        // Downstream retries were real
-                                        // work even when the slot
-                                        // ultimately dropped.
-                                        for _ in 0..rep.retries {
-                                            membership.record_retry(slot);
-                                        }
-                                        let reason = match outcome {
-                                            OUTCOME_DROPPED_FAULTED => DropReason::Faulted,
-                                            OUTCOME_DROPPED_DISCONNECTED => {
-                                                DropReason::Disconnected
-                                            }
-                                            _ => DropReason::Deadline,
-                                        };
-                                        membership
-                                            .record_report(slot, SlotOutcome::Dropped(reason));
-                                    }
-                                }
-                            }
+                            roll_up(&mut membership, &mut losses, &reports, false);
                             if !frame.is_empty() && !have_sample {
                                 // The root link carries one merged frame
                                 // per chain regardless of downstream
@@ -1048,12 +1035,79 @@ impl RoundServer {
             };
             if let Some((e, reason)) = failure {
                 dead[r] = true;
-                // Fault containment: only this subtree's slots drop.
-                for &(slot, _, _) in &chains[r] {
-                    membership.record_drop(slot as usize, reason);
-                }
+                failed.push((r, reason));
                 if first_err.is_none() {
                     first_err = Some(e);
+                }
+            }
+        }
+
+        // Mid-round chain re-assignment: a dead relay's chain is
+        // untouched (`absorb_chain` is all-or-nothing), so under a
+        // retry budget the whole chain is re-offered to the first
+        // surviving relay with a fresh `SubtreeAssign` for the same
+        // round — the survivor serves it like any other assignment and
+        // answers a second `SubtreeUpload`. The survivor choice is
+        // deterministic (lowest live index), so a run that loses the
+        // same relay reproduces the same bits. A chain that cannot be
+        // rescued — no survivors, no retry budget, deadline expired,
+        // or the re-offer itself fails — drops with the original
+        // fault's reason (fault containment unchanged).
+        for (r, reason) in failed {
+            let assigned = &chains[r];
+            let mut rescued = false;
+            if !assigned.is_empty()
+                && policy.max_slot_retries() >= 1
+                && !deadline.is_some_and(|dl| Instant::now() >= dl)
+            {
+                if let Some(s) = (0..nrelays).find(|&i| !dead[i]) {
+                    match reoffer_chain(
+                        &mut self.conns[s],
+                        &absorber,
+                        r,
+                        assigned,
+                        p,
+                        &spec,
+                        self.opts.codec.id(),
+                        &w_frame,
+                        max_msg,
+                        read_timeout,
+                        deadline,
+                    ) {
+                        Ok((reports, frame, n)) => {
+                            transport_in += n;
+                            self.absorbed.fetch_max(absorber.absorbed(), Ordering::SeqCst);
+                            // The re-offer charges one retry on every
+                            // slot of the chain, on top of whatever the
+                            // replacement subtree reports.
+                            roll_up(&mut membership, &mut losses, &reports, true);
+                            if !frame.is_empty() && !have_sample {
+                                have_sample = true;
+                                wire_up0 = frame.len() as u64;
+                                if let Ok(f) = Frame::parse(&frame) {
+                                    ideal_up0 = idealized_payload(&f);
+                                }
+                            }
+                            rescued = true;
+                        }
+                        Err(e) => {
+                            // The survivor faulted mid-re-offer: its own
+                            // chain is already absorbed (those slots
+                            // stand), but the connection is desynced —
+                            // drop it with the rescue.
+                            dead[s] = true;
+                            if first_err.is_none() {
+                                first_err =
+                                    Some(e.context(format!("re-offering chain {r} to relay {s}")));
+                            }
+                        }
+                    }
+                }
+            }
+            if !rescued {
+                // Fault containment: only this subtree's slots drop.
+                for &(slot, _, _) in assigned {
+                    membership.record_drop(slot as usize, reason);
                 }
             }
         }
@@ -1282,6 +1336,100 @@ fn absorb_chain(
     Ok(())
 }
 
+/// Roll one chain's `SlotReport`s into the root membership ledger.
+/// `reoffered` charges one extra retry per slot first — the cost of a
+/// mid-round chain re-assignment, on top of whatever the subtree
+/// itself reports (downstream retries were real work even when a slot
+/// ultimately dropped).
+fn roll_up(
+    membership: &mut RoundMembership,
+    losses: &mut [f32],
+    reports: &[SlotReport],
+    reoffered: bool,
+) {
+    for rep in reports {
+        let slot = rep.slot as usize;
+        if reoffered {
+            membership.record_retry(slot);
+        }
+        match rep.outcome {
+            OUTCOME_ARRIVED => {
+                membership.record_report(
+                    slot,
+                    if rep.retries > 0 {
+                        SlotOutcome::Retried(rep.retries as usize)
+                    } else {
+                        SlotOutcome::Arrived
+                    },
+                );
+                losses[slot] = rep.loss;
+            }
+            outcome => {
+                for _ in 0..rep.retries {
+                    membership.record_retry(slot);
+                }
+                let reason = match outcome {
+                    OUTCOME_DROPPED_FAULTED => DropReason::Faulted,
+                    OUTCOME_DROPPED_DISCONNECTED => DropReason::Disconnected,
+                    _ => DropReason::Deadline,
+                };
+                membership.record_report(slot, SlotOutcome::Dropped(reason));
+            }
+        }
+    }
+}
+
+/// Re-offer a dead relay's whole slot chain to a surviving relay,
+/// mid-round: a fresh `SubtreeAssign` for the same round (protocol v4
+/// allows repeats), one `SubtreeUpload` back, validated and absorbed
+/// like the original would have been. Returns the replacement reports,
+/// the merged frame, and the bytes moved. Any failure leaves the chain
+/// untouched (`absorb_chain` is all-or-nothing) so the caller can
+/// still drop it cleanly.
+#[allow(clippy::too_many_arguments)]
+fn reoffer_chain(
+    conn: &mut Conn,
+    absorber: &RoundInFlight,
+    chain: usize,
+    assigned: &[(u32, u32, f32)],
+    p: &RoundParams<'_>,
+    spec: &UploadSpec,
+    codec_id: u8,
+    w_frame: &[u8],
+    max_msg: usize,
+    read_timeout: Duration,
+    deadline: Option<Instant>,
+) -> Result<(Vec<SlotReport>, Vec<u8>, u64)> {
+    let mut bytes = 0u64;
+    if let Some(dl) = deadline {
+        let rem = dl.saturating_duration_since(Instant::now());
+        if rem.is_zero() {
+            bail!("round deadline expired before the chain could be re-offered");
+        }
+        let t = read_timeout.min(rem);
+        let _ = conn.set_timeouts(Some(t), Some(t));
+    }
+    let head = Msg::SubtreeAssign {
+        round: p.round,
+        round_seed: p.round_seed,
+        lr: p.lr,
+        codec_id,
+        spec: spec.clone(),
+        entries: assigned.to_vec(),
+        weights_frame: Vec::new(),
+    }
+    .encode();
+    bytes += write_msg_parts(conn, &head, w_frame)?;
+    let (msg, n) = read_msg(conn, max_msg)?;
+    bytes += n;
+    let (round, reports, frame) = match Msg::decode(msg)? {
+        Msg::SubtreeUpload { round, reports, frame } => (round, reports, frame),
+        other => bail!("expected a subtree upload, got {}", other.kind_name()),
+    };
+    absorb_chain(absorber, chain, assigned, round, p.round, &reports, &frame)?;
+    Ok((reports, frame, bytes))
+}
+
 /// Server side of the hello handshake: the peer must lead with a
 /// matching-version `Hello` (flat mode) or `RelayHello` (relay mode)
 /// within the read deadline. The tiers are deliberately not
@@ -1404,6 +1552,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         reduce_parallelism: cfg.reduce_parallelism,
         quorum: cfg.quorum_policy()?,
         shards: cfg.shards,
+        shard_tiers: cfg.shard_tiers.clone(),
         relay_children: cfg.relay_children,
     };
     let mut server = RoundServer::bind(&ep, opts)?;

@@ -1,0 +1,276 @@
+//! Shared fault-injection harness for the socket suites.
+//!
+//! Every scripted peer the transport, straggler, and relay tests need
+//! lives here: well-behaved workers (one-shot, persistent, gated),
+//! hostile workers (corrupt frame, slow-loris byte-at-a-time writer,
+//! truncation, oversize prefix, wrong slot), hostile relay peers
+//! (corrupt merged frame, mid-merge vanish), and wrong-version hellos
+//! for both tiers. Each test binary includes this file with
+//! `#[path = "common/faults.rs"] mod faults;` — it is not a cargo
+//! target of its own, so unused helpers per binary are expected.
+//!
+//! The scripted gradient shape is fixed ([`DIM`], [`HEAVY`]): small
+//! enough that a fault round costs milliseconds, real enough that a
+//! recovery round moves the model. Peers that never encode a gradient
+//! (the relay evils, the hellos) are shape-free and reusable at any
+//! dimension.
+#![allow(dead_code)]
+
+use std::io::Write;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use fetchsgd::compression::sim::synth_grad;
+use fetchsgd::compression::ClientUpload;
+use fetchsgd::transport::framing::{read_msg, write_msg};
+use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
+use fetchsgd::transport::{Conn, Endpoint};
+use fetchsgd::wire::{encode_upload, F32LE};
+
+/// Gradient shape every scripted worker in this harness uploads.
+pub const DIM: usize = 64;
+pub const HEAVY: usize = 2;
+/// Message cap generous enough for any frame these tests produce.
+pub const MAX_MSG: usize = 64 << 20;
+/// Socket timeout for scripted peers: long enough to never fire on a
+/// healthy exchange, short enough that a wedged test still fails.
+pub const PEER_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Dial an endpoint with the harness timeouts applied.
+pub fn dial(ep: &Endpoint) -> Conn {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(PEER_TIMEOUT), Some(PEER_TIMEOUT)).unwrap();
+    conn
+}
+
+/// Handshake as a worker and wait for the round start; returns the
+/// round seed and this connection's slot assignments.
+pub fn start_round(conn: &mut Conn) -> (u64, Vec<(u32, u32)>) {
+    write_msg(conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(conn, MAX_MSG).unwrap();
+    match Msg::decode(bytes).unwrap() {
+        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
+        other => panic!("expected round-start, got {}", other.kind_name()),
+    }
+}
+
+/// Handshake as a relay and wait for the round's subtree; returns the
+/// round, seed, and `(slot, client, weight)` entries.
+pub fn start_subtree(conn: &mut Conn) -> (u64, u64, Vec<(u32, u32, f32)>) {
+    write_msg(conn, &Msg::RelayHello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(conn, MAX_MSG).unwrap();
+    match Msg::decode(bytes).unwrap() {
+        Msg::SubtreeAssign { round, round_seed, entries, .. } => (round, round_seed, entries),
+        other => panic!("expected subtree-assign, got {}", other.kind_name()),
+    }
+}
+
+/// The deterministic dense upload frame a well-behaved worker would
+/// send for `client` under `seed` — the raw material every corrupting
+/// peer mutates.
+pub fn valid_dense_frame(seed: u64, client: u32) -> Vec<u8> {
+    let g = synth_grad(DIM, HEAVY, client as usize, seed);
+    encode_upload(&ClientUpload::Dense(g), &F32LE)
+}
+
+/// A well-behaved hand-rolled worker for one round: uploads the same
+/// deterministic dense gradient the sim client would, then reads until
+/// the server says abort / round-end / EOF.
+pub fn good_worker(ep: &Endpoint) {
+    let mut conn = dial(ep);
+    let (seed, assignments) = start_round(&mut conn);
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.25, frame }.encode()).unwrap();
+    }
+    // Round-end on success, abort (or a dropped conn) on failure —
+    // either way this worker is done.
+    if let Ok((bytes, _)) = read_msg(&mut conn, MAX_MSG) {
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundEnd { .. } | Msg::Abort { .. } => {}
+            other => panic!("unexpected {} after upload", other.kind_name()),
+        }
+    }
+}
+
+/// A worker that serves rounds until the server (or its relay) says
+/// `Shutdown` — the persistent twin of [`good_worker`], so a relay tier
+/// can keep it across a whole test.
+pub fn persistent_dense_worker(ep: &Endpoint) {
+    let mut conn = dial(ep);
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    loop {
+        let Ok((bytes, _)) = read_msg(&mut conn, MAX_MSG) else { return };
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundStart { round_seed, assignments, .. } => {
+                for (slot, client) in assignments {
+                    let g = synth_grad(DIM, HEAVY, client as usize, round_seed);
+                    let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+                    let msg = Msg::Upload { slot, loss: 0.25, frame };
+                    if write_msg(&mut conn, &msg.encode()).is_err() {
+                        return;
+                    }
+                }
+            }
+            Msg::RoundEnd { .. } => {}
+            Msg::Shutdown | Msg::Abort { .. } => return,
+            other => panic!("unexpected {} message", other.kind_name()),
+        }
+    }
+}
+
+/// A worker that withholds its uploads until `gate` opens (None = no
+/// wait), then serves the round and drains round-end + shutdown. The
+/// straggler suite's prompt workers pass `None`; the straggler passes
+/// the gated receiver.
+pub fn gated_worker(ep: &Endpoint, gate: Option<mpsc::Receiver<()>>) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let (bytes, _) = read_msg(&mut conn, MAX_MSG).unwrap();
+    let (seed, assignments) = match Msg::decode(bytes).unwrap() {
+        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
+        _ => panic!("expected round-start"),
+    };
+    if let Some(rx) = gate {
+        rx.recv_timeout(Duration::from_secs(30)).expect("straggler gate never released");
+    }
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode()).unwrap();
+    }
+    loop {
+        let (bytes, _) = read_msg(&mut conn, MAX_MSG).unwrap();
+        match Msg::decode(bytes).unwrap() {
+            Msg::RoundEnd { .. } => {}
+            Msg::Shutdown => break,
+            other => panic!("unexpected {}", other.kind_name()),
+        }
+    }
+}
+
+/// A straggler that withholds its upload until the gate opens and
+/// tolerates every error afterwards — under a round deadline the server
+/// legitimately drops its connection before it ever uploads.
+pub fn tolerant_straggler(ep: &Endpoint, rx: mpsc::Receiver<()>) {
+    let mut conn = Conn::connect(ep).unwrap();
+    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
+    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
+    let Ok((bytes, _)) = read_msg(&mut conn, MAX_MSG) else { return };
+    let (seed, assignments) = match Msg::decode(bytes) {
+        Ok(Msg::RoundStart { round_seed, assignments, .. }) => (round_seed, assignments),
+        _ => return,
+    };
+    let _ = rx.recv_timeout(Duration::from_secs(30));
+    for (slot, client) in assignments {
+        let g = synth_grad(DIM, HEAVY, client as usize, seed);
+        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
+        let _ = write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode());
+    }
+}
+
+/// One evil worker behavior, injected after a legitimate handshake +
+/// round-start so the fault lands mid-round where it hurts. Arguments:
+/// the connection, the first assigned slot, the round seed.
+pub type Evil = fn(&mut Conn, u32, u64);
+
+pub fn evil_truncated_frame(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame.truncate(frame.len() - 3);
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+pub fn evil_corrupt_magic(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame[0] = b'X';
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+pub fn evil_wrong_version(conn: &mut Conn, slot: u32, seed: u64) {
+    let mut frame = valid_dense_frame(seed, slot);
+    frame[4] = 99;
+    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
+}
+
+pub fn evil_midstream_disconnect(conn: &mut Conn, _slot: u32, _seed: u64) {
+    // Claim a 4096-byte message, deliver 10 bytes, vanish.
+    conn.write_all(&4096u32.to_le_bytes()).unwrap();
+    conn.write_all(&[7u8; 10]).unwrap();
+    conn.flush().unwrap();
+    conn.shutdown();
+}
+
+pub fn evil_oversize_prefix(conn: &mut Conn, _slot: u32, _seed: u64) {
+    conn.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    conn.flush().unwrap();
+}
+
+pub fn evil_wrong_slot(conn: &mut Conn, _slot: u32, seed: u64) {
+    let frame = valid_dense_frame(seed, 0);
+    write_msg(conn, &Msg::Upload { slot: 999, loss: 0.0, frame }.encode()).unwrap();
+}
+
+/// Slow-loris: trickle the start of a valid upload one byte at a time,
+/// then stall with the connection held open — the classic attack a
+/// round deadline exists to bound. Each trickled byte keeps the
+/// per-read socket timeout from firing, so only a wall-clock deadline
+/// can evict this peer. Never completes the message; lingers until the
+/// server drops the connection.
+pub fn evil_slow_loris(conn: &mut Conn, slot: u32, seed: u64) {
+    let body = Msg::Upload { slot, loss: 0.5, frame: valid_dense_frame(seed, slot) }.encode();
+    let mut wire = (body.len() as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&body);
+    for &b in wire.iter().take(8) {
+        if conn.write_all(&[b]).is_err() || conn.flush().is_err() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    let _ = read_msg(conn, MAX_MSG);
+}
+
+/// A peer speaking the wrong *transport* protocol version: sends a
+/// worker or relay hello one version ahead and expects an abort (or a
+/// plain close) — never a round.
+pub fn wrong_version_hello(ep: &Endpoint, relay: bool) {
+    let mut conn = dial(ep);
+    let hello = if relay {
+        Msg::RelayHello { version: PROTO_VERSION + 1 }
+    } else {
+        Msg::Hello { version: PROTO_VERSION + 1 }
+    };
+    write_msg(&mut conn, &hello.encode()).unwrap();
+    if let Ok((bytes, _)) = read_msg(&mut conn, 1 << 20) {
+        assert!(matches!(Msg::decode(bytes).unwrap(), Msg::Abort { .. }));
+    }
+}
+
+/// Hostile relay peer: reports claim every slot arrived, but the merged
+/// frame is garbage — the parent must reject the frame *before*
+/// recording any of the claimed outcomes. Lingers until aborted so the
+/// failure is the bad merge, not a racing disconnect.
+pub fn evil_corrupt_merged(conn: &mut Conn) {
+    use fetchsgd::transport::proto::{SlotReport, OUTCOME_ARRIVED};
+
+    let (round, round_seed, entries) = start_subtree(conn);
+    let reports = entries
+        .iter()
+        .map(|&(slot, _, _)| SlotReport { slot, outcome: OUTCOME_ARRIVED, retries: 0, loss: 0.5 })
+        .collect();
+    let mut frame = valid_dense_frame(round_seed, 0);
+    frame[0] = b'X';
+    write_msg(conn, &Msg::SubtreeUpload { round, reports, frame }.encode()).unwrap();
+    let _ = read_msg(conn, MAX_MSG);
+}
+
+/// Hostile relay peer: accepts the subtree, claims a big merged upload,
+/// delivers 10 bytes, and vanishes mid-merge.
+pub fn evil_vanish_mid_merge(conn: &mut Conn) {
+    let _ = start_subtree(conn);
+    conn.write_all(&4096u32.to_le_bytes()).unwrap();
+    conn.write_all(&[7u8; 10]).unwrap();
+    conn.flush().unwrap();
+    conn.shutdown();
+}

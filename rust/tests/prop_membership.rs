@@ -1,0 +1,177 @@
+//! Property: membership accounting is *tree-shape invariant*.
+//!
+//! Since protocol v4 a root server learns most slot outcomes
+//! second-hand, as `SlotReport` roll-ups from a relay subtree: a leaf
+//! relay settles its workers' slots, an interior relay merges its
+//! leaves (its own retries folded into each report's count), and the
+//! root replays the merged reports through
+//! `RoundMembership::record_report` — the transport's `roll_up` path.
+//! A flat server sees the same facts first-hand, as direct
+//! `record_retry` / `record_arrival` / `record_drop` events in slot
+//! order.
+//!
+//! These properties pin the equivalence the depth-3 determinism tests
+//! rest on: for random topologies (chain and leaf fan-out), random
+//! per-slot outcomes, retry counts, chain arrival orders, and
+//! mid-round re-offer patterns, the two recording paths settle on the
+//! same membership set, the same participant accounting, and the same
+//! `renormalization_scale`, bit for bit.
+
+use fetchsgd::cohort::{DropReason, QuorumPolicy, RoundMembership, SlotOutcome};
+use fetchsgd::util::proptest::{check, Gen};
+
+/// Retry budget far above anything a case generates — the budget gates
+/// *re-offers*, never the bookkeeping under test.
+const MAX_RETRIES: usize = 16;
+
+#[derive(Clone, Copy)]
+struct SlotFact {
+    /// Did the upload ultimately arrive (possibly after retries)?
+    arrived: bool,
+    /// Retries the subtree itself charged against the slot.
+    retries: usize,
+    /// Drop reason, meaningful only when `arrived` is false.
+    reason: DropReason,
+    weight: f32,
+    loss: f32,
+}
+
+fn gen_fact(g: &mut Gen) -> SlotFact {
+    SlotFact {
+        arrived: g.usize_in(0, 4) != 0,
+        retries: g.usize_in(0, 4),
+        reason: match g.usize_in(0, 3) {
+            0 => DropReason::Faulted,
+            1 => DropReason::Disconnected,
+            _ => DropReason::Deadline,
+        },
+        weight: 0.5 + g.f32_in(0.0, 4.0),
+        loss: g.f32_in(0.0, 2.0),
+    }
+}
+
+/// The order an interior relay's merged report lists chain `r`'s
+/// slots: leaf by leaf (leaf `k` owns the chain-local positions
+/// `≡ k (mod nleaves)`), ascending within each leaf.
+fn chain_report_order(slots: usize, r: usize, nchains: usize, nleaves: usize) -> Vec<usize> {
+    let chain: Vec<usize> = (0..slots).filter(|s| s % nchains == r).collect();
+    let mut order = Vec::with_capacity(chain.len());
+    for k in 0..nleaves {
+        for (i, &s) in chain.iter().enumerate() {
+            if i % nleaves == k {
+                order.push(s);
+            }
+        }
+    }
+    order
+}
+
+#[test]
+fn prop_tree_rollups_match_the_flat_tracker() {
+    check("membership tree == flat", 300, |g| {
+        let slots = g.usize_in(4, 41);
+        let nchains = g.usize_in(1, 5);
+        let nleaves = g.usize_in(1, 5);
+        let policy = QuorumPolicy::new(g.f64_in(0.1, 1.0), 0, MAX_RETRIES).unwrap();
+
+        let mut facts: Vec<SlotFact> = (0..slots).map(|_| gen_fact(g)).collect();
+        if !facts.iter().any(|f| f.arrived) {
+            // Renormalization needs at least one survivor.
+            facts[0].arrived = true;
+        }
+        // A root-tier re-offer of a whole chain charges one extra
+        // retry per slot of that chain, on top of the subtree's own
+        // count.
+        let reoffered: Vec<bool> = (0..nchains).map(|_| g.usize_in(0, 4) == 0).collect();
+        let weights: Vec<f32> = facts.iter().map(|f| f.weight).collect();
+
+        // Chains' merged uploads land in a random order.
+        let mut chain_order: Vec<usize> = (0..nchains).collect();
+        for i in (1..nchains).rev() {
+            let j = g.usize_in(0, i + 1);
+            chain_order.swap(i, j);
+        }
+
+        // Tree path: replay each chain's merged report through
+        // `record_report`, exactly as the transport's roll-up does.
+        let mut tree = RoundMembership::new(slots, policy.clone()).unwrap();
+        let mut tree_losses = vec![0f32; slots];
+        for &r in &chain_order {
+            for s in chain_report_order(slots, r, nchains, nleaves) {
+                let f = facts[s];
+                if reoffered[r] {
+                    tree.record_retry(s);
+                }
+                if f.arrived {
+                    tree.record_report(
+                        s,
+                        if f.retries > 0 {
+                            SlotOutcome::Retried(f.retries)
+                        } else {
+                            SlotOutcome::Arrived
+                        },
+                    );
+                    tree_losses[s] = f.loss;
+                } else {
+                    for _ in 0..f.retries {
+                        tree.record_retry(s);
+                    }
+                    tree.record_report(s, SlotOutcome::Dropped(f.reason));
+                }
+            }
+        }
+
+        // Flat path: the same facts as first-hand events, slot order.
+        let mut flat = RoundMembership::new(slots, policy).unwrap();
+        let mut flat_losses = vec![0f32; slots];
+        for (s, f) in facts.iter().enumerate() {
+            let extra = usize::from(reoffered[s % nchains]);
+            for _ in 0..f.retries + extra {
+                flat.record_retry(s);
+            }
+            if f.arrived {
+                flat.record_arrival(s);
+                flat_losses[s] = f.loss;
+            } else {
+                flat.record_drop(s, f.reason);
+            }
+        }
+
+        assert!(tree.is_settled() && flat.is_settled());
+        assert_eq!(tree.arrived_slots(), flat.arrived_slots(), "membership set diverged");
+        assert_eq!(tree.quorum_met(), flat.quorum_met());
+        assert_eq!(tree.summary(), flat.summary(), "participant accounting diverged");
+        for s in 0..slots {
+            assert_eq!(tree.outcome(s), flat.outcome(s), "slot {s} outcome diverged");
+        }
+        assert_eq!(
+            tree.renormalization_scale(&weights).unwrap().to_bits(),
+            flat.renormalization_scale(&weights).unwrap().to_bits(),
+            "renormalization scale diverged"
+        );
+        assert_eq!(tree_losses, flat_losses);
+        assert_eq!(
+            tree.mean_loss_over_arrived(&tree_losses).to_bits(),
+            flat.mean_loss_over_arrived(&flat_losses).to_bits(),
+        );
+    });
+}
+
+/// The re-offer identity the root relies on: `record_retry` followed
+/// by an arrived report with `n` downstream retries is
+/// indistinguishable from a single `Retried(n + 1)` report.
+#[test]
+fn prop_reoffer_retry_charge_equals_incremented_report() {
+    check("re-offer identity", 100, |g| {
+        let n = g.usize_in(0, 6);
+        let policy = QuorumPolicy::new(1.0, 0, MAX_RETRIES).unwrap();
+        let mut a = RoundMembership::new(1, policy.clone()).unwrap();
+        a.record_retry(0);
+        a.record_report(0, if n > 0 { SlotOutcome::Retried(n) } else { SlotOutcome::Arrived });
+        let mut b = RoundMembership::new(1, policy).unwrap();
+        b.record_report(0, SlotOutcome::Retried(n + 1));
+        assert_eq!(a.outcome(0), b.outcome(0));
+        assert_eq!(a.summary(), b.summary());
+        assert!(a.is_full() && b.is_full());
+    });
+}

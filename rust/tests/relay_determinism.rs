@@ -17,6 +17,17 @@
 //! Renormalization happens once, at the root, so a partial round
 //! closed at quorum with a dropped downstream worker also matches the
 //! flat server ending with the same surviving membership set.
+//!
+//! Since protocol v4 the same two shapes nest: a depth-3 tree (root →
+//! interior relays → leaf relays → workers) must match a flat server
+//! pinned to the tree's *tiered* layout (`shards = R·K`,
+//! `shard_tiers = [R, K]`) and the in-process engine with the same
+//! `reduce_tiers` — leaf `(r, k)` owns exactly the global slots
+//! `≡ r + k·R (mod R·K)`, i.e. flat shard `r + k·R`, and the tiered
+//! reduce rebuilds each subtree's fold. The depth-3 tests below also
+//! pin the failure-tolerance half of the contract: an interior relay
+//! reporting a *partial* chain at quorum, and a dead leaf relay whose
+//! chain is re-assigned mid-round to its surviving sibling.
 
 use std::time::Duration;
 
@@ -67,21 +78,27 @@ fn cohort_for(round: usize) -> (Vec<usize>, Vec<f32>) {
 }
 
 /// The in-process reference loop, with the pipeline pinned to the
-/// tree's shard layout (`shard_override = R`). Mirrors
+/// tree's shard layout (`shard_override = R`, and for a depth > 2 tree
+/// the tiered reduce `reduce_tiers = [R, K, …]`). Mirrors
 /// `transport_determinism.rs::sim_train`.
 fn sim_train_sharded(
     client: &dyn ClientCompute,
     server: &mut dyn ServerAggregator,
     shard_override: usize,
+    tiers: &[usize],
+    rounds: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
     let dataset = SimDataset { num_clients: NUM_CLIENTS };
     let mut w = vec![0f32; DIM];
     let mut losses = Vec::new();
-    let mut pipeline =
-        RoundPipeline::new(PipelineOptions { shard_override, ..Default::default() });
+    let mut pipeline = RoundPipeline::new(PipelineOptions {
+        shard_override,
+        reduce_tiers: tiers.to_vec(),
+        ..Default::default()
+    });
     let policy = QuorumPolicy::strict();
-    for round in 0..ROUNDS {
+    for round in 0..rounds {
         let (participants, sizes) = cohort_for(round);
         let weights = server.begin_round(&sizes);
         let ctx = engine::RoundCtx {
@@ -139,17 +156,20 @@ fn drive_root(srv: &mut RoundServer, server: &mut dyn ServerAggregator) -> RootR
 }
 
 /// Flat comparator: a single server over `workers` socket workers with
-/// the shard layout pinned to the tree's relay count.
+/// the shard layout pinned to the tree's relay count (and, for a
+/// depth > 2 tree, the tiered reduce pinned to its fan-out per tier).
 fn flat_train(
     ep: &Endpoint,
     workers: usize,
     shards: usize,
+    tiers: &[usize],
     client: &dyn ClientCompute,
     server: &mut dyn ServerAggregator,
 ) -> RootRun {
     let opts = ServeOptions {
         workers,
         shards,
+        shard_tiers: tiers.to_vec(),
         read_timeout: T60,
         accept_timeout: T60,
         ..Default::default()
@@ -265,12 +285,14 @@ fn strategies() -> Vec<(&'static str, Box<dyn ClientCompute>, ServerFactory)> {
 #[test]
 fn uds_two_level_tree_is_bitwise_identical_to_flat_and_in_process() {
     for (name, client, make_server) in &strategies() {
-        let (w_mem, l_mem) = sim_train_sharded(client.as_ref(), make_server().as_mut(), RELAYS);
+        let (w_mem, l_mem) =
+            sim_train_sharded(client.as_ref(), make_server().as_mut(), RELAYS, &[], ROUNDS);
         assert!(w_mem.iter().any(|&x| x != 0.0), "{name}: training must move the model");
         let flat = flat_train(
             &uds_endpoint(&format!("flat_{name}")),
             3,
             RELAYS,
+            &[],
             client.as_ref(),
             make_server().as_mut(),
         );
@@ -302,7 +324,7 @@ fn tcp_tree_matches_flat_and_root_bytes_are_fanout_independent() {
     let tcp = || Endpoint::Tcp("127.0.0.1:0".into());
     let (client, _) = sketch_strategy();
     let make_server = || sketch_strategy().1;
-    let flat = flat_train(&tcp(), 3, RELAYS, client.as_ref(), make_server().as_mut());
+    let flat = flat_train(&tcp(), 3, RELAYS, &[], client.as_ref(), make_server().as_mut());
     let narrow = tree_train(
         &tcp(),
         (0..RELAYS).map(|_| tcp()).collect(),
@@ -574,4 +596,372 @@ fn zero_participant_subtree_rounds_complete_and_match_flat() {
 
     assert_eq!(bits(&w_flat), bits(&w_tree), "zero-participant-subtree weights diverge");
     assert_eq!(bits(&l_flat), bits(&l_tree), "zero-participant-subtree losses diverge");
+}
+
+// ---------------------------------------------------------------------------
+// Depth-3 trees (protocol v4): root → interior relays → leaf relays.
+// ---------------------------------------------------------------------------
+
+#[path = "common/faults.rs"]
+mod faults;
+
+/// Interior relays under the root, and leaf relays under each interior
+/// relay, in the depth-3 tests. The matching flat layout is
+/// `shards = INTERIOR * LEAVES_PER`, `shard_tiers = [INTERIOR,
+/// LEAVES_PER]`.
+const INTERIOR: usize = 2;
+const LEAVES_PER: usize = 2;
+
+/// Depth-3 tree: root in relay mode over `INTERIOR` interior relays
+/// (`relay_children = LEAVES_PER`), each over `LEAVES_PER` leaf
+/// relays, each serving `leaf_workers` honest socket workers via
+/// `transport::join`.
+fn depth3_tree_train(
+    mk_ep: &dyn Fn(String) -> Endpoint,
+    leaf_workers: usize,
+    client: &dyn ClientCompute,
+    server: &mut dyn ServerAggregator,
+) -> RootRun {
+    let opts = ServeOptions {
+        workers: 0,
+        relay_children: INTERIOR,
+        read_timeout: T60,
+        accept_timeout: T60,
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&mk_ep("root".into()), opts).unwrap();
+    let root = srv.local_endpoint().unwrap();
+    std::thread::scope(|s| {
+        for i in 0..INTERIOR {
+            let mut mid = Relay::bind(
+                &mk_ep(format!("mid{i}")),
+                RelayOptions {
+                    workers: 0,
+                    relay_children: LEAVES_PER,
+                    read_timeout: T60,
+                    accept_timeout: T60,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mid_down = mid.local_endpoint().unwrap();
+            let up = root.clone();
+            s.spawn(move || {
+                let sum = mid.run(&up).unwrap();
+                assert_eq!(sum.rounds, ROUNDS);
+            });
+            for l in 0..LEAVES_PER {
+                let mut leaf = Relay::bind(
+                    &mk_ep(format!("leaf{i}{l}")),
+                    RelayOptions {
+                        workers: leaf_workers,
+                        read_timeout: T60,
+                        accept_timeout: T60,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let down = leaf.local_endpoint().unwrap();
+                let up = mid_down.clone();
+                s.spawn(move || {
+                    let sum = leaf.run(&up).unwrap();
+                    assert_eq!(sum.rounds, ROUNDS);
+                });
+                for _ in 0..leaf_workers {
+                    let ep = down.clone();
+                    s.spawn(move || {
+                        let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                        let dataset = SimDataset { num_clients: NUM_CLIENTS };
+                        let opts = JoinOptions { read_timeout: Some(T60), ..Default::default() };
+                        let sum = join(&ep, client, &dataset, &artifacts, &opts).unwrap();
+                        assert_eq!(sum.rounds, ROUNDS);
+                    });
+                }
+            }
+        }
+        drive_root(&mut srv, server)
+    })
+}
+
+/// Acceptance (depth 3): over UDS, a three-level tree (2 interior × 2
+/// leaf relays × 1 worker each) is bitwise identical to the flat
+/// server pinned to the tiered layout (`shards = 4`,
+/// `shard_tiers = [2, 2]`) and to the in-process engine with the same
+/// `reduce_tiers`, for sketch, sparse, and dense upload paths.
+#[cfg(unix)]
+#[test]
+fn uds_depth3_tree_is_bitwise_identical_to_flat_and_in_process() {
+    let nshards = INTERIOR * LEAVES_PER;
+    let tiers = [INTERIOR, LEAVES_PER];
+    for (name, client, make_server) in &strategies() {
+        let (w_mem, l_mem) =
+            sim_train_sharded(client.as_ref(), make_server().as_mut(), nshards, &tiers, ROUNDS);
+        assert!(w_mem.iter().any(|&x| x != 0.0), "{name}: training must move the model");
+        let flat = flat_train(
+            &uds_endpoint(&format!("d3flat_{name}")),
+            3,
+            nshards,
+            &tiers,
+            client.as_ref(),
+            make_server().as_mut(),
+        );
+        assert_eq!(bits(&w_mem), bits(&flat.w), "{name}: tiered flat weights diverge");
+        assert_eq!(bits(&l_mem), bits(&flat.losses), "{name}: tiered flat losses diverge");
+        let tree = depth3_tree_train(
+            &|tag| uds_endpoint(&format!("d3{tag}{name}")),
+            1,
+            client.as_ref(),
+            make_server().as_mut(),
+        );
+        assert_eq!(bits(&w_mem), bits(&tree.w), "{name}: depth-3 weights diverge");
+        assert_eq!(bits(&l_mem), bits(&tree.losses), "{name}: depth-3 losses diverge");
+        assert_eq!(tree.participants, ROUNDS * COHORT, "{name}: depth-3 tree dropped slots");
+    }
+}
+
+/// The same depth-3 tree over loopback TCP: transport must not matter
+/// at any depth, so the tree matches the in-process tiered engine.
+#[test]
+fn tcp_depth3_tree_matches_in_process() {
+    let nshards = INTERIOR * LEAVES_PER;
+    let tiers = [INTERIOR, LEAVES_PER];
+    let (client, _) = sketch_strategy();
+    let make_server = || sketch_strategy().1;
+    let (w_mem, l_mem) =
+        sim_train_sharded(client.as_ref(), make_server().as_mut(), nshards, &tiers, ROUNDS);
+    let tree = depth3_tree_train(
+        &|_| Endpoint::Tcp("127.0.0.1:0".into()),
+        1,
+        client.as_ref(),
+        make_server().as_mut(),
+    );
+    assert_eq!(bits(&w_mem), bits(&tree.w), "tcp depth-3 weights diverge from in-process");
+    assert_eq!(bits(&l_mem), bits(&tree.losses), "tcp depth-3 losses diverge from in-process");
+}
+
+/// Acceptance (depth 3, partial chain): in the final round one leaf
+/// worker dies after `RoundStart`, so its leaf relay reports a
+/// *partial* chain — per-slot outcomes plus a merged frame weighted
+/// only by the arrived slots — which the interior relay rolls up
+/// unchanged. The root closes at quorum, and the bits equal a flat
+/// tiered server losing the same worker: same surviving set ⇒ same
+/// bits.
+///
+/// Striping: with 8 leaf workers (2 per leaf) the worker holding
+/// global slot 2 owns exactly the slots `≡ 2 (mod 8)`; in the flat run
+/// (8 workers) the connection holding slot 2 owns the same set — the
+/// scripted failure triggers on the assignment, never on accept order.
+#[test]
+fn depth3_partial_chain_at_quorum_matches_flat() {
+    let policy = QuorumPolicy::new(0.5, 0, 0).unwrap();
+    let fail = Some(((ROUNDS - 1) as u64, 2u32));
+    let (client, _) = sketch_strategy();
+    let make_server = || sketch_strategy().1;
+    let tcp = || Endpoint::Tcp("127.0.0.1:0".into());
+    let nshards = INTERIOR * LEAVES_PER;
+    let tiers = [INTERIOR, LEAVES_PER];
+
+    // Flat tiered comparator: 8 scripted workers, one carrying the
+    // same death as the tree's doomed leaf worker.
+    let flat = {
+        let opts = ServeOptions {
+            workers: 8,
+            shards: nshards,
+            shard_tiers: tiers.to_vec(),
+            read_timeout: T60,
+            accept_timeout: T60,
+            quorum: policy.clone(),
+            ..Default::default()
+        };
+        let mut srv = RoundServer::bind(&tcp(), opts).unwrap();
+        let actual = srv.local_endpoint().unwrap();
+        let conns: Vec<Conn> = (0..8).map(|_| Conn::connect(&actual).unwrap()).collect();
+        std::thread::scope(|s| {
+            for conn in conns {
+                let client = client.as_ref();
+                s.spawn(move || scripted_worker(conn, client, fail));
+            }
+            drive_root(&mut srv, make_server().as_mut())
+        })
+    };
+
+    // Depth-3 tree: every leaf worker carries the script; only the one
+    // whose final-round assignment includes global slot 2 trips it.
+    let tree = {
+        let opts = ServeOptions {
+            workers: 0,
+            relay_children: INTERIOR,
+            read_timeout: T60,
+            accept_timeout: T60,
+            quorum: policy.clone(),
+            ..Default::default()
+        };
+        let mut srv = RoundServer::bind(&tcp(), opts).unwrap();
+        let root = srv.local_endpoint().unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..INTERIOR {
+                let mut mid = Relay::bind(
+                    &tcp(),
+                    RelayOptions {
+                        workers: 0,
+                        relay_children: LEAVES_PER,
+                        read_timeout: T60,
+                        accept_timeout: T60,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let mid_down = mid.local_endpoint().unwrap();
+                let up = root.clone();
+                s.spawn(move || {
+                    mid.run(&up).unwrap();
+                });
+                for _ in 0..LEAVES_PER {
+                    let mut leaf = Relay::bind(
+                        &tcp(),
+                        RelayOptions {
+                            workers: 2,
+                            read_timeout: T60,
+                            accept_timeout: T60,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                    let down = leaf.local_endpoint().unwrap();
+                    let up = mid_down.clone();
+                    s.spawn(move || {
+                        leaf.run(&up).unwrap();
+                    });
+                    for _ in 0..2 {
+                        let conn = Conn::connect(&down).unwrap();
+                        let client = client.as_ref();
+                        s.spawn(move || scripted_worker(conn, client, fail));
+                    }
+                }
+            }
+            drive_root(&mut srv, make_server().as_mut())
+        })
+    };
+
+    let dropped = COHORT / 8;
+    assert_eq!(flat.participants, ROUNDS * COHORT - dropped, "flat run dropped the wrong slots");
+    assert_eq!(tree.participants, flat.participants, "tree and flat membership differ");
+    assert_eq!(bits(&flat.w), bits(&tree.w), "depth-3 partial weights diverge");
+    assert_eq!(bits(&flat.losses), bits(&tree.losses), "depth-3 partial losses diverge");
+}
+
+/// Acceptance (depth 3, re-assignment): a leaf relay accepts its
+/// subtree and dies mid-merge. Its interior relay re-offers the whole
+/// unserved chain to the surviving sibling leaf — same round, a second
+/// `SubtreeAssign` — which serves it through its own workers. Under a
+/// *full* quorum the round may only close if the rescue really
+/// happened, and because the rescued chain lands in the dead child's
+/// accumulator, the bits equal the full-membership in-process
+/// reference exactly.
+#[test]
+fn depth3_dead_leaf_relay_chain_is_reassigned_mid_round() {
+    use faults::{dial, evil_vanish_mid_merge};
+
+    // Full quorum + one retry: the round can only succeed via rescue.
+    let policy = QuorumPolicy::new(1.0, 0, 1).unwrap();
+    let (client, _) = sketch_strategy();
+    let make_server = || sketch_strategy().1;
+    let tcp = || Endpoint::Tcp("127.0.0.1:0".into());
+    let nshards = INTERIOR * LEAVES_PER;
+    let tiers = [INTERIOR, LEAVES_PER];
+
+    // Full-membership in-process reference, one round.
+    let (w_ref, l_ref) =
+        sim_train_sharded(client.as_ref(), make_server().as_mut(), nshards, &tiers, 1);
+
+    let opts = ServeOptions {
+        workers: 0,
+        relay_children: INTERIOR,
+        read_timeout: T60,
+        accept_timeout: T60,
+        quorum: policy.clone(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&tcp(), opts).unwrap();
+    let root = srv.local_endpoint().unwrap();
+    let (w_tree, stats) = std::thread::scope(|s| {
+        for i in 0..INTERIOR {
+            let mut mid = Relay::bind(
+                &tcp(),
+                RelayOptions {
+                    workers: 0,
+                    relay_children: LEAVES_PER,
+                    read_timeout: T60,
+                    accept_timeout: T60,
+                    quorum: policy.clone(),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mid_down = mid.local_endpoint().unwrap();
+            let up = root.clone();
+            s.spawn(move || {
+                mid.run(&up).unwrap();
+            });
+            // Interior 0 gets one honest leaf and the doomed peer;
+            // interior 1 gets two honest leaves.
+            let honest_leaves = if i == 0 { 1 } else { LEAVES_PER };
+            for _ in 0..honest_leaves {
+                let mut leaf = Relay::bind(
+                    &tcp(),
+                    RelayOptions {
+                        workers: 1,
+                        read_timeout: T60,
+                        accept_timeout: T60,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let down = leaf.local_endpoint().unwrap();
+                let up = mid_down.clone();
+                s.spawn(move || {
+                    leaf.run(&up).unwrap();
+                });
+                let ep = down.clone();
+                let client = client.as_ref();
+                s.spawn(move || {
+                    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                    let dataset = SimDataset { num_clients: NUM_CLIENTS };
+                    let opts = JoinOptions { read_timeout: Some(T60), ..Default::default() };
+                    // The surviving leaf serves a second subtree in the
+                    // same round, so its worker sees more round starts
+                    // than rounds; no round-count assertion here.
+                    let _ = join(&ep, client, &dataset, &artifacts, &opts);
+                });
+            }
+            if i == 0 {
+                // The doomed leaf: a scripted relay peer that accepts
+                // its chain and vanishes mid-merge.
+                let ep = mid_down.clone();
+                s.spawn(move || {
+                    let mut conn = dial(&ep);
+                    evil_vanish_mid_merge(&mut conn);
+                });
+            }
+        }
+        let (parts, sizes) = cohort_for(0);
+        let params = RoundParams {
+            round: 0,
+            round_seed: derive_seed(SEED, 0),
+            lr: 0.05,
+            participants: &parts,
+            client_sizes: &sizes,
+        };
+        let mut server = make_server();
+        let mut w = vec![0f32; DIM];
+        let stats = srv.run_round(server.as_mut(), &params, &mut w).unwrap();
+        srv.shutdown();
+        (w, stats)
+    });
+
+    assert_eq!(stats.participants, COHORT, "the rescued chain must make the round full");
+    assert_eq!(stats.dropped_slots, 0, "no slot may drop when the rescue lands");
+    assert!(stats.retried_slots > 0, "the re-assigned chain must be accounted as retried");
+    assert_eq!(bits(&w_ref), bits(&w_tree), "rescued-round weights diverge from full reference");
+    assert_eq!(bits(&l_ref), bits(&stats.losses), "rescued-round losses diverge");
 }

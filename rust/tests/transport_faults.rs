@@ -16,106 +16,35 @@
 //! `RelayHello`) must cost exactly its own subtree — the sibling
 //! subtree's slots survive, the round closes at quorum, and the root
 //! stays reusable.
+//!
+//! The scripted peers live in the shared harness (`common/faults.rs`),
+//! reused by the straggler and relay suites.
 
-use std::io::Write;
 use std::time::Duration;
 
 use fetchsgd::compression::aggregate::run_server_round;
 use fetchsgd::compression::sim::{sim_artifacts, synth_grad, SimDataset, SimDenseClient};
 use fetchsgd::compression::uncompressed::UncompressedServer;
 use fetchsgd::compression::ClientUpload;
-use fetchsgd::transport::framing::{read_msg, write_msg};
-use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
+use fetchsgd::transport::framing::read_msg;
 use fetchsgd::transport::{
     join, Conn, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions,
 };
-use fetchsgd::wire::{encode_upload, F32LE};
 
-const DIM: usize = 64;
-const HEAVY: usize = 2;
+#[path = "common/faults.rs"]
+mod faults;
+use faults::{
+    dial, evil_corrupt_magic, evil_corrupt_merged, evil_midstream_disconnect,
+    evil_oversize_prefix, evil_truncated_frame, evil_vanish_mid_merge, evil_wrong_slot,
+    evil_wrong_version, good_worker, persistent_dense_worker, start_round, wrong_version_hello,
+    Evil, DIM, HEAVY, MAX_MSG,
+};
+
 const NUM_CLIENTS: usize = 10;
 const LR: f32 = 0.05;
 
 fn round_seed(k: u64) -> u64 {
     0x5EED_0000 ^ (k * 7919)
-}
-
-/// Hand-rolled worker: handshake, read the round start, return the
-/// parsed assignment. The test's evil peers diverge after this point.
-fn start_round(conn: &mut Conn) -> (u64, Vec<(u32, u32)>) {
-    write_msg(conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
-    let (bytes, _) = read_msg(conn, 64 << 20).unwrap();
-    match Msg::decode(bytes).unwrap() {
-        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
-        _ => panic!("expected round-start"),
-    }
-}
-
-/// A well-behaved hand-rolled worker for one round: uploads the same
-/// deterministic dense gradient the sim client would, then reads until
-/// the server says abort / round-end / EOF.
-fn good_worker(ep: &Endpoint) {
-    let mut conn = Conn::connect(ep).unwrap();
-    conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20))).unwrap();
-    let (seed, assignments) = start_round(&mut conn);
-    for (slot, client) in assignments {
-        let g = synth_grad(DIM, HEAVY, client as usize, seed);
-        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
-        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.25, frame }.encode()).unwrap();
-    }
-    // Round-end on success, abort (or a dropped conn) on failure —
-    // either way this worker is done.
-    if let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) {
-        match Msg::decode(bytes).unwrap() {
-            Msg::RoundEnd { .. } | Msg::Abort { .. } => {}
-            other => panic!("unexpected {} after upload", other.kind_name()),
-        }
-    }
-}
-
-/// One evil behavior, injected after a legitimate handshake +
-/// round-start so the fault lands mid-round where it hurts.
-type Evil = fn(&mut Conn, u32, u64);
-
-fn valid_dense_frame(seed: u64, client: u32) -> Vec<u8> {
-    let g = synth_grad(DIM, HEAVY, client as usize, seed);
-    encode_upload(&ClientUpload::Dense(g), &F32LE)
-}
-
-fn evil_truncated_frame(conn: &mut Conn, slot: u32, seed: u64) {
-    let mut frame = valid_dense_frame(seed, slot);
-    frame.truncate(frame.len() - 3);
-    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
-}
-
-fn evil_corrupt_magic(conn: &mut Conn, slot: u32, seed: u64) {
-    let mut frame = valid_dense_frame(seed, slot);
-    frame[0] = b'X';
-    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
-}
-
-fn evil_wrong_version(conn: &mut Conn, slot: u32, seed: u64) {
-    let mut frame = valid_dense_frame(seed, slot);
-    frame[4] = 99;
-    write_msg(conn, &Msg::Upload { slot, loss: 0.0, frame }.encode()).unwrap();
-}
-
-fn evil_midstream_disconnect(conn: &mut Conn, _slot: u32, _seed: u64) {
-    // Claim a 4096-byte message, deliver 10 bytes, vanish.
-    conn.write_all(&4096u32.to_le_bytes()).unwrap();
-    conn.write_all(&[7u8; 10]).unwrap();
-    conn.flush().unwrap();
-    conn.shutdown();
-}
-
-fn evil_oversize_prefix(conn: &mut Conn, _slot: u32, _seed: u64) {
-    conn.write_all(&u32::MAX.to_le_bytes()).unwrap();
-    conn.flush().unwrap();
-}
-
-fn evil_wrong_slot(conn: &mut Conn, _slot: u32, seed: u64) {
-    let frame = valid_dense_frame(seed, 0);
-    write_msg(conn, &Msg::Upload { slot: 999, loss: 0.0, frame }.encode()).unwrap();
 }
 
 #[test]
@@ -153,15 +82,13 @@ fn faults_fail_loudly_and_leave_the_server_reusable() {
             s.spawn(move || good_worker(&ep));
             let ep = actual.clone();
             s.spawn(move || {
-                let mut conn = Conn::connect(&ep).unwrap();
-                conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
-                    .unwrap();
+                let mut conn = dial(&ep);
                 let (seed, assignments) = start_round(&mut conn);
                 let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
                 evil(&mut conn, slot, seed);
                 // Stay alive until the server aborts us so the failure
                 // is the bad bytes, not a racing disconnect.
-                let _ = read_msg(&mut conn, 64 << 20);
+                let _ = read_msg(&mut conn, MAX_MSG);
             });
             let params = RoundParams {
                 round,
@@ -267,13 +194,11 @@ fn corrupt_frame_slot_is_retryable_and_round_completes() {
         // Evil worker: corrupts its own upload's magic, then lingers.
         let ep2 = actual.clone();
         s.spawn(move || {
-            let mut conn = Conn::connect(&ep2).unwrap();
-            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
-                .unwrap();
+            let mut conn = dial(&ep2);
             let (seed, assignments) = start_round(&mut conn);
             let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
             evil_corrupt_magic(&mut conn, slot, seed);
-            let _ = read_msg(&mut conn, 64 << 20);
+            let _ = read_msg(&mut conn, MAX_MSG);
         });
         let params = RoundParams {
             round: 0,
@@ -322,15 +247,9 @@ fn bad_handshake_is_dropped_and_round_proceeds() {
     std::thread::scope(|s| {
         let ep = actual.clone();
         s.spawn(move || {
-            // Wrong protocol version: the server must reject us…
-            let mut conn = Conn::connect(&ep).unwrap();
-            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
-                .unwrap();
-            write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION + 1 }.encode()).unwrap();
-            // …with an abort (or a plain close).
-            if let Ok((bytes, _)) = read_msg(&mut conn, 1 << 20) {
-                assert!(matches!(Msg::decode(bytes).unwrap(), Msg::Abort { .. }));
-            }
+            // Wrong protocol version: the server must reject us with an
+            // abort (or a plain close)…
+            wrong_version_hello(&ep, false);
             // …and then serve a well-behaved worker in its place.
             let artifacts = sim_artifacts(DIM, 1, 64, 1).unwrap();
             let dataset = SimDataset { num_clients: NUM_CLIENTS };
@@ -356,82 +275,16 @@ fn bad_handshake_is_dropped_and_round_proceeds() {
     assert!(w.iter().any(|&x| x != 0.0));
 }
 
-/// A worker that serves rounds until the server (or its relay) says
-/// `Shutdown` — the dense twin of `good_worker`, but persistent, so a
-/// relay tier can keep it across the whole test.
-fn persistent_dense_worker(ep: &Endpoint) {
-    let mut conn = Conn::connect(ep).unwrap();
-    conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20))).unwrap();
-    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
-    loop {
-        let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) else { return };
-        match Msg::decode(bytes).unwrap() {
-            Msg::RoundStart { round_seed, assignments, .. } => {
-                for (slot, client) in assignments {
-                    let g = synth_grad(DIM, HEAVY, client as usize, round_seed);
-                    let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
-                    let msg = Msg::Upload { slot, loss: 0.25, frame };
-                    if write_msg(&mut conn, &msg.encode()).is_err() {
-                        return;
-                    }
-                }
-            }
-            Msg::RoundEnd { .. } => {}
-            Msg::Shutdown | Msg::Abort { .. } => return,
-            other => panic!("unexpected {} message", other.kind_name()),
-        }
-    }
-}
-
 /// A hostile relay peer must cost exactly its own subtree: the sibling
 /// subtree (a real `relay::Relay` over a real worker) survives, the
 /// round closes at quorum with only the evil chain's slots dropped, and
-/// the root serves a full round again once a healthy relay replaces the
-/// dead one — merged-frame fault attribution, end to end.
+/// the root stays reusable after a healthy relay replaces the dead one
+/// — merged-frame fault attribution, end to end.
 #[test]
 fn relay_peer_faults_drop_only_their_subtree() {
     use fetchsgd::cohort::QuorumPolicy;
     use fetchsgd::compression::aggregate::run_server_round as reference_round;
     use fetchsgd::relay::{Relay, RelayOptions};
-    use fetchsgd::transport::proto::{SlotReport, OUTCOME_ARRIVED};
-
-    /// Handshake as a relay and wait for the round's subtree.
-    fn start_subtree(conn: &mut Conn) -> (u64, u64, Vec<(u32, u32, f32)>) {
-        write_msg(conn, &Msg::RelayHello { version: PROTO_VERSION }.encode()).unwrap();
-        let (bytes, _) = read_msg(conn, 64 << 20).unwrap();
-        match Msg::decode(bytes).unwrap() {
-            Msg::SubtreeAssign { round, round_seed, entries, .. } => (round, round_seed, entries),
-            other => panic!("expected subtree-assign, got {}", other.kind_name()),
-        }
-    }
-
-    // Reports claim every slot arrived, but the merged frame is
-    // garbage: the root must reject the frame *before* recording any of
-    // the claimed outcomes.
-    fn evil_corrupt_merged(conn: &mut Conn) {
-        let (round, round_seed, entries) = start_subtree(conn);
-        let reports = entries
-            .iter()
-            .map(|&(slot, _, _)| {
-                SlotReport { slot, outcome: OUTCOME_ARRIVED, retries: 0, loss: 0.5 }
-            })
-            .collect();
-        let mut frame = valid_dense_frame(round_seed, 0);
-        frame[0] = b'X';
-        write_msg(conn, &Msg::SubtreeUpload { round, reports, frame }.encode()).unwrap();
-        // Linger until the root aborts us, so the failure is the bad
-        // merge, not a racing disconnect.
-        let _ = read_msg(conn, 64 << 20);
-    }
-
-    // Claim a big subtree upload, deliver 10 bytes, vanish mid-merge.
-    fn evil_vanish_mid_merge(conn: &mut Conn) {
-        let _ = start_subtree(conn);
-        conn.write_all(&4096u32.to_le_bytes()).unwrap();
-        conn.write_all(&[7u8; 10]).unwrap();
-        conn.flush().unwrap();
-        conn.shutdown();
-    }
 
     let cases: Vec<(&str, fn(&mut Conn))> = vec![
         ("corrupt merged frame", evil_corrupt_merged),
@@ -474,9 +327,7 @@ fn relay_peer_faults_drop_only_their_subtree() {
             // The hostile relay peer.
             let ep2 = actual.clone();
             s.spawn(move || {
-                let mut conn = Conn::connect(&ep2).unwrap();
-                conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
-                    .unwrap();
+                let mut conn = dial(&ep2);
                 evil(&mut conn);
             });
 
@@ -581,14 +432,7 @@ fn wrong_version_relay_hello_is_dropped_and_replaced() {
         // Wrong-version relay hello: dialed first, so the root meets it
         // first (loopback accepts in connect order) and must reject it.
         let ep2 = actual.clone();
-        s.spawn(move || {
-            let mut conn = Conn::connect(&ep2).unwrap();
-            conn.set_timeouts(Some(Duration::from_secs(5)), Some(Duration::from_secs(5))).unwrap();
-            write_msg(&mut conn, &Msg::RelayHello { version: PROTO_VERSION + 1 }.encode()).unwrap();
-            if let Ok((bytes, _)) = read_msg(&mut conn, 1 << 20) {
-                assert!(matches!(Msg::decode(bytes).unwrap(), Msg::Abort { .. }));
-            }
-        });
+        s.spawn(move || wrong_version_hello(&ep2, true));
         // Give the bad peer's dial a head start before the healthy
         // relay goes up.
         std::thread::sleep(Duration::from_millis(200));
@@ -669,13 +513,11 @@ fn join_reconnects_after_a_faulted_round() {
         // aborts, both connections drop.
         let ep2 = actual.clone();
         s.spawn(move || {
-            let mut conn = Conn::connect(&ep2).unwrap();
-            conn.set_timeouts(Some(Duration::from_secs(20)), Some(Duration::from_secs(20)))
-                .unwrap();
+            let mut conn = dial(&ep2);
             let (seed, assignments) = start_round(&mut conn);
             let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
             evil_truncated_frame(&mut conn, slot, seed);
-            let _ = read_msg(&mut conn, 64 << 20);
+            let _ = read_msg(&mut conn, MAX_MSG);
         });
         let params = RoundParams {
             round: 0,

@@ -11,7 +11,12 @@
 //!
 //! Under a quorum policy with a round deadline, the same gated
 //! straggler is *dropped* instead of waited for: the round completes
-//! with the arrived subset and renormalized weights (second test).
+//! with the arrived subset and renormalized weights (second test). A
+//! slow-loris peer — trickling bytes so the per-read socket timeout
+//! never fires — is evicted by the same wall-clock deadline (third
+//! test).
+//!
+//! The scripted peers live in the shared harness (`common/faults.rs`).
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
@@ -22,45 +27,15 @@ use fetchsgd::compression::aggregate::{run_server_round, PipelineOptions, RoundP
 use fetchsgd::compression::sim::synth_grad;
 use fetchsgd::compression::uncompressed::UncompressedServer;
 use fetchsgd::compression::{ClientUpload, ServerAggregator, UploadSpec};
-use fetchsgd::transport::framing::{read_msg, write_msg};
-use fetchsgd::transport::proto::{Msg, PROTO_VERSION};
-use fetchsgd::transport::{Conn, Endpoint, RoundParams, RoundServer, ServeOptions};
-use fetchsgd::wire::{encode_upload, F32LE};
+use fetchsgd::transport::{Endpoint, RoundParams, RoundServer, ServeOptions};
 
-const DIM: usize = 64;
-const HEAVY: usize = 2;
+#[path = "common/faults.rs"]
+mod faults;
+use faults::{dial, evil_slow_loris, gated_worker, start_round, tolerant_straggler, DIM, HEAVY};
+
 const W: usize = 4;
 const LR: f32 = 0.05;
 const SEED: u64 = 0xABCD;
-
-/// Hand-rolled worker: handshake, take the one assigned slot, wait for
-/// `gate` (None = no wait), upload, drain round-end + shutdown.
-fn worker(ep: &Endpoint, gate: Option<mpsc::Receiver<()>>) {
-    let mut conn = Conn::connect(ep).unwrap();
-    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
-    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
-    let (bytes, _) = read_msg(&mut conn, 64 << 20).unwrap();
-    let (seed, assignments) = match Msg::decode(bytes).unwrap() {
-        Msg::RoundStart { round_seed, assignments, .. } => (round_seed, assignments),
-        _ => panic!("expected round-start"),
-    };
-    if let Some(rx) = gate {
-        rx.recv_timeout(Duration::from_secs(30)).expect("straggler gate never released");
-    }
-    for (slot, client) in assignments {
-        let g = synth_grad(DIM, HEAVY, client as usize, seed);
-        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
-        write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode()).unwrap();
-    }
-    loop {
-        let (bytes, _) = read_msg(&mut conn, 64 << 20).unwrap();
-        match Msg::decode(bytes).unwrap() {
-            Msg::RoundEnd { .. } => {}
-            Msg::Shutdown => break,
-            other => panic!("unexpected {}", other.kind_name()),
-        }
-    }
-}
 
 #[test]
 fn straggler_does_not_block_streaming_absorb() {
@@ -83,10 +58,10 @@ fn straggler_does_not_block_streaming_absorb() {
         // Three prompt workers and one gated straggler.
         for _ in 0..W - 1 {
             let ep = actual.clone();
-            s.spawn(move || worker(&ep, None));
+            s.spawn(move || gated_worker(&ep, None));
         }
         let ep = actual.clone();
-        s.spawn(move || worker(&ep, Some(rx)));
+        s.spawn(move || gated_worker(&ep, Some(rx)));
 
         // The round runs on its own thread so this one can watch the
         // probe while the straggler is still withholding its upload.
@@ -134,24 +109,35 @@ fn straggler_does_not_block_streaming_absorb() {
     assert_eq!(bits(&w_ref), bits(&w));
 }
 
-/// A straggler worker that withholds its upload until the gate opens
-/// and tolerates every error afterwards — under a round deadline the
-/// server legitimately drops its connection before it ever uploads.
-fn tolerant_straggler(ep: &Endpoint, rx: mpsc::Receiver<()>) {
-    let mut conn = Conn::connect(ep).unwrap();
-    conn.set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(30))).unwrap();
-    write_msg(&mut conn, &Msg::Hello { version: PROTO_VERSION }.encode()).unwrap();
-    let Ok((bytes, _)) = read_msg(&mut conn, 64 << 20) else { return };
-    let (seed, assignments) = match Msg::decode(bytes) {
-        Ok(Msg::RoundStart { round_seed, assignments, .. }) => (round_seed, assignments),
-        _ => return,
-    };
-    let _ = rx.recv_timeout(Duration::from_secs(30));
-    for (slot, client) in assignments {
-        let g = synth_grad(DIM, HEAVY, client as usize, seed);
-        let frame = encode_upload(&ClientUpload::Dense(g), &F32LE);
-        let _ = write_msg(&mut conn, &Msg::Upload { slot, loss: 0.5, frame }.encode());
+/// Finalize-at-quorum reference: a full in-process round over every
+/// slot except `dropped_slot`, dropped with `reason`, under `policy`.
+fn quorum_reference(
+    participants: &[usize],
+    sizes: &[f32],
+    dropped_slot: usize,
+    reason: DropReason,
+    policy: QuorumPolicy,
+) -> Vec<f32> {
+    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
+    let lambdas = agg_ref.begin_round(sizes);
+    let spec: UploadSpec = agg_ref.upload_spec();
+    let mut pl = RoundPipeline::new(PipelineOptions::default());
+    let mut m = RoundMembership::new(participants.len(), policy).unwrap();
+    let mut r = pl.begin(&spec, lambdas).unwrap();
+    for slot in 0..participants.len() {
+        if slot == dropped_slot {
+            continue;
+        }
+        let g = synth_grad(DIM, HEAVY, participants[slot], SEED);
+        r.offer(slot, ClientUpload::Dense(g)).unwrap();
+        m.record_arrival(slot);
     }
+    m.record_drop(dropped_slot, reason);
+    let merged = pl.finalize_partial(r, &m).unwrap();
+    let update = agg_ref.finish(&merged, LR).unwrap();
+    let mut w_ref = vec![0f32; DIM];
+    update.apply(&mut w_ref);
+    w_ref
 }
 
 /// Quorum counterpart of the probe test: with `round_deadline_ms` set
@@ -180,7 +166,7 @@ fn straggler_past_deadline_is_dropped_at_quorum() {
     let stats = std::thread::scope(|s| {
         for _ in 0..W - 1 {
             let ep = actual.clone();
-            s.spawn(move || worker(&ep, None));
+            s.spawn(move || gated_worker(&ep, None));
         }
         let ep = actual.clone();
         s.spawn(move || tolerant_straggler(&ep, rx));
@@ -207,26 +193,64 @@ fn straggler_past_deadline_is_dropped_at_quorum() {
     // The straggler's slot is the one that reported no loss.
     let dropped_slot = stats.losses.iter().position(|&l| l == 0.0).expect("one dropped slot");
 
-    // Finalize-at-quorum reference over the same surviving set.
-    let mut agg_ref = UncompressedServer::new(DIM, 0.0);
-    let lambdas = agg_ref.begin_round(&sizes);
-    let spec: UploadSpec = agg_ref.upload_spec();
-    let mut pl = RoundPipeline::new(PipelineOptions::default());
-    let mut m = RoundMembership::new(W, policy).unwrap();
-    let mut r = pl.begin(&spec, lambdas).unwrap();
-    for slot in 0..W {
-        if slot == dropped_slot {
-            continue;
-        }
-        let g = synth_grad(DIM, HEAVY, participants[slot], SEED);
-        r.offer(slot, ClientUpload::Dense(g)).unwrap();
-        m.record_arrival(slot);
-    }
-    m.record_drop(dropped_slot, DropReason::Deadline);
-    let merged = pl.finalize_partial(r, &m).unwrap();
-    let update = agg_ref.finish(&merged, LR).unwrap();
-    let mut w_ref = vec![0f32; DIM];
-    update.apply(&mut w_ref);
+    let w_ref = quorum_reference(&participants, &sizes, dropped_slot, DropReason::Deadline, policy);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     assert_eq!(bits(&w_ref), bits(&w), "deadline drop changed the surviving slots' math");
+}
+
+/// Slow-loris counterpart: the hostile peer trickles its upload one
+/// byte at a time, so the per-read socket timeout never fires — each
+/// byte arrives "in time" — and only the wall-clock round deadline can
+/// evict it. The round must close at quorum with the slow-loris slot
+/// dropped for `Deadline`, and the surviving slots' math untouched.
+#[test]
+fn slow_loris_upload_is_dropped_at_the_round_deadline() {
+    let policy = QuorumPolicy::new(0.5, 2000, 0).unwrap();
+    let opts = ServeOptions {
+        workers: W,
+        read_timeout: Duration::from_secs(30),
+        accept_timeout: Duration::from_secs(30),
+        quorum: policy.clone(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts).unwrap();
+    let actual = srv.local_endpoint().unwrap();
+    let mut agg = UncompressedServer::new(DIM, 0.0);
+    let mut w = vec![0f32; DIM];
+    let participants: Vec<usize> = (0..W).collect();
+    let sizes = vec![1.0f32; W];
+
+    let stats = std::thread::scope(|s| {
+        for _ in 0..W - 1 {
+            let ep = actual.clone();
+            s.spawn(move || gated_worker(&ep, None));
+        }
+        let ep = actual.clone();
+        s.spawn(move || {
+            let mut conn = dial(&ep);
+            let (seed, assignments) = start_round(&mut conn);
+            let slot = assignments.first().map(|&(s, _)| s).unwrap_or(0);
+            evil_slow_loris(&mut conn, slot, seed);
+        });
+        let params = RoundParams {
+            round: 0,
+            round_seed: SEED,
+            lr: LR,
+            participants: &participants,
+            client_sizes: &sizes,
+        };
+        let stats = srv.run_round(&mut agg, &params, &mut w).unwrap();
+        srv.shutdown();
+        stats
+    });
+
+    assert_eq!(stats.participants, W - 1, "round closes with the prompt workers");
+    assert_eq!(stats.dropped_slots, 1, "the slow-loris slot is dropped");
+    assert!(w.iter().any(|&x| x != 0.0), "the partial round still steps the model");
+
+    let dropped_slot = stats.losses.iter().position(|&l| l == 0.0).expect("one dropped slot");
+
+    let w_ref = quorum_reference(&participants, &sizes, dropped_slot, DropReason::Deadline, policy);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&w_ref), bits(&w), "slow-loris eviction changed the surviving slots' math");
 }

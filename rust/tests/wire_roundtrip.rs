@@ -1,8 +1,9 @@
 //! Wire-protocol property tests: encode∘decode identity under the
 //! lossless codec, bounded error under the lossy codec, loud rejection
-//! of corrupt frames, and the acceptance check that measured frame
-//! bytes dominate the idealized footnote-5 estimates for every
-//! strategy's upload and broadcast shape.
+//! of corrupt frames, panic-freedom of the decoders under single-byte
+//! mutations and arbitrary byte strings, and the acceptance check that
+//! measured frame bytes dominate the idealized footnote-5 estimates
+//! for every strategy's upload and broadcast shape.
 
 use fetchsgd::compression::aggregate::RoundAccum;
 use fetchsgd::compression::{ClientUpload, RoundUpdate, UploadSpec};
@@ -10,6 +11,7 @@ use fetchsgd::sketch::{CountSketch, SparseVec};
 use fetchsgd::util::proptest::check;
 use fetchsgd::wire::{
     decode_update, decode_upload, encode_update, encode_upload, Frame, F16LE, F32LE, HEADER_LEN,
+    MAGIC, VERSION,
 };
 
 fn random_sketch(g: &mut fetchsgd::util::proptest::Gen) -> CountSketch {
@@ -125,6 +127,71 @@ fn prop_corrupted_frames_never_decode() {
             decode_upload(&bad).is_err(),
             "header corruption at byte {at} went unnoticed"
         );
+    });
+}
+
+/// Decode robustness, half one: a single byte flipped *anywhere* in a
+/// valid frame — header or payload, either codec — must never panic
+/// the decoders. Header corruption errors (pinned by the test above);
+/// a payload flip may legitimately decode (f32 bit flips are
+/// undetectable without a checksum) but must return cleanly either
+/// way. `check` turns any panic into a replayable failure.
+#[test]
+fn prop_single_byte_mutations_never_panic_the_decoder() {
+    check("wire single-byte mutation robustness", 120, |g| {
+        let upload = match g.usize_in(0, 3) {
+            0 => ClientUpload::Sketch(random_sketch(g)),
+            1 => ClientUpload::Sparse(random_sparse(g)),
+            _ => ClientUpload::Dense(g.vec_f32(1, 500, -10.0, 10.0)),
+        };
+        let frame = if g.bool() {
+            encode_upload(&upload, &F32LE)
+        } else {
+            encode_upload(&upload, &F16LE)
+        };
+        let mut bad = frame;
+        let at = g.usize_in(0, bad.len());
+        bad[at] ^= 1 << g.usize_in(0, 8);
+        let _ = decode_upload(&bad);
+        let _ = decode_update(&bad);
+        if let Ok(parsed) = Frame::parse(&bad) {
+            // Whatever still parses must survive validation against
+            // specs it does and does not match.
+            let _ = UploadSpec::Dense { dim: 100 }.validate_frame(&parsed);
+            let _ = UploadSpec::Sketch { rows: 3, cols: 128, dim: 100, seed: 1 }
+                .validate_frame(&parsed);
+        }
+    });
+}
+
+/// Decode robustness, half two: arbitrary byte strings — pure noise,
+/// and the same noise dressed in a well-formed header prefix so the
+/// body parsers (not just the magic check) are exercised — must be
+/// handled without panicking. Shape fields here are attacker-chosen
+/// u64s, so this is where oversize-claim arithmetic would overflow if
+/// the parser trusted them.
+#[test]
+fn prop_random_byte_strings_never_panic_the_decoder() {
+    check("wire random-bytes robustness", 200, |g| {
+        let len = g.usize_in(0, 600);
+        let mut bytes = Vec::with_capacity(len + 8);
+        while bytes.len() < len {
+            bytes.extend_from_slice(&g.u64().to_le_bytes());
+        }
+        bytes.truncate(len);
+        let _ = decode_upload(&bytes);
+        if bytes.len() >= HEADER_LEN {
+            bytes[..4].copy_from_slice(&MAGIC);
+            bytes[4] = VERSION;
+            bytes[5] = g.usize_in(0, 4) as u8; // codec id, sometimes invalid
+            bytes[6] = g.usize_in(0, 5) as u8; // kind tag, sometimes invalid
+            bytes[7] = 0;
+            if let Ok(parsed) = Frame::parse(&bytes) {
+                let _ = UploadSpec::Dense { dim: 64 }.validate_frame(&parsed);
+            }
+            let _ = decode_upload(&bytes);
+            let _ = decode_update(&bytes);
+        }
     });
 }
 
