@@ -306,6 +306,63 @@ fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
     Ok(results)
 }
 
+/// Frame-absorb kernels: the simd dispatch vs its always-compiled
+/// scalar twin over a dense 4M-value payload, for both wire codecs —
+/// the `dst += w * decode(bytes)` walk that every zero-copy absorb
+/// rides. With the `simd` feature off both rows run the scalar code;
+/// with it on the spread is the SSE2 win (f16le also folds the
+/// lane-wise f16→f32 widening in). Bits are identical either way.
+fn absorb_kernels() -> Vec<BenchResult> {
+    use fetchsgd::serialize::le::extend_f32_le;
+    use fetchsgd::util::simd::{self, scalar};
+    use fetchsgd::wire::codec::f32_to_f16_bits;
+
+    const N: usize = 1 << 22;
+    let vals: Vec<f32> = (0..N).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut f32bytes = Vec::with_capacity(N * 4);
+    extend_f32_le(&mut f32bytes, &vals);
+    let mut f16bytes = Vec::with_capacity(N * 2);
+    for &v in &vals {
+        f16bytes.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+    let mut dst = vec![0f32; N];
+    let mut results = Vec::new();
+    let mut rates: Vec<(&str, f64, f64)> = Vec::new();
+    {
+        let r = bench_throughput("absorb 4M f32le DISPATCH", 1, 6, N as u64, || {
+            simd::axpy_f32_le(&f32bytes, 0.01, &mut dst)
+        });
+        let disp = N as f64 / r.mean_s;
+        results.push(r);
+        let r = bench_throughput("absorb 4M f32le SCALAR", 1, 6, N as u64, || {
+            scalar::axpy_f32_le(&f32bytes, 0.01, &mut dst)
+        });
+        rates.push(("f32le", disp, N as f64 / r.mean_s));
+        results.push(r);
+    }
+    {
+        let r = bench_throughput("absorb 4M f16le DISPATCH", 1, 6, N as u64, || {
+            simd::axpy_f16_le(&f16bytes, 0.01, &mut dst)
+        });
+        let disp = N as f64 / r.mean_s;
+        results.push(r);
+        let r = bench_throughput("absorb 4M f16le SCALAR", 1, 6, N as u64, || {
+            scalar::axpy_f16_le(&f16bytes, 0.01, &mut dst)
+        });
+        rates.push(("f16le", disp, N as f64 / r.mean_s));
+        results.push(r);
+    }
+    for (codec, disp, scal) in rates {
+        eprintln!(
+            "  {codec:<6} dispatch {:>7.1} Mval/s  scalar {:>7.1} Mval/s  ratio {:.2}x",
+            disp / 1e6,
+            scal / 1e6,
+            disp / scal
+        );
+    }
+    results
+}
+
 /// Relay fan-out: a flat served round vs a 2-level tree (2 relays) at
 /// downstream fan-out 4 and 16, over loopback TCP. The wall clock
 /// tracks what the extra hop costs; the `elements` field rides along
@@ -505,6 +562,9 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!("== wire codec throughput (encode/decode, dense 4M-value payload) ==");
     results.extend(codec_throughput());
+
+    eprintln!("== absorb kernels (simd dispatch vs scalar twin, both codecs) ==");
+    results.extend(absorb_kernels());
 
     let dir = std::path::PathBuf::from("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -94,6 +94,52 @@ fn main() {
         }));
     }
 
+    // encode hashing: the simd dispatch vs its always-compiled scalar
+    // twin, measured side by side in the same run. With the `simd`
+    // feature off both rows run the scalar code (they should read
+    // equal); with it on the spread is what the SSE2 multiply-shift
+    // hashing and blocked kernels buy. Bits are identical either way —
+    // that is `prop_simd_dispatch_matches_scalar_twin_bitwise`'s job.
+    {
+        use fetchsgd::hashing::SketchHasher;
+        use fetchsgd::util::simd::{self, scalar};
+        let d = 1_000_000;
+        let cols = 16384usize;
+        let g = random_vec(d, 21);
+        let hasher = SketchHasher::new(1, cols, 7).unwrap();
+        let h = hasher.row(0);
+        let shift = 32 - (cols as u32).trailing_zeros();
+        let mut row = vec![0f32; cols];
+        results.push(bench_throughput(
+            &format!("encode hash+scatter d={d} DISPATCH (1x{cols})"),
+            2,
+            8,
+            d as u64,
+            || simd::accumulate_row(&mut row, h, shift, &g, 1.0),
+        ));
+        results.push(bench_throughput(
+            &format!("encode hash+scatter d={d} SCALAR (1x{cols})"),
+            2,
+            8,
+            d as u64,
+            || scalar::accumulate_row(&mut row, h, shift, &g, 1.0),
+        ));
+        // The dense linear kernel under every sketch-space merge.
+        let n = 5 * cols;
+        let src = random_vec(n, 23);
+        let mut dst = vec![0f32; n];
+        results.push(bench_throughput(
+            &format!("axpy {n} DISPATCH"),
+            2,
+            20,
+            n as u64,
+            || simd::axpy(&mut dst, &src, 0.01),
+        ));
+        results.push(bench_throughput(&format!("axpy {n} SCALAR"), 2, 20, n as u64, || {
+            scalar::axpy(&mut dst, &src, 0.01)
+        }));
+    }
+
     // row-strip-parallel shard reduce: the round pipeline's fan-in of
     // MAX_SHARDS accumulators, sequential vs striped (one strip per
     // table row ⇒ up to `rows` workers). Bits are identical at any

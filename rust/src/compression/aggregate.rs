@@ -76,6 +76,26 @@ use crate::wire::{Body, Frame, F32LE};
 /// core count so the reduction tree is machine-invariant.
 pub const MAX_SHARDS: usize = 16;
 
+/// Ceiling for the *adaptive* shard layout
+/// ([`PipelineOptions::adaptive_shards`]): the controller may grow a
+/// round's shard count past [`MAX_SHARDS`] (that bound keeps the
+/// *default* layout machine-invariant; the adaptive layout is
+/// explicitly allowed to drift), but never past this — the fan-in cost
+/// and scratch memory stay bounded however hot contention runs.
+pub const ADAPTIVE_MAX_SHARDS: usize = 64;
+
+/// Adaptive controller thresholds, in lock stalls per absorbed upload:
+/// above the hot rate the layout doubles (one boost step per round, up
+/// to [`ADAPTIVE_MAX_BOOST`] doublings), below the cool rate it halves
+/// back toward the default. The hysteresis band between them keeps the
+/// layout stable under ordinary jitter.
+const ADAPTIVE_HOT_STALL_RATE: f64 = 0.25;
+const ADAPTIVE_COOL_STALL_RATE: f64 = 0.05;
+
+/// Max doublings above the default layout: `16 << 2 = 64 =`
+/// [`ADAPTIVE_MAX_SHARDS`].
+const ADAPTIVE_MAX_BOOST: u32 = 2;
+
 /// Cells per strip when the *dense* shard reduction is parallelized
 /// (sketch reductions strip by table row instead). A pure function of
 /// nothing — the dense strip partition depends only on the accumulator
@@ -308,6 +328,13 @@ impl RoundAccum {
 /// `((s0 + s1) + s2) + …` exactly as sequential absorbs would, so the
 /// result is bitwise identical at any worker count (including 1).
 pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> Result<()> {
+    reduce_shards_pinned(shards, parallelism, false)
+}
+
+/// [`reduce_shards_in_place`] with optional core pinning for the strip
+/// workers ([`PipelineOptions::pin_shards`]); pinning is a placement
+/// hint only and never changes bits.
+fn reduce_shards_pinned(shards: &mut [RoundAccum], parallelism: usize, pin: bool) -> Result<()> {
     if shards.is_empty() {
         bail!("reduce_shards_in_place: no shards");
     }
@@ -340,7 +367,7 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> 
                 let cols = base.cols();
                 let refs = &refs;
                 // One strip per table row; workers fold disjoint rows.
-                parallel_strips(base.table_mut(), cols, threads, &|row, dst| {
+                parallel_strips(base.table_mut(), cols, threads, pin, &|row, dst| {
                     for sh in refs {
                         sh.add_rows_to(dst, row..row + 1);
                     }
@@ -366,7 +393,7 @@ pub fn reduce_shards_in_place(shards: &mut [RoundAccum], parallelism: usize) -> 
                 }
             } else {
                 let refs = &refs;
-                parallel_strips(base, DENSE_REDUCE_STRIP, threads, &|strip, dst| {
+                parallel_strips(base, DENSE_REDUCE_STRIP, threads, pin, &|strip, dst| {
                     let start = strip * DENSE_REDUCE_STRIP;
                     for sh in refs {
                         kernels::add(dst, &sh[start..start + dst.len()]);
@@ -409,6 +436,18 @@ pub fn reduce_shards_tree(
     parallelism: usize,
     spares: &mut Vec<RoundAccum>,
 ) -> Result<RoundAccum> {
+    reduce_shards_tree_pinned(accs, tiers, parallelism, false, spares)
+}
+
+/// [`reduce_shards_tree`] with optional core pinning for the strip
+/// workers inside each fold; a placement hint only, never bits.
+fn reduce_shards_tree_pinned(
+    accs: Vec<RoundAccum>,
+    tiers: &[usize],
+    parallelism: usize,
+    pin: bool,
+    spares: &mut Vec<RoundAccum>,
+) -> Result<RoundAccum> {
     if tiers.iter().any(|&n| n == 0) {
         bail!("tier fan-outs must be nonzero, got {tiers:?}");
     }
@@ -418,7 +457,7 @@ pub fn reduce_shards_tree(
     }
     if tiers.len() <= 1 {
         let mut shards = accs;
-        reduce_shards_in_place(&mut shards, parallelism)?;
+        reduce_shards_pinned(&mut shards, parallelism, pin)?;
         let merged = shards.swap_remove(0);
         spares.extend(shards);
         return Ok(merged);
@@ -432,9 +471,9 @@ pub fn reduce_shards_tree(
     }
     let mut heads = Vec::with_capacity(n1);
     for g in groups {
-        heads.push(reduce_shards_tree(g, &tiers[1..], parallelism, spares)?);
+        heads.push(reduce_shards_tree_pinned(g, &tiers[1..], parallelism, pin, spares)?);
     }
-    reduce_shards_in_place(&mut heads, parallelism)?;
+    reduce_shards_pinned(&mut heads, parallelism, pin)?;
     let merged = heads.swap_remove(0);
     spares.extend(heads);
     Ok(merged)
@@ -449,6 +488,7 @@ fn parallel_strips(
     dst: &mut [f32],
     strip_len: usize,
     threads: usize,
+    pin: bool,
     fold: &(dyn Fn(usize, &mut [f32]) + Sync),
 ) {
     let strips: Vec<(usize, &mut [f32])> = dst.chunks_mut(strip_len).enumerate().collect();
@@ -465,8 +505,13 @@ fn parallel_strips(
         per_worker[j % threads].push(s);
     }
     std::thread::scope(|scope| {
-        for list in per_worker {
+        for (wi, list) in per_worker.into_iter().enumerate() {
             scope.spawn(move || {
+                if pin {
+                    // Placement hint only: worker wi's strip set is
+                    // already fixed, pinning just keeps it on one core.
+                    crate::util::affinity::pin_current_thread(wi);
+                }
                 for (i, strip) in list {
                     fold(i, strip);
                 }
@@ -504,6 +549,29 @@ pub struct PipelineOptions {
     /// with the product, and rounds with fewer slots than leaves are
     /// rejected (a capped layout would break the tree shape).
     pub reduce_tiers: Vec<usize>,
+    /// Opt-in self-sizing of the shard layout from the previous rounds'
+    /// [`AbsorbStats::lock_stalls`]: when stalls run hot the next
+    /// round's shard count doubles (up to `min(slots,`
+    /// [`ADAPTIVE_MAX_SHARDS`]`)`), decaying back toward the default
+    /// [`shard_count`] layout when contention subsides; every layout
+    /// change is logged with the stall rate that drove it. Only applies
+    /// when nothing else pins the layout — a `shard_override` or
+    /// non-empty `reduce_tiers` wins, and the controller stays inert.
+    /// Off by default, deliberately: the shard count *is* the
+    /// floating-point reduction tree, so two runs only merge
+    /// bitwise-identically if their stall history matches. The
+    /// determinism matrix runs with this off, and any run meant to be
+    /// bitwise-comparable across machines or topologies must keep it
+    /// off.
+    pub adaptive_shards: bool,
+    /// Opt-in shard→core pinning: the row-strip reduce workers (and the
+    /// engine's absorb workers) pin themselves round-robin to cores via
+    /// [`crate::util::affinity`], so the accumulator strips a worker
+    /// folds stay in one cache domain. Purely a placement hint — which
+    /// worker folds which strip is already fixed, so bits never depend
+    /// on this — and best-effort: a failed affinity call (non-Linux, or
+    /// a container cpuset that refuses) is silently ignored.
+    pub pin_shards: bool,
 }
 
 /// The one round-aggregation pipeline, shared by the in-process engine
@@ -526,11 +594,16 @@ pub struct PipelineOptions {
 pub struct RoundPipeline {
     opts: PipelineOptions,
     pool: Vec<RoundAccum>,
+    /// Adaptive layout state: how many doublings above the default
+    /// [`shard_count`] layout the next round will use. Stays 0 unless
+    /// [`PipelineOptions::adaptive_shards`] is on and the closed
+    /// rounds' stall rates have driven it up.
+    adaptive_boost: u32,
 }
 
 impl RoundPipeline {
     pub fn new(opts: PipelineOptions) -> RoundPipeline {
-        RoundPipeline { opts, pool: Vec::new() }
+        RoundPipeline { opts, pool: Vec::new(), adaptive_boost: 0 }
     }
 
     pub fn options(&self) -> &PipelineOptions {
@@ -572,6 +645,14 @@ impl RoundPipeline {
             leaves
         } else if self.opts.shard_override > 0 {
             self.opts.shard_override.min(weights.len())
+        } else if self.opts.adaptive_shards {
+            // Self-sizing layout: start from the default and apply the
+            // boost the closed rounds' stall rates have accumulated
+            // (`observe_absorb`), capped by the slot count (a shard
+            // chain cannot be emptier than empty) and the adaptive
+            // ceiling.
+            let base = shard_count(weights.len());
+            (base << self.adaptive_boost).min(weights.len()).min(ADAPTIVE_MAX_SHARDS)
         } else {
             shard_count(weights.len())
         };
@@ -621,6 +702,7 @@ impl RoundPipeline {
     /// every shard still goes back to the pool (they reset on reuse), so
     /// an aborted round costs no reallocation.
     pub fn finish(&mut self, round: RoundInFlight) -> Result<RoundAccum> {
+        self.observe_absorb(round.absorb_stats(), round.absorbed());
         if !round.is_complete() {
             let (absorbed, slots, parked) =
                 (round.absorbed(), round.slots(), round.buffered());
@@ -639,14 +721,50 @@ impl RoundPipeline {
     /// set, and park the drained tail shards in the pool.
     fn reduce_round(&mut self, mut shards: Vec<RoundAccum>) -> Result<RoundAccum> {
         let par = resolve_parallelism(self.opts.reduce_parallelism);
+        let pin = self.opts.pin_shards;
         if !self.opts.reduce_tiers.is_empty() {
             let tiers = self.opts.reduce_tiers.clone();
-            return reduce_shards_tree(shards, &tiers, par, &mut self.pool);
+            return reduce_shards_tree_pinned(shards, &tiers, par, pin, &mut self.pool);
         }
-        reduce_shards_in_place(&mut shards, par)?;
+        reduce_shards_pinned(&mut shards, par, pin)?;
         let merged = shards.swap_remove(0);
         self.pool.extend(shards);
         Ok(merged)
+    }
+
+    /// Feed one closing round's contention counters into the adaptive
+    /// shard controller. A no-op unless
+    /// [`PipelineOptions::adaptive_shards`] is on and nothing else pins
+    /// the layout (`shard_override` / `reduce_tiers` win). One boost
+    /// step per round at most, with hysteresis between the hot and cool
+    /// stall-rate thresholds; every change is logged with the rate that
+    /// drove it so the decision trail is auditable next to the
+    /// `chosen_shards` / `lock_stalls` pair in the round JSONL.
+    fn observe_absorb(&mut self, stats: AbsorbStats, absorbed: usize) {
+        if !self.opts.adaptive_shards
+            || self.opts.shard_override != 0
+            || !self.opts.reduce_tiers.is_empty()
+            || absorbed == 0
+        {
+            return;
+        }
+        let rate = stats.lock_stalls as f64 / absorbed as f64;
+        let old = self.adaptive_boost;
+        if rate > ADAPTIVE_HOT_STALL_RATE && self.adaptive_boost < ADAPTIVE_MAX_BOOST {
+            self.adaptive_boost += 1;
+        } else if rate < ADAPTIVE_COOL_STALL_RATE && self.adaptive_boost > 0 {
+            self.adaptive_boost -= 1;
+        }
+        if self.adaptive_boost != old {
+            eprintln!(
+                "[pipeline] adaptive shards: stall rate {rate:.3} \
+                 ({} stalls / {absorbed} uploads) -> boost {old} -> {} \
+                 ({}x the default layout next round, ceiling {ADAPTIVE_MAX_SHARDS})",
+                stats.lock_stalls,
+                self.adaptive_boost,
+                1usize << self.adaptive_boost,
+            );
+        }
     }
 
     /// Finalize-at-quorum: close the round with only the slots the
@@ -690,6 +808,7 @@ impl RoundPipeline {
         if membership.is_full() {
             return self.finish(round);
         }
+        self.observe_absorb(round.absorb_stats(), round.absorbed());
         for slot in 0..round.slots() {
             if round.seen_slot(slot) != membership.is_arrived(slot) {
                 let (offered, arrived) = (round.seen_slot(slot), membership.is_arrived(slot));
@@ -730,6 +849,7 @@ impl RoundPipeline {
     /// relay forwards is the same pure function of (weights, arrived
     /// set) the root would have computed over those slots itself.
     pub fn finalize_subtree(&mut self, mut round: RoundInFlight) -> Result<Option<RoundAccum>> {
+        self.observe_absorb(round.absorb_stats(), round.absorbed());
         if let Err(e) = round.drain_parked() {
             self.pool.extend(round.into_accums());
             return Err(e);
@@ -800,6 +920,12 @@ pub struct AbsorbStats {
     /// frame bytes on the wire path, idealized payload bytes for
     /// in-memory uploads. Zero means every upload absorbed on arrival.
     pub parked_bytes: u64,
+    /// Shard accumulators the round actually ran with — the default
+    /// [`shard_count`] layout unless `shard_override`/`reduce_tiers`
+    /// pinned it or the adaptive controller resized it. Surfaced so
+    /// adaptive-layout decisions are auditable in the round JSONL next
+    /// to the stall counter that drives them.
+    pub chosen_shards: u64,
 }
 
 /// One shard's absorb state — accumulator, in-shard progress, and
@@ -881,6 +1007,7 @@ impl RoundInFlight {
         AbsorbStats {
             lock_stalls: self.lock_stalls.load(Ordering::SeqCst),
             parked_bytes: self.parked_bytes.load(Ordering::SeqCst),
+            chosen_shards: self.shards.len() as u64,
         }
     }
 
@@ -1363,6 +1490,70 @@ mod tests {
         for (x, y) in a[0].as_dense().unwrap().iter().zip(b[0].as_dense().unwrap()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn adaptive_shard_controller_sizes_from_stall_rate() {
+        let spec = sketch_spec();
+        let slots = 40usize;
+        let mut pl = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: 1,
+            adaptive_shards: true,
+            ..Default::default()
+        });
+        // No stall history → the default layout.
+        let r = pl.begin(&spec, vec![1.0; slots]).unwrap();
+        assert_eq!(r.absorb_stats().chosen_shards as usize, shard_count(slots));
+        pl.abort(r);
+        // Hot stall rate (30/40 > 0.25) doubles the layout one step per
+        // closed round, clamping at min(slots, ADAPTIVE_MAX_SHARDS).
+        let hot = AbsorbStats { lock_stalls: 30, ..Default::default() };
+        pl.observe_absorb(hot, slots);
+        let r = pl.begin(&spec, vec![1.0; slots]).unwrap();
+        assert_eq!(r.absorb_stats().chosen_shards as usize, 2 * shard_count(slots));
+        pl.abort(r);
+        for _ in 0..4 {
+            pl.observe_absorb(hot, slots);
+        }
+        let r = pl.begin(&spec, vec![1.0; slots]).unwrap();
+        assert_eq!(
+            r.absorb_stats().chosen_shards as usize,
+            slots.min(ADAPTIVE_MAX_SHARDS),
+            "boost saturates at the ceiling"
+        );
+        // A boosted round still completes and reduces normally.
+        for slot in 0..slots {
+            let g: Vec<f32> = (0..200).map(|i| (slot * 200 + i) as f32 * 0.01).collect();
+            r.offer(
+                slot,
+                ClientUpload::Sketch(CountSketch::encode(3, 128, 11, &g).unwrap()),
+            )
+            .unwrap();
+        }
+        let merged = pl.finish(r).unwrap();
+        assert_eq!(merged.absorbed(), slots);
+        pl.recycle(merged);
+        // Cool stall rate decays the boost back to the default layout.
+        for _ in 0..4 {
+            pl.observe_absorb(AbsorbStats::default(), slots);
+        }
+        let r = pl.begin(&spec, vec![1.0; slots]).unwrap();
+        assert_eq!(r.absorb_stats().chosen_shards as usize, shard_count(slots));
+        pl.abort(r);
+        // A pinned layout keeps the controller inert however hot the
+        // counters run.
+        let mut pinned = RoundPipeline::new(PipelineOptions {
+            reduce_parallelism: 1,
+            shard_override: 4,
+            adaptive_shards: true,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            pinned.observe_absorb(AbsorbStats { lock_stalls: 1000, ..Default::default() }, slots);
+        }
+        let r = pinned.begin(&spec, vec![1.0; slots]).unwrap();
+        assert_eq!(r.absorb_stats().chosen_shards, 4);
+        pinned.abort(r);
     }
 
     #[test]
@@ -1883,6 +2074,7 @@ mod tests {
             reduce_parallelism: 1,
             shard_override: 0,
             reduce_tiers: vec![2, 2],
+            ..Default::default()
         };
         // Fewer slots than leaves cannot fill the layout.
         let mut pl = RoundPipeline::new(tiered.clone());

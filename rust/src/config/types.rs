@@ -214,6 +214,21 @@ pub struct TrainConfig {
     /// Join/relay mode: initial reconnect backoff in milliseconds;
     /// doubles per consecutive failure, capped at 10 s.
     pub reconnect_backoff_ms: u64,
+    /// Let the round pipeline re-size its absorb shard count between
+    /// rounds from the previous rounds' observed lock contention
+    /// (`compression::aggregate`: stall rate above 25% doubles the
+    /// shard count up to a clamp; under 5% decays it back). Off (the
+    /// default) keeps the fixed auto layout. Conflicts with anything
+    /// that pins the layout: explicit `shards`, `shard_tiers`, or
+    /// `relay_children` (a tree's shard layout *is* its contract).
+    pub adaptive_shards: bool,
+    /// Pin absorb/reduce workers to cores (round-robin by worker
+    /// index, Linux `sched_setaffinity`; best-effort elsewhere and
+    /// under restrictive cpusets). A placement hint only — results are
+    /// bitwise identical either way. Requires some parallelism to
+    /// exist: it is an error to combine with `parallelism=1` and
+    /// `reduce_parallelism=1`.
+    pub pin_shards: bool,
 }
 
 impl TrainConfig {
@@ -256,7 +271,48 @@ impl TrainConfig {
             relay_listen: None,
             reconnect_attempts: 0,
             reconnect_backoff_ms: 200,
+            adaptive_shards: false,
+            pin_shards: false,
         }
+    }
+
+    /// The single validation point for the absorb-pipeline knobs
+    /// (`adaptive_shards` / `pin_shards`), run eagerly at JSON parse
+    /// and override time so nonsense combinations fail loudly before
+    /// any round starts.
+    pub fn validate_pipeline_knobs(&self) -> Result<()> {
+        if self.adaptive_shards {
+            if self.shards > 0 {
+                bail!(
+                    "adaptive_shards=true conflicts with shards={}: an explicit shard count \
+                     pins the fold layout, which is exactly what the adaptive sizer would \
+                     change. Drop one of the two knobs.",
+                    self.shards
+                );
+            }
+            if !self.shard_tiers.is_empty() {
+                bail!(
+                    "adaptive_shards=true conflicts with shard_tiers: a tier layout pins the \
+                     reduction tree shape. Drop one of the two knobs."
+                );
+            }
+            if self.relay_children > 0 {
+                bail!(
+                    "adaptive_shards=true conflicts with relay_children={}: a relay tree's \
+                     shard layout (one shard per child) is part of the tree contract and \
+                     cannot self-size. Drop one of the two knobs.",
+                    self.relay_children
+                );
+            }
+        }
+        if self.pin_shards && self.parallelism == 1 && self.reduce_parallelism == 1 {
+            bail!(
+                "pin_shards=true has nothing to pin when parallelism=1 and \
+                 reduce_parallelism=1: both pools are explicitly single-threaded. Raise one \
+                 of them (or 0 = auto) or drop pin_shards."
+            );
+        }
+        Ok(())
     }
 
     /// The quorum policy these knobs describe; the single validation
@@ -325,8 +381,11 @@ impl TrainConfig {
             relay_listen: parse_wire(v.opt_str("relay_listen", "off")),
             reconnect_attempts: v.opt_usize("reconnect_attempts", 0),
             reconnect_backoff_ms: v.opt_f64("reconnect_backoff_ms", 200.0) as u64,
+            adaptive_shards: v.opt_bool("adaptive_shards", false),
+            pin_shards: v.opt_bool("pin_shards", false),
         };
         cfg.quorum_policy()?;
+        cfg.validate_pipeline_knobs()?;
         Ok(cfg)
     }
 
@@ -397,6 +456,8 @@ impl TrainConfig {
                 "relay_listen" => self.relay_listen = parse_wire(val),
                 "reconnect_attempts" => self.reconnect_attempts = val.parse()?,
                 "reconnect_backoff_ms" => self.reconnect_backoff_ms = val.parse()?,
+                "adaptive_shards" => self.adaptive_shards = val.parse()?,
+                "pin_shards" => self.pin_shards = val.parse()?,
                 "scale.num_clients" => self.scale.num_clients = val.parse()?,
                 "scale.samples_per_client" => self.scale.samples_per_client = val.parse()?,
                 "scale.writer_mean_size" => self.scale.writer_mean_size = val.parse()?,
@@ -412,6 +473,7 @@ impl TrainConfig {
             }
         }
         self.quorum_policy()?;
+        self.validate_pipeline_knobs()?;
         Ok(())
     }
 
@@ -624,6 +686,53 @@ mod tests {
         assert_eq!(cfg.relay_listen.as_deref(), Some("tcp:127.0.0.1:9001"));
         assert_eq!(cfg.reconnect_attempts, 3);
         assert_eq!(cfg.reconnect_backoff_ms, 100);
+    }
+
+    #[test]
+    fn pipeline_knobs_parse_validate_and_reject_nonsense_combos() {
+        let v = parse(CFG).unwrap();
+        let mut cfg = TrainConfig::from_json(&v).unwrap();
+        assert!(!cfg.adaptive_shards, "fixed layout by default");
+        assert!(!cfg.pin_shards, "no pinning by default");
+        cfg.apply_overrides(&["adaptive_shards=true".into(), "pin_shards=true".into()]).unwrap();
+        assert!(cfg.adaptive_shards);
+        assert!(cfg.pin_shards);
+        // Anything that pins the shard layout conflicts with the
+        // adaptive sizer, loudly.
+        let err = cfg.apply_overrides(&["shards=3".into()]).unwrap_err().to_string();
+        assert!(err.contains("adaptive_shards") && err.contains("shards=3"), "{err}");
+        cfg.shards = 0;
+        let err = cfg.apply_overrides(&["shard_tiers=2x2".into()]).unwrap_err().to_string();
+        assert!(err.contains("shard_tiers"), "{err}");
+        cfg.shard_tiers.clear();
+        let err = cfg.apply_overrides(&["relay_children=2".into()]).unwrap_err().to_string();
+        assert!(err.contains("relay_children"), "{err}");
+        cfg.relay_children = 0;
+        // Pinning with both pools explicitly single-threaded is an
+        // error; auto (0) or >1 on either pool is fine.
+        let err = cfg
+            .apply_overrides(&["parallelism=1".into(), "reduce_parallelism=1".into()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pin_shards"), "{err}");
+        cfg.apply_overrides(&["parallelism=0".into(), "reduce_parallelism=1".into()]).unwrap();
+        cfg.apply_overrides(&["adaptive_shards=false".into(), "pin_shards=false".into()])
+            .unwrap();
+        // JSON path accepts the same keys and runs the same validation.
+        let json = CFG.replace(
+            "\"eval_every\": 10",
+            "\"eval_every\": 10, \"adaptive_shards\": true, \"pin_shards\": true",
+        );
+        let v = parse(&json).unwrap();
+        let cfg = TrainConfig::from_json(&v).unwrap();
+        assert!(cfg.adaptive_shards && cfg.pin_shards);
+        let json = CFG.replace(
+            "\"eval_every\": 10",
+            "\"eval_every\": 10, \"adaptive_shards\": true, \"shards\": 2",
+        );
+        let v = parse(&json).unwrap();
+        let err = TrainConfig::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("adaptive_shards"), "{err}");
     }
 
     #[test]

@@ -260,11 +260,28 @@ pub fn run_round(
         out
     };
 
+    // Placement hint only (`pin_shards`): worker t pins itself to core
+    // t before pulling slots, so the shard accumulators it folds into
+    // stay in one cache domain. Never affects which bits come out —
+    // slot→shard and fold order are fixed regardless of where a worker
+    // runs — and the single-threaded path never pins (pinning the
+    // caller's thread would outlive the round).
+    let pin_workers = pipeline.options().pin_shards;
     let worker_outs: Vec<WorkerOut> = if threads <= 1 {
         vec![run_worker()]
     } else {
         std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..threads).map(|_| scope.spawn(&run_worker)).collect();
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let run_worker = &run_worker;
+                    scope.spawn(move || {
+                        if pin_workers {
+                            crate::util::affinity::pin_current_thread(t);
+                        }
+                        run_worker()
+                    })
+                })
+                .collect();
             handles
                 .into_iter()
                 .map(|h| h.join().expect("round worker panicked"))

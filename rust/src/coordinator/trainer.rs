@@ -146,6 +146,8 @@ impl Trainer {
             reduce_parallelism: reduce,
             shard_override: cfg.shards,
             reduce_tiers: cfg.shard_tiers.clone(),
+            adaptive_shards: cfg.adaptive_shards,
+            pin_shards: cfg.pin_shards,
         });
         Ok(Trainer {
             cfg,
@@ -324,6 +326,7 @@ impl Trainer {
             transport_bytes: 0,
             absorb_stalls: out.absorb_stats.lock_stalls,
             parked_bytes: out.absorb_stats.parked_bytes,
+            chosen_shards: out.absorb_stats.chosen_shards as usize,
             participants: mem.participants,
             dropped_slots: mem.dropped_slots,
             retried_slots: mem.retried_slots,

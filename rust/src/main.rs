@@ -42,7 +42,17 @@ USAGE:
   fetchsgd serve --listen tcp:HOST:PORT|uds:/path.sock [--workers N]
             [--config CFG.json] [key=value ...]
             (serve knobs: serve_read_timeout_s=S serve_accept_timeout_s=S
-             serve_max_msg=BYTES reduce_parallelism=N)
+             serve_max_msg=BYTES reduce_parallelism=N
+             absorb knobs, train and serve alike:
+             adaptive_shards=true  re-size the absorb shard count from
+                                   observed lock contention; conflicts
+                                   with shards= / shard_tiers= /
+                                   relay_children= (those pin the fold
+                                   layout); default false
+             pin_shards=true      pin absorb/reduce workers to cores
+                                   (placement hint, bitwise-neutral);
+                                   needs parallelism or
+                                   reduce_parallelism != 1)
   fetchsgd join --connect tcp:HOST:PORT|uds:/path.sock
             [--config CFG.json] [key=value ...]
             (reconnect knobs, join and relay alike:

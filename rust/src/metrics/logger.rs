@@ -38,6 +38,11 @@ pub struct RoundRecord {
     /// slot on its shard (out-of-order arrivals that could not take the
     /// zero-copy path). 0 when every arrival folded in order.
     pub parked_bytes: u64,
+    /// Shard count the absorb pipeline actually ran with this round.
+    /// Interesting when the adaptive controller is on (the count moves
+    /// with observed lock contention); 0 for in-process runs that never
+    /// report it.
+    pub chosen_shards: usize,
     /// Slots whose upload was actually absorbed this round — the
     /// cohort's arrived subset (equal to the planned cohort size unless
     /// quorum rounds dropped stragglers or faulted peers).
@@ -119,6 +124,11 @@ impl MetricsLogger {
             fields.push(("absorb_stalls", num(r.absorb_stalls as f64)));
             fields.push(("parked_bytes", num(r.parked_bytes as f64)));
         }
+        // Absorb-shard layout: emitted whenever the round reported one,
+        // so adaptive runs show the controller's sizing trace inline.
+        if r.chosen_shards > 0 {
+            fields.push(("chosen_shards", num(r.chosen_shards as f64)));
+        }
         // Cohort membership: always reported, so participation sweeps
         // (paper-style 0.1% cohorts) can be read straight off the log.
         fields.push(("participants", num(r.participants as f64)));
@@ -179,6 +189,7 @@ mod tests {
                 transport_bytes: 180,
                 absorb_stalls: 4,
                 parked_bytes: 264,
+                chosen_shards: 8,
                 participants: 3,
                 dropped_slots: 1,
                 retried_slots: 2,
@@ -200,6 +211,7 @@ mod tests {
         // absorb-contention counters land next to the transport bytes
         assert!((v.req_f64("absorb_stalls").unwrap() - 4.0).abs() < 1e-9);
         assert!((v.req_f64("parked_bytes").unwrap() - 264.0).abs() < 1e-9);
+        assert!((v.req_f64("chosen_shards").unwrap() - 8.0).abs() < 1e-9);
         // cohort membership lands next to the byte accounting
         assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
         assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
@@ -226,6 +238,7 @@ mod tests {
                 transport_bytes: 0,
                 absorb_stalls: 0,
                 parked_bytes: 0,
+                chosen_shards: 0,
                 participants: 1,
                 dropped_slots: 0,
                 retried_slots: 0,

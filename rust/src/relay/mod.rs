@@ -194,6 +194,7 @@ struct PendingRecord {
     dropped_slots: usize,
     absorb_stalls: u64,
     parked_bytes: u64,
+    chosen_shards: usize,
     /// `upstream_bytes + downstream_bytes` when the subtree round
     /// began; the delta at `RoundEnd` is this tier's transport bytes
     /// for the round.
@@ -250,10 +251,14 @@ impl Relay {
         // mode: one shard chain per relay child, exactly like the
         // relay-mode root — shard k folds child k's merged frame.
         let shard_override = if opts.relay_children > 0 { opts.relay_children } else { 1 };
+        // Relays keep the adaptive controller and pinning off: the
+        // fixed shard layout *is* the tree contract (shard k == child
+        // k), so self-sizing here would change aggregation order.
         let pipeline = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: 1,
             shard_override,
             reduce_tiers: Vec::new(),
+            ..Default::default()
         });
         let logger = MetricsLogger::new(opts.log_path.as_deref())?;
         Ok(Relay {
@@ -418,6 +423,7 @@ impl Relay {
                 dropped_slots: 0,
                 absorb_stalls: 0,
                 parked_bytes: 0,
+                chosen_shards: 0,
                 bytes_marker,
             });
             return Ok(Msg::SubtreeUpload { round, reports: Vec::new(), frame: Vec::new() }
@@ -672,6 +678,7 @@ impl Relay {
             dropped_slots: m - participants,
             absorb_stalls: stats.lock_stalls,
             parked_bytes: stats.parked_bytes,
+            chosen_shards: stats.chosen_shards as usize,
             bytes_marker,
         });
         Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
@@ -980,6 +987,7 @@ impl Relay {
             dropped_slots: m - participants,
             absorb_stalls: stats.lock_stalls,
             parked_bytes: stats.parked_bytes,
+            chosen_shards: stats.chosen_shards as usize,
             bytes_marker,
         });
         Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
@@ -1018,6 +1026,7 @@ impl Relay {
             transport_bytes: transport,
             absorb_stalls: p.absorb_stalls,
             parked_bytes: p.parked_bytes,
+            chosen_shards: p.chosen_shards,
             participants: p.participants,
             dropped_slots: p.dropped_slots,
             retried_slots: 0,

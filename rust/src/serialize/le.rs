@@ -65,25 +65,15 @@ pub fn for_each_f32_le(bytes: &[u8], f: &mut dyn FnMut(f32)) {
 }
 
 /// `dst[i] += weight * decode_f32_le(bytes)[i]` for every `i`, in index
-/// order — the blocked fold the wire absorb path uses. Same per-cell op
-/// in the same order as streaming `for_each_f32_le` through an axpy
-/// closure, so the result is bitwise identical; the fixed-width block
-/// shape (decode 8 lanes, fold 8 lanes) is what the compiler can
-/// vectorize. The caller must have validated `bytes.len() == 4 * dst.len()`.
+/// order — the fold the wire absorb path uses. Forwards to
+/// [`crate::util::simd::axpy_f32_le`] (SSE2 under `--features simd`,
+/// scalar reference otherwise); both perform the same per-cell op in
+/// the same order as streaming `for_each_f32_le` through an axpy
+/// closure, so the result is bitwise identical. The caller must have
+/// validated `bytes.len() == 4 * dst.len()`.
 pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
-    use crate::util::kernels::LANES;
     debug_assert_eq!(bytes.len(), 4 * dst.len());
-    let mut b = bytes.chunks_exact(4 * LANES);
-    let mut d = dst.chunks_exact_mut(LANES);
-    for (bb, db) in b.by_ref().zip(d.by_ref()) {
-        let db: &mut [f32; LANES] = db.try_into().unwrap();
-        for i in 0..LANES {
-            db[i] += weight * f32::from_le_bytes(bb[4 * i..4 * i + 4].try_into().unwrap());
-        }
-    }
-    for (bb, a) in b.remainder().chunks_exact(4).zip(d.into_remainder()) {
-        *a += weight * f32::from_le_bytes(bb.try_into().unwrap());
-    }
+    crate::util::simd::axpy_f32_le(bytes, weight, dst);
 }
 
 /// Walk a little-endian u32 byte slice in place (sparse index arrays).

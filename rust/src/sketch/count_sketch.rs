@@ -125,32 +125,33 @@ impl CountSketch {
     pub fn accumulate_dense(&mut self, g: &[f32], scale: f32) {
         assert_eq!(g.len(), self.dim, "vector dim mismatch");
         let cols = self.cols();
+        let shift = 32 - cols.trailing_zeros();
         for r in 0..self.rows() {
             let row = &mut self.table[r * cols..(r + 1) * cols];
             let h = self.hasher.row(r);
-            let shift = 32 - cols.trailing_zeros();
-            for (i, &gi) in g.iter().enumerate() {
-                if gi == 0.0 {
-                    continue;
-                }
-                let iu = i as u32;
-                let b = (h.a_bucket.wrapping_mul(iu).wrapping_add(h.b_bucket) >> shift) as usize;
-                let sgn_neg = h.a_sign.wrapping_mul(iu).wrapping_add(h.b_sign) >> 31;
-                let signed = if sgn_neg == 0 { gi } else { -gi };
-                row[b] += signed * scale;
-            }
+            // Vectorized multiply-shift hashing with a scalar in-order
+            // scatter (see `util::simd` for the bitwise contract).
+            crate::util::simd::accumulate_row(row, h, shift, g, scale);
         }
     }
 
     /// `self += scale * sv` for a sparse vector.
+    ///
+    /// Same hoisted per-row hash form as [`accumulate_dense`]
+    /// (`RowHash` fetched once per row, zero entries skipped), instead
+    /// of the historical per-(row, element) `bucket_sign` calls. The
+    /// hoist is bitwise-neutral: `(±v) * scale` computes the same bits
+    /// as the old `sgn * v * scale` for every non-NaN `v` (sign flips
+    /// are exact), and a skipped `±0.0` entry contributed exactly
+    /// nothing before (`±0.0 * scale` adds as zero).
     pub fn accumulate_sparse(&mut self, sv: &SparseVec, scale: f32) {
         assert_eq!(sv.dim, self.dim);
         let cols = self.cols();
+        let shift = 32 - cols.trailing_zeros();
         for r in 0..self.rows() {
-            for (&i, &v) in sv.idx.iter().zip(&sv.val) {
-                let (b, sgn) = self.hasher.bucket_sign(r, i);
-                self.table[r * cols + b] += sgn * v * scale;
-            }
+            let row = &mut self.table[r * cols..(r + 1) * cols];
+            let h = self.hasher.row(r);
+            crate::util::simd::accumulate_row_sparse(row, h, shift, &sv.idx, &sv.val, scale);
         }
     }
 
@@ -195,13 +196,12 @@ impl CountSketch {
         self.scale_rows(scale, 0..self.rows());
     }
 
-    /// `self[rows] *= scale` over a strip of rows only.
+    /// `self[rows] *= scale` over a strip of rows only. Cells are
+    /// independent, so the kernelized form cannot reorder anything.
     pub fn scale_rows(&mut self, scale: f32, rows: Range<usize>) {
         debug_assert!(rows.end <= self.rows());
         let cols = self.cols();
-        for a in self.table[rows.start * cols..rows.end * cols].iter_mut() {
-            *a *= scale;
-        }
+        crate::util::kernels::scale(&mut self.table[rows.start * cols..rows.end * cols], scale);
     }
 
     /// Reset to the zero sketch (reuses the allocation).

@@ -112,6 +112,18 @@ pub struct ServeOptions {
     /// pinned to the relay count so the tree's fold order reproduces
     /// the flat server's bits.
     pub relay_children: usize,
+    /// Opt-in self-sizing of the round pipeline's shard layout from
+    /// lock-stall history (see
+    /// [`crate::compression::aggregate::PipelineOptions::adaptive_shards`]).
+    /// Ignored whenever `shards`, `shard_tiers`, or `relay_children`
+    /// pins the layout; off by default because the shard count is the
+    /// reduction tree — runs meant to be bitwise-comparable across
+    /// machines or topologies must keep it off.
+    pub adaptive_shards: bool,
+    /// Opt-in shard→core pinning for the reduce workers (see
+    /// [`crate::compression::aggregate::PipelineOptions::pin_shards`]).
+    /// Placement hint only; never changes bits.
+    pub pin_shards: bool,
 }
 
 impl Default for ServeOptions {
@@ -127,6 +139,8 @@ impl Default for ServeOptions {
             shards: 0,
             shard_tiers: Vec::new(),
             relay_children: 0,
+            adaptive_shards: false,
+            pin_shards: false,
         }
     }
 }
@@ -184,6 +198,10 @@ pub struct RoundStats {
     /// upload arrived ahead of an earlier slot on its shard. Zero when
     /// every arrival took the zero-copy path.
     pub parked_bytes: u64,
+    /// Shard accumulators the round pipeline ran with (fixed layout
+    /// unless `adaptive_shards` resized it; see
+    /// [`crate::compression::aggregate::AbsorbStats::chosen_shards`]).
+    pub chosen_shards: u64,
 }
 
 enum ListenerKind {
@@ -241,10 +259,16 @@ impl RoundServer {
             if opts.relay_children > 0 { opts.relay_children } else { opts.shards };
         let reduce_tiers =
             if opts.relay_children > 0 { Vec::new() } else { opts.shard_tiers.clone() };
+        // The adaptive sizer only engages when nothing pins the layout
+        // (the pipeline enforces the same rule; gating here too keeps
+        // the ServeOptions semantics explicit).
+        let adaptive_shards = opts.adaptive_shards && shard_override == 0 && reduce_tiers.is_empty();
         let pipeline = RoundPipeline::new(PipelineOptions {
             reduce_parallelism: opts.reduce_parallelism,
             shard_override,
             reduce_tiers,
+            adaptive_shards,
+            pin_shards: opts.pin_shards,
         });
         Ok(RoundServer {
             listener,
@@ -817,6 +841,7 @@ impl RoundServer {
             transport_bytes,
             absorb_stalls: absorb.lock_stalls,
             parked_bytes: absorb.parked_bytes,
+            chosen_shards: absorb.chosen_shards,
         })
     }
 
@@ -1204,6 +1229,7 @@ impl RoundServer {
             transport_bytes,
             absorb_stalls: absorb.lock_stalls,
             parked_bytes: absorb.parked_bytes,
+            chosen_shards: absorb.chosen_shards,
         })
     }
 
@@ -1554,6 +1580,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         shards: cfg.shards,
         shard_tiers: cfg.shard_tiers.clone(),
         relay_children: cfg.relay_children,
+        adaptive_shards: cfg.adaptive_shards,
+        pin_shards: cfg.pin_shards,
     };
     let mut server = RoundServer::bind(&ep, opts)?;
     if cfg.relay_children > 0 {
@@ -1618,6 +1646,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             transport_bytes: stats.transport_bytes,
             absorb_stalls: stats.absorb_stalls,
             parked_bytes: stats.parked_bytes,
+            chosen_shards: stats.chosen_shards as usize,
             participants: stats.participants,
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,

@@ -1,0 +1,70 @@
+//! Best-effort thread→core pinning for the absorb/reduce worker pools.
+//!
+//! With `pin_shards` on, each spawned worker pins itself round-robin to
+//! a core so the shard accumulator strips it touches stay in one cache
+//! domain instead of bouncing between whichever cores the scheduler
+//! picks per round. Pinning is strictly a *placement hint*: it never
+//! changes which bits come out (the shard layout and fold order are
+//! fixed elsewhere), so a failed or unsupported affinity call is
+//! silently ignored — workers just run wherever the scheduler puts
+//! them, exactly as before.
+
+/// Pin the calling thread to core `core % available_parallelism`.
+///
+/// Returns whether the affinity syscall succeeded. `false` is not an
+/// error: non-Linux targets always return it, and on Linux a container
+/// cpuset that excludes the requested core rejects the call — callers
+/// must treat the result as informational only.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(core: usize) -> bool {
+    // std already links libc, so declaring the one symbol we need
+    // avoids a crate dependency the offline image doesn't carry.
+    // pid 0 = the calling thread.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let ncores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(1);
+    let cpu = core % ncores;
+    // 16 × u64 = 1024 CPUs, the glibc cpu_set_t size.
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux fallback: no-op, reports failure.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The call must never crash or wedge a thread, whatever the host's
+    // cpuset looks like. The return value is intentionally not pinned:
+    // restricted containers may legitimately reject affinity changes.
+    #[test]
+    fn pinning_is_safe_to_call_from_spawned_threads() {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let _ = pin_current_thread(t);
+                    // thread still does useful work after the call
+                    (0..1000u64).sum::<u64>()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 499500);
+        }
+        // out-of-range cores wrap via modulo rather than failing
+        let _ = pin_current_thread(usize::MAX);
+    }
+}

@@ -1,54 +1,38 @@
-//! Cache-blocked f32 slice kernels for the absorb/reduce hot path.
+//! f32 slice kernels for the absorb/reduce hot path.
 //!
-//! The fixed-width block loops below give the compiler a shape it can
-//! autovectorize (a constant-trip-count inner loop over an array
-//! reference, no bounds checks) while performing exactly the same
-//! per-cell operation in exactly the same order as the scalar `zip`
-//! loops they replace — so the bitwise-determinism contract of
-//! `compression::aggregate` is untouched: within a slice the fold order
-//! is identical, element by element.
+//! These are the historical entry points the accumulate paths call;
+//! since the explicit-SIMD layer landed they are thin forwards into
+//! [`crate::util::simd`], which dispatches to hand-written SSE2 kernels
+//! under `--features simd` and to the scalar reference otherwise. The
+//! bitwise-determinism contract of `compression::aggregate` is
+//! untouched either way: every configuration performs the same per-cell
+//! operation in the same order (see the contract notes in
+//! `util::simd`).
 //!
 //! `add` is kept separate from `axpy` rather than calling
 //! `axpy(dst, src, 1.0)`: the accumulate paths that historically did a
 //! bare `+=` must keep doing a bare `+=`, not a `+ 1.0 *` — we do not
 //! lean on `1.0 * x` being a bitwise identity for every f32.
 
-/// Block width of the inner loops. 8 f32 lanes = one 256-bit vector,
-/// and small enough that the scalar remainder is negligible.
-pub const LANES: usize = 8;
+use crate::util::simd;
+
+/// Block width of the scalar-reference inner loops. 8 f32 lanes = one
+/// 256-bit vector, and small enough that the remainder is negligible.
+pub const LANES: usize = simd::scalar::LANES;
 
 /// `dst[i] += scale * src[i]` for every `i` (in index order).
 pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
-    debug_assert_eq!(dst.len(), src.len());
-    let mut d = dst.chunks_exact_mut(LANES);
-    let mut s = src.chunks_exact(LANES);
-    for (db, sb) in d.by_ref().zip(s.by_ref()) {
-        let db: &mut [f32; LANES] = db.try_into().unwrap();
-        let sb: &[f32; LANES] = sb.try_into().unwrap();
-        for i in 0..LANES {
-            db[i] += scale * sb[i];
-        }
-    }
-    for (a, &b) in d.into_remainder().iter_mut().zip(s.remainder()) {
-        *a += scale * b;
-    }
+    simd::axpy(dst, src, scale)
 }
 
 /// `dst[i] += src[i]` for every `i` (in index order).
 pub fn add(dst: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(dst.len(), src.len());
-    let mut d = dst.chunks_exact_mut(LANES);
-    let mut s = src.chunks_exact(LANES);
-    for (db, sb) in d.by_ref().zip(s.by_ref()) {
-        let db: &mut [f32; LANES] = db.try_into().unwrap();
-        let sb: &[f32; LANES] = sb.try_into().unwrap();
-        for i in 0..LANES {
-            db[i] += sb[i];
-        }
-    }
-    for (a, &b) in d.into_remainder().iter_mut().zip(s.remainder()) {
-        *a += b;
-    }
+    simd::add(dst, src)
+}
+
+/// `dst[i] *= s` for every `i` (cells independent, order-free).
+pub fn scale(dst: &mut [f32], s: f32) {
+    simd::scale(dst, s)
 }
 
 #[cfg(test)]
@@ -84,6 +68,19 @@ mod tests {
                 *a += b;
             }
             assert_eq!(bits(&blocked), bits(&scalar), "n={n}");
+        }
+    }
+
+    #[test]
+    fn scale_matches_scalar_reference_including_remainders() {
+        for n in [0usize, 1, 7, 8, 9, 16, 63, 100] {
+            let mut kern: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).sin() * 5.0).collect();
+            let mut scalar = kern.clone();
+            scale(&mut kern, 0.875);
+            for a in scalar.iter_mut() {
+                *a *= 0.875;
+            }
+            assert_eq!(bits(&kern), bits(&scalar), "n={n}");
         }
     }
 }

@@ -5,9 +5,11 @@
 //! `rand`, `proptest`, or `statrs`; everything here is implemented from
 //! scratch and unit-tested in place.
 
+pub mod affinity;
 pub mod kernels;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 pub use rng::{splitmix64, Rng};

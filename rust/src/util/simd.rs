@@ -1,0 +1,630 @@
+//! Explicit SIMD kernels for the encode/absorb/reduce hot paths.
+//!
+//! The block loops in `util::kernels` lean on the autovectorizer; this
+//! module pins the codegen instead. Behind the `simd` cargo feature (on
+//! x86_64, where SSE2 is baseline so no runtime detection is needed)
+//! every entry point dispatches to a hand-written intrinsic kernel; in
+//! every other configuration it falls through to the scalar reference
+//! in [`scalar`], which is always compiled *and always exported* so
+//! parity tests and benches can hold both implementations side by side
+//! in one binary.
+//!
+//! ## The bitwise contract
+//!
+//! Every vector kernel performs the same per-cell IEEE operation, in
+//! the same order, as its scalar twin:
+//!
+//! - multiply then add as two rounded ops (`_mm_mul_ps` + `_mm_add_ps`)
+//!   — never a fused multiply-add, which would skip the intermediate
+//!   rounding and change bits;
+//! - cells are independent (`dst[i]` only ever meets `src[i]`), so
+//!   packing four of them into one register cannot reorder any fold —
+//!   lane width never changes the order in which a given cell sees its
+//!   updates;
+//! - the multiply-shift hashes are exact `u32` wrapping arithmetic in
+//!   both forms (`_mm_add_epi32`/`mullo` wrap just like
+//!   `wrapping_mul`/`wrapping_add`), and the scatter into sketch rows
+//!   stays scalar and in index order, zero-skip included, because
+//!   scattered cells *do* collide (two indices can hash to one bucket)
+//!   and their order is part of the determinism contract;
+//! - f16→f32 widening uses a branchless bit-manipulation sequence
+//!   (exponent rebias + exact float subtract for subnormals) proven
+//!   bit-identical to [`crate::wire::codec::f16_bits_to_f32`] over all
+//!   65536 patterns by the exhaustive test at the bottom of this file.
+//!
+//! `rust/tests/prop_sketch.rs` holds property tests pinning dispatch ==
+//! scalar bitwise across odd lengths, remainder tails, and unaligned
+//! offsets; run them with and without `--features simd` (CI does both).
+
+use crate::hashing::RowHash;
+
+/// Scalar reference kernels — the semantics every SIMD kernel must
+/// reproduce bit for bit. Always compiled, always public: parity tests
+/// compare dispatch output against these, and benches time both in the
+/// same binary.
+pub mod scalar {
+    use crate::hashing::RowHash;
+
+    /// Block width for the autovectorizer-friendly loops (see
+    /// `util::kernels` for why blocking helps even without intrinsics).
+    pub const LANES: usize = 8;
+
+    /// `dst[i] += scale * src[i]` (two rounded ops per cell, no FMA).
+    pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+        debug_assert_eq!(dst.len(), src.len());
+        let mut d = dst.chunks_exact_mut(LANES);
+        let mut s = src.chunks_exact(LANES);
+        for (db, sb) in (&mut d).zip(&mut s) {
+            for i in 0..LANES {
+                db[i] += scale * sb[i];
+            }
+        }
+        for (a, b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *a += scale * *b;
+        }
+    }
+
+    /// `dst[i] += src[i]` — a bare `+=`, deliberately not
+    /// `axpy(dst, src, 1.0)`: we do not lean on `1.0 * x` being a
+    /// bitwise identity for every f32.
+    pub fn add(dst: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let mut d = dst.chunks_exact_mut(LANES);
+        let mut s = src.chunks_exact(LANES);
+        for (db, sb) in (&mut d).zip(&mut s) {
+            for i in 0..LANES {
+                db[i] += sb[i];
+            }
+        }
+        for (a, b) in d.into_remainder().iter_mut().zip(s.remainder()) {
+            *a += *b;
+        }
+    }
+
+    /// `dst[i] *= s` — per-cell, order-free (cells are independent).
+    pub fn scale(dst: &mut [f32], s: f32) {
+        for a in dst.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Weighted absorb of a little-endian f32 payload:
+    /// `dst[i] += weight * f32_le(bytes[4i..4i+4])`.
+    pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), 4 * dst.len());
+        let mut b = bytes.chunks_exact(4 * LANES);
+        let mut d = dst.chunks_exact_mut(LANES);
+        for (bb, db) in (&mut b).zip(&mut d) {
+            for i in 0..LANES {
+                let raw = [bb[4 * i], bb[4 * i + 1], bb[4 * i + 2], bb[4 * i + 3]];
+                db[i] += weight * f32::from_le_bytes(raw);
+            }
+        }
+        for (bb, a) in b.remainder().chunks_exact(4).zip(d.into_remainder()) {
+            *a += weight * f32::from_le_bytes([bb[0], bb[1], bb[2], bb[3]]);
+        }
+    }
+
+    /// Weighted absorb of a little-endian f16 payload:
+    /// `dst[i] += weight * widen(f16_le(bytes[2i..2i+2]))`, where
+    /// `widen` is the exact codec decode
+    /// ([`crate::wire::codec::f16_bits_to_f32`]).
+    pub fn axpy_f16_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), 2 * dst.len());
+        for (a, hb) in dst.iter_mut().zip(bytes.chunks_exact(2)) {
+            let h = u16::from_le_bytes([hb[0], hb[1]]);
+            *a += weight * crate::wire::codec::f16_bits_to_f32(h);
+        }
+    }
+
+    /// One sketch row's dense encode: for each coordinate `i` with
+    /// `g[i] != 0.0`, multiply-shift hash `(bucket, sign)` from the
+    /// hoisted per-row coefficients and scatter
+    /// `row[bucket] += (±g[i]) * scale`. Exactly the inner loop of
+    /// `CountSketch::accumulate_dense`; the zero-skip (which also
+    /// catches `-0.0`) and the in-index-order scatter are part of the
+    /// contract.
+    pub fn accumulate_row(row: &mut [f32], h: RowHash, shift: u32, g: &[f32], scale: f32) {
+        for (i, &gi) in g.iter().enumerate() {
+            if gi == 0.0 {
+                continue;
+            }
+            let iu = i as u32;
+            let b = (h.a_bucket.wrapping_mul(iu).wrapping_add(h.b_bucket) >> shift) as usize;
+            let sgn_neg = h.a_sign.wrapping_mul(iu).wrapping_add(h.b_sign) >> 31;
+            let signed = if sgn_neg == 0 { gi } else { -gi };
+            row[b] += signed * scale;
+        }
+    }
+
+    /// One sketch row's sparse encode: same hash+scatter as
+    /// [`accumulate_row`], but walking `(idx, val)` pairs. The
+    /// zero-skip matches the dense path's convention (an explicit
+    /// `±0.0` entry contributes nothing there either, since
+    /// `(±0.0) * scale` adds as zero), so hoisting it is
+    /// bitwise-neutral for every non-NaN payload.
+    pub fn accumulate_row_sparse(
+        row: &mut [f32],
+        h: RowHash,
+        shift: u32,
+        idx: &[u32],
+        val: &[f32],
+        scale: f32,
+    ) {
+        debug_assert_eq!(idx.len(), val.len());
+        for (&iu, &v) in idx.iter().zip(val) {
+            if v == 0.0 {
+                continue;
+            }
+            let b = (h.a_bucket.wrapping_mul(iu).wrapping_add(h.b_bucket) >> shift) as usize;
+            let sgn_neg = h.a_sign.wrapping_mul(iu).wrapping_add(h.b_sign) >> 31;
+            let signed = if sgn_neg == 0 { v } else { -v };
+            row[b] += signed * scale;
+        }
+    }
+}
+
+/// SSE2 kernels. SSE2 is part of the x86_64 baseline, so inside this
+/// `cfg` every intrinsic is unconditionally available — no runtime
+/// feature detection, no `target_feature` attributes, and therefore no
+/// unsafe-to-call functions: the `unsafe` blocks below are only for the
+/// raw-pointer loads/stores, whose bounds the surrounding slice math
+/// guarantees.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod sse2 {
+    use crate::hashing::RowHash;
+    use core::arch::x86_64::*;
+
+    pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len().min(src.len());
+        let blocks = n / 4;
+        unsafe {
+            let s = _mm_set1_ps(scale);
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            for b in 0..blocks {
+                let d = _mm_loadu_ps(dp.add(4 * b));
+                let x = _mm_loadu_ps(sp.add(4 * b));
+                // mul then add, matching `d += scale * x` — not FMA.
+                _mm_storeu_ps(dp.add(4 * b), _mm_add_ps(d, _mm_mul_ps(s, x)));
+            }
+        }
+        for i in 4 * blocks..n {
+            dst[i] += scale * src[i];
+        }
+    }
+
+    pub fn add(dst: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(dst.len(), src.len());
+        let n = dst.len().min(src.len());
+        let blocks = n / 4;
+        unsafe {
+            let dp = dst.as_mut_ptr();
+            let sp = src.as_ptr();
+            for b in 0..blocks {
+                let d = _mm_loadu_ps(dp.add(4 * b));
+                let x = _mm_loadu_ps(sp.add(4 * b));
+                _mm_storeu_ps(dp.add(4 * b), _mm_add_ps(d, x));
+            }
+        }
+        for i in 4 * blocks..n {
+            dst[i] += src[i];
+        }
+    }
+
+    pub fn scale(dst: &mut [f32], s: f32) {
+        let n = dst.len();
+        let blocks = n / 4;
+        unsafe {
+            let sv = _mm_set1_ps(s);
+            let dp = dst.as_mut_ptr();
+            for b in 0..blocks {
+                let d = _mm_loadu_ps(dp.add(4 * b));
+                // operand order matches scalar `*a *= s` (a * s).
+                _mm_storeu_ps(dp.add(4 * b), _mm_mul_ps(d, sv));
+            }
+        }
+        for a in dst[4 * blocks..].iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), 4 * dst.len());
+        let n = dst.len().min(bytes.len() / 4);
+        let blocks = n / 4;
+        unsafe {
+            let w = _mm_set1_ps(weight);
+            let bp = bytes.as_ptr();
+            let dp = dst.as_mut_ptr();
+            for b in 0..blocks {
+                // x86_64 is little-endian, so reinterpreting 16 LE
+                // payload bytes as 4 f32 lanes is exactly
+                // `f32::from_le_bytes` per lane.
+                let x = _mm_castsi128_ps(_mm_loadu_si128(bp.add(16 * b) as *const __m128i));
+                let d = _mm_loadu_ps(dp.add(4 * b));
+                _mm_storeu_ps(dp.add(4 * b), _mm_add_ps(d, _mm_mul_ps(w, x)));
+            }
+        }
+        for i in 4 * blocks..n {
+            let o = 4 * i;
+            let raw = [bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]];
+            dst[i] += weight * f32::from_le_bytes(raw);
+        }
+    }
+
+    /// Widen 4 packed f16 bit patterns (in the low 64 bits of `h`) to 4
+    /// f32 lanes, bit-identical to
+    /// [`crate::wire::codec::f16_bits_to_f32`] on every pattern.
+    ///
+    /// Branchless rebias: shift the sign-stripped half 13 left so its
+    /// exponent/mantissa land in f32 position, add the exponent bias
+    /// delta `(127-15) << 23`, then per-lane select the two irregular
+    /// classes — inf/NaN get a second bias bump to exponent 255, and
+    /// subnormals are renormalized by an *exact* float subtract
+    /// (`(m + 2^-14) - 2^-14` in f32; both operands and the result are
+    /// normal f32s, so no rounding and no dependence on DAZ/FTZ).
+    #[inline]
+    fn widen4_f16(h: __m128i) -> __m128 {
+        unsafe {
+            let e = _mm_unpacklo_epi16(h, _mm_setzero_si128());
+            let sign = _mm_slli_epi32(_mm_and_si128(e, _mm_set1_epi32(0x8000)), 16);
+            let em = _mm_and_si128(e, _mm_set1_epi32(0x7fff));
+            let mut o = _mm_slli_epi32(em, 13);
+            let shifted_exp = _mm_set1_epi32(0x7c00 << 13);
+            let exp = _mm_and_si128(o, shifted_exp);
+            o = _mm_add_epi32(o, _mm_set1_epi32((127 - 15) << 23));
+            // inf/NaN: exponent field was 0x1f; bump it on to 0xff.
+            let infnan = _mm_cmpeq_epi32(exp, shifted_exp);
+            o = _mm_add_epi32(o, _mm_and_si128(infnan, _mm_set1_epi32((128 - 16) << 23)));
+            // subnormal (exponent field 0, incl. ±0): renormalize.
+            let sub = _mm_cmpeq_epi32(exp, _mm_setzero_si128());
+            let renorm = _mm_castps_si128(_mm_sub_ps(
+                _mm_castsi128_ps(_mm_add_epi32(o, _mm_set1_epi32(1 << 23))),
+                _mm_castsi128_ps(_mm_set1_epi32(113 << 23)),
+            ));
+            o = _mm_or_si128(_mm_and_si128(sub, renorm), _mm_andnot_si128(sub, o));
+            _mm_castsi128_ps(_mm_or_si128(o, sign))
+        }
+    }
+
+    pub fn axpy_f16_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), 2 * dst.len());
+        let n = dst.len().min(bytes.len() / 2);
+        let blocks = n / 4;
+        unsafe {
+            let w = _mm_set1_ps(weight);
+            let bp = bytes.as_ptr();
+            let dp = dst.as_mut_ptr();
+            for b in 0..blocks {
+                // 4 halves = 8 bytes; movq tolerates any alignment.
+                let h = _mm_loadl_epi64(bp.add(8 * b) as *const __m128i);
+                let x = widen4_f16(h);
+                let d = _mm_loadu_ps(dp.add(4 * b));
+                _mm_storeu_ps(dp.add(4 * b), _mm_add_ps(d, _mm_mul_ps(w, x)));
+            }
+        }
+        for i in 4 * blocks..n {
+            let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            dst[i] += weight * crate::wire::codec::f16_bits_to_f32(h);
+        }
+    }
+
+    /// 32-bit lane-wise wrapping multiply. SSE2 has no `pmulld`; build
+    /// it from two 32×32→64 even-lane multiplies (low halves of the
+    /// products are exactly the wrapping 32-bit products).
+    #[inline]
+    fn mullo_epi32(a: __m128i, b: __m128i) -> __m128i {
+        unsafe {
+            let even = _mm_mul_epu32(a, b);
+            let odd = _mm_mul_epu32(_mm_srli_si128(a, 4), _mm_srli_si128(b, 4));
+            _mm_unpacklo_epi32(
+                _mm_shuffle_epi32(even, 0b00_00_10_00),
+                _mm_shuffle_epi32(odd, 0b00_00_10_00),
+            )
+        }
+    }
+
+    /// Hash 4 consecutive indices' (bucket, sign-bit) pairs in
+    /// registers, then scatter scalar-with-zero-skip in index order.
+    pub fn accumulate_row(row: &mut [f32], h: RowHash, shift: u32, g: &[f32], scale: f32) {
+        let n = g.len();
+        let blocks = n / 4;
+        unsafe {
+            let sh = _mm_cvtsi32_si128(shift as i32);
+            let ab = _mm_set1_epi32(h.a_bucket as i32);
+            let bb = _mm_set1_epi32(h.b_bucket as i32);
+            let asg = _mm_set1_epi32(h.a_sign as i32);
+            let bsg = _mm_set1_epi32(h.b_sign as i32);
+            let step = _mm_setr_epi32(0, 1, 2, 3);
+            let mut buckets = [0u32; 4];
+            let mut neg = [0u32; 4];
+            for blk in 0..blocks {
+                let i0 = (4 * blk) as u32;
+                let idx = _mm_add_epi32(_mm_set1_epi32(i0 as i32), step);
+                let b = _mm_srl_epi32(_mm_add_epi32(mullo_epi32(ab, idx), bb), sh);
+                let s = _mm_srli_epi32(_mm_add_epi32(mullo_epi32(asg, idx), bsg), 31);
+                _mm_storeu_si128(buckets.as_mut_ptr() as *mut __m128i, b);
+                _mm_storeu_si128(neg.as_mut_ptr() as *mut __m128i, s);
+                // The scatter stays scalar and in index order: two
+                // indices can land in one bucket, and their add order
+                // is part of the bitwise contract.
+                for (k, (&bk, &nk)) in buckets.iter().zip(&neg).enumerate() {
+                    let gi = g[4 * blk + k];
+                    if gi == 0.0 {
+                        continue;
+                    }
+                    let signed = if nk == 0 { gi } else { -gi };
+                    row[bk as usize] += signed * scale;
+                }
+            }
+        }
+        for (i, &gi) in g.iter().enumerate().skip(4 * blocks) {
+            if gi == 0.0 {
+                continue;
+            }
+            let iu = i as u32;
+            let b = (h.a_bucket.wrapping_mul(iu).wrapping_add(h.b_bucket) >> shift) as usize;
+            let sgn_neg = h.a_sign.wrapping_mul(iu).wrapping_add(h.b_sign) >> 31;
+            let signed = if sgn_neg == 0 { gi } else { -gi };
+            row[b] += signed * scale;
+        }
+    }
+
+    pub fn accumulate_row_sparse(
+        row: &mut [f32],
+        h: RowHash,
+        shift: u32,
+        idx: &[u32],
+        val: &[f32],
+        scale: f32,
+    ) {
+        debug_assert_eq!(idx.len(), val.len());
+        let n = idx.len().min(val.len());
+        let blocks = n / 4;
+        unsafe {
+            let sh = _mm_cvtsi32_si128(shift as i32);
+            let ab = _mm_set1_epi32(h.a_bucket as i32);
+            let bb = _mm_set1_epi32(h.b_bucket as i32);
+            let asg = _mm_set1_epi32(h.a_sign as i32);
+            let bsg = _mm_set1_epi32(h.b_sign as i32);
+            let ip = idx.as_ptr();
+            let mut buckets = [0u32; 4];
+            let mut neg = [0u32; 4];
+            for blk in 0..blocks {
+                let iv = _mm_loadu_si128(ip.add(4 * blk) as *const __m128i);
+                let b = _mm_srl_epi32(_mm_add_epi32(mullo_epi32(ab, iv), bb), sh);
+                let s = _mm_srli_epi32(_mm_add_epi32(mullo_epi32(asg, iv), bsg), 31);
+                _mm_storeu_si128(buckets.as_mut_ptr() as *mut __m128i, b);
+                _mm_storeu_si128(neg.as_mut_ptr() as *mut __m128i, s);
+                for (k, (&bk, &nk)) in buckets.iter().zip(&neg).enumerate() {
+                    let v = val[4 * blk + k];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let signed = if nk == 0 { v } else { -v };
+                    row[bk as usize] += signed * scale;
+                }
+            }
+        }
+        for j in 4 * blocks..n {
+            let (iu, v) = (idx[j], val[j]);
+            if v == 0.0 {
+                continue;
+            }
+            let b = (h.a_bucket.wrapping_mul(iu).wrapping_add(h.b_bucket) >> shift) as usize;
+            let sgn_neg = h.a_sign.wrapping_mul(iu).wrapping_add(h.b_sign) >> 31;
+            let signed = if sgn_neg == 0 { v } else { -v };
+            row[b] += signed * scale;
+        }
+    }
+}
+
+// Dispatch layer: one public entry point per kernel. With the `simd`
+// feature on an x86_64 target each forwards to the SSE2 kernel;
+// everywhere else, to the scalar reference. The twin-definition shape
+// (instead of cfg'd blocks inside one body) keeps every configuration a
+// plain tail call with no dead code for clippy to complain about.
+
+/// `dst[i] += scale * src[i]`. See [`scalar::axpy`] for the contract.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+    sse2::axpy(dst, src, scale)
+}
+/// `dst[i] += scale * src[i]`. See [`scalar::axpy`] for the contract.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+    scalar::axpy(dst, src, scale)
+}
+
+/// `dst[i] += src[i]`. See [`scalar::add`] for the contract.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn add(dst: &mut [f32], src: &[f32]) {
+    sse2::add(dst, src)
+}
+/// `dst[i] += src[i]`. See [`scalar::add`] for the contract.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn add(dst: &mut [f32], src: &[f32]) {
+    scalar::add(dst, src)
+}
+
+/// `dst[i] *= s`. See [`scalar::scale`] for the contract.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn scale(dst: &mut [f32], s: f32) {
+    sse2::scale(dst, s)
+}
+/// `dst[i] *= s`. See [`scalar::scale`] for the contract.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn scale(dst: &mut [f32], s: f32) {
+    scalar::scale(dst, s)
+}
+
+/// Weighted LE-f32 absorb. See [`scalar::axpy_f32_le`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+    sse2::axpy_f32_le(bytes, weight, dst)
+}
+/// Weighted LE-f32 absorb. See [`scalar::axpy_f32_le`].
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn axpy_f32_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+    scalar::axpy_f32_le(bytes, weight, dst)
+}
+
+/// Weighted LE-f16 absorb with in-register widening. See
+/// [`scalar::axpy_f16_le`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn axpy_f16_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+    sse2::axpy_f16_le(bytes, weight, dst)
+}
+/// Weighted LE-f16 absorb with in-register widening. See
+/// [`scalar::axpy_f16_le`].
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn axpy_f16_le(bytes: &[u8], weight: f32, dst: &mut [f32]) {
+    scalar::axpy_f16_le(bytes, weight, dst)
+}
+
+/// Dense sketch-row encode (vectorized hashing, scalar in-order
+/// scatter). See [`scalar::accumulate_row`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn accumulate_row(row: &mut [f32], h: RowHash, shift: u32, g: &[f32], scale: f32) {
+    sse2::accumulate_row(row, h, shift, g, scale)
+}
+/// Dense sketch-row encode (vectorized hashing, scalar in-order
+/// scatter). See [`scalar::accumulate_row`].
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn accumulate_row(row: &mut [f32], h: RowHash, shift: u32, g: &[f32], scale: f32) {
+    scalar::accumulate_row(row, h, shift, g, scale)
+}
+
+/// Sparse sketch-row encode. See [`scalar::accumulate_row_sparse`].
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn accumulate_row_sparse(
+    row: &mut [f32],
+    h: RowHash,
+    shift: u32,
+    idx: &[u32],
+    val: &[f32],
+    scale: f32,
+) {
+    sse2::accumulate_row_sparse(row, h, shift, idx, val, scale)
+}
+/// Sparse sketch-row encode. See [`scalar::accumulate_row_sparse`].
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn accumulate_row_sparse(
+    row: &mut [f32],
+    h: RowHash,
+    shift: u32,
+    idx: &[u32],
+    val: &[f32],
+    scale: f32,
+) {
+    scalar::accumulate_row_sparse(row, h, shift, idx, val, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    // Dispatch == scalar reference, bitwise, over lengths that hit
+    // every tail shape. With `--features simd` this pins the SSE2
+    // kernels; without it, it pins the (then-trivial) dispatch wiring.
+    #[test]
+    fn dispatch_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(0x51AD_0001);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 100] {
+            let src: Vec<f32> = (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+            let w = 0.12345_f32;
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            axpy(&mut a, &src, w);
+            scalar::axpy(&mut b, &src, w);
+            assert_bits(&a, &b, "axpy", n);
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            add(&mut a, &src);
+            scalar::add(&mut b, &src);
+            assert_bits(&a, &b, "add", n);
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            scale(&mut a, w);
+            scalar::scale(&mut b, w);
+            assert_bits(&a, &b, "scale", n);
+
+            let bytes: Vec<u8> = src.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let (mut a, mut b) = (base.clone(), base.clone());
+            axpy_f32_le(&bytes, w, &mut a);
+            scalar::axpy_f32_le(&bytes, w, &mut b);
+            assert_bits(&a, &b, "axpy_f32_le", n);
+        }
+    }
+
+    // The f16 widening sequence must match the codec decode on *every*
+    // half bit pattern: normals, subnormals, ±0, ±inf, and NaNs.
+    // Exhaustive, not sampled — 65536 patterns is cheap.
+    #[test]
+    fn f16_widening_matches_codec_decode_over_all_bit_patterns() {
+        let mut bytes = Vec::with_capacity(2 * 65536);
+        for h in 0..=u16::MAX {
+            bytes.extend_from_slice(&h.to_le_bytes());
+        }
+        let mut out = vec![0f32; 65536];
+        // weight 1.0 onto a zero accumulator: `0.0 + 1.0 * x` performs
+        // identical IEEE ops in both paths, so any bit difference here
+        // is a widening bug, not an arithmetic artifact.
+        axpy_f16_le(&bytes, 1.0, &mut out);
+        let mut reference = vec![0f32; 65536];
+        scalar::axpy_f16_le(&bytes, 1.0, &mut reference);
+        for h in 0..=u16::MAX as usize {
+            assert_eq!(
+                out[h].to_bits(),
+                reference[h].to_bits(),
+                "f16 widen diverged on bit pattern {h:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_hashing_matches_scalar_including_zero_skip() {
+        use crate::hashing::SketchHasher;
+        let hasher = SketchHasher::new(3, 256, 0xFEED).unwrap();
+        let shift = 32 - 256u32.trailing_zeros();
+        let mut rng = Rng::new(0x51AD_0002);
+        for n in [1usize, 3, 4, 5, 8, 13, 100, 257] {
+            let mut g: Vec<f32> = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            // plant zeros (and a negative zero) so the skip path runs
+            g[0] = 0.0;
+            if n > 4 {
+                g[4] = -0.0;
+            }
+            for r in 0..3 {
+                let h = hasher.row(r);
+                let mut a = vec![0f32; 256];
+                let mut b = vec![0f32; 256];
+                accumulate_row(&mut a, h, shift, &g, 0.5);
+                scalar::accumulate_row(&mut b, h, shift, &g, 0.5);
+                assert_bits(&a, &b, "accumulate_row", n);
+
+                let idx: Vec<u32> = (0..n as u32).map(|i| i * 3).collect();
+                let mut a = vec![0f32; 256];
+                let mut b = vec![0f32; 256];
+                accumulate_row_sparse(&mut a, h, shift, &idx, &g, 0.5);
+                scalar::accumulate_row_sparse(&mut b, h, shift, &idx, &g, 0.5);
+                assert_bits(&a, &b, "accumulate_row_sparse", n);
+            }
+        }
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str, n: usize) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what} diverged at cell {i} (n={n}): {x} vs {y}"
+            );
+        }
+    }
+}

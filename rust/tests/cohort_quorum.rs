@@ -356,6 +356,7 @@ fn disconnect_and_straggler_round_completes_at_quorum() {
             transport_bytes: stats.transport_bytes,
             absorb_stalls: stats.absorb_stalls,
             parked_bytes: stats.parked_bytes,
+            chosen_shards: stats.chosen_shards as usize,
             participants: stats.participants,
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,

@@ -404,6 +404,150 @@ fn prop_blocked_kernels_match_scalar_reference_bitwise() {
 }
 
 #[test]
+fn prop_simd_dispatch_matches_scalar_twin_bitwise() {
+    // PR 9's SIMD layer (`util::simd`): whichever implementation the
+    // `simd` feature selects, every kernel entry point must produce the
+    // exact bits of its always-compiled scalar twin — over odd lengths,
+    // remainder tails, and slices starting at every sub-block offset
+    // (the SSE2 path uses unaligned loads, so a slice that starts 1..3
+    // elements into an allocation must not change anything). With the
+    // feature off this pins dispatch == scalar; with it on it is the
+    // whole bitwise-determinism claim.
+    use fetchsgd::serialize::le::extend_f32_le;
+    use fetchsgd::util::simd::{self, scalar};
+    use fetchsgd::wire::codec::f32_to_f16_bits;
+    check("simd dispatch == scalar twin", 40, |g| {
+        let n = g.usize_in(1, 300);
+        let off = g.usize_in(0, 4);
+        let src = g.vec_f32(n + off, n + off + 1, -3.0, 3.0);
+        let base = g.vec_f32(n + off, n + off + 1, -3.0, 3.0);
+        let w = g.f32_in(-2.0, 2.0);
+
+        // axpy / add / scale on the offset slices.
+        let (mut got, mut want) = (base.clone(), base.clone());
+        simd::axpy(&mut got[off..], &src[off..], w);
+        scalar::axpy(&mut want[off..], &src[off..], w);
+        assert_bits(&got, &want, "axpy", n, off);
+        let (mut got, mut want) = (base.clone(), base.clone());
+        simd::add(&mut got[off..], &src[off..]);
+        scalar::add(&mut want[off..], &src[off..]);
+        assert_bits(&got, &want, "add", n, off);
+        let (mut got, mut want) = (base.clone(), base.clone());
+        simd::scale(&mut got[off..], w);
+        scalar::scale(&mut want[off..], w);
+        assert_bits(&got, &want, "scale", n, off);
+
+        // The LE byte walks, through a byte slice that itself starts at
+        // an arbitrary (odd-capable) byte offset into its allocation.
+        let boff = g.usize_in(0, 5);
+        let mut bytes = vec![0xA5u8; boff];
+        extend_f32_le(&mut bytes, &src[off..]);
+        let (mut got, mut want) = (base.clone(), base.clone());
+        simd::axpy_f32_le(&bytes[boff..], w, &mut got[off..]);
+        scalar::axpy_f32_le(&bytes[boff..], w, &mut want[off..]);
+        assert_bits(&got, &want, "axpy_f32_le", n, off);
+
+        // f16le: quantize the same values, planting the awkward
+        // classes (±inf, NaN, sub-normals, -0.0) so the widening path
+        // is exercised well past the normal range.
+        let mut hbytes = vec![0x5Au8; boff];
+        for (i, &x) in src[off..].iter().enumerate() {
+            let h = match i % 7 {
+                0 => 0x7C00,              // +inf
+                1 => 0xFC00,              // -inf
+                2 => 0x7E01,              // NaN
+                3 => 0x0001,              // smallest subnormal
+                4 => 0x03FF,              // largest subnormal
+                5 => 0x8000,              // -0.0
+                _ => f32_to_f16_bits(x),
+            };
+            hbytes.extend_from_slice(&h.to_le_bytes());
+        }
+        let (mut got, mut want) = (base.clone(), base.clone());
+        simd::axpy_f16_le(&hbytes[boff..], w, &mut got[off..]);
+        scalar::axpy_f16_le(&hbytes[boff..], w, &mut want[off..]);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            // NaN lanes: same payload bits either way is the contract.
+            assert_eq!(a.to_bits(), b.to_bits(), "axpy_f16_le diverged at {i} (n={n} off={off})");
+        }
+
+        // Encode hashing, dense and sparse, with planted ±0.0 entries
+        // (the zero-skip must stay bitwise-neutral).
+        use fetchsgd::hashing::SketchHasher;
+        let cols = 1usize << g.usize_in(4, 11);
+        let shift = 32 - cols.trailing_zeros();
+        let hasher = SketchHasher::new(1, cols, g.u64()).unwrap();
+        let h = hasher.row(0);
+        let mut gvec = g.vec_f32(n, n + 1, -2.0, 2.0);
+        gvec[g.usize_in(0, n)] = 0.0;
+        gvec[g.usize_in(0, n)] = -0.0;
+        let row0 = g.vec_f32(cols, cols + 1, -1.0, 1.0);
+        let (mut got, mut want) = (row0.clone(), row0.clone());
+        simd::accumulate_row(&mut got, h, shift, &gvec, w);
+        scalar::accumulate_row(&mut want, h, shift, &gvec, w);
+        assert_bits(&got, &want, "accumulate_row", n, off);
+        let stride = g.usize_in(1, 5) as u32;
+        let idx: Vec<u32> = (0..n as u32).map(|i| i * stride).collect();
+        let (mut got, mut want) = (row0.clone(), row0.clone());
+        simd::accumulate_row_sparse(&mut got, h, shift, &idx, &gvec, w);
+        scalar::accumulate_row_sparse(&mut want, h, shift, &idx, &gvec, w);
+        assert_bits(&got, &want, "accumulate_row_sparse", n, off);
+    });
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str, n: usize, off: usize) {
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what} diverged at {i} (n={n} off={off})");
+    }
+}
+
+#[test]
+fn prop_hoisted_sparse_accumulate_matches_per_element_reference() {
+    // PR 9 reworked `CountSketch::accumulate_sparse` from per-(row,
+    // element) `bucket_sign` calls to the hoisted per-row form dense
+    // absorption already used. The rework must be invisible: the same
+    // bits as the historical fold `table[r][bucket] += sign * v *
+    // scale`, including planted exact zeros (skipped now, absorbed as
+    // `±0.0 * scale` before — both add nothing to any reachable
+    // accumulator value).
+    check("sparse accumulate == bucket_sign reference", 25, |g| {
+        let d = g.usize_in(10, 500);
+        let n = g.usize_in(1, d.min(60) + 1);
+        let mut used = std::collections::HashSet::new();
+        let mut pairs = Vec::new();
+        for _ in 0..n {
+            let i = g.usize_in(0, d) as u32;
+            if used.insert(i) {
+                // A mix of ordinary values and planted ±0.0.
+                let v = match pairs.len() % 5 {
+                    3 => 0.0,
+                    4 => -0.0,
+                    _ => g.f32_in(-2.0, 2.0),
+                };
+                pairs.push((i, v));
+            }
+        }
+        let sv = SparseVec::from_pairs(d, pairs);
+        let scale = g.f32_in(-2.0, 2.0);
+        let base = g.vec_f32(d, d + 1, -1.0, 1.0);
+        let mut s = CountSketch::encode(ROWS, COLS, SEED, &base).unwrap();
+        let mut reference = s.table().to_vec();
+        let (rows, cols) = (s.rows(), s.cols());
+        // Historical per-element fold, verbatim.
+        for r in 0..rows {
+            for (j, &i) in sv.idx.iter().enumerate() {
+                let (b, sgn) = s.hasher().bucket_sign(r, i);
+                reference[r * cols + b] += sgn * sv.val[j] * scale;
+            }
+        }
+        s.accumulate_sparse(&sv, scale);
+        for (a, b) in s.table().iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "hoisted sparse accumulate diverged");
+        }
+    });
+}
+
+#[test]
 fn prop_sharded_lock_absorb_matches_sequential_reduce() {
     // The per-shard-lock stress test: many workers offering frames in
     // an adversarial (shuffled) arrival order through the lock-free
