@@ -53,6 +53,7 @@ use fetchsgd::runtime::artifact::{Manifest, TaskArtifacts};
 use fetchsgd::runtime::exec::run_client_step;
 use fetchsgd::runtime::Runtime;
 use fetchsgd::sketch::CountSketch;
+use fetchsgd::trace::TraceSink;
 use fetchsgd::wire::{encode_upload, Codec, F16LE, F32LE};
 
 /// One simulated FetchSGD round (client compute + sharded aggregation +
@@ -95,6 +96,8 @@ fn engine_round_bench(
             threads,
             wire,
             policy: &policy,
+            round,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -179,6 +182,8 @@ fn participation_round_bench(fail_mod: usize, label: &str) -> anyhow::Result<Ben
             threads: 0,
             wire: None,
             policy: &policy,
+            round,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -234,7 +239,7 @@ fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
     let cells = (slots * ROWS * COLS) as u64;
     let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let mut results = Vec::new();
-    let mut speeds: Vec<(usize, f64, f64)> = Vec::new();
+    let mut speeds: Vec<(usize, f64, f64, f64)> = Vec::new();
 
     for &threads in &[1usize, 4, 8] {
         let r = bench_throughput(
@@ -293,14 +298,54 @@ fn absorb_scaling(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
         );
         let single = cells as f64 / r.mean_s;
         results.push(r);
-        speeds.push((threads, sharded, single));
+
+        // The sharded path again with a TraceSink attached: the cost
+        // of per-slot timeline events on the hot absorb path. The
+        // trace-off row above is the one compared against prior
+        // baselines; this row bounds the observability overhead.
+        let trace_path = std::env::temp_dir()
+            .join(format!("fsgd_bench_absorb_trace_{}.jsonl", std::process::id()));
+        let sink = Arc::new(TraceSink::create(&trace_path, "engine", "bench").expect("sink"));
+        let r = bench_throughput(
+            &format!("absorb {slots} sketch frames (5x16384) sharded-lock T={threads} trace=on"),
+            warmup,
+            iters,
+            cells,
+            || {
+                let mut round = pipeline.begin(&spec, weights.clone()).expect("begin");
+                round.attach_trace(sink.clone(), 0);
+                let round = round;
+                let cursor = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for _ in 0..threads {
+                        s.spawn(|| loop {
+                            let i = cursor.fetch_add(1, Ordering::SeqCst);
+                            if i >= slots {
+                                break;
+                            }
+                            round.offer_frame_bytes(i, &frames[i]).expect("offer");
+                        });
+                    }
+                });
+                assert!(round.is_complete());
+                pipeline.abort(round);
+            },
+        );
+        let traced = cells as f64 / r.mean_s;
+        results.push(r);
+        drop(sink);
+        std::fs::remove_file(&trace_path).ok();
+        speeds.push((threads, sharded, single, traced));
     }
-    for (threads, sharded, single) in speeds {
+    for (threads, sharded, single, traced) in speeds {
         eprintln!(
-            "  T={threads:<2} sharded {:>7.2} Mcells/s  single-lock {:>7.2} Mcells/s  ratio {:.2}x",
+            "  T={threads:<2} sharded {:>7.2} Mcells/s  single-lock {:>7.2} Mcells/s  \
+             ratio {:.2}x  traced {:>7.2} Mcells/s ({:.1}% overhead)",
             sharded / 1e6,
             single / 1e6,
-            sharded / single
+            sharded / single,
+            traced / 1e6,
+            (sharded / traced - 1.0) * 100.0
         );
     }
     Ok(results)
@@ -402,6 +447,20 @@ fn relay_fanout(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
         let mut server = FetchSgdServer::new(
             ROWS, cols, SEED, dim, 1000, 0.9, ErrorUpdate::ZeroOut, true, "vanilla",
         )?;
+        // Smoke mode doubles as the CI trace fixture: every tier of
+        // the tree writes a trace file under target/, and a later CI
+        // step pipes them through `fetchsgd trace-summary` to pin the
+        // CLI end to end. Full runs keep tracing off so the committed
+        // rows stay comparable across baselines.
+        let trace_root = if smoke && fanout > 0 {
+            Some(Arc::new(TraceSink::create(
+                std::path::Path::new("target/bench_trace_root.jsonl"),
+                "root",
+                "tcp:loopback",
+            )?))
+        } else {
+            None
+        };
         let opts = if fanout == 0 {
             ServeOptions {
                 workers: 4,
@@ -416,6 +475,7 @@ fn relay_fanout(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
                 relay_children: RELAYS,
                 read_timeout: timeout,
                 accept_timeout: timeout,
+                trace: trace_root.clone(),
                 ..Default::default()
             }
         };
@@ -437,13 +497,16 @@ fn relay_fanout(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
                     spawn_worker(root.clone());
                 }
             } else {
-                for _ in 0..RELAYS {
+                for ri in 0..RELAYS {
                     let mut node = Relay::bind(
                         &Endpoint::Tcp("127.0.0.1:0".into()),
                         RelayOptions {
                             workers: fanout,
                             read_timeout: timeout,
                             accept_timeout: timeout,
+                            trace_path: smoke.then(|| {
+                                format!("target/bench_trace_relay{ri}.jsonl").into()
+                            }),
                             ..Default::default()
                         },
                     )
@@ -481,6 +544,9 @@ fn relay_fanout(smoke: bool) -> anyhow::Result<Vec<BenchResult>> {
             srv.shutdown();
             (r, bytes / rounds)
         });
+        if let Some(t) = &trace_root {
+            t.flush().expect("flushing root trace");
+        }
         r.elements = Some(root_bytes);
         eprintln!(
             "  {label:<16} {:>8.1} ms/round  root link {:>9} B/round",

@@ -113,6 +113,8 @@ fn main() -> anyhow::Result<()> {
             threads: 0,
             wire: None,
             policy: &policy,
+            round: round as u64,
+            trace: None,
         };
         let spec = agg_ref.upload_spec();
         let out = engine::run_round(&ctx, &participants, &lambdas, &spec, &mut pipeline)?;

@@ -61,13 +61,14 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard, TryLockError};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 
 use crate::util::kernels;
 
 use crate::cohort::RoundMembership;
 use crate::compression::{ClientUpload, RoundUpdate, ServerAggregator, UploadSpec};
 use crate::sketch::CountSketch;
+use crate::trace::{SlotEvent, TraceSink};
 use crate::wire::{Body, Frame, F32LE};
 
 /// Upper bound on shard accumulators per round. Bounds both the final
@@ -692,6 +693,7 @@ impl RoundPipeline {
             absorbed: AtomicUsize::new(0),
             lock_stalls: AtomicU64::new(0),
             parked_bytes: AtomicU64::new(0),
+            trace: None,
         })
     }
 
@@ -980,9 +982,29 @@ pub struct RoundInFlight {
     absorbed: AtomicUsize,
     lock_stalls: AtomicU64,
     parked_bytes: AtomicU64,
+    /// Trace sink plus the round index to stamp, attached by the driver
+    /// after [`RoundPipeline::begin`]. Strictly observational — every
+    /// hook is a single `if let Some` branch when absent, and nothing a
+    /// hook records feeds back into absorb order or values.
+    trace: Option<(Arc<TraceSink>, u64)>,
 }
 
 impl RoundInFlight {
+    /// Attach a trace sink: subsequent offers stamp the slot-timeline
+    /// events (`validated` / `absorbed` / `parked` / `folded`) into it,
+    /// tagged with `round`.
+    pub fn attach_trace(&mut self, sink: Arc<TraceSink>, round: u64) {
+        self.trace = Some((sink, round));
+    }
+
+    /// Stamp one slot-timeline event if a sink is attached — the single
+    /// guard every hook goes through.
+    #[inline]
+    fn trace_slot(&self, slot: usize, ev: SlotEvent, peer: Option<usize>) {
+        if let Some((t, round)) = &self.trace {
+            t.slot_event(*round, slot, ev, peer);
+        }
+    }
     /// Total slots this round.
     pub fn slots(&self) -> usize {
         self.weights.len()
@@ -1025,9 +1047,11 @@ impl RoundInFlight {
             // their own shape and are validated at absorb time.
             self.parked_bytes.fetch_add(upload.payload_bytes(), Ordering::Relaxed);
             st.pending.insert(slot, Parked::Upload(upload));
+            self.trace_slot(slot, SlotEvent::Parked, None);
             return Ok(());
         }
         self.absorb_into(&mut st, slot, Parked::Upload(upload))?;
+        self.trace_slot(slot, SlotEvent::Absorbed, None);
         self.drain_successors(&mut st, shard)
     }
 
@@ -1062,6 +1086,7 @@ impl RoundInFlight {
                 return Err(e.context(format!("validating upload frame for slot {slot}")));
             }
         };
+        self.trace_slot(slot, SlotEvent::Validated, None);
         let nshards = self.shards.len();
         let shard = shard_of(slot, nshards);
         let mut st = self.lock_shard(shard);
@@ -1073,6 +1098,7 @@ impl RoundInFlight {
             let bytes = fb.into_owned();
             self.parked_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
             st.pending.insert(slot, Parked::Frame(bytes));
+            self.trace_slot(slot, SlotEvent::Parked, None);
             return Ok(());
         }
         // In-shard-order arrival: fold straight out of the caller's
@@ -1083,6 +1109,7 @@ impl RoundInFlight {
         }
         st.done += 1;
         self.absorbed.fetch_add(1, Ordering::SeqCst);
+        self.trace_slot(slot, SlotEvent::Absorbed, None);
         self.drain_successors(&mut st, shard)
     }
 
@@ -1178,6 +1205,12 @@ impl RoundInFlight {
         st.done += arrived.len();
         drop(st);
         self.absorbed.fetch_add(arrived.len(), Ordering::SeqCst);
+        // One merged frame delivered the whole chain: stamp each covered
+        // slot's absorb with the chain as its peer, so the merged tree
+        // timeline attributes them to the delivering subtree.
+        for &slot in arrived {
+            self.trace_slot(slot, SlotEvent::Absorbed, Some(chain));
+        }
         Ok(())
     }
 
@@ -1240,6 +1273,7 @@ impl RoundInFlight {
             let next = shard + st.done * nshards;
             let Some(parked) = st.pending.remove(&next) else { break };
             self.absorb_into(st, next, parked)?;
+            self.trace_slot(next, SlotEvent::Folded, None);
         }
         Ok(())
     }
@@ -1261,6 +1295,7 @@ impl RoundInFlight {
             let shard = shard_of(slot, nshards);
             let mut st = self.shards[shard].lock().expect("shard state poisoned");
             self.absorb_into(&mut st, slot, item)?;
+            self.trace_slot(slot, SlotEvent::Folded, None);
         }
         Ok(())
     }

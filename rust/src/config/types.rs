@@ -115,6 +115,10 @@ pub struct TrainConfig {
     pub artifacts_dir: PathBuf,
     /// Optional JSONL metrics output.
     pub log_path: Option<PathBuf>,
+    /// Optional structured trace output (`crate::trace` JSONL): phase
+    /// spans, per-slot timelines, latency histograms. Off by default —
+    /// and with it off, the round hot paths stay free of clock reads.
+    pub trace_path: Option<PathBuf>,
     /// Baseline rounds for compression ratios (defaults to `rounds`).
     pub baseline_rounds: Option<usize>,
     /// Print per-round progress lines.
@@ -252,6 +256,7 @@ impl TrainConfig {
             seed: 1,
             artifacts_dir: PathBuf::from("artifacts"),
             log_path: None,
+            trace_path: None,
             baseline_rounds: None,
             verbose: false,
             parallelism: 0,
@@ -362,6 +367,7 @@ impl TrainConfig {
             seed: v.opt_f64("seed", 1.0) as u64,
             artifacts_dir: PathBuf::from(v.opt_str("artifacts_dir", "artifacts")),
             log_path: v.get("log_path").and_then(|p| p.as_str()).map(PathBuf::from),
+            trace_path: v.get("trace_path").and_then(|p| p.as_str()).map(PathBuf::from),
             baseline_rounds: v.get("baseline_rounds").and_then(|b| b.as_usize()),
             verbose: v.opt_bool("verbose", false),
             parallelism: v.opt_usize("parallelism", 0),
@@ -437,6 +443,7 @@ impl TrainConfig {
                 "seed" => self.seed = val.parse()?,
                 "artifacts_dir" => self.artifacts_dir = PathBuf::from(val),
                 "log_path" => self.log_path = Some(PathBuf::from(val)),
+                "trace_path" => self.trace_path = Some(PathBuf::from(val)),
                 "baseline_rounds" => self.baseline_rounds = Some(val.parse()?),
                 "verbose" => self.verbose = val.parse()?,
                 "parallelism" => self.parallelism = val.parse()?,

@@ -68,6 +68,7 @@
 
 use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cohort::{DropReason, QuorumPolicy, RoundMembership};
@@ -75,6 +76,7 @@ use crate::compression::aggregate::{AbsorbStats, RoundAccum, RoundPipeline};
 use crate::compression::{ClientCompute, UploadSpec};
 use crate::data::FedDataset;
 use crate::runtime::artifact::TaskArtifacts;
+use crate::trace::{ms_since, Histogram, Phase, RoundTiming, SlotEvent, TraceSink};
 use crate::wire::{encode_upload, Codec};
 
 /// The round-invariant context for [`run_round`]: what to run, on what
@@ -104,6 +106,15 @@ pub struct RoundCtx<'a> {
     /// fails, and closes the round at quorum via
     /// [`RoundPipeline::finalize_partial`].
     pub policy: &'a QuorumPolicy,
+    /// Round index, stamped into trace events and timing records. Pure
+    /// observability — never an input to sampling or aggregation.
+    pub round: u64,
+    /// Structured trace sink (`crate::trace`). When set, the engine and
+    /// the round pipeline stamp phase spans, per-slot timeline events,
+    /// and the round's arrival histogram into it; `None` (the default
+    /// everywhere) keeps the per-upload hot path free of clock reads
+    /// and allocation.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 /// Everything one round of client compute produces.
@@ -132,6 +143,15 @@ pub struct RoundOutput {
     /// Absorb-phase contention counters (shard-lock stalls, parked
     /// bytes) for this round.
     pub absorb_stats: AbsorbStats,
+    /// Wall-clock phase durations. `round_ms` / `compute_ms` /
+    /// `reduce_ms` are always measured (a handful of per-round clock
+    /// reads); `absorb_ms` needs per-upload timing and is only nonzero
+    /// when a trace sink was attached.
+    pub timing: RoundTiming,
+    /// Slot-arrival latencies (µs from round start to each upload's
+    /// offer), recorded only when a trace sink was attached — empty
+    /// otherwise. Merging across rounds is exact.
+    pub arrivals: Histogram,
 }
 
 /// One worker's contribution to the round (everything except the
@@ -151,6 +171,14 @@ struct WorkerOut {
     errs: Vec<(usize, anyhow::Error, usize)>,
     /// Slots skipped because the round deadline had already fired.
     missed: Vec<usize>,
+    /// Arrival latencies (µs since round start) of the slots this
+    /// worker delivered — recorded only when tracing, merged across
+    /// workers at the join (exact, per `trace::hist`).
+    arrivals: Histogram,
+    /// Cumulative nanoseconds this worker spent inside pipeline offers
+    /// (the absorb fold). Only measured when tracing — with no sink the
+    /// per-upload path reads no clocks.
+    absorb_ns: u64,
 }
 
 /// Execute one federated round's client work: workers pull participant
@@ -167,7 +195,18 @@ pub fn run_round(
 ) -> Result<RoundOutput> {
     assert_eq!(participants.len(), weights.len(), "one weight per participant");
     let slots = participants.len();
-    let round = pipeline.begin(spec, weights.to_vec())?;
+    // Timing instrumentation is two-tier: a handful of per-round
+    // Instants (always on — they feed `RoundRecord::round_ms`), and
+    // per-upload clock reads plus slot events (only when `ctx.trace` is
+    // set — the disabled hot path stays syscall-free).
+    let round_t0 = Instant::now();
+    let trace = ctx.trace.as_deref();
+    let round_start_us = trace.map_or(0, |t| t.now_us());
+    let mut round = pipeline.begin(spec, weights.to_vec())?;
+    if let Some(t) = &ctx.trace {
+        round.attach_trace(t.clone(), ctx.round);
+    }
+    let round = round;
     let threads = ctx.threads.clamp(1, slots);
     let stacked_k = ctx.client.wants_stacked_batches();
 
@@ -189,6 +228,8 @@ pub fn run_round(
             byte_sample: None,
             errs: Vec::new(),
             missed: Vec::new(),
+            arrivals: Histogram::new(),
+            absorb_ns: 0,
         };
         let note_bytes = |out: &mut WorkerOut, slot: usize, payload: u64, wire: u64| {
             if out.byte_sample.map_or(true, |(s, _, _)| slot < s) {
@@ -223,6 +264,9 @@ pub fn run_round(
                             break Err(e);
                         }
                         retries += 1;
+                        if let Some(t) = trace {
+                            t.slot_event(ctx.round, slot, SlotEvent::Retried, None);
+                        }
                     }
                 }
             };
@@ -237,6 +281,10 @@ pub fn run_round(
             // Offer the upload to the shared round immediately —
             // absorb-on-arrival; only the target shard's lock is held,
             // and only for that shard's fold, never client compute.
+            if let Some(t) = trace {
+                t.slot_event(ctx.round, slot, SlotEvent::Offered, None);
+            }
+            let offer_t0 = trace.map(|_| Instant::now());
             let offered = match ctx.wire {
                 Some(codec) => {
                     let frame = encode_upload(&res.upload, codec);
@@ -252,8 +300,16 @@ pub fn run_round(
                         .with_context(|| format!("upload from client {c} (slot {slot})"))
                 }
             };
+            if let Some(t0) = offer_t0 {
+                out.absorb_ns += t0.elapsed().as_nanos() as u64;
+            }
             match offered {
-                Ok(()) => out.pairs.push((slot, res.loss, retries)),
+                Ok(()) => {
+                    if let Some(t) = trace {
+                        out.arrivals.record(t.now_us().saturating_sub(round_start_us));
+                    }
+                    out.pairs.push((slot, res.loss, retries))
+                }
                 Err(e) => out.errs.push((slot, e, retries)),
             }
         }
@@ -267,6 +323,13 @@ pub fn run_round(
     // runs — and the single-threaded path never pins (pinning the
     // caller's thread would outlive the round).
     let pin_workers = pipeline.options().pin_shards;
+    if let Some(t) = trace {
+        // plan: round entry through accumulator setup, before any
+        // client compute starts.
+        t.span(ctx.round, Phase::Plan, round_start_us, t.now_us());
+    }
+    let compute_start_us = trace.map_or(0, |t| t.now_us());
+    let compute_t0 = Instant::now();
     let worker_outs: Vec<WorkerOut> = if threads <= 1 {
         vec![run_worker()]
     } else {
@@ -289,6 +352,14 @@ pub fn run_round(
         })
     };
 
+    let compute_ms = ms_since(compute_t0);
+    if let Some(t) = trace {
+        // compute: worker-pool span, client compute plus the absorbs
+        // interleaved into it.
+        t.span(ctx.round, Phase::Compute, compute_start_us, t.now_us());
+    }
+    let finalize_start_us = trace.map_or(0, |t| t.now_us());
+
     // Settle the membership; surface the lowest-slot error first when
     // the round cannot close (deterministic failure too).
     let absorb_stats = round.absorb_stats();
@@ -299,7 +370,11 @@ pub fn run_round(
     let mut upload_bytes_per_client = 0u64;
     let mut wire_upload_bytes_per_client = 0u64;
     let mut sample_slot = usize::MAX;
+    let mut arrivals = Histogram::new();
+    let mut absorb_ns = 0u64;
     for wo in worker_outs {
+        arrivals.merge(&wo.arrivals);
+        absorb_ns += wo.absorb_ns;
         if let Some((s, payload, wire)) = wo.byte_sample {
             if s < sample_slot {
                 sample_slot = s;
@@ -325,9 +400,15 @@ pub fn run_round(
     faults.sort_by_key(|(slot, _)| *slot);
     for &(slot, _) in &faults {
         membership.record_drop(slot, DropReason::Faulted);
+        if let Some(t) = trace {
+            t.slot_dropped(ctx.round, slot, "faulted");
+        }
     }
     for slot in missed {
         membership.record_drop(slot, DropReason::Deadline);
+        if let Some(t) = trace {
+            t.slot_dropped(ctx.round, slot, "deadline");
+        }
     }
     debug_assert!(membership.is_settled());
     if !membership.quorum_met() {
@@ -341,11 +422,22 @@ pub fn run_round(
             ),
         });
     }
+    if let Some(t) = trace {
+        // finalize: worker join through the quorum decision.
+        t.span(ctx.round, Phase::Finalize, finalize_start_us, t.now_us());
+    }
+    let reduce_start_us = trace.map_or(0, |t| t.now_us());
+    let reduce_t0 = Instant::now();
     let merged = if membership.is_full() {
         pipeline.finish(round)?
     } else {
         pipeline.finalize_partial(round, &membership)?
     };
+    let reduce_ms = ms_since(reduce_t0);
+    if let Some(t) = trace {
+        t.span(ctx.round, Phase::Reduce, reduce_start_us, t.now_us());
+        t.histogram(Some(ctx.round), "slot_arrival_us", &arrivals);
+    }
     let mean_loss = membership.mean_loss_over_arrived(&losses);
     Ok(RoundOutput {
         losses,
@@ -355,6 +447,13 @@ pub fn run_round(
         upload_bytes_per_client,
         wire_upload_bytes_per_client,
         absorb_stats,
+        timing: RoundTiming {
+            round_ms: ms_since(round_t0),
+            compute_ms,
+            absorb_ms: absorb_ns as f64 / 1e6,
+            reduce_ms,
+        },
+        arrivals,
     })
 }
 
@@ -393,6 +492,8 @@ mod tests {
             threads,
             wire: if wire { Some(&F32LE) } else { None },
             policy: &policy,
+            round: 0,
+            trace: None,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
@@ -478,6 +579,8 @@ mod tests {
                 threads: 4,
                 wire: None,
                 policy: &policy,
+                round: 0,
+                trace: None,
             };
             let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
             tables.push(out.merged.as_sketch().unwrap().table().to_vec());
@@ -527,6 +630,8 @@ mod tests {
             threads: 4,
             wire: None,
             policy: &policy,
+            round: 0,
+            trace: None,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let err = run_round(&ctx, &participants, &weights, &spec, &mut pipeline)
@@ -561,6 +666,8 @@ mod tests {
                 threads,
                 wire: None,
                 policy: &policy,
+                round: 0,
+                trace: None,
             };
             let mut pipeline = RoundPipeline::new(PipelineOptions::default());
             let out = run_round(&ctx, &participants, &weights, &spec, &mut pipeline).unwrap();
@@ -593,6 +700,8 @@ mod tests {
             threads: 4,
             wire: None,
             policy: &policy,
+            round: 0,
+            trace: None,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         assert!(run_round(&ctx, &participants, &weights, &spec, &mut pipeline).is_err());
@@ -624,6 +733,8 @@ mod tests {
             threads: 4,
             wire: None,
             policy: &policy,
+            round: 0,
+            trace: None,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let out = run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)

@@ -25,6 +25,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cohort::{CohortPlan, QuorumPolicy};
 use crate::compression::accounting::{CommStats, Ratios, StalenessTracker};
@@ -40,11 +41,12 @@ use crate::config::{StrategyConfig, TrainConfig};
 use crate::coordinator::engine;
 use crate::coordinator::selection::ClientSelector;
 use crate::data::FedDataset;
-use crate::metrics::{EvalRecord, MetricsLogger, RoundRecord};
+use crate::metrics::{EvalRecord, MetricsLogger, RoundRecord, SummaryRecord};
 use crate::model::build_dataset;
 use crate::runtime::artifact::{Manifest, TaskArtifacts};
 use crate::runtime::exec::run_eval;
 use crate::runtime::Runtime;
+use crate::trace::{ms_since, Histogram, Phase, RoundTiming, TraceSink};
 use crate::util::rng::derive_seed;
 use crate::wire;
 
@@ -86,6 +88,15 @@ pub struct RunSummary {
     pub comm_time_residential_s: f64,
     /// Same under a fast-WiFi profile.
     pub comm_time_wifi_s: f64,
+    /// Wall-clock totals across rounds (`round_ms` always measured;
+    /// `absorb_ms` only nonzero when tracing was on — see
+    /// [`crate::trace::RoundTiming`]).
+    pub timing: RoundTiming,
+    /// Run-level slot-arrival latency percentiles in milliseconds
+    /// (log-bucket upper edges; all 0 when tracing was off).
+    pub arrival_p50_ms: f64,
+    pub arrival_p90_ms: f64,
+    pub arrival_p99_ms: f64,
 }
 
 pub struct Trainer {
@@ -113,6 +124,14 @@ pub struct Trainer {
     /// The round-aggregation pipeline: shard layout, reusable
     /// accumulator pool, absorb-on-arrival, row-strip parallel reduce.
     pipeline: RoundPipeline,
+    /// Structured trace sink (cfg.trace_path; tier "engine"). Shared by
+    /// Arc with each round's engine context and in-flight pipeline
+    /// state. `None` keeps every per-upload path clock-free.
+    trace: Option<Arc<TraceSink>>,
+    /// Phase-timing totals across the run's rounds.
+    timing: RoundTiming,
+    /// Run-level slot-arrival histogram (merged per-round, exact).
+    arrivals: Histogram,
 }
 
 impl Trainer {
@@ -140,6 +159,12 @@ impl Trainer {
             None => None,
         };
         let quorum = cfg.quorum_policy()?;
+        let trace = match cfg.trace_path.as_deref() {
+            Some(p) => Some(Arc::new(
+                TraceSink::create(p, "engine", &cfg.task).context("TrainConfig.trace_path")?,
+            )),
+            None => None,
+        };
         // 0 = inherit the compute parallelism (itself 0 = all cores).
         let reduce = if cfg.reduce_parallelism > 0 { cfg.reduce_parallelism } else { threads };
         let pipeline = RoundPipeline::new(PipelineOptions {
@@ -167,6 +192,9 @@ impl Trainer {
             wire_codec,
             quorum,
             pipeline,
+            trace,
+            timing: RoundTiming::default(),
+            arrivals: Histogram::new(),
         })
     }
 
@@ -252,6 +280,7 @@ impl Trainer {
     /// One federated round. Returns the mean client training loss
     /// (over the arrived participants).
     pub fn step(&mut self, round: usize) -> Result<f64> {
+        let step_t0 = Instant::now();
         let lr = self.cfg.lr.at(round, self.cfg.rounds);
         let plan = CohortPlan::sample(&self.selector, self.dataset.as_ref(), round);
         let weights = self.aggregator.begin_round(&plan.sizes);
@@ -268,6 +297,8 @@ impl Trainer {
             threads: self.threads,
             wire: self.wire_codec,
             policy: &self.quorum,
+            round: round as u64,
+            trace: self.trace.clone(),
         };
         let out = engine::run_round(&ctx, &plan.participants, &weights, &spec, &mut self.pipeline)
             .with_context(|| format!("round {round}"))?;
@@ -277,6 +308,9 @@ impl Trainer {
         let arrived_clients: Vec<usize> =
             out.membership.arrived_slots().iter().map(|&s| plan.participants[s]).collect();
         let upload_per_client = out.upload_bytes_per_client;
+        // broadcast span: the server half — update extraction, the wire
+        // round-trip, and applying the update to the weights.
+        let broadcast_start_us = self.trace.as_ref().map_or(0, |t| t.now_us());
         let update = self.aggregator.finish(&out.merged, lr)?;
         // The server is done with the merged sum: return the
         // accumulator to the pipeline's pool for next round.
@@ -295,6 +329,9 @@ impl Trainer {
             None => (update, 0),
         };
         update.apply(&mut self.w);
+        if let Some(t) = &self.trace {
+            t.span(round as u64, Phase::Broadcast, broadcast_start_us, t.now_us());
+        }
         let update_nnz = update.nnz();
         let stale_bytes = self.stale.round(round as u64, &arrived_clients, update_nnz);
         let down_per_client = update.payload_bytes();
@@ -315,6 +352,12 @@ impl Trainer {
             .record_round(&LinkProfile::wifi(), upload_per_client, down_per_client);
         let mean_loss = out.mean_loss;
         let n = arrived_clients.len() as u64;
+        // Full-step wall clock (engine round plus the server half),
+        // accumulated into the run totals alongside the engine's phase
+        // breakdown.
+        let timing = RoundTiming { round_ms: ms_since(step_t0), ..out.timing };
+        self.timing.accumulate(&timing);
+        self.arrivals.merge(&out.arrivals);
         self.logger.log_round(RoundRecord {
             round,
             loss: mean_loss,
@@ -331,6 +374,10 @@ impl Trainer {
             dropped_slots: mem.dropped_slots,
             retried_slots: mem.retried_slots,
             update_nnz,
+            round_ms: timing.round_ms,
+            compute_ms: timing.compute_ms,
+            absorb_ms: timing.absorb_ms,
+            reduce_ms: timing.reduce_ms,
             tier: None,
         });
         if self.cfg.verbose {
@@ -390,7 +437,7 @@ impl Trainer {
         let baseline_rounds = self.cfg.baseline_rounds.unwrap_or(self.cfg.rounds) as u64;
         let ratios =
             self.comm.ratios(baseline_rounds, self.cfg.clients_per_round as u64, self.dim);
-        Ok(RunSummary {
+        let summary = RunSummary {
             strategy: self.aggregator.name().to_string(),
             task: self.cfg.task.clone(),
             rounds: self.cfg.rounds,
@@ -410,6 +457,37 @@ impl Trainer {
             ratios,
             comm_time_residential_s: self.comm_time_res.total_s,
             comm_time_wifi_s: self.comm_time_wifi.total_s,
-        })
+            timing: self.timing,
+            arrival_p50_ms: self.arrivals.percentile(0.50) as f64 / 1e3,
+            arrival_p90_ms: self.arrivals.percentile(0.90) as f64 / 1e3,
+            arrival_p99_ms: self.arrivals.percentile(0.99) as f64 / 1e3,
+        };
+        self.logger.log_summary(&SummaryRecord {
+            strategy: summary.strategy.clone(),
+            task: summary.task.clone(),
+            rounds: summary.rounds,
+            final_loss: summary.final_loss,
+            upload_bytes: summary.upload_bytes,
+            download_bytes: summary.download_bytes,
+            dropped_slots: summary.dropped_slots,
+            retried_slots: summary.retried_slots,
+            round_ms: summary.timing.round_ms,
+            compute_ms: summary.timing.compute_ms,
+            absorb_ms: summary.timing.absorb_ms,
+            reduce_ms: summary.timing.reduce_ms,
+            arrival_p50_ms: summary.arrival_p50_ms,
+            arrival_p90_ms: summary.arrival_p90_ms,
+            arrival_p99_ms: summary.arrival_p99_ms,
+        });
+        // Surface write failures loudly instead of shipping a silently
+        // truncated log or trace.
+        self.logger.flush()?;
+        if let Some(t) = &self.trace {
+            // No run-level histogram here: the per-round `hist` events
+            // already merge bucket-exactly to the run total, and a
+            // duplicate emission would double-fold in `trace-summary`.
+            t.flush()?;
+        }
+        Ok(summary)
     }
 }

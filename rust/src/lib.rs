@@ -44,6 +44,7 @@ pub mod relay;
 pub mod runtime;
 pub mod serialize;
 pub mod sketch;
+pub mod trace;
 pub mod transport;
 pub mod util;
 pub mod wire;

@@ -8,6 +8,8 @@
 //!               uploads for it
 //!   relay       mid-tier aggregator: join an upstream `serve` as one
 //!               subtree while serving downstream `join` workers
+//!   trace-summary  fold one or more JSONL trace files (`--trace` output
+//!               from any tier) into a per-phase / per-tier table
 //!   experiment  regenerate a paper table/figure (fig3|fig4|fig5|fig10|
 //!               table1|ablation)
 //!   inspect     print manifest / artifact info
@@ -32,6 +34,12 @@ fetchsgd — communication-efficient federated learning with sketching
 
 USAGE:
   fetchsgd train --config CFG.json [key=value ...]
+            (observability, train/serve/relay alike:
+             --trace PATH | trace_path=PATH  write phase spans, slot
+                                  timelines, and latency histograms as
+                                  JSONL; off by default and free when
+                                  off. Fold with `fetchsgd
+                                  trace-summary`.)
             (quorum knobs, train and serve alike:
              quorum_fraction=F    close a round once F of the cohort
                                   arrived, in (0,1]; default 1.0 = all
@@ -70,6 +78,9 @@ USAGE:
              workers, so trees nest to any depth; see shards=R, or
              shard_tiers=RxKx... for a depth>2 tree, to make a flat
              server bitwise-match the tree)
+  fetchsgd trace-summary FILE [FILE ...]
+            (merge trace files from any set of tiers — e.g. the root's
+             and every relay's — into one per-tier round timeline)
   fetchsgd experiment <fig3|fig4|fig5|fig10|table1|ablation>
             [--dataset cifar10|cifar100] [--scale smoke|small|full]
             [--which ABLATION] [--curves] [--seeds N]
@@ -134,6 +145,11 @@ fn run() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    // Parsed before Args::parse: its operands are positional file
+    // paths, which the flag grammar would warn about and drop.
+    if cmd == "trace-summary" {
+        return cmd_trace_summary(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..]);
     let artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
@@ -165,6 +181,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     if args.has("verbose") {
         cfg.verbose = true;
+    }
+    if let Some(p) = args.get("trace") {
+        cfg.trace_path = Some(PathBuf::from(p));
     }
     eprintln!(
         "[train] task={} strategy={} rounds={} W={}",
@@ -212,6 +231,9 @@ fn transport_cfg(args: &Args, endpoint_flag: &str) -> Result<TrainConfig> {
     }
     if args.has("verbose") {
         cfg.verbose = true;
+    }
+    if let Some(p) = args.get("trace") {
+        cfg.trace_path = Some(PathBuf::from(p));
     }
     if cfg.transport.is_none() {
         bail!("no transport endpoint: pass --{endpoint_flag} or set transport= in the config");
@@ -263,6 +285,18 @@ fn cmd_relay(args: &Args) -> Result<()> {
         "relayed: rounds={} merged_uploads={} reconnects={} upstream {} B downstream {} B",
         s.rounds, s.merged_uploads, s.reconnects, s.upstream_bytes, s.downstream_bytes
     );
+    Ok(())
+}
+
+/// `fetchsgd trace-summary FILE [FILE ...]` — fold trace files from any
+/// set of tiers into one per-phase / per-tier breakdown.
+fn cmd_trace_summary(argv: &[String]) -> Result<()> {
+    let files: Vec<&String> = argv.iter().filter(|a| !a.starts_with("--")).collect();
+    if files.is_empty() {
+        bail!("trace-summary needs at least one trace file\n{USAGE}");
+    }
+    let report = fetchsgd::trace::summary::fold_files(&files)?;
+    print!("{}", fetchsgd::trace::summary::render(&report));
     Ok(())
 }
 

@@ -1,6 +1,8 @@
-//! Run logging: per-round training records and eval records, written as
-//! JSONL (one JSON object per line) so experiment drivers and external
-//! tooling can consume them without a parser dependency.
+//! Run logging: per-round training records, eval records, and an
+//! end-of-run summary record, written as JSONL (one JSON object per
+//! line) so experiment drivers and external tooling can consume them
+//! without a parser dependency. The full schema — including which keys
+//! are omitted when zero — is documented in `docs/OBSERVABILITY.md`.
 
 use anyhow::Result;
 use std::io::Write;
@@ -53,6 +55,19 @@ pub struct RoundRecord {
     /// Slots that needed at least one retry or reassignment.
     pub retried_slots: usize,
     pub update_nnz: usize,
+    /// Wall-clock duration of the round in milliseconds. Always
+    /// measured and always logged — the minimal timing fact every
+    /// record carries, independent of the trace file.
+    pub round_ms: f64,
+    /// Client-compute phase duration (engine worker-pool span). 0 — and
+    /// key omitted — for drivers whose compute is remote (serve/relay).
+    pub compute_ms: f64,
+    /// Cumulative time folding uploads into shard accumulators (traced
+    /// engine rounds) or the server's upload-wait span. 0 when not
+    /// measured.
+    pub absorb_ms: f64,
+    /// Shard reduce + finalize duration. 0 when not measured.
+    pub reduce_ms: f64,
     /// Which aggregation tier produced this record when the run is part
     /// of a relay tree: `"root"` for the tree's round server, `"relay"`
     /// for a mid-tier aggregator. `None` (flat and in-process runs)
@@ -69,10 +84,48 @@ pub struct EvalRecord {
     pub perplexity: f64,
 }
 
-/// JSONL writer; silently no-ops when no path is configured (keeps the
-/// trainer's hot loop branch-free of IO concerns).
+/// The end-of-run record (`"type": "summary"`, one per log): the
+/// run-level aggregates a consumer would otherwise recompute from every
+/// round row. Timing aggregates are totals across rounds; the arrival
+/// percentiles come from the run-level slot-arrival histogram and are
+/// only nonzero (and only logged) when tracing measured them.
+#[derive(Clone, Debug, Default)]
+pub struct SummaryRecord {
+    pub strategy: String,
+    pub task: String,
+    pub rounds: usize,
+    pub final_loss: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub dropped_slots: u64,
+    pub retried_slots: u64,
+    /// Total wall-clock across rounds, ms. Always measured.
+    pub round_ms: f64,
+    /// Phase totals across rounds, ms; 0 (key omitted) when the driver
+    /// never measured that phase.
+    pub compute_ms: f64,
+    pub absorb_ms: f64,
+    pub reduce_ms: f64,
+    /// Slot-arrival latency percentiles over the whole run, ms
+    /// (log-bucket upper bounds; 0 and omitted when tracing was off).
+    pub arrival_p50_ms: f64,
+    pub arrival_p90_ms: f64,
+    pub arrival_p99_ms: f64,
+}
+
+/// JSONL writer; no-ops when no path is configured (keeps the trainer's
+/// hot loop branch-free of IO concerns). Write failures are *not*
+/// silent: the first IO error is held and surfaced by
+/// [`MetricsLogger::flush`] — and shouted to stderr on drop if nobody
+/// called flush — so a full disk produces a loud truncation, not a
+/// quietly shortened JSONL.
 pub struct MetricsLogger {
     file: Option<std::fs::File>,
+    /// First write error; once set, further writes are skipped.
+    write_error: Option<std::io::Error>,
+    /// Whether `write_error` was already surfaced through `flush`, so
+    /// drop doesn't report it twice.
+    error_reported: bool,
     pub rounds: Vec<RoundRecord>,
     pub evals: Vec<EvalRecord>,
 }
@@ -90,13 +143,41 @@ impl MetricsLogger {
             }
             None => None,
         };
-        Ok(MetricsLogger { file, rounds: Vec::new(), evals: Vec::new() })
+        Ok(MetricsLogger {
+            file,
+            write_error: None,
+            error_reported: false,
+            rounds: Vec::new(),
+            evals: Vec::new(),
+        })
     }
 
     fn write_line(&mut self, v: Value) {
-        if let Some(f) = &mut self.file {
-            let _ = writeln!(f, "{}", v.to_json());
+        if self.write_error.is_some() {
+            return;
         }
+        if let Some(f) = &mut self.file {
+            if let Err(e) = writeln!(f, "{}", v.to_json()) {
+                self.write_error = Some(e);
+            }
+        }
+    }
+
+    /// Surface the first write error, if any. Call once at end of run;
+    /// drop also reports (on stderr) if this was never called.
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            if self.write_error.is_none() {
+                if let Err(e) = f.flush() {
+                    self.write_error = Some(e);
+                }
+            }
+        }
+        if let Some(e) = &self.write_error {
+            self.error_reported = true;
+            return Err(anyhow::anyhow!("metrics log write failed; log is truncated: {e}"));
+        }
+        Ok(())
     }
 
     pub fn log_round(&mut self, r: RoundRecord) {
@@ -135,6 +216,18 @@ impl MetricsLogger {
         fields.push(("dropped_slots", num(r.dropped_slots as f64)));
         fields.push(("retried_slots", num(r.retried_slots as f64)));
         fields.push(("update_nnz", num(r.update_nnz as f64)));
+        // Round wall-clock is always present; the finer phase timings
+        // appear only when the driver measured them.
+        fields.push(("round_ms", num(r.round_ms)));
+        if r.compute_ms > 0.0 {
+            fields.push(("compute_ms", num(r.compute_ms)));
+        }
+        if r.absorb_ms > 0.0 {
+            fields.push(("absorb_ms", num(r.absorb_ms)));
+        }
+        if r.reduce_ms > 0.0 {
+            fields.push(("reduce_ms", num(r.reduce_ms)));
+        }
         // Tree runs tag each record with its aggregation tier so one
         // merged log can be split back into root vs relay rows.
         if let Some(tier) = r.tier {
@@ -155,21 +248,97 @@ impl MetricsLogger {
         self.evals.push(e);
     }
 
-    /// Mean training loss over the last `n` rounds (smoother signal than
-    /// a single round on tiny-batch federated tasks).
+    pub fn log_summary(&mut self, r: &SummaryRecord) {
+        let mut fields = vec![
+            ("type", s("summary")),
+            ("strategy", s(&r.strategy)),
+            ("task", s(&r.task)),
+            ("rounds", num(r.rounds as f64)),
+            ("final_loss", num(r.final_loss)),
+            ("upload_bytes", num(r.upload_bytes as f64)),
+            ("download_bytes", num(r.download_bytes as f64)),
+            ("dropped_slots", num(r.dropped_slots as f64)),
+            ("retried_slots", num(r.retried_slots as f64)),
+            ("round_ms", num(r.round_ms)),
+        ];
+        for (key, v) in [
+            ("compute_ms", r.compute_ms),
+            ("absorb_ms", r.absorb_ms),
+            ("reduce_ms", r.reduce_ms),
+            ("arrival_p50_ms", r.arrival_p50_ms),
+            ("arrival_p90_ms", r.arrival_p90_ms),
+            ("arrival_p99_ms", r.arrival_p99_ms),
+        ] {
+            if v > 0.0 {
+                fields.push((key, num(v)));
+            }
+        }
+        self.write_line(obj(fields));
+    }
+
+    /// Training-loss signal over the last `n` rounds, weighted by each
+    /// round's participants: a quorum-closed partial round contributes
+    /// in proportion to the uploads that actually reached it, and a
+    /// zero-participant round contributes nothing instead of dragging
+    /// the mean. Falls back to the unweighted mean if the whole window
+    /// had zero participants (degenerate, but defined).
     pub fn recent_loss(&self, n: usize) -> f64 {
         if self.rounds.is_empty() {
             return f64::NAN;
         }
         let start = self.rounds.len().saturating_sub(n);
         let tail = &self.rounds[start..];
-        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+        let weight: f64 = tail.iter().map(|r| r.participants as f64).sum();
+        if weight == 0.0 {
+            return tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64;
+        }
+        tail.iter().map(|r| r.loss * r.participants as f64).sum::<f64>() / weight
+    }
+}
+
+impl Drop for MetricsLogger {
+    fn drop(&mut self) {
+        if let Some(f) = &mut self.file {
+            if self.write_error.is_none() {
+                if let Err(e) = f.flush() {
+                    self.write_error = Some(e);
+                }
+            }
+        }
+        if let (Some(e), false) = (&self.write_error, self.error_reported) {
+            eprintln!("warning: metrics log write failed; log is truncated: {e}");
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn record(round: usize, loss: f64, participants: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            loss,
+            lr: 0.0,
+            upload_bytes: 0,
+            download_bytes: 0,
+            wire_upload_bytes: 0,
+            wire_download_bytes: 0,
+            transport_bytes: 0,
+            absorb_stalls: 0,
+            parked_bytes: 0,
+            chosen_shards: 0,
+            participants,
+            dropped_slots: 0,
+            retried_slots: 0,
+            update_nnz: 0,
+            round_ms: 1.0,
+            compute_ms: 0.0,
+            absorb_ms: 0.0,
+            reduce_ms: 0.0,
+            tier: None,
+        }
+    }
 
     #[test]
     fn logs_to_file_as_jsonl() {
@@ -194,9 +363,14 @@ mod tests {
                 dropped_slots: 1,
                 retried_slots: 2,
                 update_nnz: 5,
+                round_ms: 12.5,
+                compute_ms: 8.25,
+                absorb_ms: 1.5,
+                reduce_ms: 0.75,
                 tier: Some("root"),
             });
             m.log_eval(EvalRecord { round: 0, eval_loss: 2.0, accuracy: 0.5, perplexity: 7.4 });
+            m.flush().unwrap();
         }
         let text = std::fs::read_to_string(&p).unwrap();
         let lines: Vec<&str> = text.lines().collect();
@@ -216,6 +390,11 @@ mod tests {
         assert!((v.req_f64("participants").unwrap() - 3.0).abs() < 1e-9);
         assert!((v.req_f64("dropped_slots").unwrap() - 1.0).abs() < 1e-9);
         assert!((v.req_f64("retried_slots").unwrap() - 2.0).abs() < 1e-9);
+        // round timing: wall clock always, phases when measured
+        assert!((v.req_f64("round_ms").unwrap() - 12.5).abs() < 1e-9);
+        assert!((v.req_f64("compute_ms").unwrap() - 8.25).abs() < 1e-9);
+        assert!((v.req_f64("absorb_ms").unwrap() - 1.5).abs() < 1e-9);
+        assert!((v.req_f64("reduce_ms").unwrap() - 0.75).abs() < 1e-9);
         // tree runs tag their tier; flat runs omit the key entirely
         assert_eq!(v.req_str("tier").unwrap(), "root");
         let v = crate::serialize::json::parse(lines[1]).unwrap();
@@ -224,29 +403,75 @@ mod tests {
     }
 
     #[test]
-    fn recent_loss_window() {
+    fn recent_loss_weights_by_participants() {
         let mut m = MetricsLogger::new(None).unwrap();
+        // Equal participation: identical to the old unweighted mean.
         for (i, l) in [10.0, 2.0, 4.0].into_iter().enumerate() {
-            m.log_round(RoundRecord {
-                round: i,
-                loss: l,
-                lr: 0.0,
-                upload_bytes: 0,
-                download_bytes: 0,
-                wire_upload_bytes: 0,
-                wire_download_bytes: 0,
-                transport_bytes: 0,
-                absorb_stalls: 0,
-                parked_bytes: 0,
-                chosen_shards: 0,
-                participants: 1,
-                dropped_slots: 0,
-                retried_slots: 0,
-                update_nnz: 0,
-                tier: None,
-            });
+            m.log_round(record(i, l, 1));
         }
         assert!((m.recent_loss(2) - 3.0).abs() < 1e-9);
         assert!((m.recent_loss(10) - 16.0 / 3.0).abs() < 1e-9);
+
+        // A quorum-closed partial round (1 of 4 participants) must not
+        // pull the window as hard as a full round.
+        let mut m = MetricsLogger::new(None).unwrap();
+        m.log_round(record(0, 2.0, 4));
+        m.log_round(record(1, 10.0, 1));
+        assert!((m.recent_loss(2) - (2.0 * 4.0 + 10.0) / 5.0).abs() < 1e-9);
+
+        // Zero-participant rounds (e.g. a relay's empty chain) vanish
+        // from the signal entirely.
+        let mut m = MetricsLogger::new(None).unwrap();
+        m.log_round(record(0, 3.0, 2));
+        m.log_round(record(1, 0.0, 0));
+        assert!((m.recent_loss(2) - 3.0).abs() < 1e-9);
+
+        // Degenerate all-zero window: fall back to the plain mean
+        // rather than dividing by zero.
+        let mut m = MetricsLogger::new(None).unwrap();
+        m.log_round(record(0, 5.0, 0));
+        assert!((m.recent_loss(1) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_record_omits_unmeasured_timing_keys() {
+        let dir = std::env::temp_dir().join(format!("fsgd_sum_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.jsonl");
+        {
+            let mut m = MetricsLogger::new(Some(&p)).unwrap();
+            m.log_summary(&SummaryRecord {
+                strategy: "fetchsgd".into(),
+                task: "smoke".into(),
+                rounds: 3,
+                final_loss: 1.25,
+                round_ms: 30.0,
+                compute_ms: 20.0,
+                ..SummaryRecord::default()
+            });
+            m.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let v = crate::serialize::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.req_str("type").unwrap(), "summary");
+        assert_eq!(v.req_str("strategy").unwrap(), "fetchsgd");
+        assert!((v.req_f64("round_ms").unwrap() - 30.0).abs() < 1e-9);
+        assert!((v.req_f64("compute_ms").unwrap() - 20.0).abs() < 1e-9);
+        assert!(v.get("absorb_ms").is_none(), "unmeasured phases are omitted");
+        assert!(v.get("arrival_p50_ms").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A full "disk" surfaces as a flush error instead of a silently
+    /// truncated log (Linux-only: needs /dev/full).
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn write_errors_surface_on_flush() {
+        let mut m = MetricsLogger::new(Some(Path::new("/dev/full"))).unwrap();
+        m.log_round(record(0, 1.0, 1));
+        let err = m.flush().unwrap_err().to_string();
+        assert!(err.contains("metrics log write failed"), "{err}");
+        // The record is still retained in memory for summaries.
+        assert_eq!(m.rounds.len(), 1);
     }
 }

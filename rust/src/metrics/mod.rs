@@ -4,5 +4,5 @@
 pub mod logger;
 pub mod pareto;
 
-pub use logger::{EvalRecord, MetricsLogger, RoundRecord};
+pub use logger::{EvalRecord, MetricsLogger, RoundRecord, SummaryRecord};
 pub use pareto::pareto_frontier;

@@ -81,14 +81,18 @@ use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
 #[cfg(unix)]
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::cohort::QuorumPolicy;
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::UploadSpec;
 use crate::metrics::{MetricsLogger, RoundRecord};
+use crate::trace::{ms_since, ConnIo, Histogram, Phase, SlotEvent, TraceSink};
 use crate::transport::client::ReconnectSchedule;
-use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
+use crate::transport::framing::{
+    read_msg, read_msg_timed, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES,
+};
 use crate::transport::proto::{
     Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
     OUTCOME_DROPPED_FAULTED, PROTO_VERSION,
@@ -140,6 +144,10 @@ pub struct RelayOptions {
     pub reconnect_backoff_ms: u64,
     /// JSONL metrics log (`tier: "relay"` rows); None = no log.
     pub log_path: Option<std::path::PathBuf>,
+    /// Structured trace output (`tier: "relay"` events, see
+    /// [`crate::trace`]); None (the default) = tracing off, and the
+    /// round hot path takes no extra clock reads or allocations.
+    pub trace_path: Option<std::path::PathBuf>,
 }
 
 impl Default for RelayOptions {
@@ -155,6 +163,7 @@ impl Default for RelayOptions {
             reconnect_attempts: 0,
             reconnect_backoff_ms: 200,
             log_path: None,
+            trace_path: None,
         }
     }
 }
@@ -199,6 +208,14 @@ struct PendingRecord {
     /// began; the delta at `RoundEnd` is this tier's transport bytes
     /// for the round.
     bytes_marker: u64,
+    /// Wall-clock of the subtree round (assign received → upload
+    /// staged; the upstream reply and `RoundEnd` forward land after
+    /// staging, so they are not included).
+    round_ms: f64,
+    /// Time blocked waiting on downstream uploads.
+    absorb_ms: f64,
+    /// `finalize_subtree` + merged-frame encode time.
+    reduce_ms: f64,
 }
 
 /// One relay node: upstream `Conn` per `serve_upstream` call,
@@ -215,6 +232,10 @@ pub struct Relay {
     /// left-associated in child order.
     pipeline: RoundPipeline,
     logger: MetricsLogger,
+    /// Trace sink (tier `"relay"`), shared with nothing — a relay's
+    /// events all carry *global* slot ids so traces from every tier of
+    /// a tree merge into one timeline (see `fetchsgd trace-summary`).
+    trace: Option<Arc<TraceSink>>,
     pending: Option<PendingRecord>,
     sum: RelaySummary,
     #[cfg(unix)]
@@ -261,12 +282,20 @@ impl Relay {
             ..Default::default()
         });
         let logger = MetricsLogger::new(opts.log_path.as_deref())?;
+        let trace = match opts.trace_path.as_deref() {
+            Some(p) => Some(Arc::new(
+                TraceSink::create(p, "relay", &format!("{listen}"))
+                    .context("RelayOptions.trace_path")?,
+            )),
+            None => None,
+        };
         Ok(Relay {
             listener,
             opts,
             conns: Vec::new(),
             pipeline,
             logger,
+            trace,
             pending: None,
             sum: RelaySummary::default(),
             #[cfg(unix)]
@@ -358,7 +387,11 @@ impl Relay {
                     // are exactly what the root broadcast.
                     let wire_download = update_frame.len() as u64;
                     let fwd = Msg::RoundEnd { round, update_frame }.encode();
+                    let bcast_start_us = self.trace.as_ref().map(|t| t.now_us());
                     self.broadcast_down(&fwd);
+                    if let (Some(t), Some(b0)) = (&self.trace, bcast_start_us) {
+                        t.span(round, Phase::Broadcast, b0, t.now_us());
+                    }
                     self.sum.rounds += 1;
                     if let Some(p) = self.pending.take() {
                         if p.round == round {
@@ -385,6 +418,12 @@ impl Relay {
                     for c in self.conns.drain(..) {
                         c.shutdown();
                     }
+                    self.logger.flush()?;
+                    if let Some(t) = &self.trace {
+                        // Per-round `hist` events already merge exactly
+                        // to the run total; no run-level duplicate.
+                        t.flush().context("flushing relay trace")?;
+                    }
                     return Ok(());
                 }
                 other => bail!("unexpected {} message from upstream", other.kind_name()),
@@ -406,6 +445,7 @@ impl Relay {
         weights_frame: &[u8],
     ) -> Result<Vec<u8>> {
         let bytes_marker = self.sum.upstream_bytes + self.sum.downstream_bytes;
+        let round_t0 = Instant::now();
         if entries.windows(2).any(|w| w[1].0 <= w[0].0) {
             bail!("subtree-assign slots must be strictly ascending");
         }
@@ -425,6 +465,9 @@ impl Relay {
                 parked_bytes: 0,
                 chosen_shards: 0,
                 bytes_marker,
+                round_ms: ms_since(round_t0),
+                absorb_ms: 0.0,
+                reduce_ms: 0.0,
             });
             return Ok(Msg::SubtreeUpload { round, reports: Vec::new(), frame: Vec::new() }
                 .encode());
@@ -440,8 +483,11 @@ impl Relay {
                 entries,
                 weights_frame,
                 bytes_marker,
+                round_t0,
             );
         }
+        let trace = self.trace.clone();
+        let round_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let nconns = self.conns.len();
         // The relay-side round deadline: the whole subtree round must
         // fit inside it, so each read below is bounded by whichever of
@@ -488,15 +534,26 @@ impl Relay {
                 }
             }
         }
+        if let Some(t) = &trace {
+            t.span(round, Phase::Plan, round_start_us, t.now_us());
+        }
 
         // One reader per downstream connection, offering frames
         // straight from the read buffer. Uploads on one connection
         // arrive in assignment order (the client contract); absorb
         // order across connections is enforced by the in-flight state.
+        //
+        // Trace events here carry *global* slot ids (workers echo them
+        // anyway) so this tier's timeline merges with the root's — the
+        // absorber's own per-slot instrumentation is left unattached
+        // because it speaks local chain positions.
         struct DownRead {
             /// `(local_slot, loss)` for uploads absorbed, in order.
             done: Vec<(usize, f32)>,
             bytes_in: u64,
+            /// Upload-arrival latencies on this connection (µs since
+            /// round start; empty when untraced).
+            arrivals: Histogram,
             /// Content fault (garbage frame, wrong slot, bad message)
             /// vs. plain disconnect.
             fault: bool,
@@ -506,21 +563,26 @@ impl Relay {
         let absorber = &inflight;
         let max_msg = self.opts.max_msg;
         let read_timeout = self.opts.read_timeout;
+        let wait_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let wait_t0 = Instant::now();
         let reads: Vec<DownRead> = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(nconns);
             for (i, conn) in self.conns.iter_mut().enumerate() {
                 let assigned = &assignments[i];
                 let live = alive[i];
+                let trace = trace.as_deref();
                 handles.push(scope.spawn(move || {
                     let mut r = DownRead {
                         done: Vec::new(),
                         bytes_in: 0,
+                        arrivals: Histogram::new(),
                         fault: false,
                         timed_out: false,
                     };
                     if !live {
                         return r;
                     }
+                    let mut io = ConnIo::default();
                     for &(gslot, local, _client) in assigned {
                         if let Some(dl) = deadline {
                             let rem = dl.saturating_duration_since(Instant::now());
@@ -529,12 +591,20 @@ impl Relay {
                                 // deadline: close the chain partial,
                                 // report the tail deadline-dropped.
                                 r.timed_out = true;
-                                return r;
+                                break;
                             }
                             let t = read_timeout.min(rem);
                             let _ = conn.set_timeouts(Some(t), Some(t));
                         }
-                        let bytes = match read_msg(conn, max_msg) {
+                        let read = match trace {
+                            Some(_) => read_msg_timed(conn, max_msg).map(|(b, n, st, rd)| {
+                                io.stall_us += st;
+                                io.read_us += rd;
+                                (b, n)
+                            }),
+                            None => read_msg(conn, max_msg),
+                        };
+                        let bytes = match read {
                             Ok((bytes, n)) => {
                                 r.bytes_in += n;
                                 bytes
@@ -551,7 +621,7 @@ impl Relay {
                                     })
                                     .unwrap_or(false)
                                     || deadline.is_some_and(|dl| Instant::now() >= dl);
-                                return r;
+                                break;
                             }
                         };
                         let ok = (|| -> Result<f32> {
@@ -559,6 +629,14 @@ impl Relay {
                                 Msg::Upload { slot, loss, frame } => {
                                     if slot != gslot {
                                         bail!("expected upload for slot {gslot}, got {slot}");
+                                    }
+                                    if let Some(t) = trace {
+                                        t.slot_event(
+                                            round,
+                                            gslot as usize,
+                                            SlotEvent::Offered,
+                                            Some(i),
+                                        );
                                     }
                                     absorber.offer_frame_bytes(local, &frame)?;
                                     Ok(loss)
@@ -569,18 +647,38 @@ impl Relay {
                             }
                         })();
                         match ok {
-                            Ok(loss) => r.done.push((local, loss)),
+                            Ok(loss) => {
+                                if let Some(t) = trace {
+                                    t.slot_event(
+                                        round,
+                                        gslot as usize,
+                                        SlotEvent::Absorbed,
+                                        Some(i),
+                                    );
+                                    r.arrivals
+                                        .record(t.now_us().saturating_sub(round_start_us));
+                                }
+                                r.done.push((local, loss));
+                            }
                             Err(_) => {
                                 r.fault = true;
-                                return r;
+                                break;
                             }
                         }
+                    }
+                    if let Some(t) = trace {
+                        t.conn(round, i, io.stall_us, io.read_us, io.write_us);
                     }
                     r
                 }));
             }
             handles.into_iter().map(|h| h.join().expect("downstream reader panicked")).collect()
         });
+        let absorb_ms = ms_since(wait_t0);
+        if let Some(t) = &trace {
+            t.span(round, Phase::AbsorbWait, wait_start_us, t.now_us());
+        }
+        let fin_start_us = trace.as_ref().map_or(0, |t| t.now_us());
 
         // Roll up outcomes: a worker's unserved tail is dropped with
         // the fault/disconnect/deadline distinction the root's
@@ -588,8 +686,10 @@ impl Relay {
         let mut outcomes = vec![OUTCOME_DROPPED_DISCONNECTED; m];
         let mut losses = vec![0.0f32; m];
         let mut dead = vec![false; nconns];
+        let mut round_arrivals = Histogram::new();
         for (i, r) in reads.iter().enumerate() {
             self.sum.downstream_bytes += r.bytes_in;
+            round_arrivals.merge(&r.arrivals);
             for &(local, loss) in &r.done {
                 outcomes[local] = OUTCOME_ARRIVED;
                 losses[local] = loss;
@@ -603,8 +703,11 @@ impl Relay {
                 } else {
                     OUTCOME_DROPPED_DISCONNECTED
                 };
-                for &(_, local, _) in &assignments[i][r.done.len()..] {
+                for &(gslot, local, _) in &assignments[i][r.done.len()..] {
                     outcomes[local] = reason;
+                    if let Some(t) = &trace {
+                        t.slot_dropped(round, gslot as usize, outcome_str(reason));
+                    }
                 }
             }
         }
@@ -643,6 +746,11 @@ impl Relay {
         // Fold the arrived subset into one merged frame. Parked frames
         // past dropped slots drain here; global-λ weighting means the
         // root absorbs this frame with weight 1 and renormalizes once.
+        let reduce_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        if let Some(t) = &trace {
+            t.span(round, Phase::Finalize, fin_start_us, reduce_start_us);
+        }
+        let reduce_t0 = Instant::now();
         let frame = match self.pipeline.finalize_subtree(inflight)? {
             Some(merged) => {
                 let bytes = match spec {
@@ -657,6 +765,11 @@ impl Relay {
             }
             None => Vec::new(),
         };
+        let reduce_ms = ms_since(reduce_t0);
+        if let Some(t) = &trace {
+            t.span(round, Phase::Reduce, reduce_start_us, t.now_us());
+            t.histogram(Some(round), "slot_arrival_us", &round_arrivals);
+        }
 
         let reports: Vec<SlotReport> = entries
             .iter()
@@ -680,6 +793,9 @@ impl Relay {
             parked_bytes: stats.parked_bytes,
             chosen_shards: stats.chosen_shards as usize,
             bytes_marker,
+            round_ms: ms_since(round_t0),
+            absorb_ms,
+            reduce_ms,
         });
         Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
     }
@@ -711,7 +827,10 @@ impl Relay {
         entries: &[(u32, u32, f32)],
         weights_frame: &[u8],
         bytes_marker: u64,
+        round_t0: Instant,
     ) -> Result<Vec<u8>> {
+        let trace = self.trace.clone();
+        let round_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let m = entries.len();
         let nconns = self.conns.len();
         let deadline = self.opts.quorum.round_deadline().map(|d| Instant::now() + d);
@@ -757,6 +876,9 @@ impl Relay {
                 Err(_) => alive[k] = false,
             }
         }
+        if let Some(t) = &trace {
+            t.span(round, Phase::Plan, round_start_us, t.now_us());
+        }
 
         // One reader per child: a single subtree-upload each, bounded
         // by the tighter of the per-read timeout and the relay's round
@@ -764,9 +886,14 @@ impl Relay {
         struct ChildRead {
             upload: Option<(u64, Vec<SlotReport>, Vec<u8>)>,
             bytes_in: u64,
+            /// When the merged upload finished arriving (µs since
+            /// round start; 0 when untraced or nothing arrived).
+            arrival_us: u64,
             fault: bool,
             deadline_hit: bool,
         }
+        let wait_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let wait_t0 = Instant::now();
         let reads: Vec<ChildRead> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .conns
@@ -774,10 +901,12 @@ impl Relay {
                 .enumerate()
                 .map(|(k, conn)| {
                     let live = alive[k];
+                    let trace = trace.as_deref();
                     scope.spawn(move || {
                         let mut out = ChildRead {
                             upload: None,
                             bytes_in: 0,
+                            arrival_us: 0,
                             fault: false,
                             deadline_hit: false,
                         };
@@ -793,11 +922,24 @@ impl Relay {
                             let t = read_timeout.min(rem);
                             let _ = conn.set_timeouts(Some(t), Some(t));
                         }
-                        match read_msg(conn, max_msg) {
+                        let mut io = ConnIo::default();
+                        let read = match trace {
+                            Some(_) => read_msg_timed(conn, max_msg).map(|(b, n, st, rd)| {
+                                io.stall_us += st;
+                                io.read_us += rd;
+                                (b, n)
+                            }),
+                            None => read_msg(conn, max_msg),
+                        };
+                        match read {
                             Ok((bytes, n)) => {
                                 out.bytes_in = n;
                                 match Msg::decode(bytes) {
                                     Ok(Msg::SubtreeUpload { round, reports, frame }) => {
+                                        if let Some(t) = trace {
+                                            out.arrival_us =
+                                                t.now_us().saturating_sub(round_start_us);
+                                        }
                                         out.upload = Some((round, reports, frame));
                                     }
                                     Ok(_) | Err(_) => out.fault = true,
@@ -808,12 +950,20 @@ impl Relay {
                                     deadline.is_some_and(|dl| Instant::now() >= dl);
                             }
                         }
+                        if let Some(t) = trace {
+                            t.conn(round, k, io.stall_us, io.read_us, io.write_us);
+                        }
                         out
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("child relay reader panicked")).collect()
         });
+        let absorb_ms = ms_since(wait_t0);
+        if let Some(t) = &trace {
+            t.span(round, Phase::AbsorbWait, wait_start_us, t.now_us());
+        }
+        let fin_start_us = trace.as_ref().map_or(0, |t| t.now_us());
 
         // Sweep in child order; failures collect for the re-offer pass.
         let mut outcomes = vec![OUTCOME_DROPPED_DISCONNECTED; m];
@@ -821,14 +971,19 @@ impl Relay {
         let mut losses = vec![0.0f32; m];
         let mut dead = vec![false; nconns];
         let mut failed: Vec<(usize, u8)> = Vec::new();
+        let mut round_arrivals = Histogram::new();
         for (k, cr) in reads.into_iter().enumerate() {
             self.sum.downstream_bytes += cr.bytes_in;
+            let arrival_us = cr.arrival_us;
             let failure = match cr.upload {
                 Some((up_round, reports, frame)) => {
                     match absorb_child_chain(
                         &inflight, k, &chains[k], up_round, round, &reports, &frame,
                     ) {
                         Ok(()) => {
+                            if trace.is_some() {
+                                round_arrivals.record(arrival_us);
+                            }
                             for (rep, &(local, _)) in reports.iter().zip(&chains[k]) {
                                 outcomes[local] = rep.outcome;
                                 retries[local] += rep.retries as u32;
@@ -866,6 +1021,11 @@ impl Relay {
                 && !deadline.is_some_and(|dl| Instant::now() >= dl)
             {
                 if let Some(s) = (0..nconns).find(|&i| !dead[i]) {
+                    if let Some(t) = &trace {
+                        for &(_, (gslot, _, _)) in assigned {
+                            t.slot_event(round, gslot as usize, SlotEvent::Reassigned, Some(s));
+                        }
+                    }
                     let res = (|| -> Result<(Vec<SlotReport>, u64)> {
                         let conn = &mut self.conns[s];
                         if let Some(dl) = deadline {
@@ -915,8 +1075,11 @@ impl Relay {
                 }
             }
             if !rescued {
-                for &(local, _) in assigned {
+                for &(local, (gslot, _, _)) in assigned {
                     outcomes[local] = reason;
+                    if let Some(t) = &trace {
+                        t.slot_dropped(round, gslot as usize, outcome_str(reason));
+                    }
                 }
             }
         }
@@ -952,6 +1115,11 @@ impl Relay {
         // Fold the child shards into one merged frame: left-associated
         // over children in index order, which is exactly the grouped
         // reduce `reduce_shards_tree` replays on the flat side.
+        let reduce_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        if let Some(t) = &trace {
+            t.span(round, Phase::Finalize, fin_start_us, reduce_start_us);
+        }
+        let reduce_t0 = Instant::now();
         let frame = match self.pipeline.finalize_subtree(inflight)? {
             Some(merged) => {
                 let bytes = match spec {
@@ -966,6 +1134,11 @@ impl Relay {
             }
             None => Vec::new(),
         };
+        let reduce_ms = ms_since(reduce_t0);
+        if let Some(t) = &trace {
+            t.span(round, Phase::Reduce, reduce_start_us, t.now_us());
+            t.histogram(Some(round), "slot_arrival_us", &round_arrivals);
+        }
 
         let reports: Vec<SlotReport> = entries
             .iter()
@@ -989,6 +1162,9 @@ impl Relay {
             parked_bytes: stats.parked_bytes,
             chosen_shards: stats.chosen_shards as usize,
             bytes_marker,
+            round_ms: ms_since(round_t0),
+            absorb_ms,
+            reduce_ms,
         });
         Ok(Msg::SubtreeUpload { round, reports, frame }.encode())
     }
@@ -1031,6 +1207,10 @@ impl Relay {
             dropped_slots: p.dropped_slots,
             retried_slots: 0,
             update_nnz: 0,
+            round_ms: p.round_ms,
+            compute_ms: 0.0,
+            absorb_ms: p.absorb_ms,
+            reduce_ms: p.reduce_ms,
             tier: Some("relay"),
         });
     }
@@ -1108,6 +1288,18 @@ impl Relay {
                 Err(e) => return Err(e).context("accepting downstream connection"),
             }
         }
+    }
+}
+
+/// Stable wire label for a dropped-slot outcome code, matching the
+/// labels the root emits (see
+/// `crate::transport::server::drop_reason_str`) so `trace-summary`
+/// groups drops identically across tiers.
+fn outcome_str(code: u8) -> &'static str {
+    match code {
+        OUTCOME_DROPPED_FAULTED => "faulted",
+        OUTCOME_DROPPED_DEADLINE => "deadline",
+        _ => "disconnect",
     }
 }
 
@@ -1209,6 +1401,7 @@ pub fn relay_training(cfg: &crate::config::TrainConfig) -> Result<RelaySummary> 
         reconnect_attempts: cfg.reconnect_attempts,
         reconnect_backoff_ms: cfg.reconnect_backoff_ms,
         log_path: cfg.log_path.clone(),
+        trace_path: cfg.trace_path.clone(),
         ..Default::default()
     };
     let mut node = Relay::bind(&listen, opts)?;

@@ -1,0 +1,216 @@
+//! Fixed-bucket, log-spaced latency histograms.
+//!
+//! Buckets are powers of two of microseconds: bucket 0 holds the value
+//! 0, bucket `i ≥ 1` holds `[2^(i-1), 2^i)` µs. The layout is a
+//! constant of the format — every histogram ever emitted uses the same
+//! bucket edges — so merging histograms from different processes,
+//! rounds, or relay tiers is *exact*: counts add, nothing is resampled.
+//! 48 buckets cover [0, 2^47) µs ≈ 4.5 years, comfortably past any
+//! round duration.
+//!
+//! Percentiles are read off the merged counts and quoted as the upper
+//! edge of the bucket the rank falls in (clamped to the largest value
+//! actually observed), so a quoted p99 is an upper bound with at most
+//! one octave of slack — the standard trade of log-bucketed recorders.
+
+use anyhow::{bail, Result};
+
+use crate::serialize::json::{arr, num, Value};
+
+/// Number of power-of-two buckets. A format constant: changing it
+/// breaks exact merging with previously written traces.
+pub const NUM_BUCKETS: usize = 48;
+
+/// A log-spaced latency histogram over microsecond values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; NUM_BUCKETS],
+    total: u64,
+    /// Largest value recorded (exact, not bucketed) — clamps quoted
+    /// percentiles so p99 never exceeds the observed maximum.
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; NUM_BUCKETS], total: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a microsecond value: 0 for 0, else
+    /// `floor(log2(v)) + 1`, clamped to the last bucket.
+    pub fn bucket_of(v_us: u64) -> usize {
+        if v_us == 0 {
+            0
+        } else {
+            ((64 - v_us.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive value range `[lo, hi]` of bucket `i`.
+    pub fn bucket_bounds(i: usize) -> (u64, u64) {
+        match i {
+            0 => (0, 0),
+            _ => (1u64 << (i - 1), if i >= 63 { u64::MAX } else { (1u64 << i) - 1 }),
+        }
+    }
+
+    pub fn record(&mut self, v_us: u64) {
+        self.counts[Self::bucket_of(v_us)] += 1;
+        self.total += 1;
+        self.max = self.max.max(v_us);
+    }
+
+    /// Exact merge: counts add (the bucket layout is shared by
+    /// construction), the observed max is the max of maxes.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Value at quantile `q ∈ [0, 1]`: the upper edge of the bucket the
+    /// rank `ceil(q · total)` falls in, clamped to the observed max.
+    /// 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Sparse `[bucket, count]` pairs for the JSONL `hist` event.
+    pub fn sparse_buckets(&self) -> Value {
+        arr(self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| arr(vec![num(i as f64), num(c as f64)]))
+            .collect())
+    }
+
+    /// Rebuild from a `hist` event's `buckets` array plus its `max_us`.
+    /// The inverse of [`Histogram::sparse_buckets`]; merging the result
+    /// with other parsed histograms is as exact as merging the
+    /// originals.
+    pub fn from_sparse(buckets: &[Value], max_us: u64) -> Result<Histogram> {
+        let mut h = Histogram::new();
+        for pair in buckets {
+            let p = pair.as_array().filter(|p| p.len() == 2);
+            let Some([i, c]) = p.map(|p| [&p[0], &p[1]]) else {
+                bail!("hist bucket entries must be [index, count] pairs");
+            };
+            let (Some(i), Some(c)) = (i.as_usize(), c.as_u64()) else {
+                bail!("hist bucket entries must be numeric [index, count] pairs");
+            };
+            if i >= NUM_BUCKETS {
+                bail!("hist bucket index {i} out of range (format has {NUM_BUCKETS} buckets)");
+            }
+            h.counts[i] += c;
+            h.total += c;
+        }
+        h.max = max_us;
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_power_of_two_octaves() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(1023), 10);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), NUM_BUCKETS - 1);
+        for i in 0..NUM_BUCKETS {
+            let (lo, hi) = Histogram::bucket_bounds(i);
+            assert_eq!(Histogram::bucket_of(lo), i, "lower edge of bucket {i}");
+            assert!(lo <= hi);
+        }
+    }
+
+    #[test]
+    fn percentiles_quote_bucket_upper_edges_clamped_to_max() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max_us(), 1000);
+        // p50 rank 3 → value 30 lives in bucket [16,31].
+        assert_eq!(h.percentile(0.5), 31);
+        // p99 rank 5 → bucket [512,1023], clamped to the observed 1000.
+        assert_eq!(h.percentile(0.99), 1000);
+        assert_eq!(Histogram::new().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_is_exact_and_order_independent() {
+        let samples: Vec<u64> = (0..200).map(|i| i * i % 7919).collect();
+        let mut whole = Histogram::new();
+        for &v in &samples {
+            whole.record(v);
+        }
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in samples.iter().enumerate() {
+            if i % 3 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        let mut merged = b.clone();
+        merged.merge(&a);
+        assert_eq!(merged, whole, "split+merge must equal the unsplit histogram");
+        let mut other_order = a;
+        other_order.merge(&b);
+        assert_eq!(other_order, whole);
+    }
+
+    #[test]
+    fn sparse_roundtrip_preserves_counts() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 5, 5, 900, 1 << 20] {
+            h.record(v);
+        }
+        let v = h.sparse_buckets();
+        let back = Histogram::from_sparse(v.as_array().unwrap(), h.max_us()).unwrap();
+        assert_eq!(back, h);
+        assert!(Histogram::from_sparse(&[num(3.0)], 0).is_err());
+    }
+}

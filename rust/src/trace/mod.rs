@@ -1,0 +1,476 @@
+//! Structured round tracing: phase spans, per-slot timelines, and
+//! latency histograms, written as typed JSONL next to the metrics log.
+//!
+//! Hand-rolled like `serialize::json` (no `tracing` crate): a
+//! [`TraceSink`] is a buffered JSONL writer that every driver —
+//! `coordinator::engine`, `transport::server`, `relay` — stamps events
+//! into. Each event carries the `round` and the emitting `tier`
+//! (`"engine"` for in-process runs, `"root"` for a round server,
+//! `"relay"` for a mid-tier aggregator), so the per-tier files of a
+//! relay tree merge back into one timeline (`trace::summary`, surfaced
+//! as `fetchsgd trace-summary`).
+//!
+//! ## Event grammar (one JSON object per line)
+//!
+//! | `type`       | fields |
+//! |--------------|--------|
+//! | `trace_meta` | `v`, `tier`, `source`, `epoch_unix_ms` — first line of every file |
+//! | `span`       | `tier`, `round`, `phase`, `start_us`, `dur_us` |
+//! | `slot`       | `tier`, `round`, `slot`, `event`, `t_us` [, `peer`][, `reason`] |
+//! | `conn`       | `tier`, `round`, `peer`, `stall_us`, `read_us`, `write_us` |
+//! | `hist`       | `tier`, `metric`, `count`, `max_us`, `p50_us`, `p90_us`, `p99_us`, `buckets` [, `round`] |
+//!
+//! Phases are `plan`, `compute`, `absorb_wait`, `reduce`, `finalize`,
+//! `broadcast`; slot events are `offered`, `validated`, `absorbed`,
+//! `parked`, `folded`, `retried`, `reassigned`, `dropped`. Times are
+//! microseconds since the sink's epoch (`epoch_unix_ms` anchors that
+//! epoch to the wall clock, so cross-process offsets can be aligned
+//! approximately; the summary tool never needs synchronized clocks —
+//! it folds durations, which are per-process).
+//!
+//! ## Contract
+//!
+//! - **Disabled is free.** Every call site guards on an
+//!   `Option<&TraceSink>` (or the `Option` field inside
+//!   `RoundInFlight`): with tracing off the hot paths perform no
+//!   timing syscalls and no allocation — verified by the trace-off row
+//!   of `benches/bench_round.rs`.
+//! - **Bounded buffering when enabled.** Lines accumulate in a mutex'd
+//!   buffer flushed at [`FLUSH_BYTES`]; after the first write error the
+//!   sink stops recording (the error is surfaced on flush/drop), so a
+//!   full disk can't grow the buffer without bound.
+//! - **Bitwise-neutral always.** Timestamps are observability, never
+//!   inputs: nothing read from the clock feeds aggregation, scheduling
+//!   of slots, or any value that reaches an accumulator. The
+//!   determinism matrix runs green with tracing on.
+
+pub mod hist;
+pub mod summary;
+
+pub use hist::Histogram;
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::serialize::json::{num, obj, s, Value};
+
+/// Flush threshold for the line buffer — the bound in "bounded
+/// buffering".
+pub const FLUSH_BYTES: usize = 64 * 1024;
+
+/// Trace format version, stamped into `trace_meta`.
+pub const TRACE_VERSION: u64 = 1;
+
+/// A round's lifecycle phases. Which phases a tier emits depends on
+/// where its time can go: an in-process engine computes and absorbs in
+/// one pool (`compute`), a round server waits for remote uploads
+/// (`absorb_wait`), and both reduce, finalize, and broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Plan,
+    Compute,
+    AbsorbWait,
+    Reduce,
+    Finalize,
+    Broadcast,
+}
+
+impl Phase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Plan => "plan",
+            Phase::Compute => "compute",
+            Phase::AbsorbWait => "absorb_wait",
+            Phase::Reduce => "reduce",
+            Phase::Finalize => "finalize",
+            Phase::Broadcast => "broadcast",
+        }
+    }
+
+    /// Canonical presentation order for summary tables.
+    pub const ALL: [Phase; 6] = [
+        Phase::Plan,
+        Phase::Compute,
+        Phase::AbsorbWait,
+        Phase::Reduce,
+        Phase::Finalize,
+        Phase::Broadcast,
+    ];
+}
+
+/// One step of a slot's arrival timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotEvent {
+    /// The driver handed the slot's upload to the round (engine worker
+    /// finished compute; server read a frame off a connection).
+    Offered,
+    /// The pipeline parsed and shape-validated the upload's frame.
+    Validated,
+    /// The upload folded into its shard accumulator on arrival.
+    Absorbed,
+    /// The upload arrived ahead of an earlier slot of its shard and was
+    /// parked.
+    Parked,
+    /// A parked upload's deferred fold finally ran.
+    Folded,
+    /// The slot's compute or delivery failed and was retried.
+    Retried,
+    /// The slot was reassigned to another worker connection.
+    Reassigned,
+    /// The slot was excluded from the round (carries a `reason`).
+    Dropped,
+}
+
+impl SlotEvent {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SlotEvent::Offered => "offered",
+            SlotEvent::Validated => "validated",
+            SlotEvent::Absorbed => "absorbed",
+            SlotEvent::Parked => "parked",
+            SlotEvent::Folded => "folded",
+            SlotEvent::Retried => "retried",
+            SlotEvent::Reassigned => "reassigned",
+            SlotEvent::Dropped => "dropped",
+        }
+    }
+}
+
+/// Wall-clock phase durations of one round, in milliseconds — the
+/// aggregate numbers surfaced in `RoundRecord` / `RunSummary` /
+/// `ServeSummary` whether or not a trace file is attached.
+///
+/// `round_ms` is always measured (a handful of per-round clock reads,
+/// nowhere near a hot path). `absorb_ms` is the *cumulative* time spent
+/// inside pipeline offers, which requires per-upload timing — so it is
+/// only measured while a trace sink is attached and stays 0 otherwise,
+/// keeping the disabled hot path syscall-free.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundTiming {
+    /// Full wall-clock round duration.
+    pub round_ms: f64,
+    /// Client-compute phase (engine worker pool span; 0 for a round
+    /// server, whose compute is remote).
+    pub compute_ms: f64,
+    /// Cumulative time folding uploads into shard accumulators (traced
+    /// runs only), or the server's absorb-wait span.
+    pub absorb_ms: f64,
+    /// Shard reduce + finalize span.
+    pub reduce_ms: f64,
+}
+
+impl RoundTiming {
+    pub fn accumulate(&mut self, other: &RoundTiming) {
+        self.round_ms += other.round_ms;
+        self.compute_ms += other.compute_ms;
+        self.absorb_ms += other.absorb_ms;
+        self.reduce_ms += other.reduce_ms;
+    }
+}
+
+/// Convert an elapsed `Instant` span to milliseconds.
+pub fn ms_since(start: Instant) -> f64 {
+    start.elapsed().as_secs_f64() * 1e3
+}
+
+/// Per-connection IO time split a transport reader accumulates over one
+/// round and emits as a `conn` event (see [`TraceSink::conn`]): time
+/// blocked waiting for a peer's next message to start, time consuming
+/// message bodies, time writing to the peer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnIo {
+    pub stall_us: u64,
+    pub read_us: u64,
+    pub write_us: u64,
+}
+
+/// Identity of one traced transport connection: the sink plus the
+/// `(round, peer)` stamp every event it emits carries. `Copy` so reader
+/// loops pass it by value; the mutable accumulator travels separately
+/// (see [`ConnIo`]).
+#[derive(Clone, Copy)]
+pub struct ConnTrace<'a> {
+    pub sink: &'a TraceSink,
+    pub round: u64,
+    pub peer: usize,
+}
+
+struct SinkState {
+    file: std::fs::File,
+    buf: String,
+    /// First write/flush error, kept until `flush` surfaces it (or drop
+    /// prints it). Once set, the sink stops recording.
+    error: Option<std::io::Error>,
+    /// Whether `error` was already reported through `flush`, so drop
+    /// doesn't shout twice.
+    error_reported: bool,
+}
+
+/// A structured trace writer: one per process/tier, shared by reference
+/// (`&TraceSink` / `Arc<TraceSink>`) across round workers and reader
+/// threads. All event methods take `&self`; a mutex serializes the line
+/// buffer.
+pub struct TraceSink {
+    tier: &'static str,
+    epoch: Instant,
+    state: Mutex<SinkState>,
+}
+
+impl TraceSink {
+    /// Create the trace file (truncating), stamp the `trace_meta`
+    /// header, and hand back the sink. `tier` tags every event;
+    /// `source` identifies the process instance (endpoint, task name)
+    /// in the header only.
+    pub fn create(path: &Path, tier: &'static str, source: &str) -> Result<TraceSink> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating trace dir for {}", path.display()))?;
+            }
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        let epoch_unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let sink = TraceSink {
+            tier,
+            epoch: Instant::now(),
+            state: Mutex::new(SinkState {
+                file,
+                buf: String::with_capacity(FLUSH_BYTES),
+                error: None,
+                error_reported: false,
+            }),
+        };
+        sink.emit(obj(vec![
+            ("type", s("trace_meta")),
+            ("v", num(TRACE_VERSION as f64)),
+            ("tier", s(tier)),
+            ("source", s(source)),
+            ("epoch_unix_ms", num(epoch_unix_ms)),
+        ]));
+        Ok(sink)
+    }
+
+    pub fn tier(&self) -> &'static str {
+        self.tier
+    }
+
+    /// Microseconds since this sink's epoch — the time base of every
+    /// event it emits.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one phase span of `round`: `[start_us, end_us]` in this
+    /// sink's time base (see [`TraceSink::now_us`]).
+    pub fn span(&self, round: u64, phase: Phase, start_us: u64, end_us: u64) {
+        self.emit(obj(vec![
+            ("type", s("span")),
+            ("tier", s(self.tier)),
+            ("round", num(round as f64)),
+            ("phase", s(phase.as_str())),
+            ("start_us", num(start_us as f64)),
+            ("dur_us", num(end_us.saturating_sub(start_us) as f64)),
+        ]));
+    }
+
+    /// Record one step of a slot's timeline, stamped with the current
+    /// time. `peer` identifies the delivering connection / relay child
+    /// where the caller knows it.
+    pub fn slot_event(&self, round: u64, slot: usize, ev: SlotEvent, peer: Option<usize>) {
+        let mut fields = vec![
+            ("type", s("slot")),
+            ("tier", s(self.tier)),
+            ("round", num(round as f64)),
+            ("slot", num(slot as f64)),
+            ("event", s(ev.as_str())),
+            ("t_us", num(self.now_us() as f64)),
+        ];
+        if let Some(p) = peer {
+            fields.push(("peer", num(p as f64)));
+        }
+        self.emit(obj(fields));
+    }
+
+    /// A slot's terminal `dropped` event, with the membership reason
+    /// ("faulted", "deadline", "disconnect", ...).
+    pub fn slot_dropped(&self, round: u64, slot: usize, reason: &str) {
+        self.emit(obj(vec![
+            ("type", s("slot")),
+            ("tier", s(self.tier)),
+            ("round", num(round as f64)),
+            ("slot", num(slot as f64)),
+            ("event", s(SlotEvent::Dropped.as_str())),
+            ("t_us", num(self.now_us() as f64)),
+            ("reason", s(reason)),
+        ]));
+    }
+
+    /// Per-connection IO timing for one round: `stall_us` blocked
+    /// waiting for a peer's next message to start, `read_us` reading
+    /// message bodies, `write_us` writing to the peer.
+    pub fn conn(&self, round: u64, peer: usize, stall_us: u64, read_us: u64, write_us: u64) {
+        self.emit(obj(vec![
+            ("type", s("conn")),
+            ("tier", s(self.tier)),
+            ("round", num(round as f64)),
+            ("peer", num(peer as f64)),
+            ("stall_us", num(stall_us as f64)),
+            ("read_us", num(read_us as f64)),
+            ("write_us", num(write_us as f64)),
+        ]));
+    }
+
+    /// Emit a latency histogram (per round when `round` is given,
+    /// run-level otherwise) with its quoted percentiles and the sparse
+    /// bucket counts that make downstream merging exact.
+    pub fn histogram(&self, round: Option<u64>, metric: &str, h: &Histogram) {
+        if h.is_empty() {
+            return;
+        }
+        let mut fields = vec![("type", s("hist")), ("tier", s(self.tier))];
+        if let Some(r) = round {
+            fields.push(("round", num(r as f64)));
+        }
+        fields.extend([
+            ("metric", s(metric)),
+            ("count", num(h.count() as f64)),
+            ("max_us", num(h.max_us() as f64)),
+            ("p50_us", num(h.percentile(0.50) as f64)),
+            ("p90_us", num(h.percentile(0.90) as f64)),
+            ("p99_us", num(h.percentile(0.99) as f64)),
+            ("buckets", h.sparse_buckets()),
+        ]);
+        self.emit(obj(fields));
+    }
+
+    fn emit(&self, v: Value) {
+        let mut st = self.state.lock().expect("trace sink poisoned");
+        if st.error.is_some() {
+            return;
+        }
+        st.buf.push_str(&v.to_json());
+        st.buf.push('\n');
+        if st.buf.len() >= FLUSH_BYTES {
+            Self::flush_locked(&mut st);
+        }
+    }
+
+    fn flush_locked(st: &mut SinkState) {
+        if st.error.is_none() {
+            if let Err(e) = st.file.write_all(st.buf.as_bytes()).and_then(|()| st.file.flush()) {
+                st.error = Some(e);
+            }
+        }
+        st.buf.clear();
+    }
+
+    /// Flush buffered events and surface the first write error, if any.
+    /// Call at end of run; drop also flushes (and complains on stderr
+    /// about errors nobody collected).
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.state.lock().expect("trace sink poisoned");
+        Self::flush_locked(&mut st);
+        if let Some(e) = &st.error {
+            st.error_reported = true;
+            return Err(anyhow::anyhow!("trace file write failed: {e}"));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        let st = self.state.get_mut().expect("trace sink poisoned");
+        Self::flush_locked(st);
+        if let (Some(e), false) = (&st.error, st.error_reported) {
+            eprintln!("warning: trace file write failed; trace is truncated: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serialize::json::parse;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fsgd_trace_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn sink_writes_typed_jsonl_with_meta_header() {
+        let dir = tmpdir("sink");
+        let p = dir.join("t.jsonl");
+        {
+            let sink = TraceSink::create(&p, "engine", "unit-test").unwrap();
+            let t0 = sink.now_us();
+            sink.span(3, Phase::Compute, t0, sink.now_us());
+            sink.slot_event(3, 7, SlotEvent::Offered, Some(2));
+            sink.slot_dropped(3, 9, "deadline");
+            sink.conn(3, 1, 10, 20, 30);
+            let mut h = Histogram::new();
+            h.record(500);
+            sink.histogram(Some(3), "slot_arrival_us", &h);
+            sink.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 6);
+        let meta = parse(lines[0]).unwrap();
+        assert_eq!(meta.req_str("type").unwrap(), "trace_meta");
+        assert_eq!(meta.req_str("tier").unwrap(), "engine");
+        assert_eq!(meta.req_str("source").unwrap(), "unit-test");
+        let span = parse(lines[1]).unwrap();
+        assert_eq!(span.req_str("phase").unwrap(), "compute");
+        assert_eq!(span.req_u64("round").unwrap(), 3);
+        let slot = parse(lines[2]).unwrap();
+        assert_eq!(slot.req_str("event").unwrap(), "offered");
+        assert_eq!(slot.req_u64("peer").unwrap(), 2);
+        let dropped = parse(lines[3]).unwrap();
+        assert_eq!(dropped.req_str("event").unwrap(), "dropped");
+        assert_eq!(dropped.req_str("reason").unwrap(), "deadline");
+        let conn = parse(lines[4]).unwrap();
+        assert_eq!(conn.req_u64("stall_us").unwrap(), 10);
+        let hist = parse(lines[5]).unwrap();
+        assert_eq!(hist.req_str("metric").unwrap(), "slot_arrival_us");
+        assert_eq!(hist.req_u64("count").unwrap(), 1);
+        assert!(hist.req_u64("p50_us").unwrap() >= 500);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sink_buffers_until_flush_threshold() {
+        let dir = tmpdir("buf");
+        let p = dir.join("t.jsonl");
+        let sink = TraceSink::create(&p, "root", "buffering").unwrap();
+        sink.slot_event(0, 0, SlotEvent::Absorbed, None);
+        // Nothing hits the file until flush (the buffer is far below
+        // FLUSH_BYTES) — the hot path pays no per-event syscalls.
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "");
+        sink.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 2);
+        drop(sink);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_histograms_are_not_emitted() {
+        let dir = tmpdir("empty");
+        let p = dir.join("t.jsonl");
+        let sink = TraceSink::create(&p, "relay", "x").unwrap();
+        sink.histogram(None, "slot_arrival_us", &Histogram::new());
+        sink.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 1, "meta only");
+        drop(sink);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

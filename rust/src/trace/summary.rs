@@ -1,0 +1,363 @@
+//! Fold one or more trace files (the per-tier outputs of an engine run,
+//! a round server, and its relays) into a per-phase, per-tier breakdown
+//! — the library behind `fetchsgd trace-summary`.
+//!
+//! Merging needs no synchronized clocks: spans fold by *duration*
+//! (per-process), slot events by count, and histograms bucket-exactly
+//! (`trace::hist`), so a depth-N tree's files can be folded in any
+//! order and the result is the same.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::serialize::json::{parse, Value};
+use crate::trace::{Histogram, Phase};
+
+/// Aggregate of one (tier, phase) cell: how many spans and how much
+/// wall-clock they covered.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseAgg {
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl PhaseAgg {
+    fn add(&mut self, dur_us: u64) {
+        self.count += 1;
+        self.total_us += dur_us;
+        self.max_us = self.max_us.max(dur_us);
+    }
+}
+
+/// One round's reconstructed timeline across every tier that reported.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTimeline {
+    /// (tier, phase) → folded spans.
+    pub phases: BTreeMap<(String, String), PhaseAgg>,
+    /// (tier, slot event) → occurrences.
+    pub events: BTreeMap<(String, String), u64>,
+}
+
+/// Everything `fold_files` extracts from a set of trace files.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    pub files: usize,
+    /// (tier, source) header of each file, in input order.
+    pub sources: Vec<(String, String)>,
+    pub rounds: BTreeMap<u64, RoundTimeline>,
+    /// Run-level (tier, phase) totals across all rounds.
+    pub phase_totals: BTreeMap<(String, String), PhaseAgg>,
+    /// Run-level (tier, slot event) counts.
+    pub event_counts: BTreeMap<(String, String), u64>,
+    /// (tier, metric) → exactly merged histograms (per-round and
+    /// run-level `hist` events all fold in).
+    pub hists: BTreeMap<(String, String), Histogram>,
+    /// Per-connection IO totals: (tier, peer) → (stall, read, write) µs.
+    pub conn_totals: BTreeMap<(String, u64), (u64, u64, u64)>,
+    /// Lines whose `type` this version does not know (skipped, counted
+    /// so truncation is visible rather than silent).
+    pub unknown_lines: usize,
+}
+
+impl TraceReport {
+    /// Tiers seen in any header or event, in deterministic order.
+    pub fn tiers(&self) -> Vec<String> {
+        let mut tiers: Vec<String> = self.sources.iter().map(|(t, _)| t.clone()).collect();
+        for (tier, _) in self.phase_totals.keys() {
+            tiers.push(tier.clone());
+        }
+        tiers.sort();
+        tiers.dedup();
+        tiers
+    }
+}
+
+/// Parse and fold one trace file's text into `report`. Malformed JSON
+/// or a malformed known event is an error (a trace produced by this
+/// build must round-trip); *unknown* event types are skipped and
+/// counted, so newer traces degrade gracefully.
+pub fn fold_text(report: &mut TraceReport, text: &str, origin: &str) -> Result<()> {
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(line)
+            .with_context(|| format!("{origin}:{}: malformed trace line", lineno + 1))?;
+        fold_event(report, &v)
+            .with_context(|| format!("{origin}:{}: malformed trace event", lineno + 1))?;
+    }
+    Ok(())
+}
+
+/// Fold several trace files (one per tier of a relay tree, typically)
+/// into one report.
+pub fn fold_files<P: AsRef<Path>>(paths: &[P]) -> Result<TraceReport> {
+    if paths.is_empty() {
+        bail!("trace-summary needs at least one trace file");
+    }
+    let mut report = TraceReport::default();
+    for p in paths {
+        let p = p.as_ref();
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading trace file {}", p.display()))?;
+        report.files += 1;
+        fold_text(&mut report, &text, &p.display().to_string())?;
+    }
+    Ok(report)
+}
+
+fn fold_event(report: &mut TraceReport, v: &Value) -> Result<()> {
+    match v.req_str("type")? {
+        "trace_meta" => {
+            report
+                .sources
+                .push((v.req_str("tier")?.to_string(), v.req_str("source")?.to_string()));
+        }
+        "span" => {
+            let tier = v.req_str("tier")?.to_string();
+            let phase = v.req_str("phase")?.to_string();
+            let round = v.req_u64("round")?;
+            let dur = v.req_u64("dur_us")?;
+            let key = (tier, phase);
+            report.rounds.entry(round).or_default().phases.entry(key.clone()).or_default().add(dur);
+            report.phase_totals.entry(key).or_default().add(dur);
+        }
+        "slot" => {
+            let tier = v.req_str("tier")?.to_string();
+            let event = v.req_str("event")?.to_string();
+            let round = v.req_u64("round")?;
+            v.req_u64("slot")?;
+            let key = (tier, event);
+            *report.rounds.entry(round).or_default().events.entry(key.clone()).or_default() += 1;
+            *report.event_counts.entry(key).or_default() += 1;
+        }
+        "conn" => {
+            let key = (v.req_str("tier")?.to_string(), v.req_u64("peer")?);
+            let (stall, read, write) = report.conn_totals.entry(key).or_default();
+            *stall += v.req_u64("stall_us")?;
+            *read += v.req_u64("read_us")?;
+            *write += v.req_u64("write_us")?;
+        }
+        "hist" => {
+            let key = (v.req_str("tier")?.to_string(), v.req_str("metric")?.to_string());
+            let h = Histogram::from_sparse(v.req_array("buckets")?, v.req_u64("max_us")?)?;
+            report.hists.entry(key).or_default().merge(&h);
+        }
+        _ => report.unknown_lines += 1,
+    }
+    Ok(())
+}
+
+const MS: f64 = 1e3;
+
+/// Phases in canonical order first, then any stragglers alphabetically
+/// — keeps `plan → compute → … → broadcast` reading top to bottom.
+fn phase_rank(name: &str) -> usize {
+    Phase::ALL.iter().position(|p| p.as_str() == name).unwrap_or(Phase::ALL.len())
+}
+
+const EVENT_ORDER: [&str; 8] =
+    ["offered", "validated", "absorbed", "parked", "folded", "retried", "reassigned", "dropped"];
+
+/// Render the folded report as the human-readable breakdown
+/// `fetchsgd trace-summary` prints.
+pub fn render(r: &TraceReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "trace summary: {} file(s), {} round(s), tiers: {}",
+        r.files,
+        r.rounds.len(),
+        if r.tiers().is_empty() { "(none)".to_string() } else { r.tiers().join(", ") }
+    );
+    for (tier, source) in &r.sources {
+        let _ = writeln!(out, "  source [{tier}] {source}");
+    }
+    if r.unknown_lines > 0 {
+        let _ = writeln!(out, "  ({} line(s) of unknown type skipped)", r.unknown_lines);
+    }
+
+    if !r.phase_totals.is_empty() {
+        let _ = writeln!(out, "\nper-phase totals (all rounds):");
+        let _ = writeln!(
+            out,
+            "  {:<8} {:<12} {:>7} {:>12} {:>10} {:>10}",
+            "tier", "phase", "spans", "total_ms", "mean_ms", "max_ms"
+        );
+        let mut keys: Vec<&(String, String)> = r.phase_totals.keys().collect();
+        keys.sort_by_key(|(tier, phase)| (tier.clone(), phase_rank(phase), phase.clone()));
+        for key in keys {
+            let a = &r.phase_totals[key];
+            let _ = writeln!(
+                out,
+                "  {:<8} {:<12} {:>7} {:>12.3} {:>10.3} {:>10.3}",
+                key.0,
+                key.1,
+                a.count,
+                a.total_us as f64 / MS,
+                a.total_us as f64 / MS / a.count.max(1) as f64,
+                a.max_us as f64 / MS,
+            );
+        }
+    }
+
+    if !r.event_counts.is_empty() {
+        let _ = writeln!(out, "\nslot events (all rounds):");
+        for tier in r.tiers() {
+            let mut cells = Vec::new();
+            for ev in EVENT_ORDER {
+                if let Some(n) = r.event_counts.get(&(tier.clone(), ev.to_string())) {
+                    cells.push(format!("{ev} {n}"));
+                }
+            }
+            if !cells.is_empty() {
+                let _ = writeln!(out, "  {:<8} {}", tier, cells.join("  "));
+            }
+        }
+    }
+
+    if !r.hists.is_empty() {
+        let _ = writeln!(out, "\nlatency percentiles (log-bucket upper bounds):");
+        let _ = writeln!(
+            out,
+            "  {:<8} {:<18} {:>7} {:>10} {:>10} {:>10} {:>10}",
+            "tier", "metric", "count", "p50_ms", "p90_ms", "p99_ms", "max_ms"
+        );
+        for ((tier, metric), h) in &r.hists {
+            let _ = writeln!(
+                out,
+                "  {:<8} {:<18} {:>7} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+                tier,
+                metric,
+                h.count(),
+                h.percentile(0.5) as f64 / MS,
+                h.percentile(0.9) as f64 / MS,
+                h.percentile(0.99) as f64 / MS,
+                h.max_us() as f64 / MS,
+            );
+        }
+    }
+
+    if !r.conn_totals.is_empty() {
+        let _ = writeln!(out, "\nper-connection IO (all rounds):");
+        for ((tier, peer), (stall, read, write)) in &r.conn_totals {
+            let _ = writeln!(
+                out,
+                "  {:<8} peer {:<4} stall {:>9.3} ms  read {:>9.3} ms  write {:>9.3} ms",
+                tier,
+                peer,
+                *stall as f64 / MS,
+                *read as f64 / MS,
+                *write as f64 / MS,
+            );
+        }
+    }
+
+    if !r.rounds.is_empty() {
+        let _ = writeln!(out, "\nper-round timeline:");
+        for (round, tl) in &r.rounds {
+            let _ = writeln!(out, "  round {round}:");
+            let mut tiers: Vec<String> =
+                tl.phases.keys().map(|(t, _)| t.clone()).collect::<Vec<_>>();
+            tiers.extend(tl.events.keys().map(|(t, _)| t.clone()));
+            tiers.sort();
+            tiers.dedup();
+            for tier in tiers {
+                let mut cells = Vec::new();
+                let mut phases: Vec<&(String, String)> =
+                    tl.phases.keys().filter(|(t, _)| *t == tier).collect();
+                phases.sort_by_key(|(_, p)| (phase_rank(p), p.clone()));
+                for key in phases {
+                    let a = &tl.phases[key];
+                    cells.push(format!("{} {:.3}ms", key.1, a.total_us as f64 / MS));
+                }
+                for ev in EVENT_ORDER {
+                    if let Some(n) = tl.events.get(&(tier.clone(), ev.to_string())) {
+                        cells.push(format!("{ev}×{n}"));
+                    }
+                }
+                let _ = writeln!(out, "    {:<8} {}", tier, cells.join("  "));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Phase, SlotEvent, TraceSink};
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fsgd_tsum_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Write two tiers' trace files the way a root + one relay would,
+    /// then fold them back into one timeline.
+    #[test]
+    fn folds_multi_tier_files_into_one_timeline() {
+        let dir = tmpdir("fold");
+        let root_p = dir.join("root.jsonl");
+        let relay_p = dir.join("relay.jsonl");
+        {
+            let root = TraceSink::create(&root_p, "root", "uds:/tmp/root.sock").unwrap();
+            let relay = TraceSink::create(&relay_p, "relay", "uds:/tmp/relay0.sock").unwrap();
+            for round in 0..2u64 {
+                let t0 = root.now_us();
+                root.span(round, Phase::AbsorbWait, t0, t0 + 800);
+                root.span(round, Phase::Reduce, t0 + 800, t0 + 1000);
+                root.slot_event(round, 0, SlotEvent::Offered, Some(0));
+                root.slot_event(round, 0, SlotEvent::Absorbed, None);
+                let r0 = relay.now_us();
+                relay.span(round, Phase::AbsorbWait, r0, r0 + 300);
+                relay.slot_event(round, 1, SlotEvent::Offered, Some(1));
+                let mut h = Histogram::new();
+                h.record(100 + round * 50);
+                relay.histogram(Some(round), "slot_arrival_us", &h);
+            }
+            root.flush().unwrap();
+            relay.flush().unwrap();
+        }
+        let report = fold_files(&[&root_p, &relay_p]).unwrap();
+        assert_eq!(report.files, 2);
+        assert_eq!(report.tiers(), vec!["relay".to_string(), "root".to_string()]);
+        assert_eq!(report.rounds.len(), 2);
+        // Both tiers land in one round's timeline.
+        let r0 = &report.rounds[&0];
+        assert!(r0.phases.contains_key(&("root".into(), "absorb_wait".into())));
+        assert!(r0.phases.contains_key(&("relay".into(), "absorb_wait".into())));
+        let agg = &report.phase_totals[&("root".into(), "absorb_wait".into())];
+        assert_eq!(agg.count, 2);
+        assert_eq!(agg.total_us, 1600);
+        assert_eq!(report.event_counts[&("root".into(), "absorbed".into())], 2);
+        // Per-round histograms merged exactly across rounds.
+        let h = &report.hists[&("relay".into(), "slot_arrival_us".into())];
+        assert_eq!(h.count(), 2);
+        let text = render(&report);
+        assert!(text.contains("per-phase totals"), "{text}");
+        assert!(text.contains("per-round timeline"), "{text}");
+        assert!(text.contains("round 1:"), "{text}");
+        assert!(text.contains("absorb_wait"), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_event_types_are_skipped_not_fatal() {
+        let mut report = TraceReport::default();
+        fold_text(
+            &mut report,
+            "{\"type\":\"future_thing\",\"round\":0}\n",
+            "inline",
+        )
+        .unwrap();
+        assert_eq!(report.unknown_lines, 1);
+        // Malformed JSON and malformed known events are loud.
+        assert!(fold_text(&mut TraceReport::default(), "{nope", "inline").is_err());
+        assert!(fold_text(&mut TraceReport::default(), "{\"type\":\"span\"}", "inline").is_err());
+    }
+}

@@ -9,6 +9,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+use std::time::Instant;
 
 /// Bytes of the `u32` little-endian length prefix.
 pub const LEN_PREFIX_BYTES: u64 = 4;
@@ -59,6 +60,32 @@ pub fn read_msg<R: Read>(r: &mut R, max_msg: usize) -> Result<(Vec<u8>, u64)> {
     Ok((body, LEN_PREFIX_BYTES + len as u64))
 }
 
+/// [`read_msg`] with the wait split out for tracing: returns
+/// `(body, wire_bytes, stall_us, read_us)` where `stall_us` is the time
+/// blocked until the length prefix completed (the peer hadn't sent yet)
+/// and `read_us` the time consuming the body (actual transfer). Costs
+/// three clock reads per message; the transport drivers call it only
+/// while a trace sink is attached, keeping the untraced hot path
+/// syscall-identical to [`read_msg`].
+pub fn read_msg_timed<R: Read>(r: &mut R, max_msg: usize) -> Result<(Vec<u8>, u64, u64, u64)> {
+    let t0 = Instant::now();
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix).context("reading length prefix")?;
+    let stall_us = t0.elapsed().as_micros() as u64;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_msg {
+        bail!("length prefix claims {len} bytes, over the {max_msg}-byte message cap");
+    }
+    if len == 0 {
+        bail!("zero-length transport message");
+    }
+    let t1 = Instant::now();
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).with_context(|| format!("reading {len}-byte message body"))?;
+    let read_us = t1.elapsed().as_micros() as u64;
+    Ok((body, LEN_PREFIX_BYTES + len as u64, stall_us, read_us))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +117,21 @@ mod tests {
         assert_eq!(n1, n2);
         let (body, _) = read_msg(&mut Cursor::new(split), 1024).unwrap();
         assert_eq!(body, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn timed_read_matches_untimed_read() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, b"payload").unwrap();
+        let (body, n, _stall, _read) = read_msg_timed(&mut Cursor::new(&buf), 1024).unwrap();
+        assert_eq!(body, b"payload");
+        assert_eq!(n, 11);
+        // Same validation as the untimed path: oversize and zero-length
+        // prefixes are rejected before allocation.
+        let mut forged = u32::MAX.to_le_bytes().to_vec();
+        forged.extend_from_slice(&[0; 8]);
+        assert!(read_msg_timed(&mut Cursor::new(forged), 1024).is_err());
+        assert!(read_msg_timed(&mut Cursor::new(0u32.to_le_bytes().to_vec()), 1024).is_err());
     }
 
     #[test]

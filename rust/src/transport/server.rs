@@ -51,7 +51,12 @@ use std::time::{Duration, Instant};
 use crate::cohort::{DropReason, QuorumPolicy, RoundMembership, SlotOutcome};
 use crate::compression::aggregate::{PipelineOptions, RoundInFlight, RoundPipeline};
 use crate::compression::{ServerAggregator, UploadSpec};
-use crate::transport::framing::{read_msg, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES};
+use crate::trace::{
+    ms_since, ConnIo, ConnTrace, Histogram, Phase, RoundTiming, SlotEvent, TraceSink,
+};
+use crate::transport::framing::{
+    read_msg, read_msg_timed, write_msg, write_msg_parts, DEFAULT_MAX_MSG_BYTES,
+};
 use crate::transport::proto::{
     Msg, SlotReport, OUTCOME_ARRIVED, OUTCOME_DROPPED_DEADLINE, OUTCOME_DROPPED_DISCONNECTED,
     OUTCOME_DROPPED_FAULTED, PROTO_VERSION,
@@ -124,6 +129,12 @@ pub struct ServeOptions {
     /// [`crate::compression::aggregate::PipelineOptions::pin_shards`]).
     /// Placement hint only; never changes bits.
     pub pin_shards: bool,
+    /// Structured trace sink for this tier (`tier: "root"`; see
+    /// [`crate::trace`]): phase spans, per-slot timelines, per-connection
+    /// IO splits, and arrival histograms. `None` (the default) keeps the
+    /// round's hot paths free of per-upload clock reads — only the
+    /// handful of per-round span Instants remain.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for ServeOptions {
@@ -141,6 +152,7 @@ impl Default for ServeOptions {
             relay_children: 0,
             adaptive_shards: false,
             pin_shards: false,
+            trace: None,
         }
     }
 }
@@ -202,6 +214,14 @@ pub struct RoundStats {
     /// unless `adaptive_shards` resized it; see
     /// [`crate::compression::aggregate::AbsorbStats::chosen_shards`]).
     pub chosen_shards: u64,
+    /// Wall-clock phase timing of this round. `absorb_ms` is the
+    /// upload-wait span (reader scope); `compute_ms` stays 0 — a round
+    /// server's compute is remote. Always measured (a few per-round
+    /// clock reads, never per-upload).
+    pub timing: RoundTiming,
+    /// Upload-arrival latencies (µs since round start), recorded only
+    /// while a trace sink is attached; empty otherwise.
+    pub arrivals: Histogram,
 }
 
 enum ListenerKind {
@@ -408,6 +428,9 @@ impl RoundServer {
         if self.opts.relay_children > 0 {
             return self.run_round_relay(agg, p, w);
         }
+        let trace = self.opts.trace.clone();
+        let round_t0 = Instant::now();
+        let round_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let nconns = self.conns.len();
         let policy = self.opts.quorum.clone();
         let deadline = policy.round_deadline().map(|d| Instant::now() + d);
@@ -460,6 +483,9 @@ impl RoundServer {
             self.abort_round("round-start delivery failed");
             return Err(e);
         }
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Plan, round_start_us, t.now_us());
+        }
 
         // Concurrent upload readers: one thread per connection, all
         // streaming into one ordered in-flight round. Absorption
@@ -473,13 +499,17 @@ impl RoundServer {
         // from it, re-offering each slot over their own connection
         // (`SlotAssign`) until it arrives, its retry budget is spent,
         // or the round deadline fires.
-        let absorber = match self.pipeline.begin(&spec, lambdas) {
+        let mut absorber = match self.pipeline.begin(&spec, lambdas) {
             Ok(a) => a,
             Err(e) => {
                 self.abort_round("round pipeline setup failed");
                 return Err(e);
             }
         };
+        if let Some(t) = &trace {
+            absorber.attach_trace(Arc::clone(t), p.round);
+        }
+        let absorber = absorber;
         let failed = AtomicBool::new(false);
         // Strict policy = pre-cohort fail-fast: one fault dooms the
         // round, so other readers stop at their next message boundary.
@@ -537,33 +567,49 @@ impl RoundServer {
             /// lowest *delivered* slot keeps the accounting real when
             /// slot 0 drops out of a quorum round.
             byte_sample: Option<(usize, u64, u64)>,
+            /// IO time split accumulated across this connection's reads
+            /// and retry-phase writes (zero when untraced).
+            io: ConnIo,
+            /// Upload-arrival latencies on this connection (µs since
+            /// round start; empty when untraced).
+            arrivals: Histogram,
             /// First error this connection hit (the connection is dead).
             err: Option<anyhow::Error>,
         }
 
+        let wait_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let wait_t0 = Instant::now();
         let results: Vec<ConnRead> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .conns
                 .iter_mut()
                 .zip(assignments.iter())
-                .map(|(conn, assigned)| {
+                .enumerate()
+                .map(|(peer, (conn, assigned))| {
                     let absorber = &absorber;
                     let failed = &failed;
                     let probe = &probe;
                     let retry = &retry;
                     let orphan = &orphan;
+                    let ct =
+                        trace.as_deref().map(|sink| ConnTrace { sink, round: p.round, peer });
                     s.spawn(move || -> ConnRead {
                         let mut out = ConnRead {
                             pairs: Vec::with_capacity(assigned.len()),
                             bytes_in: 0,
                             bytes_out: 0,
                             byte_sample: None,
+                            io: ConnIo::default(),
+                            arrivals: Histogram::new(),
                             err: None,
                         };
                         // Bound the next read by the round deadline (if
                         // any) so a straggler read wakes exactly when
                         // the round must close.
-                        let read_bounded = |conn: &mut Conn, expect_slot: u32, want_ideal: bool| {
+                        let read_bounded = |conn: &mut Conn,
+                                            expect_slot: u32,
+                                            want_ideal: bool,
+                                            io: &mut ConnIo| {
                             if let Some(dl) = deadline {
                                 let rem = dl.saturating_duration_since(Instant::now());
                                 if rem.is_zero() {
@@ -572,7 +618,15 @@ impl RoundServer {
                                 let t = read_timeout.min(rem);
                                 let _ = conn.set_timeouts(Some(t), Some(t));
                             }
-                            read_one_upload(conn, expect_slot, max_msg, want_ideal, absorber, probe)
+                            read_one_upload(
+                                conn,
+                                expect_slot,
+                                max_msg,
+                                want_ideal,
+                                absorber,
+                                probe,
+                                ct.map(|c| (c, io)),
+                            )
                         };
                         // Phase 1: this connection's own assignments.
                         for (i, &(expect_slot, client)) in assigned.iter().enumerate() {
@@ -584,9 +638,13 @@ impl RoundServer {
                             }
                             let slot = expect_slot as usize;
                             let want = out.byte_sample.map_or(true, |(s, _, _)| slot < s);
-                            match read_bounded(&mut *conn, expect_slot, want) {
+                            match read_bounded(&mut *conn, expect_slot, want, &mut out.io) {
                                 Ok(up) => {
                                     out.bytes_in += up.bytes_in;
+                                    if let Some(c) = &ct {
+                                        out.arrivals
+                                            .record(c.sink.now_us().saturating_sub(round_start_us));
+                                    }
                                     if want {
                                         out.byte_sample = Some((
                                             expect_slot as usize,
@@ -646,17 +704,35 @@ impl RoundServer {
                                 std::thread::sleep(Duration::from_millis(2));
                                 continue;
                             };
+                            if let Some(c) = &ct {
+                                c.sink.slot_event(
+                                    c.round,
+                                    slot as usize,
+                                    SlotEvent::Reassigned,
+                                    Some(c.peer),
+                                );
+                            }
                             let assign = Msg::SlotAssign { slot, client }.encode();
                             let want =
                                 out.byte_sample.map_or(true, |(s, _, _)| (slot as usize) < s);
-                            let sent = match write_msg(&mut *conn, &assign) {
-                                Ok(n) => read_bounded(&mut *conn, slot, want).map(|up| (n, up)),
+                            let w_t0 = ct.as_ref().map(|_| Instant::now());
+                            let wrote = write_msg(&mut *conn, &assign);
+                            if let Some(t0) = w_t0 {
+                                out.io.write_us += t0.elapsed().as_micros() as u64;
+                            }
+                            let sent = match wrote {
+                                Ok(n) => read_bounded(&mut *conn, slot, want, &mut out.io)
+                                    .map(|up| (n, up)),
                                 Err(e) => Err(e),
                             };
                             match sent {
                                 Ok((n, up)) => {
                                     out.bytes_out += n;
                                     out.bytes_in += up.bytes_in;
+                                    if let Some(c) = &ct {
+                                        out.arrivals
+                                            .record(c.sink.now_us().saturating_sub(round_start_us));
+                                    }
                                     if want {
                                         out.byte_sample =
                                             Some((slot as usize, up.frame_bytes, up.ideal_bytes));
@@ -685,6 +761,11 @@ impl RoundServer {
                 .map(|h| h.join().expect("transport reader panicked"))
                 .collect()
         });
+        let absorb_ms = ms_since(wait_t0);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::AbsorbWait, wait_start_us, t.now_us());
+        }
+        let fin_start_us = trace.as_ref().map_or(0, |t| t.now_us());
 
         // Sweep: orphans left queued because no healthy connection
         // survived to serve them.
@@ -711,9 +792,14 @@ impl RoundServer {
         let mut transport_in = 0u64;
         let mut first_err: Option<anyhow::Error> = None;
         let mut dead = vec![false; nconns];
+        let mut arrivals = Histogram::new();
         for (i, cr) in results.into_iter().enumerate() {
             transport_in += cr.bytes_in;
             transport_bytes += cr.bytes_out;
+            if let Some(t) = &trace {
+                t.conn(p.round, i, cr.io.stall_us, cr.io.read_us, cr.io.write_us);
+            }
+            arrivals.merge(&cr.arrivals);
             if let Some((s, frame_bytes, ideal_bytes)) = cr.byte_sample {
                 if s < sample_slot {
                     sample_slot = s;
@@ -739,6 +825,9 @@ impl RoundServer {
             let slot = slot as usize;
             for _ in 0..retry.retries[slot] {
                 membership.record_retry(slot);
+            }
+            if let Some(t) = &trace {
+                t.slot_dropped(p.round, slot, drop_reason_str(reason));
             }
             membership.record_drop(slot, reason);
         }
@@ -773,12 +862,22 @@ impl RoundServer {
             }
             self.conns.retain(|_| keep.next().unwrap());
         }
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Finalize, fin_start_us, t.now_us());
+        }
 
+        let reduce_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let reduce_t0 = Instant::now();
         let merged = if membership.is_full() {
             self.pipeline.finish(absorber)
         } else {
             self.pipeline.finalize_partial(absorber, &membership)
         };
+        let reduce_ms = ms_since(reduce_t0);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Reduce, reduce_start_us, t.now_us());
+            t.histogram(Some(p.round), "slot_arrival_us", &arrivals);
+        }
         let merged = match merged {
             Ok(m) => m,
             Err(e) => {
@@ -800,6 +899,7 @@ impl RoundServer {
         let update_frame = encode_update(&update, self.opts.codec);
 
         // Broadcast the update frame to every participant connection.
+        let bcast_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let end_bytes = Msg::RoundEnd { round: p.round, update_frame: update_frame.clone() }
             .encode();
         let mut bcast_err = None;
@@ -825,6 +925,9 @@ impl RoundServer {
         // transport and in-process.
         let decoded = decode_update(&update_frame).context("decoding own broadcast")?;
         decoded.apply(w);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Broadcast, bcast_start_us, t.now_us());
+        }
 
         let mem = membership.summary();
         Ok(RoundStats {
@@ -842,6 +945,13 @@ impl RoundServer {
             absorb_stalls: absorb.lock_stalls,
             parked_bytes: absorb.parked_bytes,
             chosen_shards: absorb.chosen_shards,
+            timing: RoundTiming {
+                round_ms: ms_since(round_t0),
+                compute_ms: 0.0,
+                absorb_ms,
+                reduce_ms,
+            },
+            arrivals,
         })
     }
 
@@ -874,6 +984,9 @@ impl RoundServer {
     ) -> Result<RoundStats> {
         let slots = p.participants.len();
         let nrelays = self.conns.len();
+        let trace = self.opts.trace.clone();
+        let round_t0 = Instant::now();
+        let round_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let policy = self.opts.quorum.clone();
         let deadline = policy.round_deadline().map(|d| Instant::now() + d);
         for conn in &self.conns {
@@ -921,14 +1034,21 @@ impl RoundServer {
             self.abort_round("subtree-assign delivery failed");
             return Err(e);
         }
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Plan, round_start_us, t.now_us());
+        }
 
-        let absorber = match self.pipeline.begin(&spec, lambdas) {
+        let mut absorber = match self.pipeline.begin(&spec, lambdas) {
             Ok(a) => a,
             Err(e) => {
                 self.abort_round("round pipeline setup failed");
                 return Err(e);
             }
         };
+        if let Some(t) = &trace {
+            absorber.attach_trace(Arc::clone(t), p.round);
+        }
+        let absorber = absorber;
         let max_msg = self.opts.max_msg;
         let read_timeout = self.opts.read_timeout;
 
@@ -940,6 +1060,9 @@ impl RoundServer {
         struct RelayRead {
             upload: Option<(u64, Vec<SlotReport>, Vec<u8>)>,
             bytes_in: u64,
+            /// When the merged upload finished arriving (µs since round
+            /// start; 0 when untraced or nothing arrived).
+            arrival_us: u64,
             /// Protocol violation (decode failure, wrong message kind)
             /// rather than a transport fault.
             fault: bool,
@@ -947,19 +1070,25 @@ impl RoundServer {
             deadline_hit: bool,
             err: Option<anyhow::Error>,
         }
+        let wait_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let wait_t0 = Instant::now();
         let results: Vec<RelayRead> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .conns
                 .iter_mut()
-                .map(|conn| {
+                .enumerate()
+                .map(|(peer, conn)| {
+                    let trace = trace.as_deref();
                     s.spawn(move || -> RelayRead {
                         let mut out = RelayRead {
                             upload: None,
                             bytes_in: 0,
+                            arrival_us: 0,
                             fault: false,
                             deadline_hit: false,
                             err: None,
                         };
+                        let mut io = ConnIo::default();
                         if let Some(dl) = deadline {
                             let rem = dl.saturating_duration_since(Instant::now());
                             if rem.is_zero() {
@@ -971,11 +1100,23 @@ impl RoundServer {
                             let t = read_timeout.min(rem);
                             let _ = conn.set_timeouts(Some(t), Some(t));
                         }
-                        match read_msg(&mut *conn, max_msg) {
+                        let read = match trace {
+                            Some(_) => read_msg_timed(&mut *conn, max_msg).map(|(b, n, st, rd)| {
+                                io.stall_us += st;
+                                io.read_us += rd;
+                                (b, n)
+                            }),
+                            None => read_msg(&mut *conn, max_msg),
+                        };
+                        match read {
                             Ok((bytes, n)) => {
                                 out.bytes_in = n;
                                 match Msg::decode(bytes) {
                                     Ok(Msg::SubtreeUpload { round, reports, frame }) => {
+                                        if let Some(t) = trace {
+                                            out.arrival_us =
+                                                t.now_us().saturating_sub(round_start_us);
+                                        }
                                         out.upload = Some((round, reports, frame));
                                     }
                                     Ok(other) => {
@@ -997,12 +1138,20 @@ impl RoundServer {
                                 out.err = Some(e);
                             }
                         }
+                        if let Some(t) = trace {
+                            t.conn(p.round, peer, io.stall_us, io.read_us, io.write_us);
+                        }
                         out
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("relay reader panicked")).collect()
         });
+        let absorb_ms = ms_since(wait_t0);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::AbsorbWait, wait_start_us, t.now_us());
+        }
+        let fin_start_us = trace.as_ref().map_or(0, |t| t.now_us());
 
         // Sweep in relay order: validate each reply against its chain,
         // absorb the merged frame, then roll the subtree's per-slot
@@ -1018,8 +1167,9 @@ impl RoundServer {
         let mut first_err: Option<anyhow::Error> = None;
         let mut dead = vec![false; nrelays];
         let mut failed: Vec<(usize, DropReason)> = Vec::new();
+        let mut arrivals = Histogram::new();
         for (r, rr) in results.into_iter().enumerate() {
-            let RelayRead { upload, bytes_in, fault, deadline_hit, err } = rr;
+            let RelayRead { upload, bytes_in, arrival_us, fault, deadline_hit, err } = rr;
             transport_in += bytes_in;
             let failure = match upload {
                 Some((round, reports, frame)) => {
@@ -1028,6 +1178,9 @@ impl RoundServer {
                         Ok(()) => {
                             self.absorbed.fetch_max(absorber.absorbed(), Ordering::SeqCst);
                             roll_up(&mut membership, &mut losses, &reports, false);
+                            if trace.is_some() {
+                                arrivals.record(arrival_us);
+                            }
                             if !frame.is_empty() && !have_sample {
                                 // The root link carries one merged frame
                                 // per chain regardless of downstream
@@ -1086,6 +1239,11 @@ impl RoundServer {
                 && !deadline.is_some_and(|dl| Instant::now() >= dl)
             {
                 if let Some(s) = (0..nrelays).find(|&i| !dead[i]) {
+                    if let Some(t) = &trace {
+                        for &(slot, _, _) in assigned {
+                            t.slot_event(p.round, slot as usize, SlotEvent::Reassigned, Some(s));
+                        }
+                    }
                     match reoffer_chain(
                         &mut self.conns[s],
                         &absorber,
@@ -1133,6 +1291,9 @@ impl RoundServer {
                 // Fault containment: only this subtree's slots drop.
                 for &(slot, _, _) in assigned {
                     membership.record_drop(slot as usize, reason);
+                    if let Some(t) = &trace {
+                        t.slot_dropped(p.round, slot as usize, drop_reason_str(reason));
+                    }
                 }
             }
         }
@@ -1166,12 +1327,22 @@ impl RoundServer {
             }
             self.conns.retain(|_| keep.next().unwrap());
         }
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Finalize, fin_start_us, t.now_us());
+        }
 
+        let reduce_start_us = trace.as_ref().map_or(0, |t| t.now_us());
+        let reduce_t0 = Instant::now();
         let merged = if membership.is_full() {
             self.pipeline.finish(absorber)
         } else {
             self.pipeline.finalize_partial(absorber, &membership)
         };
+        let reduce_ms = ms_since(reduce_t0);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Reduce, reduce_start_us, t.now_us());
+            t.histogram(Some(p.round), "slot_arrival_us", &arrivals);
+        }
         let merged = match merged {
             Ok(m) => m,
             Err(e) => {
@@ -1194,6 +1365,7 @@ impl RoundServer {
 
         // Broadcast round-end to the surviving relays; each forwards it
         // verbatim down to its own workers.
+        let bcast_start_us = trace.as_ref().map_or(0, |t| t.now_us());
         let end_bytes =
             Msg::RoundEnd { round: p.round, update_frame: update_frame.clone() }.encode();
         let mut bcast_err = None;
@@ -1213,6 +1385,9 @@ impl RoundServer {
 
         let decoded = decode_update(&update_frame).context("decoding own broadcast")?;
         decoded.apply(w);
+        if let Some(t) = &trace {
+            t.span(p.round, Phase::Broadcast, bcast_start_us, t.now_us());
+        }
 
         let mem = membership.summary();
         Ok(RoundStats {
@@ -1230,6 +1405,13 @@ impl RoundServer {
             absorb_stalls: absorb.lock_stalls,
             parked_bytes: absorb.parked_bytes,
             chosen_shards: absorb.chosen_shards,
+            timing: RoundTiming {
+                round_ms: ms_since(round_t0),
+                compute_ms: 0.0,
+                absorb_ms,
+                reduce_ms,
+            },
+            arrivals,
         })
     }
 
@@ -1265,6 +1447,16 @@ impl Drop for RoundServer {
     }
 }
 
+/// Stable wire label for a [`DropReason`], used in trace `slot` events
+/// (`event: "dropped"`, `reason: ...`) across every tier.
+pub(crate) fn drop_reason_str(r: DropReason) -> &'static str {
+    match r {
+        DropReason::Faulted => "faulted",
+        DropReason::Disconnected => "disconnect",
+        DropReason::Deadline => "deadline",
+    }
+}
+
 /// What one successfully absorbed upload reports back to the reader
 /// loop.
 struct UploadRead {
@@ -1284,6 +1476,7 @@ struct UploadRead {
 /// streaming-absorb path; the absorber validates before taking any
 /// lock and copies the bytes out only if an earlier slot of the same
 /// shard is still outstanding.
+#[allow(clippy::too_many_arguments)]
 fn read_one_upload(
     conn: &mut Conn,
     expect_slot: u32,
@@ -1291,8 +1484,19 @@ fn read_one_upload(
     want_ideal: bool,
     absorber: &RoundInFlight,
     probe: &AtomicUsize,
+    mut trace: Option<(ConnTrace<'_>, &mut ConnIo)>,
 ) -> Result<UploadRead> {
-    let (bytes, bytes_in) = read_msg(conn, max_msg)?;
+    // Traced reads split the blocking wait from the body transfer (two
+    // extra clock reads); the untraced arm is byte-for-byte `read_msg`.
+    let (bytes, bytes_in) = match trace.as_mut() {
+        Some((_, io)) => {
+            let (b, n, stall, rd) = read_msg_timed(conn, max_msg)?;
+            io.stall_us += stall;
+            io.read_us += rd;
+            (b, n)
+        }
+        None => read_msg(conn, max_msg)?,
+    };
     let (slot, loss, frame) = match Msg::decode(bytes)? {
         Msg::Upload { slot, loss, frame } => (slot, loss, frame),
         other => bail!("expected an upload message, got {}", other.kind_name()),
@@ -1306,6 +1510,9 @@ fn read_one_upload(
     // number only when this read improves its lowest-slot sample, so
     // the other slots don't pay an extra full parse.
     let ideal_bytes = if want_ideal { idealized_payload(&Frame::parse(&frame)?) } else { 0 };
+    if let Some((ct, _)) = &trace {
+        ct.sink.slot_event(ct.round, slot as usize, SlotEvent::Offered, Some(ct.peer));
+    }
     absorber.offer_frame_bytes(slot as usize, &frame)?;
     // `fetch_max`, not `store`: another reader may have raced a later
     // snapshot in — the probe is monotone within a round.
@@ -1516,6 +1723,15 @@ pub struct ServeSummary {
     /// Frame bytes parked out of order across the run (see
     /// [`RoundStats::parked_bytes`]).
     pub parked_bytes: u64,
+    /// Wall-clock totals accumulated over every round (always measured;
+    /// `compute_ms` stays 0 — client compute happens remotely).
+    pub timing: RoundTiming,
+    /// Upload-arrival latency percentiles over the whole run, in
+    /// milliseconds since each round's start. Zero unless a trace sink
+    /// was attached (arrival stamps are traced-only).
+    pub arrival_p50_ms: f64,
+    pub arrival_p90_ms: f64,
+    pub arrival_p99_ms: f64,
 }
 
 /// Validate a configured serve deadline: finite, strictly positive,
@@ -1542,7 +1758,7 @@ pub(crate) fn duration_from_cfg_secs(secs: f64, knob: &str) -> Result<Duration> 
 pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> {
     use crate::compression::accounting::CommStats;
     use crate::coordinator::{build_strategy, ClientSelector};
-    use crate::metrics::{MetricsLogger, RoundRecord};
+    use crate::metrics::{MetricsLogger, RoundRecord, SummaryRecord};
     use crate::model::build_dataset;
     use crate::runtime::artifact::{Manifest, TaskArtifacts};
     use crate::runtime::Runtime;
@@ -1565,6 +1781,12 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
     let selector = ClientSelector::new(dataset.num_clients(), cfg.clients_per_round, cfg.seed);
     let mut logger = MetricsLogger::new(cfg.log_path.as_deref())?;
     let mut w = artifacts.init_weights()?;
+    let trace = match cfg.trace_path.as_deref() {
+        Some(p) => Some(std::sync::Arc::new(
+            crate::trace::TraceSink::create(p, "root", spec).context("TrainConfig.trace_path")?,
+        )),
+        None => None,
+    };
 
     let opts = ServeOptions {
         workers: cfg.transport_workers,
@@ -1582,6 +1804,7 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         relay_children: cfg.relay_children,
         adaptive_shards: cfg.adaptive_shards,
         pin_shards: cfg.pin_shards,
+        trace: trace.clone(),
     };
     let mut server = RoundServer::bind(&ep, opts)?;
     if cfg.relay_children > 0 {
@@ -1605,6 +1828,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
     let mut retried_slots = 0u64;
     let mut absorb_stalls = 0u64;
     let mut parked_bytes = 0u64;
+    let mut timing = RoundTiming::default();
+    let mut arrivals = Histogram::new();
     for round in 0..cfg.rounds {
         let lr = cfg.lr.at(round, cfg.rounds);
         let plan = crate::cohort::CohortPlan::sample(&selector, dataset.as_ref(), round);
@@ -1626,6 +1851,8 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         retried_slots += stats.retried_slots as u64;
         absorb_stalls += stats.absorb_stalls;
         parked_bytes += stats.parked_bytes;
+        timing.accumulate(&stats.timing);
+        arrivals.merge(&stats.arrivals);
         comm.record_round(
             stats.participants,
             stats.upload_bytes_per_client,
@@ -1651,6 +1878,10 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,
             update_nnz: stats.update_nnz,
+            round_ms: stats.timing.round_ms,
+            compute_ms: stats.timing.compute_ms,
+            absorb_ms: stats.timing.absorb_ms,
+            reduce_ms: stats.timing.reduce_ms,
             tier: if cfg.relay_children > 0 { Some("root") } else { None },
         });
         if cfg.verbose {
@@ -1665,11 +1896,38 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         }
     }
     server.shutdown();
+    let final_loss = logger.recent_loss(10);
+    let arrival_p50_ms = arrivals.percentile(0.50) as f64 / 1e3;
+    let arrival_p90_ms = arrivals.percentile(0.90) as f64 / 1e3;
+    let arrival_p99_ms = arrivals.percentile(0.99) as f64 / 1e3;
+    logger.log_summary(&SummaryRecord {
+        strategy: agg.name().to_string(),
+        task: cfg.task.clone(),
+        rounds: cfg.rounds,
+        final_loss,
+        upload_bytes: comm.upload_bytes,
+        download_bytes: comm.download_bytes,
+        dropped_slots,
+        retried_slots,
+        round_ms: timing.round_ms,
+        compute_ms: timing.compute_ms,
+        absorb_ms: timing.absorb_ms,
+        reduce_ms: timing.reduce_ms,
+        arrival_p50_ms,
+        arrival_p90_ms,
+        arrival_p99_ms,
+    });
+    logger.flush()?;
+    if let Some(t) = &trace {
+        // Per-round `hist` events already merge bucket-exactly to the
+        // run total; a run-level duplicate would double-fold.
+        t.flush().context("flushing trace")?;
+    }
     Ok(ServeSummary {
         strategy: agg.name().to_string(),
         task: cfg.task.clone(),
         rounds: cfg.rounds,
-        final_loss: logger.recent_loss(10),
+        final_loss,
         upload_bytes: comm.upload_bytes,
         download_bytes: comm.download_bytes,
         wire_upload_bytes: comm.wire_upload_bytes,
@@ -1679,5 +1937,9 @@ pub fn serve_training(cfg: &crate::config::TrainConfig) -> Result<ServeSummary> 
         retried_slots,
         absorb_stalls,
         parked_bytes,
+        timing,
+        arrival_p50_ms,
+        arrival_p90_ms,
+        arrival_p99_ms,
     })
 }

@@ -80,6 +80,8 @@ fn flaky_train(
             threads,
             wire: None,
             policy,
+            round: round as u64,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -260,6 +262,8 @@ fn uds_dropped_slot_matches_in_process_membership() {
             threads,
             wire: None,
             policy: &policy,
+            round: 0,
+            trace: None,
         };
         let mut pipeline = RoundPipeline::new(PipelineOptions::default());
         let out =
@@ -361,6 +365,10 @@ fn disconnect_and_straggler_round_completes_at_quorum() {
             dropped_slots: stats.dropped_slots,
             retried_slots: stats.retried_slots,
             update_nnz: stats.update_nnz,
+            round_ms: stats.timing.round_ms,
+            compute_ms: stats.timing.compute_ms,
+            absorb_ms: stats.timing.absorb_ms,
+            reduce_ms: stats.timing.reduce_ms,
             tier: None,
         });
     }
@@ -393,6 +401,8 @@ fn disconnect_and_straggler_round_completes_at_quorum() {
         threads: 4,
         wire: None,
         policy: &policy,
+        round: 0,
+        trace: None,
     };
     let mut pipeline = RoundPipeline::new(PipelineOptions::default());
     let out = engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)

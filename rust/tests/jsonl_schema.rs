@@ -1,0 +1,320 @@
+//! JSONL schema round-trip: every record type the metrics logger emits
+//! and every event type the trace sink emits must parse back through
+//! the hand-rolled JSON layer with the documented keys — including the
+//! keys that are *omitted* when zero/absent, so consumers can rely on
+//! "key present ⇔ value measured". The schema itself is documented in
+//! `docs/OBSERVABILITY.md`; this test is its executable form.
+
+use fetchsgd::metrics::{EvalRecord, MetricsLogger, RoundRecord, SummaryRecord};
+use fetchsgd::serialize::json::{parse, Value};
+use fetchsgd::trace::summary::{fold_text, TraceReport};
+use fetchsgd::trace::{Histogram, Phase, SlotEvent, TraceSink};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fsgd_schema_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn keys(v: &Value) -> Vec<String> {
+    v.as_object().unwrap().iter().map(|(k, _)| k.clone()).collect()
+}
+
+/// A round record with every optional field zeroed — the "quiet" shape
+/// an in-process, untraced, estimate-only run logs.
+fn minimal_round(round: usize) -> RoundRecord {
+    RoundRecord {
+        round,
+        loss: 1.5,
+        lr: 0.1,
+        upload_bytes: 64,
+        download_bytes: 32,
+        wire_upload_bytes: 0,
+        wire_download_bytes: 0,
+        transport_bytes: 0,
+        absorb_stalls: 0,
+        parked_bytes: 0,
+        chosen_shards: 0,
+        participants: 2,
+        dropped_slots: 0,
+        retried_slots: 0,
+        update_nnz: 7,
+        round_ms: 3.25,
+        compute_ms: 0.0,
+        absorb_ms: 0.0,
+        reduce_ms: 0.0,
+        tier: None,
+    }
+}
+
+/// A round record with every optional field populated — the shape a
+/// traced, wire-mode tree root logs.
+fn maximal_round(round: usize) -> RoundRecord {
+    RoundRecord {
+        wire_upload_bytes: 96,
+        wire_download_bytes: 48,
+        transport_bytes: 180,
+        absorb_stalls: 3,
+        parked_bytes: 512,
+        chosen_shards: 4,
+        dropped_slots: 1,
+        retried_slots: 2,
+        compute_ms: 2.0,
+        absorb_ms: 0.5,
+        reduce_ms: 0.25,
+        tier: Some("root"),
+        ..minimal_round(round)
+    }
+}
+
+#[test]
+fn round_record_round_trips_and_omits_unmeasured_keys() {
+    let dir = tmpdir("round");
+    let p = dir.join("run.jsonl");
+    {
+        let mut m = MetricsLogger::new(Some(&p)).unwrap();
+        m.log_round(minimal_round(0));
+        m.log_round(maximal_round(1));
+        m.flush().unwrap();
+    }
+    let text = std::fs::read_to_string(&p).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+
+    // Minimal shape: only the always-present keys, in schema order.
+    let v = parse(lines[0]).unwrap();
+    assert_eq!(v.req_str("type").unwrap(), "round");
+    assert_eq!(
+        keys(&v),
+        [
+            "type",
+            "round",
+            "loss",
+            "lr",
+            "upload_bytes",
+            "download_bytes",
+            "participants",
+            "dropped_slots",
+            "retried_slots",
+            "update_nnz",
+            "round_ms",
+        ],
+        "a quiet round must omit every unmeasured/zero optional key"
+    );
+    assert_eq!(v.req_u64("round").unwrap(), 0);
+    assert!((v.req_f64("round_ms").unwrap() - 3.25).abs() < 1e-9);
+
+    // Maximal shape: every optional key present and correct.
+    let v = parse(lines[1]).unwrap();
+    for key in [
+        "wire_upload_bytes",
+        "wire_download_bytes",
+        "transport_bytes",
+        "absorb_stalls",
+        "parked_bytes",
+        "chosen_shards",
+        "compute_ms",
+        "absorb_ms",
+        "reduce_ms",
+    ] {
+        assert!(v.get(key).is_some(), "traced wire-mode round must carry {key}");
+    }
+    assert_eq!(v.req_str("tier").unwrap(), "root");
+    assert!((v.req_f64("absorb_ms").unwrap() - 0.5).abs() < 1e-9);
+    assert_eq!(v.req_u64("transport_bytes").unwrap(), 180);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_record_round_trips() {
+    let dir = tmpdir("eval");
+    let p = dir.join("run.jsonl");
+    {
+        let mut m = MetricsLogger::new(Some(&p)).unwrap();
+        m.log_eval(EvalRecord { round: 4, eval_loss: 1.75, accuracy: 0.5, perplexity: 5.75 });
+        m.flush().unwrap();
+    }
+    let text = std::fs::read_to_string(&p).unwrap();
+    let v = parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(v.req_str("type").unwrap(), "eval");
+    assert_eq!(keys(&v), ["type", "round", "eval_loss", "accuracy", "perplexity"]);
+    assert_eq!(v.req_u64("round").unwrap(), 4);
+    assert!((v.req_f64("accuracy").unwrap() - 0.5).abs() < 1e-9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn summary_record_round_trips_and_omits_unmeasured_keys() {
+    let dir = tmpdir("summary");
+    let p = dir.join("run.jsonl");
+    {
+        let mut m = MetricsLogger::new(Some(&p)).unwrap();
+        // Untraced run: wall clock only.
+        m.log_summary(&SummaryRecord {
+            strategy: "fetchsgd".into(),
+            task: "smoke".into(),
+            rounds: 2,
+            final_loss: 1.0,
+            upload_bytes: 10,
+            download_bytes: 20,
+            round_ms: 7.5,
+            ..SummaryRecord::default()
+        });
+        // Traced run: full phase + arrival breakdown.
+        m.log_summary(&SummaryRecord {
+            strategy: "fetchsgd".into(),
+            task: "smoke".into(),
+            rounds: 2,
+            final_loss: 1.0,
+            upload_bytes: 10,
+            download_bytes: 20,
+            dropped_slots: 1,
+            retried_slots: 2,
+            round_ms: 7.5,
+            compute_ms: 4.0,
+            absorb_ms: 1.5,
+            reduce_ms: 0.5,
+            arrival_p50_ms: 0.8,
+            arrival_p90_ms: 1.6,
+            arrival_p99_ms: 2.4,
+        });
+        m.flush().unwrap();
+    }
+    let text = std::fs::read_to_string(&p).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+
+    let v = parse(lines[0]).unwrap();
+    assert_eq!(v.req_str("type").unwrap(), "summary");
+    assert_eq!(
+        keys(&v),
+        [
+            "type",
+            "strategy",
+            "task",
+            "rounds",
+            "final_loss",
+            "upload_bytes",
+            "download_bytes",
+            "dropped_slots",
+            "retried_slots",
+            "round_ms",
+        ],
+        "an untraced summary must omit the phase and arrival keys"
+    );
+
+    let v = parse(lines[1]).unwrap();
+    for key in [
+        "compute_ms",
+        "absorb_ms",
+        "reduce_ms",
+        "arrival_p50_ms",
+        "arrival_p90_ms",
+        "arrival_p99_ms",
+    ] {
+        assert!(v.get(key).is_some(), "traced summary must carry {key}");
+    }
+    assert!((v.req_f64("arrival_p99_ms").unwrap() - 2.4).abs() < 1e-9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Every trace event type, written by the sink and read back both as
+/// raw JSON (key-level schema) and through the summary folder (the
+/// consumer every trace file must satisfy).
+#[test]
+fn trace_events_round_trip_through_sink_and_summary_folder() {
+    let dir = tmpdir("trace");
+    let p = dir.join("t.jsonl");
+    {
+        let sink = TraceSink::create(&p, "root", "tcp:127.0.0.1:9999").unwrap();
+        let t0 = sink.now_us();
+        for phase in Phase::ALL {
+            sink.span(5, phase, t0, t0 + 100);
+        }
+        // Slot timeline: every event variant, with and without a peer.
+        for ev in [
+            SlotEvent::Offered,
+            SlotEvent::Validated,
+            SlotEvent::Absorbed,
+            SlotEvent::Parked,
+            SlotEvent::Folded,
+            SlotEvent::Retried,
+            SlotEvent::Reassigned,
+        ] {
+            sink.slot_event(5, 3, ev, Some(1));
+            sink.slot_event(5, 4, ev, None);
+        }
+        sink.slot_dropped(5, 9, "deadline");
+        sink.conn(5, 2, 100, 200, 300);
+        let mut h = Histogram::new();
+        h.record(50);
+        h.record(5_000);
+        sink.histogram(Some(5), "slot_arrival_us", &h);
+        sink.flush().unwrap();
+    }
+    let text = std::fs::read_to_string(&p).unwrap();
+
+    // Key-level schema: every line parses and carries its documented
+    // keys; `peer` and `reason` are omitted when not applicable.
+    for line in text.lines() {
+        let v = parse(line).unwrap();
+        match v.req_str("type").unwrap() {
+            "trace_meta" => {
+                assert_eq!(keys(&v), ["type", "v", "tier", "source", "epoch_unix_ms"]);
+                assert_eq!(v.req_u64("v").unwrap(), fetchsgd::trace::TRACE_VERSION);
+                assert_eq!(v.req_str("tier").unwrap(), "root");
+            }
+            "span" => {
+                assert_eq!(keys(&v), ["type", "tier", "round", "phase", "start_us", "dur_us"]);
+                assert_eq!(v.req_u64("dur_us").unwrap(), 100);
+            }
+            "slot" => {
+                let base = ["type", "tier", "round", "slot", "event", "t_us"];
+                let got = keys(&v);
+                if v.req_str("event").unwrap() == "dropped" {
+                    assert_eq!(got, [&base[..], &["reason"]].concat());
+                    assert_eq!(v.req_str("reason").unwrap(), "deadline");
+                } else if v.req_u64("slot").unwrap() == 3 {
+                    assert_eq!(got, [&base[..], &["peer"]].concat());
+                    assert_eq!(v.req_u64("peer").unwrap(), 1);
+                } else {
+                    assert_eq!(got, base, "peerless slot events must omit the peer key");
+                }
+            }
+            "conn" => {
+                assert_eq!(
+                    keys(&v),
+                    ["type", "tier", "round", "peer", "stall_us", "read_us", "write_us"]
+                );
+                assert_eq!(v.req_u64("write_us").unwrap(), 300);
+            }
+            "hist" => {
+                assert_eq!(
+                    keys(&v),
+                    [
+                        "type", "tier", "round", "metric", "count", "max_us", "p50_us", "p90_us",
+                        "p99_us", "buckets",
+                    ]
+                );
+                assert_eq!(v.req_u64("count").unwrap(), 2);
+                assert!(!v.req_array("buckets").unwrap().is_empty());
+            }
+            other => panic!("undocumented trace event type {other:?}"),
+        }
+    }
+
+    // Consumer-level: the summary folder accepts every event the sink
+    // can produce, with nothing skipped as unknown.
+    let mut report = TraceReport::default();
+    fold_text(&mut report, &text, "inline").unwrap();
+    assert_eq!(report.unknown_lines, 0, "sink and folder schema drifted apart");
+    assert_eq!(report.sources, vec![("root".to_string(), "tcp:127.0.0.1:9999".to_string())]);
+    assert_eq!(report.rounds.len(), 1);
+    let tl = &report.rounds[&5];
+    assert_eq!(tl.phases.len(), Phase::ALL.len(), "all six phases fold under the root tier");
+    assert_eq!(tl.events[&("root".to_string(), "offered".to_string())], 2);
+    assert_eq!(tl.events[&("root".to_string(), "dropped".to_string())], 1);
+    assert_eq!(report.hists[&("root".to_string(), "slot_arrival_us".to_string())].count(), 2);
+    let (stall, read, write) = report.conn_totals[&("root".to_string(), 2)];
+    assert_eq!((stall, read, write), (100, 200, 300));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -73,6 +73,8 @@ fn sim_train(
             threads,
             wire,
             policy: &policy,
+            round: round as u64,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -328,4 +330,97 @@ fn trainer_runs_are_bitwise_identical_across_parallelism() {
     assert_eq!(s1.final_loss.to_bits(), s_wire.final_loss.to_bits());
     assert!(s_wire.wire_upload_bytes >= s_wire.upload_bytes);
     assert!(s_wire.wire_download_bytes >= s_wire.download_bytes);
+}
+
+/// Tracing is observation, never input: the same engine loop with a
+/// `TraceSink` attached produces bitwise-identical weights and losses,
+/// while the trace file itself reconstructs the engine-tier timeline
+/// (phase spans, full slot lifecycle, per-round arrival histogram).
+#[test]
+fn tracing_is_bitwise_neutral_in_engine() {
+    use fetchsgd::trace::summary::{fold_text, TraceReport};
+    use fetchsgd::trace::TraceSink;
+
+    let cases = strategy_cases();
+    let (_, client, make_server) = &cases[0]; // fetchsgd
+    let (w_ref, l_ref, _) = {
+        let mut server = make_server();
+        sim_train(client.as_ref(), server.as_mut(), 3, None)
+    };
+
+    let dir = std::env::temp_dir().join(format!("fsgd_pd_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("engine.jsonl");
+    let sink = Arc::new(TraceSink::create(&path, "engine", "sim").unwrap());
+
+    // The sim_train loop, verbatim, with the sink attached.
+    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+    let dataset = SimDataset { num_clients: 200 };
+    let selector = ClientSelector::new(dataset.num_clients, COHORT, SEED);
+    let mut server = make_server();
+    let mut w = vec![0f32; DIM];
+    let mut losses = Vec::new();
+    let mut pipeline = RoundPipeline::new(PipelineOptions::default());
+    let policy = QuorumPolicy::strict();
+    for round in 0..ROUNDS {
+        let participants = selector.select(round);
+        let sizes: Vec<f32> = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+        let weights = server.begin_round(&sizes);
+        let ctx = engine::RoundCtx {
+            client: client.as_ref(),
+            artifacts: &artifacts,
+            dataset: &dataset,
+            w: &w,
+            lr: 0.05,
+            round_seed: derive_seed(SEED, round as u64),
+            threads: 3,
+            wire: None,
+            policy: &policy,
+            round: round as u64,
+            trace: Some(sink.clone()),
+        };
+        let out =
+            engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
+                .unwrap();
+        losses.extend_from_slice(&out.losses);
+        let update = server.finish(&out.merged, 0.05).unwrap();
+        pipeline.recycle(out.merged);
+        update.apply(&mut w);
+    }
+    sink.flush().unwrap();
+
+    assert_eq!(bits(&w_ref), bits(&w), "tracing perturbed the engine weights");
+    assert_eq!(bits(&l_ref), bits(&losses), "tracing perturbed the engine losses");
+
+    // The emitted trace reconstructs the run: every round present, the
+    // four engine phases spanned, every slot offered and folded, and an
+    // exact arrival histogram.
+    let mut report = TraceReport::default();
+    fold_text(&mut report, &std::fs::read_to_string(&path).unwrap(), "engine.jsonl").unwrap();
+    assert_eq!(report.unknown_lines, 0);
+    assert_eq!(report.rounds.len(), ROUNDS);
+    let engine_tier = "engine".to_string();
+    for (round, tl) in &report.rounds {
+        for phase in ["plan", "compute", "finalize", "reduce"] {
+            assert!(
+                tl.phases.contains_key(&(engine_tier.clone(), phase.to_string())),
+                "round {round} missing engine-tier {phase} span"
+            );
+        }
+        assert_eq!(tl.events[&(engine_tier.clone(), "offered".to_string())], COHORT as u64);
+        // Every slot lands exactly once: absorbed in order, or parked
+        // and later folded out of the parking buffer.
+        let absorbed = tl.events.get(&(engine_tier.clone(), "absorbed".to_string())).copied();
+        let folded = tl.events.get(&(engine_tier.clone(), "folded".to_string())).copied();
+        assert_eq!(
+            absorbed.unwrap_or(0) + folded.unwrap_or(0),
+            COHORT as u64,
+            "round {round}: absorbed + folded must cover the cohort"
+        );
+        let parked = tl.events.get(&(engine_tier.clone(), "parked".to_string())).copied();
+        assert_eq!(parked.unwrap_or(0), folded.unwrap_or(0), "every parked slot must fold");
+    }
+    let h = &report.hists[&(engine_tier.clone(), "slot_arrival_us".to_string())];
+    assert_eq!(h.count(), (ROUNDS * COHORT) as u64, "one arrival sample per slot per round");
+    std::fs::remove_dir_all(&dir).ok();
 }

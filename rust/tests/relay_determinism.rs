@@ -111,6 +111,8 @@ fn sim_train_sharded(
             threads: 2,
             wire: None,
             policy: &policy,
+            round: round as u64,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)

@@ -1,0 +1,208 @@
+//! End-to-end tracing over a depth-2 relay tree: a root `RoundServer`
+//! in relay mode and two leaf `Relay` nodes, every tier writing its own
+//! trace file, merged by the same `trace::summary` folder the
+//! `trace-summary` CLI runs. The acceptance bar is twofold:
+//!
+//! 1. **Neutrality** — the traced tree produces bitwise-identical final
+//!    weights and losses to the untraced tree. Tracing is observation,
+//!    never input.
+//! 2. **Reconstruction** — the three files merge into one coherent
+//!    timeline: every round present under both tiers, the root's five
+//!    server phases and the relays' subtree phases spanned, relay slot
+//!    events stamped with *global* slot ids covering the cohort, the
+//!    root attributing each absorbed slot to its delivering chain, and
+//!    the relay-tier arrival histogram carrying exactly one sample per
+//!    slot per round.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fetchsgd::compression::fetchsgd::{ErrorUpdate, FetchSgdServer};
+use fetchsgd::compression::sim::{sim_artifacts, SimDataset, SimSketchClient};
+use fetchsgd::coordinator::ClientSelector;
+use fetchsgd::relay::{Relay, RelayOptions};
+use fetchsgd::trace::summary::{fold_files, render};
+use fetchsgd::trace::TraceSink;
+use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
+use fetchsgd::util::rng::derive_seed;
+
+const DIM: usize = 8_192;
+const ROWS: usize = 3;
+const COLS: usize = 256;
+const SEED: u64 = 0xBEEF;
+const ROUNDS: usize = 2;
+const COHORT: usize = 8;
+const NUM_CLIENTS: usize = 64;
+const RELAYS: usize = 2;
+const FANOUT: usize = 2;
+const T60: Duration = Duration::from_secs(60);
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn make_client() -> SimSketchClient {
+    SimSketchClient { rows: ROWS, cols: COLS, seed: SEED, dim: DIM, heavy: 4 }
+}
+
+fn make_server() -> FetchSgdServer {
+    FetchSgdServer::new(ROWS, COLS, SEED, DIM, 16, 0.9, ErrorUpdate::ZeroOut, true, "vanilla")
+        .unwrap()
+}
+
+fn cohort_for(round: usize) -> (Vec<usize>, Vec<f32>) {
+    let selector = ClientSelector::new(NUM_CLIENTS, COHORT, SEED);
+    let participants = selector.select(round);
+    let sizes = participants.iter().map(|&c| 1.0 + (c % 5) as f32).collect();
+    (participants, sizes)
+}
+
+/// Run the whole tree — root, `RELAYS` leaf relays, `FANOUT` honest
+/// socket workers per relay — with tracing on every tier when
+/// `trace_dir` is set. Returns (final weights, losses).
+fn tree_train(trace_dir: Option<&std::path::Path>) -> (Vec<f32>, Vec<f32>) {
+    let client = make_client();
+    let mut server = make_server();
+    let root_sink = trace_dir.map(|d| {
+        Arc::new(TraceSink::create(&d.join("root.jsonl"), "root", "tcp:loopback").unwrap())
+    });
+    let opts = ServeOptions {
+        workers: 0,
+        relay_children: RELAYS,
+        read_timeout: T60,
+        accept_timeout: T60,
+        trace: root_sink.clone(),
+        ..Default::default()
+    };
+    let mut srv = RoundServer::bind(&Endpoint::Tcp("127.0.0.1:0".into()), opts).unwrap();
+    let root = srv.local_endpoint().unwrap();
+    let (w, losses) = std::thread::scope(|s| {
+        for r in 0..RELAYS {
+            let mut node = Relay::bind(
+                &Endpoint::Tcp("127.0.0.1:0".into()),
+                RelayOptions {
+                    workers: FANOUT,
+                    read_timeout: T60,
+                    accept_timeout: T60,
+                    trace_path: trace_dir.map(|d| d.join(format!("relay{r}.jsonl"))),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let down = node.local_endpoint().unwrap();
+            let up = root.clone();
+            s.spawn(move || {
+                let sum = node.run(&up).unwrap();
+                assert_eq!(sum.rounds, ROUNDS);
+            });
+            for _ in 0..FANOUT {
+                let ep = down.clone();
+                let client = &client;
+                s.spawn(move || {
+                    let artifacts = sim_artifacts(DIM, ROWS, COLS, SEED).unwrap();
+                    let dataset = SimDataset { num_clients: NUM_CLIENTS };
+                    let opts = JoinOptions { read_timeout: Some(T60), ..Default::default() };
+                    let sum = join(&ep, client, &dataset, &artifacts, &opts).unwrap();
+                    assert_eq!(sum.rounds, ROUNDS);
+                });
+            }
+        }
+        let mut w = vec![0f32; DIM];
+        let mut losses = Vec::new();
+        for round in 0..ROUNDS {
+            let (parts, sizes) = cohort_for(round);
+            let params = RoundParams {
+                round: round as u64,
+                round_seed: derive_seed(SEED, round as u64),
+                lr: 0.05,
+                participants: &parts,
+                client_sizes: &sizes,
+            };
+            let stats = srv.run_round(&mut server, &params, &mut w).unwrap();
+            losses.extend_from_slice(&stats.losses);
+        }
+        srv.shutdown();
+        (w, losses)
+    });
+    if let Some(sink) = &root_sink {
+        sink.flush().unwrap();
+    }
+    (w, losses)
+}
+
+#[test]
+fn depth2_tree_traces_merge_and_stay_bitwise_neutral() {
+    let dir = std::env::temp_dir().join(format!("fsgd_tp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let (w_plain, l_plain) = tree_train(None);
+    assert!(w_plain.iter().any(|&x| x != 0.0), "training must move the model");
+    let (w_traced, l_traced) = tree_train(Some(&dir));
+
+    // 1. Neutrality: tracing on every tier never perturbs the bits.
+    assert_eq!(bits(&w_plain), bits(&w_traced), "tracing perturbed the tree weights");
+    assert_eq!(bits(&l_plain), bits(&l_traced), "tracing perturbed the tree losses");
+
+    // 2. Reconstruction: merge the three per-tier files exactly as the
+    //    `trace-summary` CLI does.
+    let paths =
+        [dir.join("root.jsonl"), dir.join("relay0.jsonl"), dir.join("relay1.jsonl")];
+    for p in &paths {
+        assert!(p.exists(), "missing trace file {}", p.display());
+    }
+    let report = fold_files(&paths).unwrap();
+    assert_eq!(report.unknown_lines, 0, "tree emitted an event the folder does not know");
+    assert_eq!(report.files, 3);
+    let mut tiers: Vec<&str> = report.sources.iter().map(|(t, _)| t.as_str()).collect();
+    tiers.sort_unstable();
+    assert_eq!(tiers, ["relay", "relay", "root"]);
+    assert_eq!(report.rounds.len(), ROUNDS);
+
+    let root = "root".to_string();
+    let relay = "relay".to_string();
+    for (round, tl) in &report.rounds {
+        // Root: the five server phases of a relay-mode round.
+        for phase in ["plan", "absorb_wait", "finalize", "reduce", "broadcast"] {
+            assert!(
+                tl.phases.contains_key(&(root.clone(), phase.to_string())),
+                "round {round} missing root-tier {phase} span"
+            );
+        }
+        // Relays: the subtree phases, merged across both leaf files.
+        for phase in ["plan", "absorb_wait", "finalize", "reduce"] {
+            let agg = tl
+                .phases
+                .get(&(relay.clone(), phase.to_string()))
+                .unwrap_or_else(|| panic!("round {round} missing relay-tier {phase} span"));
+            assert_eq!(agg.count, RELAYS as u64, "one {phase} span per relay per round");
+        }
+        // Relay slot events carry *global* slot ids: across both
+        // relays the offered/absorbed sets tile the whole cohort.
+        assert_eq!(tl.events[&(relay.clone(), "offered".to_string())], COHORT as u64);
+        assert_eq!(tl.events[&(relay.clone(), "absorbed".to_string())], COHORT as u64);
+        // The root attributes every absorbed slot to a delivering
+        // chain — COHORT slots per round, peer-tagged.
+        assert_eq!(tl.events[&(root.clone(), "absorbed".to_string())], COHORT as u64);
+    }
+
+    // Exactly one arrival sample per slot per round, merged bucketwise
+    // across the two relay files.
+    let h = &report.hists[&(relay.clone(), "slot_arrival_us".to_string())];
+    assert_eq!(h.count(), (ROUNDS * COHORT) as u64);
+
+    // Per-connection IO: each relay heard from FANOUT workers, the
+    // root from RELAYS chains; merged by (tier, peer).
+    for peer in 0..FANOUT as u64 {
+        assert!(report.conn_totals.contains_key(&(relay.clone(), peer)));
+    }
+    for peer in 0..RELAYS as u64 {
+        assert!(report.conn_totals.contains_key(&(root.clone(), peer)));
+    }
+
+    // The human rendering carries its headline sections.
+    let text = render(&report);
+    assert!(text.contains("trace summary: 3 file(s)"));
+    assert!(text.contains("per-phase totals (all rounds):"));
+    assert!(text.contains("per-round timeline:"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -12,6 +12,7 @@
 //! and the update round-trips encode→decode exactly like wire mode
 //! (itself pinned bitwise-identical in `parallel_determinism.rs`).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use fetchsgd::compression::aggregate::{PipelineOptions, RoundPipeline};
@@ -23,6 +24,7 @@ use fetchsgd::compression::sim::{
 use fetchsgd::compression::uncompressed::UncompressedServer;
 use fetchsgd::compression::{ClientCompute, ServerAggregator};
 use fetchsgd::coordinator::{engine, ClientSelector};
+use fetchsgd::trace::TraceSink;
 use fetchsgd::transport::{join, Endpoint, JoinOptions, RoundParams, RoundServer, ServeOptions};
 use fetchsgd::util::rng::derive_seed;
 use fetchsgd::wire::Codec;
@@ -65,6 +67,8 @@ fn sim_train(
             threads,
             wire,
             policy: &policy,
+            round: round as u64,
+            trace: None,
         };
         let out =
             engine::run_round(&ctx, &participants, &weights, &server.upload_spec(), &mut pipeline)
@@ -93,11 +97,13 @@ fn transport_train(
     workers: usize,
     client: &dyn ClientCompute,
     server: &mut dyn ServerAggregator,
+    trace: Option<Arc<TraceSink>>,
 ) -> (Vec<f32>, Vec<f32>, u64) {
     let opts = ServeOptions {
         workers,
         read_timeout: Duration::from_secs(60),
         accept_timeout: Duration::from_secs(60),
+        trace,
         ..Default::default()
     };
     let mut srv = RoundServer::bind(ep, opts).unwrap();
@@ -197,7 +203,7 @@ fn uds_serve_join_is_bitwise_identical_to_in_process() {
             assert_eq!(bits(&l1), bits(&ln), "{name}: losses diverge at parallelism {threads}");
         }
         let ep = uds_endpoint(name);
-        let (wt, lt, _) = transport_train(&ep, 3, client.as_ref(), make_server().as_mut());
+        let (wt, lt, _) = transport_train(&ep, 3, client.as_ref(), make_server().as_mut(), None);
         assert_eq!(bits(&w1), bits(&wt), "{name}: transport weights diverge from in-process");
         assert_eq!(bits(&l1), bits(&lt), "{name}: transport losses diverge from in-process");
     }
@@ -214,11 +220,59 @@ fn tcp_serve_join_matches_in_process_and_wire_accounting() {
     let (_, _, wire_bytes_mem) =
         sim_train(client.as_ref(), make_server().as_mut(), 1, Some(&fetchsgd::wire::F32LE));
     let ep = Endpoint::Tcp("127.0.0.1:0".into());
-    let (wt, lt, wire_bytes_net) = transport_train(&ep, 2, client.as_ref(), make_server().as_mut());
+    let (wt, lt, wire_bytes_net) =
+        transport_train(&ep, 2, client.as_ref(), make_server().as_mut(), None);
     assert_eq!(bits(&w1), bits(&wt), "{name}: tcp transport weights diverge");
     assert_eq!(bits(&l1), bits(&lt), "{name}: tcp transport losses diverge");
     assert_eq!(
         wire_bytes_mem, wire_bytes_net,
         "{name}: measured frame bytes differ between wire mode and transport"
     );
+}
+
+/// A served run with a root-tier `TraceSink` attached is bitwise
+/// identical to the untraced in-process reference, and the trace it
+/// writes reconstructs the transport timeline: the five server phases,
+/// one `offered` per slot, per-connection IO splits, and an exact
+/// per-round arrival histogram.
+#[test]
+fn tracing_is_bitwise_neutral_over_transport() {
+    use fetchsgd::trace::summary::fold_files;
+
+    let strategies = strategies();
+    let (name, client, make_server) = &strategies[0];
+    let (w1, l1, _) = sim_train(client.as_ref(), make_server().as_mut(), 1, None);
+
+    let dir = std::env::temp_dir().join(format!("fsgd_td_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("root.jsonl");
+    let sink = Arc::new(TraceSink::create(&path, "root", "tcp:loopback").unwrap());
+    let ep = Endpoint::Tcp("127.0.0.1:0".into());
+    let (wt, lt, _) =
+        transport_train(&ep, 2, client.as_ref(), make_server().as_mut(), Some(sink.clone()));
+    sink.flush().unwrap();
+
+    assert_eq!(bits(&w1), bits(&wt), "{name}: tracing perturbed the served weights");
+    assert_eq!(bits(&l1), bits(&lt), "{name}: tracing perturbed the served losses");
+
+    let report = fold_files(&[&path]).unwrap();
+    assert_eq!(report.unknown_lines, 0);
+    assert_eq!(report.rounds.len(), ROUNDS);
+    let root = "root".to_string();
+    for (round, tl) in &report.rounds {
+        for phase in ["plan", "absorb_wait", "finalize", "reduce", "broadcast"] {
+            assert!(
+                tl.phases.contains_key(&(root.clone(), phase.to_string())),
+                "round {round} missing root-tier {phase} span"
+            );
+        }
+        assert_eq!(tl.events[&(root.clone(), "offered".to_string())], COHORT as u64);
+    }
+    // Both worker connections reported their IO split every round.
+    let peers: Vec<u64> =
+        report.conn_totals.keys().filter(|(t, _)| *t == root).map(|&(_, p)| p).collect();
+    assert_eq!(peers, [0, 1], "expected IO totals for exactly two connections");
+    let h = &report.hists[&(root.clone(), "slot_arrival_us".to_string())];
+    assert_eq!(h.count(), (ROUNDS * COHORT) as u64, "one arrival sample per slot per round");
+    std::fs::remove_dir_all(&dir).ok();
 }
